@@ -1,0 +1,29 @@
+use std::time::Instant;
+use sssr::kernels::driver::{run_smxdv_sized, run_svxsv};
+use sssr::kernels::{IdxWidth, Variant};
+use sssr::coordinator::run_cluster_smxdv;
+use sssr::sim::ClusterCfg;
+use sssr::matgen;
+fn main() {
+    let m = matgen::mycielskian(11); // 1535^2, 135k nnz
+    let b = matgen::random_dense(2, m.ncols);
+    let t = Instant::now();
+    let (_, rep) = run_smxdv_sized(Variant::Sssr, IdxWidth::U16, &m, &b, 16 << 20);
+    let (_, rep2) = run_smxdv_sized(Variant::Base, IdxWidth::U16, &m, &b, 16 << 20);
+    let dt = t.elapsed().as_secs_f64();
+    println!("single-CC smxdv sssr+base: {} cycles in {:.2}s = {:.2} Mcyc/s",
+        rep.cycles + rep2.cycles, dt, (rep.cycles + rep2.cycles) as f64 / dt / 1e6);
+    let a = matgen::random_spvec(3, 200_000, 40_000);
+    let c = matgen::random_spvec(4, 200_000, 40_000);
+    let t = Instant::now();
+    let (_, rep) = run_svxsv(Variant::Base, IdxWidth::U32, &a, &c);
+    let dt = t.elapsed().as_secs_f64();
+    println!("single-CC base svxsv: {} cycles in {:.2}s = {:.2} Mcyc/s", rep.cycles, dt, rep.cycles as f64/dt/1e6);
+    let cfg = ClusterCfg::paper_cluster();
+    let t = Instant::now();
+    let run = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &cfg);
+    let run2 = run_cluster_smxdv(Variant::Base, IdxWidth::U16, &m, &b, &cfg);
+    let dt = t.elapsed().as_secs_f64();
+    let cyc = run.report.cycles + run2.report.cycles;
+    println!("cluster smxdv sssr+base: {} cycles in {:.2}s = {:.2} Mcyc/s", cyc, dt, cyc as f64/dt/1e6);
+}

@@ -1,0 +1,97 @@
+//! End-to-end driver: the full system on a real workload.
+//!
+//! Proves all layers compose:
+//!   L1/L2 (build time): JAX+Pallas kernels were AOT-lowered to
+//!          `artifacts/*.hlo.txt` (`make artifacts`),
+//!   runtime: the Rust PJRT client loads and executes them as golden
+//!          models,
+//!   L3:    the eight-core Snitch+SSSR cluster simulator — HBM2E DRAM
+//!          model, double-buffered DMA, barriers — runs BASE and SSSR
+//!          sM×dV on the Mycielskian graph matrix and a FEM stencil,
+//!          with every result cross-checked against XLA.
+//!
+//! Reports latency, throughput, speedup, and energy (recorded in
+//! EXPERIMENTS.md §End-to-end).
+//!
+//!     make artifacts && cargo run --release --example spmv_cluster
+
+use std::path::Path;
+
+use sssr::coordinator::run_cluster_smxdv;
+use sssr::formats::ops;
+use sssr::kernels::{IdxWidth, Variant};
+use sssr::matgen;
+use sssr::model::energy::EnergyModel;
+use sssr::runtime::{golden, Runtime};
+use sssr::sim::ClusterCfg;
+
+fn main() {
+    // ---- 1) load + verify the AOT golden models (PJRT) ----------------
+    let manifest = Path::new("artifacts/manifest.json");
+    match Runtime::load(manifest) {
+        Ok(rt) => {
+            println!("[1/3] PJRT golden models: platform={}", rt.platform());
+            match golden::verify_all(&rt) {
+                Ok(n) => println!("      {n} simulator-vs-XLA checks OK"),
+                Err(e) => {
+                    eprintln!("      golden verification FAILED: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        Err(e) => {
+            println!("[1/3] skipping PJRT verification ({e}); run `make artifacts`");
+        }
+    }
+
+    // ---- 2) end-to-end cluster runs on real workloads -------------------
+    let cfg = ClusterCfg::paper_cluster();
+    let em = EnergyModel::default();
+    println!(
+        "\n[2/3] eight-core cluster, HBM2E channel ({} Gb/s/pin, {} cyc), \
+         double-buffered DMA",
+        cfg.dram_gbps_pin, cfg.dram_latency
+    );
+    println!(
+        "\n{:<16} {:<6} {:>12} {:>12} {:>10} {:>10} {:>10}",
+        "workload", "var", "cycles", "GFLOP/s", "util %", "pJ/fmadd", "speedup"
+    );
+
+    for (name, m) in [
+        ("mycielskian10", matgen::mycielskian(10)),
+        ("stencil2d50x50", matgen::stencil2d(50, 50)),
+    ] {
+        let b = matgen::random_dense(7, m.ncols);
+        let want = ops::smxdv(&m, &b);
+        let mut base_cycles = 0;
+        for (vn, v) in [("base", Variant::Base), ("sssr", Variant::Sssr)] {
+            let run = run_cluster_smxdv(v, IdxWidth::U16, &m, &b, &cfg);
+            // independent end-to-end check on top of the internal one
+            for (g, w) in run.result.iter().zip(&want) {
+                assert!((g - w).abs() <= 1e-9 * w.abs().max(1.0));
+            }
+            let flops = 2.0 * m.nnz() as f64; // fmadd = 2 FLOP
+            let gflops = flops / run.report.cycles as f64; // 1 GHz: FLOP/cycle = GFLOP/s
+            let util = run.report.payload as f64 / (run.report.cycles as f64 * cfg.cores as f64);
+            let energy = em.estimate(&run.report.stats, m.nnz() as u64);
+            if vn == "base" {
+                base_cycles = run.report.cycles;
+            }
+            println!(
+                "{:<16} {:<6} {:>12} {:>12.2} {:>10.1} {:>10.1} {:>9.2}x",
+                name,
+                vn,
+                run.report.cycles,
+                gflops,
+                100.0 * util,
+                energy.pj_per_op,
+                base_cycles as f64 / run.report.cycles as f64
+            );
+        }
+    }
+
+    println!(
+        "\n[3/3] done — all results verified against both the dense oracle \
+         and (when artifacts are present) the XLA-executed Pallas kernels."
+    );
+}

@@ -1,0 +1,127 @@
+"""AOT compile path: lower every Layer-2 model to HLO **text** plus a
+JSON manifest the Rust runtime consumes.
+
+HLO text, NOT jax's serialized StableHLO or HloModuleProto bytes: the
+image's xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction ids;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and DESIGN.md).
+
+Run once via `make artifacts`; Python never executes on the Rust request
+path. Shapes are fixed here and recorded in the manifest — the Rust side
+pads its operands to match.
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+
+# ---- fixed artifact shapes (recorded in the manifest) -----------------
+SPMV_ROWS = 64
+SPMV_K = 16
+SPMV_COLS = 256
+FIBER_K = 64
+FIBER_DIM = 512
+PR_ROWS = 128
+PR_K = 8
+
+
+def f64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+def entries():
+    """(name, fn, example_args) for every artifact."""
+    return [
+        (
+            "spmv",
+            model.spmv_model,
+            [f64(SPMV_ROWS, SPMV_K), f64(SPMV_ROWS, SPMV_K), f64(SPMV_COLS)],
+            1,
+        ),
+        (
+            "svxdv",
+            model.svxdv_model,
+            [f64(FIBER_K), f64(FIBER_K), f64(FIBER_DIM)],
+            1,
+        ),
+        (
+            "svxsv",
+            functools.partial(model.svxsv_model, dim=FIBER_DIM),
+            [f64(FIBER_K), f64(FIBER_K), f64(FIBER_K), f64(FIBER_K)],
+            1,
+        ),
+        (
+            "smxsv",
+            functools.partial(model.smxsv_model, dim=SPMV_COLS),
+            [f64(SPMV_ROWS, SPMV_K), f64(SPMV_ROWS, SPMV_K), f64(FIBER_K), f64(FIBER_K)],
+            1,
+        ),
+        (
+            "svpsv",
+            functools.partial(model.svpsv_model, dim=FIBER_DIM),
+            [f64(FIBER_K), f64(FIBER_K), f64(FIBER_K), f64(FIBER_K)],
+            2,
+        ),
+        (
+            "pagerank_step",
+            model.pagerank_step_model,
+            [f64(PR_ROWS, PR_K), f64(PR_ROWS, PR_K), f64(PR_ROWS), f64(1)],
+            1,
+        ),
+        (
+            "jacobi_step",
+            model.jacobi_step_model,
+            [f64(SPMV_ROWS, SPMV_K), f64(SPMV_ROWS, SPMV_K), f64(SPMV_ROWS), f64(SPMV_ROWS), f64(SPMV_ROWS)],
+            1,
+        ),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "entries": []}
+    for name, fn, example, n_outputs in entries():
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        rel = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, rel), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "path": rel,
+                "inputs": [list(s.shape) for s in example],
+                "n_outputs": n_outputs,
+            }
+        )
+        print(f"  lowered {name}: {len(text)} chars", file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

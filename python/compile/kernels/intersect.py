@@ -1,0 +1,58 @@
+"""Layer-1 Pallas kernel: sparse-sparse dot product — the TPU realization
+of SSSR streaming *intersection* (DESIGN.md §Hardware-Adaptation).
+
+The index comparator's insight is that two-sided sparsity reduces to
+one-sided indirection once one operand is position-addressable. In VMEM
+that is literal: scatter fiber B into a dense VMEM buffer (positions as
+addresses), then gather it at fiber A's indices — every matched index
+contributes b's value, every unmatched one reads the buffer's zero. This
+replaces the comparator's sequential index matching with a vectorized
+scatter+gather at the same O(nnz) work.
+
+interpret=True: see spmv.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@functools.partial(jax.jit, static_argnames=("dim",))
+def svxsv(a_vals, a_idcs, b_vals, b_idcs, *, dim):
+    """Sparse-sparse dot product of two padded fibers over dense
+    dimension `dim`. Padding: idx 0 / val 0 (contributes 0)."""
+    (ka,) = a_vals.shape
+    (kb,) = b_vals.shape
+    assert a_idcs.shape == (ka,) and b_idcs.shape == (kb,)
+
+    def kernel(a_vals_ref, a_idcs_ref, b_vals_ref, b_idcs_ref, out_ref):
+        # scatter B into a dense VMEM-resident buffer...
+        dense_b = jnp.zeros((dim,), a_vals_ref.dtype).at[b_idcs_ref[...]].add(b_vals_ref[...])
+        # ...and indirect through it with A's indices: the intersection.
+        out_ref[0] = jnp.sum(a_vals_ref[...] * dense_b[a_idcs_ref[...]])
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), a_vals.dtype),
+        interpret=True,
+    )(a_vals, a_idcs, b_vals, b_idcs)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("dim",))
+def smxsv_ell(vals, idcs, b_vals, b_idcs, *, dim):
+    """sM×sV: ELL matrix (vals/idcs [n, k]) times a sparse vector given
+    as a padded fiber; dense [n] result (as the paper's kernel, §3.2.2).
+    Scatter once, then gather row-wise."""
+    n_rows, _ = vals.shape
+
+    def kernel(vals_ref, idcs_ref, b_vals_ref, b_idcs_ref, out_ref):
+        dense_b = jnp.zeros((dim,), vals_ref.dtype).at[b_idcs_ref[...]].add(b_vals_ref[...])
+        out_ref[...] = jnp.sum(vals_ref[...] * dense_b[idcs_ref[...]], axis=1)
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n_rows,), vals.dtype),
+        interpret=True,
+    )(vals, idcs, b_vals, b_idcs)

@@ -1,0 +1,76 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (Layer 1).
+
+These mirror rust/src/formats/ops.rs one level up: every Pallas kernel is
+checked against these references by pytest at build time (the CORE
+correctness signal for the compile path), and the Rust simulator is in
+turn cross-checked against the AOT artifacts built from the kernels.
+
+All kernels operate on *padded* fixed-shape sparse data (XLA requires
+static shapes): an ELL-style (values[n, k], indices[n, k]) layout for
+matrices and (values[k], indices[k]) fibers for vectors. Padding entries
+use index 0 with value 0 so gathers stay in bounds and contribute
+nothing.
+"""
+
+import jax.numpy as jnp
+
+__all__ = [
+    "spmv_ell_ref",
+    "svxdv_ref",
+    "svxsv_ref",
+    "svpsv_dense_ref",
+    "pagerank_step_ref",
+    "jacobi_step_ref",
+]
+
+
+def svxdv_ref(vals, idcs, b):
+    """Sparse-dense dot product: sum(vals * b[idcs]). Padding entries
+    must have vals == 0."""
+    return jnp.sum(vals * b[idcs])
+
+
+def spmv_ell_ref(vals, idcs, b):
+    """ELL SpMV: vals/idcs are [n_rows, k_max]; returns [n_rows]."""
+    return jnp.sum(vals * b[idcs], axis=1)
+
+
+def svxsv_ref(a_vals, a_idcs, b_vals, b_idcs, dim):
+    """Sparse-sparse dot product via dense scatter (the same
+    scatter-then-gather trick the Pallas kernel uses in VMEM)."""
+    dense_b = jnp.zeros((dim,), a_vals.dtype).at[b_idcs].add(b_vals)
+    return jnp.sum(a_vals * dense_b[a_idcs])
+
+
+def svpsv_dense_ref(a_vals, a_idcs, b_vals, b_idcs, dim):
+    """Sparse-sparse addition, returned as (dense accumulator, mask).
+
+    XLA's static shapes cannot express the dynamic union length, so the
+    AOT artifact returns the dense sum plus a nonzero-pattern mask; the
+    Rust side re-compresses to a fiber (documented substitution,
+    DESIGN.md §Hardware-Adaptation).
+    """
+    dense = (
+        jnp.zeros((dim,), a_vals.dtype).at[a_idcs].add(a_vals).at[b_idcs].add(b_vals)
+    )
+    mask = (
+        jnp.zeros((dim,), a_vals.dtype)
+        .at[a_idcs]
+        .max(jnp.where(a_vals != 0, 1.0, 0.0))
+        .at[b_idcs]
+        .max(jnp.where(b_vals != 0, 1.0, 0.0))
+    )
+    return dense, mask
+
+
+def pagerank_step_ref(vals, idcs, rank, damping, n_real):
+    """One PageRank power iteration on a column-normalized ELL matrix."""
+    contrib = spmv_ell_ref(vals, idcs, rank)
+    return damping * contrib + (1.0 - damping) / n_real
+
+
+def jacobi_step_ref(vals, idcs, diag_inv, b, x):
+    """One weighted-Jacobi smoothing step: x' = x + D^-1 (b - A x).
+    A is ELL (including its diagonal)."""
+    ax = spmv_ell_ref(vals, idcs, x)
+    return x + diag_inv * (b - ax)

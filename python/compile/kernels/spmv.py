@@ -1,0 +1,96 @@
+"""Layer-1 Pallas kernel: ELL-padded gather SpMV — the TPU realization of
+SSSR streaming *indirection* (DESIGN.md §Hardware-Adaptation).
+
+The paper's ISSR decouples index processing from the FPU so the compute
+unit sees a dense operand stream. On a TPU-shaped machine the same
+insight maps to: tile rows into VMEM-resident blocks with `BlockSpec`
+(the HBM<->VMEM schedule the Snitch cluster expressed with double-
+buffered DMA), keep the dense operand resident, and let a vectorized
+gather play the ISSR role so the VPU reduction runs on dense data.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom call
+the CPU PJRT plugin cannot execute; the interpret path lowers to plain
+HLO, which is what the Rust runtime loads (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _spmv_kernel(b_ref, vals_ref, idcs_ref, out_ref):
+    """One grid step: rows_block x k_max gather + row reduction.
+
+    b stays fully VMEM-resident (dense operand, like the paper's
+    TCDM-resident vector); vals/idcs stream in one row-block per step.
+    """
+    vals = vals_ref[...]
+    idcs = idcs_ref[...]
+    b = b_ref[...]
+    # the gather is the indirection: b[idcs] with idcs [rows, k]
+    gathered = b[idcs]
+    out_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def spmv_ell(vals, idcs, b, *, block_rows=DEFAULT_BLOCK_ROWS):
+    """ELL SpMV: vals/idcs [n_rows, k_max] (padding: idx 0 / val 0),
+    b [n_cols] -> out [n_rows]."""
+    n_rows, k_max = vals.shape
+    assert idcs.shape == (n_rows, k_max)
+    assert n_rows % block_rows == 0, "n_rows must be a multiple of block_rows"
+    grid = (n_rows // block_rows,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(b.shape, lambda i: tuple(0 for _ in b.shape)),
+            pl.BlockSpec((block_rows, k_max), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k_max), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_rows,), vals.dtype),
+        interpret=True,
+    )(b, vals, idcs)
+
+
+def _svxdv_kernel(vals_ref, idcs_ref, b_ref, out_ref):
+    out_ref[0] = jnp.sum(vals_ref[...] * b_ref[...][idcs_ref[...]])
+
+
+@jax.jit
+def svxdv(vals, idcs, b):
+    """Sparse-dense dot product on one padded fiber."""
+    (k,) = vals.shape
+    assert idcs.shape == (k,)
+    return pl.pallas_call(
+        _svxdv_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), vals.dtype),
+        interpret=True,
+    )(vals, idcs, b)[0]
+
+
+def ell_from_csr(ptrs, idcs, vals, k_max=None, pad_rows_to=1):
+    """Host-side packing helper (NumPy-level, build path only): convert
+    CSR arrays to padded ELL."""
+    import numpy as np
+
+    n_rows = len(ptrs) - 1
+    widths = [ptrs[r + 1] - ptrs[r] for r in range(n_rows)]
+    k = max(widths) if widths else 1
+    if k_max is not None:
+        assert k <= k_max, f"row width {k} exceeds k_max {k_max}"
+        k = k_max
+    k = max(k, 1)
+    n_pad = ((n_rows + pad_rows_to - 1) // pad_rows_to) * pad_rows_to
+    ev = np.zeros((n_pad, k), dtype=np.float64)
+    ei = np.zeros((n_pad, k), dtype=np.int32)
+    for r in range(n_rows):
+        w = widths[r]
+        ev[r, :w] = vals[ptrs[r] : ptrs[r + 1]]
+        ei[r, :w] = idcs[ptrs[r] : ptrs[r + 1]]
+    return ev, ei

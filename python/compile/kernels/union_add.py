@@ -1,0 +1,49 @@
+"""Layer-1 Pallas kernel: sparse-sparse addition — the TPU realization of
+SSSR streaming *union* + ESSR writeback (DESIGN.md §Hardware-Adaptation).
+
+The union is a masked dense accumulation in VMEM: both fibers scatter-add
+into a zero buffer; the nonzero-pattern mask is accumulated alongside
+(the ESSR's joint index stream). XLA's static shapes cannot express the
+dynamic result length, so the artifact returns (dense sum, mask) and the
+Rust side re-compresses to a fiber.
+
+interpret=True: see spmv.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@functools.partial(jax.jit, static_argnames=("dim",))
+def svpsv_dense(a_vals, a_idcs, b_vals, b_idcs, *, dim):
+    """Union-add of two padded fibers: returns (dense sum [dim],
+    pattern mask [dim] with 1.0 where either operand has a nonzero)."""
+    (ka,) = a_vals.shape
+    (kb,) = b_vals.shape
+    assert a_idcs.shape == (ka,) and b_idcs.shape == (kb,)
+
+    def kernel(a_vals_ref, a_idcs_ref, b_vals_ref, b_idcs_ref, sum_ref, mask_ref):
+        av, ai = a_vals_ref[...], a_idcs_ref[...]
+        bv, bi = b_vals_ref[...], b_idcs_ref[...]
+        dense = jnp.zeros((dim,), av.dtype).at[ai].add(av).at[bi].add(bv)
+        mask = (
+            jnp.zeros((dim,), av.dtype)
+            .at[ai]
+            .max(jnp.where(av != 0, 1.0, 0.0))
+            .at[bi]
+            .max(jnp.where(bv != 0, 1.0, 0.0))
+        )
+        sum_ref[...] = dense
+        mask_ref[...] = mask
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((dim,), a_vals.dtype),
+            jax.ShapeDtypeStruct((dim,), a_vals.dtype),
+        ),
+        interpret=True,
+    )(a_vals, a_idcs, b_vals, b_idcs)

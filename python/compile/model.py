@@ -1,0 +1,66 @@
+"""Layer-2 JAX models: the compute graphs built on the Layer-1 Pallas
+kernels, AOT-lowered by aot.py into the artifacts the Rust runtime loads
+for golden verification and the end-to-end examples.
+
+All entry points are pure functions of f64 arrays with static shapes
+(index operands travel as f64 and are cast inside — PJRT parameter
+plumbing on the Rust side then only needs one dtype).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import intersect, spmv, union_add
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _as_idx(x):
+    return x.astype(jnp.int32)
+
+
+def spmv_model(vals, idcs_f, b):
+    """ELL SpMV (Fig. 4c / 5a golden model)."""
+    return (spmv.spmv_ell(vals, _as_idx(idcs_f), b),)
+
+
+def svxdv_model(vals, idcs_f, b):
+    """Sparse-dense dot product (Fig. 4a golden model)."""
+    return (spmv.svxdv(vals, _as_idx(idcs_f), b).reshape((1,)),)
+
+
+def svxsv_model(a_vals, a_idcs_f, b_vals, b_idcs_f, *, dim):
+    """Sparse-sparse dot product (Fig. 4d golden model)."""
+    return (
+        intersect.svxsv(a_vals, _as_idx(a_idcs_f), b_vals, _as_idx(b_idcs_f), dim=dim).reshape((1,)),
+    )
+
+
+def smxsv_model(vals, idcs_f, b_vals, b_idcs_f, *, dim):
+    """sM×sV (Fig. 4f / 5b golden model)."""
+    return (
+        intersect.smxsv_ell(vals, _as_idx(idcs_f), b_vals, _as_idx(b_idcs_f), dim=dim),
+    )
+
+
+def svpsv_model(a_vals, a_idcs_f, b_vals, b_idcs_f, *, dim):
+    """Sparse-sparse addition (Fig. 4e golden model): dense sum + mask."""
+    s, m = union_add.svpsv_dense(a_vals, _as_idx(a_idcs_f), b_vals, _as_idx(b_idcs_f), dim=dim)
+    return (s, m)
+
+
+def pagerank_step_model(vals, idcs_f, rank, damping_scalar):
+    """One PageRank power-iteration step over a column-normalized ELL
+    adjacency matrix (the §3.3 graph workload; examples/pagerank.rs)."""
+    idcs = _as_idx(idcs_f)
+    n = rank.shape[0]
+    contrib = spmv.spmv_ell(vals, idcs, rank)
+    d = damping_scalar[0]
+    return (d * contrib + (1.0 - d) / n,)
+
+
+def jacobi_step_model(vals, idcs_f, diag_inv, b, x):
+    """One weighted-Jacobi smoothing step x' = x + D^-1 (b - A x)
+    (the FEM/iterative-solver workload of §3.3)."""
+    ax = spmv.spmv_ell(vals, _as_idx(idcs_f), x)
+    return (x + diag_inv * (b - ax),)

@@ -1,0 +1,187 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, densities, and index patterns; explicit cases
+cover the edges (empty fibers, full density, duplicate-free padding).
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import intersect, ref, spmv, union_add  # noqa: E402
+
+
+def random_fiber(rng, dim, k, nnz):
+    """Padded fiber: `nnz` real entries (distinct sorted indices), rest
+    padding (idx 0, val 0)."""
+    vals = np.zeros(k, dtype=np.float64)
+    idcs = np.zeros(k, dtype=np.int32)
+    if nnz:
+        pos = np.sort(rng.choice(dim, size=nnz, replace=False)).astype(np.int32)
+        idcs[:nnz] = pos
+        vals[:nnz] = rng.standard_normal(nnz)
+    return vals, idcs
+
+
+fiber_params = st.tuples(
+    st.integers(min_value=1, max_value=200),  # dim
+    st.integers(min_value=1, max_value=64),  # k (padded length)
+    st.integers(min_value=0, max_value=10_000),  # seed
+)
+
+
+class TestSvxdv:
+    @settings(max_examples=40, deadline=None)
+    @given(fiber_params)
+    def test_matches_ref(self, p):
+        dim, k, seed = p
+        rng = np.random.default_rng(seed)
+        nnz = int(rng.integers(0, min(dim, k) + 1))
+        vals, idcs = random_fiber(rng, dim, k, nnz)
+        b = rng.standard_normal(dim)
+        got = spmv.svxdv(jnp.array(vals), jnp.array(idcs), jnp.array(b))
+        want = ref.svxdv_ref(jnp.array(vals), jnp.array(idcs), jnp.array(b))
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+    def test_all_padding_is_zero(self):
+        vals = jnp.zeros(8)
+        idcs = jnp.zeros(8, jnp.int32)
+        b = jnp.arange(16, dtype=jnp.float64)
+        assert float(spmv.svxdv(vals, idcs, b)) == 0.0
+
+
+class TestSpmvEll:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        st.integers(min_value=1, max_value=8),  # row blocks
+        st.integers(min_value=1, max_value=16),  # k
+        st.integers(min_value=0, max_value=10_000),
+    )
+    def test_matches_ref(self, blocks, k, seed):
+        rng = np.random.default_rng(seed)
+        block_rows = 4
+        n_rows = blocks * block_rows
+        n_cols = int(rng.integers(8, 64))
+        vals = np.zeros((n_rows, k))
+        idcs = np.zeros((n_rows, k), dtype=np.int32)
+        for r in range(n_rows):
+            w = int(rng.integers(0, k + 1))
+            if w:
+                idcs[r, :w] = np.sort(rng.choice(n_cols, size=min(w, n_cols), replace=False))[: w]
+                vals[r, : min(w, n_cols)] = rng.standard_normal(min(w, n_cols))
+        b = rng.standard_normal(n_cols)
+        got = spmv.spmv_ell(jnp.array(vals), jnp.array(idcs), jnp.array(b), block_rows=block_rows)
+        want = ref.spmv_ell_ref(jnp.array(vals), jnp.array(idcs), jnp.array(b))
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+    def test_dtype_f32(self):
+        rng = np.random.default_rng(0)
+        vals = rng.standard_normal((8, 4)).astype(np.float32)
+        idcs = rng.integers(0, 16, size=(8, 4)).astype(np.int32)
+        b = rng.standard_normal(16).astype(np.float32)
+        got = spmv.spmv_ell(jnp.array(vals), jnp.array(idcs), jnp.array(b))
+        want = ref.spmv_ell_ref(jnp.array(vals), jnp.array(idcs), jnp.array(b))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+        assert got.dtype == jnp.float32
+
+    def test_ell_from_csr_roundtrip(self):
+        ptrs = np.array([0, 2, 2, 5])
+        idcs = np.array([1, 3, 0, 2, 4])
+        vals = np.array([1.0, 2.0, 3.0, 4.0, 5.0])
+        ev, ei = spmv.ell_from_csr(ptrs, idcs, vals, pad_rows_to=4)
+        assert ev.shape == (4, 3)
+        np.testing.assert_array_equal(ev[0], [1.0, 2.0, 0.0])
+        np.testing.assert_array_equal(ei[2], [0, 2, 4])
+        np.testing.assert_array_equal(ev[3], 0.0)
+
+
+class TestSvxsv:
+    @settings(max_examples=40, deadline=None)
+    @given(fiber_params, st.integers(min_value=0, max_value=10_000))
+    def test_matches_ref(self, p, seed_b):
+        dim, k, seed = p
+        rng_a = np.random.default_rng(seed)
+        rng_b = np.random.default_rng(seed_b)
+        a_vals, a_idcs = random_fiber(rng_a, dim, k, int(rng_a.integers(0, min(dim, k) + 1)))
+        b_vals, b_idcs = random_fiber(rng_b, dim, k, int(rng_b.integers(0, min(dim, k) + 1)))
+        got = intersect.svxsv(
+            jnp.array(a_vals), jnp.array(a_idcs), jnp.array(b_vals), jnp.array(b_idcs), dim=dim
+        )
+        want = ref.svxsv_ref(
+            jnp.array(a_vals), jnp.array(a_idcs), jnp.array(b_vals), jnp.array(b_idcs), dim
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-14)
+
+    def test_disjoint_is_zero(self):
+        a_vals = jnp.array([1.0, 2.0])
+        a_idcs = jnp.array([1, 3], jnp.int32)
+        b_vals = jnp.array([4.0, 5.0])
+        b_idcs = jnp.array([2, 4], jnp.int32)
+        got = intersect.svxsv(a_vals, a_idcs, b_vals, b_idcs, dim=8)
+        assert float(got) == 0.0
+
+    def test_identical_patterns(self):
+        v = jnp.array([1.0, 2.0, 3.0])
+        i = jnp.array([2, 5, 7], jnp.int32)
+        got = intersect.svxsv(v, i, v, i, dim=10)
+        np.testing.assert_allclose(float(got), 1 + 4 + 9)
+
+
+class TestSmxsv:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_matches_rowwise_svxsv(self, seed):
+        rng = np.random.default_rng(seed)
+        n_rows, k, dim = 8, 6, 40
+        vals = np.zeros((n_rows, k))
+        idcs = np.zeros((n_rows, k), dtype=np.int32)
+        for r in range(n_rows):
+            w = int(rng.integers(0, k + 1))
+            if w:
+                idcs[r, :w] = np.sort(rng.choice(dim, size=w, replace=False))
+                vals[r, :w] = rng.standard_normal(w)
+        b_vals, b_idcs = random_fiber(rng, dim, 10, int(rng.integers(0, 11)))
+        got = intersect.smxsv_ell(
+            jnp.array(vals), jnp.array(idcs), jnp.array(b_vals), jnp.array(b_idcs), dim=dim
+        )
+        dense_b = np.zeros(dim)
+        np.add.at(dense_b, b_idcs, b_vals)
+        want = (vals * dense_b[idcs]).sum(axis=1)
+        np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-14)
+
+
+class TestSvpsv:
+    @settings(max_examples=40, deadline=None)
+    @given(fiber_params, st.integers(min_value=0, max_value=10_000))
+    def test_matches_ref(self, p, seed_b):
+        dim, k, seed = p
+        rng_a = np.random.default_rng(seed)
+        rng_b = np.random.default_rng(seed_b)
+        a_vals, a_idcs = random_fiber(rng_a, dim, k, int(rng_a.integers(0, min(dim, k) + 1)))
+        b_vals, b_idcs = random_fiber(rng_b, dim, k, int(rng_b.integers(0, min(dim, k) + 1)))
+        got_s, got_m = union_add.svpsv_dense(
+            jnp.array(a_vals), jnp.array(a_idcs), jnp.array(b_vals), jnp.array(b_idcs), dim=dim
+        )
+        want_s, want_m = ref.svpsv_dense_ref(
+            jnp.array(a_vals), jnp.array(a_idcs), jnp.array(b_vals), jnp.array(b_idcs), dim
+        )
+        np.testing.assert_allclose(got_s, want_s, rtol=1e-12, atol=1e-14)
+        np.testing.assert_array_equal(np.asarray(got_m), np.asarray(want_m))
+
+    def test_mask_is_union_pattern(self):
+        a_vals = jnp.array([1.0, 2.0])
+        a_idcs = jnp.array([1, 3], jnp.int32)
+        b_vals = jnp.array([4.0, 0.0])  # second entry is padding
+        b_idcs = jnp.array([3, 0], jnp.int32)
+        s, m = union_add.svpsv_dense(a_vals, a_idcs, b_vals, b_idcs, dim=6)
+        np.testing.assert_array_equal(np.asarray(m), [0, 1, 0, 1, 0, 0])
+        np.testing.assert_allclose(np.asarray(s), [0, 1, 0, 6, 0, 0])

@@ -1,0 +1,7 @@
+//! Regenerates Fig. 7 (streamer area and timing, §4.3) from the
+//! GF12LP+-calibrated analytical model.
+use sssr::harness as h;
+
+fn main() {
+    h::print_fig7();
+}

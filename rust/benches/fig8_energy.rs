@@ -1,0 +1,10 @@
+//! Regenerates Fig. 8 (cluster energy estimates, §4.4): cluster runs
+//! feed the activity-scaled energy model.
+use sssr::harness as h;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    h::print_energy_rows("Fig. 8a: cluster sMxdV energy", &h::fig8("smxdv"));
+    h::print_energy_rows("Fig. 8b: cluster sMxsV energy (d_v=1%)", &h::fig8("smxsv"));
+    println!("\n[fig8 bench wall time: {:.1}s]", t0.elapsed().as_secs_f64());
+}

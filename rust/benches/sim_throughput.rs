@@ -1,0 +1,46 @@
+//! Simulator performance benchmark (the §Perf hot path): measures
+//! simulated cycles per wall-second for the three characteristic
+//! workloads. This is the number the EXPERIMENTS.md §Perf log tracks.
+use std::time::Instant;
+
+use sssr::coordinator::run_cluster_smxdv;
+use sssr::kernels::driver::{run_smxdv_sized, run_svxsv};
+use sssr::kernels::{IdxWidth, Variant};
+use sssr::matgen;
+use sssr::sim::ClusterCfg;
+
+fn main() {
+    // 1) single-CC SSSR sMxdV (streamer-heavy)
+    let m = matgen::random_csr(1, 512, 1024, 40_000);
+    let b = matgen::random_dense(2, 1024);
+    let t = Instant::now();
+    let (_, rep) = run_smxdv_sized(Variant::Sssr, IdxWidth::U16, &m, &b, 16 << 20);
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "single-CC sssr smxdv : {:>10} cycles in {:>6.2}s = {:>7.2} Mcycles/s",
+        rep.cycles, dt, rep.cycles as f64 / dt / 1e6
+    );
+
+    // 2) single-CC BASE svxsv (core-heavy)
+    let a = matgen::random_spvec(3, 40_000, 8000);
+    let c = matgen::random_spvec(4, 40_000, 8000);
+    let t = Instant::now();
+    let (_, rep) = run_svxsv(Variant::Base, IdxWidth::U32, &a, &c);
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "single-CC base svxsv : {:>10} cycles in {:>6.2}s = {:>7.2} Mcycles/s",
+        rep.cycles, dt, rep.cycles as f64 / dt / 1e6
+    );
+
+    // 3) eight-core cluster SSSR sMxdV (full system)
+    let m = matgen::mycielskian(10);
+    let b = matgen::random_dense(5, m.ncols);
+    let cfg = ClusterCfg::paper_cluster();
+    let t = Instant::now();
+    let run = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &cfg);
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "cluster  sssr smxdv : {:>10} cycles in {:>6.2}s = {:>7.2} Mcycles/s",
+        run.report.cycles, dt, run.report.cycles as f64 / dt / 1e6
+    );
+}

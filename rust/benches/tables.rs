@@ -1,0 +1,8 @@
+//! Regenerates Tables 2 and 3 (§5 comparison to related work).
+use sssr::harness as h;
+
+fn main() {
+    let rows = h::fig5a();
+    h::print_table2(h::table2_ours(&rows));
+    h::print_table3();
+}

@@ -1,0 +1,662 @@
+//! L3 coordinator: the parallel cluster scaleout of §4.2.
+//!
+//! The real cluster's data-movement core (DMCC) runs a control loop that
+//! chunks the matrix, programs double-buffered DMA transfers, balances
+//! rows across the worker cores, and sequences phases with the hardware
+//! barrier. This module is that control program: it plans the chunking
+//! and work split, emits per-core kernel programs, builds the per-phase
+//! [`DmaSchedule`], and writes the per-core *job descriptor table* the
+//! workers read at each phase (the DMCC prepares these in the real
+//! system; we place them zero-time at setup).
+//!
+//! Data flow per §4.2: all inputs start in DRAM; the dense/sparse vector
+//! is transferred once (not overlappable), matrix chunks stream through
+//! two TCDM buffers (compute on one while the DMA prefetches the other —
+//! the barrier only awaits *prior* phases), and the result is written
+//! back to DRAM at the end.
+
+use crate::formats::{ops, Csr, SpVec};
+use crate::kernels::sparse_dense::{cfg_imm, emit_smxdv_rows_sssr, N_ACC};
+use crate::kernels::{Arena, IdxWidth, Report, Variant};
+use crate::sim::asm::Asm;
+use crate::sim::isa::{ssr_mode, SsrField as F, *};
+use crate::sim::{Cluster, ClusterCfg, DmaJob, DmaSchedule, Program};
+
+const LIMIT: u64 = 2_000_000_000;
+
+/// Per-core, per-phase job descriptor (7 x u64, written by the DMCC).
+const DESC_BYTES: u64 = 56;
+/// One phase's descriptor block (8 cores), padded to a DMA-friendly size.
+const DESC_SLOT: u64 = 512;
+
+/// One matrix chunk: a contiguous row range whose fiber fits a buffer.
+#[derive(Clone, Debug)]
+pub(crate) struct Chunk {
+    row0: usize,
+    rows: usize,
+    nnz0: usize,
+    nnz: usize,
+    /// Per-core (first_row, n_rows) within the chunk, nnz-balanced.
+    split: Vec<(usize, usize)>,
+}
+
+/// Plan chunks so `vals + idcs + ptrs` of each chunk fit `buf_bytes`,
+/// then nnz-balance each chunk's rows over `cores` ("dynamically sized
+/// chunks of rows among cores", §4.2).
+pub(crate) fn plan_chunks(m: &Csr, iw: IdxWidth, buf_bytes: u64, cores: usize) -> Vec<Chunk> {
+    let per_nnz = 8 + iw.bytes();
+    let mut chunks = vec![];
+    let mut row0 = 0usize;
+    while row0 < m.nrows {
+        let nnz0 = m.ptrs[row0] as usize;
+        let mut row1 = row0;
+        while row1 < m.nrows {
+            let nnz_end = m.ptrs[row1 + 1] as usize;
+            let bytes = (nnz_end - nnz0) as u64 * per_nnz + ((row1 + 2 - row0) as u64) * 4 + 48;
+            if bytes > buf_bytes && row1 > row0 {
+                break;
+            }
+            assert!(
+                bytes <= buf_bytes || row1 > row0,
+                "a single row's fiber exceeds the chunk buffer ({bytes} > {buf_bytes})"
+            );
+            row1 += 1;
+        }
+        let rows = row1 - row0;
+        let nnz = m.ptrs[row1] as usize - nnz0;
+        let mut split = vec![];
+        let target = (nnz as f64 / cores as f64).max(1.0);
+        let mut r = row0;
+        for c in 0..cores {
+            let mut take = 0usize;
+            if c == cores - 1 {
+                take = row1 - r;
+            } else {
+                let goal = ((c + 1) as f64 * target).round() as usize + nnz0;
+                while r + take < row1 && (m.ptrs[r + take + 1] as usize) <= goal {
+                    take += 1;
+                }
+            }
+            split.push((r, take));
+            r += take;
+        }
+        chunks.push(Chunk { row0, rows, nnz0, nnz, split });
+        row0 = row1;
+    }
+    chunks
+}
+
+/// TCDM layout for the cluster kernels.
+struct Layout {
+    buf_vals: [u64; 2],
+    buf_idcs: [u64; 2],
+    buf_ptrs: [u64; 2],
+    vec_vals: u64,
+    vec_idcs: u64,
+    c_base: u64,
+    /// Double-buffered per-phase descriptor slots (DMA'd with each
+    /// chunk, like the real DMCC's job tables).
+    desc_buf: [u64; 2],
+    buf_bytes: u64,
+}
+
+/// Emit the per-core phase loop around a chunk-compute `body`.
+///
+/// Registers at body entry (loaded from the descriptor):
+///   A0 = chunk-local vals base, A1 = chunk-local idcs base,
+///   A5 = ptr-slice cursor, A3 = my row count, A4 = my result cursor,
+///   A6 = my nnz count. S0 = descriptor pointer (double-buffered in the
+/// TCDM like the chunk data; S7 holds the XOR toggle between the two
+/// buffer slots), S1 = phase counter; bodies must not clobber
+/// S0/S1/S2/S7 (S2 = result stride).
+fn emit_phase_loop(a: &mut Asm, nphases: u64, body: impl FnOnce(&mut Asm)) {
+    a.li(S1, nphases as i64);
+    a.li(S2, 8);
+    a.label("phase");
+    a.barrier();
+    a.ld(A0, S0, 0);
+    a.ld(A1, S0, 8);
+    a.ld(A5, S0, 16);
+    a.ld(A3, S0, 24);
+    a.ld(A4, S0, 32);
+    a.ld(A6, S0, 40);
+    body(a);
+    a.fpu_fence();
+    a.xor(S0, S0, S7); // flip to the other descriptor buffer
+    a.addi(S1, S1, -1);
+    a.bne(S1, ZERO, "phase");
+    a.barrier(); // final: releases the result writeback
+    a.halt();
+}
+
+/// Build the sM×dV worker program.
+fn build_worker_smxdv(variant: Variant, iw: IdxWidth, nphases: u64) -> Program {
+    let mut a = Asm::new();
+    match variant {
+        Variant::Sssr => {
+            a.ssr_enable();
+            cfg_imm(&mut a, 1, F::IdxSize, iw.log2() as i64);
+            cfg_imm(&mut a, 1, F::IdxShift, 3);
+            emit_phase_loop(&mut a, nphases, |a| {
+                a.beq(A3, ZERO, "skip");
+                // ft0 = affine over my vals slice, ft1 = b indirected
+                // over my idcs slice
+                a.scfgw(0, F::DataBase, A0);
+                a.scfgw(0, F::Bound0, A6);
+                cfg_imm(a, 0, F::Stride0, 8);
+                cfg_imm(a, 0, F::Launch, ssr_mode::AFFINE_READ);
+                a.scfgw(1, F::DataBase, A2); // b (resident, preset)
+                a.scfgw(1, F::IdxBase, A1);
+                a.scfgw(1, F::IdxLen, A6);
+                cfg_imm(a, 1, F::Launch, ssr_mode::INDIRECT_READ);
+                a.mv(S4, A5); // ptr cursor
+                a.mv(S5, A3); // row counter
+                emit_smxdv_rows_sssr(a, "w");
+                a.label("skip");
+            });
+        }
+        Variant::Base => {
+            emit_phase_loop(&mut a, nphases, |a| {
+                a.beq(A3, ZERO, "skip");
+                a.mv(T3, A0); // vals cursor (chunk-local, sequential)
+                a.mv(T4, A1); // idcs cursor
+                a.mv(S4, A5);
+                a.mv(S5, A3);
+                a.label("row");
+                a.lwu(T0, S4, 0);
+                a.lwu(T1, S4, 4);
+                a.sub(T2, T1, T0);
+                a.fcvt_d_w_zero(FT3);
+                a.beq(T2, ZERO, "store");
+                a.label("inner");
+                iw.load(a, T5, T4, 0);
+                a.slli(T5, T5, 3);
+                a.add(T5, A2, T5);
+                a.fld(FT0, T5, 0);
+                a.fld(FT1, T3, 0);
+                a.fmadd_d(FT3, FT0, FT1, FT3);
+                a.addi(T4, T4, iw.bytes() as i64);
+                a.addi(T3, T3, 8);
+                a.addi(T2, T2, -1);
+                a.bne(T2, ZERO, "inner");
+                a.label("store");
+                a.fsd(FT3, A4, 0);
+                a.addi(A4, A4, 8);
+                a.addi(S4, S4, 4);
+                a.addi(S5, S5, -1);
+                a.bne(S5, ZERO, "row");
+                a.label("skip");
+            });
+        }
+        Variant::Ssr => panic!("cluster scaleout implements BASE and SSSR (as the paper's Fig. 5)"),
+    }
+    a.finish()
+}
+
+/// Build the sM×sV worker program. Preset registers: A2 = b_vals,
+/// S8 = b_idcs, S9 = b_nnz (the b fiber is TCDM-resident).
+fn build_worker_smxsv(variant: Variant, iw: IdxWidth, nphases: u64) -> Program {
+    let ib = iw.bytes() as i64;
+    let mut a = Asm::new();
+    match variant {
+        Variant::Sssr => {
+            a.ssr_enable();
+            cfg_imm(&mut a, 0, F::IdxSize, iw.log2() as i64);
+            cfg_imm(&mut a, 1, F::IdxSize, iw.log2() as i64);
+            a.scfgw(1, F::DataBase, A2);
+            a.scfgw(1, F::IdxBase, S8);
+            a.scfgw(1, F::IdxLen, S9);
+            a.li(S10, ssr_mode::INTERSECT);
+            emit_phase_loop(&mut a, nphases, |a| {
+                a.beq(A3, ZERO, "skip");
+                a.mv(T3, A0); // vals cursor
+                a.mv(T4, A1); // idcs cursor
+                a.mv(S4, A5);
+                a.mv(S5, A3);
+                a.label("row");
+                a.lwu(T0, S4, 0);
+                a.lwu(T1, S4, 4);
+                a.sub(T2, T1, T0);
+                a.scfgw(0, F::IdxBase, T4);
+                a.scfgw(0, F::DataBase, T3);
+                a.scfgw(0, F::IdxLen, T2);
+                a.scfgw(0, F::Launch, S10);
+                a.scfgw(1, F::Launch, S10);
+                for i in 0..N_ACC {
+                    a.fcvt_d_w_zero(FT3 + i);
+                }
+                a.frep_s(1, N_ACC - 1, stagger::RD | stagger::RS3);
+                a.fmadd_d(FT3, FT0, FT1, FT3);
+                a.fadd_d(FT3, FT3, FT4);
+                a.fadd_d(FT5, FT5, FT6);
+                a.fadd_d(FT7, FT3, FT5);
+                a.fsd(FT7, A4, 0);
+                a.addi(A4, A4, 8);
+                a.slli(T5, T2, 3);
+                a.add(T3, T3, T5);
+                a.slli(T5, T2, iw.log2());
+                a.add(T4, T4, T5);
+                a.addi(S4, S4, 4);
+                a.addi(S5, S5, -1);
+                a.bne(S5, ZERO, "row");
+                a.label("skip");
+            });
+        }
+        Variant::Base => {
+            emit_phase_loop(&mut a, nphases, |a| {
+                a.beq(A3, ZERO, "skip");
+                a.mv(T3, A0); // a vals cursor
+                a.mv(T4, A1); // a idcs cursor
+                a.mv(S4, A5);
+                a.mv(S5, A3);
+                a.slli(S6, S9, iw.log2());
+                a.add(S6, S8, S6); // b idx end
+                a.label("row");
+                a.lwu(T0, S4, 0);
+                a.lwu(T1, S4, 4);
+                a.sub(S3, T1, T0); // a-row remaining
+                a.slli(T5, S3, iw.log2());
+                a.add(T5, T4, T5); // a idx end
+                a.mv(T0, S8); // b idx cursor
+                a.mv(T1, A2); // b val cursor
+                a.fcvt_d_w_zero(FT3);
+                a.label("loop");
+                a.bgeu(T4, T5, "rdone");
+                a.bgeu(T0, S6, "rdone");
+                iw.load(a, T6, T4, 0);
+                iw.load(a, T2, T0, 0);
+                a.beq(T6, T2, "match");
+                a.bltu(T6, T2, "skipa");
+                a.label("skipb");
+                a.addi(T0, T0, ib);
+                a.addi(T1, T1, 8);
+                a.bgeu(T0, S6, "rdone");
+                iw.load(a, T2, T0, 0);
+                a.bltu(T2, T6, "skipb");
+                a.j("loop");
+                a.label("skipa");
+                a.addi(T4, T4, ib);
+                a.addi(T3, T3, 8);
+                a.addi(S3, S3, -1);
+                a.bgeu(T4, T5, "rdone");
+                iw.load(a, T6, T4, 0);
+                a.bltu(T6, T2, "skipa");
+                a.j("loop");
+                a.label("match");
+                a.fld(FT0, T3, 0);
+                a.fld(FT1, T1, 0);
+                a.fmadd_d(FT3, FT0, FT1, FT3);
+                a.addi(T4, T4, ib);
+                a.addi(T3, T3, 8);
+                a.addi(S3, S3, -1);
+                a.addi(T0, T0, ib);
+                a.addi(T1, T1, 8);
+                a.j("loop");
+                a.label("rdone");
+                // advance a-cursors past the unconsumed row remainder
+                a.slli(T6, S3, 3);
+                a.add(T3, T3, T6);
+                a.mv(T4, T5);
+                a.fsd(FT3, A4, 0);
+                a.addi(A4, A4, 8);
+                a.addi(S4, S4, 4);
+                a.addi(S5, S5, -1);
+                a.bne(S5, ZERO, "row");
+                a.label("skip");
+            });
+        }
+        Variant::Ssr => panic!("cluster scaleout implements BASE and SSSR (as the paper's Fig. 5)"),
+    }
+    a.finish()
+}
+
+/// Outcome of a cluster run.
+pub struct ClusterRun {
+    pub result: Vec<f64>,
+    pub report: Report,
+    pub chunks: usize,
+}
+
+/// DRAM image layout.
+struct DramImage {
+    m_vals: u64,
+    m_idcs: u64,
+    m_ptrs: u64,
+    v_vals: u64,
+    v_idcs: u64,
+    c_out: u64,
+    /// Per-phase descriptor blocks (DESC_SLOT bytes each).
+    desc: u64,
+}
+
+fn place_in_dram(
+    cl: &mut Cluster,
+    m: &Csr,
+    iw: IdxWidth,
+    dense: Option<&[f64]>,
+    fiber: Option<&SpVec>,
+) -> DramImage {
+    let mut a = Arena::new(0, cl.dram.size() as u64);
+    let m_vals = a.alloc_f64(m.nnz() as u64);
+    let m_idcs = a.alloc_idx(m.nnz() as u64, iw);
+    let m_ptrs = a.alloc(4 * (m.nrows as u64 + 1) + 8);
+    let v_vals;
+    let mut v_idcs = 0;
+    if let Some(d) = dense {
+        v_vals = a.alloc_f64(d.len() as u64);
+    } else {
+        let f = fiber.unwrap();
+        v_vals = a.alloc_f64(f.nnz() as u64);
+        v_idcs = a.alloc_idx(f.nnz() as u64, iw);
+    }
+    let c_out = a.alloc_f64(m.nrows as u64);
+    let desc = a.alloc(DESC_SLOT * 4096); // up to 4096 phases
+    for (i, &v) in m.vals.iter().enumerate() {
+        cl.dram.poke_f64(m_vals + 8 * i as u64, v);
+    }
+    for (i, &x) in m.idcs.iter().enumerate() {
+        cl.dram.poke(m_idcs + iw.bytes() * i as u64, iw.bytes(), x as u64);
+    }
+    for (i, &p) in m.ptrs.iter().enumerate() {
+        cl.dram.poke(m_ptrs + 4 * i as u64, 4, p as u64);
+    }
+    if let Some(d) = dense {
+        for (i, &v) in d.iter().enumerate() {
+            cl.dram.poke_f64(v_vals + 8 * i as u64, v);
+        }
+    } else {
+        let f = fiber.unwrap();
+        for (i, &v) in f.vals.iter().enumerate() {
+            cl.dram.poke_f64(v_vals + 8 * i as u64, v);
+        }
+        for (i, &x) in f.idcs.iter().enumerate() {
+            cl.dram.poke(v_idcs + iw.bytes() * i as u64, iw.bytes(), x as u64);
+        }
+    }
+    DramImage { m_vals, m_idcs, m_ptrs, v_vals, v_idcs, c_out, desc }
+}
+
+/// Shared cluster run implementation for sM×dV / sM×sV.
+fn run_cluster(
+    variant: Variant,
+    iw: IdxWidth,
+    m: &Csr,
+    dense: Option<&[f64]>,
+    fiber: Option<&SpVec>,
+    cfg: &ClusterCfg,
+    payload: u64,
+) -> ClusterRun {
+    let cores = cfg.cores;
+    let tcdm = cfg.tcdm_bytes as u64;
+
+    // --- chunk planning against the available buffer budget -----------
+    let resident = match (dense, fiber) {
+        (Some(d), _) => d.len() as u64 * 8,
+        (_, Some(f)) => f.nnz() as u64 * (8 + iw.bytes()) + 24,
+        _ => unreachable!(),
+    };
+    // resident vector + result + 2 descriptor slots + slack
+    let reserve = resident + m.nrows as u64 * 8 + 2 * DESC_SLOT + 1024;
+    assert!(tcdm > reserve + (16 << 10), "workload does not fit the TCDM plan");
+    // Iterate the chunk budget down until the realized double-buffer
+    // allocation (max nnz and max rows may come from different chunks)
+    // fits the TCDM.
+    let mut budget = (tcdm - reserve) / 2 - 256;
+    let mut chunks = plan_chunks(m, iw, budget, cores);
+    for _ in 0..32 {
+        let max_rows = chunks.iter().map(|c| c.rows).max().unwrap() as u64;
+        let max_nnz = chunks.iter().map(|c| c.nnz).max().unwrap() as u64;
+        let per_buf = max_nnz * 8 + (max_nnz * iw.bytes() + 24) + ((max_rows + 1) * 4 + 24) + 24;
+        if reserve + 2 * per_buf <= tcdm {
+            break;
+        }
+        budget = budget * 9 / 10;
+        chunks = plan_chunks(m, iw, budget, cores);
+    }
+    let nphases = chunks.len() as u64;
+    assert!(nphases <= 4096, "too many chunks for the DRAM descriptor region");
+
+    // --- TCDM layout ----------------------------------------------------
+    let mut ar = Arena::new(0, tcdm);
+    let vec_vals = ar.alloc_f64(match (dense, fiber) {
+        (Some(d), _) => d.len() as u64,
+        (_, Some(f)) => f.nnz() as u64,
+        _ => unreachable!(),
+    });
+    let vec_idcs = if let Some(f) = fiber { ar.alloc_idx(f.nnz() as u64, iw) } else { 0 };
+    let c_base = ar.alloc_f64(m.nrows as u64);
+    let desc_buf = [ar.alloc(DESC_SLOT), ar.alloc(DESC_SLOT)];
+    let max_rows = chunks.iter().map(|c| c.rows).max().unwrap() as u64;
+    let max_nnz = chunks.iter().map(|c| c.nnz).max().unwrap() as u64;
+    let mk_buf = |ar: &mut Arena| {
+        let vals = ar.alloc_f64(max_nnz);
+        let idcs = ar.alloc(max_nnz * iw.bytes() + 16);
+        let ptrs = ar.alloc((max_rows + 1) * 4 + 16);
+        (vals, idcs, ptrs)
+    };
+    let (v0, i0, p0) = mk_buf(&mut ar);
+    let (v1, i1, p1) = mk_buf(&mut ar);
+    let layout = Layout {
+        buf_vals: [v0, v1],
+        buf_idcs: [i0, i1],
+        buf_ptrs: [p0, p1],
+        vec_vals,
+        vec_idcs,
+        c_base,
+        desc_buf,
+        buf_bytes: budget,
+    };
+    let _ = layout.buf_bytes;
+
+    // --- programs + cluster ---------------------------------------------
+    let prog = match dense.is_some() {
+        true => build_worker_smxdv(variant, iw, nphases),
+        false => build_worker_smxsv(variant, iw, nphases),
+    };
+    let mut cl = Cluster::new(cfg.clone(), vec![prog; cores]);
+    let img = place_in_dram(&mut cl, m, iw, dense, fiber);
+
+    for c in 0..cores {
+        let d0 = layout.desc_buf[0] + c as u64 * DESC_BYTES;
+        let d1 = layout.desc_buf[1] + c as u64 * DESC_BYTES;
+        cl.set_reg(c, S0, d0 as i64);
+        cl.set_reg(c, S7, (d0 ^ d1) as i64);
+        cl.set_reg(c, A2, layout.vec_vals as i64);
+        if let Some(f) = fiber {
+            cl.set_reg(c, S8, layout.vec_idcs as i64);
+            cl.set_reg(c, S9, f.nnz() as i64);
+        }
+    }
+
+    // --- descriptor table + DMA schedule (alignment-aware) ---------------
+    // Index/pointer chunk transfers must start 8B-aligned on both sides;
+    // the in-buffer data is therefore offset by the source misalignment
+    // (SSSRs support arbitrary index base alignment, §2.1.1).
+    let mut phases: Vec<Vec<DmaJob>> = vec![vec![]; nphases as usize + 2];
+    for (k, ch) in chunks.iter().enumerate() {
+        let buf = k % 2;
+        let idx_src = img.m_idcs + ch.nnz0 as u64 * iw.bytes();
+        let idx_src_al = idx_src & !7;
+        let idx_off = idx_src - idx_src_al;
+        let ptr_src = img.m_ptrs + ch.row0 as u64 * 4;
+        let ptr_src_al = ptr_src & !7;
+        let ptr_off = ptr_src - ptr_src_al;
+        // descriptors for this phase go to DRAM; the DMA brings them in
+        // with the chunk (the DMCC's job table)
+        for (c, &(first_row, nrows)) in ch.split.iter().enumerate() {
+            let nnz_off = m.ptrs[first_row] as u64 - ch.nnz0 as u64;
+            let my_nnz = m.ptrs[first_row + nrows] as u64 - m.ptrs[first_row] as u64;
+            let base = img.desc + k as u64 * DESC_SLOT + c as u64 * DESC_BYTES;
+            for (slot, val) in [
+                (0u64, layout.buf_vals[buf] + nnz_off * 8),
+                (1, layout.buf_idcs[buf] + idx_off + nnz_off * iw.bytes()),
+                (2, layout.buf_ptrs[buf] + ptr_off + (first_row - ch.row0) as u64 * 4),
+                (3, nrows as u64),
+                (4, layout.c_base + first_row as u64 * 8),
+                (5, my_nnz),
+            ] {
+                cl.dram.poke(base + 8 * slot, 8, val);
+            }
+        }
+        // transfers: submitted with phase k (phase 0 also carries the
+        // resident vector)
+        let jobs = &mut phases[k];
+        jobs.push(DmaJob::flat(
+            img.desc + k as u64 * DESC_SLOT,
+            layout.desc_buf[buf],
+            DESC_SLOT,
+            true,
+        ));
+        jobs.push(DmaJob::flat(img.m_vals + ch.nnz0 as u64 * 8, layout.buf_vals[buf], ch.nnz as u64 * 8, true));
+        let idx_bytes = (idx_off + ch.nnz as u64 * iw.bytes() + 7) & !7;
+        jobs.push(DmaJob::flat(idx_src_al, layout.buf_idcs[buf], idx_bytes, true));
+        let ptr_bytes = (ptr_off + (ch.rows as u64 + 1) * 4 + 7) & !7;
+        jobs.push(DmaJob::flat(ptr_src_al, layout.buf_ptrs[buf], ptr_bytes, true));
+    }
+    // resident vector with phase 0 (the initial transfer that cannot be
+    // overlapped, §4.2)
+    if let Some(d) = dense {
+        phases[0].insert(0, DmaJob::flat(img.v_vals, layout.vec_vals, d.len() as u64 * 8, true));
+    } else {
+        let f = fiber.unwrap();
+        phases[0].insert(0, DmaJob::flat(img.v_vals, layout.vec_vals, f.nnz() as u64 * 8, true));
+        phases[0].insert(
+            1,
+            DmaJob::flat(img.v_idcs, layout.vec_idcs, (f.nnz() as u64 * iw.bytes() + 15) & !7, true),
+        );
+    }
+    // phases[nphases] stays empty (release before the last compute);
+    // the final barrier triggers the result writeback.
+    phases[nphases as usize + 1] =
+        vec![DmaJob::flat(img.c_out, layout.c_base, m.nrows as u64 * 8, false)];
+    cl.set_dma_schedule(DmaSchedule { phases });
+
+    let cycles = cl.run(LIMIT);
+    let stats = cl.stats();
+    let result: Vec<f64> = (0..m.nrows)
+        .map(|r| cl.dram.peek_f64(img.c_out + 8 * r as u64))
+        .collect();
+    ClusterRun {
+        result,
+        report: Report::from_run(cycles, payload, stats),
+        chunks: chunks.len(),
+    }
+}
+
+/// Parallel sM×dV on the cluster (Fig. 5a workload). Verifies against
+/// the dense oracle.
+pub fn run_cluster_smxdv(variant: Variant, iw: IdxWidth, m: &Csr, b: &[f64], cfg: &ClusterCfg) -> ClusterRun {
+    assert_eq!(m.ncols, b.len());
+    let run = run_cluster(variant, iw, m, Some(b), None, cfg, m.nnz() as u64);
+    let want = ops::smxdv(m, b);
+    for (i, (g, w)) in run.result.iter().zip(&want).enumerate() {
+        let tol = 1e-9 * w.abs().max(1.0);
+        assert!((g - w).abs() <= tol, "cluster smxdv[{i}]: {g} vs {w}");
+    }
+    run
+}
+
+/// Parallel sM×sV on the cluster (Fig. 5b workload).
+pub fn run_cluster_smxsv(variant: Variant, iw: IdxWidth, m: &Csr, b: &SpVec, cfg: &ClusterCfg) -> ClusterRun {
+    assert_eq!(m.ncols, b.dim);
+    let payload: u64 = (0..m.nrows)
+        .map(|r| ops::svosv(&m.row_spvec(r), b).nnz() as u64)
+        .sum();
+    let run = run_cluster(variant, iw, m, None, Some(b), cfg, payload);
+    let want = ops::smxsv(m, b);
+    for (i, (g, w)) in run.result.iter().zip(&want).enumerate() {
+        let tol = 1e-9 * w.abs().max(1.0);
+        assert!((g - w).abs() <= tol, "cluster smxsv[{i}]: {g} vs {w}");
+    }
+    run
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen;
+
+    #[test]
+    fn chunk_plan_covers_matrix() {
+        let m = matgen::random_csr(50, 300, 256, 3000);
+        let chunks = plan_chunks(&m, IdxWidth::U16, 8 << 10, 8);
+        let total_rows: usize = chunks.iter().map(|c| c.rows).sum();
+        let total_nnz: usize = chunks.iter().map(|c| c.nnz).sum();
+        assert_eq!(total_rows, m.nrows);
+        assert_eq!(total_nnz, m.nnz());
+        for ch in &chunks {
+            let split_rows: usize = ch.split.iter().map(|&(_, n)| n).sum();
+            assert_eq!(split_rows, ch.rows);
+            let mut r = ch.row0;
+            for &(first, n) in &ch.split {
+                assert_eq!(first, r);
+                r += n;
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_smxdv_base_and_sssr_correct() {
+        let m = matgen::random_csr(51, 200, 256, 2400);
+        let b = matgen::random_dense(52, 256);
+        let cfg = ClusterCfg::paper_cluster();
+        let base = run_cluster_smxdv(Variant::Base, IdxWidth::U16, &m, &b, &cfg);
+        let sssr = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &cfg);
+        assert!(sssr.report.cycles < base.report.cycles, "SSSR not faster");
+    }
+
+    #[test]
+    fn cluster_smxdv_multi_chunk_double_buffers() {
+        let m = matgen::random_csr(53, 1200, 1024, 40_000);
+        let b = matgen::random_dense(54, 1024);
+        let cfg = ClusterCfg::paper_cluster();
+        let run = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &cfg);
+        assert!(run.chunks >= 2, "expected multiple chunks, got {}", run.chunks);
+    }
+
+    #[test]
+    fn cluster_smxsv_base_and_sssr_correct() {
+        let m = matgen::random_csr(55, 150, 512, 3000);
+        let v = matgen::random_spvec(56, 512, 50);
+        let cfg = ClusterCfg::paper_cluster();
+        let base = run_cluster_smxsv(Variant::Base, IdxWidth::U16, &m, &v, &cfg);
+        let sssr = run_cluster_smxsv(Variant::Sssr, IdxWidth::U16, &m, &v, &cfg);
+        assert!(sssr.report.cycles < base.report.cycles);
+    }
+
+    #[test]
+    fn cluster_speedup_grows_with_row_density() {
+        let cfg = ClusterCfg::paper_cluster();
+        let sparse_m = matgen::random_csr(57, 400, 512, 1200); // ~3/row
+        let dense_m = matgen::random_csr(58, 400, 512, 24_000); // ~60/row
+        let b = matgen::random_dense(59, 512);
+        let s1 = {
+            let base = run_cluster_smxdv(Variant::Base, IdxWidth::U16, &sparse_m, &b, &cfg);
+            let sssr = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &sparse_m, &b, &cfg);
+            base.report.cycles as f64 / sssr.report.cycles as f64
+        };
+        let s2 = {
+            let base = run_cluster_smxdv(Variant::Base, IdxWidth::U16, &dense_m, &b, &cfg);
+            let sssr = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &dense_m, &b, &cfg);
+            base.report.cycles as f64 / sssr.report.cycles as f64
+        };
+        assert!(s2 > s1, "speedup should grow with n̄_nz: {s1} vs {s2}");
+        assert!(s2 > 2.0, "dense-row cluster speedup only {s2}");
+    }
+
+    #[test]
+    fn cluster_dram_bandwidth_throttle_slows_run() {
+        let m = matgen::random_csr(60, 600, 512, 30_000);
+        let b = matgen::random_dense(61, 512);
+        let full = ClusterCfg::paper_cluster();
+        let throttled = ClusterCfg { dram_gbps_pin: 0.4, ..ClusterCfg::paper_cluster() };
+        let fast = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &full);
+        let slow = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &throttled);
+        assert!(
+            slow.report.cycles > fast.report.cycles * 2,
+            "throttle had no effect: {} vs {}",
+            slow.report.cycles,
+            fast.report.cycles
+        );
+    }
+}

@@ -1,0 +1,407 @@
+//! Sparse tensor formats (§3.1): CSR/CSC matrices, CSF sparse vectors
+//! (fibers), blocked BCSR, and the dense reference operations used as
+//! correctness oracles throughout the test suite.
+//!
+//! A sparse *fiber* is the pair (value array, index array) along the
+//! major axis — the unit SSSRs iterate.
+
+pub mod ops;
+
+/// A sparse vector in CSF form: one fiber with strictly increasing
+/// indices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpVec {
+    /// Dense dimension.
+    pub dim: usize,
+    pub idcs: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl SpVec {
+    pub fn new(dim: usize, idcs: Vec<u32>, vals: Vec<f64>) -> Self {
+        let v = SpVec { dim, idcs, vals };
+        v.validate().expect("invalid SpVec");
+        v
+    }
+
+    pub fn empty(dim: usize) -> Self {
+        SpVec { dim, idcs: vec![], vals: vec![] }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idcs.len()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.idcs.len() != self.vals.len() {
+            return Err(format!("idcs {} != vals {}", self.idcs.len(), self.vals.len()));
+        }
+        for w in self.idcs.windows(2) {
+            if w[0] >= w[1] {
+                return Err(format!("indices not strictly increasing: {} >= {}", w[0], w[1]));
+            }
+        }
+        if let Some(&last) = self.idcs.last() {
+            if last as usize >= self.dim {
+                return Err(format!("index {last} out of dim {}", self.dim));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.dim];
+        for (&i, &v) in self.idcs.iter().zip(&self.vals) {
+            d[i as usize] = v;
+        }
+        d
+    }
+
+    pub fn from_dense(d: &[f64]) -> Self {
+        let mut idcs = vec![];
+        let mut vals = vec![];
+        for (i, &v) in d.iter().enumerate() {
+            if v != 0.0 {
+                idcs.push(i as u32);
+                vals.push(v);
+            }
+        }
+        SpVec { dim: d.len(), idcs, vals }
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / self.dim as f64
+    }
+}
+
+/// Compressed sparse row matrix (Yale format [18]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Row pointers, length `nrows + 1` (32-bit as in §3.2.1: "we use
+    /// 32-bit row pointers in all variants").
+    pub ptrs: Vec<u32>,
+    /// Column indices per nonzero, increasing within each row.
+    pub idcs: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    pub fn new(nrows: usize, ncols: usize, ptrs: Vec<u32>, idcs: Vec<u32>, vals: Vec<f64>) -> Self {
+        let m = Csr { nrows, ncols, ptrs, idcs, vals };
+        m.validate().expect("invalid CSR");
+        m
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idcs.len()
+    }
+
+    /// Average nonzeros per row (the x-axis of Fig. 4c/4f/5a).
+    pub fn avg_row_nnz(&self) -> f64 {
+        self.nnz() as f64 / self.nrows as f64
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.nrows * self.ncols) as f64
+    }
+
+    pub fn row(&self, r: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.ptrs[r] as usize, self.ptrs[r + 1] as usize);
+        (&self.idcs[a..b], &self.vals[a..b])
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ptrs.len() != self.nrows + 1 {
+            return Err("ptrs length".into());
+        }
+        if *self.ptrs.last().unwrap() as usize != self.idcs.len() {
+            return Err("last ptr != nnz".into());
+        }
+        if self.idcs.len() != self.vals.len() {
+            return Err("idcs/vals length".into());
+        }
+        for r in 0..self.nrows {
+            if self.ptrs[r] > self.ptrs[r + 1] {
+                return Err(format!("row {r} pointers decrease"));
+            }
+            let (idx, _) = self.row(r);
+            for w in idx.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {r} indices not increasing"));
+                }
+            }
+            if let Some(&last) = idx.last() {
+                if last as usize >= self.ncols {
+                    return Err(format!("row {r} index {last} out of ncols"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Build from (row, col, val) triplets (duplicates summed).
+    pub fn from_triplets(nrows: usize, ncols: usize, mut t: Vec<(u32, u32, f64)>) -> Self {
+        t.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut ptrs = vec![0u32; nrows + 1];
+        let mut idcs = Vec::with_capacity(t.len());
+        let mut vals: Vec<f64> = Vec::with_capacity(t.len());
+        for (r, c, v) in t {
+            if let (Some(&lc), true) = (idcs.last(), ptrs[r as usize + 1] > 0) {
+                let row_started = idcs.len() as u32 > ptrs[r as usize];
+                if row_started && lc == c && ptrs[(r + 1) as usize] as usize == idcs.len() {
+                    // duplicate within the current row: accumulate
+                    *vals.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            // close out rows up to r
+            while (ptrs.len() as u32) <= r {
+                unreachable!();
+            }
+            idcs.push(c);
+            vals.push(v);
+            for p in &mut ptrs[r as usize + 1..] {
+                *p = idcs.len() as u32;
+            }
+        }
+        Csr::new(nrows, ncols, ptrs, idcs, vals)
+    }
+
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.ncols]; self.nrows];
+        for r in 0..self.nrows {
+            let (idx, val) = self.row(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                d[r][c as usize] = v;
+            }
+        }
+        d
+    }
+
+    pub fn from_dense(d: &[Vec<f64>]) -> Self {
+        let nrows = d.len();
+        let ncols = d.first().map(|r| r.len()).unwrap_or(0);
+        let mut ptrs = vec![0u32];
+        let mut idcs = vec![];
+        let mut vals = vec![];
+        for row in d {
+            for (c, &v) in row.iter().enumerate() {
+                if v != 0.0 {
+                    idcs.push(c as u32);
+                    vals.push(v);
+                }
+            }
+            ptrs.push(idcs.len() as u32);
+        }
+        Csr::new(nrows, ncols, ptrs, idcs, vals)
+    }
+
+    pub fn transpose(&self) -> Csr {
+        let mut t = Vec::with_capacity(self.nnz());
+        for r in 0..self.nrows {
+            let (idx, val) = self.row(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                t.push((c, r as u32, v));
+            }
+        }
+        Csr::from_triplets(self.ncols, self.nrows, t)
+    }
+
+    /// Extract row `r` as a sparse vector over the column space.
+    pub fn row_spvec(&self, r: usize) -> SpVec {
+        let (idx, val) = self.row(r);
+        SpVec { dim: self.ncols, idcs: idx.to_vec(), vals: val.to_vec() }
+    }
+}
+
+/// Compressed sparse column matrix ([19]); stored as the CSR of the
+/// transpose.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csc(pub Csr);
+
+impl Csc {
+    pub fn from_csr(m: &Csr) -> Self {
+        Csc(m.transpose())
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.0.ncols
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.0.nrows
+    }
+
+    pub fn col(&self, c: usize) -> (&[u32], &[f64]) {
+        self.0.row(c)
+    }
+
+    pub fn col_spvec(&self, c: usize) -> SpVec {
+        self.0.row_spvec(c)
+    }
+
+    pub fn to_csr(&self) -> Csr {
+        self.0.transpose()
+    }
+}
+
+/// Block CSR with `B x B` dense blocks (§3.1: SIMD on blocked formats).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bcsr {
+    pub block: usize,
+    /// Rows/cols in blocks.
+    pub nrows_b: usize,
+    pub ncols_b: usize,
+    pub ptrs: Vec<u32>,
+    pub idcs: Vec<u32>,
+    /// Block values, row-major within each `block*block` chunk.
+    pub vals: Vec<f64>,
+}
+
+impl Bcsr {
+    /// Convert from CSR, padding partial blocks with zeros.
+    pub fn from_csr(m: &Csr, block: usize) -> Self {
+        assert!(block > 0);
+        let nrows_b = m.nrows.div_ceil(block);
+        let ncols_b = m.ncols.div_ceil(block);
+        let mut ptrs = vec![0u32];
+        let mut idcs = vec![];
+        let mut vals = vec![];
+        for br in 0..nrows_b {
+            // collect the set of nonzero block-columns in this block row
+            let mut cols: Vec<u32> = vec![];
+            for r in br * block..((br + 1) * block).min(m.nrows) {
+                let (idx, _) = m.row(r);
+                for &c in idx {
+                    cols.push(c / block as u32);
+                }
+            }
+            cols.sort_unstable();
+            cols.dedup();
+            for &bc in &cols {
+                let base = vals.len();
+                vals.resize(base + block * block, 0.0);
+                for r in br * block..((br + 1) * block).min(m.nrows) {
+                    let (idx, val) = m.row(r);
+                    for (&c, &v) in idx.iter().zip(val) {
+                        if c / block as u32 == bc {
+                            let lr = r - br * block;
+                            let lc = c as usize - bc as usize * block;
+                            vals[base + lr * block + lc] = v;
+                        }
+                    }
+                }
+                idcs.push(bc);
+            }
+            ptrs.push(idcs.len() as u32);
+        }
+        Bcsr { block, nrows_b, ncols_b, ptrs, idcs, vals }
+    }
+
+    pub fn nnz_blocks(&self) -> usize {
+        self.idcs.len()
+    }
+
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let b = self.block;
+        let mut d = vec![vec![0.0; self.ncols_b * b]; self.nrows_b * b];
+        for br in 0..self.nrows_b {
+            for k in self.ptrs[br] as usize..self.ptrs[br + 1] as usize {
+                let bc = self.idcs[k] as usize;
+                for lr in 0..b {
+                    for lc in 0..b {
+                        d[br * b + lr][bc * b + lc] = self.vals[k * b * b + lr * b + lc];
+                    }
+                }
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_csr() -> Csr {
+        // [[1,0,2],[0,0,0],[0,3,4]]
+        Csr::new(3, 3, vec![0, 2, 2, 4], vec![0, 2, 1, 2], vec![1.0, 2.0, 3.0, 4.0])
+    }
+
+    #[test]
+    fn csr_roundtrip_dense() {
+        let m = small_csr();
+        let d = m.to_dense();
+        assert_eq!(d, vec![vec![1.0, 0.0, 2.0], vec![0.0, 0.0, 0.0], vec![0.0, 3.0, 4.0]]);
+        assert_eq!(Csr::from_dense(&d), m);
+    }
+
+    #[test]
+    fn csr_transpose_involution() {
+        let m = small_csr();
+        assert_eq!(m.transpose().transpose(), m);
+        let t = m.transpose().to_dense();
+        assert_eq!(t[2][0], 2.0);
+        assert_eq!(t[1][2], 3.0);
+    }
+
+    #[test]
+    fn csr_from_triplets_sums_duplicates() {
+        let m = Csr::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0), (1, 1, 5.0)]);
+        assert_eq!(m.to_dense(), vec![vec![3.0, 0.0], vec![0.0, 5.0]]);
+    }
+
+    #[test]
+    fn csr_validate_rejects_bad() {
+        assert!(Csr { nrows: 1, ncols: 2, ptrs: vec![0, 1], idcs: vec![5], vals: vec![1.0] }
+            .validate()
+            .is_err());
+        assert!(Csr { nrows: 1, ncols: 4, ptrs: vec![0, 2], idcs: vec![2, 1], vals: vec![1.0, 2.0] }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn spvec_roundtrip() {
+        let d = vec![0.0, 1.5, 0.0, -2.0, 0.0];
+        let s = SpVec::from_dense(&d);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.idcs, vec![1, 3]);
+        assert_eq!(s.to_dense(), d);
+    }
+
+    #[test]
+    fn csc_matches_transpose() {
+        let m = small_csr();
+        let c = Csc::from_csr(&m);
+        assert_eq!(c.to_csr(), m);
+        let (idx, val) = c.col(2);
+        assert_eq!(idx, &[0, 2]);
+        assert_eq!(val, &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn bcsr_roundtrip_padded() {
+        let m = small_csr();
+        let b = Bcsr::from_csr(&m, 2);
+        let d = b.to_dense();
+        // original entries preserved, padding zero
+        assert_eq!(d[0][0], 1.0);
+        assert_eq!(d[0][2], 2.0);
+        assert_eq!(d[2][1], 3.0);
+        assert_eq!(d[2][2], 4.0);
+        assert_eq!(d[3][3], 0.0);
+        assert_eq!(b.nnz_blocks(), 4);
+    }
+
+    #[test]
+    fn row_spvec_extracts() {
+        let m = small_csr();
+        let v = m.row_spvec(2);
+        assert_eq!(v.idcs, vec![1, 2]);
+        assert_eq!(v.vals, vec![3.0, 4.0]);
+        assert_eq!(v.dim, 3);
+    }
+}

@@ -1,0 +1,286 @@
+//! Pure, timing-free reference implementations of every kernel in §3.2
+//! — the correctness oracles the simulated kernels (and the JAX/Pallas
+//! artifacts) are checked against.
+
+use super::{Csr, SpVec};
+
+/// sV×dV: sparse-dense dot product.
+pub fn svxdv(a: &SpVec, b: &[f64]) -> f64 {
+    a.idcs
+        .iter()
+        .zip(&a.vals)
+        .map(|(&i, &v)| v * b[i as usize])
+        .sum()
+}
+
+/// sV+dV: accumulate a sparse vector onto a dense one (in place).
+pub fn svpdv(a: &SpVec, b: &mut [f64]) {
+    for (&i, &v) in a.idcs.iter().zip(&a.vals) {
+        b[i as usize] += v;
+    }
+}
+
+/// sV⊙dV: elementwise product; result has the sparse operand's pattern.
+pub fn svodv(a: &SpVec, b: &[f64]) -> SpVec {
+    SpVec {
+        dim: a.dim,
+        idcs: a.idcs.clone(),
+        vals: a
+            .idcs
+            .iter()
+            .zip(&a.vals)
+            .map(|(&i, &v)| v * b[i as usize])
+            .collect(),
+    }
+}
+
+/// sM×dV: CSR matrix times dense vector.
+pub fn smxdv(m: &Csr, b: &[f64]) -> Vec<f64> {
+    assert_eq!(b.len(), m.ncols);
+    (0..m.nrows)
+        .map(|r| {
+            let (idx, val) = m.row(r);
+            idx.iter().zip(val).map(|(&c, &v)| v * b[c as usize]).sum()
+        })
+        .collect()
+}
+
+/// sM×dM: CSR matrix times dense (row-major) matrix with `ncols_d`
+/// columns; returns row-major dense.
+pub fn smxdm(m: &Csr, d: &[f64], ncols_d: usize) -> Vec<f64> {
+    assert_eq!(d.len(), m.ncols * ncols_d);
+    let mut out = vec![0.0; m.nrows * ncols_d];
+    for r in 0..m.nrows {
+        let (idx, val) = m.row(r);
+        for (&c, &v) in idx.iter().zip(val) {
+            for j in 0..ncols_d {
+                out[r * ncols_d + j] += v * d[c as usize * ncols_d + j];
+            }
+        }
+    }
+    out
+}
+
+/// sV×sV: sparse-sparse dot product (index intersection).
+pub fn svxsv(a: &SpVec, b: &SpVec) -> f64 {
+    let (mut ia, mut ib) = (0usize, 0usize);
+    let mut acc = 0.0;
+    while ia < a.nnz() && ib < b.nnz() {
+        match a.idcs[ia].cmp(&b.idcs[ib]) {
+            std::cmp::Ordering::Equal => {
+                acc += a.vals[ia] * b.vals[ib];
+                ia += 1;
+                ib += 1;
+            }
+            std::cmp::Ordering::Less => ia += 1,
+            std::cmp::Ordering::Greater => ib += 1,
+        }
+    }
+    acc
+}
+
+/// sV+sV: sparse-sparse addition (index union).
+pub fn svpsv(a: &SpVec, b: &SpVec) -> SpVec {
+    assert_eq!(a.dim, b.dim);
+    let mut idcs = vec![];
+    let mut vals = vec![];
+    let (mut ia, mut ib) = (0usize, 0usize);
+    while ia < a.nnz() || ib < b.nnz() {
+        let take_a = ib >= b.nnz() || (ia < a.nnz() && a.idcs[ia] <= b.idcs[ib]);
+        let take_b = ia >= a.nnz() || (ib < b.nnz() && b.idcs[ib] <= a.idcs[ia]);
+        match (take_a, take_b) {
+            (true, true) => {
+                idcs.push(a.idcs[ia]);
+                vals.push(a.vals[ia] + b.vals[ib]);
+                ia += 1;
+                ib += 1;
+            }
+            (true, false) => {
+                idcs.push(a.idcs[ia]);
+                vals.push(a.vals[ia]);
+                ia += 1;
+            }
+            (false, true) => {
+                idcs.push(b.idcs[ib]);
+                vals.push(b.vals[ib]);
+                ib += 1;
+            }
+            (false, false) => unreachable!(),
+        }
+    }
+    SpVec { dim: a.dim, idcs, vals }
+}
+
+/// sV⊙sV: sparse-sparse elementwise product (index intersection,
+/// compressed result).
+pub fn svosv(a: &SpVec, b: &SpVec) -> SpVec {
+    assert_eq!(a.dim, b.dim);
+    let mut idcs = vec![];
+    let mut vals = vec![];
+    let (mut ia, mut ib) = (0usize, 0usize);
+    while ia < a.nnz() && ib < b.nnz() {
+        match a.idcs[ia].cmp(&b.idcs[ib]) {
+            std::cmp::Ordering::Equal => {
+                idcs.push(a.idcs[ia]);
+                vals.push(a.vals[ia] * b.vals[ib]);
+                ia += 1;
+                ib += 1;
+            }
+            std::cmp::Ordering::Less => ia += 1,
+            std::cmp::Ordering::Greater => ib += 1,
+        }
+    }
+    SpVec { dim: a.dim, idcs, vals }
+}
+
+/// sM×sV: CSR matrix times sparse vector; dense result (one inner
+/// product per row, §3.2.2).
+pub fn smxsv(m: &Csr, b: &SpVec) -> Vec<f64> {
+    assert_eq!(b.dim, m.ncols);
+    (0..m.nrows).map(|r| svxsv(&m.row_spvec(r), b)).collect()
+}
+
+/// sM×sM inner-dataflow: CSR × CSC via row-column inner products;
+/// returns dense row-major (result patterns are usually much denser).
+pub fn smxsm_inner(a: &Csr, b_csc: &super::Csc) -> Vec<f64> {
+    assert_eq!(a.ncols, b_csc.nrows());
+    let n = b_csc.ncols();
+    let mut out = vec![0.0; a.nrows * n];
+    for r in 0..a.nrows {
+        let ra = a.row_spvec(r);
+        if ra.nnz() == 0 {
+            continue;
+        }
+        for c in 0..n {
+            let cb = b_csc.col_spvec(c);
+            out[r * n + c] = svxsv(&ra, &cb);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Csc;
+    use crate::util::Pcg;
+
+    fn rand_spvec(r: &mut Pcg, dim: usize, nnz: usize) -> SpVec {
+        let idcs: Vec<u32> = r.distinct_sorted(nnz, dim).iter().map(|&x| x as u32).collect();
+        let vals: Vec<f64> = (0..nnz).map(|_| r.normal()).collect();
+        SpVec::new(dim, idcs, vals)
+    }
+
+    #[test]
+    fn svxdv_matches_dense_dot() {
+        let mut r = Pcg::new(1);
+        for _ in 0..50 {
+            let dim = 1 + r.below(200) as usize;
+            let nnz = r.below(dim as u64 + 1) as usize;
+            let a = rand_spvec(&mut r, dim, nnz);
+            let b: Vec<f64> = (0..dim).map(|_| r.normal()).collect();
+            let dense: f64 = a.to_dense().iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((svxdv(&a, &b) - dense).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn svxsv_matches_dense_dot() {
+        let mut r = Pcg::new(2);
+        for _ in 0..50 {
+            let dim = 1 + r.below(200) as usize;
+            let na = r.below(dim as u64 + 1) as usize;
+            let a = rand_spvec(&mut r, dim, na);
+            let nb = r.below(dim as u64 + 1) as usize;
+            let b = rand_spvec(&mut r, dim, nb);
+            let dense: f64 = a.to_dense().iter().zip(&b.to_dense()).map(|(x, y)| x * y).sum();
+            assert!((svxsv(&a, &b) - dense).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn svpsv_matches_dense_add() {
+        let mut r = Pcg::new(3);
+        for _ in 0..50 {
+            let dim = 1 + r.below(100) as usize;
+            let na = r.below(dim as u64 + 1) as usize;
+            let a = rand_spvec(&mut r, dim, na);
+            let nb = r.below(dim as u64 + 1) as usize;
+            let b = rand_spvec(&mut r, dim, nb);
+            let sum = svpsv(&a, &b);
+            sum.validate().unwrap();
+            let dense: Vec<f64> = a.to_dense().iter().zip(&b.to_dense()).map(|(x, y)| x + y).collect();
+            // pattern may include explicit zeros from cancellation — fine.
+            assert_eq!(sum.to_dense(), dense);
+        }
+    }
+
+    #[test]
+    fn svosv_matches_dense_mul() {
+        let mut r = Pcg::new(4);
+        for _ in 0..50 {
+            let dim = 1 + r.below(100) as usize;
+            let na = r.below(dim as u64 + 1) as usize;
+            let a = rand_spvec(&mut r, dim, na);
+            let nb = r.below(dim as u64 + 1) as usize;
+            let b = rand_spvec(&mut r, dim, nb);
+            let prod = svosv(&a, &b);
+            prod.validate().unwrap();
+            let dense: Vec<f64> = a.to_dense().iter().zip(&b.to_dense()).map(|(x, y)| x * y).collect();
+            assert_eq!(prod.to_dense(), dense);
+        }
+    }
+
+    #[test]
+    fn smxdv_matches_dense() {
+        let mut r = Pcg::new(5);
+        let m = Csr::from_dense(&vec![
+            vec![1.0, 0.0, 2.0],
+            vec![0.0, 0.0, 0.0],
+            vec![3.0, 4.0, 0.0],
+        ]);
+        let b: Vec<f64> = (0..3).map(|_| r.normal()).collect();
+        let c = smxdv(&m, &b);
+        assert!((c[0] - (b[0] + 2.0 * b[2])).abs() < 1e-12);
+        assert_eq!(c[1], 0.0);
+        assert!((c[2] - (3.0 * b[0] + 4.0 * b[1])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smxdm_matches_iterated_smxdv() {
+        let m = Csr::from_dense(&vec![vec![1.0, 2.0], vec![0.0, 3.0]]);
+        let d = vec![1.0, 10.0, 2.0, 20.0]; // 2x2 row-major
+        let out = smxdm(&m, &d, 2);
+        assert_eq!(out, vec![5.0, 50.0, 6.0, 60.0]);
+    }
+
+    #[test]
+    fn smxsv_matches_dense() {
+        let m = Csr::from_dense(&vec![vec![1.0, 0.0, 2.0], vec![0.0, 5.0, 0.0]]);
+        let b = SpVec::from_dense(&[0.0, 7.0, 3.0]);
+        assert_eq!(smxsv(&m, &b), vec![6.0, 35.0]);
+    }
+
+    #[test]
+    fn smxsm_inner_matches_dense_matmul() {
+        let mut r = Pcg::new(6);
+        for _ in 0..10 {
+            let (n, k, m) = (4 + r.below(4) as usize, 4 + r.below(4) as usize, 4 + r.below(4) as usize);
+            let da: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..k).map(|_| if r.f64() < 0.4 { r.normal() } else { 0.0 }).collect())
+                .collect();
+            let db: Vec<Vec<f64>> = (0..k)
+                .map(|_| (0..m).map(|_| if r.f64() < 0.4 { r.normal() } else { 0.0 }).collect())
+                .collect();
+            let a = Csr::from_dense(&da);
+            let b = Csr::from_dense(&db);
+            let out = smxsm_inner(&a, &Csc::from_csr(&b));
+            for i in 0..n {
+                for j in 0..m {
+                    let want: f64 = (0..k).map(|x| da[i][x] * db[x][j]).sum();
+                    assert!((out[i * m + j] - want).abs() < 1e-9);
+                }
+            }
+        }
+    }
+}

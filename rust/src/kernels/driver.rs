@@ -1,0 +1,661 @@
+//! Single-core-complex kernel drivers: lay the operands out in the
+//! simulated TCDM, run the kernel program on one CC (§4.1 methodology:
+//! exclusive I$ — pre-warmed — and a three-port data memory), verify the
+//! results against the [`crate::formats::ops`] oracles, and report
+//! cycles / payload FLOPs / utilization.
+
+use crate::formats::{ops, Csr, SpVec};
+use crate::sim::isa::*;
+use crate::sim::tcdm::Tcdm;
+use crate::sim::{Cluster, Program};
+
+use super::{sparse_dense as sd, sparse_sparse as ss};
+use super::{Arena, IdxWidth, Report, Variant};
+
+/// Maximum simulated cycles before a kernel run is declared hung.
+const LIMIT: u64 = 50_000_000;
+
+pub(crate) fn write_idx(t: &mut Tcdm, addr: u64, idcs: &[u32], iw: IdxWidth) {
+    for (i, &idx) in idcs.iter().enumerate() {
+        assert!(
+            (idx as u64) <= iw.max(),
+            "index {idx} does not fit {}-bit width",
+            8 * iw.bytes()
+        );
+        t.poke(addr + i as u64 * iw.bytes(), iw.bytes(), idx as u64);
+    }
+}
+
+pub(crate) fn write_f64s(t: &mut Tcdm, addr: u64, vals: &[f64]) {
+    for (i, &v) in vals.iter().enumerate() {
+        t.poke_f64(addr + 8 * i as u64, v);
+    }
+}
+
+pub(crate) fn read_f64s(t: &Tcdm, addr: u64, n: usize) -> Vec<f64> {
+    (0..n).map(|i| t.peek_f64(addr + 8 * i as u64)).collect()
+}
+
+pub(crate) fn read_idx(t: &Tcdm, addr: u64, n: usize, iw: IdxWidth) -> Vec<u32> {
+    (0..n)
+        .map(|i| t.peek(addr + i as u64 * iw.bytes(), iw.bytes()) as u32)
+        .collect()
+}
+
+pub(crate) fn write_ptrs(t: &mut Tcdm, addr: u64, ptrs: &[u32]) {
+    for (i, &p) in ptrs.iter().enumerate() {
+        t.poke(addr + 4 * i as u64, 4, p as u64);
+    }
+}
+
+struct Cc {
+    cl: Cluster,
+    arena: Arena,
+}
+
+impl Cc {
+    fn new(prog: Program) -> Self {
+        // §4.1 methodology: "the kernel runtimes do not depend on the
+        // dense vector's length as long as it fits into the TCDM" / "we
+        // assume the TCDM is large enough to store the full matrix" —
+        // the single-CC experiments use an enlarged data memory with the
+        // same bank count (timing is bank-, not capacity-, dependent).
+        Self::sized(prog, 16 << 20)
+    }
+
+    /// `tcdm_bytes` = 0 keeps the Table-1 default (128 KiB). The §4.1
+    /// matrix experiments "assume the TCDM is large enough to store the
+    /// full matrix" — pass an enlarged size for those.
+    fn sized(prog: Program, tcdm_bytes: usize) -> Self {
+        let mut cfg = crate::sim::ClusterCfg::single_cc();
+        if tcdm_bytes > 0 {
+            cfg.tcdm_bytes = tcdm_bytes;
+        }
+        let mut cl = Cluster::new(cfg, vec![prog]);
+        cl.warm_icache();
+        let limit = cl.tcdm.size() as u64;
+        Cc { cl, arena: Arena::new(0, limit) }
+    }
+
+    fn place_spvec(&mut self, v: &SpVec, iw: IdxWidth) -> (u64, u64) {
+        let vals = self.arena.alloc_f64(v.nnz() as u64);
+        let idcs = self.arena.alloc_idx(v.nnz() as u64, iw);
+        write_f64s(&mut self.cl.tcdm, vals, &v.vals);
+        write_idx(&mut self.cl.tcdm, idcs, &v.idcs, iw);
+        (vals, idcs)
+    }
+
+    fn place_dense(&mut self, d: &[f64]) -> u64 {
+        let addr = self.arena.alloc_f64(d.len() as u64);
+        write_f64s(&mut self.cl.tcdm, addr, d);
+        addr
+    }
+
+    fn place_csr(&mut self, m: &Csr, iw: IdxWidth) -> (u64, u64, u64) {
+        let vals = self.arena.alloc_f64(m.nnz() as u64);
+        let idcs = self.arena.alloc_idx(m.nnz() as u64, iw);
+        let ptrs = self.arena.alloc(4 * (m.nrows as u64 + 1));
+        write_f64s(&mut self.cl.tcdm, vals, &m.vals);
+        write_idx(&mut self.cl.tcdm, idcs, &m.idcs, iw);
+        write_ptrs(&mut self.cl.tcdm, ptrs, &m.ptrs);
+        (vals, idcs, ptrs)
+    }
+
+    fn run(mut self, payload: u64) -> (Cluster, Report) {
+        let cycles = self.cl.run(LIMIT);
+        let stats = self.cl.stats();
+        (self.cl, Report::from_run(cycles, payload, stats))
+    }
+}
+
+fn assert_close(got: f64, want: f64, what: &str) {
+    let tol = 1e-9 * want.abs().max(1.0);
+    assert!(
+        (got - want).abs() <= tol,
+        "{what}: got {got}, want {want} (err {})",
+        (got - want).abs()
+    );
+}
+
+fn assert_all_close(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = 1e-9 * w.abs().max(1.0);
+        assert!((g - w).abs() <= tol, "{what}[{i}]: got {g}, want {w}");
+    }
+}
+
+// =====================================================================
+// sparse-dense drivers
+// =====================================================================
+
+/// sV×dV. Returns (dot product, report). `skip_reduction` gives the
+/// timing-only variant of Fig. 4a's dashed series (result not checked).
+pub fn run_svxdv(
+    variant: Variant,
+    iw: IdxWidth,
+    a: &SpVec,
+    b: &[f64],
+    skip_reduction: bool,
+) -> (f64, Report) {
+    assert_eq!(a.dim, b.len());
+    let prog = match variant {
+        Variant::Base => sd::svxdv_base(iw),
+        Variant::Ssr => sd::svxdv_ssr(iw),
+        Variant::Sssr => sd::svxdv_sssr(iw, skip_reduction),
+    };
+    assert!(
+        !(skip_reduction && variant != Variant::Sssr),
+        "skip_reduction only applies to the SSSR variant"
+    );
+    let mut cc = Cc::new(prog);
+    let (vals, idcs) = cc.place_spvec(a, iw);
+    let bb = cc.place_dense(b);
+    let out = cc.arena.alloc_f64(1);
+    cc.cl.set_reg(0, A0, vals as i64);
+    cc.cl.set_reg(0, A1, idcs as i64);
+    cc.cl.set_reg(0, A2, bb as i64);
+    cc.cl.set_reg(0, A3, a.nnz() as i64);
+    cc.cl.set_reg(0, A4, out as i64);
+    let (cl, rep) = cc.run(a.nnz() as u64);
+    let got = cl.tcdm.peek_f64(out);
+    if !skip_reduction {
+        assert_close(got, ops::svxdv(a, b), "svxdv");
+    }
+    (got, rep)
+}
+
+/// sV+dV (in place on the dense vector). Returns (updated dense, report).
+pub fn run_svpdv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &[f64]) -> (Vec<f64>, Report) {
+    run_svpdv_impl(variant, iw, a, b, true)
+}
+
+/// Timing-only sV+dV for fibers with *repeated* indices (the Fig. 4b
+/// `sssr8r` reuse series): duplicated indices create a genuine
+/// gather/scatter RAW hazard in the decoupled streams — in the real
+/// hardware as much as here — so the numeric result is not checked.
+pub fn run_svpdv_unchecked(variant: Variant, iw: IdxWidth, a: &SpVec, b: &[f64]) -> (Vec<f64>, Report) {
+    run_svpdv_impl(variant, iw, a, b, false)
+}
+
+fn run_svpdv_impl(
+    variant: Variant,
+    iw: IdxWidth,
+    a: &SpVec,
+    b: &[f64],
+    verify: bool,
+) -> (Vec<f64>, Report) {
+    assert_eq!(a.dim, b.len());
+    let prog = match variant {
+        Variant::Base => sd::svpdv_base(iw),
+        Variant::Ssr => sd::svpdv_ssr(iw),
+        Variant::Sssr => sd::svpdv_sssr(iw),
+    };
+    let mut cc = Cc::new(prog);
+    let (vals, idcs) = cc.place_spvec(a, iw);
+    let bb = cc.place_dense(b);
+    cc.cl.set_reg(0, A0, vals as i64);
+    cc.cl.set_reg(0, A1, idcs as i64);
+    cc.cl.set_reg(0, A2, bb as i64);
+    cc.cl.set_reg(0, A3, a.nnz() as i64);
+    let (cl, rep) = cc.run(a.nnz() as u64);
+    let got = read_f64s(&cl.tcdm, bb, b.len());
+    if verify {
+        let mut want = b.to_vec();
+        ops::svpdv(a, &mut want);
+        assert_all_close(&got, &want, "svpdv");
+    }
+    (got, rep)
+}
+
+/// sV⊙dV. Returns (result value array, report).
+pub fn run_svodv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &[f64]) -> (Vec<f64>, Report) {
+    assert_eq!(a.dim, b.len());
+    let prog = match variant {
+        Variant::Base => sd::svodv_base(iw),
+        Variant::Ssr => sd::svodv_ssr(iw),
+        Variant::Sssr => sd::svodv_sssr(iw),
+    };
+    let mut cc = Cc::new(prog);
+    let (vals, idcs) = cc.place_spvec(a, iw);
+    let bb = cc.place_dense(b);
+    let out = cc.arena.alloc_f64(a.nnz() as u64);
+    cc.cl.set_reg(0, A0, vals as i64);
+    cc.cl.set_reg(0, A1, idcs as i64);
+    cc.cl.set_reg(0, A2, bb as i64);
+    cc.cl.set_reg(0, A3, a.nnz() as i64);
+    cc.cl.set_reg(0, A4, out as i64);
+    let (cl, rep) = cc.run(a.nnz() as u64);
+    let got = read_f64s(&cl.tcdm, out, a.nnz());
+    assert_all_close(&got, &ops::svodv(a, b).vals, "svodv");
+    (got, rep)
+}
+
+/// sM×dV. Returns (dense result, report).
+pub fn run_smxdv(variant: Variant, iw: IdxWidth, m: &Csr, b: &[f64]) -> (Vec<f64>, Report) {
+    run_smxdv_sized(variant, iw, m, b, 16 << 20)
+}
+
+/// sM×dV with an enlarged single-CC TCDM (§4.1 full-matrix assumption).
+pub fn run_smxdv_sized(
+    variant: Variant,
+    iw: IdxWidth,
+    m: &Csr,
+    b: &[f64],
+    tcdm_bytes: usize,
+) -> (Vec<f64>, Report) {
+    assert_eq!(m.ncols, b.len());
+    let prog = match variant {
+        Variant::Base => sd::smxdv_base(iw),
+        Variant::Ssr => sd::smxdv_ssr(iw),
+        Variant::Sssr => sd::smxdv_sssr(iw),
+    };
+    let mut cc = Cc::sized(prog, tcdm_bytes);
+    let (vals, idcs, ptrs) = cc.place_csr(m, iw);
+    let bb = cc.place_dense(b);
+    let out = cc.arena.alloc_f64(m.nrows as u64);
+    cc.cl.set_reg(0, A0, vals as i64);
+    cc.cl.set_reg(0, A1, idcs as i64);
+    cc.cl.set_reg(0, A2, bb as i64);
+    cc.cl.set_reg(0, A3, m.nrows as i64);
+    cc.cl.set_reg(0, A4, out as i64);
+    cc.cl.set_reg(0, A5, ptrs as i64);
+    cc.cl.set_reg(0, A6, m.nnz() as i64);
+    let (cl, rep) = cc.run(m.nnz() as u64);
+    let got = read_f64s(&cl.tcdm, out, m.nrows);
+    assert_all_close(&got, &ops::smxdv(m, b), "smxdv");
+    (got, rep)
+}
+
+/// sM×dM with a power-of-two-column dense matrix (row-major).
+pub fn run_smxdm(variant: Variant, iw: IdxWidth, m: &Csr, d: &[f64], log2_cols: u8) -> (Vec<f64>, Report) {
+    let cols = 1usize << log2_cols;
+    assert_eq!(d.len(), m.ncols * cols);
+    let prog = match variant {
+        Variant::Base => sd::smxdm_base(iw, log2_cols),
+        Variant::Ssr => panic!("no SSR sMxdM variant (see kernel docs)"),
+        Variant::Sssr => sd::smxdm_sssr(iw, log2_cols),
+    };
+    let mut cc = Cc::new(prog);
+    let (vals, idcs, ptrs) = cc.place_csr(m, iw);
+    let dd = cc.place_dense(d);
+    let out = cc.arena.alloc_f64((m.nrows * cols) as u64);
+    cc.cl.set_reg(0, A0, vals as i64);
+    cc.cl.set_reg(0, A1, idcs as i64);
+    cc.cl.set_reg(0, A2, dd as i64);
+    cc.cl.set_reg(0, A3, m.nrows as i64);
+    cc.cl.set_reg(0, A4, out as i64);
+    cc.cl.set_reg(0, A5, ptrs as i64);
+    cc.cl.set_reg(0, A6, m.nnz() as i64);
+    let (cl, rep) = cc.run((m.nnz() * cols) as u64);
+    let got = read_f64s(&cl.tcdm, out, m.nrows * cols);
+    assert_all_close(&got, &ops::smxdm(m, d, cols), "smxdm");
+    (got, rep)
+}
+
+// =====================================================================
+// sparse-sparse drivers
+// =====================================================================
+
+fn intersection_count(a: &SpVec, b: &SpVec) -> u64 {
+    ops::svosv(a, b).nnz() as u64
+}
+
+/// sV×sV. Returns (dot product, report). Payload = matched pairs.
+pub fn run_svxsv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &SpVec) -> (f64, Report) {
+    assert_eq!(a.dim, b.dim);
+    let prog = match variant {
+        Variant::Base => ss::svxsv_base(iw),
+        Variant::Ssr => panic!("no SSR variant for intersection kernels (§3.2)"),
+        Variant::Sssr => ss::svxsv_sssr(iw),
+    };
+    let mut cc = Cc::new(prog);
+    let (a_vals, a_idcs) = cc.place_spvec(a, iw);
+    let (b_vals, b_idcs) = cc.place_spvec(b, iw);
+    let out = cc.arena.alloc_f64(1);
+    cc.cl.set_reg(0, A0, a_vals as i64);
+    cc.cl.set_reg(0, A1, a_idcs as i64);
+    cc.cl.set_reg(0, A2, b_vals as i64);
+    cc.cl.set_reg(0, A3, b_idcs as i64);
+    cc.cl.set_reg(0, A4, out as i64);
+    cc.cl.set_reg(0, A5, a.nnz() as i64);
+    cc.cl.set_reg(0, A6, b.nnz() as i64);
+    let (cl, rep) = cc.run(intersection_count(a, b));
+    let got = cl.tcdm.peek_f64(out);
+    assert_close(got, ops::svxsv(a, b), "svxsv");
+    (got, rep)
+}
+
+/// sV+sV. Returns (result sparse vector, report). Payload = |union|.
+pub fn run_svpsv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &SpVec) -> (SpVec, Report) {
+    assert_eq!(a.dim, b.dim);
+    let prog = match variant {
+        Variant::Base => ss::svpsv_base(iw),
+        Variant::Ssr => panic!("no SSR variant for union kernels (§3.2)"),
+        Variant::Sssr => ss::svpsv_sssr(iw),
+    };
+    let want = ops::svpsv(a, b);
+    let cap = a.nnz() + b.nnz();
+    let mut cc = Cc::new(prog);
+    let (a_vals, a_idcs) = cc.place_spvec(a, iw);
+    let (b_vals, b_idcs) = cc.place_spvec(b, iw);
+    let out_vals = cc.arena.alloc_f64(cap as u64);
+    let out_idcs = cc.arena.alloc_idx(cap as u64, iw);
+    let out_len = cc.arena.alloc(8);
+    cc.cl.set_reg(0, A0, a_vals as i64);
+    cc.cl.set_reg(0, A1, a_idcs as i64);
+    cc.cl.set_reg(0, A2, b_vals as i64);
+    cc.cl.set_reg(0, A3, b_idcs as i64);
+    cc.cl.set_reg(0, A4, out_vals as i64);
+    cc.cl.set_reg(0, A5, a.nnz() as i64);
+    cc.cl.set_reg(0, A6, b.nnz() as i64);
+    cc.cl.set_reg(0, A7, out_idcs as i64);
+    cc.cl.set_reg(0, S11, out_len as i64);
+    let (cl, rep) = cc.run(want.nnz() as u64);
+    let len = cl.tcdm.peek(out_len, 8) as usize;
+    assert_eq!(len, want.nnz(), "svpsv result length");
+    let got = SpVec {
+        dim: a.dim,
+        idcs: read_idx(&cl.tcdm, out_idcs, len, iw),
+        vals: read_f64s(&cl.tcdm, out_vals, len),
+    };
+    assert_eq!(got.idcs, want.idcs, "svpsv indices");
+    assert_all_close(&got.vals, &want.vals, "svpsv values");
+    (got, rep)
+}
+
+/// sV⊙sV. Returns (result sparse vector, report). Payload = |intersection|.
+pub fn run_svosv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &SpVec) -> (SpVec, Report) {
+    assert_eq!(a.dim, b.dim);
+    let prog = match variant {
+        Variant::Base => ss::svosv_base(iw),
+        Variant::Ssr => panic!("no SSR variant for intersection kernels (§3.2)"),
+        Variant::Sssr => ss::svosv_sssr(iw),
+    };
+    let want = ops::svosv(a, b);
+    let cap = a.nnz().min(b.nnz()).max(1);
+    let mut cc = Cc::new(prog);
+    let (a_vals, a_idcs) = cc.place_spvec(a, iw);
+    let (b_vals, b_idcs) = cc.place_spvec(b, iw);
+    let out_vals = cc.arena.alloc_f64(cap as u64);
+    let out_idcs = cc.arena.alloc_idx(cap as u64, iw);
+    let out_len = cc.arena.alloc(8);
+    cc.cl.set_reg(0, A0, a_vals as i64);
+    cc.cl.set_reg(0, A1, a_idcs as i64);
+    cc.cl.set_reg(0, A2, b_vals as i64);
+    cc.cl.set_reg(0, A3, b_idcs as i64);
+    cc.cl.set_reg(0, A4, out_vals as i64);
+    cc.cl.set_reg(0, A5, a.nnz() as i64);
+    cc.cl.set_reg(0, A6, b.nnz() as i64);
+    cc.cl.set_reg(0, A7, out_idcs as i64);
+    cc.cl.set_reg(0, S11, out_len as i64);
+    let (cl, rep) = cc.run(want.nnz() as u64);
+    let len = cl.tcdm.peek(out_len, 8) as usize;
+    assert_eq!(len, want.nnz(), "svosv result length");
+    let got = SpVec {
+        dim: a.dim,
+        idcs: read_idx(&cl.tcdm, out_idcs, len, iw),
+        vals: read_f64s(&cl.tcdm, out_vals, len),
+    };
+    assert_eq!(got.idcs, want.idcs, "svosv indices");
+    assert_all_close(&got.vals, &want.vals, "svosv values");
+    (got, rep)
+}
+
+/// sM×sV (dense result). Payload = total matched pairs over all rows.
+pub fn run_smxsv(variant: Variant, iw: IdxWidth, m: &Csr, b: &SpVec) -> (Vec<f64>, Report) {
+    run_smxsv_sized(variant, iw, m, b, 16 << 20)
+}
+
+/// sM×sV with an enlarged single-CC TCDM (§4.1 full-matrix assumption).
+pub fn run_smxsv_sized(
+    variant: Variant,
+    iw: IdxWidth,
+    m: &Csr,
+    b: &SpVec,
+    tcdm_bytes: usize,
+) -> (Vec<f64>, Report) {
+    assert_eq!(m.ncols, b.dim);
+    let prog = match variant {
+        Variant::Base => ss::smxsv_base(iw),
+        Variant::Ssr => panic!("no SSR variant for intersection kernels (§3.2)"),
+        Variant::Sssr => ss::smxsv_sssr(iw),
+    };
+    let payload: u64 = (0..m.nrows)
+        .map(|r| intersection_count(&m.row_spvec(r), b))
+        .sum();
+    let mut cc = Cc::sized(prog, tcdm_bytes);
+    let (a_vals, a_idcs, ptrs) = cc.place_csr(m, iw);
+    let (b_vals, b_idcs) = cc.place_spvec(b, iw);
+    let out = cc.arena.alloc_f64(m.nrows as u64);
+    cc.cl.set_reg(0, A0, a_vals as i64);
+    cc.cl.set_reg(0, A1, a_idcs as i64);
+    cc.cl.set_reg(0, A2, b_vals as i64);
+    cc.cl.set_reg(0, A3, b_idcs as i64);
+    cc.cl.set_reg(0, A4, out as i64);
+    cc.cl.set_reg(0, A5, ptrs as i64);
+    cc.cl.set_reg(0, A6, m.nrows as i64);
+    cc.cl.set_reg(0, A7, b.nnz() as i64);
+    let (cl, rep) = cc.run(payload);
+    let got = read_f64s(&cl.tcdm, out, m.nrows);
+    assert_all_close(&got, &ops::smxsv(m, b), "smxsv");
+    (got, rep)
+}
+
+/// sM×sM inner dataflow (CSR × CSC, dense row-major result).
+pub fn run_smxsm(variant: Variant, iw: IdxWidth, a: &Csr, b: &Csr) -> (Vec<f64>, Report) {
+    assert_eq!(a.ncols, b.nrows);
+    let b_csc = crate::formats::Csc::from_csr(b);
+    let prog = match variant {
+        Variant::Base => ss::smxsm_inner_base(iw),
+        Variant::Ssr => panic!("no SSR variant for intersection kernels (§3.2)"),
+        Variant::Sssr => ss::smxsm_inner_sssr(iw),
+    };
+    let payload: u64 = (0..a.nrows)
+        .map(|r| {
+            let ra = a.row_spvec(r);
+            (0..b.ncols)
+                .map(|c| intersection_count(&ra, &b_csc.col_spvec(c)))
+                .sum::<u64>()
+        })
+        .sum();
+    let mut cc = Cc::new(prog);
+    let (a_vals, a_idcs, a_ptrs) = cc.place_csr(a, iw);
+    let (b_vals, b_idcs, b_ptrs) = cc.place_csr(&b_csc.0, iw);
+    let out = cc.arena.alloc_f64((a.nrows * b.ncols) as u64);
+    cc.cl.set_reg(0, A0, a_vals as i64);
+    cc.cl.set_reg(0, A1, a_idcs as i64);
+    cc.cl.set_reg(0, A2, b_vals as i64);
+    cc.cl.set_reg(0, A3, b_idcs as i64);
+    cc.cl.set_reg(0, A4, out as i64);
+    cc.cl.set_reg(0, A5, a_ptrs as i64);
+    cc.cl.set_reg(0, A6, a.nrows as i64);
+    cc.cl.set_reg(0, A7, b_ptrs as i64);
+    cc.cl.set_reg(0, S8, b.ncols as i64);
+    let (cl, rep) = cc.run(payload);
+    let got = read_f64s(&cl.tcdm, out, a.nrows * b.ncols);
+    assert_all_close(&got, &ops::smxsm_inner(a, &b_csc), "smxsm");
+    (got, rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen;
+
+    const WIDTHS: [IdxWidth; 3] = [IdxWidth::U8, IdxWidth::U16, IdxWidth::U32];
+
+    #[test]
+    fn svxdv_all_variants_all_widths() {
+        let b = matgen::random_dense(10, 200);
+        let a = matgen::random_spvec(11, 200, 40);
+        for iw in WIDTHS {
+            for v in [Variant::Base, Variant::Ssr, Variant::Sssr] {
+                let (_, rep) = run_svxdv(v, iw, &a, &b, false);
+                assert!(rep.cycles > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn svxdv_sssr_beats_base_and_hits_limits() {
+        // Long vector: SSSR utilization should approach the arbitration
+        // limit and beat BASE by ~7x (16-bit: 9 cycles -> 1.25).
+        let dim = 4096;
+        let a = matgen::random_spvec(12, dim, 2000);
+        let b = matgen::random_dense(13, dim);
+        let (_, base) = run_svxdv(Variant::Base, IdxWidth::U16, &a, &b, false);
+        let (_, ssr) = run_svxdv(Variant::Ssr, IdxWidth::U16, &a, &b, false);
+        let (_, sssr) = run_svxdv(Variant::Sssr, IdxWidth::U16, &a, &b, false);
+        let speedup = base.cycles as f64 / sssr.cycles as f64;
+        assert!(speedup > 5.5, "sssr speedup only {speedup}");
+        assert!(ssr.cycles < base.cycles);
+        assert!(
+            sssr.utilization > 0.70,
+            "sssr 16-bit utilization {} below expectation",
+            sssr.utilization
+        );
+        // BASE ~ 1/9
+        assert!(
+            (0.095..0.125).contains(&base.utilization),
+            "base utilization {}",
+            base.utilization
+        );
+    }
+
+    #[test]
+    fn svpdv_all_variants() {
+        let dim = 256;
+        let a = matgen::random_spvec(14, dim, 60);
+        let b = matgen::random_dense(15, dim);
+        for v in [Variant::Base, Variant::Ssr, Variant::Sssr] {
+            run_svpdv(v, IdxWidth::U16, &a, &b);
+        }
+        // 8-bit fits dim 256
+        run_svpdv(Variant::Sssr, IdxWidth::U8, &a, &b);
+    }
+
+    #[test]
+    fn svodv_all_variants() {
+        let dim = 300;
+        let a = matgen::random_spvec(16, dim, 80);
+        let b = matgen::random_dense(17, dim);
+        for v in [Variant::Base, Variant::Ssr, Variant::Sssr] {
+            run_svodv(v, IdxWidth::U16, &a, &b);
+        }
+    }
+
+    #[test]
+    fn smxdv_all_variants() {
+        let m = matgen::random_csr(18, 40, 64, 300);
+        let b = matgen::random_dense(19, 64);
+        for v in [Variant::Base, Variant::Ssr, Variant::Sssr] {
+            let (_, rep) = run_smxdv(v, IdxWidth::U16, &m, &b);
+            assert_eq!(rep.payload, 300);
+        }
+    }
+
+    #[test]
+    fn smxdv_handles_empty_rows() {
+        // rows with zero nonzeros exercise the zero-row paths
+        let m = Csr::new(4, 8, vec![0, 2, 2, 2, 3], vec![1, 3, 7], vec![1.0, 2.0, 3.0]);
+        let b = matgen::random_dense(20, 8);
+        for v in [Variant::Base, Variant::Ssr, Variant::Sssr] {
+            run_smxdv(v, IdxWidth::U16, &m, &b);
+        }
+    }
+
+    #[test]
+    fn smxdm_base_and_sssr() {
+        let m = matgen::random_csr(21, 24, 32, 120);
+        let d = matgen::random_dense(22, 32 * 4);
+        for v in [Variant::Base, Variant::Sssr] {
+            let (_, rep) = run_smxdm(v, IdxWidth::U16, &m, &d, 2);
+            assert_eq!(rep.payload, 480);
+        }
+    }
+
+    #[test]
+    fn svxsv_variants_and_edge_cases() {
+        let dim = 500;
+        let a = matgen::random_spvec(23, dim, 100);
+        let b = matgen::random_spvec(24, dim, 150);
+        for v in [Variant::Base, Variant::Sssr] {
+            run_svxsv(v, IdxWidth::U16, &a, &b);
+        }
+        // disjoint operands
+        let lo = SpVec::new(100, vec![0, 1, 2], vec![1.0, 2.0, 3.0]);
+        let hi = SpVec::new(100, vec![50, 60], vec![4.0, 5.0]);
+        let (dot, _) = run_svxsv(Variant::Sssr, IdxWidth::U16, &lo, &hi);
+        assert_eq!(dot, 0.0);
+        // one empty operand
+        let empty = SpVec::empty(100);
+        run_svxsv(Variant::Sssr, IdxWidth::U16, &empty, &hi);
+        run_svxsv(Variant::Base, IdxWidth::U16, &empty, &hi);
+    }
+
+    #[test]
+    fn svpsv_variants_and_edge_cases() {
+        let dim = 400;
+        let a = matgen::random_spvec(25, dim, 90);
+        let b = matgen::random_spvec(26, dim, 60);
+        for v in [Variant::Base, Variant::Sssr] {
+            let (c, _) = run_svpsv(v, IdxWidth::U16, &a, &b);
+            assert!(c.nnz() >= 90);
+        }
+        // identical patterns (all matches)
+        let i = SpVec::new(50, vec![1, 5, 9], vec![1.0, 2.0, 3.0]);
+        let j = SpVec::new(50, vec![1, 5, 9], vec![10.0, 20.0, 30.0]);
+        let (c, _) = run_svpsv(Variant::Sssr, IdxWidth::U16, &i, &j);
+        assert_eq!(c.nnz(), 3);
+        assert_eq!(c.vals, vec![11.0, 22.0, 33.0]);
+        // one empty
+        let empty = SpVec::empty(50);
+        let (c, _) = run_svpsv(Variant::Sssr, IdxWidth::U16, &empty, &i);
+        assert_eq!(c.nnz(), 3);
+    }
+
+    #[test]
+    fn svosv_variants() {
+        let dim = 400;
+        let a = matgen::random_spvec(27, dim, 120);
+        let b = matgen::random_spvec(28, dim, 80);
+        for v in [Variant::Base, Variant::Sssr] {
+            run_svosv(v, IdxWidth::U16, &a, &b);
+        }
+    }
+
+    #[test]
+    fn smxsv_variants() {
+        let m = matgen::random_csr(29, 30, 128, 200);
+        let b = matgen::random_spvec(30, 128, 40);
+        for v in [Variant::Base, Variant::Sssr] {
+            run_smxsv(v, IdxWidth::U16, &m, &b);
+        }
+    }
+
+    #[test]
+    fn smxsm_variants() {
+        let a = matgen::random_csr(31, 12, 16, 40);
+        let b = matgen::random_csr(32, 16, 10, 30);
+        for v in [Variant::Base, Variant::Sssr] {
+            run_smxsm(v, IdxWidth::U16, &a, &b);
+        }
+    }
+
+    #[test]
+    fn sparse_sparse_sssr_speedup_shape() {
+        // similar densities -> strong speedups (Fig. 4d/4e shape)
+        let dim = 4000;
+        let a = matgen::random_spvec(33, dim, 800);
+        let b = matgen::random_spvec(34, dim, 800);
+        let (_, base_x) = run_svxsv(Variant::Base, IdxWidth::U16, &a, &b);
+        let (_, sssr_x) = run_svxsv(Variant::Sssr, IdxWidth::U16, &a, &b);
+        let sx = base_x.cycles as f64 / sssr_x.cycles as f64;
+        assert!(sx > 2.5, "svxsv speedup {sx}");
+        let (_, base_p) = run_svpsv(Variant::Base, IdxWidth::U16, &a, &b);
+        let (_, sssr_p) = run_svpsv(Variant::Sssr, IdxWidth::U16, &a, &b);
+        let sp = base_p.cycles as f64 / sssr_p.cycles as f64;
+        assert!(sp > 4.0, "svpsv speedup {sp}");
+    }
+}

@@ -1,0 +1,191 @@
+//! The hand-optimized sparse linear-algebra kernel library of §3.2.
+//!
+//! Every operation is implemented in the three variants the paper
+//! evaluates:
+//!
+//! - **BASE** — stock RISC-V, hand-scheduled (the shapes of Listing 1),
+//! - **SSR**  — affine value streams mapped to classic SSRs + FREP
+//!   (no sparsity extensions; intersection kernels have no SSR variant,
+//!   since regular SSRs cannot accelerate conditional stream loads),
+//! - **SSSR** — full use of indirection / intersection / union streams
+//!   (Listings 2–4).
+//!
+//! Kernels are assembled against the register convention documented in
+//! each builder; the [`driver`] module loads operands into the simulated
+//! TCDM, runs a single core complex, verifies against the
+//! [`crate::formats::ops`] oracles, and reports cycle counts.
+
+pub mod apps;
+pub mod driver;
+pub mod sparse_dense;
+pub mod sparse_sparse;
+
+/// Index element width (§2.1.1: any unsigned 2^n-byte type on the bus).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IdxWidth {
+    U8,
+    U16,
+    U32,
+}
+
+impl IdxWidth {
+    pub fn log2(self) -> u8 {
+        match self {
+            IdxWidth::U8 => 0,
+            IdxWidth::U16 => 1,
+            IdxWidth::U32 => 2,
+        }
+    }
+
+    pub fn bytes(self) -> u64 {
+        1 << self.log2()
+    }
+
+    /// Max representable index.
+    pub fn max(self) -> u64 {
+        match self {
+            IdxWidth::U8 => u8::MAX as u64,
+            IdxWidth::U16 => u16::MAX as u64,
+            IdxWidth::U32 => u32::MAX as u64,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IdxWidth::U8 => "8",
+            IdxWidth::U16 => "16",
+            IdxWidth::U32 => "32",
+        }
+    }
+
+    /// Unsigned load of this width.
+    pub fn load(self, a: &mut crate::sim::Asm, rd: u8, base: u8, imm: i64) {
+        match self {
+            IdxWidth::U8 => a.lbu(rd, base, imm),
+            IdxWidth::U16 => a.lhu(rd, base, imm),
+            IdxWidth::U32 => a.lwu(rd, base, imm),
+        };
+    }
+
+    /// Store of this width.
+    pub fn store(self, a: &mut crate::sim::Asm, src: u8, base: u8, imm: i64) {
+        match self {
+            IdxWidth::U8 => a.sb(src, base, imm),
+            IdxWidth::U16 => a.sh(src, base, imm),
+            IdxWidth::U32 => a.sw(src, base, imm),
+        };
+    }
+
+    /// Theoretical peak data-mover utilization n/(n+1) with one shared
+    /// index/data port (§2.2): 8/9, 4/5, 2/3 for 8/16/32-bit indices.
+    pub fn arbitration_limit(self) -> f64 {
+        let n = (8 / self.bytes()) as f64;
+        n / (n + 1.0)
+    }
+}
+
+/// Kernel implementation variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Base,
+    Ssr,
+    Sssr,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Base => "base",
+            Variant::Ssr => "ssr",
+            Variant::Sssr => "sssr",
+        }
+    }
+}
+
+/// Bump allocator for laying out operand arrays in the simulated TCDM
+/// (or DRAM for cluster runs). All allocations are 8-byte aligned; index
+/// arrays get one word of tail padding so the egress coalescer may write
+/// a padded final word.
+#[derive(Clone, Debug)]
+pub struct Arena {
+    next: u64,
+    limit: u64,
+}
+
+impl Arena {
+    pub fn new(base: u64, limit: u64) -> Self {
+        Arena { next: base, limit }
+    }
+
+    pub fn alloc(&mut self, bytes: u64) -> u64 {
+        let addr = self.next;
+        self.next = (self.next + bytes + 7) & !7;
+        assert!(
+            self.next <= self.limit,
+            "arena overflow: {} > {} (workload too large for TCDM)",
+            self.next,
+            self.limit
+        );
+        addr
+    }
+
+    /// Allocate an index array of `n` entries plus coalescer padding.
+    pub fn alloc_idx(&mut self, n: u64, w: IdxWidth) -> u64 {
+        self.alloc(n * w.bytes() + 8)
+    }
+
+    pub fn alloc_f64(&mut self, n: u64) -> u64 {
+        self.alloc(n * 8)
+    }
+
+    pub fn used(&self) -> u64 {
+        self.next
+    }
+}
+
+/// Measurement report of one kernel execution.
+#[derive(Clone, Copy, Debug)]
+pub struct Report {
+    pub cycles: u64,
+    /// Payload FLOPs: the fmadd/fadd/fmul count the paper's utilization
+    /// metric is based on (excludes reductions and zero-inits).
+    pub payload: u64,
+    /// FPU utilization = payload / cycles (single core).
+    pub utilization: f64,
+    pub stats: crate::sim::RunStats,
+}
+
+impl Report {
+    pub fn from_run(cycles: u64, payload: u64, stats: crate::sim::RunStats) -> Self {
+        Report { cycles, payload, utilization: payload as f64 / cycles as f64, stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arbitration_limits_match_paper() {
+        assert!((IdxWidth::U32.arbitration_limit() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((IdxWidth::U16.arbitration_limit() - 0.8).abs() < 1e-12);
+        assert!((IdxWidth::U8.arbitration_limit() - 8.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arena_aligns_and_overflows() {
+        let mut a = Arena::new(0x100, 0x200);
+        let x = a.alloc(3);
+        let y = a.alloc(8);
+        assert_eq!(x, 0x100);
+        assert_eq!(y, 0x108);
+        assert_eq!(a.used(), 0x110);
+    }
+
+    #[test]
+    #[should_panic(expected = "arena overflow")]
+    fn arena_overflow_panics() {
+        let mut a = Arena::new(0, 16);
+        a.alloc(24);
+    }
+}

@@ -1,0 +1,552 @@
+//! Sparse-dense kernels (§3.2.1): sV×dV, sV+dV, sV⊙dV, sM×dV, sM×dM.
+//!
+//! Register convention (preset by the driver / coordinator):
+//!
+//! | reg | vector kernels      | matrix kernels                  |
+//! |-----|---------------------|---------------------------------|
+//! | A0  | a_vals              | a_vals                          |
+//! | A1  | a_idcs              | a_idcs                          |
+//! | A2  | b (dense base)      | b (dense base)                  |
+//! | A3  | n_nz                | n_rows                          |
+//! | A4  | result base         | c (result base)                 |
+//! | A5  | —                   | a_ptrs (32-bit row pointers)    |
+//! | A6  | —                   | total nnz (SSR/SSSR fiber jobs) |
+//!
+//! T6 is reserved as the config-immediate scratch register.
+
+use crate::sim::asm::Asm;
+use crate::sim::isa::{ssr_mode, SsrField as F, *};
+
+use super::IdxWidth;
+
+/// `li T6, imm; scfgw ssr, field, T6` — config write of an immediate.
+pub(crate) fn cfg_imm(a: &mut Asm, ssr: u8, f: F, imm: i64) {
+    a.li(T6, imm);
+    a.scfgw(ssr, f, T6);
+}
+
+/// Configure an ISSR for index matching (intersection/union) over the
+/// fiber (`vals_reg`, `idcs_reg`, `len_reg`).
+pub(crate) fn cfg_match(
+    a: &mut Asm,
+    ssr: u8,
+    vals_reg: Reg,
+    idcs_reg: Reg,
+    len_reg: Reg,
+    iw: IdxWidth,
+    mode: i64,
+) {
+    a.scfgw(ssr, F::DataBase, vals_reg);
+    a.scfgw(ssr, F::IdxBase, idcs_reg);
+    a.scfgw(ssr, F::IdxLen, len_reg);
+    cfg_imm(a, ssr, F::IdxSize, iw.log2() as i64);
+    cfg_imm(a, ssr, F::Launch, mode);
+}
+
+/// Configure a linear affine stream over `len_reg` doubles at `base_reg`.
+fn cfg_affine_linear(a: &mut Asm, ssr: u8, base_reg: Reg, len_reg: Reg, write: bool) {
+    a.scfgw(ssr, F::DataBase, base_reg);
+    a.scfgw(ssr, F::Bound0, len_reg);
+    cfg_imm(a, ssr, F::Stride0, 8);
+    cfg_imm(
+        a,
+        ssr,
+        F::Launch,
+        if write { ssr_mode::AFFINE_WRITE } else { ssr_mode::AFFINE_READ },
+    );
+}
+
+/// Configure an indirect stream: `data[base + (idx << shift)]`.
+#[allow(clippy::too_many_arguments)]
+fn cfg_indirect(
+    a: &mut Asm,
+    ssr: u8,
+    data_base: Reg,
+    idx_base: Reg,
+    idx_len: Reg,
+    iw: IdxWidth,
+    shift: u8,
+    write: bool,
+) {
+    a.scfgw(ssr, F::DataBase, data_base);
+    a.scfgw(ssr, F::IdxBase, idx_base);
+    a.scfgw(ssr, F::IdxLen, idx_len);
+    cfg_imm(a, ssr, F::IdxSize, iw.log2() as i64);
+    cfg_imm(a, ssr, F::IdxShift, shift as i64);
+    cfg_imm(
+        a,
+        ssr,
+        F::Launch,
+        if write { ssr_mode::INDIRECT_WRITE } else { ssr_mode::INDIRECT_READ },
+    );
+}
+
+// =====================================================================
+// sV×dV — sparse-dense dot product
+// =====================================================================
+
+/// BASE sV×dV: the nine-issue-slot loop of Listing 1a / §1.
+/// Result stored to `[A4]`.
+pub fn svxdv_base(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.fcvt_d_w_zero(FT3);
+    a.beq(A3, ZERO, "done");
+    // T0 = idx ptr, T1 = val ptr, T2 = idx end
+    a.mv(T0, A1);
+    a.mv(T1, A0);
+    a.slli(T2, A3, iw.log2());
+    a.add(T2, A1, T2);
+    a.label("loop");
+    iw.load(&mut a, T3, T0, 0); //               1
+    a.slli(T3, T3, 3); //                        2
+    a.add(T3, A2, T3); //                        3
+    a.fld(FT0, T3, 0); //  b[idx]                4
+    a.fld(FT1, T1, 0); //  a_val                 5
+    a.fmadd_d(FT3, FT0, FT1, FT3); //            6
+    a.addi(T0, T0, iw.bytes() as i64); //        7
+    a.addi(T1, T1, 8); //                        8
+    a.bne(T0, T2, "loop"); //                    9
+    a.label("done");
+    a.fsd(FT3, A4, 0);
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}
+
+/// SSR sV×dV: the sparse value array streams through ft0 (classic SSR);
+/// the indirection stays in the integer loop — seven issue slots.
+pub fn svxdv_ssr(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.ssr_enable();
+    cfg_affine_linear(&mut a, 0, A0, A3, false);
+    a.fcvt_d_w_zero(FT3);
+    a.beq(A3, ZERO, "done");
+    a.mv(T0, A1);
+    a.slli(T2, A3, iw.log2());
+    a.add(T2, A1, T2);
+    a.label("loop");
+    iw.load(&mut a, T3, T0, 0); //               1
+    a.slli(T3, T3, 3); //                        2
+    a.add(T3, A2, T3); //                        3
+    a.fld(FT4, T3, 0); //                        4
+    a.fmadd_d(FT3, FT0, FT4, FT3); //            5
+    a.addi(T0, T0, iw.bytes() as i64); //        6
+    a.bne(T0, T2, "loop"); //                    7
+    a.label("done");
+    a.fsd(FT3, A4, 0);
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+/// Number of staggered accumulators used by the SSSR dot-product loops.
+pub const N_ACC: u8 = 4;
+
+/// Emit zero-init of the `N_ACC` accumulators ft3..ft6.
+fn zero_accs(a: &mut Asm) {
+    for i in 0..N_ACC {
+        a.fcvt_d_w_zero(FT3 + i);
+    }
+}
+
+/// Emit the tree reduction of ft3..ft6 into `dst`.
+fn reduce_accs(a: &mut Asm, dst: FReg) {
+    a.fadd_d(FT3, FT3, FT4);
+    a.fadd_d(FT5, FT5, FT6);
+    a.fadd_d(dst, FT3, FT5);
+}
+
+/// SSSR sV×dV (Listing 3): ft0 streams a_vals (affine), ft1 streams
+/// b indirected at a's indices; the loop body is a single `fmadd.d`
+/// iterated by FREP with 4-fold register staggering.
+///
+/// `skip_reduction` reproduces the dashed "without reductions" series of
+/// Fig. 4a (timing-only run: the scalar result is not written back).
+pub fn svxdv_sssr(iw: IdxWidth, skip_reduction: bool) -> Program {
+    let mut a = Asm::new();
+    a.ssr_enable();
+    cfg_affine_linear(&mut a, 0, A0, A3, false);
+    cfg_indirect(&mut a, 1, A2, A1, A3, iw, 3, false);
+    zero_accs(&mut a);
+    a.frep(A3, 1, N_ACC - 1, stagger::RD | stagger::RS3);
+    a.fmadd_d(FT3, FT0, FT1, FT3);
+    if !skip_reduction {
+        reduce_accs(&mut a, FA0);
+        a.fsd(FA0, A4, 0);
+    }
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+// =====================================================================
+// sV+dV — sparse vector accumulated onto a dense vector (in place)
+// =====================================================================
+
+/// BASE sV+dV: ten issue slots per nonzero (§4.1.1).
+pub fn svpdv_base(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.beq(A3, ZERO, "done");
+    a.mv(T0, A1);
+    a.mv(T1, A0);
+    a.slli(T2, A3, iw.log2());
+    a.add(T2, A1, T2);
+    a.label("loop");
+    iw.load(&mut a, T3, T0, 0); //               1
+    a.slli(T3, T3, 3); //                        2
+    a.add(T3, A2, T3); //                        3
+    a.fld(FT0, T3, 0); //  b[idx]                4
+    a.fld(FT1, T1, 0); //  a_val                 5
+    a.fadd_d(FT4, FT0, FT1); //                  6
+    a.fsd(FT4, T3, 0); //                        7
+    a.addi(T0, T0, iw.bytes() as i64); //        8
+    a.addi(T1, T1, 8); //                        9
+    a.bne(T0, T2, "loop"); //                   10
+    a.label("done");
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}
+
+/// SSR sV+dV: a_vals through ft0.
+pub fn svpdv_ssr(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.ssr_enable();
+    cfg_affine_linear(&mut a, 0, A0, A3, false);
+    a.beq(A3, ZERO, "done");
+    a.mv(T0, A1);
+    a.slli(T2, A3, iw.log2());
+    a.add(T2, A1, T2);
+    a.label("loop");
+    iw.load(&mut a, T3, T0, 0); //               1
+    a.slli(T3, T3, 3); //                        2
+    a.add(T3, A2, T3); //                        3
+    a.fld(FT4, T3, 0); //                        4
+    a.fadd_d(FT5, FT4, FT0); //                  5
+    a.fsd(FT5, T3, 0); //                        6
+    a.addi(T0, T0, iw.bytes() as i64); //        7
+    a.bne(T0, T2, "loop"); //                    8
+    a.label("done");
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+/// SSSR sV+dV: ft0 gathers dense addends (ISSR0), ft1 scatters sums back
+/// (ISSR1 indirect write over the same index fiber), ft2 streams a_vals
+/// (ESSR slot in backward-compatible affine mode). Body: one `fadd.d`.
+pub fn svpdv_sssr(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.ssr_enable();
+    cfg_indirect(&mut a, 0, A2, A1, A3, iw, 3, false); // gather b[idx]
+    cfg_indirect(&mut a, 1, A2, A1, A3, iw, 3, true); // scatter b[idx]
+    cfg_affine_linear(&mut a, 2, A0, A3, false); // a_vals
+    a.frep(A3, 1, 0, 0);
+    a.fadd_d(FT1, FT0, FT2);
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+// =====================================================================
+// sV⊙dV — elementwise product, compressed result values
+// =====================================================================
+
+/// BASE sV⊙dV: result value array written to `[A4]` (indices shared
+/// with the sparse operand).
+pub fn svodv_base(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.beq(A3, ZERO, "done");
+    a.mv(T0, A1);
+    a.mv(T1, A0);
+    a.mv(T4, A4);
+    a.slli(T2, A3, iw.log2());
+    a.add(T2, A1, T2);
+    a.label("loop");
+    iw.load(&mut a, T3, T0, 0);
+    a.slli(T3, T3, 3);
+    a.add(T3, A2, T3);
+    a.fld(FT0, T3, 0);
+    a.fld(FT1, T1, 0);
+    a.fmul_d(FT4, FT0, FT1);
+    a.fsd(FT4, T4, 0);
+    a.addi(T0, T0, iw.bytes() as i64);
+    a.addi(T1, T1, 8);
+    a.addi(T4, T4, 8);
+    a.bne(T0, T2, "loop");
+    a.label("done");
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}
+
+/// SSR sV⊙dV: a_vals in via ft0, results out via ft2 (affine write).
+pub fn svodv_ssr(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.ssr_enable();
+    cfg_affine_linear(&mut a, 0, A0, A3, false);
+    cfg_affine_linear(&mut a, 2, A4, A3, true);
+    a.beq(A3, ZERO, "done");
+    a.mv(T0, A1);
+    a.slli(T2, A3, iw.log2());
+    a.add(T2, A1, T2);
+    a.label("loop");
+    iw.load(&mut a, T3, T0, 0); //               1
+    a.slli(T3, T3, 3); //                        2
+    a.add(T3, A2, T3); //                        3
+    a.fld(FT4, T3, 0); //                        4
+    a.fmul_d(FT2, FT4, FT0); //                  5
+    a.addi(T0, T0, iw.bytes() as i64); //        6
+    a.bne(T0, T2, "loop"); //                    7
+    a.label("done");
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+/// SSSR sV⊙dV: ft0 gathers dense co-operands, ft2 streams a_vals, ft1
+/// writes the result value array linearly. Body: one `fmul.d`.
+pub fn svodv_sssr(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.ssr_enable();
+    cfg_indirect(&mut a, 0, A2, A1, A3, iw, 3, false);
+    cfg_affine_linear(&mut a, 1, A4, A3, true);
+    cfg_affine_linear(&mut a, 2, A0, A3, false);
+    a.frep(A3, 1, 0, 0);
+    a.fmul_d(FT1, FT0, FT2);
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+// =====================================================================
+// sM×dV — CSR matrix–vector product
+// =====================================================================
+
+/// BASE sM×dV: iterated BASE dot products.
+pub fn smxdv_base(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.mv(S0, A5); // ptr cursor
+    a.mv(S1, A3); // row counter
+    a.beq(S1, ZERO, "end");
+    a.label("row");
+    a.lwu(T0, S0, 0);
+    a.lwu(T1, S0, 4);
+    a.sub(T2, T1, T0); // cnt
+    a.fcvt_d_w_zero(FT3);
+    a.slli(T3, T0, 3);
+    a.add(T3, A0, T3); // val ptr
+    a.slli(T4, T0, iw.log2());
+    a.add(T4, A1, T4); // idx ptr
+    a.beq(T2, ZERO, "store");
+    a.label("inner");
+    iw.load(&mut a, T5, T4, 0);
+    a.slli(T5, T5, 3);
+    a.add(T5, A2, T5);
+    a.fld(FT0, T5, 0);
+    a.fld(FT1, T3, 0);
+    a.fmadd_d(FT3, FT0, FT1, FT3);
+    a.addi(T4, T4, iw.bytes() as i64);
+    a.addi(T3, T3, 8);
+    a.addi(T2, T2, -1);
+    a.bne(T2, ZERO, "inner");
+    a.label("store");
+    a.fsd(FT3, A4, 0);
+    a.addi(A4, A4, 8);
+    a.addi(S0, S0, 4);
+    a.addi(S1, S1, -1);
+    a.bne(S1, ZERO, "row");
+    a.label("end");
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}
+
+/// SSR sM×dV: the whole value fiber streams through ft0 in a single SSR
+/// job (A6 = total nnz); the indirection remains in the integer loop.
+pub fn smxdv_ssr(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.ssr_enable();
+    cfg_affine_linear(&mut a, 0, A0, A6, false);
+    a.mv(S0, A5);
+    a.mv(S1, A3);
+    a.beq(S1, ZERO, "end");
+    a.label("row");
+    a.lwu(T0, S0, 0);
+    a.lwu(T1, S0, 4);
+    a.fcvt_d_w_zero(FT3);
+    a.slli(T4, T0, iw.log2());
+    a.add(T4, A1, T4); // idx cursor
+    a.slli(T5, T1, iw.log2());
+    a.add(T5, A1, T5); // idx end
+    a.beq(T4, T5, "store");
+    a.label("inner");
+    iw.load(&mut a, T3, T4, 0); //               1
+    a.slli(T3, T3, 3); //                        2
+    a.add(T3, A2, T3); //                        3
+    a.fld(FT4, T3, 0); //                        4
+    a.fmadd_d(FT3, FT4, FT0, FT3); //            5
+    a.addi(T4, T4, iw.bytes() as i64); //        6
+    a.bne(T4, T5, "inner"); //                   7
+    a.label("store");
+    a.fsd(FT3, A4, 0);
+    a.addi(A4, A4, 8);
+    a.addi(S0, S0, 4);
+    a.addi(S1, S1, -1);
+    a.bne(S1, ZERO, "row");
+    a.label("end");
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+/// Emit the SSSR sM×dV row loop (shared with the cluster scaleout).
+/// Assumes both streamer jobs (ft0 = a_vals affine over the row range,
+/// ft1 = b indirected over the same range) were already launched and
+/// S0 = ptr cursor, S1 = row counter, A4 = result cursor (stride S2
+/// bytes). Short rows (< 4 nnz) bypass FREP + reduction (§3.2.1 row
+/// unrolling).
+pub(crate) fn emit_smxdv_rows_sssr(a: &mut Asm, pfx: &str) {
+    a.beq(S5, ZERO, &format!("{pfx}end"));
+    a.label(&format!("{pfx}row"));
+    a.lwu(T0, S4, 0);
+    a.lwu(T1, S4, 4);
+    a.sub(T2, T1, T0);
+    a.li(T3, 4);
+    a.bltu(T2, T3, &format!("{pfx}short"));
+    // long row: staggered FREP + tree reduction
+    zero_accs(a);
+    a.frep(T2, 1, N_ACC - 1, stagger::RD | stagger::RS3);
+    a.fmadd_d(FT3, FT0, FT1, FT3);
+    reduce_accs(a, FT7);
+    a.fsd(FT7, A4, 0);
+    a.j(&format!("{pfx}next"));
+    // short row (0..=3 nnz): single accumulator, no reduction
+    a.label(&format!("{pfx}short"));
+    a.fcvt_d_w_zero(FT3);
+    a.beq(T2, ZERO, &format!("{pfx}sstore"));
+    a.label(&format!("{pfx}sloop"));
+    a.fmadd_d(FT3, FT0, FT1, FT3);
+    a.addi(T2, T2, -1);
+    a.bne(T2, ZERO, &format!("{pfx}sloop"));
+    a.label(&format!("{pfx}sstore"));
+    a.fsd(FT3, A4, 0);
+    a.label(&format!("{pfx}next"));
+    a.add(A4, A4, S2);
+    a.addi(S4, S4, 4);
+    a.addi(S5, S5, -1);
+    a.bne(S5, ZERO, &format!("{pfx}row"));
+    a.label(&format!("{pfx}end"));
+}
+
+/// SSSR sM×dV: single fiber-wide SSR + ISSR jobs (A6 = total nnz),
+/// FREP per row with short-row unrolling.
+pub fn smxdv_sssr(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.ssr_enable();
+    cfg_affine_linear(&mut a, 0, A0, A6, false);
+    cfg_indirect(&mut a, 1, A2, A1, A6, iw, 3, false);
+    a.mv(S4, A5);
+    a.mv(S5, A3);
+    a.li(S2, 8); // result stride
+    emit_smxdv_rows_sssr(&mut a, "m");
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+// =====================================================================
+// sM×dM — CSR times power-of-two-column row-major dense matrix
+// =====================================================================
+
+/// BASE sM×dM: column loop around the BASE sM×dV body. A7 = log2 of the
+/// dense matrix's column count (power-of-two columns, §3.2.1).
+pub fn smxdm_base(iw: IdxWidth, log2_cols: u8) -> Program {
+    let cols = 1i64 << log2_cols;
+    let mut a = Asm::new();
+    a.li(S5, cols); // column counter
+    a.mv(S6, A2); // b column base
+    a.mv(S7, A4); // c column base
+    a.label("col");
+    a.mv(S0, A5);
+    a.mv(S1, A3);
+    a.mv(S3, S7); // result cursor for this column
+    a.beq(S1, ZERO, "colnext");
+    a.label("row");
+    a.lwu(T0, S0, 0);
+    a.lwu(T1, S0, 4);
+    a.sub(T2, T1, T0);
+    a.fcvt_d_w_zero(FT3);
+    a.slli(T3, T0, 3);
+    a.add(T3, A0, T3);
+    a.slli(T4, T0, iw.log2());
+    a.add(T4, A1, T4);
+    a.beq(T2, ZERO, "store");
+    a.label("inner");
+    iw.load(&mut a, T5, T4, 0);
+    a.slli(T5, T5, 3 + log2_cols);
+    a.add(T5, S6, T5);
+    a.fld(FT0, T5, 0);
+    a.fld(FT1, T3, 0);
+    a.fmadd_d(FT3, FT0, FT1, FT3);
+    a.addi(T4, T4, iw.bytes() as i64);
+    a.addi(T3, T3, 8);
+    a.addi(T2, T2, -1);
+    a.bne(T2, ZERO, "inner");
+    a.label("store");
+    a.fsd(FT3, S3, 0);
+    a.addi(S3, S3, 8 * cols);
+    a.addi(S0, S0, 4);
+    a.addi(S1, S1, -1);
+    a.bne(S1, ZERO, "row");
+    a.label("colnext");
+    a.addi(S6, S6, 8);
+    a.addi(S7, S7, 8);
+    a.addi(S5, S5, -1);
+    a.bne(S5, ZERO, "col");
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}
+
+/// SSSR sM×dM: iterated SSSR sM×dV with the hardware index shifter doing
+/// the power-of-two column striding (IdxShift = 3 + log2_cols, §2.1.1),
+/// relaunching the fiber jobs per dense column.
+pub fn smxdm_sssr(iw: IdxWidth, log2_cols: u8) -> Program {
+    let cols = 1i64 << log2_cols;
+    let mut a = Asm::new();
+    a.ssr_enable();
+    a.li(S3, cols); // column counter (S4/S5 are the row-loop cursors)
+    a.mv(S6, A2);
+    a.mv(S7, A4);
+    a.li(S2, 8 * cols); // result row stride
+    a.label("col");
+    // relaunch both fiber jobs for this column
+    cfg_affine_linear(&mut a, 0, A0, A6, false);
+    a.scfgw(1, F::DataBase, S6);
+    a.scfgw(1, F::IdxBase, A1);
+    a.scfgw(1, F::IdxLen, A6);
+    cfg_imm(&mut a, 1, F::IdxSize, iw.log2() as i64);
+    cfg_imm(&mut a, 1, F::IdxShift, 3 + log2_cols as i64);
+    cfg_imm(&mut a, 1, F::Launch, ssr_mode::INDIRECT_READ);
+    a.mv(S4, A5);
+    a.mv(S5, A3);
+    a.mv(A4, S7);
+    emit_smxdv_rows_sssr(&mut a, "c");
+    a.fpu_fence();
+    a.addi(S6, S6, 8);
+    a.addi(S7, S7, 8);
+    a.addi(S3, S3, -1);
+    a.bne(S3, ZERO, "col");
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}

@@ -1,0 +1,555 @@
+//! Sparse-sparse kernels (§3.2.2): sV×sV, sV+sV, sV⊙sV, sM×sV, and the
+//! inner-dataflow sM×sM.
+//!
+//! Register convention (preset by the driver):
+//!
+//! | reg | vector kernels             | matrix kernels                  |
+//! |-----|----------------------------|---------------------------------|
+//! | A0  | a_vals                     | a_vals                          |
+//! | A1  | a_idcs                     | a_idcs                          |
+//! | A2  | b_vals                     | b_vals                          |
+//! | A3  | b_idcs                     | b_idcs                          |
+//! | A4  | result base (vals)         | c (dense result)                |
+//! | A5  | len_a                      | a_ptrs                          |
+//! | A6  | len_b                      | n_rows                          |
+//! | A7  | result idcs / len out addr | len_b                           |
+//!
+//! BASE sparse-sparse loops follow the structure of Listing 1b with the
+//! dedicated skip loops the paper's optimized baseline uses (five issue
+//! slots per scanned nonzero, §4.1.2). No SSR variants exist: regular
+//! SSRs cannot accelerate conditional stream loads (§3.2).
+
+use crate::sim::asm::Asm;
+use crate::sim::isa::{ssr_mode, SsrField as F, *};
+
+use super::sparse_dense::{cfg_imm, cfg_match, N_ACC};
+use super::IdxWidth;
+
+/// BASE sV×sV: two-pointer intersection with tight skip loops.
+/// Result scalar stored to `[A4]`.
+pub fn svxsv_base(iw: IdxWidth) -> Program {
+    let ib = iw.bytes() as i64;
+    let mut a = Asm::new();
+    a.fcvt_d_w_zero(FT3);
+    // cursors: T0 = a_idx, T1 = b_idx, T2 = a_val, T3 = b_val
+    a.mv(T0, A1);
+    a.mv(T1, A3);
+    a.mv(T2, A0);
+    a.mv(T3, A2);
+    // ends: S0, S1
+    a.slli(S0, A5, iw.log2());
+    a.add(S0, A1, S0);
+    a.slli(S1, A6, iw.log2());
+    a.add(S1, A3, S1);
+    a.label("loop");
+    a.bgeu(T0, S0, "done");
+    a.bgeu(T1, S1, "done");
+    iw.load(&mut a, T4, T0, 0);
+    iw.load(&mut a, T5, T1, 0);
+    a.beq(T4, T5, "match");
+    a.bltu(T4, T5, "skipa");
+    // skip nonzeros in b until b_idx >= a_idx (5 slots per scanned nz)
+    a.label("skipb");
+    a.addi(T1, T1, ib); //                       1
+    a.addi(T3, T3, 8); //                        2
+    a.bgeu(T1, S1, "done"); //                   3
+    iw.load(&mut a, T5, T1, 0); //               4
+    a.bltu(T5, T4, "skipb"); //                  5
+    a.j("loop");
+    a.label("skipa");
+    a.addi(T0, T0, ib);
+    a.addi(T2, T2, 8);
+    a.bgeu(T0, S0, "done");
+    iw.load(&mut a, T4, T0, 0);
+    a.bltu(T4, T5, "skipa");
+    a.j("loop");
+    a.label("match");
+    a.fld(FT0, T2, 0);
+    a.fld(FT1, T3, 0);
+    a.fmadd_d(FT3, FT0, FT1, FT3);
+    a.addi(T0, T0, ib);
+    a.addi(T2, T2, 8);
+    a.addi(T1, T1, ib);
+    a.addi(T3, T3, 8);
+    a.j("loop");
+    a.label("done");
+    a.fsd(FT3, A4, 0);
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}
+
+/// SSSR sV×sV (Listing 2): both ISSRs in intersection mode; the body is
+/// one `fmadd.d` iterated by the stream-controlled hardware loop.
+pub fn svxsv_sssr(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.ssr_enable();
+    cfg_match(&mut a, 0, A0, A1, A5, iw, ssr_mode::INTERSECT);
+    cfg_match(&mut a, 1, A2, A3, A6, iw, ssr_mode::INTERSECT);
+    for i in 0..N_ACC {
+        a.fcvt_d_w_zero(FT3 + i);
+    }
+    a.frep_s(1, N_ACC - 1, stagger::RD | stagger::RS3);
+    a.fmadd_d(FT3, FT0, FT1, FT3);
+    a.fadd_d(FT3, FT3, FT4);
+    a.fadd_d(FT5, FT5, FT6);
+    a.fadd_d(FA0, FT3, FT5);
+    a.fsd(FA0, A4, 0);
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+/// BASE sV+sV: three-way merge writing the result fiber (values to
+/// `[A4]`, indices to `[A7]`); the result length is left in `A0` and
+/// stored to `[A7 + len_slot]`... the driver reads it from register T6's
+/// slot: we store it to `[S11]` where S11 = A7 result-length address is
+/// preset by the driver in S11.
+pub fn svpsv_base(iw: IdxWidth) -> Program {
+    let ib = iw.bytes() as i64;
+    let mut a = Asm::new();
+    // cursors
+    a.mv(T0, A1); // a idx
+    a.mv(T1, A3); // b idx
+    a.mv(T2, A0); // a val
+    a.mv(T3, A2); // b val
+    a.mv(S2, A7); // out idx
+    a.mv(S3, A4); // out val
+    a.slli(S0, A5, iw.log2());
+    a.add(S0, A1, S0);
+    a.slli(S1, A6, iw.log2());
+    a.add(S1, A3, S1);
+    a.label("loop");
+    a.bgeu(T0, S0, "drain_b");
+    a.bgeu(T1, S1, "drain_a");
+    iw.load(&mut a, T4, T0, 0);
+    iw.load(&mut a, T5, T1, 0);
+    a.beq(T4, T5, "both");
+    a.bltu(T4, T5, "a_only");
+    // b only
+    a.fld(FT0, T3, 0);
+    a.fsd(FT0, S3, 0);
+    iw.store(&mut a, T5, S2, 0);
+    a.addi(T1, T1, ib);
+    a.addi(T3, T3, 8);
+    a.addi(S2, S2, ib);
+    a.addi(S3, S3, 8);
+    a.j("loop");
+    a.label("a_only");
+    a.fld(FT0, T2, 0);
+    a.fsd(FT0, S3, 0);
+    iw.store(&mut a, T4, S2, 0);
+    a.addi(T0, T0, ib);
+    a.addi(T2, T2, 8);
+    a.addi(S2, S2, ib);
+    a.addi(S3, S3, 8);
+    a.j("loop");
+    a.label("both");
+    a.fld(FT0, T2, 0);
+    a.fld(FT1, T3, 0);
+    a.fadd_d(FT2, FT0, FT1);
+    a.fsd(FT2, S3, 0);
+    iw.store(&mut a, T4, S2, 0);
+    a.addi(T0, T0, ib);
+    a.addi(T2, T2, 8);
+    a.addi(T1, T1, ib);
+    a.addi(T3, T3, 8);
+    a.addi(S2, S2, ib);
+    a.addi(S3, S3, 8);
+    a.j("loop");
+    a.label("drain_a");
+    a.bgeu(T0, S0, "done");
+    iw.load(&mut a, T4, T0, 0);
+    a.fld(FT0, T2, 0);
+    a.fsd(FT0, S3, 0);
+    iw.store(&mut a, T4, S2, 0);
+    a.addi(T0, T0, ib);
+    a.addi(T2, T2, 8);
+    a.addi(S2, S2, ib);
+    a.addi(S3, S3, 8);
+    a.j("drain_a");
+    a.label("drain_b");
+    a.bgeu(T1, S1, "done");
+    iw.load(&mut a, T5, T1, 0);
+    a.fld(FT0, T3, 0);
+    a.fsd(FT0, S3, 0);
+    iw.store(&mut a, T5, S2, 0);
+    a.addi(T1, T1, ib);
+    a.addi(T3, T3, 8);
+    a.addi(S2, S2, ib);
+    a.addi(S3, S3, 8);
+    a.j("drain_b");
+    a.label("done");
+    // result length = (out val cursor - out val base) / 8 -> [S11]
+    a.sub(T4, S3, A4);
+    a.srli(T4, T4, 3);
+    a.sd(T4, S11, 0);
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}
+
+/// SSSR sV+sV (Listing 4): union of both ISSR index streams, `fadd.d`
+/// under `frep.s`, result fiber written by the ESSR; the joint length is
+/// read from the ESSR config and stored to `[S11]`.
+pub fn svpsv_sssr(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.ssr_enable();
+    // ESSR first so the comparator sees it attached from the start.
+    a.scfgw(2, F::DataBase, A4);
+    a.scfgw(2, F::IdxBase, A7);
+    a.li(T6, iw.log2() as i64);
+    a.scfgw(2, F::IdxSize, T6);
+    a.li(T6, ssr_mode::EGRESS);
+    a.scfgw(2, F::Launch, T6);
+    cfg_match(&mut a, 0, A0, A1, A5, iw, ssr_mode::UNION);
+    cfg_match(&mut a, 1, A2, A3, A6, iw, ssr_mode::UNION);
+    a.frep_s(1, 0, 0);
+    a.fadd_d(FT2, FT0, FT1);
+    a.fpu_fence(); // wait until the FPU is idle (job done)
+    a.scfgr(T0, 2, F::StrCtlLen);
+    a.sd(T0, S11, 0);
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+/// BASE sV⊙sV: intersection producing a compressed result fiber.
+pub fn svosv_base(iw: IdxWidth) -> Program {
+    let ib = iw.bytes() as i64;
+    let mut a = Asm::new();
+    a.mv(T0, A1);
+    a.mv(T1, A3);
+    a.mv(T2, A0);
+    a.mv(T3, A2);
+    a.mv(S2, A7);
+    a.mv(S3, A4);
+    a.slli(S0, A5, iw.log2());
+    a.add(S0, A1, S0);
+    a.slli(S1, A6, iw.log2());
+    a.add(S1, A3, S1);
+    a.label("loop");
+    a.bgeu(T0, S0, "done");
+    a.bgeu(T1, S1, "done");
+    iw.load(&mut a, T4, T0, 0);
+    iw.load(&mut a, T5, T1, 0);
+    a.beq(T4, T5, "match");
+    a.bltu(T4, T5, "skipa");
+    a.label("skipb");
+    a.addi(T1, T1, ib);
+    a.addi(T3, T3, 8);
+    a.bgeu(T1, S1, "done");
+    iw.load(&mut a, T5, T1, 0);
+    a.bltu(T5, T4, "skipb");
+    a.j("loop");
+    a.label("skipa");
+    a.addi(T0, T0, ib);
+    a.addi(T2, T2, 8);
+    a.bgeu(T0, S0, "done");
+    iw.load(&mut a, T4, T0, 0);
+    a.bltu(T4, T5, "skipa");
+    a.j("loop");
+    a.label("match");
+    a.fld(FT0, T2, 0);
+    a.fld(FT1, T3, 0);
+    a.fmul_d(FT2, FT0, FT1);
+    a.fsd(FT2, S3, 0);
+    iw.store(&mut a, T4, S2, 0);
+    a.addi(T0, T0, ib);
+    a.addi(T2, T2, 8);
+    a.addi(T1, T1, ib);
+    a.addi(T3, T3, 8);
+    a.addi(S2, S2, ib);
+    a.addi(S3, S3, 8);
+    a.j("loop");
+    a.label("done");
+    a.sub(T4, S3, A4);
+    a.srli(T4, T4, 3);
+    a.sd(T4, S11, 0);
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}
+
+/// SSSR sV⊙sV: intersection + `fmul.d` + ESSR writeback (§3.2.2: "almost
+/// identical to sV+sV; we instead configure the index comparator for
+/// intersection and iterate fmul.d").
+pub fn svosv_sssr(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.ssr_enable();
+    a.scfgw(2, F::DataBase, A4);
+    a.scfgw(2, F::IdxBase, A7);
+    a.li(T6, iw.log2() as i64);
+    a.scfgw(2, F::IdxSize, T6);
+    a.li(T6, ssr_mode::EGRESS);
+    a.scfgw(2, F::Launch, T6);
+    cfg_match(&mut a, 0, A0, A1, A5, iw, ssr_mode::INTERSECT);
+    cfg_match(&mut a, 1, A2, A3, A6, iw, ssr_mode::INTERSECT);
+    a.frep_s(1, 0, 0);
+    a.fmul_d(FT2, FT0, FT1);
+    a.fpu_fence();
+    a.scfgr(T0, 2, F::StrCtlLen);
+    a.sd(T0, S11, 0);
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+/// BASE sM×sV: iterated BASE sV×sV per matrix row, dense result.
+pub fn smxsv_base(iw: IdxWidth) -> Program {
+    let ib = iw.bytes() as i64;
+    let mut a = Asm::new();
+    a.mv(S4, A5); // ptr cursor
+    a.mv(S5, A6); // row counter
+    a.mv(S6, A4); // result cursor
+    a.beq(S5, ZERO, "end");
+    // b end cursor (constant)
+    a.slli(S1, A7, iw.log2());
+    a.add(S1, A3, S1);
+    a.label("row");
+    a.lwu(T6, S4, 0);
+    a.lwu(S0, S4, 4);
+    // a cursors for this row
+    a.slli(T0, T6, iw.log2());
+    a.add(T0, A1, T0);
+    a.slli(T2, T6, 3);
+    a.add(T2, A0, T2);
+    a.slli(S0, S0, iw.log2());
+    a.add(S0, A1, S0); // a idx end
+    // b cursors reset
+    a.mv(T1, A3);
+    a.mv(T3, A2);
+    a.fcvt_d_w_zero(FT3);
+    a.label("loop");
+    a.bgeu(T0, S0, "rdone");
+    a.bgeu(T1, S1, "rdone");
+    iw.load(&mut a, T4, T0, 0);
+    iw.load(&mut a, T5, T1, 0);
+    a.beq(T4, T5, "match");
+    a.bltu(T4, T5, "skipa");
+    a.label("skipb");
+    a.addi(T1, T1, ib);
+    a.addi(T3, T3, 8);
+    a.bgeu(T1, S1, "rdone");
+    iw.load(&mut a, T5, T1, 0);
+    a.bltu(T5, T4, "skipb");
+    a.j("loop");
+    a.label("skipa");
+    a.addi(T0, T0, ib);
+    a.addi(T2, T2, 8);
+    a.bgeu(T0, S0, "rdone");
+    iw.load(&mut a, T4, T0, 0);
+    a.bltu(T4, T5, "skipa");
+    a.j("loop");
+    a.label("match");
+    a.fld(FT0, T2, 0);
+    a.fld(FT1, T3, 0);
+    a.fmadd_d(FT3, FT0, FT1, FT3);
+    a.addi(T0, T0, ib);
+    a.addi(T2, T2, 8);
+    a.addi(T1, T1, ib);
+    a.addi(T3, T3, 8);
+    a.j("loop");
+    a.label("rdone");
+    a.fsd(FT3, S6, 0);
+    a.addi(S6, S6, 8);
+    a.addi(S4, S4, 4);
+    a.addi(S5, S5, -1);
+    a.bne(S5, ZERO, "row");
+    a.label("end");
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}
+
+/// SSSR sM×sV: per-row intersection jobs (§3.2.2: "we launch new SSSR
+/// jobs for each row", hiding setup via the shadowed config interface
+/// and core/FPU decoupling). The b-operand config is loop-invariant, so
+/// its relaunch is a single `scfgw`.
+pub fn smxsv_sssr(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.ssr_enable();
+    // Invariant unit-1 shadow config (b fiber).
+    a.scfgw(1, F::DataBase, A2);
+    a.scfgw(1, F::IdxBase, A3);
+    a.scfgw(1, F::IdxLen, A7);
+    cfg_imm(&mut a, 1, F::IdxSize, iw.log2() as i64);
+    // Invariant unit-0 shadow fields.
+    cfg_imm(&mut a, 0, F::IdxSize, iw.log2() as i64);
+    a.li(S10, ssr_mode::INTERSECT); // launch word in a register
+    a.mv(S4, A5);
+    a.mv(S5, A6);
+    a.mv(S6, A4);
+    a.beq(S5, ZERO, "end");
+    a.label("row");
+    a.lwu(T0, S4, 0);
+    a.lwu(T1, S4, 4);
+    a.sub(T2, T1, T0);
+    a.slli(T3, T0, iw.log2());
+    a.add(T3, A1, T3);
+    a.scfgw(0, F::IdxBase, T3);
+    a.slli(T4, T0, 3);
+    a.add(T4, A0, T4);
+    a.scfgw(0, F::DataBase, T4);
+    a.scfgw(0, F::IdxLen, T2);
+    a.scfgw(0, F::Launch, S10);
+    a.scfgw(1, F::Launch, S10);
+    for i in 0..N_ACC {
+        a.fcvt_d_w_zero(FT3 + i);
+    }
+    a.frep_s(1, N_ACC - 1, stagger::RD | stagger::RS3);
+    a.fmadd_d(FT3, FT0, FT1, FT3);
+    a.fadd_d(FT3, FT3, FT4);
+    a.fadd_d(FT5, FT5, FT6);
+    a.fadd_d(FT7, FT3, FT5);
+    a.fsd(FT7, S6, 0);
+    a.addi(S6, S6, 8);
+    a.addi(S4, S4, 4);
+    a.addi(S5, S5, -1);
+    a.bne(S5, ZERO, "row");
+    a.label("end");
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+/// SSSR sM×sM (inner dataflow, CSR×CSC): iterates the sM×sV kernel over
+/// the columns of B (§3.2.2). Driver registers:
+/// A0/A1/A5 = A vals/idcs/ptrs, A2/A3/A7 = B vals/idcs/ptrs (CSC),
+/// A4 = dense row-major result, A6 = n_rows(A), S8 = n_cols(B).
+pub fn smxsm_inner_sssr(iw: IdxWidth) -> Program {
+    let mut a = Asm::new();
+    a.ssr_enable();
+    cfg_imm(&mut a, 0, F::IdxSize, iw.log2() as i64);
+    cfg_imm(&mut a, 1, F::IdxSize, iw.log2() as i64);
+    a.li(S10, ssr_mode::INTERSECT);
+    a.mv(S7, A7); // B ptr cursor
+    a.li(S9, 0); // column counter
+    a.label("col");
+    // unit-1 shadow: column fiber of B
+    a.lwu(T0, S7, 0);
+    a.lwu(T1, S7, 4);
+    a.sub(T2, T1, T0);
+    a.slli(T3, T0, iw.log2());
+    a.add(T3, A3, T3);
+    a.scfgw(1, F::IdxBase, T3);
+    a.slli(T4, T0, 3);
+    a.add(T4, A2, T4);
+    a.scfgw(1, F::DataBase, T4);
+    a.scfgw(1, F::IdxLen, T2);
+    // result cursor: c + col*8, row stride = ncolsB*8
+    a.slli(S6, S9, 3);
+    a.add(S6, A4, S6);
+    a.mv(S4, A5);
+    a.mv(S5, A6);
+    a.beq(S5, ZERO, "colnext");
+    a.label("row");
+    a.lwu(T0, S4, 0);
+    a.lwu(T1, S4, 4);
+    a.sub(T2, T1, T0);
+    a.slli(T3, T0, iw.log2());
+    a.add(T3, A1, T3);
+    a.scfgw(0, F::IdxBase, T3);
+    a.slli(T4, T0, 3);
+    a.add(T4, A0, T4);
+    a.scfgw(0, F::DataBase, T4);
+    a.scfgw(0, F::IdxLen, T2);
+    a.scfgw(0, F::Launch, S10);
+    a.scfgw(1, F::Launch, S10);
+    for i in 0..N_ACC {
+        a.fcvt_d_w_zero(FT3 + i);
+    }
+    a.frep_s(1, N_ACC - 1, stagger::RD | stagger::RS3);
+    a.fmadd_d(FT3, FT0, FT1, FT3);
+    a.fadd_d(FT3, FT3, FT4);
+    a.fadd_d(FT5, FT5, FT6);
+    a.fadd_d(FT7, FT3, FT5);
+    a.fsd(FT7, S6, 0);
+    a.slli(T5, S8, 3);
+    a.add(S6, S6, T5);
+    a.addi(S4, S4, 4);
+    a.addi(S5, S5, -1);
+    a.bne(S5, ZERO, "row");
+    a.label("colnext");
+    a.addi(S7, S7, 4);
+    a.addi(S9, S9, 1);
+    a.bne(S9, S8, "col");
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+/// BASE sM×sM (inner dataflow): column loop around BASE sM×sV.
+pub fn smxsm_inner_base(iw: IdxWidth) -> Program {
+    let ib = iw.bytes() as i64;
+    let mut a = Asm::new();
+    a.mv(S7, A7);
+    a.li(S9, 0);
+    a.label("col");
+    a.lwu(T6, S7, 0);
+    a.lwu(S0, S7, 4);
+    // b cursors base for this column: S2 = idx base, S3 = val base
+    a.slli(S2, T6, iw.log2());
+    a.add(S2, A3, S2);
+    a.slli(S3, T6, 3);
+    a.add(S3, A2, S3);
+    a.slli(S1, S0, iw.log2());
+    a.add(S1, A3, S1); // b idx end
+    a.slli(T5, S9, 3);
+    a.add(S6, A4, T5); // result cursor
+    a.mv(S4, A5);
+    a.mv(S5, A6);
+    a.beq(S5, ZERO, "colnext");
+    a.label("row");
+    a.lwu(T6, S4, 0);
+    a.lwu(S0, S4, 4);
+    a.slli(T0, T6, iw.log2());
+    a.add(T0, A1, T0);
+    a.slli(T2, T6, 3);
+    a.add(T2, A0, T2);
+    a.slli(S0, S0, iw.log2());
+    a.add(S0, A1, S0);
+    a.mv(T1, S2);
+    a.mv(T3, S3);
+    a.fcvt_d_w_zero(FT3);
+    a.label("loop");
+    a.bgeu(T0, S0, "rdone");
+    a.bgeu(T1, S1, "rdone");
+    iw.load(&mut a, T4, T0, 0);
+    iw.load(&mut a, T5, T1, 0);
+    a.beq(T4, T5, "match");
+    a.bltu(T4, T5, "skipa");
+    a.addi(T1, T1, ib);
+    a.addi(T3, T3, 8);
+    a.j("loop");
+    a.label("skipa");
+    a.addi(T0, T0, ib);
+    a.addi(T2, T2, 8);
+    a.j("loop");
+    a.label("match");
+    a.fld(FT0, T2, 0);
+    a.fld(FT1, T3, 0);
+    a.fmadd_d(FT3, FT0, FT1, FT3);
+    a.addi(T0, T0, ib);
+    a.addi(T2, T2, 8);
+    a.addi(T1, T1, ib);
+    a.addi(T3, T3, 8);
+    a.j("loop");
+    a.label("rdone");
+    a.fsd(FT3, S6, 0);
+    a.slli(T5, S8, 3);
+    a.add(S6, S6, T5);
+    a.addi(S4, S4, 4);
+    a.addi(S5, S5, -1);
+    a.bne(S5, ZERO, "row");
+    a.label("colnext");
+    a.addi(S7, S7, 4);
+    a.addi(S9, S9, 1);
+    a.bne(S9, S8, "col");
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}

@@ -1,0 +1,38 @@
+//! # SSSR — Sparse Stream Semantic Registers, reproduced in software
+//!
+//! This crate reproduces Scheffler et al., *"Sparse Stream Semantic
+//! Registers: A Lightweight ISA Extension Accelerating General Sparse
+//! Linear Algebra"* (IEEE TPDS 2023), as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! - [`sim`] — a cycle-level microarchitectural simulator of the RISC-V
+//!   Snitch core complex and eight-core cluster, extended with SSSRs
+//!   (indirection, intersection, union) exactly as §2 of the paper
+//!   describes: address generators, data/index FIFOs, shared-port
+//!   round-robin arbitration, index comparator, FREP hardware loop,
+//!   banked TCDM, cluster DMA, instruction cache, and an HBM2E DRAM
+//!   channel model.
+//! - [`kernels`] — the paper's hand-optimized kernel library (§3.2):
+//!   BASE / SSR / SSSR variants of sparse-dense and sparse-sparse
+//!   vector and matrix ops for 8/16/32-bit index types.
+//! - [`coordinator`] — the parallel scaleout (§4.2): row chunking over
+//!   worker cores and double-buffered DMA data movement.
+//! - [`runtime`] — the PJRT golden-model runtime: loads AOT-compiled
+//!   JAX/Pallas artifacts (HLO text) and executes them on the XLA CPU
+//!   client to cross-check simulator numerics.
+//! - [`model`] — analytical area/timing (GF12LP+-calibrated) and
+//!   utilization-scaled energy models (§4.3, §4.4).
+//! - [`formats`], [`matgen`] — sparse tensor formats and the
+//!   deterministic matrix corpus standing in for SuiteSparse.
+//! - [`harness`] — regenerates every table and figure of the paper's
+//!   evaluation.
+
+pub mod sim;
+pub mod formats;
+pub mod matgen;
+pub mod kernels;
+pub mod coordinator;
+pub mod runtime;
+pub mod model;
+pub mod harness;
+pub mod util;

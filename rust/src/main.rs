@@ -1,0 +1,172 @@
+//! `repro` — the SSSR reproduction CLI.
+//!
+//! Subcommands regenerate individual paper figures/tables, run single
+//! kernels, and verify the simulator against the AOT JAX/Pallas golden
+//! models via PJRT. (Argument parsing is hand-rolled: the offline build
+//! environment only vendors the `xla` closure, no clap.)
+
+use std::path::Path;
+
+use sssr::harness as h;
+use sssr::kernels::driver::{run_smxdv_sized, run_svxdv, run_svxsv};
+use sssr::kernels::{IdxWidth, Variant};
+use sssr::matgen;
+use sssr::runtime::Runtime;
+
+const USAGE: &str = "\
+repro — Sparse Stream Semantic Registers reproduction
+
+USAGE:
+    repro <command> [args]
+
+COMMANDS:
+    fig 4a|4b|4c|4d|4e|4f|5a|5b|6a|6b|7|8a|8b   regenerate one figure
+    table 1|2|3                                  regenerate one table
+    kernel <name> <variant>                      run one kernel demo
+                                                 (names: svxdv svxsv smxdv;
+                                                  variants: base ssr sssr)
+    verify [manifest.json]                       simulator vs PJRT golden models
+    all                                          every figure and table
+
+ENV:
+    REPRO_FULL=1    full paper-size sweeps (default: quick)";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut it = args.iter().map(|s| s.as_str());
+    match it.next() {
+        Some("fig") => match it.next() {
+            Some("4a") => h::print_util_rows("Fig. 4a", &h::fig4a()),
+            Some("4b") => h::print_util_rows("Fig. 4b", &h::fig4b()),
+            Some("4c") => h::print_speedup_rows("Fig. 4c", &h::fig4c()),
+            Some("4d") => h::print_density_rows("Fig. 4d", &h::fig4d()),
+            Some("4e") => h::print_density_rows("Fig. 4e", &h::fig4e()),
+            Some("4f") => h::print_matsv_rows("Fig. 4f", &h::fig4f()),
+            Some("5a") => h::print_cluster_rows("Fig. 5a", &h::fig5a()),
+            Some("5b") => h::print_cluster_rows("Fig. 5b", &h::fig5b()),
+            Some("6a") => h::print_sensitivity_rows("Fig. 6a", "Gb/s/pin", &h::fig6a()),
+            Some("6b") => h::print_sensitivity_rows("Fig. 6b", "cycles", &h::fig6b()),
+            Some("7") => h::print_fig7(),
+            Some("8a") => h::print_energy_rows("Fig. 8a", &h::fig8("smxdv")),
+            Some("8b") => h::print_energy_rows("Fig. 8b", &h::fig8("smxsv")),
+            other => die(&format!("unknown figure {other:?}")),
+        },
+        Some("table") => match it.next() {
+            Some("1") => print_table1(),
+            Some("2") => {
+                let rows = h::fig5a();
+                h::print_table2(h::table2_ours(&rows));
+            }
+            Some("3") => h::print_table3(),
+            other => die(&format!("unknown table {other:?}")),
+        },
+        Some("kernel") => {
+            let name = it.next().unwrap_or("svxdv").to_string();
+            let variant = match it.next().unwrap_or("sssr") {
+                "base" => Variant::Base,
+                "ssr" => Variant::Ssr,
+                "sssr" => Variant::Sssr,
+                v => die(&format!("unknown variant {v}")),
+            };
+            kernel_demo(&name, variant);
+        }
+        Some("verify") => {
+            let path = args.get(1).cloned().unwrap_or("artifacts/manifest.json".into());
+            verify(Path::new(&path));
+        }
+        Some("all") => {
+            h::print_util_rows("Fig. 4a", &h::fig4a());
+            h::print_util_rows("Fig. 4b", &h::fig4b());
+            h::print_speedup_rows("Fig. 4c", &h::fig4c());
+            h::print_density_rows("Fig. 4d", &h::fig4d());
+            h::print_density_rows("Fig. 4e", &h::fig4e());
+            h::print_matsv_rows("Fig. 4f", &h::fig4f());
+            let a = h::fig5a();
+            h::print_cluster_rows("Fig. 5a", &a);
+            h::print_cluster_rows("Fig. 5b", &h::fig5b());
+            h::print_sensitivity_rows("Fig. 6a", "Gb/s/pin", &h::fig6a());
+            h::print_sensitivity_rows("Fig. 6b", "cycles", &h::fig6b());
+            h::print_fig7();
+            h::print_energy_rows("Fig. 8a", &h::fig8("smxdv"));
+            h::print_energy_rows("Fig. 8b", &h::fig8("smxsv"));
+            print_table1();
+            h::print_table2(h::table2_ours(&a));
+            h::print_table3();
+        }
+        _ => println!("{USAGE}"),
+    }
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}\n\n{USAGE}");
+    std::process::exit(1)
+}
+
+fn print_table1() {
+    println!("\n== Table 1: Snitch cluster parameters ==");
+    let cfg = sssr::sim::ClusterCfg::paper_cluster();
+    println!("worker core count p      : {}", cfg.cores);
+    println!("narrow width n           : 64 bit");
+    println!("wide (DMA) width w       : 512 bit");
+    println!("memory bank count k      : {}", cfg.banks);
+    println!("TCDM size D              : {} KiB", cfg.tcdm_bytes >> 10);
+    println!("L1 I$ size I             : 8 KiB");
+    println!(
+        "DRAM                     : HBM2E channel, {} Gb/s/pin, {} cyc latency",
+        cfg.dram_gbps_pin, cfg.dram_latency
+    );
+    println!("interconnect latency     : {} cycles one-way", cfg.ic_latency);
+}
+
+fn kernel_demo(name: &str, variant: Variant) {
+    match name {
+        "svxdv" => {
+            let a = matgen::random_spvec(1, 4096, 1024);
+            let b = matgen::random_dense(2, 4096);
+            let (dot, rep) = run_svxdv(variant, IdxWidth::U16, &a, &b, false);
+            println!(
+                "svxdv[{}]: dot={dot:.6}, {} cycles, {:.1} % FPU utilization",
+                variant.name(),
+                rep.cycles,
+                100.0 * rep.utilization
+            );
+        }
+        "svxsv" => {
+            let a = matgen::random_spvec(3, 20_000, 2000);
+            let b = matgen::random_spvec(4, 20_000, 2000);
+            let (dot, rep) = run_svxsv(variant, IdxWidth::U16, &a, &b);
+            println!(
+                "svxsv[{}]: dot={dot:.6}, {} cycles ({} matches)",
+                variant.name(),
+                rep.cycles,
+                rep.payload
+            );
+        }
+        "smxdv" => {
+            let m = matgen::mycielskian(10);
+            let b = matgen::random_dense(5, m.ncols);
+            let (_, rep) = run_smxdv_sized(variant, IdxWidth::U16, &m, &b, 16 << 20);
+            println!(
+                "smxdv[{}] on mycielskian10: {} cycles, {:.1} % FPU utilization",
+                variant.name(),
+                rep.cycles,
+                100.0 * rep.utilization
+            );
+        }
+        other => die(&format!("unknown kernel {other}")),
+    }
+}
+
+/// Cross-check the simulator against every PJRT-executed golden model.
+fn verify(manifest: &Path) {
+    let rt = match Runtime::load(manifest) {
+        Ok(rt) => rt,
+        Err(e) => die(&format!("loading artifacts: {e:#} (run `make artifacts`)")),
+    };
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifacts: {:?}", rt.names());
+    match sssr::runtime::golden::verify_all(&rt) {
+        Ok(n) => println!("golden verification: {n} checks OK (simulator == XLA within 1e-9)"),
+        Err(e) => die(&format!("{e:#}")),
+    }
+}

@@ -1,0 +1,346 @@
+//! Deterministic workload generators standing in for the SuiteSparse
+//! corpus (§4: "real-world-problem matrices ... 2k to 3.2k columns and
+//! 2.8k to 543k nonzeros") and for the generated sparse/dense vectors.
+//!
+//! Where the paper's matrix has an exact deterministic construction we
+//! build it bit-exactly (the Mycielskian graphs — `mycielskian12` is the
+//! peak-speedup matrix of §4.2.1). The rest of the corpus is covered by
+//! structurally similar generators: FEM stencils (banded, regular),
+//! R-MAT power-law graphs (skewed degree), economics-style block
+//! structure, and uniform random patterns, parameterized to span the
+//! paper's n̄_nz (1..180) and size ranges.
+
+use crate::formats::{Csr, SpVec};
+use crate::util::Pcg;
+
+/// Generate a sparse vector with `nnz` uniformly distributed positions
+/// and normally distributed values (§4).
+pub fn random_spvec(seed: u64, dim: usize, nnz: usize) -> SpVec {
+    let mut r = Pcg::new(seed);
+    let idcs: Vec<u32> = r.distinct_sorted(nnz, dim).iter().map(|&x| x as u32).collect();
+    let vals: Vec<f64> = (0..nnz).map(|_| r.normal()).collect();
+    SpVec::new(dim, idcs, vals)
+}
+
+/// Dense vector with normally distributed values.
+pub fn random_dense(seed: u64, dim: usize) -> Vec<f64> {
+    let mut r = Pcg::new(seed);
+    (0..dim).map(|_| r.normal()).collect()
+}
+
+/// The Mycielski construction: `mycielskian(k)` is the graph M_k with
+/// M_2 = K_2; |V(M_k)| = 3*2^(k-2) - 1. `mycielskian12` from SuiteSparse
+/// is the adjacency matrix of M_12 (3071 nodes, 530 k nonzeros,
+/// n̄_nz ≈ 173) — the paper's peak-speedup matrix. Values are set to 1.0
+/// (adjacency) then jittered deterministically to avoid degenerate FP
+/// behaviour.
+pub fn mycielskian(k: u32) -> Csr {
+    assert!((2..=12).contains(&k), "mycielskian order out of range");
+    // adjacency list construction
+    let mut edges: Vec<(u32, u32)> = vec![(0, 1)];
+    let mut n: u32 = 2;
+    for _ in 2..k {
+        // vertices 0..n are U; add shadow W = n..2n and apex z = 2n.
+        let mut new_edges = edges.clone();
+        for &(a, b) in &edges {
+            new_edges.push((a, b + n));
+            new_edges.push((b, a + n));
+        }
+        for w in n..2 * n {
+            new_edges.push((w, 2 * n));
+        }
+        edges = new_edges;
+        n = 2 * n + 1;
+    }
+    let mut t = Vec::with_capacity(edges.len() * 2);
+    for &(a, b) in &edges {
+        // deterministic value from the edge id
+        let v = 1.0 + 0.001 * ((a.wrapping_mul(31).wrapping_add(b) % 97) as f64);
+        t.push((a, b, v));
+        t.push((b, a, v));
+    }
+    Csr::from_triplets(n as usize, n as usize, t)
+}
+
+/// 5-point 2D Laplacian stencil on an `nx` x `ny` grid (FEM/PDE-style
+/// SuiteSparse matrices: symmetric, banded, n̄_nz ≈ 5).
+pub fn stencil2d(nx: usize, ny: usize) -> Csr {
+    let n = nx * ny;
+    let mut t = Vec::with_capacity(5 * n);
+    let id = |x: usize, y: usize| (y * nx + x) as u32;
+    for y in 0..ny {
+        for x in 0..nx {
+            let c = id(x, y);
+            t.push((c, c, 4.0));
+            if x > 0 {
+                t.push((c, id(x - 1, y), -1.0));
+            }
+            if x + 1 < nx {
+                t.push((c, id(x + 1, y), -1.0));
+            }
+            if y > 0 {
+                t.push((c, id(x, y - 1), -1.0));
+            }
+            if y + 1 < ny {
+                t.push((c, id(x, y + 1), -1.0));
+            }
+        }
+    }
+    Csr::from_triplets(n, n, t)
+}
+
+/// 27-point 3D stencil (higher n̄_nz ≈ 27 FEM-style).
+pub fn stencil3d(nx: usize, ny: usize, nz: usize) -> Csr {
+    let n = nx * ny * nz;
+    let mut t = Vec::with_capacity(27 * n);
+    let id = |x: usize, y: usize, z: usize| ((z * ny + y) * nx + x) as u32;
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let c = id(x, y, z);
+                for dz in -1i64..=1 {
+                    for dy in -1i64..=1 {
+                        for dx in -1i64..=1 {
+                            let (xx, yy, zz) = (x as i64 + dx, y as i64 + dy, z as i64 + dz);
+                            if xx < 0 || yy < 0 || zz < 0
+                                || xx >= nx as i64 || yy >= ny as i64 || zz >= nz as i64
+                            {
+                                continue;
+                            }
+                            let w = if (dx, dy, dz) == (0, 0, 0) { 26.0 } else { -1.0 };
+                            t.push((c, id(xx as usize, yy as usize, zz as usize), w));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Csr::from_triplets(n, n, t)
+}
+
+/// R-MAT power-law graph generator (skewed row lengths like web/social
+/// graphs in SuiteSparse).
+pub fn rmat(seed: u64, scale: u32, edge_factor: usize) -> Csr {
+    let n = 1usize << scale;
+    let n_edges = n * edge_factor;
+    let (a, b, c) = (0.57, 0.19, 0.19);
+    let mut r = Pcg::new(seed);
+    let mut t = Vec::with_capacity(n_edges);
+    for _ in 0..n_edges {
+        let (mut x, mut y) = (0usize, 0usize);
+        for lvl in (0..scale).rev() {
+            let p = r.f64();
+            let (dx, dy) = if p < a {
+                (0, 0)
+            } else if p < a + b {
+                (0, 1)
+            } else if p < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            x |= dx << lvl;
+            y |= dy << lvl;
+        }
+        t.push((x as u32, y as u32, 1.0 + r.f64()));
+    }
+    Csr::from_triplets(n, n, t)
+}
+
+/// Banded matrix with `band` diagonals each side (economics / circuit
+/// style regularity).
+pub fn banded(seed: u64, n: usize, band: usize) -> Csr {
+    let mut r = Pcg::new(seed);
+    let mut t = vec![];
+    for i in 0..n {
+        let lo = i.saturating_sub(band);
+        let hi = (i + band + 1).min(n);
+        for j in lo..hi {
+            if i == j || r.f64() < 0.7 {
+                t.push((i as u32, j as u32, r.normal()));
+            }
+        }
+    }
+    Csr::from_triplets(n, n, t)
+}
+
+/// Uniform random matrix with an exact global nonzero count.
+pub fn random_csr(seed: u64, nrows: usize, ncols: usize, nnz: usize) -> Csr {
+    let mut r = Pcg::new(seed);
+    let cells = r.distinct_sorted(nnz, nrows * ncols);
+    let t: Vec<(u32, u32, f64)> = cells
+        .iter()
+        .map(|&cell| {
+            let (row, col) = ((cell as usize / ncols) as u32, (cell as usize % ncols) as u32);
+            (row, col, r.normal())
+        })
+        .collect();
+    Csr::from_triplets(nrows, ncols, t)
+}
+
+/// A named matrix of the evaluation corpus.
+pub struct CorpusEntry {
+    pub name: &'static str,
+    pub matrix: Csr,
+}
+
+/// The evaluation corpus: spans the paper's column range (2k–3.2k),
+/// nnz range (2.8k–543k) and n̄_nz range (~1–173), mixing exact
+/// SuiteSparse reconstructions (Mycielskians) with structural stand-ins.
+/// Sorted by average row nonzeros (the x-axis of Figs. 4c/4f/5a).
+pub fn corpus() -> Vec<CorpusEntry> {
+    let mut v = vec![
+        // n̄_nz ~ 1: ultra-sparse permutation-like (economics flow)
+        CorpusEntry { name: "perm3000", matrix: random_csr(11, 3000, 3000, 3000) },
+        CorpusEntry { name: "rand2k_6k", matrix: random_csr(12, 2048, 2048, 6144) },
+        // FEM 2D: n̄_nz ~ 5 (cryg2500-like: 2500 cols, 12.3k nnz)
+        CorpusEntry { name: "cryg2500", matrix: stencil2d(50, 50) },
+        CorpusEntry { name: "fem2d_56", matrix: stencil2d(56, 56) },
+        // power-law graphs: n̄_nz ~ 8–16, skewed
+        CorpusEntry { name: "rmat11_8", matrix: rmat(13, 11, 8) },
+        CorpusEntry { name: "rmat11_16", matrix: rmat(14, 11, 16) },
+        // banded/circuit: n̄_nz ~ 14
+        CorpusEntry { name: "band3000_10", matrix: banded(15, 3000, 10) },
+        // FEM 3D: n̄_nz ~ 24 (cavity12-like density)
+        CorpusEntry { name: "cavity12", matrix: stencil3d(14, 14, 14) },
+        CorpusEntry { name: "fem3d_13", matrix: stencil3d(13, 13, 13) },
+        // dense-ish random: n̄_nz ~ 32, 64
+        CorpusEntry { name: "rand2k_64k", matrix: random_csr(16, 2048, 2048, 65536) },
+        CorpusEntry { name: "rand2k_128k", matrix: random_csr(17, 2048, 2048, 131072) },
+        // Mycielskian graphs (exact SuiteSparse constructions)
+        CorpusEntry { name: "mycielskian9", matrix: mycielskian(9) },
+        CorpusEntry { name: "mycielskian10", matrix: mycielskian(10) },
+        CorpusEntry { name: "mycielskian11", matrix: mycielskian(11) },
+        CorpusEntry { name: "mycielskian12", matrix: mycielskian(12) },
+    ];
+    v.sort_by(|a, b| a.matrix.avg_row_nnz().partial_cmp(&b.matrix.avg_row_nnz()).unwrap());
+    v
+}
+
+/// The tiny `Ragusa18` matrix (§3.2.1 edge case: 64 nonzeros): a small
+/// directed-graph matrix stand-in with the published dimensions.
+pub fn ragusa18() -> Csr {
+    random_csr(18, 23, 23, 64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mycielskian_sizes_match_theory() {
+        // |V(M_k)| = 3 * 2^(k-2) - 1
+        for k in 2..=12u32 {
+            let m = mycielskian(k);
+            let want = 3 * (1usize << (k - 2)) - 1;
+            assert_eq!(m.nrows, want, "M_{k}");
+        }
+    }
+
+    #[test]
+    fn mycielskian12_matches_suitesparse_stats() {
+        // §4.2.1: mycielskian12 has n̄_nz = 133 and 4.3 % density.
+        // |E(M_k)| = 3|E(M_{k-1})| + |V(M_{k-1})| gives 203,600 edges
+        // -> 407,200 stored nonzeros over 3071 rows.
+        let m = mycielskian(12);
+        assert_eq!(m.nrows, 3071);
+        assert_eq!(m.nnz(), 407_200);
+        let nnz_row = m.avg_row_nnz();
+        assert!((132.0..134.0).contains(&nnz_row), "n̄_nz {nnz_row}");
+        let d = m.density();
+        assert!((0.042..0.045).contains(&d), "density {d}");
+    }
+
+    #[test]
+    fn mycielskian_is_symmetric_pattern() {
+        let m = mycielskian(6);
+        let t = m.transpose();
+        assert_eq!(m.idcs, t.idcs);
+        assert_eq!(m.ptrs, t.ptrs);
+    }
+
+    #[test]
+    fn mycielskian_triangle_free() {
+        // Mycielski graphs are triangle-free by construction.
+        let m = mycielskian(7);
+        let d = m.to_dense();
+        let n = m.nrows;
+        for a in 0..n {
+            for b in (a + 1)..n {
+                if d[a][b] == 0.0 {
+                    continue;
+                }
+                for c in (b + 1)..n {
+                    assert!(
+                        d[a][c] == 0.0 || d[b][c] == 0.0,
+                        "triangle {a},{b},{c} found"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stencil2d_row_counts() {
+        let m = stencil2d(10, 10);
+        assert_eq!(m.nrows, 100);
+        // interior rows have 5 nonzeros, corners 3
+        let (i, _) = m.row(5 * 10 + 5);
+        assert_eq!(i.len(), 5);
+        let (c, _) = m.row(0);
+        assert_eq!(c.len(), 3);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn stencil3d_interior_has_27() {
+        let m = stencil3d(5, 5, 5);
+        let center = (2 * 5 + 2) * 5 + 2;
+        let (i, _) = m.row(center);
+        assert_eq!(i.len(), 27);
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let m = rmat(7, 10, 8);
+        let rows: Vec<usize> = (0..m.nrows).map(|r| m.row(r).0.len()).collect();
+        let max = *rows.iter().max().unwrap();
+        let mean = rows.iter().sum::<usize>() as f64 / rows.len() as f64;
+        assert!(max as f64 > 5.0 * mean, "max {max} vs mean {mean}: not skewed");
+    }
+
+    #[test]
+    fn random_csr_exact_nnz() {
+        let m = random_csr(3, 100, 200, 999);
+        assert_eq!(m.nnz(), 999);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn random_spvec_deterministic() {
+        let a = random_spvec(5, 1000, 50);
+        let b = random_spvec(5, 1000, 50);
+        assert_eq!(a, b);
+        assert_eq!(a.nnz(), 50);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn corpus_spans_paper_ranges() {
+        let c = corpus();
+        assert!(c.len() >= 12);
+        let n_nz: Vec<f64> = c.iter().map(|e| e.matrix.avg_row_nnz()).collect();
+        assert!(n_nz.first().unwrap() < &3.0);
+        assert!(n_nz.last().unwrap() > &100.0);
+        // sorted ascending
+        for w in n_nz.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        for e in &c {
+            e.matrix.validate().unwrap();
+            // the paper's corpus is 2k–3.2k columns; the smaller
+            // Mycielskians extend the sweep to lower n̄_nz.
+            assert!(e.matrix.ncols >= 300 && e.matrix.ncols <= 4096, "{}", e.name);
+        }
+    }
+}

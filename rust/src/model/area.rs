@@ -1,0 +1,232 @@
+//! GF12LP+-calibrated area and timing model of the SSSR streamer
+//! (Fig. 7) and its cluster-level impact (§4.3).
+//!
+//! Published calibration points:
+//! - default streamer (I+I+E with comparator + union): **30 kGE** total;
+//!   each ISSR contributes 9.7 kGE, the ESSR 8.8 kGE;
+//! - indirection capability alone adds 3.0 kGE (16 %) per ISSR;
+//! - intersection between two ISSRs adds another 2.1 kGE;
+//! - the full streamer is an 11 kGE (60 %) overhead over the 19 kGE
+//!   baseline SSR streamer, and raises the minimum clock period from
+//!   367 ps to 446 ps;
+//! - cluster-level: +1.8 % cell area over regular SSRs.
+
+/// What occupies one streamer slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotKind {
+    /// Classic affine-only SSR.
+    Ssr,
+    /// Indirection-capable ISSR.
+    Issr,
+    /// ISSR that also shares the index comparator (I* in Fig. 7b).
+    IssrCmp,
+    /// Egress SSR.
+    Essr,
+}
+
+/// A streamer configuration (Fig. 7b sweeps these).
+#[derive(Clone, Debug)]
+pub struct StreamerCfg {
+    pub slots: Vec<SlotKind>,
+    /// Union support (zero injection + egress joint-index forwarding).
+    pub union: bool,
+}
+
+impl StreamerCfg {
+    /// The default SSSR streamer: two comparator-sharing ISSRs + ESSR.
+    pub fn default_sssr() -> Self {
+        StreamerCfg {
+            slots: vec![SlotKind::IssrCmp, SlotKind::IssrCmp, SlotKind::Essr],
+            union: true,
+        }
+    }
+
+    /// The baseline three-SSR streamer it replaces.
+    pub fn baseline_ssr() -> Self {
+        StreamerCfg { slots: vec![SlotKind::Ssr; 3], union: false }
+    }
+
+    /// Minimal sparse-dense multiply config (§3.1): one ISSR + one SSR.
+    pub fn sparse_dense_mul() -> Self {
+        StreamerCfg { slots: vec![SlotKind::Issr, SlotKind::Ssr], union: false }
+    }
+
+    /// Minimal sparse-sparse multiply config: two comparator ISSRs.
+    pub fn sparse_sparse_mul() -> Self {
+        StreamerCfg { slots: vec![SlotKind::IssrCmp, SlotKind::IssrCmp], union: false }
+    }
+}
+
+// ---- calibration constants (kGE) ------------------------------------
+/// Baseline SSR streamer: 19 kGE for 3 SSRs (shared config/register
+/// switch logic included).
+const SHARED_LOGIC: f64 = 1.8;
+/// One plain SSR slot (data mover + affine generator + FIFOs).
+pub const SSR_KGE: f64 = (19.0 - SHARED_LOGIC) / 3.0;
+/// Indirection addition per ISSR (§4.3: 3.0 kGE, 16 %).
+pub const INDIRECTION_KGE: f64 = 3.0;
+/// Comparator share per comparator-attached ISSR pair (2.1 kGE total).
+pub const COMPARATOR_KGE: f64 = 2.1;
+/// ESSR slot (egress generator + coalescer): 8.8 kGE.
+pub const ESSR_KGE: f64 = 8.8;
+/// Union support (zero injection muxes, stream-control queue, ESSR
+/// joint-index path): the remainder towards the measured 30 kGE.
+const UNION_KGE: f64 = 0.3;
+
+/// Plain indirection-capable ISSR slot area (no comparator share).
+pub fn issr_kge() -> f64 {
+    SSR_KGE + INDIRECTION_KGE
+}
+
+/// Comparator-attached ISSR (the published 9.7 kGE Fig. 7a component =
+/// plain ISSR + half the 2.1 kGE comparator).
+pub fn issr_cmp_kge() -> f64 {
+    issr_kge() + COMPARATOR_KGE / 2.0
+}
+
+/// Total streamer area in kGE for a configuration.
+pub fn streamer_area(cfg: &StreamerCfg) -> f64 {
+    let mut kge = SHARED_LOGIC;
+    let mut cmp_slots = 0;
+    for s in &cfg.slots {
+        kge += match s {
+            SlotKind::Ssr => SSR_KGE,
+            SlotKind::Issr => issr_kge(),
+            SlotKind::IssrCmp => {
+                cmp_slots += 1;
+                issr_cmp_kge()
+            }
+            SlotKind::Essr => ESSR_KGE,
+        };
+    }
+    assert!(cmp_slots == 0 || cmp_slots == 2, "exactly two ISSRs may share the comparator (§2.3)");
+    if cfg.union {
+        kge += UNION_KGE;
+    }
+    kge
+}
+
+/// Minimum achievable clock period (ps) for a configuration (Fig. 7b):
+/// the index-matching path is critical.
+pub fn streamer_min_period_ps(cfg: &StreamerCfg) -> f64 {
+    let has_cmp = cfg.slots.iter().filter(|s| **s == SlotKind::IssrCmp).count() == 2;
+    let has_indir = cfg.slots.iter().any(|s| matches!(s, SlotKind::Issr | SlotKind::IssrCmp));
+    let base = 367.0;
+    let mut t: f64 = base;
+    if has_indir {
+        t = t.max(405.0); // index shift+add path
+    }
+    if has_cmp {
+        t = t.max(428.0); // comparator decision path
+    }
+    if cfg.union && has_cmp {
+        t = t.max(446.0); // zero-injection mux after compare
+    }
+    t
+}
+
+/// Area (kGE) when synthesized against a target period (Fig. 7c): area
+/// grows as the target approaches the minimum period (timing pressure
+/// forces upsizing), and relaxes toward a floor for slow clocks.
+pub fn streamer_area_at_period(cfg: &StreamerCfg, target_ps: f64) -> f64 {
+    let t_min = streamer_min_period_ps(cfg);
+    let a_min = streamer_area(cfg); // area at the 1 GHz (1000 ps) target
+    if target_ps < t_min {
+        return f64::NAN; // timing not met
+    }
+    // +25 % at the minimum period, relaxing exponentially (graceful
+    // scaling, §4.3)
+    let pressure = (-(target_ps - t_min) / 180.0).exp();
+    a_min * (1.0 + 0.25 * pressure)
+}
+
+// ---- cluster-level (Table 1 cluster, §4.3) ----------------------------
+/// Snitch CC area without a streamer (core + FPU + wiring), kGE.
+pub const CC_KGE: f64 = 135.0;
+/// Non-CC cluster area (TCDM banks + interconnect + I$ + DMA), kGE.
+pub const CLUSTER_UNCORE_KGE: f64 = 3660.0;
+
+/// Total cluster area (kGE) with the given per-core streamer.
+pub fn cluster_area(streamer: &StreamerCfg, cores: usize) -> f64 {
+    CLUSTER_UNCORE_KGE + cores as f64 * (CC_KGE + streamer_area(streamer))
+}
+
+/// Relative cluster area overhead of SSSR streamers over baseline SSRs.
+pub fn cluster_overhead_fraction(cores: usize) -> f64 {
+    let sssr = cluster_area(&StreamerCfg::default_sssr(), cores);
+    let ssr = cluster_area(&StreamerCfg::baseline_ssr(), cores);
+    (sssr - ssr) / ssr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_streamer_matches_published_30kge() {
+        let a = streamer_area(&StreamerCfg::default_sssr());
+        assert!((29.0..31.0).contains(&a), "streamer area {a} kGE");
+    }
+
+    #[test]
+    fn issr_essr_match_published_components() {
+        // Fig. 7a: each comparator-attached ISSR contributes 9.7 kGE
+        let i = issr_cmp_kge();
+        assert!((9.3..10.1).contains(&i), "ISSR {i} kGE");
+        assert!((8.7..8.9).contains(&ESSR_KGE));
+        // indirection alone adds 3.0 kGE (16 %) per ISSR
+        assert!((issr_kge() - SSR_KGE - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn baseline_is_19kge_and_overhead_60pct() {
+        let base = streamer_area(&StreamerCfg::baseline_ssr());
+        assert!((18.5..19.5).contains(&base), "baseline {base}");
+        let full = streamer_area(&StreamerCfg::default_sssr());
+        let overhead = (full - base) / base;
+        assert!((0.52..0.68).contains(&overhead), "overhead {overhead}");
+    }
+
+    #[test]
+    fn min_periods_match_fig7b() {
+        assert_eq!(streamer_min_period_ps(&StreamerCfg::baseline_ssr()), 367.0);
+        assert_eq!(streamer_min_period_ps(&StreamerCfg::default_sssr()), 446.0);
+        // all configs meet the 1 GHz Snitch target
+        assert!(streamer_min_period_ps(&StreamerCfg::default_sssr()) < 1000.0);
+    }
+
+    #[test]
+    fn area_scales_gracefully_with_timing_pressure() {
+        let cfg = StreamerCfg::default_sssr();
+        let relaxed = streamer_area_at_period(&cfg, 1000.0);
+        let tight = streamer_area_at_period(&cfg, 446.0);
+        assert!(tight > relaxed * 1.15);
+        assert!(streamer_area_at_period(&cfg, 400.0).is_nan());
+        // monotone between the two
+        let mut prev = tight;
+        for t in [500.0, 600.0, 700.0, 800.0, 900.0] {
+            let a = streamer_area_at_period(&cfg, t);
+            assert!(a <= prev + 1e-9, "not monotone at {t}");
+            prev = a;
+        }
+    }
+
+    #[test]
+    fn cluster_overhead_is_about_1_8_pct() {
+        let f = cluster_overhead_fraction(8);
+        assert!((0.015..0.021).contains(&f), "cluster overhead {f}");
+    }
+
+    #[test]
+    fn tailored_configs_are_cheaper() {
+        let full = streamer_area(&StreamerCfg::default_sssr());
+        assert!(streamer_area(&StreamerCfg::sparse_dense_mul()) < full * 0.7);
+        assert!(streamer_area(&StreamerCfg::sparse_sparse_mul()) < full);
+    }
+
+    #[test]
+    #[should_panic(expected = "exactly two ISSRs")]
+    fn single_comparator_issr_rejected() {
+        streamer_area(&StreamerCfg { slots: vec![SlotKind::IssrCmp], union: false });
+    }
+}

@@ -1,0 +1,14 @@
+//! Analytical area/timing and energy models (§4.3, §4.4).
+//!
+//! The paper's numbers come from Synopsys DC / Fusion Compiler /
+//! PrimeTime runs in GlobalFoundries 12LP+ (TT, 0.8 V, 25 °C, 1 GHz).
+//! We reproduce the *composition and scaling* of those results from the
+//! published per-component data points (Fig. 7) and calibrated per-op
+//! energies scaled by simulator-measured activities (Fig. 8) — see
+//! DESIGN.md §2 for the substitution rationale.
+
+pub mod area;
+pub mod energy;
+
+pub use area::{streamer_area, streamer_min_period_ps, StreamerCfg, SlotKind};
+pub use energy::{EnergyModel, EnergyReport};

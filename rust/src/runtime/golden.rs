@@ -1,0 +1,203 @@
+//! Golden verification: the cycle-level simulator and the XLA-executed
+//! JAX/Pallas artifacts must agree on every kernel's numerics.
+//!
+//! For each artifact we generate a random workload at the manifest's
+//! fixed shapes, execute it on the PJRT CPU client, run the equivalent
+//! kernel in the simulator (SSSR variant — the paper's contribution
+//! path), and compare element-wise.
+
+use anyhow::{bail, Context, Result};
+
+use crate::formats::{Csr, SpVec};
+use crate::kernels::driver::{run_smxdv, run_smxsv, run_svpsv, run_svxdv, run_svxsv};
+use crate::kernels::{IdxWidth, Variant};
+use crate::util::Pcg;
+
+use super::Runtime;
+
+/// ELL-pack a CSR matrix to the artifact's fixed [rows, k] shape,
+/// returning (vals, idcs-as-f64) flattened row-major.
+fn ell_pack(m: &Csr, rows: usize, k: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(m.nrows <= rows);
+    let mut vals = vec![0.0; rows * k];
+    let mut idcs = vec![0.0; rows * k];
+    for r in 0..m.nrows {
+        let (ri, rv) = m.row(r);
+        assert!(ri.len() <= k, "row {r} exceeds ELL width");
+        for (j, (&c, &v)) in ri.iter().zip(rv).enumerate() {
+            vals[r * k + j] = v;
+            idcs[r * k + j] = c as f64;
+        }
+    }
+    (vals, idcs)
+}
+
+/// Pad a fiber to the artifact's fixed length.
+fn fiber_pack(v: &SpVec, k: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(v.nnz() <= k);
+    let mut vals = vec![0.0; k];
+    let mut idcs = vec![0.0; k];
+    for (i, (&ix, &vv)) in v.idcs.iter().zip(&v.vals).enumerate() {
+        vals[i] = vv;
+        idcs[i] = ix as f64;
+    }
+    (vals, idcs)
+}
+
+fn check_close(got: &[f64], want: &[f64], what: &str) -> Result<()> {
+    if got.len() != want.len() {
+        bail!("{what}: length {} vs {}", got.len(), want.len());
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = 1e-9 * w.abs().max(1.0);
+        if (g - w).abs() > tol {
+            bail!("{what}[{i}]: sim {g} vs xla {w}");
+        }
+    }
+    Ok(())
+}
+
+/// A random CSR bounded by an ELL shape.
+fn random_ell_csr(seed: u64, rows: usize, k: usize, cols: usize) -> Csr {
+    let mut r = Pcg::new(seed);
+    let mut ptrs = vec![0u32];
+    let mut idcs = vec![];
+    let mut vals = vec![];
+    for _ in 0..rows {
+        let w = r.below(k as u64 + 1) as usize;
+        let cols_here = r.distinct_sorted(w, cols);
+        for c in cols_here {
+            idcs.push(c as u32);
+            vals.push(r.normal());
+        }
+        ptrs.push(idcs.len() as u32);
+    }
+    Csr::new(rows, cols, ptrs, idcs, vals)
+}
+
+/// Run every golden check; returns the number of comparisons performed.
+pub fn verify_all(rt: &Runtime) -> Result<usize> {
+    let mut checks = 0usize;
+
+    // ---- spmv: ELL [64,16] x dense [256] --------------------------------
+    if let Some(spec) = rt.manifest.get("spmv") {
+        let (rows, k) = (spec.inputs[0][0], spec.inputs[0][1]);
+        let cols = spec.inputs[2][0];
+        let m = random_ell_csr(11, rows, k, cols);
+        let b = crate::matgen::random_dense(12, cols);
+        let (vals, idcs) = ell_pack(&m, rows, k);
+        let xla = rt
+            .execute_f64("spmv", &[&vals, &idcs, &b])
+            .context("executing spmv artifact")?;
+        let (sim, _) = run_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b);
+        check_close(&sim, &xla[0], "spmv")?;
+        checks += 1;
+    }
+
+    // ---- svxdv: fiber [64] . dense [512] ---------------------------------
+    if let Some(spec) = rt.manifest.get("svxdv") {
+        let k = spec.inputs[0][0];
+        let dim = spec.inputs[2][0];
+        let a = crate::matgen::random_spvec(13, dim, k / 2);
+        let b = crate::matgen::random_dense(14, dim);
+        let (vals, idcs) = fiber_pack(&a, k);
+        let xla = rt.execute_f64("svxdv", &[&vals, &idcs, &b])?;
+        let (sim, _) = run_svxdv(Variant::Sssr, IdxWidth::U16, &a, &b, false);
+        check_close(&[sim], &xla[0], "svxdv")?;
+        checks += 1;
+    }
+
+    // ---- svxsv -----------------------------------------------------------
+    if let Some(spec) = rt.manifest.get("svxsv") {
+        let k = spec.inputs[0][0];
+        let dim = 512; // FIBER_DIM in aot.py
+        let a = crate::matgen::random_spvec(15, dim, k / 2);
+        let b = crate::matgen::random_spvec(16, dim, k - 1);
+        let (av, ai) = fiber_pack(&a, k);
+        let (bv, bi) = fiber_pack(&b, k);
+        let xla = rt.execute_f64("svxsv", &[&av, &ai, &bv, &bi])?;
+        let (sim, _) = run_svxsv(Variant::Sssr, IdxWidth::U16, &a, &b);
+        check_close(&[sim], &xla[0], "svxsv")?;
+        checks += 1;
+    }
+
+    // ---- smxsv ------------------------------------------------------------
+    if let Some(spec) = rt.manifest.get("smxsv") {
+        let (rows, k) = (spec.inputs[0][0], spec.inputs[0][1]);
+        let fk = spec.inputs[2][0];
+        let cols = 256; // SPMV_COLS
+        let m = random_ell_csr(17, rows, k, cols);
+        let b = crate::matgen::random_spvec(18, cols, fk / 2);
+        let (mv, mi) = ell_pack(&m, rows, k);
+        let (bv, bi) = fiber_pack(&b, fk);
+        let xla = rt.execute_f64("smxsv", &[&mv, &mi, &bv, &bi])?;
+        let (sim, _) = run_smxsv(Variant::Sssr, IdxWidth::U16, &m, &b);
+        check_close(&sim, &xla[0], "smxsv")?;
+        checks += 1;
+    }
+
+    // ---- svpsv: dense sum + mask vs recompressed sim fiber ----------------
+    if let Some(spec) = rt.manifest.get("svpsv") {
+        let k = spec.inputs[0][0];
+        let dim = 512;
+        let a = crate::matgen::random_spvec(19, dim, k / 2);
+        let b = crate::matgen::random_spvec(20, dim, k / 3);
+        let (av, ai) = fiber_pack(&a, k);
+        let (bv, bi) = fiber_pack(&b, k);
+        let xla = rt.execute_f64("svpsv", &[&av, &ai, &bv, &bi])?;
+        let (dense, mask) = (&xla[0], &xla[1]);
+        let (sim, _) = run_svpsv(Variant::Sssr, IdxWidth::U16, &a, &b);
+        // re-compress the XLA dense result with its mask and compare
+        let mut xi = vec![];
+        let mut xv = vec![];
+        for i in 0..dim {
+            if mask[i] != 0.0 {
+                xi.push(i as u32);
+                xv.push(dense[i]);
+            }
+        }
+        if xi != sim.idcs {
+            bail!("svpsv pattern mismatch: {} vs {} entries", xi.len(), sim.idcs.len());
+        }
+        check_close(&sim.vals, &xv, "svpsv values")?;
+        checks += 1;
+    }
+
+    // ---- pagerank_step: XLA vs Rust dense reference ------------------------
+    if let Some(spec) = rt.manifest.get("pagerank_step") {
+        let (rows, k) = (spec.inputs[0][0], spec.inputs[0][1]);
+        let m = random_ell_csr(21, rows, k, rows);
+        let rank = crate::matgen::random_dense(22, rows);
+        let (mv, mi) = ell_pack(&m, rows, k);
+        let xla = rt.execute_f64("pagerank_step", &[&mv, &mi, &rank, &[0.85]])?;
+        let contrib = crate::formats::ops::smxdv(&m, &rank);
+        let want: Vec<f64> = contrib
+            .iter()
+            .map(|c| 0.85 * c + 0.15 / rows as f64)
+            .collect();
+        check_close(&xla[0], &want, "pagerank_step")?;
+        checks += 1;
+    }
+
+    // ---- jacobi_step: XLA vs Rust dense reference ---------------------------
+    if let Some(spec) = rt.manifest.get("jacobi_step") {
+        let (rows, k) = (spec.inputs[0][0], spec.inputs[0][1]);
+        let m = random_ell_csr(23, rows, k, rows);
+        let (mv, mi) = ell_pack(&m, rows, k);
+        let diag_inv = crate::matgen::random_dense(24, rows);
+        let b = crate::matgen::random_dense(25, rows);
+        let x = crate::matgen::random_dense(26, rows);
+        let xla = rt.execute_f64("jacobi_step", &[&mv, &mi, &diag_inv, &b, &x])?;
+        let ax = crate::formats::ops::smxdv(&m, &x);
+        let want: Vec<f64> = (0..rows)
+            .map(|i| x[i] + diag_inv[i] * (b[i] - ax[i]))
+            .collect();
+        check_close(&xla[0], &want, "jacobi_step")?;
+        checks += 1;
+    }
+
+    if checks == 0 {
+        bail!("no artifacts found in the manifest");
+    }
+    Ok(checks)
+}

@@ -1,0 +1,158 @@
+//! PJRT golden-model runtime.
+//!
+//! Loads the AOT-compiled JAX/Pallas artifacts (HLO **text**, see
+//! `python/compile/aot.py` and DESIGN.md — text is the interchange
+//! format because jax ≥ 0.5 emits 64-bit-id protos that xla_extension
+//! 0.5.1 rejects), compiles them on the XLA CPU PJRT client, and
+//! executes them. The L3 verification path cross-checks every simulated
+//! kernel result against these executables; Python never runs here.
+
+pub mod golden;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// One entry of the artifact manifest produced by `aot.py`.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: String,
+    /// Input shapes (row-major), all f64.
+    pub inputs: Vec<Vec<usize>>,
+    /// Number of outputs in the result tuple.
+    pub n_outputs: usize,
+}
+
+/// The manifest: artifact specs keyed by name.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {} (run `make artifacts`)", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let dir = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+        let mut entries = vec![];
+        for e in v
+            .get("entries")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let name = e
+                .get("name")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("entry missing name"))?
+                .to_string();
+            let path = e
+                .get("path")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("entry missing path"))?
+                .to_string();
+            let inputs = e
+                .get("inputs")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("entry missing inputs"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .map(|dims| dims.iter().filter_map(|d| d.as_f64()).map(|d| d as usize).collect())
+                        .ok_or_else(|| anyhow!("bad shape"))
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            let n_outputs = e
+                .get("n_outputs")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(1.0) as usize;
+            entries.push(ArtifactSpec { name, path, inputs, n_outputs });
+        }
+        Ok(Manifest { entries, dir })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+/// A loaded+compiled artifact collection on the CPU PJRT client.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load every artifact in the manifest. `manifest_path` is typically
+    /// `artifacts/manifest.json`.
+    pub fn load(manifest_path: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(manifest_path)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = HashMap::new();
+        for e in &manifest.entries {
+            let path = manifest.dir.join(&e.path);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("loading HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {}", e.name))?;
+            exes.insert(e.name.clone(), exe);
+        }
+        Ok(Runtime { manifest, client, exes })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Execute artifact `name` on f64 inputs (flattened row-major, one
+    /// slice per parameter). Returns the flattened outputs.
+    pub fn execute_f64(&self, name: &str, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let exe = &self.exes[name];
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: got {} inputs, expected {}", inputs.len(), spec.inputs.len());
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&spec.inputs) {
+            let n: usize = shape.iter().product();
+            if data.len() != n {
+                bail!("{name}: input length {} != shape {:?}", data.len(), shape);
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims)?;
+            lits.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: the result is always a tuple.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f64>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Default manifest location relative to the repo root.
+pub fn default_manifest_path() -> PathBuf {
+    PathBuf::from("artifacts/manifest.json")
+}
+
+// NOTE: runtime integration tests live in rust/tests/runtime_golden.rs
+// (they require `make artifacts` to have produced the HLO files).

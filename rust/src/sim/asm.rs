@@ -1,0 +1,317 @@
+//! A small label-resolving assembler DSL for the mini-ISA.
+//!
+//! The kernel library (§3.2) is written against this builder, one method
+//! per instruction, mirroring how the paper's kernels are hand-written
+//! RISC-V assembly. Labels are strings; forward references are fixed up
+//! at [`Asm::finish`].
+
+use std::collections::HashMap;
+
+use super::isa::*;
+
+#[derive(Default)]
+pub struct Asm {
+    instrs: Vec<Instr>,
+    labels: HashMap<String, u32>,
+    /// (instruction index, label) pairs awaiting resolution.
+    fixups: Vec<(usize, String)>,
+    text_base: u64,
+}
+
+impl Asm {
+    pub fn new() -> Self {
+        Asm::default()
+    }
+
+    pub fn with_text_base(base: u64) -> Self {
+        Asm { text_base: base, ..Asm::default() }
+    }
+
+    /// Define `name` at the current position.
+    pub fn label(&mut self, name: &str) -> &mut Self {
+        let here = self.instrs.len() as u32;
+        let prev = self.labels.insert(name.to_string(), here);
+        assert!(prev.is_none(), "duplicate label {name}");
+        self
+    }
+
+    pub fn here(&self) -> u32 {
+        self.instrs.len() as u32
+    }
+
+    fn push(&mut self, i: Instr) -> &mut Self {
+        self.instrs.push(i);
+        self
+    }
+
+    fn push_branchy(&mut self, i: Instr, label: &str) -> &mut Self {
+        self.fixups.push((self.instrs.len(), label.to_string()));
+        self.instrs.push(i);
+        self
+    }
+
+    // ---- integer ALU -------------------------------------------------
+    pub fn addi(&mut self, rd: Reg, rs1: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Addi { rd, rs1, imm })
+    }
+    pub fn mv(&mut self, rd: Reg, rs: Reg) -> &mut Self {
+        self.addi(rd, rs, 0)
+    }
+    pub fn add(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Instr::Add { rd, rs1, rs2 })
+    }
+    pub fn sub(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Instr::Sub { rd, rs1, rs2 })
+    }
+    pub fn slli(&mut self, rd: Reg, rs1: Reg, sh: u8) -> &mut Self {
+        self.push(Instr::Slli { rd, rs1, sh })
+    }
+    pub fn srli(&mut self, rd: Reg, rs1: Reg, sh: u8) -> &mut Self {
+        self.push(Instr::Srli { rd, rs1, sh })
+    }
+    pub fn and(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Instr::And { rd, rs1, rs2 })
+    }
+    pub fn or(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Instr::Or { rd, rs1, rs2 })
+    }
+    pub fn xor(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Instr::Xor { rd, rs1, rs2 })
+    }
+    pub fn andi(&mut self, rd: Reg, rs1: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Andi { rd, rs1, imm })
+    }
+    pub fn slt(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Instr::Slt { rd, rs1, rs2 })
+    }
+    pub fn sltu(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Instr::Sltu { rd, rs1, rs2 })
+    }
+    pub fn mul(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Instr::Mul { rd, rs1, rs2 })
+    }
+    pub fn li(&mut self, rd: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Li { rd, imm })
+    }
+
+    // ---- memory --------------------------------------------------------
+    pub fn lb(&mut self, rd: Reg, base: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Load { rd, base, imm, size: MemSize::B, signed: true })
+    }
+    pub fn lbu(&mut self, rd: Reg, base: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Load { rd, base, imm, size: MemSize::B, signed: false })
+    }
+    pub fn lh(&mut self, rd: Reg, base: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Load { rd, base, imm, size: MemSize::H, signed: true })
+    }
+    pub fn lhu(&mut self, rd: Reg, base: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Load { rd, base, imm, size: MemSize::H, signed: false })
+    }
+    pub fn lw(&mut self, rd: Reg, base: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Load { rd, base, imm, size: MemSize::W, signed: true })
+    }
+    pub fn lwu(&mut self, rd: Reg, base: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Load { rd, base, imm, size: MemSize::W, signed: false })
+    }
+    pub fn ld(&mut self, rd: Reg, base: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Load { rd, base, imm, size: MemSize::D, signed: true })
+    }
+    pub fn sb(&mut self, src: Reg, base: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Store { src, base, imm, size: MemSize::B })
+    }
+    pub fn sh(&mut self, src: Reg, base: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Store { src, base, imm, size: MemSize::H })
+    }
+    pub fn sw(&mut self, src: Reg, base: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Store { src, base, imm, size: MemSize::W })
+    }
+    pub fn sd(&mut self, src: Reg, base: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Store { src, base, imm, size: MemSize::D })
+    }
+
+    // ---- control -------------------------------------------------------
+    pub fn br(&mut self, cond: Cond, rs1: Reg, rs2: Reg, label: &str) -> &mut Self {
+        self.push_branchy(Instr::Br { cond, rs1, rs2, target: u32::MAX }, label)
+    }
+    pub fn beq(&mut self, rs1: Reg, rs2: Reg, label: &str) -> &mut Self {
+        self.br(Cond::Eq, rs1, rs2, label)
+    }
+    pub fn bne(&mut self, rs1: Reg, rs2: Reg, label: &str) -> &mut Self {
+        self.br(Cond::Ne, rs1, rs2, label)
+    }
+    pub fn blt(&mut self, rs1: Reg, rs2: Reg, label: &str) -> &mut Self {
+        self.br(Cond::Lt, rs1, rs2, label)
+    }
+    pub fn bge(&mut self, rs1: Reg, rs2: Reg, label: &str) -> &mut Self {
+        self.br(Cond::Ge, rs1, rs2, label)
+    }
+    pub fn bltu(&mut self, rs1: Reg, rs2: Reg, label: &str) -> &mut Self {
+        self.br(Cond::Ltu, rs1, rs2, label)
+    }
+    pub fn bgeu(&mut self, rs1: Reg, rs2: Reg, label: &str) -> &mut Self {
+        self.br(Cond::Geu, rs1, rs2, label)
+    }
+    pub fn j(&mut self, label: &str) -> &mut Self {
+        self.push_branchy(Instr::J { target: u32::MAX }, label)
+    }
+    pub fn jal(&mut self, rd: Reg, label: &str) -> &mut Self {
+        self.push_branchy(Instr::Jal { rd, target: u32::MAX }, label)
+    }
+    pub fn jalr(&mut self, rd: Reg, rs1: Reg) -> &mut Self {
+        self.push(Instr::Jalr { rd, rs1 })
+    }
+    pub fn ret(&mut self) -> &mut Self {
+        self.jalr(ZERO, RA)
+    }
+
+    // ---- FP path ---------------------------------------------------------
+    pub fn fmadd_d(&mut self, rd: FReg, rs1: FReg, rs2: FReg, rs3: FReg) -> &mut Self {
+        self.push(Instr::Fp(FpInstr::Fmadd { rd, rs1, rs2, rs3 }))
+    }
+    pub fn fadd_d(&mut self, rd: FReg, rs1: FReg, rs2: FReg) -> &mut Self {
+        self.push(Instr::Fp(FpInstr::Fadd { rd, rs1, rs2 }))
+    }
+    pub fn fsub_d(&mut self, rd: FReg, rs1: FReg, rs2: FReg) -> &mut Self {
+        self.push(Instr::Fp(FpInstr::Fsub { rd, rs1, rs2 }))
+    }
+    pub fn fmul_d(&mut self, rd: FReg, rs1: FReg, rs2: FReg) -> &mut Self {
+        self.push(Instr::Fp(FpInstr::Fmul { rd, rs1, rs2 }))
+    }
+    pub fn fdiv_d(&mut self, rd: FReg, rs1: FReg, rs2: FReg) -> &mut Self {
+        self.push(Instr::Fp(FpInstr::Fdiv { rd, rs1, rs2 }))
+    }
+    pub fn fmax_d(&mut self, rd: FReg, rs1: FReg, rs2: FReg) -> &mut Self {
+        self.push(Instr::Fp(FpInstr::Fmax { rd, rs1, rs2 }))
+    }
+    pub fn fmin_d(&mut self, rd: FReg, rs1: FReg, rs2: FReg) -> &mut Self {
+        self.push(Instr::Fp(FpInstr::Fmin { rd, rs1, rs2 }))
+    }
+    pub fn fmv_d(&mut self, rd: FReg, rs: FReg) -> &mut Self {
+        self.push(Instr::Fp(FpInstr::Fmv { rd, rs }))
+    }
+    /// `fcvt.d.w rd, zero` — zero-initialize an FP register.
+    pub fn fcvt_d_w_zero(&mut self, rd: FReg) -> &mut Self {
+        self.push(Instr::Fp(FpInstr::FcvtFromInt { rd, value_bits: 0 }))
+    }
+    pub fn fld(&mut self, rd: FReg, base: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Fp(FpInstr::Fld { rd, base, imm }))
+    }
+    pub fn fsd(&mut self, rs: FReg, base: Reg, imm: i64) -> &mut Self {
+        self.push(Instr::Fp(FpInstr::Fsd { rs, base, imm }))
+    }
+
+    // ---- FREP hardware loop ---------------------------------------------
+    /// `frep.o rs, n_instrs, stagger_count, stagger_mask`: repeat the next
+    /// `n_instrs` FP instructions `reg(rs)` times (register value is the
+    /// iteration count, resolved at issue).
+    pub fn frep(&mut self, count_reg: Reg, n_instrs: u8, stagger_count: u8, stagger_mask: u8) -> &mut Self {
+        self.push(Instr::Frep {
+            count: FrepCount::Reg(count_reg),
+            n_instrs,
+            stagger_count,
+            stagger_mask,
+        })
+    }
+    pub fn frep_imm(&mut self, count: u32, n_instrs: u8, stagger_count: u8, stagger_mask: u8) -> &mut Self {
+        self.push(Instr::Frep { count: FrepCount::Imm(count), n_instrs, stagger_count, stagger_mask })
+    }
+    /// `frep.s` — stream-controlled FREP: one iteration per joint-stream
+    /// element, terminated by the comparator's stream-control queue (§2.3).
+    pub fn frep_s(&mut self, n_instrs: u8, stagger_count: u8, stagger_mask: u8) -> &mut Self {
+        self.push(Instr::Frep { count: FrepCount::Stream, n_instrs, stagger_count, stagger_mask })
+    }
+
+    // ---- SSR control ------------------------------------------------------
+    pub fn ssr_enable(&mut self) -> &mut Self {
+        self.push(Instr::SsrEnable)
+    }
+    pub fn ssr_disable(&mut self) -> &mut Self {
+        self.push(Instr::SsrDisable)
+    }
+    pub fn scfgw(&mut self, ssr: u8, field: SsrField, rs1: Reg) -> &mut Self {
+        self.push(Instr::ScfgW { ssr, field, rs1 })
+    }
+    pub fn scfgr(&mut self, rd: Reg, ssr: u8, field: SsrField) -> &mut Self {
+        self.push(Instr::ScfgR { rd, ssr, field })
+    }
+
+    // ---- sync --------------------------------------------------------------
+    pub fn fpu_fence(&mut self) -> &mut Self {
+        self.push(Instr::FpuFence)
+    }
+    pub fn barrier(&mut self) -> &mut Self {
+        self.push(Instr::Barrier)
+    }
+    pub fn halt(&mut self) -> &mut Self {
+        self.push(Instr::Halt)
+    }
+    pub fn nop(&mut self) -> &mut Self {
+        self.push(Instr::Nop)
+    }
+
+    /// Resolve label fixups and produce the program.
+    pub fn finish(mut self) -> Program {
+        for (idx, label) in &self.fixups {
+            let target = *self
+                .labels
+                .get(label)
+                .unwrap_or_else(|| panic!("undefined label {label}"));
+            match &mut self.instrs[*idx] {
+                Instr::Br { target: t, .. } | Instr::J { target: t } | Instr::Jal { target: t, .. } => {
+                    *t = target
+                }
+                other => panic!("fixup on non-branch {other:?}"),
+            }
+        }
+        Program { instrs: self.instrs, text_base: self.text_base }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_and_backward_labels_resolve() {
+        let mut a = Asm::new();
+        a.li(T0, 3);
+        a.label("loop");
+        a.addi(T0, T0, -1);
+        a.bne(T0, ZERO, "loop");
+        a.j("end");
+        a.nop();
+        a.label("end");
+        a.halt();
+        let p = a.finish();
+        assert_eq!(p.instrs[2], Instr::Br { cond: Cond::Ne, rs1: T0, rs2: ZERO, target: 1 });
+        assert_eq!(p.instrs[3], Instr::J { target: 5 });
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate label")]
+    fn duplicate_label_panics() {
+        let mut a = Asm::new();
+        a.label("x");
+        a.label("x");
+    }
+
+    #[test]
+    #[should_panic(expected = "undefined label")]
+    fn undefined_label_panics() {
+        let mut a = Asm::new();
+        a.j("nowhere");
+        let _ = a.finish();
+    }
+
+    #[test]
+    fn builder_emits_expected_opcodes() {
+        let mut a = Asm::new();
+        a.lhu(T1, A0, 2).fmadd_d(FT3, FT0, FT1, FT3).frep_s(1, 0, 0).scfgw(0, SsrField::DataBase, A1);
+        let p = a.finish();
+        assert_eq!(p.instrs.len(), 4);
+        assert!(matches!(p.instrs[0], Instr::Load { size: MemSize::H, signed: false, .. }));
+        assert!(p.instrs[1].is_fp_path());
+        assert!(matches!(p.instrs[2], Instr::Frep { count: FrepCount::Stream, .. }));
+        assert!(matches!(p.instrs[3], Instr::ScfgW { ssr: 0, field: SsrField::DataBase, .. }));
+    }
+}

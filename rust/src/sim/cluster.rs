@@ -1,0 +1,432 @@
+//! The Snitch compute cluster (Fig. 3, Table 1): `p` worker core
+//! complexes sharing a banked TCDM and an L1 I$, a wide DMA engine in
+//! front of an HBM2E channel model, and the hardware barrier.
+//!
+//! The data-movement core (DMCC) of the real cluster runs a small
+//! software loop that programs the DMA and sequences double-buffer
+//! phases; our L3 coordinator compiles that loop down to a deterministic
+//! [`DmaSchedule`]: the job list of phase `k+1` is submitted when barrier
+//! `k` releases, which is exactly the double-buffered scheme of §4.2
+//! (cores compute on buffer `k % 2` while the DMA fills the other).
+
+use super::core::Core;
+use super::dma::{Dma, DmaJob};
+use super::dram::Dram;
+use super::fpu::Fpu;
+use super::icache::ICache;
+use super::isa::Program;
+use super::ssr::{Ports, Streamer};
+use super::tcdm::Tcdm;
+
+/// Cluster parameterization (Table 1).
+#[derive(Clone, Debug)]
+pub struct ClusterCfg {
+    /// Worker core count `p`.
+    pub cores: usize,
+    /// TCDM size in bytes (`D` = 128 KiB default).
+    pub tcdm_bytes: usize,
+    /// Memory bank count `k`.
+    pub banks: usize,
+    /// DRAM size in bytes (backing store for the workload).
+    pub dram_bytes: usize,
+    /// DRAM channel bandwidth in Gb/s/pin (3.6 = full HBM2E channel).
+    pub dram_gbps_pin: f64,
+    /// DRAM round-trip latency in cycles.
+    pub dram_latency: u64,
+    /// One-way on-chip interconnect latency in cycles.
+    pub ic_latency: u64,
+    /// Taken-branch penalty in cycles (calibration default 0, see
+    /// [`super::core`]).
+    pub taken_branch_penalty: u32,
+}
+
+impl ClusterCfg {
+    /// The evaluation configuration of Table 1 (eight cores, 128 KiB
+    /// TCDM, 32 banks) in front of one HBM2E channel.
+    pub fn paper_cluster() -> Self {
+        ClusterCfg {
+            cores: 8,
+            tcdm_bytes: 128 << 10,
+            banks: 32,
+            dram_bytes: 64 << 20,
+            dram_gbps_pin: super::dram::GBPS_PIN_FULL,
+            dram_latency: super::dram::DEFAULT_LATENCY,
+            ic_latency: super::dram::DEFAULT_IC_LATENCY,
+            taken_branch_penalty: 0,
+        }
+    }
+
+    /// Single-CC configuration (§4.1): exclusive I$ and a three-port
+    /// data memory; no DMA/DRAM traffic on the measured path.
+    pub fn single_cc() -> Self {
+        ClusterCfg { cores: 1, ..Self::paper_cluster() }
+    }
+}
+
+/// One core complex: integer core + FP subsystem + SSSR streamer.
+pub struct CoreComplex {
+    pub core: Core,
+    pub fpu: Fpu,
+    pub streamer: Streamer,
+    pub prog: Program,
+    ports: Ports,
+}
+
+impl CoreComplex {
+    fn new(prog: Program, penalty: u32) -> Self {
+        let mut core = Core::new();
+        core.taken_branch_penalty = penalty;
+        CoreComplex { core, fpu: Fpu::new(), streamer: Streamer::new(), prog, ports: Ports::default() }
+    }
+
+    fn tick(&mut self, now: u64, tcdm: &mut Tcdm, icache: &mut ICache) {
+        self.ports.new_cycle();
+        self.ports.core_wants_a = self.core.wants_port_a;
+        // Streamer first (fall-through FIFOs), then FPU, then the core.
+        self.streamer.tick(tcdm, &mut self.ports);
+        let mut port_a = !self.ports.a_used;
+        let had_a = port_a;
+        self.fpu.tick(now, &mut self.streamer, tcdm, &mut port_a);
+        self.core.tick(now, &self.prog, tcdm, icache, &mut self.fpu, &mut self.streamer, &mut port_a);
+        if had_a && port_a {
+            // nobody on the core side used port A this cycle
+            self.ports.issr0_had_a = false;
+        }
+    }
+
+    fn fully_idle(&self) -> bool {
+        self.core.halted() && self.fpu.idle() && self.streamer.drained()
+    }
+}
+
+/// Per-phase DMA job lists (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct DmaSchedule {
+    pub phases: Vec<Vec<DmaJob>>,
+}
+
+pub struct Cluster {
+    pub cfg: ClusterCfg,
+    pub ccs: Vec<CoreComplex>,
+    pub tcdm: Tcdm,
+    pub dram: Dram,
+    pub dma: Dma,
+    pub icache: ICache,
+    pub cycle: u64,
+    schedule: DmaSchedule,
+    phase: usize,
+    /// Cumulative DMA job count required before release `r`:
+    /// `barrier_req[r] = |phases[0..=r]|` — the prefetch submitted *at*
+    /// release `r` (phases[r+1]) is intentionally NOT required, which is
+    /// what lets compute overlap the next chunk's transfer (§4.2 double
+    /// buffering).
+    barrier_req: Vec<u64>,
+    /// Barriers released so far.
+    pub barriers_released: u64,
+    rotate: usize,
+}
+
+impl Cluster {
+    /// Build a cluster where every core runs its own program.
+    pub fn new(cfg: ClusterCfg, programs: Vec<Program>) -> Self {
+        assert_eq!(programs.len(), cfg.cores);
+        let ccs = programs
+            .into_iter()
+            .map(|p| CoreComplex::new(p, cfg.taken_branch_penalty))
+            .collect();
+        let icache = if cfg.cores == 1 { ICache::single_cc() } else { ICache::cluster() };
+        Cluster {
+            ccs,
+            tcdm: Tcdm::new(cfg.tcdm_bytes, cfg.banks),
+            dram: Dram::with_params(cfg.dram_bytes, cfg.dram_gbps_pin, cfg.dram_latency, cfg.ic_latency),
+            dma: Dma::new(),
+            icache,
+            cycle: 0,
+            schedule: DmaSchedule::default(),
+            phase: 0,
+            barrier_req: vec![],
+            barriers_released: 0,
+            rotate: 0,
+            cfg,
+        }
+    }
+
+    /// Single-CC harness with one program (§4.1 experiments).
+    pub fn single(prog: Program) -> Self {
+        Cluster::new(ClusterCfg::single_cc(), vec![prog])
+    }
+
+    /// Install the double-buffer DMA schedule; phase-0 jobs are submitted
+    /// immediately.
+    pub fn set_dma_schedule(&mut self, schedule: DmaSchedule) {
+        self.schedule = schedule;
+        self.phase = 0;
+        let mut cum = 0u64;
+        self.barrier_req = self
+            .schedule
+            .phases
+            .iter()
+            .map(|p| {
+                cum += p.len() as u64;
+                cum
+            })
+            .collect();
+        if let Some(jobs) = self.schedule.phases.first() {
+            for j in jobs {
+                self.dma.submit(*j);
+            }
+        }
+    }
+
+    /// Set an integer register in every core (worker id, argument block
+    /// pointers, ...).
+    pub fn set_reg_all(&mut self, reg: u8, value: i64) {
+        for cc in &mut self.ccs {
+            cc.core.regs[reg as usize] = value;
+        }
+    }
+
+    pub fn set_reg(&mut self, core: usize, reg: u8, value: i64) {
+        self.ccs[core].core.regs[reg as usize] = value;
+    }
+
+    /// Advance one cycle.
+    pub fn tick(&mut self) {
+        self.cycle += 1;
+        let now = self.cycle;
+        self.tcdm.new_cycle(now);
+        self.dma.tick(now, &mut self.tcdm, &mut self.dram);
+
+        // Barrier: all live cores waiting and the *required* DMA phases
+        // drained -> release, submit the next phase's prefetch (which is
+        // NOT awaited — double buffering).
+        let any_waiting = self.ccs.iter().any(|c| c.core.at_barrier());
+        if any_waiting {
+            let all_ready = self
+                .ccs
+                .iter()
+                .all(|c| c.core.at_barrier() || c.core.halted());
+            let dma_ready = match self.barrier_req.get(self.barriers_released as usize) {
+                Some(&req) => self.dma.jobs_done >= req,
+                None => !self.dma.busy(),
+            };
+            if all_ready && dma_ready {
+                for cc in &mut self.ccs {
+                    if cc.core.at_barrier() {
+                        cc.core.release_barrier();
+                    }
+                }
+                self.barriers_released += 1;
+                self.phase += 1;
+                if let Some(jobs) = self.schedule.phases.get(self.phase) {
+                    for j in jobs {
+                        self.dma.submit(*j);
+                    }
+                }
+            }
+        }
+
+        // Rotate CC service order for TCDM fairness.
+        let n = self.ccs.len();
+        for i in 0..n {
+            let k = (i + self.rotate) % n;
+            // Split borrow: temporarily take the CC out is costly; use
+            // indices with disjoint field borrows instead.
+            let (tcdm, icache) = (&mut self.tcdm, &mut self.icache);
+            self.ccs[k].tick(now, tcdm, icache);
+        }
+        self.rotate = (self.rotate + 1) % n.max(1);
+    }
+
+    pub fn done(&self) -> bool {
+        self.ccs.iter().all(|c| c.fully_idle()) && !self.dma.busy()
+    }
+
+    /// Run until all cores halt (and FPUs/streams drain). Returns total
+    /// cycles. Panics after `limit` cycles (deadlock guard).
+    pub fn run(&mut self, limit: u64) -> u64 {
+        let start = self.cycle;
+        while !self.done() {
+            self.tick();
+            assert!(
+                self.cycle - start < limit,
+                "cluster did not finish within {limit} cycles (pc0={}, barrier={:?})",
+                self.ccs[0].core.pc,
+                self.ccs.iter().map(|c| c.core.at_barrier()).collect::<Vec<_>>()
+            );
+        }
+        self.cycle - start
+    }
+
+    /// Pre-touch every instruction line of every program so the run
+    /// measures steady-state kernel behaviour without cold I$ misses
+    /// (used by the single-CC kernel drivers; cluster experiments keep
+    /// cold misses, as the paper's do).
+    pub fn warm_icache(&mut self) {
+        for cc in &self.ccs {
+            for pc in 0..cc.prog.instrs.len() as u32 {
+                let _ = self.icache.fetch(cc.prog.iaddr(pc), 0);
+            }
+        }
+        self.icache.hits = 0;
+        self.icache.l1_misses = 0;
+        self.icache.l2_misses = 0;
+    }
+
+    /// Aggregate run statistics (also the energy model's activity input).
+    pub fn stats(&self) -> RunStats {
+        RunStats {
+            cycles: self.cycle,
+            cores: self.ccs.len(),
+            instret: self.ccs.iter().map(|c| c.core.instret).sum(),
+            flops: self.ccs.iter().map(|c| c.fpu.flops).sum(),
+            fpu_ops: self.ccs.iter().map(|c| c.fpu.ops_executed).sum(),
+            tcdm_grants: self.tcdm.grants,
+            tcdm_conflicts: self.tcdm.conflicts,
+            icache_hits: self.icache.hits,
+            icache_misses: self.icache.l1_misses,
+            dram_bytes: self.dram.bytes_read + self.dram.bytes_written,
+            dma_busy_cycles: self.dma.busy_cycles,
+            ssr_mem_accesses: self
+                .ccs
+                .iter()
+                .flat_map(|c| c.streamer.units.iter())
+                .map(|u| u.mem_reads + u.mem_writes)
+                .sum(),
+            comparisons: self.ccs.iter().map(|c| c.streamer.cmp.comparisons).sum(),
+            stall_icache: self.ccs.iter().map(|c| c.core.stall_icache).sum(),
+            stall_mem: self.ccs.iter().map(|c| c.core.stall_mem).sum(),
+            barrier_cycles: self.ccs.iter().map(|c| c.core.barrier_cycles).sum(),
+        }
+    }
+
+    /// FPU utilization over the whole run: payload FLOPs per core-cycle.
+    pub fn fpu_utilization(&self, payload_flops: u64) -> f64 {
+        payload_flops as f64 / (self.cycle as f64 * self.ccs.len() as f64)
+    }
+}
+
+/// Aggregated activity counters of one simulation run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunStats {
+    pub cycles: u64,
+    pub cores: usize,
+    pub instret: u64,
+    pub flops: u64,
+    pub fpu_ops: u64,
+    pub tcdm_grants: u64,
+    pub tcdm_conflicts: u64,
+    pub icache_hits: u64,
+    pub icache_misses: u64,
+    pub dram_bytes: u64,
+    pub dma_busy_cycles: u64,
+    pub ssr_mem_accesses: u64,
+    pub comparisons: u64,
+    pub stall_icache: u64,
+    pub stall_mem: u64,
+    pub barrier_cycles: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::asm::Asm;
+    use crate::sim::isa::*;
+
+    #[test]
+    fn single_core_halts() {
+        let mut a = Asm::new();
+        a.li(T0, 5);
+        a.label("l");
+        a.addi(T0, T0, -1);
+        a.bne(T0, ZERO, "l");
+        a.halt();
+        let mut cl = Cluster::single(a.finish());
+        let cycles = cl.run(10_000);
+        assert!(cycles > 10); // includes cold icache misses
+        assert!(cl.done());
+    }
+
+    #[test]
+    fn barrier_synchronizes_cores() {
+        // Core 0 loops a while before the barrier; both store after it.
+        let mk = |spin: i64, addr: i64| {
+            let mut a = Asm::new();
+            a.li(T0, spin);
+            a.label("l");
+            a.addi(T0, T0, -1);
+            a.bne(T0, ZERO, "l");
+            a.barrier();
+            a.li(T1, 1);
+            a.li(A0, addr);
+            a.sd(T1, A0, 0);
+            a.halt();
+            a.finish()
+        };
+        let cfg = ClusterCfg { cores: 2, ..ClusterCfg::paper_cluster() };
+        let mut cl = Cluster::new(cfg, vec![mk(500, 0x100), mk(1, 0x108)]);
+        cl.run(100_000);
+        assert_eq!(cl.tcdm.peek(0x100, 8), 1);
+        assert_eq!(cl.tcdm.peek(0x108, 8), 1);
+        assert_eq!(cl.barriers_released, 1);
+    }
+
+    #[test]
+    fn dma_schedule_phases_feed_barriers() {
+        // Phase 0 loads 0x40 bytes into TCDM@0; the core waits at the
+        // barrier, then reads the data.
+        let mut a = Asm::new();
+        a.barrier(); // released once phase-0 DMA completes
+        a.li(A0, 0);
+        a.ld(T0, A0, 0);
+        a.halt();
+        let cfg = ClusterCfg { cores: 1, ..ClusterCfg::paper_cluster() };
+        let mut cl = Cluster::new(cfg, vec![a.finish()]);
+        cl.dram.poke(0x1000, 8, 0xABCD);
+        cl.set_dma_schedule(DmaSchedule {
+            phases: vec![vec![DmaJob::flat(0x1000, 0x0, 64, true)]],
+        });
+        cl.run(100_000);
+        assert_eq!(cl.ccs[0].core.regs[T0 as usize], 0xABCD);
+    }
+
+    #[test]
+    fn stats_capture_activity() {
+        let mut a = Asm::new();
+        a.li(A0, 0x100);
+        a.fld(FT3, A0, 0);
+        a.fadd_d(FT4, FT3, FT3);
+        a.fpu_fence();
+        a.halt();
+        let mut cl = Cluster::single(a.finish());
+        cl.run(10_000);
+        let st = cl.stats();
+        assert_eq!(st.flops, 1);
+        assert!(st.instret >= 5);
+        assert!(st.icache_misses >= 1);
+    }
+
+    #[test]
+    fn two_cores_conflict_on_same_bank() {
+        // Both cores hammer the same TCDM word with back-to-back loads
+        // (so they cannot slip into a conflict-free phase offset).
+        let mk = || {
+            let mut a = Asm::new();
+            a.li(A0, 0x500);
+            a.li(T0, 200);
+            a.label("l");
+            a.ld(T1, A0, 0);
+            a.ld(T2, A0, 0);
+            a.ld(T3, A0, 0);
+            a.ld(T4, A0, 0);
+            a.addi(T0, T0, -1);
+            a.bne(T0, ZERO, "l");
+            a.halt();
+            a.finish()
+        };
+        let cfg = ClusterCfg { cores: 2, ..ClusterCfg::paper_cluster() };
+        let mut cl = Cluster::new(cfg, vec![mk(), mk()]);
+        cl.run(1_000_000);
+        assert!(cl.stats().tcdm_conflicts > 50, "conflicts={}", cl.stats().tcdm_conflicts);
+    }
+}

@@ -1,0 +1,563 @@
+//! The Snitch integer core: single-issue, in-order, one instruction per
+//! cycle when not stalled.
+//!
+//! Calibration note: the paper counts the BASE `sV×dV` inner loop as nine
+//! *instructions* bounding FPU utilization at 1/9 (§1), i.e. issue slots
+//! are the unit of cost — taken branches are modeled with a configurable
+//! penalty that defaults to 0 extra cycles to match that accounting, and
+//! TCDM loads complete in the issue cycle when they win their bank
+//! (Snitch's TCDM is single-cycle).
+//!
+//! FP-path instructions are resolved (integer operands read) at issue and
+//! pushed to the FP sequencer; the core runs ahead (pseudo dual-issue).
+
+use super::fpu::{Fpu, RCount, ROp, SeqEntry};
+use super::isa::*;
+use super::ssr::Streamer;
+use super::tcdm::{Access, Tcdm};
+
+/// Why the core could not retire an instruction this cycle (statistics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stall {
+    None,
+    Icache,
+    Mem,
+    SeqFull,
+    Fence,
+    Barrier,
+    SsrLaunch,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum State {
+    Ready,
+    /// Waiting for an I$ refill completing at the given cycle.
+    IcacheMiss(u64),
+    /// Waiting at the cluster barrier (released externally).
+    AtBarrier,
+    Halted,
+}
+
+pub struct Core {
+    pub regs: [i64; 32],
+    pub pc: u32,
+    state: State,
+    /// Core lost the shared-port arbitration last cycle (fairness hint
+    /// to ISSR0).
+    pub wants_port_a: bool,
+    // ---- statistics ----
+    pub instret: u64,
+    pub stall_icache: u64,
+    pub stall_mem: u64,
+    pub stall_seq: u64,
+    pub stall_fence: u64,
+    pub barrier_cycles: u64,
+    /// Extra cycles charged for taken branches (default 0, see above).
+    pub taken_branch_penalty: u32,
+    /// Pending penalty cycles to burn.
+    penalty: u32,
+    /// Fetch-buffer fast path: the I$ line the core is currently
+    /// streaming instructions from (sequential fetches within it skip
+    /// the directory probe, as a real fetch buffer would).
+    cur_iline: u64,
+}
+
+impl Core {
+    pub fn new() -> Self {
+        Core {
+            regs: [0; 32],
+            pc: 0,
+            state: State::Ready,
+            wants_port_a: false,
+            instret: 0,
+            stall_icache: 0,
+            stall_mem: 0,
+            stall_seq: 0,
+            stall_fence: 0,
+            barrier_cycles: 0,
+            taken_branch_penalty: 0,
+            penalty: 0,
+            cur_iline: u64::MAX,
+        }
+    }
+
+    pub fn halted(&self) -> bool {
+        self.state == State::Halted
+    }
+
+    pub fn at_barrier(&self) -> bool {
+        self.state == State::AtBarrier
+    }
+
+    /// Release from the cluster barrier (pc already advanced).
+    pub fn release_barrier(&mut self) {
+        assert_eq!(self.state, State::AtBarrier);
+        self.state = State::Ready;
+    }
+
+    #[inline]
+    fn rs(&self, r: Reg) -> i64 {
+        self.regs[r as usize]
+    }
+
+    #[inline]
+    fn wr(&mut self, r: Reg, v: i64) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    /// Resolve an FP-path instruction into a sequencer entry, reading
+    /// integer operands now.
+    fn resolve_fp(&self, i: &Instr) -> SeqEntry {
+        match i {
+            Instr::Fp(f) => SeqEntry::Op(match *f {
+                FpInstr::Fmadd { rd, rs1, rs2, rs3 } => ROp::Fmadd { rd, rs1, rs2, rs3 },
+                FpInstr::Fadd { rd, rs1, rs2 } => ROp::Fadd { rd, rs1, rs2 },
+                FpInstr::Fsub { rd, rs1, rs2 } => ROp::Fsub { rd, rs1, rs2 },
+                FpInstr::Fmul { rd, rs1, rs2 } => ROp::Fmul { rd, rs1, rs2 },
+                FpInstr::Fdiv { rd, rs1, rs2 } => ROp::Fdiv { rd, rs1, rs2 },
+                FpInstr::Fmax { rd, rs1, rs2 } => ROp::Fmax { rd, rs1, rs2 },
+                FpInstr::Fmin { rd, rs1, rs2 } => ROp::Fmin { rd, rs1, rs2 },
+                FpInstr::Fmv { rd, rs } => ROp::Fmv { rd, rs },
+                FpInstr::FcvtFromInt { rd, value_bits } => ROp::FcvtInt { rd, value: value_bits },
+                FpInstr::Fld { rd, base, imm } => {
+                    ROp::Fld { rd, addr: (self.rs(base) + imm) as u64 }
+                }
+                FpInstr::Fsd { rs, base, imm } => {
+                    ROp::Fsd { rs, addr: (self.rs(base) + imm) as u64 }
+                }
+            }),
+            Instr::Frep { count, n_instrs, stagger_count, stagger_mask } => SeqEntry::Frep {
+                count: match count {
+                    FrepCount::Imm(n) => RCount::Iters(*n as u64),
+                    FrepCount::Reg(r) => RCount::Iters(self.rs(*r) as u64),
+                    FrepCount::Stream => RCount::Stream,
+                },
+                n_instrs: *n_instrs,
+                stagger_count: *stagger_count,
+                stagger_mask: *stagger_mask,
+            },
+            other => panic!("not an FP-path instruction: {other:?}"),
+        }
+    }
+
+    /// Execute one cycle. `port_a_free` is the CC shared port (already
+    /// reduced by ISSR0 / FPU LSU claims this cycle).
+    #[allow(clippy::too_many_arguments)]
+    pub fn tick(
+        &mut self,
+        now: u64,
+        prog: &Program,
+        tcdm: &mut Tcdm,
+        icache: &mut super::icache::ICache,
+        fpu: &mut Fpu,
+        streamer: &mut Streamer,
+        port_a_free: &mut bool,
+    ) -> Stall {
+        match self.state {
+            State::Halted => return Stall::None,
+            State::AtBarrier => {
+                self.barrier_cycles += 1;
+                return Stall::Barrier;
+            }
+            State::IcacheMiss(until) => {
+                if now < until {
+                    self.stall_icache += 1;
+                    return Stall::Icache;
+                }
+                self.state = State::Ready;
+            }
+            State::Ready => {}
+        }
+        if self.penalty > 0 {
+            self.penalty -= 1;
+            return Stall::None;
+        }
+
+        let pc = self.pc;
+        assert!(
+            (pc as usize) < prog.instrs.len(),
+            "pc {pc} fell off the program (missing halt?)"
+        );
+
+        // Instruction fetch (fetch-buffer fast path for the current line).
+        let iaddr = prog.iaddr(pc);
+        let line = iaddr >> 5;
+        if line != self.cur_iline {
+            match icache.fetch(iaddr, now) {
+                super::icache::Fetch::Hit => self.cur_iline = line,
+                super::icache::Fetch::MissUntil(t) => {
+                    self.cur_iline = line;
+                    self.state = State::IcacheMiss(t);
+                    self.stall_icache += 1;
+                    return Stall::Icache;
+                }
+            }
+        } else {
+            icache.hits += 1;
+        }
+
+        let instr = prog.instrs[pc as usize];
+        let mut next_pc = pc + 1;
+        match instr {
+            Instr::Addi { rd, rs1, imm } => self.wr(rd, self.rs(rs1).wrapping_add(imm)),
+            Instr::Add { rd, rs1, rs2 } => self.wr(rd, self.rs(rs1).wrapping_add(self.rs(rs2))),
+            Instr::Sub { rd, rs1, rs2 } => self.wr(rd, self.rs(rs1).wrapping_sub(self.rs(rs2))),
+            Instr::Slli { rd, rs1, sh } => self.wr(rd, ((self.rs(rs1) as u64) << sh) as i64),
+            Instr::Srli { rd, rs1, sh } => self.wr(rd, ((self.rs(rs1) as u64) >> sh) as i64),
+            Instr::And { rd, rs1, rs2 } => self.wr(rd, self.rs(rs1) & self.rs(rs2)),
+            Instr::Or { rd, rs1, rs2 } => self.wr(rd, self.rs(rs1) | self.rs(rs2)),
+            Instr::Xor { rd, rs1, rs2 } => self.wr(rd, self.rs(rs1) ^ self.rs(rs2)),
+            Instr::Andi { rd, rs1, imm } => self.wr(rd, self.rs(rs1) & imm),
+            Instr::Slt { rd, rs1, rs2 } => self.wr(rd, i64::from(self.rs(rs1) < self.rs(rs2))),
+            Instr::Sltu { rd, rs1, rs2 } => {
+                self.wr(rd, i64::from((self.rs(rs1) as u64) < (self.rs(rs2) as u64)))
+            }
+            Instr::Mul { rd, rs1, rs2 } => {
+                self.wr(rd, self.rs(rs1).wrapping_mul(self.rs(rs2)));
+                // shared cluster multiplier: short occupancy
+                self.penalty += 1;
+            }
+            Instr::Li { rd, imm } => self.wr(rd, imm),
+            Instr::Load { rd, base, imm, size, signed } => {
+                if !*port_a_free {
+                    self.wants_port_a = true;
+                    self.stall_mem += 1;
+                    return Stall::Mem;
+                }
+                let addr = (self.rs(base) + imm) as u64;
+                match tcdm.try_read(addr, size.bytes()) {
+                    Access::Granted(raw) => {
+                        *port_a_free = false;
+                        self.wants_port_a = false;
+                        let v = if signed {
+                            let bits = 8 * size.bytes();
+                            if bits == 64 {
+                                raw as i64
+                            } else {
+                                let sh = 64 - bits;
+                                ((raw << sh) as i64) >> sh
+                            }
+                        } else {
+                            raw as i64
+                        };
+                        self.wr(rd, v);
+                    }
+                    Access::Conflict => {
+                        *port_a_free = false;
+                        self.stall_mem += 1;
+                        return Stall::Mem;
+                    }
+                }
+            }
+            Instr::Store { src, base, imm, size } => {
+                if !*port_a_free {
+                    self.wants_port_a = true;
+                    self.stall_mem += 1;
+                    return Stall::Mem;
+                }
+                let addr = (self.rs(base) + imm) as u64;
+                match tcdm.try_write(addr, size.bytes(), self.rs(src) as u64) {
+                    Access::Granted(_) => {
+                        *port_a_free = false;
+                        self.wants_port_a = false;
+                    }
+                    Access::Conflict => {
+                        *port_a_free = false;
+                        self.stall_mem += 1;
+                        return Stall::Mem;
+                    }
+                }
+            }
+            Instr::Br { cond, rs1, rs2, target } => {
+                if cond.eval(self.rs(rs1), self.rs(rs2)) {
+                    next_pc = target;
+                    self.penalty = self.taken_branch_penalty;
+                }
+            }
+            Instr::J { target } => {
+                next_pc = target;
+                self.penalty = self.taken_branch_penalty;
+            }
+            Instr::Jal { rd, target } => {
+                self.wr(rd, next_pc as i64);
+                next_pc = target;
+                self.penalty = self.taken_branch_penalty;
+            }
+            Instr::Jalr { rd, rs1 } => {
+                let t = self.rs(rs1) as u32;
+                self.wr(rd, next_pc as i64);
+                next_pc = t;
+                self.penalty = self.taken_branch_penalty;
+            }
+            Instr::Fp(_) | Instr::Frep { .. } => {
+                let entry = self.resolve_fp(&instr);
+                if !fpu.push(entry) {
+                    self.stall_seq += 1;
+                    return Stall::SeqFull;
+                }
+            }
+            Instr::SsrEnable => {
+                // CSR writes to ssr_redir synchronize with the FP
+                // subsystem (quiesce) to keep redirection changes safe.
+                if !fpu.idle() {
+                    self.stall_fence += 1;
+                    return Stall::Fence;
+                }
+                streamer.enabled = true;
+            }
+            Instr::SsrDisable => {
+                if !fpu.idle() {
+                    self.stall_fence += 1;
+                    return Stall::Fence;
+                }
+                streamer.enabled = false;
+            }
+            Instr::ScfgW { ssr, field, rs1 } => {
+                if !streamer.cfg_write(ssr, field, self.rs(rs1)) {
+                    // job queue full: retry
+                    return Stall::SsrLaunch;
+                }
+            }
+            Instr::ScfgR { rd, ssr, field } => {
+                let v = streamer.cfg_read(ssr, field);
+                self.wr(rd, v);
+            }
+            Instr::FpuFence => {
+                if !fpu.idle() || !streamer.drained() {
+                    self.stall_fence += 1;
+                    return Stall::Fence;
+                }
+            }
+            Instr::Barrier => {
+                self.pc = next_pc;
+                self.instret += 1;
+                self.state = State::AtBarrier;
+                return Stall::Barrier;
+            }
+            Instr::Halt => {
+                self.state = State::Halted;
+                self.instret += 1;
+                return Stall::None;
+            }
+            Instr::Nop => {}
+        }
+        self.pc = next_pc;
+        self.instret += 1;
+        Stall::None
+    }
+}
+
+impl Default for Core {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::asm::Asm;
+    use crate::sim::icache::ICache;
+
+    struct Bench {
+        core: Core,
+        fpu: Fpu,
+        streamer: Streamer,
+        tcdm: Tcdm,
+        icache: ICache,
+        prog: Program,
+    }
+
+    fn bench(prog: Program) -> Bench {
+        Bench {
+            core: Core::new(),
+            fpu: Fpu::new(),
+            streamer: Streamer::new(),
+            tcdm: Tcdm::new(64 << 10, 32),
+            icache: warm_icache(&prog),
+            prog,
+        }
+    }
+
+    /// Pre-warm the I$ so single-module tests measure core behaviour only.
+    fn warm_icache(prog: &Program) -> ICache {
+        let mut ic = ICache::single_cc();
+        for pc in 0..prog.instrs.len() as u32 {
+            let _ = ic.fetch(prog.iaddr(pc), 0);
+        }
+        ic
+    }
+
+    fn run(b: &mut Bench, max_cycles: u64) -> u64 {
+        let mut now = 0;
+        while !b.core.halted() {
+            now += 1;
+            assert!(now < max_cycles, "timeout at pc={}", b.core.pc);
+            b.tcdm.new_cycle(now);
+            let mut ports = crate::sim::ssr::Ports::default();
+            ports.core_wants_a = b.core.wants_port_a;
+            b.streamer.tick(&mut b.tcdm, &mut ports);
+            let mut pa = !ports.a_used;
+            b.fpu.tick(now, &mut b.streamer, &mut b.tcdm, &mut pa);
+            b.core.tick(
+                now,
+                &b.prog,
+                &mut b.tcdm,
+                &mut b.icache,
+                &mut b.fpu,
+                &mut b.streamer,
+                &mut pa,
+            );
+        }
+        // drain FPU
+        while !b.fpu.idle() {
+            now += 1;
+            assert!(now < max_cycles);
+            b.tcdm.new_cycle(now);
+            let mut pa = true;
+            b.fpu.tick(now, &mut b.streamer, &mut b.tcdm, &mut pa);
+        }
+        now
+    }
+
+    #[test]
+    fn arithmetic_loop_counts_down() {
+        let mut a = Asm::new();
+        a.li(T0, 10).li(T1, 0);
+        a.label("loop");
+        a.addi(T1, T1, 3);
+        a.addi(T0, T0, -1);
+        a.bne(T0, ZERO, "loop");
+        a.halt();
+        let mut b = bench(a.finish());
+        run(&mut b, 1000);
+        assert_eq!(b.core.regs[T1 as usize], 30);
+    }
+
+    #[test]
+    fn loads_and_stores_work() {
+        let mut a = Asm::new();
+        a.li(A0, 0x100);
+        a.li(T0, -7);
+        a.sw(T0, A0, 0);
+        a.lw(T1, A0, 0); // signed
+        a.lwu(T2, A0, 0); // unsigned
+        a.halt();
+        let mut b = bench(a.finish());
+        run(&mut b, 100);
+        assert_eq!(b.core.regs[T1 as usize], -7);
+        assert_eq!(b.core.regs[T2 as usize], 0xFFFF_FFF9);
+    }
+
+    #[test]
+    fn halfword_sign_extension() {
+        let mut a = Asm::new();
+        a.li(A0, 0x200);
+        a.li(T0, 0x8001);
+        a.sh(T0, A0, 0);
+        a.lh(T1, A0, 0);
+        a.lhu(T2, A0, 0);
+        a.halt();
+        let mut b = bench(a.finish());
+        run(&mut b, 100);
+        assert_eq!(b.core.regs[T1 as usize], -32767);
+        assert_eq!(b.core.regs[T2 as usize], 0x8001);
+    }
+
+    #[test]
+    fn nine_instruction_loop_takes_nine_cycles_per_iter() {
+        // The calibration loop: BASE sVxdV shape (§1) — 9 issue slots.
+        let iters = 100i64;
+        let mut a = Asm::new();
+        a.li(S0, 0x1000); // a_idcs
+        a.li(S1, 0x2000); // a_vals
+        a.li(S2, 0x4000); // b
+        a.li(T0, iters);
+        a.fcvt_d_w_zero(FT3);
+        a.label("loop");
+        a.lw(T1, S0, 0); // idx
+        a.slli(T1, T1, 3);
+        a.add(T1, S2, T1);
+        a.fld(FT0, T1, 0); // b[idx]
+        a.fld(FT1, S1, 0); // a_val
+        a.fmadd_d(FT3, FT0, FT1, FT3);
+        a.addi(S0, S0, 4);
+        a.addi(S1, S1, 8);
+        a.addi(T0, T0, -1);
+        a.bne(T0, ZERO, "loop");
+        a.halt();
+        // NOTE: 10 instructions here (incl. the counter decrement); the
+        // paper's 9 counts pointer-bump variants. Either way: cycles/iter
+        // == instructions/iter when nothing stalls.
+        let mut b = bench(a.finish());
+        let cycles = run(&mut b, 100_000);
+        let per_iter = (cycles as f64 - 6.0) / iters as f64;
+        assert!(
+            (9.9..=10.6).contains(&per_iter),
+            "issue-bound loop took {per_iter} cycles/iter"
+        );
+    }
+
+    #[test]
+    fn fpu_decoupling_lets_core_run_ahead() {
+        // A long FP op chain issued, then int work: total < sum of both.
+        let mut a = Asm::new();
+        a.fcvt_d_w_zero(FT3);
+        for _ in 0..8 {
+            a.fadd_d(FT3, FT3, FT3); // 3-cycle dependent chain in FPU
+        }
+        a.li(T0, 20);
+        a.label("l");
+        a.addi(T0, T0, -1);
+        a.bne(T0, ZERO, "l");
+        a.fpu_fence();
+        a.halt();
+        let mut b = bench(a.finish());
+        let cycles = run(&mut b, 10_000);
+        // serial would be ~ 9 + 24 + 40; decoupled overlaps the 40 int
+        // cycles with the ~24-cycle FP chain.
+        assert!(cycles < 60, "no decoupling? took {cycles}");
+    }
+
+    #[test]
+    fn fence_waits_for_fpu() {
+        let mut a = Asm::new();
+        a.fcvt_d_w_zero(FT3);
+        a.fadd_d(FT4, FT3, FT3);
+        a.fadd_d(FT5, FT4, FT4); // dependent: ~6 cycles
+        a.fpu_fence();
+        a.halt();
+        let mut b = bench(a.finish());
+        run(&mut b, 100);
+        assert!(b.core.stall_fence > 0, "fence never stalled");
+    }
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let mut a = Asm::new();
+        a.li(ZERO, 42);
+        a.addi(T0, ZERO, 1);
+        a.halt();
+        let mut b = bench(a.finish());
+        run(&mut b, 100);
+        assert_eq!(b.core.regs[0], 0);
+        assert_eq!(b.core.regs[T0 as usize], 1);
+    }
+
+    #[test]
+    fn jal_jalr_call_return() {
+        let mut a = Asm::new();
+        a.li(T0, 0);
+        a.jal(RA, "func");
+        a.addi(T0, T0, 100); // after return
+        a.halt();
+        a.label("func");
+        a.addi(T0, T0, 1);
+        a.ret();
+        let mut b = bench(a.finish());
+        run(&mut b, 100);
+        assert_eq!(b.core.regs[T0 as usize], 101);
+    }
+}

@@ -1,0 +1,325 @@
+//! Cluster DMA engine.
+//!
+//! A wide (512-bit) DMA engine moves data between DRAM and the TCDM
+//! (Table 1), programmed by the data-movement core (DMCC). Our L3
+//! coordinator plays the DMCC role and enqueues [`DmaJob`]s; the engine
+//! processes rows of a (possibly 2D-strided) transfer, scheduling DRAM
+//! bursts (which pipeline inside the channel, see [`super::dram`]) and
+//! moving up to 64 B per cycle through the TCDM wide port, retrying on
+//! bank conflicts.
+//!
+//! Up to [`MAX_OUTSTANDING`] row bursts are in flight at a time, which is
+//! what makes the double-buffered matrix transfer scheme of §4.2 resilient
+//! to hundreds of cycles of interconnect latency (Fig. 6b).
+
+use std::collections::VecDeque;
+
+use super::dram::Dram;
+use super::tcdm::Tcdm;
+
+pub const MAX_OUTSTANDING: usize = 4;
+/// Wide-port beat size (512 bit).
+pub const BEAT_BYTES: u64 = 64;
+
+/// One (possibly 2D) DMA transfer. All addresses and sizes must be
+/// multiples of 8 bytes (the TCDM word size).
+#[derive(Clone, Copy, Debug)]
+pub struct DmaJob {
+    pub dram_addr: u64,
+    pub tcdm_addr: u64,
+    /// Contiguous bytes per row.
+    pub row_bytes: u64,
+    /// Number of rows (1 for a flat copy).
+    pub rows: u64,
+    /// Byte stride between row starts on the DRAM side.
+    pub dram_stride: u64,
+    /// Byte stride between row starts on the TCDM side.
+    pub tcdm_stride: u64,
+    /// Direction: true = DRAM -> TCDM (read), false = TCDM -> DRAM.
+    pub to_tcdm: bool,
+}
+
+impl DmaJob {
+    pub fn flat(dram_addr: u64, tcdm_addr: u64, bytes: u64, to_tcdm: bool) -> Self {
+        DmaJob {
+            dram_addr,
+            tcdm_addr,
+            row_bytes: bytes,
+            rows: 1,
+            dram_stride: 0,
+            tcdm_stride: 0,
+            to_tcdm,
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.row_bytes * self.rows
+    }
+
+    fn validate(&self) {
+        assert!(self.row_bytes > 0 && self.rows > 0);
+        assert_eq!(self.dram_addr % 8, 0);
+        assert_eq!(self.tcdm_addr % 8, 0);
+        assert_eq!(self.row_bytes % 8, 0);
+        if self.rows > 1 {
+            assert_eq!(self.dram_stride % 8, 0);
+            assert_eq!(self.tcdm_stride % 8, 0);
+        }
+    }
+}
+
+/// An in-flight row of the active job.
+struct RowXfer {
+    dram_addr: u64,
+    tcdm_addr: u64,
+    bytes: u64,
+    /// Read path: cycle the first beat arrives; write path: unused.
+    first_beat: u64,
+    /// Bytes already moved through the TCDM port.
+    moved: u64,
+    /// Write path: all TCDM reads done, burst scheduled, completes at...
+    drain_done: Option<u64>,
+}
+
+pub struct Dma {
+    queue: VecDeque<DmaJob>,
+    active: Option<DmaJob>,
+    /// Next row index of the active job to launch.
+    next_row: u64,
+    inflight: VecDeque<RowXfer>,
+    /// Completion counter: one increment per finished job. The coordinator
+    /// uses it to sequence double-buffer phases.
+    pub jobs_done: u64,
+    pub jobs_submitted: u64,
+    /// Busy-cycle statistic (any in-flight work).
+    pub busy_cycles: u64,
+}
+
+impl Default for Dma {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dma {
+    pub fn new() -> Self {
+        Dma {
+            queue: VecDeque::new(),
+            active: None,
+            next_row: 0,
+            inflight: VecDeque::new(),
+            jobs_done: 0,
+            jobs_submitted: 0,
+            busy_cycles: 0,
+        }
+    }
+
+    pub fn submit(&mut self, job: DmaJob) {
+        job.validate();
+        self.jobs_submitted += 1;
+        self.queue.push_back(job);
+    }
+
+    pub fn busy(&self) -> bool {
+        self.active.is_some() || !self.queue.is_empty()
+    }
+
+    /// Tick one cycle. Moves at most one 64 B beat through the TCDM wide
+    /// port (the engine has a single wide port).
+    pub fn tick(&mut self, now: u64, tcdm: &mut Tcdm, dram: &mut Dram) {
+        if self.active.is_none() {
+            if let Some(job) = self.queue.pop_front() {
+                self.active = Some(job);
+                self.next_row = 0;
+            } else {
+                return;
+            }
+        }
+        self.busy_cycles += 1;
+        let job = *self.active.as_ref().unwrap();
+
+        // Launch row bursts up to the outstanding limit.
+        while self.next_row < job.rows && self.inflight.len() < MAX_OUTSTANDING {
+            let r = self.next_row;
+            let dram_addr = job.dram_addr + r * job.dram_stride;
+            let tcdm_addr = job.tcdm_addr + r * job.tcdm_stride;
+            if job.to_tcdm {
+                let t = dram.schedule_read(now, job.row_bytes);
+                self.inflight.push_back(RowXfer {
+                    dram_addr,
+                    tcdm_addr,
+                    bytes: job.row_bytes,
+                    first_beat: t.first_beat,
+                    moved: 0,
+                    drain_done: None,
+                });
+            } else {
+                self.inflight.push_back(RowXfer {
+                    dram_addr,
+                    tcdm_addr,
+                    bytes: job.row_bytes,
+                    first_beat: 0,
+                    moved: 0,
+                    drain_done: None,
+                });
+            }
+            self.next_row += 1;
+        }
+
+        // Service the head row (in-order completion keeps TCDM writes
+        // deterministic).
+        if let Some(row) = self.inflight.front_mut() {
+            if job.to_tcdm {
+                // How many bytes have arrived from DRAM by `now`?
+                let arrived = if now < row.first_beat {
+                    0
+                } else {
+                    (((now - row.first_beat + 1) as f64) * dram.bytes_per_cycle()) as u64
+                }
+                .min(row.bytes);
+                let pending = arrived.saturating_sub(row.moved);
+                if pending >= 8 || (pending > 0 && row.moved + pending == row.bytes) {
+                    let chunk = pending.min(BEAT_BYTES) & !7;
+                    let chunk = if chunk == 0 { pending } else { chunk };
+                    let src = row.dram_addr + row.moved;
+                    let dst = row.tcdm_addr + row.moved;
+                    let data: Vec<u8> = dram.read_bytes(src, chunk as usize).to_vec();
+                    if tcdm.try_write_wide(dst, &data) {
+                        row.moved += chunk;
+                    }
+                }
+                if row.moved == row.bytes {
+                    self.inflight.pop_front();
+                }
+            } else {
+                // TCDM -> DRAM: stream reads through the wide port, then
+                // schedule the DRAM write burst once the row is drained.
+                if row.moved < row.bytes {
+                    let chunk = (row.bytes - row.moved).min(BEAT_BYTES);
+                    let src = row.tcdm_addr + row.moved;
+                    let mut buf = vec![0u8; chunk as usize];
+                    if tcdm.try_read_wide(src, &mut buf) {
+                        dram.write_bytes(row.dram_addr + row.moved, &buf);
+                        row.moved += chunk;
+                        if row.moved == row.bytes {
+                            let t = dram.schedule_write(now, row.bytes);
+                            row.drain_done = Some(t.last_beat);
+                        }
+                    }
+                } else if let Some(done) = row.drain_done {
+                    if now >= done {
+                        self.inflight.pop_front();
+                    }
+                }
+            }
+        }
+
+        // Job complete?
+        if self.next_row == job.rows && self.inflight.is_empty() {
+            self.active = None;
+            self.jobs_done += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_until_done(dma: &mut Dma, tcdm: &mut Tcdm, dram: &mut Dram, limit: u64) -> u64 {
+        let mut now = 0;
+        while dma.busy() {
+            now += 1;
+            assert!(now < limit, "DMA did not finish within {limit} cycles");
+            tcdm.new_cycle(now);
+            dma.tick(now, tcdm, dram);
+        }
+        now
+    }
+
+    #[test]
+    fn flat_read_copies_and_takes_latency() {
+        let mut tcdm = Tcdm::new(128 << 10, 32);
+        let mut dram = Dram::new(1 << 16);
+        let payload: Vec<u8> = (0..4096u32).map(|x| x as u8).collect();
+        dram.write_bytes(0x100, &payload);
+        let mut dma = Dma::new();
+        dma.submit(DmaJob::flat(0x100, 0x40, 4096, true));
+        let cycles = run_until_done(&mut dma, &mut tcdm, &mut dram, 100_000);
+        assert_eq!(tcdm.read_bytes(0x40, 4096), &payload[..]);
+        // must at least pay interconnect + dram latency + transfer
+        assert!(cycles >= 16 + 88 + 4096 / 64, "cycles={cycles}");
+        // and not be wildly slower (beat rate bound)
+        assert!(cycles < 16 + 88 + 16 + 2 * (4096 / 57) + 64, "cycles={cycles}");
+    }
+
+    #[test]
+    fn flat_write_roundtrip() {
+        let mut tcdm = Tcdm::new(128 << 10, 32);
+        let mut dram = Dram::new(1 << 16);
+        let payload: Vec<u8> = (0..1024u32).map(|x| (x * 7) as u8).collect();
+        tcdm.load_bytes(0x200, &payload);
+        let mut dma = Dma::new();
+        dma.submit(DmaJob::flat(0x800, 0x200, 1024, false));
+        run_until_done(&mut dma, &mut tcdm, &mut dram, 100_000);
+        assert_eq!(dram.read_bytes(0x800, 1024), &payload[..]);
+    }
+
+    #[test]
+    fn strided_2d_transfer() {
+        let mut tcdm = Tcdm::new(128 << 10, 32);
+        let mut dram = Dram::new(1 << 16);
+        // 4 rows of 64 B at stride 256 in DRAM, packed in TCDM.
+        for r in 0..4u64 {
+            let row: Vec<u8> = (0..64).map(|i| (r * 100 + i) as u8).collect();
+            dram.write_bytes(r * 256, &row);
+        }
+        let mut dma = Dma::new();
+        dma.submit(DmaJob {
+            dram_addr: 0,
+            tcdm_addr: 0,
+            row_bytes: 64,
+            rows: 4,
+            dram_stride: 256,
+            tcdm_stride: 64,
+            to_tcdm: true,
+        });
+        run_until_done(&mut dma, &mut tcdm, &mut dram, 100_000);
+        for r in 0..4u64 {
+            let expect: Vec<u8> = (0..64).map(|i| (r * 100 + i) as u8).collect();
+            assert_eq!(tcdm.read_bytes(r * 64, 64), &expect[..]);
+        }
+    }
+
+    #[test]
+    fn jobs_queue_fifo() {
+        let mut tcdm = Tcdm::new(128 << 10, 32);
+        let mut dram = Dram::new(1 << 16);
+        dram.write_bytes(0, &[1u8; 64]);
+        dram.write_bytes(64, &[2u8; 64]);
+        let mut dma = Dma::new();
+        dma.submit(DmaJob::flat(0, 0, 64, true));
+        dma.submit(DmaJob::flat(64, 0, 64, true)); // overwrites
+        run_until_done(&mut dma, &mut tcdm, &mut dram, 100_000);
+        assert_eq!(dma.jobs_done, 2);
+        assert_eq!(tcdm.read_bytes(0, 64), &[2u8; 64]);
+    }
+
+    #[test]
+    fn throughput_tracks_bandwidth_throttle() {
+        // 32 KiB at full vs 1/9 bandwidth: the transfer time should scale.
+        let run = |gbps: f64| -> u64 {
+            let mut tcdm = Tcdm::new(128 << 10, 32);
+            let mut dram = Dram::with_params(1 << 20, gbps, 88, 16);
+            let mut dma = Dma::new();
+            dma.submit(DmaJob::flat(0, 0, 32 << 10, true));
+            run_until_done(&mut dma, &mut tcdm, &mut dram, 10_000_000)
+        };
+        let fast = run(3.6);
+        let slow = run(0.4);
+        assert!(
+            (slow as f64) > 6.0 * fast as f64,
+            "slow={slow} fast={fast}: expected ~9x stretch"
+        );
+    }
+}

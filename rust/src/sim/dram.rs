@@ -1,0 +1,212 @@
+//! Main-memory model: one channel of an HBM2E device plus the on-chip
+//! interconnect in front of it.
+//!
+//! The paper connects the cluster to one of eight channels of a Micron
+//! HBM2E part via DRAMSys: 3.6 Gb/s/pin (57.6 GB/s peak over a 128-bit
+//! channel), 88 ns average round-trip latency, plus 16 cycles of modeled
+//! one-way on-chip interconnect latency (§4.2). We reproduce those
+//! first-order characteristics — peak bandwidth, fixed service latency,
+//! FCFS data-bus occupancy — which are exactly the knobs Fig. 6 sweeps.
+//!
+//! Backing storage doubles as the simulated main memory contents.
+
+/// Timing descriptor for one scheduled burst.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BurstTiming {
+    /// Cycle at which the first beat arrives back at the cluster.
+    pub first_beat: u64,
+    /// Cycle at which the last beat has arrived (transfer complete).
+    pub last_beat: u64,
+}
+
+pub struct Dram {
+    mem: Vec<u8>,
+    /// Peak channel bandwidth in bytes per cluster cycle.
+    bytes_per_cycle: f64,
+    /// Average DRAM round-trip latency in cycles (PHY + controller + device).
+    pub latency: u64,
+    /// One-way on-chip interconnect latency in cycles (§4.2.1 sweeps this).
+    pub ic_latency: u64,
+    /// Data-bus occupancy horizon: the channel is busy until this cycle.
+    busy_until: u64,
+    // ---- statistics ----
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub bursts: u64,
+}
+
+/// 3.6 Gb/s/pin on a 128-pin channel at a 1 GHz cluster clock
+/// = 57.6 GB/s = 57.6 B/cycle.
+pub const GBPS_PIN_FULL: f64 = 3.6;
+pub const CHANNEL_PINS: f64 = 128.0;
+pub const DEFAULT_LATENCY: u64 = 88;
+pub const DEFAULT_IC_LATENCY: u64 = 16;
+
+impl Dram {
+    pub fn new(size_bytes: usize) -> Self {
+        Self::with_params(size_bytes, GBPS_PIN_FULL, DEFAULT_LATENCY, DEFAULT_IC_LATENCY)
+    }
+
+    pub fn with_params(size_bytes: usize, gbps_per_pin: f64, latency: u64, ic_latency: u64) -> Self {
+        Dram {
+            mem: vec![0; size_bytes],
+            bytes_per_cycle: gbps_per_pin * CHANNEL_PINS / 8.0,
+            latency,
+            ic_latency,
+            busy_until: 0,
+            bytes_read: 0,
+            bytes_written: 0,
+            bursts: 0,
+        }
+    }
+
+    /// Set the available channel bandwidth in Gb/s/pin (Fig. 6a sweep:
+    /// simulates sharing the channel with other bus agents).
+    pub fn set_gbps_per_pin(&mut self, gbps: f64) {
+        self.bytes_per_cycle = gbps * CHANNEL_PINS / 8.0;
+    }
+
+    pub fn gbps_per_pin(&self) -> f64 {
+        self.bytes_per_cycle * 8.0 / CHANNEL_PINS
+    }
+
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.bytes_per_cycle
+    }
+
+    /// Schedule a read burst of `bytes` issued by the DMA at cycle `now`.
+    /// Returns when its beats arrive at the cluster. FCFS: the data bus
+    /// serves one burst at a time; requests pipeline behind each other, so
+    /// only the first burst of a back-to-back train pays the full latency.
+    pub fn schedule_read(&mut self, now: u64, bytes: u64) -> BurstTiming {
+        self.bytes_read += bytes;
+        self.schedule(now, bytes)
+    }
+
+    /// Schedule a write burst (timing symmetric to reads at this level;
+    /// posted writes complete when the last beat leaves the cluster and
+    /// the channel has absorbed them).
+    pub fn schedule_write(&mut self, now: u64, bytes: u64) -> BurstTiming {
+        self.bytes_written += bytes;
+        self.schedule(now, bytes)
+    }
+
+    fn schedule(&mut self, now: u64, bytes: u64) -> BurstTiming {
+        self.bursts += 1;
+        let request_at_device = now + self.ic_latency;
+        let data_start = (request_at_device + self.latency).max(self.busy_until);
+        let occupancy = (bytes as f64 / self.bytes_per_cycle).ceil() as u64;
+        let data_end = data_start + occupancy.max(1);
+        self.busy_until = data_end;
+        BurstTiming {
+            first_beat: data_start + self.ic_latency,
+            last_beat: data_end + self.ic_latency,
+        }
+    }
+
+    /// Cycle until which the channel data bus is occupied.
+    pub fn busy_until(&self) -> u64 {
+        self.busy_until
+    }
+
+    // ---- zero-time backing-store access (DMA payload + host setup) ----
+
+    pub fn size(&self) -> usize {
+        self.mem.len()
+    }
+
+    pub fn read_bytes(&self, addr: u64, len: usize) -> &[u8] {
+        &self.mem[addr as usize..addr as usize + len]
+    }
+
+    pub fn write_bytes(&mut self, addr: u64, bytes: &[u8]) {
+        self.mem[addr as usize..addr as usize + bytes.len()].copy_from_slice(bytes);
+    }
+
+    pub fn peek(&self, addr: u64, bytes: u64) -> u64 {
+        let a = addr as usize;
+        let mut v = 0u64;
+        for i in 0..bytes as usize {
+            v |= (self.mem[a + i] as u64) << (8 * i);
+        }
+        v
+    }
+
+    pub fn poke(&mut self, addr: u64, bytes: u64, value: u64) {
+        let a = addr as usize;
+        for i in 0..bytes as usize {
+            self.mem[a + i] = (value >> (8 * i)) as u8;
+        }
+    }
+
+    pub fn poke_f64(&mut self, addr: u64, v: f64) {
+        self.poke(addr, 8, v.to_bits());
+    }
+
+    pub fn peek_f64(&self, addr: u64) -> f64 {
+        f64::from_bits(self.peek(addr, 8))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_burst_pays_full_latency() {
+        let mut d = Dram::new(1 << 16);
+        let t = d.schedule_read(0, 576);
+        // request travels 16, waits 88, streams 576/57.6 = 10 cycles, +16 back
+        assert_eq!(t.first_beat, 16 + 88 + 16);
+        assert_eq!(t.last_beat, 16 + 88 + 10 + 16);
+    }
+
+    #[test]
+    fn back_to_back_bursts_pipeline() {
+        let mut d = Dram::new(1 << 16);
+        let a = d.schedule_read(0, 5760); // 100 cycles occupancy
+        let b = d.schedule_read(1, 5760);
+        // second burst's data starts right after the first's occupancy ends
+        assert_eq!(b.first_beat, a.last_beat - 16 + 16); // contiguous streaming
+        assert_eq!(b.last_beat - a.last_beat, 100);
+    }
+
+    #[test]
+    fn throttled_bandwidth_stretches_occupancy() {
+        let mut full = Dram::new(1 << 16);
+        let mut tenth = Dram::new(1 << 16);
+        tenth.set_gbps_per_pin(0.36);
+        let a = full.schedule_read(0, 57_600);
+        let b = tenth.schedule_read(0, 57_600);
+        let occ_full = a.last_beat - a.first_beat;
+        let occ_tenth = b.last_beat - b.first_beat;
+        assert_eq!(occ_full, 1000);
+        assert_eq!(occ_tenth, 10_000);
+    }
+
+    #[test]
+    fn latency_knob_is_respected() {
+        let mut d = Dram::with_params(1 << 12, GBPS_PIN_FULL, 88, 64);
+        let t = d.schedule_read(0, 64);
+        assert_eq!(t.first_beat, 64 + 88 + 64);
+    }
+
+    #[test]
+    fn backing_store_roundtrip() {
+        let mut d = Dram::new(1 << 12);
+        d.poke_f64(16, -2.5);
+        assert_eq!(d.peek_f64(16), -2.5);
+        d.write_bytes(100, &[1, 2, 3]);
+        assert_eq!(d.read_bytes(100, 3), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut d = Dram::new(1 << 12);
+        d.schedule_read(0, 128);
+        d.schedule_write(5, 64);
+        assert_eq!(d.bytes_read, 128);
+        assert_eq!(d.bytes_written, 64);
+        assert_eq!(d.bursts, 2);
+    }
+}

@@ -1,0 +1,631 @@
+//! The Snitch FP subsystem: a decoupled sequencer FIFO, the FREP hardware
+//! loop with register staggering, the FP register file with a latency
+//! scoreboard, and the stream-register interface to the SSSR streamer.
+//!
+//! Snitch is "pseudo dual-issue" (Zaruba et al. [16]): the integer core
+//! issues FP-path instructions into the sequencer and runs ahead; the FPU
+//! executes them in order at up to one per cycle. FREP loops replay a
+//! buffered body without further issue, which is what lets a single-issue
+//! core keep the FPU at 100 % on streamed data.
+
+use std::collections::VecDeque;
+
+use super::isa::FReg;
+use super::ssr::comparator::StrCtl;
+use super::ssr::Streamer;
+use super::tcdm::{Access, Tcdm};
+
+/// Sequencer capacity (instruction credits between core and FPU).
+pub const SEQ_DEPTH: usize = 16;
+/// Max FREP body length (loop buffer size).
+pub const LOOP_BUF: usize = 16;
+
+/// FP pipeline latencies (cycles until the result register is usable).
+pub const LAT_FMA: u64 = 3;
+pub const LAT_DIV: u64 = 11;
+pub const LAT_SIMPLE: u64 = 1;
+pub const LAT_FLD: u64 = 1;
+
+/// A resolved FP micro-op: integer operands (addresses, int values) were
+/// read from the integer register file at issue time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ROp {
+    Fmadd { rd: FReg, rs1: FReg, rs2: FReg, rs3: FReg },
+    Fadd { rd: FReg, rs1: FReg, rs2: FReg },
+    Fsub { rd: FReg, rs1: FReg, rs2: FReg },
+    Fmul { rd: FReg, rs1: FReg, rs2: FReg },
+    Fdiv { rd: FReg, rs1: FReg, rs2: FReg },
+    Fmax { rd: FReg, rs1: FReg, rs2: FReg },
+    Fmin { rd: FReg, rs1: FReg, rs2: FReg },
+    Fmv { rd: FReg, rs: FReg },
+    FcvtInt { rd: FReg, value: i64 },
+    Fld { rd: FReg, addr: u64 },
+    Fsd { rs: FReg, addr: u64 },
+}
+
+impl ROp {
+    fn is_flop(self) -> bool {
+        matches!(
+            self,
+            ROp::Fmadd { .. }
+                | ROp::Fadd { .. }
+                | ROp::Fsub { .. }
+                | ROp::Fmul { .. }
+                | ROp::Fdiv { .. }
+                | ROp::Fmax { .. }
+                | ROp::Fmin { .. }
+        )
+    }
+
+    fn latency(self) -> u64 {
+        match self {
+            ROp::Fmadd { .. } | ROp::Fadd { .. } | ROp::Fsub { .. } | ROp::Fmul { .. } => LAT_FMA,
+            ROp::Fdiv { .. } => LAT_DIV,
+            ROp::Fld { .. } => LAT_FLD,
+            _ => LAT_SIMPLE,
+        }
+    }
+}
+
+/// Resolved FREP iteration count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RCount {
+    Iters(u64),
+    Stream,
+}
+
+/// Sequencer entries.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SeqEntry {
+    Op(ROp),
+    Frep { count: RCount, n_instrs: u8, stagger_count: u8, stagger_mask: u8 },
+}
+
+enum State {
+    Idle,
+    Loop(LoopState),
+}
+
+struct LoopState {
+    body: Vec<ROp>,
+    need: u8,
+    count: RCount,
+    iter: u64,
+    pos: usize,
+    stagger_count: u8,
+    stagger_mask: u8,
+    /// For `frep.s`: the current iteration has been admitted by a
+    /// stream-control token.
+    admitted: bool,
+}
+
+pub struct Fpu {
+    pub regs: [f64; 32],
+    ready_at: [u64; 32],
+    seq: VecDeque<SeqEntry>,
+    state: State,
+    // ---- statistics ----
+    pub flops: u64,
+    pub ops_executed: u64,
+    pub fld_count: u64,
+    pub fsd_count: u64,
+    pub stall_on_stream: u64,
+    pub stall_on_dep: u64,
+}
+
+impl Default for Fpu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fpu {
+    pub fn new() -> Self {
+        Fpu {
+            regs: [0.0; 32],
+            ready_at: [0; 32],
+            seq: VecDeque::new(),
+            state: State::Idle,
+            flops: 0,
+            ops_executed: 0,
+            fld_count: 0,
+            fsd_count: 0,
+            stall_on_stream: 0,
+            stall_on_dep: 0,
+        }
+    }
+
+    /// Issue an entry from the integer core. Returns false if the
+    /// sequencer is full (core must stall).
+    pub fn push(&mut self, e: SeqEntry) -> bool {
+        if self.seq.len() >= SEQ_DEPTH {
+            return false;
+        }
+        self.seq.push_back(e);
+        true
+    }
+
+    /// FPU and sequencer fully idle (for `core_fpu_fence`).
+    pub fn idle(&self) -> bool {
+        self.seq.is_empty() && matches!(self.state, State::Idle)
+    }
+
+    #[inline]
+    fn stagger_reg(base: FReg, iter: u64, count: u8) -> FReg {
+        if count == 0 {
+            base
+        } else {
+            base + (iter % (count as u64 + 1)) as u8
+        }
+    }
+
+    fn apply_stagger(op: ROp, iter: u64, count: u8, mask: u8) -> ROp {
+        use super::isa::stagger;
+        let st = |pos: u8, r: FReg| {
+            if mask & pos != 0 {
+                Self::stagger_reg(r, iter, count)
+            } else {
+                r
+            }
+        };
+        match op {
+            ROp::Fmadd { rd, rs1, rs2, rs3 } => ROp::Fmadd {
+                rd: st(stagger::RD, rd),
+                rs1: st(stagger::RS1, rs1),
+                rs2: st(stagger::RS2, rs2),
+                rs3: st(stagger::RS3, rs3),
+            },
+            ROp::Fadd { rd, rs1, rs2 } => ROp::Fadd {
+                rd: st(stagger::RD, rd),
+                rs1: st(stagger::RS1, rs1),
+                rs2: st(stagger::RS2, rs2),
+            },
+            ROp::Fsub { rd, rs1, rs2 } => ROp::Fsub {
+                rd: st(stagger::RD, rd),
+                rs1: st(stagger::RS1, rs1),
+                rs2: st(stagger::RS2, rs2),
+            },
+            ROp::Fmul { rd, rs1, rs2 } => ROp::Fmul {
+                rd: st(stagger::RD, rd),
+                rs1: st(stagger::RS1, rs1),
+                rs2: st(stagger::RS2, rs2),
+            },
+            other => other,
+        }
+    }
+
+    /// Execute at most one FP op this cycle.
+    ///
+    /// `port_a_free` is the CC's shared memory port: `Fld`/`Fsd` claim it.
+    pub fn tick(
+        &mut self,
+        now: u64,
+        streamer: &mut Streamer,
+        tcdm: &mut Tcdm,
+        port_a_free: &mut bool,
+    ) {
+        // Refill loop body if we are mid-fill.
+        if let State::Loop(l) = &mut self.state {
+            while (l.body.len() as u8) < l.need {
+                match self.seq.front() {
+                    Some(SeqEntry::Op(op)) => {
+                        l.body.push(*op);
+                        self.seq.pop_front();
+                    }
+                    Some(SeqEntry::Frep { .. }) => panic!("nested FREP is not supported"),
+                    None => return, // body not yet issued
+                }
+            }
+        }
+
+        match &mut self.state {
+            State::Idle => match self.seq.front().copied() {
+                None => {}
+                Some(SeqEntry::Frep { count, n_instrs, stagger_count, stagger_mask }) => {
+                    assert!(n_instrs as usize <= LOOP_BUF, "FREP body too long");
+                    assert!(n_instrs > 0, "empty FREP body");
+                    self.seq.pop_front();
+                    let zero_iters = matches!(count, RCount::Iters(0));
+                    self.state = State::Loop(LoopState {
+                        body: Vec::with_capacity(n_instrs as usize),
+                        need: n_instrs,
+                        count,
+                        iter: 0,
+                        pos: 0,
+                        stagger_count,
+                        stagger_mask,
+                        admitted: false,
+                    });
+                    if zero_iters {
+                        // Degenerate: still must swallow the body ops.
+                        // Body fill happens next cycles; completion check
+                        // below handles it.
+                    }
+                }
+                Some(SeqEntry::Op(op)) => {
+                    if self.try_exec(op, now, streamer, tcdm, port_a_free) {
+                        self.seq.pop_front();
+                    }
+                }
+            },
+            State::Loop(_) => {
+                self.loop_step(now, streamer, tcdm, port_a_free);
+            }
+        }
+    }
+
+    fn loop_step(
+        &mut self,
+        now: u64,
+        streamer: &mut Streamer,
+        tcdm: &mut Tcdm,
+        port_a_free: &mut bool,
+    ) {
+        let State::Loop(l) = &mut self.state else { unreachable!() };
+        if (l.body.len() as u8) < l.need {
+            return; // still filling
+        }
+        // Check iteration admission.
+        let done = match l.count {
+            RCount::Iters(n) => l.iter >= n,
+            RCount::Stream => {
+                if l.pos == 0 && !l.admitted {
+                    match streamer.strctl_pop() {
+                        Some(StrCtl::Elem) => {
+                            l.admitted = true;
+                            false
+                        }
+                        Some(StrCtl::End) => true,
+                        None => {
+                            self.stall_on_stream += 1;
+                            return; // wait for comparator
+                        }
+                    }
+                } else {
+                    false
+                }
+            }
+        };
+        if done {
+            self.state = State::Idle;
+            return;
+        }
+        let op = Self::apply_stagger(l.body[l.pos], l.iter, l.stagger_count, l.stagger_mask);
+        let (pos, iter) = (l.pos, l.iter);
+        let nbody = l.body.len();
+        if self.try_exec(op, now, streamer, tcdm, port_a_free) {
+            let State::Loop(l) = &mut self.state else { unreachable!() };
+            l.pos = pos + 1;
+            if l.pos == nbody {
+                l.pos = 0;
+                l.iter = iter + 1;
+                l.admitted = false;
+                if let RCount::Iters(n) = l.count {
+                    if l.iter >= n {
+                        self.state = State::Idle;
+                    }
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn read_src(&mut self, streamer: &mut Streamer, r: FReg) -> f64 {
+        if streamer.is_stream_reg(r) {
+            streamer.units[r as usize].pop_data().expect("stream checked above")
+        } else {
+            self.regs[r as usize]
+        }
+    }
+
+    /// Attempt to execute `op`; returns true on success.
+    fn try_exec(
+        &mut self,
+        op: ROp,
+        now: u64,
+        streamer: &mut Streamer,
+        tcdm: &mut Tcdm,
+        port_a_free: &mut bool,
+    ) -> bool {
+        // Gather source operands, checking stream availability and the
+        // scoreboard.
+        let srcs: &[FReg] = match &op {
+            ROp::Fmadd { rs1, rs2, rs3, .. } => &[*rs1, *rs2, *rs3],
+            ROp::Fadd { rs1, rs2, .. }
+            | ROp::Fsub { rs1, rs2, .. }
+            | ROp::Fmul { rs1, rs2, .. }
+            | ROp::Fdiv { rs1, rs2, .. }
+            | ROp::Fmax { rs1, rs2, .. }
+            | ROp::Fmin { rs1, rs2, .. } => &[*rs1, *rs2],
+            ROp::Fmv { rs, .. } => &[*rs],
+            ROp::Fsd { rs, .. } => &[*rs],
+            ROp::FcvtInt { .. } | ROp::Fld { .. } => &[],
+        };
+        // All stream sources must have data; all register sources ready.
+        for &r in srcs {
+            if streamer.is_stream_reg(r) {
+                if !streamer.units[r as usize].can_pop_data() {
+                    self.stall_on_stream += 1;
+                    return false;
+                }
+            } else if self.ready_at[r as usize] > now {
+                self.stall_on_dep += 1;
+                return false;
+            }
+        }
+        // Destination stream register needs write-FIFO space.
+        let dest: Option<FReg> = match &op {
+            ROp::Fmadd { rd, .. }
+            | ROp::Fadd { rd, .. }
+            | ROp::Fsub { rd, .. }
+            | ROp::Fmul { rd, .. }
+            | ROp::Fdiv { rd, .. }
+            | ROp::Fmax { rd, .. }
+            | ROp::Fmin { rd, .. }
+            | ROp::Fmv { rd, .. }
+            | ROp::FcvtInt { rd, .. }
+            | ROp::Fld { rd, .. } => Some(*rd),
+            ROp::Fsd { .. } => None,
+        };
+        if let Some(rd) = dest {
+            if streamer.is_stream_reg(rd) && !streamer.units[rd as usize].can_push_wdata() {
+                self.stall_on_stream += 1;
+                return false;
+            }
+        }
+        // Memory ops need the shared port.
+        if matches!(op, ROp::Fld { .. } | ROp::Fsd { .. }) {
+            if !*port_a_free {
+                return false;
+            }
+        }
+
+        // Read operands (popping streams in operand order).
+        let value = match op {
+            ROp::Fmadd { rs1, rs2, rs3, .. } => {
+                let a = self.read_src(streamer, rs1);
+                let b = self.read_src(streamer, rs2);
+                let c = self.read_src(streamer, rs3);
+                a.mul_add(b, c)
+            }
+            ROp::Fadd { rs1, rs2, .. } => self.read_src(streamer, rs1) + self.read_src(streamer, rs2),
+            ROp::Fsub { rs1, rs2, .. } => self.read_src(streamer, rs1) - self.read_src(streamer, rs2),
+            ROp::Fmul { rs1, rs2, .. } => self.read_src(streamer, rs1) * self.read_src(streamer, rs2),
+            ROp::Fdiv { rs1, rs2, .. } => self.read_src(streamer, rs1) / self.read_src(streamer, rs2),
+            ROp::Fmax { rs1, rs2, .. } => {
+                let a = self.read_src(streamer, rs1);
+                a.max(self.read_src(streamer, rs2))
+            }
+            ROp::Fmin { rs1, rs2, .. } => {
+                let a = self.read_src(streamer, rs1);
+                a.min(self.read_src(streamer, rs2))
+            }
+            ROp::Fmv { rs, .. } => self.read_src(streamer, rs),
+            ROp::FcvtInt { value, .. } => value as f64,
+            ROp::Fld { addr, .. } => {
+                match tcdm.try_read(addr, 8) {
+                    Access::Granted(bits) => {
+                        *port_a_free = false;
+                        self.fld_count += 1;
+                        f64::from_bits(bits)
+                    }
+                    Access::Conflict => {
+                        // port consumed, bank conflict: retry next cycle
+                        *port_a_free = false;
+                        return false;
+                    }
+                }
+            }
+            ROp::Fsd { rs, addr } => {
+                let v = self.regs[rs as usize];
+                let v = if streamer.is_stream_reg(rs) {
+                    streamer.units[rs as usize].pop_data().expect("checked")
+                } else {
+                    v
+                };
+                match tcdm.try_write(addr, 8, v.to_bits()) {
+                    Access::Granted(_) => {
+                        *port_a_free = false;
+                        self.fsd_count += 1;
+                        self.ops_executed += 1;
+                        return true;
+                    }
+                    Access::Conflict => {
+                        // NOTE: a conflicting Fsd with a *stream* source
+                        // would have popped the value already; kernels
+                        // never stream-source an Fsd, asserted here.
+                        assert!(
+                            !streamer.is_stream_reg(rs),
+                            "Fsd from stream register hit a bank conflict"
+                        );
+                        *port_a_free = false;
+                        return false;
+                    }
+                }
+            }
+        };
+
+        // Write destination.
+        if let Some(rd) = dest {
+            if streamer.is_stream_reg(rd) {
+                let ok = streamer.units[rd as usize].push_wdata(value);
+                debug_assert!(ok, "wdata space checked above");
+            } else {
+                self.regs[rd as usize] = value;
+                self.ready_at[rd as usize] = now + op.latency();
+            }
+        }
+        if op.is_flop() {
+            self.flops += 1;
+        }
+        self.ops_executed += 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> (Fpu, Streamer, Tcdm) {
+        (Fpu::new(), Streamer::new(), Tcdm::new(64 << 10, 32))
+    }
+
+    fn run(fpu: &mut Fpu, s: &mut Streamer, t: &mut Tcdm, cycles: u64) {
+        for now in 1..=cycles {
+            t.new_cycle(now);
+            let mut pa = true;
+            fpu.tick(now, s, t, &mut pa);
+        }
+    }
+
+    #[test]
+    fn simple_add_executes() {
+        let (mut fpu, mut s, mut t) = mk();
+        fpu.regs[4] = 2.0;
+        fpu.regs[5] = 3.0;
+        assert!(fpu.push(SeqEntry::Op(ROp::Fadd { rd: 6, rs1: 4, rs2: 5 })));
+        run(&mut fpu, &mut s, &mut t, 2);
+        assert_eq!(fpu.regs[6], 5.0);
+        assert_eq!(fpu.flops, 1);
+        assert!(fpu.idle());
+    }
+
+    #[test]
+    fn dependency_stalls_by_latency() {
+        let (mut fpu, mut s, mut t) = mk();
+        fpu.regs[4] = 1.0;
+        fpu.push(SeqEntry::Op(ROp::Fadd { rd: 5, rs1: 4, rs2: 4 })); // 2.0 at t+3
+        fpu.push(SeqEntry::Op(ROp::Fadd { rd: 6, rs1: 5, rs2: 5 })); // needs f5
+        run(&mut fpu, &mut s, &mut t, 1);
+        assert_eq!(fpu.regs[5], 2.0);
+        run(&mut fpu, &mut s, &mut t, 2); // cycles 2,3: f5 ready at 4
+        assert!(!fpu.idle(), "second add must stall until f5 latency expires");
+        let mut pa = true;
+        t.new_cycle(4);
+        fpu.tick(4, &mut s, &mut t, &mut pa);
+        assert_eq!(fpu.regs[6], 4.0);
+    }
+
+    #[test]
+    fn frep_imm_repeats_body() {
+        let (mut fpu, mut s, mut t) = mk();
+        fpu.regs[4] = 1.0;
+        fpu.regs[8] = 0.0;
+        fpu.push(SeqEntry::Frep { count: RCount::Iters(5), n_instrs: 1, stagger_count: 0, stagger_mask: 0 });
+        fpu.push(SeqEntry::Op(ROp::Fadd { rd: 8, rs1: 8, rs2: 4 }));
+        // each iteration depends on the previous via f8: 3-cycle chain
+        run(&mut fpu, &mut s, &mut t, 30);
+        assert_eq!(fpu.regs[8], 5.0);
+        assert!(fpu.idle());
+    }
+
+    #[test]
+    fn frep_stagger_breaks_dependency_chain() {
+        use crate::sim::isa::stagger;
+        let (mut fpu, mut s, mut t) = mk();
+        fpu.regs[20] = 1.0;
+        // 3 accumulators f8..f10, stagger rd+rs2
+        for r in 8..11 {
+            fpu.regs[r] = 0.0;
+        }
+        fpu.push(SeqEntry::Frep {
+            count: RCount::Iters(9),
+            n_instrs: 1,
+            stagger_count: 2,
+            stagger_mask: stagger::RD | stagger::RS2,
+        });
+        fpu.push(SeqEntry::Op(ROp::Fadd { rd: 8, rs1: 20, rs2: 8 }));
+        // with 3-deep stagger and LAT_FMA=3, should sustain ~1 op/cycle:
+        let mut now = 0;
+        while !fpu.idle() {
+            now += 1;
+            assert!(now < 20, "staggered loop too slow");
+            t.new_cycle(now);
+            let mut pa = true;
+            fpu.tick(now, &mut s, &mut t, &mut pa);
+        }
+        assert!(now <= 12, "9 staggered adds took {now} cycles");
+        assert_eq!(fpu.regs[8] + fpu.regs[9] + fpu.regs[10], 9.0);
+    }
+
+    #[test]
+    fn fld_fsd_roundtrip() {
+        let (mut fpu, mut s, mut t) = mk();
+        t.poke_f64(0x100, 7.5);
+        fpu.push(SeqEntry::Op(ROp::Fld { rd: 4, addr: 0x100 }));
+        fpu.push(SeqEntry::Op(ROp::Fsd { rs: 4, addr: 0x108 }));
+        run(&mut fpu, &mut s, &mut t, 5);
+        assert_eq!(t.peek_f64(0x108), 7.5);
+        assert!(fpu.idle());
+    }
+
+    #[test]
+    fn fld_blocked_without_port() {
+        let (mut fpu, mut s, mut t) = mk();
+        t.poke_f64(0x100, 1.0);
+        fpu.push(SeqEntry::Op(ROp::Fld { rd: 4, addr: 0x100 }));
+        t.new_cycle(1);
+        let mut pa = false; // port A taken
+        fpu.tick(1, &mut s, &mut t, &mut pa);
+        assert!(!fpu.idle());
+        t.new_cycle(2);
+        let mut pa = true;
+        fpu.tick(2, &mut s, &mut t, &mut pa);
+        assert!(fpu.idle());
+        assert_eq!(fpu.regs[4], 1.0);
+    }
+
+    #[test]
+    fn stream_read_feeds_fmadd() {
+        use crate::sim::isa::{ssr_mode, SsrField};
+        let (mut fpu, mut s, mut t) = mk();
+        // ft0 streams [1,2,3]; accumulate into f8.
+        for (i, v) in [1.0, 2.0, 3.0].iter().enumerate() {
+            t.poke_f64(0x100 + 8 * i as u64, *v);
+        }
+        s.cfg_write(0, SsrField::DataBase, 0x100);
+        s.cfg_write(0, SsrField::Bound0, 3);
+        s.cfg_write(0, SsrField::Stride0, 8);
+        s.cfg_write(0, SsrField::Bound1, 1);
+        s.cfg_write(0, SsrField::Bound2, 1);
+        s.cfg_write(0, SsrField::Bound3, 1);
+        s.cfg_write(0, SsrField::Launch, ssr_mode::AFFINE_READ);
+        s.enabled = true;
+        fpu.regs[20] = 2.0;
+        fpu.regs[8] = 0.0;
+        fpu.push(SeqEntry::Frep { count: RCount::Iters(3), n_instrs: 1, stagger_count: 0, stagger_mask: 0 });
+        fpu.push(SeqEntry::Op(ROp::Fmadd { rd: 8, rs1: 0, rs2: 20, rs3: 8 }));
+        let mut ports = crate::sim::ssr::Ports::default();
+        for now in 1..40 {
+            t.new_cycle(now);
+            ports.new_cycle();
+            s.tick(&mut t, &mut ports);
+            let mut pa = !ports.a_used;
+            fpu.tick(now, &mut s, &mut t, &mut pa);
+        }
+        assert_eq!(fpu.regs[8], 12.0); // (1+2+3)*2
+        assert!(fpu.idle());
+    }
+
+    #[test]
+    fn zero_iteration_frep_skips_body() {
+        let (mut fpu, mut s, mut t) = mk();
+        fpu.regs[4] = 1.0;
+        fpu.regs[8] = 0.0;
+        fpu.push(SeqEntry::Frep { count: RCount::Iters(0), n_instrs: 1, stagger_count: 0, stagger_mask: 0 });
+        fpu.push(SeqEntry::Op(ROp::Fadd { rd: 8, rs1: 8, rs2: 4 }));
+        run(&mut fpu, &mut s, &mut t, 10);
+        assert_eq!(fpu.regs[8], 0.0, "body must not execute");
+        assert!(fpu.idle());
+    }
+
+    #[test]
+    fn sequencer_backpressure() {
+        let (mut fpu, _s, _t) = mk();
+        for _ in 0..SEQ_DEPTH {
+            assert!(fpu.push(SeqEntry::Op(ROp::FcvtInt { rd: 4, value: 0 })));
+        }
+        assert!(!fpu.push(SeqEntry::Op(ROp::FcvtInt { rd: 4, value: 0 })));
+    }
+}

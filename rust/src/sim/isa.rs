@@ -1,0 +1,363 @@
+//! The mini-ISA executed by the simulated Snitch integer core and FP
+//! subsystem.
+//!
+//! This is the subset of RV32IMAFD + Xfrep + Xssr that the paper's kernels
+//! (Listings 1–4) actually use, plus the SSSR configuration interface
+//! (§2.3, §3). We model registers as 64-bit (RV64-style) so that byte
+//! addresses and loop counters fit without pseudo-expansion; this does not
+//! change any cycle count the paper reports, which depend on *instruction
+//! counts*, port arbitration, and FIFO behaviour.
+//!
+//! Branch targets are absolute instruction indices, resolved by the
+//! assembler in [`crate::sim::asm`]. Instruction addresses (for the I$)
+//! are `4 * index`.
+
+/// Integer register index (x0..x31, x0 hardwired to zero).
+pub type Reg = u8;
+/// FP register index (f0..f31).
+pub type FReg = u8;
+
+// ---- ABI names ------------------------------------------------------------
+pub const ZERO: Reg = 0;
+pub const RA: Reg = 1;
+pub const SP: Reg = 2;
+pub const T0: Reg = 5;
+pub const T1: Reg = 6;
+pub const T2: Reg = 7;
+pub const S0: Reg = 8;
+pub const S1: Reg = 9;
+pub const A0: Reg = 10;
+pub const A1: Reg = 11;
+pub const A2: Reg = 12;
+pub const A3: Reg = 13;
+pub const A4: Reg = 14;
+pub const A5: Reg = 15;
+pub const A6: Reg = 16;
+pub const A7: Reg = 17;
+pub const S2: Reg = 18;
+pub const S3: Reg = 19;
+pub const S4: Reg = 20;
+pub const S5: Reg = 21;
+pub const S6: Reg = 22;
+pub const S7: Reg = 23;
+pub const S8: Reg = 24;
+pub const S9: Reg = 25;
+pub const S10: Reg = 26;
+pub const S11: Reg = 27;
+pub const T3: Reg = 28;
+pub const T4: Reg = 29;
+pub const T5: Reg = 30;
+pub const T6: Reg = 31;
+
+/// FP temporaries. ft0..ft2 are the stream-semantic registers when SSR
+/// redirection is enabled (ISSR0 → ft0, ISSR1 → ft1, ESSR → ft2), as in
+/// the paper's default streamer configuration (§3).
+pub const FT0: FReg = 0;
+pub const FT1: FReg = 1;
+pub const FT2: FReg = 2;
+pub const FT3: FReg = 3;
+pub const FT4: FReg = 4;
+pub const FT5: FReg = 5;
+pub const FT6: FReg = 6;
+pub const FT7: FReg = 7;
+pub const FA0: FReg = 10;
+pub const FA1: FReg = 11;
+pub const FA2: FReg = 12;
+pub const FA3: FReg = 13;
+pub const FA4: FReg = 14;
+
+/// Memory access width, log2 bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemSize {
+    B = 0,
+    H = 1,
+    W = 2,
+    D = 3,
+}
+
+impl MemSize {
+    #[inline]
+    pub fn bytes(self) -> u64 {
+        1 << (self as u64)
+    }
+}
+
+/// Branch conditions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+    Ltu,
+    Geu,
+}
+
+impl Cond {
+    #[inline]
+    pub fn eval(self, a: i64, b: i64) -> bool {
+        match self {
+            Cond::Eq => a == b,
+            Cond::Ne => a != b,
+            Cond::Lt => a < b,
+            Cond::Ge => a >= b,
+            Cond::Ltu => (a as u64) < (b as u64),
+            Cond::Geu => (a as u64) >= (b as u64),
+        }
+    }
+}
+
+/// FREP iteration count source: immediate, register (resolved at issue),
+/// or stream-controlled (`frep.s`, one iteration per joint-stream element —
+/// the new FREP mode §2.4 introduces for SSSR index matching).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrepCount {
+    Imm(u32),
+    Reg(Reg),
+    Stream,
+}
+
+/// Instructions dispatched to the FP subsystem (the "FPU path" of Snitch's
+/// pseudo dual-issue scheme). Integer operands (addresses, counts) are
+/// resolved by the integer core at issue time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FpInstr {
+    /// `fmadd.d rd, rs1, rs2, rs3` — rd = rs1*rs2 + rs3.
+    Fmadd { rd: FReg, rs1: FReg, rs2: FReg, rs3: FReg },
+    Fadd { rd: FReg, rs1: FReg, rs2: FReg },
+    Fsub { rd: FReg, rs1: FReg, rs2: FReg },
+    Fmul { rd: FReg, rs1: FReg, rs2: FReg },
+    Fdiv { rd: FReg, rs1: FReg, rs2: FReg },
+    Fmax { rd: FReg, rs1: FReg, rs2: FReg },
+    Fmin { rd: FReg, rs1: FReg, rs2: FReg },
+    /// `fsgnj.d rd, rs, rs` == `fmv.d rd, rs`.
+    Fmv { rd: FReg, rs: FReg },
+    /// `fcvt.d.w rd, x_rs` with the integer value captured at issue
+    /// (the kernels only ever use `fcvt.d.w ftN, zero` to zero-init).
+    FcvtFromInt { rd: FReg, value_bits: i64 },
+    /// FP load; the byte address is computed by the integer core at issue.
+    Fld { rd: FReg, base: Reg, imm: i64 },
+    /// FP store; address computed at issue.
+    Fsd { rs: FReg, base: Reg, imm: i64 },
+}
+
+impl FpInstr {
+    /// Is this a "useful" payload FLOP for utilization accounting?
+    /// The paper counts FPU utilization as issued compute ops / cycles.
+    #[inline]
+    pub fn is_flop(self) -> bool {
+        matches!(
+            self,
+            FpInstr::Fmadd { .. }
+                | FpInstr::Fadd { .. }
+                | FpInstr::Fsub { .. }
+                | FpInstr::Fmul { .. }
+                | FpInstr::Fdiv { .. }
+                | FpInstr::Fmax { .. }
+                | FpInstr::Fmin { .. }
+        )
+    }
+}
+
+/// SSR/SSSR configuration fields, written/read by `scfgwi`/`scfgri`
+/// (custom CSR-mapped config interface, §3). Writes land in the *shadow*
+/// configuration; `Launch` commits the shadow into the job queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SsrField {
+    /// Byte address of the value (data) array.
+    DataBase,
+    /// Loop bounds (element counts) for the 4 affine nesting levels.
+    Bound0,
+    Bound1,
+    Bound2,
+    Bound3,
+    /// Byte strides for the 4 affine nesting levels.
+    Stride0,
+    Stride1,
+    Stride2,
+    Stride3,
+    /// Byte address of the index array (indirection/match modes).
+    IdxBase,
+    /// Number of indices in the fiber (indirection/match modes).
+    IdxLen,
+    /// log2 bytes per index: 0/1/2/3 for 8/16/32/64-bit (§2.1.1).
+    IdxSize,
+    /// Left-shift applied to indices before adding DataBase — power-of-two
+    /// striding into upper tensor axes without a hardware multiplier.
+    IdxShift,
+    /// Commit shadow config and launch a job. The written value selects
+    /// the mode (`ssr_mode::*`).
+    Launch,
+    /// Read-only: number of elements emitted by the last joint stream
+    /// (valid after the job completed; `strctl_len` in Listing 4).
+    StrCtlLen,
+    /// Read-only: 1 if the unit is idle (no active or pending job).
+    Done,
+}
+
+/// Job modes written to `SsrField::Launch`.
+pub mod ssr_mode {
+    /// Affine read stream (classic SSR).
+    pub const AFFINE_READ: i64 = 0;
+    /// Affine write stream (classic SSR).
+    pub const AFFINE_WRITE: i64 = 1;
+    /// Indirect read: `data[base + (idx << shift)]` (ISSR gather).
+    pub const INDIRECT_READ: i64 = 2;
+    /// Indirect write: scatter to `data[base + (idx << shift)]` (ISSR).
+    pub const INDIRECT_WRITE: i64 = 3;
+    /// Index-matching read, intersection (ISSR pairs, §2.3).
+    pub const INTERSECT: i64 = 4;
+    /// Index-matching read, union with zero injection (ISSR pairs).
+    pub const UNION: i64 = 5;
+    /// Egress: write data sequentially and the joint index stream
+    /// alongside it (ESSR).
+    pub const EGRESS: i64 = 6;
+}
+
+/// One instruction of the mini-ISA.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Instr {
+    // ---- integer ALU ----
+    Addi { rd: Reg, rs1: Reg, imm: i64 },
+    Add { rd: Reg, rs1: Reg, rs2: Reg },
+    Sub { rd: Reg, rs1: Reg, rs2: Reg },
+    Slli { rd: Reg, rs1: Reg, sh: u8 },
+    Srli { rd: Reg, rs1: Reg, sh: u8 },
+    And { rd: Reg, rs1: Reg, rs2: Reg },
+    Or { rd: Reg, rs1: Reg, rs2: Reg },
+    Xor { rd: Reg, rs1: Reg, rs2: Reg },
+    Andi { rd: Reg, rs1: Reg, imm: i64 },
+    Slt { rd: Reg, rs1: Reg, rs2: Reg },
+    Sltu { rd: Reg, rs1: Reg, rs2: Reg },
+    /// Shared cluster multiplier (Snitch: one int mul/div per cluster);
+    /// we model it as 3-cycle occupancy like a short pipeline.
+    Mul { rd: Reg, rs1: Reg, rs2: Reg },
+    /// Load immediate (pseudo: lui+addi pair counted as ONE issue slot —
+    /// kernels only use it outside hot loops).
+    Li { rd: Reg, imm: i64 },
+    // ---- memory ----
+    Load { rd: Reg, base: Reg, imm: i64, size: MemSize, signed: bool },
+    Store { src: Reg, base: Reg, imm: i64, size: MemSize },
+    // ---- control ----
+    Br { cond: Cond, rs1: Reg, rs2: Reg, target: u32 },
+    J { target: u32 },
+    Jal { rd: Reg, target: u32 },
+    Jalr { rd: Reg, rs1: Reg },
+    // ---- FP path ----
+    Fp(FpInstr),
+    /// Hardware loop over the next `n_instrs` FP instructions.
+    /// `stagger_count`/`stagger_mask` implement FREP register staggering
+    /// (Zaruba et al. [16]): operand positions selected by the mask get
+    /// `iter % (stagger_count+1)` added to their register index.
+    Frep { count: FrepCount, n_instrs: u8, stagger_count: u8, stagger_mask: u8 },
+    // ---- SSR control ----
+    /// `csrsi ssr_redir, 1` — enable register redirection to SSRs.
+    SsrEnable,
+    /// `csrci ssr_redir` — disable redirection.
+    SsrDisable,
+    /// Write streamer config field of SSR `ssr` from integer register.
+    ScfgW { ssr: u8, field: SsrField, rs1: Reg },
+    /// Read streamer config field into integer register.
+    ScfgR { rd: Reg, ssr: u8, field: SsrField },
+    // ---- synchronization ----
+    /// Block the integer core until the FP sequencer and FPU are idle and
+    /// all SSR write jobs have drained (`core_fpu_fence` in Listing 4).
+    FpuFence,
+    /// Cluster hardware barrier: block until all participating cores
+    /// arrive *and* outstanding DMA jobs of the current phase complete.
+    Barrier,
+    /// Stop this core.
+    Halt,
+    /// No-op (alignment/padding in tests).
+    Nop,
+}
+
+impl Instr {
+    /// Does this instruction go down the FP path (issued to the sequencer)?
+    #[inline]
+    pub fn is_fp_path(&self) -> bool {
+        matches!(self, Instr::Fp(_) | Instr::Frep { .. })
+    }
+}
+
+/// Stagger mask bits: which operand positions are staggered.
+pub mod stagger {
+    pub const RD: u8 = 0b0001;
+    pub const RS1: u8 = 0b0010;
+    pub const RS2: u8 = 0b0100;
+    pub const RS3: u8 = 0b1000;
+}
+
+/// A fully-assembled program: instructions plus (for the I$ model) the
+/// base byte address its text segment is linked at.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+    pub text_base: u64,
+}
+
+impl Program {
+    /// Byte address of instruction `pc` (index), for the I$ model.
+    #[inline]
+    pub fn iaddr(&self, pc: u32) -> u64 {
+        self.text_base + 4 * pc as u64
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cond_eval_signed_unsigned() {
+        assert!(Cond::Lt.eval(-1, 0));
+        assert!(!Cond::Ltu.eval(-1, 0)); // -1 is u64::MAX
+        assert!(Cond::Geu.eval(-1, 0));
+        assert!(Cond::Eq.eval(5, 5));
+        assert!(Cond::Ne.eval(5, 6));
+        assert!(Cond::Ge.eval(7, 7));
+    }
+
+    #[test]
+    fn memsize_bytes() {
+        assert_eq!(MemSize::B.bytes(), 1);
+        assert_eq!(MemSize::H.bytes(), 2);
+        assert_eq!(MemSize::W.bytes(), 4);
+        assert_eq!(MemSize::D.bytes(), 8);
+    }
+
+    #[test]
+    fn fp_path_classification() {
+        assert!(Instr::Fp(FpInstr::Fadd { rd: 3, rs1: 0, rs2: 1 }).is_fp_path());
+        assert!(Instr::Frep {
+            count: FrepCount::Imm(4),
+            n_instrs: 1,
+            stagger_count: 0,
+            stagger_mask: 0
+        }
+        .is_fp_path());
+        assert!(!Instr::Addi { rd: 1, rs1: 0, imm: 4 }.is_fp_path());
+    }
+
+    #[test]
+    fn flop_classification() {
+        assert!(FpInstr::Fmadd { rd: 3, rs1: 0, rs2: 1, rs3: 3 }.is_flop());
+        assert!(!FpInstr::Fld { rd: 3, base: 5, imm: 0 }.is_flop());
+        assert!(!FpInstr::Fmv { rd: 1, rs: 2 }.is_flop());
+    }
+
+    #[test]
+    fn program_iaddr() {
+        let p = Program { instrs: vec![Instr::Nop; 4], text_base: 0x1000 };
+        assert_eq!(p.iaddr(0), 0x1000);
+        assert_eq!(p.iaddr(3), 0x100c);
+    }
+}

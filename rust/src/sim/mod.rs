@@ -1,0 +1,31 @@
+//! Cycle-level microarchitectural simulator of the Snitch core complex
+//! and cluster extended with sparse stream semantic registers (SSSRs).
+//!
+//! This is the substrate the paper evaluates on (SystemVerilog RTL in the
+//! original; see DESIGN.md §2 for the substitution rationale). All
+//! first-order performance mechanisms are modeled per cycle:
+//!
+//! - single-issue in-order integer core, pseudo dual-issue FP sequencer,
+//! - FREP hardware loops with register staggering and the new
+//!   stream-controlled mode (`frep.s`),
+//! - SSR/ISSR/ESSR address generators with shared-port arbitration,
+//! - the index comparator performing streaming intersection and union,
+//! - banked TCDM with per-cycle bank-conflict arbitration,
+//! - shared two-level instruction cache,
+//! - wide DMA engine and an HBM2E DRAM channel model.
+
+pub mod asm;
+pub mod cluster;
+pub mod core;
+pub mod dma;
+pub mod dram;
+pub mod fpu;
+pub mod icache;
+pub mod isa;
+pub mod ssr;
+pub mod tcdm;
+
+pub use asm::Asm;
+pub use cluster::{Cluster, ClusterCfg, DmaSchedule, RunStats};
+pub use dma::DmaJob;
+pub use isa::Program;

@@ -1,0 +1,397 @@
+//! The inter-SSR index comparator (§2.3, Fig. 1c).
+//!
+//! One comparator per streamer joins the index streams of ISSR0 and ISSR1
+//! into their *intersection* or *union*, instructing the units' value
+//! datapaths to fetch, skip, or zero-inject, forwarding the joint index
+//! stream to an attached ESSR, and feeding the *stream control* queue the
+//! host's stream-controlled hardware loop (`frep.s`) pops to learn when
+//! the joint stream ends.
+//!
+//! Throughput: one index comparison (= one joint-stream decision) per
+//! cycle, matching the paper's steady-state analysis (1 cycle/nonzero
+//! while scanning, §4.1.2).
+
+use std::collections::VecDeque;
+
+use super::unit::SsrUnit;
+use super::{DataCmd, MatchMode, STRCTL_DEPTH};
+
+/// A stream-control token: `Elem` = another joint element follows,
+/// `End` = the joint stream is complete.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrCtl {
+    Elem,
+    End,
+}
+
+#[derive(Default)]
+pub struct Comparator {
+    /// Active join, once both ISSRs have launched matching jobs.
+    mode: Option<MatchMode>,
+    /// Stream-control bit queue (consumed by `frep.s`).
+    pub strctl: VecDeque<StrCtl>,
+    /// Joint elements emitted by the current join.
+    pub emitted: u64,
+    // ---- statistics ----
+    pub comparisons: u64,
+    pub total_emitted: u64,
+}
+
+impl Comparator {
+    pub fn new() -> Self {
+        Comparator::default()
+    }
+
+    pub fn active(&self) -> bool {
+        self.mode.is_some()
+    }
+
+    pub fn strctl_pop(&mut self) -> Option<StrCtl> {
+        self.strctl.pop_front()
+    }
+
+    /// One comparator cycle over the two ISSRs (`u0`, `u1`) and the
+    /// optional egress unit `essr`.
+    pub fn tick(&mut self, u0: &mut SsrUnit, u1: &mut SsrUnit, essr: &mut SsrUnit) {
+        // Activation: both ISSRs hold match-mode jobs of the same flavor.
+        if self.mode.is_none() {
+            match (u0.match_mode(), u1.match_mode()) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a, b, "ISSR match modes disagree (intersect vs union)");
+                    self.mode = Some(a);
+                    self.emitted = 0;
+                }
+                _ => return,
+            }
+        }
+        let mode = self.mode.unwrap();
+        if self.strctl.len() >= STRCTL_DEPTH {
+            return; // backpressure from the hardware loop
+        }
+
+        let essr_attached = essr.match_mode().is_none()
+            && essr
+                .active
+                .as_ref()
+                .map(|j| matches!(j.cfg.mode, super::Mode::Egress))
+                .unwrap_or(false);
+
+        let a_ex = u0.active.as_ref().map(|j| j.match_exhausted()).unwrap_or(true);
+        let b_ex = u1.active.as_ref().map(|j| j.match_exhausted()).unwrap_or(true);
+
+        // Join complete: signal end everywhere, deactivate.
+        if a_ex && b_ex {
+            self.strctl.push_back(StrCtl::End);
+            u0.signal_end();
+            u1.signal_end();
+            if essr_attached {
+                essr.signal_end();
+            }
+            self.mode = None;
+            return;
+        }
+
+        match mode {
+            MatchMode::Intersect => {
+                // Once one operand is exhausted no further matches can
+                // occur: cancel the co-operand's remaining indices
+                // ("intersection quickly terminates", §4.1.2).
+                if a_ex {
+                    u1.active.as_mut().unwrap().cancel_match_remaining();
+                    return;
+                }
+                if b_ex {
+                    u0.active.as_mut().unwrap().cancel_match_remaining();
+                    return;
+                }
+                let (Some(ia), Some(ib)) = (u0.idx_head(), u1.idx_head()) else {
+                    return; // waiting on index fetch
+                };
+                self.comparisons += 1;
+                if ia == ib {
+                    if u0.cmd_space() && u1.cmd_space() && (!essr_attached || essr.joint_idx_space()) {
+                        u0.pop_idx();
+                        u1.pop_idx();
+                        u0.push_cmd(DataCmd::Fetch);
+                        u1.push_cmd(DataCmd::Fetch);
+                        if essr_attached {
+                            essr.push_joint_idx(ia);
+                        }
+                        self.strctl.push_back(StrCtl::Elem);
+                        self.emitted += 1;
+                        self.total_emitted += 1;
+                    }
+                } else if ia < ib {
+                    if u0.cmd_space() {
+                        u0.pop_idx();
+                        u0.push_cmd(DataCmd::Skip);
+                    }
+                } else if u1.cmd_space() {
+                    u1.pop_idx();
+                    u1.push_cmd(DataCmd::Skip);
+                }
+            }
+            MatchMode::Union => {
+                // Pick the stream(s) to advance. An exhausted co-operand
+                // means: drain the live stream, zero-injecting the other.
+                let head_a = u0.idx_head();
+                let head_b = u1.idx_head();
+                let advance = match (a_ex, b_ex, head_a, head_b) {
+                    (true, _, _, Some(_)) => Some((false, true)),
+                    (_, true, Some(_), _) => Some((true, false)),
+                    (false, false, Some(ia), Some(ib)) => {
+                        if ia == ib {
+                            Some((true, true))
+                        } else if ia < ib {
+                            Some((true, false))
+                        } else {
+                            Some((false, true))
+                        }
+                    }
+                    _ => None, // waiting on index fetch
+                };
+                let Some((adv_a, adv_b)) = advance else { return };
+                if !(u0.cmd_space() && u1.cmd_space() && (!essr_attached || essr.joint_idx_space())) {
+                    return;
+                }
+                self.comparisons += 1;
+                let joint = if adv_a { head_a.unwrap() } else { head_b.unwrap() };
+                if adv_a {
+                    u0.pop_idx();
+                    u0.push_cmd(DataCmd::Fetch);
+                } else {
+                    u0.push_cmd(DataCmd::Zero);
+                }
+                if adv_b {
+                    u1.pop_idx();
+                    u1.push_cmd(DataCmd::Fetch);
+                } else {
+                    u1.push_cmd(DataCmd::Zero);
+                }
+                if essr_attached {
+                    essr.push_joint_idx(joint);
+                }
+                self.strctl.push_back(StrCtl::Elem);
+                self.emitted += 1;
+                self.total_emitted += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::unit::SsrUnit;
+    use super::*;
+    use crate::sim::isa::{ssr_mode, SsrField};
+    use crate::sim::tcdm::Tcdm;
+
+    /// Build a TCDM holding two fibers and launch both ISSRs in `mode`,
+    /// optionally an egress unit. Returns (tcdm, u0, u1, essr).
+    fn setup(
+        a: &[(u64, f64)],
+        b: &[(u64, f64)],
+        mode: i64,
+        with_egress: bool,
+    ) -> (Tcdm, SsrUnit, SsrUnit, SsrUnit) {
+        let mut t = Tcdm::new(256 << 10, 32);
+        // fiber A: indices @0x1000 (u16), values @0x2000
+        for (i, (idx, v)) in a.iter().enumerate() {
+            t.poke(0x1000 + 2 * i as u64, 2, *idx);
+            t.poke_f64(0x2000 + 8 * i as u64, *v);
+        }
+        // fiber B: indices @0x3000, values @0x4000
+        for (i, (idx, v)) in b.iter().enumerate() {
+            t.poke(0x3000 + 2 * i as u64, 2, *idx);
+            t.poke_f64(0x4000 + 8 * i as u64, *v);
+        }
+        let mut u0 = SsrUnit::new(0);
+        let mut u1 = SsrUnit::new(1);
+        let mut essr = SsrUnit::new(2);
+        for (u, ib, db, len) in [
+            (&mut u0, 0x1000i64, 0x2000i64, a.len() as i64),
+            (&mut u1, 0x3000, 0x4000, b.len() as i64),
+        ] {
+            u.cfg_write(SsrField::IdxBase, ib);
+            u.cfg_write(SsrField::DataBase, db);
+            u.cfg_write(SsrField::IdxLen, len);
+            u.cfg_write(SsrField::IdxSize, 1);
+            u.cfg_write(SsrField::Launch, mode);
+        }
+        if with_egress {
+            essr.cfg_write(SsrField::DataBase, 0x6000);
+            essr.cfg_write(SsrField::IdxBase, 0x5000);
+            essr.cfg_write(SsrField::IdxSize, 1);
+            essr.cfg_write(SsrField::Launch, ssr_mode::EGRESS);
+        }
+        (t, u0, u1, essr)
+    }
+
+    /// Run the join to completion, modeling a stream-controlled FPU loop
+    /// (`frep.s`): pop one stream-control token to admit each iteration,
+    /// then read one operand pair (pushing sums to the egress unit for
+    /// union-with-writeback). Returns (pairs, cycles).
+    fn run_join(
+        t: &mut Tcdm,
+        u0: &mut SsrUnit,
+        u1: &mut SsrUnit,
+        essr: &mut SsrUnit,
+        cmp: &mut Comparator,
+        egress_sums: bool,
+    ) -> (Vec<(f64, f64)>, u64) {
+        let mut out = vec![];
+        let mut cycle = 0u64;
+        let mut ended = false;
+        let mut admitted = false;
+        loop {
+            cycle += 1;
+            assert!(cycle < 200_000, "join timeout");
+            t.new_cycle(cycle);
+            cmp.tick(u0, u1, essr);
+            u0.tick(t, true);
+            u1.tick(t, true);
+            essr.tick(t, true);
+            // frep.s admission
+            if !admitted && !ended {
+                match cmp.strctl_pop() {
+                    Some(StrCtl::Elem) => admitted = true,
+                    Some(StrCtl::End) => ended = true,
+                    None => {}
+                }
+            }
+            // loop body: fadd/fmadd reading ft0, ft1 (and writing ft2)
+            if admitted
+                && u0.can_pop_data()
+                && u1.can_pop_data()
+                && (!egress_sums || essr.can_push_wdata())
+            {
+                let a = u0.pop_data().unwrap();
+                let b = u1.pop_data().unwrap();
+                if egress_sums {
+                    essr.push_wdata(a + b);
+                }
+                out.push((a, b));
+                admitted = false;
+            }
+            if ended && !admitted && u0.idle() && u1.idle() && (!egress_sums || essr.idle()) {
+                break;
+            }
+        }
+        (out, cycle)
+    }
+
+    #[test]
+    fn intersection_emits_only_matches() {
+        let a = [(1u64, 1.0), (3, 3.0), (5, 5.0), (8, 8.0)];
+        let b = [(0u64, 10.0), (3, 30.0), (8, 80.0), (9, 90.0)];
+        let (mut t, mut u0, mut u1, mut essr) = setup(&a, &b, ssr_mode::INTERSECT, false);
+        let mut cmp = Comparator::new();
+        let (pairs, _) = run_join(&mut t, &mut u0, &mut u1, &mut essr, &mut cmp, false);
+        assert_eq!(pairs, vec![(3.0, 30.0), (8.0, 80.0)]);
+    }
+
+    #[test]
+    fn intersection_disjoint_emits_nothing() {
+        let a = [(0u64, 1.0), (2, 2.0)];
+        let b = [(1u64, 3.0), (5, 4.0)];
+        let (mut t, mut u0, mut u1, mut essr) = setup(&a, &b, ssr_mode::INTERSECT, false);
+        let mut cmp = Comparator::new();
+        let (pairs, _) = run_join(&mut t, &mut u0, &mut u1, &mut essr, &mut cmp, false);
+        assert!(pairs.is_empty());
+    }
+
+    #[test]
+    fn intersection_early_out_on_exhaustion() {
+        // a ends early; b has a long tail that must be cancelled quickly.
+        let a = [(1u64, 1.0)];
+        let b: Vec<(u64, f64)> = (2..200).map(|i| (i as u64, i as f64)).collect();
+        let (mut t, mut u0, mut u1, mut essr) = setup(&a, &b, ssr_mode::INTERSECT, false);
+        let mut cmp = Comparator::new();
+        let (pairs, cycles) = run_join(&mut t, &mut u0, &mut u1, &mut essr, &mut cmp, false);
+        assert!(pairs.is_empty());
+        assert!(cycles < 50, "early-out too slow: {cycles} cycles for 198-tail");
+    }
+
+    #[test]
+    fn union_merges_with_zero_injection() {
+        let a = [(0u64, 1.0), (2, 2.0), (4, 4.0)];
+        let b = [(2u64, 20.0), (3, 30.0)];
+        let (mut t, mut u0, mut u1, mut essr) = setup(&a, &b, ssr_mode::UNION, false);
+        let mut cmp = Comparator::new();
+        let (pairs, _) = run_join(&mut t, &mut u0, &mut u1, &mut essr, &mut cmp, false);
+        assert_eq!(
+            pairs,
+            vec![(1.0, 0.0), (2.0, 20.0), (0.0, 30.0), (4.0, 0.0)]
+        );
+    }
+
+    #[test]
+    fn union_with_egress_writes_joint_fiber() {
+        let a = [(0u64, 1.0), (2, 2.0), (4, 4.0)];
+        let b = [(2u64, 20.0), (3, 30.0), (7, 70.0)];
+        let (mut t, mut u0, mut u1, mut essr) = setup(&a, &b, ssr_mode::UNION, true);
+        let mut cmp = Comparator::new();
+        let (pairs, _) = run_join(&mut t, &mut u0, &mut u1, &mut essr, &mut cmp, true);
+        assert_eq!(pairs.len(), 5);
+        assert_eq!(essr.last_strctl_len, 5);
+        // joint indices 0,2,3,4,7 as u16 at 0x5000
+        for (i, want) in [0u64, 2, 3, 4, 7].iter().enumerate() {
+            assert_eq!(t.peek(0x5000 + 2 * i as u64, 2), *want, "joint idx {i}");
+        }
+        // sums at 0x6000
+        for (i, want) in [1.0, 22.0, 30.0, 4.0, 70.0].iter().enumerate() {
+            assert_eq!(t.peek_f64(0x6000 + 8 * i as u64), *want, "sum {i}");
+        }
+    }
+
+    #[test]
+    fn union_one_empty_operand_streams_other() {
+        let a: [(u64, f64); 0] = [];
+        let b = [(1u64, 10.0), (2, 20.0)];
+        let (mut t, mut u0, mut u1, mut essr) = setup(&a, &b, ssr_mode::UNION, false);
+        let mut cmp = Comparator::new();
+        let (pairs, _) = run_join(&mut t, &mut u0, &mut u1, &mut essr, &mut cmp, false);
+        assert_eq!(pairs, vec![(0.0, 10.0), (0.0, 20.0)]);
+    }
+
+    #[test]
+    fn both_empty_ends_immediately() {
+        let a: [(u64, f64); 0] = [];
+        let (mut t, mut u0, mut u1, mut essr) = setup(&a, &a, ssr_mode::INTERSECT, false);
+        let mut cmp = Comparator::new();
+        t.new_cycle(1);
+        cmp.tick(&mut u0, &mut u1, &mut essr);
+        assert_eq!(cmp.strctl_pop(), Some(StrCtl::End));
+        assert!(!cmp.active());
+    }
+
+    #[test]
+    fn intersect_identical_streams_steady_state_rate() {
+        // fully matching fibers, 16-bit indices: peak 1.25 cycles/pair
+        // (port: 4 value fetches + 1 index word per 4 pairs).
+        let n = 400;
+        let a: Vec<(u64, f64)> = (0..n).map(|i| (i as u64, i as f64)).collect();
+        let (mut t, mut u0, mut u1, mut essr) = setup(&a, &a, ssr_mode::INTERSECT, false);
+        let mut cmp = Comparator::new();
+        let (pairs, cycles) = run_join(&mut t, &mut u0, &mut u1, &mut essr, &mut cmp, false);
+        assert_eq!(pairs.len(), n);
+        let cpp = cycles as f64 / n as f64;
+        assert!(
+            (1.2..1.45).contains(&cpp),
+            "cycles/pair {cpp} not near the 1.25 steady-state limit"
+        );
+    }
+
+    #[test]
+    fn intersect_divergent_densities_scan_rate() {
+        // a sparse, b dense tail: comparator scans b at ~1 idx/cycle.
+        let a = [(0u64, 1.0), (999, 2.0)];
+        let b: Vec<(u64, f64)> = (1..999).map(|i| (i as u64, i as f64)).collect();
+        let (mut t, mut u0, mut u1, mut essr) = setup(&a, &b, ssr_mode::INTERSECT, false);
+        let mut cmp = Comparator::new();
+        let (pairs, cycles) = run_join(&mut t, &mut u0, &mut u1, &mut essr, &mut cmp, false);
+        assert!(pairs.is_empty());
+        let cpn = cycles as f64 / 998.0;
+        assert!(cpn < 1.3, "scan rate {cpn} cycles/nonzero, want ~1");
+    }
+}

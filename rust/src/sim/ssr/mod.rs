@@ -1,0 +1,104 @@
+//! Sparse stream semantic registers (§2): the SSR/ISSR/ESSR units, the
+//! inter-SSR index comparator, and the streamer that binds them to the
+//! FPU register file.
+//!
+//! Module map (mirrors Fig. 1):
+//! - [`affine`] — the shared 4-level affine address generator,
+//! - [`unit`] — one SSR slot: data movers, index fetch/serialize path,
+//!   indirection, match-mode command processing, egress coalescing,
+//! - [`comparator`] — the index intersect/union unit + stream control,
+//! - [`streamer`] — the register switch, config interface, and port
+//!   arbitration (the CC's shared port A, §2.2).
+
+pub mod affine;
+pub mod comparator;
+pub mod streamer;
+pub mod unit;
+
+pub use affine::{AffineCfg, AffineGen};
+pub use comparator::Comparator;
+pub use streamer::{Ports, Streamer};
+pub use unit::SsrUnit;
+
+use crate::sim::isa::ssr_mode;
+
+/// Operating mode of a launched SSR job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    AffineRead,
+    AffineWrite,
+    IndirectRead,
+    IndirectWrite,
+    Intersect,
+    Union,
+    Egress,
+}
+
+impl Mode {
+    pub fn from_launch(v: i64) -> Mode {
+        match v {
+            ssr_mode::AFFINE_READ => Mode::AffineRead,
+            ssr_mode::AFFINE_WRITE => Mode::AffineWrite,
+            ssr_mode::INDIRECT_READ => Mode::IndirectRead,
+            ssr_mode::INDIRECT_WRITE => Mode::IndirectWrite,
+            ssr_mode::INTERSECT => Mode::Intersect,
+            ssr_mode::UNION => Mode::Union,
+            ssr_mode::EGRESS => Mode::Egress,
+            _ => panic!("invalid SSR launch mode {v}"),
+        }
+    }
+
+    pub fn is_match(self) -> bool {
+        matches!(self, Mode::Intersect | Mode::Union)
+    }
+
+    pub fn reads_memory(self) -> bool {
+        matches!(
+            self,
+            Mode::AffineRead | Mode::IndirectRead | Mode::Intersect | Mode::Union
+        )
+    }
+}
+
+/// Index-matching flavor of the comparator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatchMode {
+    Intersect,
+    Union,
+}
+
+/// Command from the comparator to an ISSR's value datapath (§2.1.1):
+/// fetch the value at the current fiber position, skip it (advance the
+/// position without a memory access), or inject a zero element into the
+/// data stream (union, §2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataCmd {
+    Fetch,
+    Skip,
+    Zero,
+}
+
+/// A fully-resolved job configuration (committed shadow config).
+#[derive(Clone, Copy, Debug)]
+pub struct JobCfg {
+    pub mode: Mode,
+    /// Data-address pattern for affine modes; for indirect/match/egress
+    /// modes only `.base` is used (the value array base).
+    pub affine: AffineCfg,
+    pub idx_base: u64,
+    /// Number of indices in the fiber.
+    pub idx_len: u64,
+    /// log2 bytes per index (0..=3).
+    pub idx_size: u8,
+    /// Index left-shift for power-of-two striding.
+    pub idx_shift: u8,
+}
+
+// FIFO depths (default streamer configuration, §4.3: four data FIFO
+// stages; index queue depth is a parameter — we use one word of the
+// largest index count plus slack).
+pub const DATA_FIFO_DEPTH: usize = 4;
+pub const IDX_FIFO_DEPTH: usize = 16;
+pub const CMD_FIFO_DEPTH: usize = 8;
+pub const STRCTL_DEPTH: usize = 8;
+pub const JOINT_IDX_DEPTH: usize = 8;

@@ -1,0 +1,162 @@
+//! The SSSR streamer (Fig. 1c): three SSR slots, the index comparator,
+//! the shared configuration interface, and the register switch mapping
+//! stream data channels onto FP registers ft0/ft1/ft2.
+//!
+//! Port topology (§2.4): the CC combines the core, FPU and ISSR0 onto one
+//! TCDM port (port A) and gives ISSR1 and the ESSR exclusive ports (B, C).
+//! Port A arbitration is round-robin between the core side and ISSR0.
+
+use crate::sim::isa::SsrField;
+use crate::sim::tcdm::Tcdm;
+
+use super::comparator::{Comparator, StrCtl};
+use super::unit::SsrUnit;
+
+/// Per-cycle port state of one core complex.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Ports {
+    /// Port A consumed this cycle (shared: core LSU / FPU LSU / ISSR0).
+    pub a_used: bool,
+    /// The core side lost port A arbitration last cycle — ISSR0 yields
+    /// this cycle (round-robin fairness).
+    pub core_wants_a: bool,
+    /// ISSR0 won port A last cycle.
+    pub issr0_had_a: bool,
+}
+
+impl Ports {
+    pub fn new_cycle(&mut self) {
+        self.a_used = false;
+    }
+}
+
+pub struct Streamer {
+    pub units: [SsrUnit; 3],
+    pub cmp: Comparator,
+    /// `ssr_redir` CSR: FP register accesses to ft0..ft2 are redirected
+    /// to the streams.
+    pub enabled: bool,
+}
+
+impl Default for Streamer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Streamer {
+    pub fn new() -> Self {
+        Streamer {
+            units: [SsrUnit::new(0), SsrUnit::new(1), SsrUnit::new(2)],
+            cmp: Comparator::new(),
+            enabled: false,
+        }
+    }
+
+    /// Is FP register `f` currently a stream register?
+    #[inline]
+    pub fn is_stream_reg(&self, f: u8) -> bool {
+        self.enabled && f < 3
+    }
+
+    pub fn cfg_write(&mut self, ssr: u8, field: SsrField, value: i64) -> bool {
+        self.units[ssr as usize].cfg_write(field, value)
+    }
+
+    pub fn cfg_read(&self, ssr: u8, field: SsrField) -> i64 {
+        self.units[ssr as usize].cfg_read(field)
+    }
+
+    /// Pop a stream-control token for `frep.s`.
+    pub fn strctl_pop(&mut self) -> Option<StrCtl> {
+        self.cmp.strctl_pop()
+    }
+
+    /// All units idle and write paths drained (for `core_fpu_fence`).
+    pub fn drained(&self) -> bool {
+        self.units.iter().all(|u| u.drained())
+    }
+
+    /// Advance comparator and data movers by one cycle. Port A may be
+    /// claimed by ISSR0; B and C belong to ISSR1/ESSR outright.
+    pub fn tick(&mut self, tcdm: &mut Tcdm, ports: &mut Ports) {
+        let [u0, u1, u2] = &mut self.units;
+        // Comparator first: decisions made this cycle can be serviced by
+        // the data movers in the same cycle (fall-through FIFOs).
+        self.cmp.tick(u0, u1, u2);
+
+        // ISSR0 on shared port A with round-robin fairness vs. the core.
+        let yield_to_core = ports.core_wants_a && ports.issr0_had_a;
+        if !ports.a_used && !yield_to_core {
+            if u0.tick(tcdm, true) {
+                ports.a_used = true;
+                ports.issr0_had_a = true;
+            }
+        } else {
+            // port withheld: still advance free (non-port) datapaths
+            u0.tick(tcdm, false);
+        }
+        // ISSR1 and ESSR own their ports.
+        u1.tick(tcdm, true);
+        u2.tick(tcdm, true);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::isa::ssr_mode;
+
+    #[test]
+    fn register_switch_only_when_enabled() {
+        let mut s = Streamer::new();
+        assert!(!s.is_stream_reg(0));
+        s.enabled = true;
+        assert!(s.is_stream_reg(0));
+        assert!(s.is_stream_reg(2));
+        assert!(!s.is_stream_reg(3));
+    }
+
+    #[test]
+    fn issr0_yields_port_a_to_core_after_winning() {
+        let mut t = Tcdm::new(64 << 10, 32);
+        for i in 0..16u64 {
+            t.poke_f64(0x100 + 8 * i, i as f64);
+        }
+        let mut s = Streamer::new();
+        s.cfg_write(0, SsrField::DataBase, 0x100);
+        s.cfg_write(0, SsrField::Bound0, 16);
+        s.cfg_write(0, SsrField::Stride0, 8);
+        s.cfg_write(0, SsrField::Bound1, 1);
+        s.cfg_write(0, SsrField::Bound2, 1);
+        s.cfg_write(0, SsrField::Bound3, 1);
+        s.cfg_write(0, SsrField::Launch, ssr_mode::AFFINE_READ);
+
+        let mut ports = Ports::default();
+        // cycle 1: ISSR0 wins port A.
+        t.new_cycle(1);
+        ports.new_cycle();
+        s.tick(&mut t, &mut ports);
+        assert!(ports.a_used && ports.issr0_had_a);
+        // core reports it wanted the port; next cycle ISSR0 must yield.
+        ports.core_wants_a = true;
+        t.new_cycle(2);
+        ports.new_cycle();
+        s.tick(&mut t, &mut ports);
+        assert!(!ports.a_used, "ISSR0 should have yielded port A");
+    }
+
+    #[test]
+    fn drained_reflects_unit_state() {
+        let mut s = Streamer::new();
+        assert!(s.drained());
+        s.cfg_write(1, SsrField::DataBase, 0x100);
+        s.cfg_write(1, SsrField::Bound0, 1);
+        s.cfg_write(1, SsrField::Stride0, 8);
+        s.cfg_write(1, SsrField::Bound1, 1);
+        s.cfg_write(1, SsrField::Bound2, 1);
+        s.cfg_write(1, SsrField::Bound3, 1);
+        s.cfg_write(1, SsrField::Launch, ssr_mode::AFFINE_READ);
+        assert!(!s.drained());
+    }
+}

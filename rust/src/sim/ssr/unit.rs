@@ -1,0 +1,895 @@
+//! One SSR slot: shadowed configuration, the data movers, and the mode-
+//! specific address generation datapaths of Fig. 1a/1b.
+//!
+//! A unit owns **one** memory port (§2.2): the index and data channels of
+//! indirection/match/egress modes share it through a round-robin-ish
+//! arbiter with data priority, which is what imposes the n/(n+1) peak
+//! data-mover utilization the paper derives (67 %, 80 %, 88.9 % for
+//! 32/16/8-bit indices on a 64-bit bus).
+
+use std::collections::VecDeque;
+
+use crate::sim::isa::SsrField;
+use crate::sim::tcdm::{Access, Tcdm};
+
+use super::{AffineCfg, AffineGen, DataCmd, JobCfg, Mode, CMD_FIFO_DEPTH, DATA_FIFO_DEPTH, IDX_FIFO_DEPTH};
+
+/// Raw shadow configuration registers (written by `scfgw`, §3: "shadowed
+/// configuration registers enable the setup of a new stream while another
+/// is still running").
+#[derive(Clone, Copy, Debug)]
+pub struct ShadowCfg {
+    pub data_base: u64,
+    pub bounds: [u64; 4],
+    pub strides: [i64; 4],
+    pub idx_base: u64,
+    pub idx_len: u64,
+    pub idx_size: u8,
+    pub idx_shift: u8,
+}
+
+impl Default for ShadowCfg {
+    fn default() -> Self {
+        // Upper affine bounds reset to 1 so a plain 1D job only needs
+        // Bound0/Stride0 configured (matches the hardware reset values).
+        ShadowCfg {
+            data_base: 0,
+            bounds: [1; 4],
+            strides: [0; 4],
+            idx_base: 0,
+            idx_len: 0,
+            idx_size: 0,
+            idx_shift: 0,
+        }
+    }
+}
+
+impl ShadowCfg {
+    fn job(&self, mode: Mode) -> JobCfg {
+        JobCfg {
+            mode,
+            affine: AffineCfg {
+                base: self.data_base,
+                bounds: self.bounds,
+                strides: self.strides,
+            },
+            idx_base: self.idx_base,
+            idx_len: self.idx_len,
+            idx_size: self.idx_size,
+            idx_shift: self.idx_shift,
+        }
+    }
+}
+
+/// Walks the index array word-by-word, honoring arbitrary base alignment
+/// (§2.1.1: the index serializer extracts indices of the configured size
+/// from buffered index *words*, fully utilizing the memory bus).
+#[derive(Clone, Debug)]
+struct IdxFetcher {
+    base: u64,
+    len: u64,
+    size_log2: u8,
+    /// Next index ordinal to fetch.
+    next_k: u64,
+}
+
+impl IdxFetcher {
+    fn new(cfg: &JobCfg) -> Self {
+        IdxFetcher { base: cfg.idx_base, len: cfg.idx_len, size_log2: cfg.idx_size, next_k: 0 }
+    }
+
+    fn done(&self) -> bool {
+        self.next_k >= self.len
+    }
+
+    /// The (word-aligned address, first ordinal, count) of the next index
+    /// word to fetch.
+    fn next_word(&self) -> Option<(u64, u64, u64)> {
+        if self.done() {
+            return None;
+        }
+        let ib = 1u64 << self.size_log2;
+        let first_addr = self.base + self.next_k * ib;
+        let word_addr = first_addr & !7;
+        let word_end = word_addr + 8;
+        let fit = (word_end - first_addr) / ib;
+        let count = fit.min(self.len - self.next_k);
+        Some((word_addr, self.next_k, count))
+    }
+
+    /// Extract `count` indices starting at ordinal `first_k` from the
+    /// fetched 64-bit `word`.
+    fn serialize(&mut self, word: u64, word_addr: u64, first_k: u64, count: u64, out: &mut VecDeque<u64>) {
+        let ib = 1u64 << self.size_log2;
+        let bits = 8 * ib;
+        let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        for i in 0..count {
+            let byte_off = self.base + (first_k + i) * ib - word_addr;
+            out.push_back((word >> (8 * byte_off)) & mask);
+        }
+        self.next_k = first_k + count;
+    }
+}
+
+/// Live state of a running job.
+#[derive(Debug)]
+pub struct ActiveJob {
+    pub cfg: JobCfg,
+    /// Data-address generator (affine modes), or egress/match data
+    /// position counter wrapped as a linear generator.
+    gen: AffineGen,
+    idx_fetch: IdxFetcher,
+    /// Serialized indices awaiting use (indirection) or comparator
+    /// consumption (match modes).
+    pub idx_fifo: VecDeque<u64>,
+    /// Indices the comparator has consumed.
+    pub idx_consumed: u64,
+    /// Value-datapath commands from the comparator (match modes).
+    pub cmd_fifo: VecDeque<DataCmd>,
+    /// Current value position within the fiber (match modes).
+    val_pos: u64,
+    /// Data elements completed (fetched / written / zero-injected).
+    pub elems_done: u64,
+    /// Comparator signaled the end of the joint stream.
+    pub end_seen: bool,
+    /// ---- egress only ----
+    /// Joint indices received from the comparator, awaiting coalescing.
+    pub idx_in: VecDeque<u64>,
+    /// Total joint indices received (== expected data elements).
+    pub joint_received: u64,
+    coalesce_buf: u64,
+    coalesce_n: u64,
+    idx_words_written: u64,
+    idx_written: u64,
+    /// Joint stream length (valid once the job is done).
+    pub strctl_len: u64,
+}
+
+impl ActiveJob {
+    fn new(cfg: JobCfg) -> Self {
+        let gen = match cfg.mode {
+            Mode::AffineRead | Mode::AffineWrite => AffineGen::new(cfg.affine),
+            // Indirect modes consume one data element per index; match and
+            // egress modes advance positions explicitly — give them a
+            // linear generator over the value array for address book-
+            // keeping where useful.
+            _ => AffineGen::new(AffineCfg::linear(cfg.affine.base, u64::MAX, 8)),
+        };
+        ActiveJob {
+            idx_fetch: IdxFetcher::new(&cfg),
+            cfg,
+            gen,
+            idx_fifo: VecDeque::new(),
+            idx_consumed: 0,
+            cmd_fifo: VecDeque::new(),
+            val_pos: 0,
+            elems_done: 0,
+            end_seen: false,
+            idx_in: VecDeque::new(),
+            joint_received: 0,
+            coalesce_buf: 0,
+            coalesce_n: 0,
+            idx_words_written: 0,
+            idx_written: 0,
+            strctl_len: 0,
+        }
+    }
+
+    /// All indices of this fiber have been handed to the comparator.
+    pub fn match_exhausted(&self) -> bool {
+        self.idx_consumed >= self.cfg.idx_len
+    }
+
+    /// Cancel remaining index processing (intersection early-out once the
+    /// co-operand is exhausted: no further matches are possible).
+    pub fn cancel_match_remaining(&mut self) {
+        self.idx_consumed = self.cfg.idx_len;
+        self.idx_fetch.next_k = self.cfg.idx_len;
+        self.idx_fifo.clear();
+    }
+
+    fn finished(&self) -> bool {
+        match self.cfg.mode {
+            Mode::AffineRead | Mode::AffineWrite => self.gen.done(),
+            Mode::IndirectRead | Mode::IndirectWrite => self.elems_done >= self.cfg.idx_len,
+            Mode::Intersect | Mode::Union => self.end_seen && self.cmd_fifo.is_empty(),
+            Mode::Egress => {
+                self.end_seen
+                    && self.elems_done >= self.joint_received
+                    && self.idx_written >= self.joint_received
+                    && self.coalesce_n == 0
+            }
+        }
+    }
+}
+
+/// One SSR slot of the streamer.
+pub struct SsrUnit {
+    pub slot: usize,
+    shadow: ShadowCfg,
+    pending: Option<JobCfg>,
+    pub active: Option<ActiveJob>,
+    /// Read-direction data FIFO (memory -> FPU register).
+    pub data_fifo: VecDeque<f64>,
+    /// Write-direction data FIFO (FPU register -> memory).
+    pub wdata_fifo: VecDeque<f64>,
+    /// Joint-stream length of the most recently *completed* job
+    /// (`scfgr strctl_len`, Listing 4).
+    pub last_strctl_len: u64,
+    // ---- statistics ----
+    pub mem_reads: u64,
+    pub mem_writes: u64,
+    pub idx_word_fetches: u64,
+    pub zero_injections: u64,
+}
+
+impl SsrUnit {
+    pub fn new(slot: usize) -> Self {
+        SsrUnit {
+            slot,
+            shadow: ShadowCfg::default(),
+            pending: None,
+            active: None,
+            data_fifo: VecDeque::new(),
+            wdata_fifo: VecDeque::new(),
+            last_strctl_len: 0,
+            mem_reads: 0,
+            mem_writes: 0,
+            idx_word_fetches: 0,
+            zero_injections: 0,
+        }
+    }
+
+    // ---- configuration interface ------------------------------------
+
+    /// Write a shadow config field. `Launch` commits the shadow; returns
+    /// `false` if the job queue is full (the core must retry).
+    pub fn cfg_write(&mut self, field: SsrField, value: i64) -> bool {
+        match field {
+            SsrField::DataBase => self.shadow.data_base = value as u64,
+            SsrField::Bound0 => self.shadow.bounds[0] = value as u64,
+            SsrField::Bound1 => self.shadow.bounds[1] = value as u64,
+            SsrField::Bound2 => self.shadow.bounds[2] = value as u64,
+            SsrField::Bound3 => self.shadow.bounds[3] = value as u64,
+            SsrField::Stride0 => self.shadow.strides[0] = value,
+            SsrField::Stride1 => self.shadow.strides[1] = value,
+            SsrField::Stride2 => self.shadow.strides[2] = value,
+            SsrField::Stride3 => self.shadow.strides[3] = value,
+            SsrField::IdxBase => self.shadow.idx_base = value as u64,
+            SsrField::IdxLen => self.shadow.idx_len = value as u64,
+            SsrField::IdxSize => self.shadow.idx_size = value as u8,
+            SsrField::IdxShift => self.shadow.idx_shift = value as u8,
+            SsrField::Launch => {
+                let job = self.shadow.job(Mode::from_launch(value));
+                if self.active.is_none() {
+                    self.active = Some(ActiveJob::new(job));
+                } else if self.pending.is_none() {
+                    self.pending = Some(job);
+                } else {
+                    return false;
+                }
+            }
+            SsrField::StrCtlLen | SsrField::Done => panic!("read-only SSR field {field:?}"),
+        }
+        true
+    }
+
+    pub fn cfg_read(&self, field: SsrField) -> i64 {
+        match field {
+            SsrField::StrCtlLen => self.last_strctl_len as i64,
+            SsrField::Done => i64::from(self.idle()),
+            SsrField::DataBase => self.shadow.data_base as i64,
+            SsrField::IdxLen => self.shadow.idx_len as i64,
+            _ => 0,
+        }
+    }
+
+    /// Unit is idle: no active or pending job. (Read FIFO residue may
+    /// still be drained by the FPU.)
+    pub fn idle(&self) -> bool {
+        self.active.is_none() && self.pending.is_none()
+    }
+
+    /// Write-side fully drained (for `core_fpu_fence`).
+    pub fn drained(&self) -> bool {
+        self.idle() && self.wdata_fifo.is_empty()
+    }
+
+    // ---- FPU-side interface -------------------------------------------
+
+    pub fn can_pop_data(&self) -> bool {
+        !self.data_fifo.is_empty()
+    }
+
+    pub fn pop_data(&mut self) -> Option<f64> {
+        self.data_fifo.pop_front()
+    }
+
+    pub fn can_push_wdata(&self) -> bool {
+        self.wdata_fifo.len() < DATA_FIFO_DEPTH
+    }
+
+    pub fn push_wdata(&mut self, v: f64) -> bool {
+        if !self.can_push_wdata() {
+            return false;
+        }
+        self.wdata_fifo.push_back(v);
+        true
+    }
+
+    // ---- comparator-side interface -------------------------------------
+
+    pub fn match_mode(&self) -> Option<super::MatchMode> {
+        // A job that already received its end token is only draining its
+        // value datapath — it must not re-bind the comparator (otherwise
+        // a fresh job on the other ISSR could be joined against a stale,
+        // exhausted index stream).
+        match self.active.as_ref().filter(|j| !j.end_seen).map(|j| j.cfg.mode) {
+            Some(Mode::Intersect) => Some(super::MatchMode::Intersect),
+            Some(Mode::Union) => Some(super::MatchMode::Union),
+            _ => None,
+        }
+    }
+
+    pub fn idx_head(&self) -> Option<u64> {
+        self.active.as_ref().and_then(|j| j.idx_fifo.front().copied())
+    }
+
+    pub fn pop_idx(&mut self) -> u64 {
+        let j = self.active.as_mut().expect("no active job");
+        j.idx_consumed += 1;
+        j.idx_fifo.pop_front().expect("idx fifo empty")
+    }
+
+    pub fn cmd_space(&self) -> bool {
+        self.active
+            .as_ref()
+            .map(|j| j.cmd_fifo.len() < CMD_FIFO_DEPTH)
+            .unwrap_or(false)
+    }
+
+    pub fn push_cmd(&mut self, c: DataCmd) {
+        self.active.as_mut().expect("no active job").cmd_fifo.push_back(c);
+    }
+
+    /// Egress: receive a joint index from the comparator.
+    pub fn joint_idx_space(&self) -> bool {
+        self.active
+            .as_ref()
+            .map(|j| j.idx_in.len() < super::JOINT_IDX_DEPTH)
+            .unwrap_or(false)
+    }
+
+    pub fn push_joint_idx(&mut self, idx: u64) {
+        let j = self.active.as_mut().expect("no active egress job");
+        j.idx_in.push_back(idx);
+        j.joint_received += 1;
+    }
+
+    pub fn signal_end(&mut self) {
+        if let Some(j) = self.active.as_mut() {
+            j.end_seen = true;
+            j.strctl_len = match j.cfg.mode {
+                Mode::Egress => j.joint_received,
+                _ => j.strctl_len,
+            };
+        }
+    }
+
+    // ---- per-cycle memory tick --------------------------------------
+
+    /// Advance the data movers by one cycle. `port_free` tells whether
+    /// this unit's memory port is available; returns `true` if the port
+    /// was consumed. At most one memory access per cycle per unit (§2.2).
+    pub fn tick(&mut self, tcdm: &mut Tcdm, port_free: bool) -> bool {
+        let Some(job) = self.active.as_mut() else {
+            return false;
+        };
+        let mut port_used = false;
+
+        match job.cfg.mode {
+            Mode::AffineRead => {
+                if port_free && self.data_fifo.len() < DATA_FIFO_DEPTH {
+                    if let Some(addr) = job.gen.peek() {
+                        if let Access::Granted(bits) = tcdm.try_read(addr, 8) {
+                            self.data_fifo.push_back(f64::from_bits(bits));
+                            job.gen.advance();
+                            job.elems_done += 1;
+                            self.mem_reads += 1;
+                        }
+                        port_used = true;
+                    }
+                }
+            }
+            Mode::AffineWrite => {
+                if port_free && !self.wdata_fifo.is_empty() {
+                    if let Some(addr) = job.gen.peek() {
+                        let v = *self.wdata_fifo.front().unwrap();
+                        if let Access::Granted(_) = tcdm.try_write(addr, 8, v.to_bits()) {
+                            self.wdata_fifo.pop_front();
+                            job.gen.advance();
+                            job.elems_done += 1;
+                            self.mem_writes += 1;
+                        }
+                        port_used = true;
+                    }
+                }
+            }
+            Mode::IndirectRead => {
+                // Data priority; fall back to index-word fetch.
+                if port_free && !job.idx_fifo.is_empty() && self.data_fifo.len() < DATA_FIFO_DEPTH {
+                    let idx = *job.idx_fifo.front().unwrap();
+                    let addr = job.cfg.affine.base + (idx << job.cfg.idx_shift);
+                    if let Access::Granted(_) = tcdm.try_read(addr, 8) {
+                        self.data_fifo.push_back(tcdm.peek_f64(addr));
+                        job.idx_fifo.pop_front();
+                        job.idx_consumed += 1;
+                        job.elems_done += 1;
+                        self.mem_reads += 1;
+                    }
+                    port_used = true;
+                } else if port_free {
+                    port_used = Self::fetch_idx_word(job, tcdm, &mut self.idx_word_fetches, &mut self.mem_reads);
+                }
+            }
+            Mode::IndirectWrite => {
+                if port_free && !job.idx_fifo.is_empty() && !self.wdata_fifo.is_empty() {
+                    let idx = *job.idx_fifo.front().unwrap();
+                    let addr = job.cfg.affine.base + (idx << job.cfg.idx_shift);
+                    let v = *self.wdata_fifo.front().unwrap();
+                    if let Access::Granted(_) = tcdm.try_write(addr, 8, v.to_bits()) {
+                        self.wdata_fifo.pop_front();
+                        job.idx_fifo.pop_front();
+                        job.idx_consumed += 1;
+                        job.elems_done += 1;
+                        self.mem_writes += 1;
+                    }
+                    port_used = true;
+                } else if port_free {
+                    port_used = Self::fetch_idx_word(job, tcdm, &mut self.idx_word_fetches, &mut self.mem_reads);
+                }
+            }
+            Mode::Intersect | Mode::Union => {
+                // 1) Skips are free (position bookkeeping only).
+                while job.cmd_fifo.front() == Some(&DataCmd::Skip) {
+                    job.cmd_fifo.pop_front();
+                    job.val_pos += 1;
+                }
+                // 2) One zero injection per cycle, no memory access.
+                if job.cmd_fifo.front() == Some(&DataCmd::Zero)
+                    && self.data_fifo.len() < DATA_FIFO_DEPTH
+                {
+                    job.cmd_fifo.pop_front();
+                    self.data_fifo.push_back(0.0);
+                    self.zero_injections += 1;
+                    job.elems_done += 1;
+                }
+                // 3) Port: keep the comparator fed — the index prefetch
+                //    FIFO ("decoupling FIFO" + outstanding-request
+                //    counter, §2.1.1) refills below a low-water mark with
+                //    priority over value fetches; otherwise values first.
+                let idx_low = job.idx_fifo.len() < 4 && !job.idx_fetch.done();
+                if port_free && idx_low {
+                    port_used = Self::fetch_idx_word(job, tcdm, &mut self.idx_word_fetches, &mut self.mem_reads);
+                }
+                if !port_used
+                    && port_free
+                    && job.cmd_fifo.front() == Some(&DataCmd::Fetch)
+                    && self.data_fifo.len() < DATA_FIFO_DEPTH
+                {
+                    let addr = job.cfg.affine.base + job.val_pos * 8;
+                    if let Access::Granted(_) = tcdm.try_read(addr, 8) {
+                        self.data_fifo.push_back(tcdm.peek_f64(addr));
+                        job.cmd_fifo.pop_front();
+                        job.val_pos += 1;
+                        job.elems_done += 1;
+                        self.mem_reads += 1;
+                    }
+                    port_used = true;
+                } else if !port_used && port_free {
+                    port_used = Self::fetch_idx_word(job, tcdm, &mut self.idx_word_fetches, &mut self.mem_reads);
+                }
+            }
+            Mode::Egress => {
+                // Coalesce received joint indices into the word buffer.
+                let per_word = 8 >> job.cfg.idx_size;
+                while job.coalesce_n < per_word {
+                    let Some(idx) = job.idx_in.pop_front() else { break };
+                    let bits = 8 * (1u64 << job.cfg.idx_size);
+                    let shifted = if bits == 64 { idx } else { idx & ((1 << bits) - 1) };
+                    job.coalesce_buf |= shifted << (bits * job.coalesce_n);
+                    job.coalesce_n += 1;
+                }
+                // Port: data writes take priority; a full (or final
+                // partial) index word goes out when data is not ready.
+                let flush_partial = job.end_seen
+                    && job.coalesce_n > 0
+                    && job.idx_written + job.coalesce_n >= job.joint_received;
+                let idx_word_ready = job.coalesce_n == per_word || flush_partial;
+                if port_free && !self.wdata_fifo.is_empty() {
+                    let addr = job.cfg.affine.base + job.elems_done * 8;
+                    let v = *self.wdata_fifo.front().unwrap();
+                    if let Access::Granted(_) = tcdm.try_write(addr, 8, v.to_bits()) {
+                        self.wdata_fifo.pop_front();
+                        job.elems_done += 1;
+                        self.mem_writes += 1;
+                    }
+                    port_used = true;
+                } else if port_free && idx_word_ready {
+                    let addr = job.cfg.idx_base + job.idx_words_written * 8;
+                    if let Access::Granted(_) = tcdm.try_write(addr, 8, job.coalesce_buf) {
+                        job.idx_words_written += 1;
+                        job.idx_written += job.coalesce_n;
+                        job.coalesce_buf = 0;
+                        job.coalesce_n = 0;
+                        self.mem_writes += 1;
+                    }
+                    port_used = true;
+                }
+            }
+        }
+
+        // Retire finished job; promote pending shadow job.
+        if self.active.as_ref().map(|j| j.finished()).unwrap_or(false) {
+            let j = self.active.take().unwrap();
+            self.last_strctl_len = j.strctl_len;
+            if let Some(cfg) = self.pending.take() {
+                self.active = Some(ActiveJob::new(cfg));
+            }
+        }
+        port_used
+    }
+
+    fn fetch_idx_word(
+        job: &mut ActiveJob,
+        tcdm: &mut Tcdm,
+        idx_word_fetches: &mut u64,
+        mem_reads: &mut u64,
+    ) -> bool {
+        if job.idx_fetch.done() {
+            return false;
+        }
+        let Some((word_addr, first_k, count)) = job.idx_fetch.next_word() else {
+            return false;
+        };
+        if job.idx_fifo.len() + count as usize > IDX_FIFO_DEPTH {
+            return false;
+        }
+        if let Access::Granted(word) = tcdm.try_read(word_addr, 8) {
+            job.idx_fetch.serialize(word, word_addr, first_k, count, &mut job.idx_fifo);
+            *idx_word_fetches += 1;
+            *mem_reads += 1;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::isa::ssr_mode;
+
+    fn tcdm_with_f64(values: &[f64], base: u64) -> Tcdm {
+        let mut t = Tcdm::new(64 << 10, 32);
+        for (i, v) in values.iter().enumerate() {
+            t.poke_f64(base + 8 * i as u64, *v);
+        }
+        t
+    }
+
+    fn drain(unit: &mut SsrUnit, tcdm: &mut Tcdm, n: usize, limit: u64) -> Vec<f64> {
+        let mut out = vec![];
+        let mut cycle = 0u64;
+        while out.len() < n {
+            cycle += 1;
+            assert!(cycle < limit, "timeout draining unit (got {} of {n})", out.len());
+            tcdm.new_cycle(cycle);
+            unit.tick(tcdm, true);
+            if let Some(v) = unit.pop_data() {
+                out.push(v);
+            }
+        }
+        out
+    }
+
+    fn launch(unit: &mut SsrUnit, fields: &[(SsrField, i64)], mode: i64) {
+        for (f, v) in fields {
+            assert!(unit.cfg_write(*f, *v));
+        }
+        assert!(unit.cfg_write(SsrField::Launch, mode));
+    }
+
+    #[test]
+    fn affine_read_streams_values() {
+        let vals = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut t = tcdm_with_f64(&vals, 0x100);
+        let mut u = SsrUnit::new(0);
+        launch(
+            &mut u,
+            &[
+                (SsrField::DataBase, 0x100),
+                (SsrField::Bound0, 5),
+                (SsrField::Stride0, 8),
+                (SsrField::Bound1, 1),
+                (SsrField::Bound2, 1),
+                (SsrField::Bound3, 1),
+            ],
+            ssr_mode::AFFINE_READ,
+        );
+        assert_eq!(drain(&mut u, &mut t, 5, 1000), vals);
+        // allow retire tick
+        t.new_cycle(999);
+        u.tick(&mut t, true);
+        assert!(u.idle());
+    }
+
+    #[test]
+    fn affine_write_stores_values() {
+        let mut t = Tcdm::new(64 << 10, 32);
+        let mut u = SsrUnit::new(2);
+        launch(
+            &mut u,
+            &[
+                (SsrField::DataBase, 0x200),
+                (SsrField::Bound0, 3),
+                (SsrField::Stride0, 8),
+                (SsrField::Bound1, 1),
+                (SsrField::Bound2, 1),
+                (SsrField::Bound3, 1),
+            ],
+            ssr_mode::AFFINE_WRITE,
+        );
+        for (i, v) in [7.0, 8.0, 9.0].iter().enumerate() {
+            t.new_cycle(i as u64 + 1);
+            assert!(u.push_wdata(*v));
+            u.tick(&mut t, true);
+        }
+        let mut cycle = 10;
+        while !u.idle() {
+            cycle += 1;
+            t.new_cycle(cycle);
+            u.tick(&mut t, true);
+            assert!(cycle < 100);
+        }
+        assert_eq!(t.peek_f64(0x200), 7.0);
+        assert_eq!(t.peek_f64(0x208), 8.0);
+        assert_eq!(t.peek_f64(0x210), 9.0);
+    }
+
+    #[test]
+    fn indirect_read_gathers() {
+        // b = [10,20,30,40,50,60] at 0x400; indices [5,0,3] as u16 at 0x300
+        let mut t = tcdm_with_f64(&[10.0, 20.0, 30.0, 40.0, 50.0, 60.0], 0x400);
+        for (i, idx) in [5u64, 0, 3].iter().enumerate() {
+            t.poke(0x300 + 2 * i as u64, 2, *idx);
+        }
+        let mut u = SsrUnit::new(1);
+        launch(
+            &mut u,
+            &[
+                (SsrField::DataBase, 0x400),
+                (SsrField::IdxBase, 0x300),
+                (SsrField::IdxLen, 3),
+                (SsrField::IdxSize, 1), // 16-bit
+                (SsrField::IdxShift, 3), // *8 bytes
+            ],
+            ssr_mode::INDIRECT_READ,
+        );
+        assert_eq!(drain(&mut u, &mut t, 3, 1000), vec![60.0, 10.0, 40.0]);
+    }
+
+    #[test]
+    fn indirect_read_unaligned_idx_base() {
+        // index array starts at an odd halfword offset within a word
+        let mut t = tcdm_with_f64(&[1.0, 2.0, 3.0, 4.0], 0x800);
+        for (i, idx) in [2u64, 1, 3, 0].iter().enumerate() {
+            t.poke(0x306 + 2 * i as u64, 2, *idx);
+        }
+        let mut u = SsrUnit::new(1);
+        launch(
+            &mut u,
+            &[
+                (SsrField::DataBase, 0x800),
+                (SsrField::IdxBase, 0x306),
+                (SsrField::IdxLen, 4),
+                (SsrField::IdxSize, 1),
+                (SsrField::IdxShift, 3),
+            ],
+            ssr_mode::INDIRECT_READ,
+        );
+        assert_eq!(drain(&mut u, &mut t, 4, 1000), vec![3.0, 2.0, 4.0, 1.0]);
+    }
+
+    #[test]
+    fn indirect_steady_state_throughput_matches_arbitration_limit() {
+        // 16-bit indices: 4 per word -> peak 4 elements per 5 cycles (80%).
+        let n = 400usize;
+        let vals: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let mut t = tcdm_with_f64(&vals, 0x8000);
+        for i in 0..n {
+            t.poke(0x300 + 2 * i as u64, 2, (i % n) as u64);
+        }
+        let mut u = SsrUnit::new(1);
+        launch(
+            &mut u,
+            &[
+                (SsrField::DataBase, 0x8000),
+                (SsrField::IdxBase, 0x300),
+                (SsrField::IdxLen, n as i64),
+                (SsrField::IdxSize, 1),
+                (SsrField::IdxShift, 3),
+            ],
+            ssr_mode::INDIRECT_READ,
+        );
+        let mut cycle = 0u64;
+        let mut got = 0usize;
+        while got < n {
+            cycle += 1;
+            assert!(cycle < 10_000);
+            t.new_cycle(cycle);
+            u.tick(&mut t, true);
+            if u.pop_data().is_some() {
+                got += 1;
+            }
+        }
+        let util = n as f64 / cycle as f64;
+        assert!(
+            (0.74..=0.81).contains(&util),
+            "16-bit indirection utilization {util} not near 0.8 ({cycle} cycles)"
+        );
+    }
+
+    #[test]
+    fn indirect_write_scatters() {
+        let mut t = Tcdm::new(64 << 10, 32);
+        for (i, idx) in [3u64, 1].iter().enumerate() {
+            t.poke(0x300 + 4 * i as u64, 4, *idx);
+        }
+        let mut u = SsrUnit::new(0);
+        launch(
+            &mut u,
+            &[
+                (SsrField::DataBase, 0x600),
+                (SsrField::IdxBase, 0x300),
+                (SsrField::IdxLen, 2),
+                (SsrField::IdxSize, 2), // 32-bit
+                (SsrField::IdxShift, 3),
+            ],
+            ssr_mode::INDIRECT_WRITE,
+        );
+        let mut cycle = 0;
+        let mut pushed = 0;
+        while !u.idle() {
+            cycle += 1;
+            assert!(cycle < 100);
+            t.new_cycle(cycle);
+            if pushed < 2 && u.can_push_wdata() {
+                u.push_wdata([42.0, 43.0][pushed]);
+                pushed += 1;
+            }
+            u.tick(&mut t, true);
+        }
+        assert_eq!(t.peek_f64(0x600 + 3 * 8), 42.0);
+        assert_eq!(t.peek_f64(0x600 + 8), 43.0);
+    }
+
+    #[test]
+    fn pending_job_promotes_after_active() {
+        let mut t = tcdm_with_f64(&[1.0, 2.0], 0x100);
+        t.poke_f64(0x110, 5.0);
+        let mut u = SsrUnit::new(0);
+        let base_fields = [
+            (SsrField::Bound0, 2),
+            (SsrField::Stride0, 8),
+            (SsrField::Bound1, 1),
+            (SsrField::Bound2, 1),
+            (SsrField::Bound3, 1),
+        ];
+        let mut f1 = vec![(SsrField::DataBase, 0x100i64)];
+        f1.extend_from_slice(&base_fields);
+        launch(&mut u, &f1, ssr_mode::AFFINE_READ);
+        // queue a second job (shadow) while the first runs
+        assert!(u.cfg_write(SsrField::DataBase, 0x110));
+        assert!(u.cfg_write(SsrField::Bound0, 1));
+        assert!(u.cfg_write(SsrField::Launch, ssr_mode::AFFINE_READ));
+        // a third launch must be refused
+        assert!(!u.cfg_write(SsrField::Launch, ssr_mode::AFFINE_READ));
+        let out = drain(&mut u, &mut t, 3, 1000);
+        assert_eq!(out, vec![1.0, 2.0, 5.0]);
+    }
+
+    #[test]
+    fn egress_writes_data_and_coalesced_indices() {
+        let mut t = Tcdm::new(64 << 10, 32);
+        let mut u = SsrUnit::new(2);
+        launch(
+            &mut u,
+            &[
+                (SsrField::DataBase, 0x700),
+                (SsrField::IdxBase, 0x500),
+                (SsrField::IdxSize, 1), // 16-bit
+            ],
+            ssr_mode::EGRESS,
+        );
+        // comparator hands over 5 joint indices and 5 data elements
+        let idxs = [2u64, 4, 7, 9, 11];
+        let data = [1.5, 2.5, 3.5, 4.5, 5.5];
+        let mut cycle = 0u64;
+        let mut sent = 0usize;
+        while !u.idle() {
+            cycle += 1;
+            assert!(cycle < 1000, "egress did not finish");
+            t.new_cycle(cycle);
+            if sent < 5 {
+                if u.joint_idx_space() && u.can_push_wdata() {
+                    u.push_joint_idx(idxs[sent]);
+                    u.push_wdata(data[sent]);
+                    sent += 1;
+                    if sent == 5 {
+                        u.signal_end();
+                    }
+                }
+            }
+            u.tick(&mut t, true);
+        }
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(t.peek_f64(0x700 + 8 * i as u64), *v, "data[{i}]");
+        }
+        for (i, idx) in idxs.iter().enumerate() {
+            assert_eq!(t.peek(0x500 + 2 * i as u64, 2), *idx, "idx[{i}]");
+        }
+        assert_eq!(u.last_strctl_len, 5);
+    }
+
+    #[test]
+    fn match_mode_fetch_skip_zero_commands() {
+        // fiber values [10, 20, 30] at 0x100; drive the cmd fifo directly.
+        let mut t = tcdm_with_f64(&[10.0, 20.0, 30.0], 0x100);
+        // indices (16-bit) — content irrelevant here, fetched for the cmp.
+        for i in 0..3u64 {
+            t.poke(0x300 + 2 * i, 2, i);
+        }
+        let mut u = SsrUnit::new(0);
+        launch(
+            &mut u,
+            &[
+                (SsrField::DataBase, 0x100),
+                (SsrField::IdxBase, 0x300),
+                (SsrField::IdxLen, 3),
+                (SsrField::IdxSize, 1),
+            ],
+            ssr_mode::INTERSECT,
+        );
+        u.push_cmd(DataCmd::Fetch); // -> 10
+        u.push_cmd(DataCmd::Skip); // skip 20
+        u.push_cmd(DataCmd::Zero); // -> 0.0
+        u.push_cmd(DataCmd::Fetch); // -> 30
+        let out = drain(&mut u, &mut t, 3, 1000);
+        assert_eq!(out, vec![10.0, 0.0, 30.0]);
+        assert_eq!(u.zero_injections, 1);
+    }
+
+    #[test]
+    fn port_denied_means_no_progress() {
+        let mut t = tcdm_with_f64(&[1.0], 0x100);
+        let mut u = SsrUnit::new(0);
+        launch(
+            &mut u,
+            &[
+                (SsrField::DataBase, 0x100),
+                (SsrField::Bound0, 1),
+                (SsrField::Stride0, 8),
+                (SsrField::Bound1, 1),
+                (SsrField::Bound2, 1),
+                (SsrField::Bound3, 1),
+            ],
+            ssr_mode::AFFINE_READ,
+        );
+        t.new_cycle(1);
+        assert!(!u.tick(&mut t, false)); // port withheld
+        assert!(u.pop_data().is_none());
+        t.new_cycle(2);
+        assert!(u.tick(&mut t, true));
+        assert_eq!(u.pop_data(), Some(1.0));
+    }
+}

@@ -1,0 +1,513 @@
+//! Small self-contained utilities: a deterministic PRNG (the build runs
+//! fully offline, so we carry no external `rand` dependency), summary
+//! statistics, and a minimal JSON reader/writer used for artifact manifests
+//! and bench harness output.
+
+/// Deterministic 64-bit PCG-style generator (splitmix-seeded).
+///
+/// Every experiment in the reproduction derives its inputs from an explicit
+/// seed so that figures and tests are bit-reproducible across runs.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 scramble of the seed for state and increment.
+        let mut s = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            s = s.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = s;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Pcg { state: next(), inc: next() | 1 }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let x = self.state;
+        let xorshifted = (((x >> 18) ^ x) >> 27) as u32;
+        let rot = (x >> 59) as u32;
+        let lo = xorshifted.rotate_right(rot) as u64;
+        // widen: a mixed fold of the raw state is sufficient for workload
+        // generation (we are not doing cryptography).
+        (lo << 32) ^ x.wrapping_mul(0xD6E8FEB86659FD93)
+    }
+
+    /// Uniform in `[0, bound)`. `bound` must be nonzero.
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform double in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller (the paper samples dense/sparse
+    /// tensor values from a normal distribution, §4).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// `k` distinct sorted indices drawn uniformly from `[0, n)`
+    /// (Floyd's algorithm); used to generate CSF fibers with uniformly
+    /// distributed nonzero positions as in §4.
+    pub fn distinct_sorted(&mut self, k: usize, n: usize) -> Vec<u64> {
+        assert!(k <= n, "cannot draw {k} distinct values from [0,{n})");
+        let mut set = std::collections::BTreeSet::new();
+        for j in (n - k)..n {
+            let t = self.below(j as u64 + 1) as usize;
+            if !set.insert(t as u64) {
+                set.insert(j as u64);
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    /// Random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            v.swap(i, j);
+        }
+        v
+    }
+}
+
+/// Summary statistics over a slice.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+}
+
+impl Stats {
+    pub fn of(xs: &[f64]) -> Option<Stats> {
+        if xs.is_empty() {
+            return None;
+        }
+        let mut sorted: Vec<f64> = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Some(Stats {
+            n,
+            min: sorted[0],
+            max: sorted[n - 1],
+            mean: xs.iter().sum::<f64>() / n as f64,
+            median,
+        })
+    }
+}
+
+/// Minimal JSON value — enough for bench output and the artifact manifest
+/// (we deliberately avoid serde/serde_json: the build environment is
+/// offline and only the `xla` closure is vendored).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    out.push_str(&format!("{}", *x as i64));
+                } else {
+                    out.push_str(&format!("{x}"));
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(kvs) => {
+                out.push('{');
+                for (i, (k, v)) in kvs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a JSON document (full grammar minus surrogate-pair escapes;
+    /// enough to round-trip our own manifests and those written by
+    /// `python/compile/aot.py`).
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing data at byte {}", p.i));
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && (self.b[self.i] as char).is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.ws();
+        match self.b.get(self.i) {
+            None => Err("unexpected end".into()),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => {
+                self.i += 1;
+                let mut out = vec![];
+                self.ws();
+                if self.b.get(self.i) == Some(&b']') {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                loop {
+                    out.push(self.value()?);
+                    self.ws();
+                    match self.b.get(self.i) {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(Json::Arr(out));
+                        }
+                        _ => return Err(format!("expected , or ] at {}", self.i)),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.i += 1;
+                let mut out = vec![];
+                self.ws();
+                if self.b.get(self.i) == Some(&b'}') {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                loop {
+                    self.ws();
+                    let k = self.string()?;
+                    self.ws();
+                    if self.b.get(self.i) != Some(&b':') {
+                        return Err(format!("expected : at {}", self.i));
+                    }
+                    self.i += 1;
+                    let v = self.value()?;
+                    out.push((k, v));
+                    self.ws();
+                    match self.b.get(self.i) {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(Json::Obj(out));
+                        }
+                        _ => return Err(format!("expected , or }} at {}", self.i)),
+                    }
+                }
+            }
+            Some(_) => self.number(),
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at {}", self.i))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        if self.b.get(self.i) != Some(&b'"') {
+            return Err(format!("expected string at {}", self.i));
+        }
+        self.i += 1;
+        let mut out = String::new();
+        while let Some(&c) = self.b.get(self.i) {
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self.b.get(self.i).ok_or("bad escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err("bad \\u escape".into());
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|e| e.to_string())?;
+                            let cp = u32::from_str_radix(hex, 16).map_err(|e| e.to_string())?;
+                            self.i += 4;
+                            out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                        }
+                        _ => return Err(format!("bad escape \\{}", e as char)),
+                    }
+                }
+                c => out.push(c as char),
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while let Some(&c) = self.b.get(self.i) {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| format!("bad number at {start}"))
+    }
+}
+
+/// Geometric sweep helper: `n` points from `lo` to `hi` inclusive.
+pub fn geomspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2 && lo > 0.0 && hi > lo);
+    let r = (hi / lo).powf(1.0 / (n - 1) as f64);
+    (0..n).map(|i| lo * r.powi(i as i32)).collect()
+}
+
+/// Linear sweep helper.
+pub fn linspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_is_deterministic() {
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn pcg_seeds_differ() {
+        let mut a = Pcg::new(1);
+        let mut b = Pcg::new(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = Pcg::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg::new(9);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments_roughly_standard() {
+        let mut r = Pcg::new(11);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn distinct_sorted_properties() {
+        let mut r = Pcg::new(3);
+        for _ in 0..200 {
+            let n = 1 + r.below(500) as usize;
+            let k = r.below(n as u64 + 1) as usize;
+            let v = r.distinct_sorted(k, n);
+            assert_eq!(v.len(), k);
+            for w in v.windows(2) {
+                assert!(w[0] < w[1], "not strictly sorted: {v:?}");
+            }
+            if let Some(&last) = v.last() {
+                assert!((last as usize) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Pcg::new(5);
+        let p = r.permutation(257);
+        let mut seen = vec![false; 257];
+        for &x in &p {
+            assert!(!seen[x as usize]);
+            seen[x as usize] = true;
+        }
+    }
+
+    #[test]
+    fn stats_median_even_odd() {
+        let s = Stats::of(&[3.0, 1.0, 2.0]).unwrap();
+        assert_eq!(s.median, 2.0);
+        let s = Stats::of(&[4.0, 1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(s.median, 2.5);
+        assert!(Stats::of(&[]).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let v = Json::Obj(vec![
+            ("name".into(), Json::Str("spmv".into())),
+            ("shape".into(), Json::Arr(vec![Json::Num(4.0), Json::Num(8.0)])),
+            ("f".into(), Json::Num(1.5)),
+            ("ok".into(), Json::Bool(true)),
+            ("none".into(), Json::Null),
+        ]);
+        let s = v.render();
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn json_parses_python_style() {
+        let s = r#"{"entries": [{"name": "spmv_f64", "path": "artifacts/spmv.hlo.txt",
+                     "inputs": [[16, 8]], "dtype": "f64"}], "version": 1}"#;
+        let v = Json::parse(s).unwrap();
+        assert_eq!(
+            v.get("entries").unwrap().as_arr().unwrap()[0]
+                .get("name")
+                .unwrap()
+                .as_str(),
+            Some("spmv_f64")
+        );
+        assert_eq!(v.get("version").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn sweeps() {
+        let g = geomspace(1.0, 1024.0, 11);
+        assert_eq!(g.len(), 11);
+        assert!((g[0] - 1.0).abs() < 1e-9 && (g[10] - 1024.0).abs() < 1e-6);
+        let l = linspace(0.0, 10.0, 5);
+        assert_eq!(l, vec![0.0, 2.5, 5.0, 7.5, 10.0]);
+    }
+}

@@ -1,0 +1,169 @@
+//! Cross-module integration tests: kernel variants against each other,
+//! cluster against single core, property sweeps over random workloads,
+//! and (when `make artifacts` has run) the PJRT golden path.
+//!
+//! These complement the per-module unit tests with whole-stack
+//! invariants. The random-input sweeps play the role proptest would
+//! (the offline build vendors no proptest): deterministic PRNG, many
+//! cases, shrink-free but reproducible by seed.
+
+use sssr::coordinator::{run_cluster_smxdv, run_cluster_smxsv};
+use sssr::formats::{ops, SpVec};
+use sssr::kernels::driver::*;
+use sssr::kernels::{IdxWidth, Variant};
+use sssr::matgen;
+use sssr::sim::ClusterCfg;
+use sssr::util::Pcg;
+
+const WIDTHS: [IdxWidth; 2] = [IdxWidth::U16, IdxWidth::U32];
+
+/// Property: every kernel variant computes identical results on random
+/// fibers (the drivers verify vs the oracle internally; this asserts
+/// cross-variant agreement too, incl. cycle sanity).
+#[test]
+fn property_all_variants_agree_on_random_vectors() {
+    let mut r = Pcg::new(2024);
+    for case in 0..12 {
+        let dim = 64 + r.below(2000) as usize;
+        let nnz_a = r.below(dim as u64 / 2) as usize;
+        let nnz_b = r.below(dim as u64 / 2) as usize;
+        let a = matgen::random_spvec(3000 + case, dim, nnz_a.max(1));
+        let b = matgen::random_spvec(4000 + case, dim, nnz_b.max(1));
+        let d = matgen::random_dense(5000 + case, dim);
+        for iw in WIDTHS {
+            let (x0, r0) = run_svxdv(Variant::Base, iw, &a, &d, false);
+            let (x1, r1) = run_svxdv(Variant::Ssr, iw, &a, &d, false);
+            let (x2, r2) = run_svxdv(Variant::Sssr, iw, &a, &d, false);
+            assert!((x0 - x1).abs() < 1e-9 && (x1 - x2).abs() < 1e-9);
+            assert!(r2.cycles <= r1.cycles && r1.cycles <= r0.cycles + 64,
+                "variant cycle ordering violated: {} {} {}", r0.cycles, r1.cycles, r2.cycles);
+            let (y0, _) = run_svxsv(Variant::Base, iw, &a, &b);
+            let (y1, _) = run_svxsv(Variant::Sssr, iw, &a, &b);
+            assert!((y0 - y1).abs() < 1e-9 * y0.abs().max(1.0));
+        }
+    }
+}
+
+/// Property: union/intersection result fibers are valid sparse vectors
+/// with the exact set-algebra patterns.
+#[test]
+fn property_union_intersection_patterns() {
+    let mut r = Pcg::new(7);
+    for case in 0..12 {
+        let dim = 32 + r.below(800) as usize;
+        let a = matgen::random_spvec(6000 + case, dim, (r.below(dim as u64 / 2) as usize).max(1));
+        let b = matgen::random_spvec(7000 + case, dim, (r.below(dim as u64 / 2) as usize).max(1));
+        let (u, _) = run_svpsv(Variant::Sssr, IdxWidth::U16, &a, &b);
+        let (i, _) = run_svosv(Variant::Sssr, IdxWidth::U16, &a, &b);
+        u.validate().unwrap();
+        i.validate().unwrap();
+        // |A ∪ B| + |A ∩ B| == |A| + |B|
+        assert_eq!(u.nnz() + i.nnz(), a.nnz() + b.nnz());
+        // intersection ⊆ both operands; union ⊇ both
+        let au: std::collections::BTreeSet<u32> = a.idcs.iter().copied().collect();
+        let bu: std::collections::BTreeSet<u32> = b.idcs.iter().copied().collect();
+        for &x in &i.idcs {
+            assert!(au.contains(&x) && bu.contains(&x));
+        }
+        for &x in &a.idcs {
+            assert!(u.idcs.binary_search(&x).is_ok());
+        }
+    }
+}
+
+/// Property: the eight-core cluster computes the same sM×dV/sM×sV as
+/// the single core, for random matrices spanning empty to dense rows.
+#[test]
+fn property_cluster_matches_single_core() {
+    let cfg = ClusterCfg::paper_cluster();
+    let mut r = Pcg::new(11);
+    for case in 0..4 {
+        let rows = 64 + r.below(256) as usize;
+        let cols = 128 + r.below(512) as usize;
+        let nnz = (rows + r.below((rows * 8) as u64) as usize).min(rows * cols / 2);
+        let m = matgen::random_csr(8000 + case, rows, cols, nnz);
+        let b = matgen::random_dense(9000 + case, cols);
+        let cl = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &cfg);
+        let (single, _) = run_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b);
+        for (x, y) in cl.result.iter().zip(&single) {
+            assert!((x - y).abs() < 1e-9 * y.abs().max(1.0));
+        }
+        let sv = matgen::random_spvec(9500 + case, cols, (cols / 10).max(1));
+        let cl = run_cluster_smxsv(Variant::Sssr, IdxWidth::U16, &m, &sv, &cfg);
+        let single = ops::smxsv(&m, &sv);
+        for (x, y) in cl.result.iter().zip(&single) {
+            assert!((x - y).abs() < 1e-9 * y.abs().max(1.0));
+        }
+    }
+}
+
+/// Edge cases that have historically broken sparse kernels.
+#[test]
+fn edge_cases_sparse_kernels() {
+    let dim = 64;
+    let d = matgen::random_dense(1, dim);
+    // single element at position 0 / at the last position
+    for pos in [0u32, (dim - 1) as u32] {
+        let v = SpVec::new(dim, vec![pos], vec![2.5]);
+        let (x, _) = run_svxdv(Variant::Sssr, IdxWidth::U16, &v, &d, false);
+        assert!((x - 2.5 * d[pos as usize]).abs() < 1e-12);
+    }
+    // adjacent duplicated patterns in matrices with empty first/last rows
+    let m = sssr::formats::Csr::new(
+        3,
+        8,
+        vec![0, 0, 2, 2],
+        vec![0, 7],
+        vec![1.0, -1.0],
+    );
+    let d8 = matgen::random_dense(3, 8);
+    for v in [Variant::Base, Variant::Ssr, Variant::Sssr] {
+        let (c, _) = run_smxdv(v, IdxWidth::U16, &m, &d8);
+        assert_eq!(c[0], 0.0);
+        assert_eq!(c[2], 0.0);
+        assert!((c[1] - (d8[0] - d8[7])).abs() < 1e-12);
+    }
+    // fully dense "sparse" vector
+    let full = SpVec::new(16, (0..16).collect(), vec![1.0; 16]);
+    let d16 = matgen::random_dense(2, 16);
+    let (x, _) = run_svxdv(Variant::Sssr, IdxWidth::U16, &full, &d16, false);
+    let want: f64 = d16.iter().sum();
+    assert!((x - want).abs() < 1e-9);
+}
+
+/// The Fig. 4 headline calibrations (§4.1): BASE 1/9, SSR 1/7 issue
+/// bounds on sV×dV; SSSR near the arbitration limits.
+#[test]
+fn calibration_issue_bounds_and_arbitration_limits() {
+    let dim = 8192;
+    let a = matgen::random_spvec(42, dim, 4096);
+    let b = matgen::random_dense(43, dim);
+    let (_, base) = run_svxdv(Variant::Base, IdxWidth::U16, &a, &b, false);
+    let (_, ssr) = run_svxdv(Variant::Ssr, IdxWidth::U16, &a, &b, false);
+    assert!((0.10..0.12).contains(&base.utilization), "BASE {}", base.utilization);
+    assert!((0.13..0.16).contains(&ssr.utilization), "SSR {}", ssr.utilization);
+    for (iw, limit) in [(IdxWidth::U16, 0.80), (IdxWidth::U32, 2.0 / 3.0)] {
+        let (_, r) = run_svxdv(Variant::Sssr, iw, &a, &b, true);
+        assert!(
+            r.utilization > 0.88 * limit && r.utilization <= limit + 0.01,
+            "SSSR {:?} utilization {} vs limit {}",
+            iw,
+            r.utilization,
+            limit
+        );
+    }
+}
+
+/// PJRT golden path (skipped when artifacts are absent so `cargo test`
+/// works before `make artifacts`).
+#[test]
+fn golden_models_match_simulator() {
+    let path = std::path::Path::new("artifacts/manifest.json");
+    if !path.exists() {
+        eprintln!("skipping golden test: run `make artifacts` first");
+        return;
+    }
+    let rt = sssr::runtime::Runtime::load(path).expect("loading artifacts");
+    let n = sssr::runtime::golden::verify_all(&rt).expect("golden verification");
+    assert!(n >= 7, "expected >= 7 golden checks, ran {n}");
+}
