@@ -2,15 +2,19 @@
 //! 4a sVxdV utilization, 4b sV+dV utilization, 4c sMxdV speedups,
 //! 4d sVxsV speedups, 4e sV+sV speedups, 4f sMxsV speedups.
 //! Quick sweeps by default; REPRO_FULL=1 for the paper-size sweeps.
+//! Grid points run in parallel (one worker per core); records are
+//! identical to a serial run.
+use sssr::experiments::Runner;
 use sssr::harness as h;
 
 fn main() {
     let t0 = std::time::Instant::now();
-    h::print_util_rows("Fig. 4a: CC sVxdV FPU utilization vs nonzeros", &h::fig4a());
-    h::print_util_rows("Fig. 4b: CC sV+dV FPU utilization vs nonzeros", &h::fig4b());
-    h::print_speedup_rows("Fig. 4c: CC sMxdV speedups over BASE", &h::fig4c());
-    h::print_density_rows("Fig. 4d: CC sVxsV speedup vs densities (len 20k/60k)", &h::fig4d());
-    h::print_density_rows("Fig. 4e: CC sV+sV speedup vs densities", &h::fig4e());
-    h::print_matsv_rows("Fig. 4f: CC sMxsV speedups over BASE", &h::fig4f());
+    let runner = Runner::new(0);
+    // lazy constructors: one spec's captured workloads live at a time
+    for name in ["fig4a", "fig4b", "fig4c", "fig4d", "fig4e", "fig4f"] {
+        let spec = h::spec_by_name(name).expect("fig4 spec registered");
+        let recs = runner.run(&spec);
+        spec.print(&recs);
+    }
     println!("\n[fig4 bench wall time: {:.1}s]", t0.elapsed().as_secs_f64());
 }

@@ -1,13 +1,17 @@
 //! Regenerates Fig. 5 (eight-core cluster scaleouts with HBM2E +
-//! interconnect models, §4.2).
+//! interconnect models, §4.2) through the parallel experiment engine.
+use sssr::experiments::Runner;
 use sssr::harness as h;
 
 fn main() {
     let t0 = std::time::Instant::now();
-    let a = h::fig5a();
-    h::print_cluster_rows("Fig. 5a: cluster sMxdV speedups (16-bit)", &a);
-    let b = h::fig5b();
-    h::print_cluster_rows("Fig. 5b: cluster sMxsV speedups (16-bit)", &b);
+    let runner = Runner::new(0);
+    let spec_a = h::spec_fig5a();
+    let a = runner.run(&spec_a);
+    spec_a.print(&a);
+    let spec_b = h::spec_fig5b();
+    let b = runner.run(&spec_b);
+    spec_b.print(&b);
     let peak = h::table2_ours(&a);
     println!("\npeak cluster sMxdV FPU utilization: {:.1} % (paper: 46.8 %)", peak * 100.0);
     println!("[fig5 bench wall time: {:.1}s]", t0.elapsed().as_secs_f64());

@@ -1,18 +1,15 @@
 //! Regenerates Fig. 6 (DRAM bandwidth and interconnect latency
 //! sensitivity, §4.2.1) on the Mycielskian peak-speedup matrix.
+use sssr::experiments::Runner;
 use sssr::harness as h;
 
 fn main() {
     let t0 = std::time::Instant::now();
-    h::print_sensitivity_rows(
-        "Fig. 6a: speedup vs DRAM channel bandwidth",
-        "Gb/s/pin",
-        &h::fig6a(),
-    );
-    h::print_sensitivity_rows(
-        "Fig. 6b: speedup vs on-chip interconnect latency",
-        "cycles",
-        &h::fig6b(),
-    );
+    let runner = Runner::new(0);
+    for name in ["fig6a", "fig6b"] {
+        let spec = h::spec_by_name(name).expect("fig6 spec registered");
+        let recs = runner.run(&spec);
+        spec.print(&recs);
+    }
     println!("\n[fig6 bench wall time: {:.1}s]", t0.elapsed().as_secs_f64());
 }

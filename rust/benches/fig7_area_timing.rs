@@ -1,7 +1,13 @@
 //! Regenerates Fig. 7 (streamer area and timing, §4.3) from the
 //! GF12LP+-calibrated analytical model.
+use sssr::experiments::Runner;
 use sssr::harness as h;
 
 fn main() {
-    h::print_fig7();
+    let runner = Runner::new(0);
+    for spec in [h::spec_fig7b(), h::spec_fig7c()] {
+        let recs = runner.run(&spec);
+        spec.print(&recs);
+    }
+    h::print_fig7_footer();
 }

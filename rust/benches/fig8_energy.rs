@@ -1,10 +1,15 @@
 //! Regenerates Fig. 8 (cluster energy estimates, §4.4): cluster runs
 //! feed the activity-scaled energy model.
+use sssr::experiments::Runner;
 use sssr::harness as h;
 
 fn main() {
     let t0 = std::time::Instant::now();
-    h::print_energy_rows("Fig. 8a: cluster sMxdV energy", &h::fig8("smxdv"));
-    h::print_energy_rows("Fig. 8b: cluster sMxsV energy (d_v=1%)", &h::fig8("smxsv"));
+    let runner = Runner::new(0);
+    for name in ["fig8a", "fig8b"] {
+        let spec = h::spec_by_name(name).expect("fig8 spec registered");
+        let recs = runner.run(&spec);
+        spec.print(&recs);
+    }
     println!("\n[fig8 bench wall time: {:.1}s]", t0.elapsed().as_secs_f64());
 }

@@ -1,8 +1,12 @@
 //! Regenerates Tables 2 and 3 (§5 comparison to related work).
+use sssr::experiments::Runner;
 use sssr::harness as h;
 
 fn main() {
-    let rows = h::fig5a();
+    let runner = Runner::new(0);
+    let rows = runner.run(&h::spec_fig5a());
     h::print_table2(h::table2_ours(&rows));
-    h::print_table3();
+    let spec3 = h::spec_table3();
+    let t3 = runner.run(&spec3);
+    spec3.print(&t3);
 }

@@ -1,0 +1,79 @@
+//! The declarative, parallel experiment engine.
+//!
+//! The paper's evaluation (§4–§5) is a grid of independent simulator
+//! runs — kernel × variant × index-width × size/density sweeps. This
+//! subsystem expresses each figure/table as one [`ExperimentSpec`]
+//! (built by [`crate::harness`]), executes its grid in parallel through
+//! the generic [`Runner`], and emits the unified [`Record`]s both as the
+//! legacy human-readable tables and as machine-readable single-line-JSON
+//! `BENCH_<name>.json` files:
+//!
+//! ```text
+//! spec  — ExperimentSpec: seeded workload grid + measurement closure
+//! run   — Runner: std::thread::scope workers over an atomic work index,
+//!         deterministic record order by grid-point index
+//! emit  — ExperimentSpec::print (tables) / write_json (BENCH_*.json)
+//! ```
+//!
+//! Parallelism never changes results: every grid point seeds its own
+//! workload generators, so `--jobs N` output is byte-identical to
+//! `--jobs 1` (asserted by the runner's unit tests).
+
+pub mod record;
+pub mod runner;
+pub mod spec;
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+pub use record::{Record, Value};
+pub use runner::{default_jobs, Runner};
+pub use spec::{grid2, ColFmt, Column, ExperimentSpec, Measure, Point};
+
+/// Write one `BENCH_<spec.name>.json` under `dir`: one single-line JSON
+/// object per record. Returns the path written.
+pub fn write_json(dir: &Path, spec: &ExperimentSpec, records: &[Record]) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("BENCH_{}.json", spec.name));
+    let mut buf = String::new();
+    for r in records {
+        buf.push_str(&r.to_json_line());
+        buf.push('\n');
+    }
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(buf.as_bytes())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_json_emits_one_parseable_object_per_line() {
+        let spec = ExperimentSpec {
+            name: "writetest",
+            title: "write test".into(),
+            columns: vec![],
+            points: vec![Point::at(0), Point::at(1)],
+            measure: Box::new(|p: &Point| {
+                vec![Record::new("writetest").int("i", p.idx.unwrap() as i64).num("half", 0.5)]
+            }),
+        };
+        let recs = spec.run(1);
+        let dir = std::env::temp_dir().join("sssr_writetest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = write_json(&dir, &spec, &recs).unwrap();
+        assert!(path.ends_with("BENCH_writetest.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for (i, line) in lines.iter().enumerate() {
+            let r = Record::from_json_line(line).unwrap();
+            assert_eq!(r.point, i);
+            assert_eq!(r.f64("i"), Some(i as f64));
+            assert_eq!(r.f64("half"), Some(0.5));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,210 @@
+//! The unified measurement record.
+//!
+//! Every experiment point produces one or more [`Record`]s — an ordered
+//! list of named values — instead of a bespoke per-figure row struct.
+//! Records render to human tables through the owning
+//! [`super::ExperimentSpec`]'s column layout and to machine-readable
+//! single-line JSON (`BENCH_<name>.json`, one object per line) through
+//! [`Record::to_json_line`], so the bench trajectory is diffable across
+//! PRs.
+
+use crate::util::Json;
+
+/// One measured or descriptive value of a record.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Num(f64),
+    Str(String),
+}
+
+impl Value {
+    /// Numeric view (`Int` widens to `f64`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Num(x) => Some(*x),
+            Value::Str(_) => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Value::Int(i) => Json::Num(*i as f64),
+            // NaN / infinities are not representable in JSON; emit null so
+            // every BENCH_*.json line stays parseable.
+            Value::Num(x) if !x.is_finite() => Json::Null,
+            Value::Num(x) => Json::Num(*x),
+            Value::Str(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+/// One experiment measurement: a named, ordered bag of values.
+///
+/// Field order is preserved — it defines both the JSON key order and the
+/// table column lookup. Optional quantities (e.g. the no-reduction
+/// utilization series of Fig. 4a) are simply absent instead of `null`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Record {
+    /// Experiment this record belongs to (e.g. `"fig4a"`).
+    pub experiment: String,
+    /// Grid point index the record came from; assigned by the runner and
+    /// the key under which deterministic output order is preserved.
+    pub point: usize,
+    pub fields: Vec<(String, Value)>,
+}
+
+impl Record {
+    pub fn new(experiment: &str) -> Record {
+        Record { experiment: experiment.to_string(), point: 0, fields: vec![] }
+    }
+
+    /// Append a string field (builder style).
+    pub fn str(mut self, key: &str, v: impl Into<String>) -> Record {
+        self.fields.push((key.to_string(), Value::Str(v.into())));
+        self
+    }
+
+    /// Append an integer field.
+    pub fn int(mut self, key: &str, v: i64) -> Record {
+        self.fields.push((key.to_string(), Value::Int(v)));
+        self
+    }
+
+    /// Append a float field.
+    pub fn num(mut self, key: &str, v: f64) -> Record {
+        self.fields.push((key.to_string(), Value::Num(v)));
+        self
+    }
+
+    /// Append a float field only when present.
+    pub fn opt_num(mut self, key: &str, v: Option<f64>) -> Record {
+        if let Some(x) = v {
+            self.fields.push((key.to_string(), Value::Num(x)));
+        }
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+
+    pub fn str_of(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kvs = vec![
+            ("experiment".to_string(), Json::Str(self.experiment.clone())),
+            ("point".to_string(), Json::Num(self.point as f64)),
+        ];
+        for (k, v) in &self.fields {
+            kvs.push((k.clone(), v.to_json()));
+        }
+        Json::Obj(kvs)
+    }
+
+    /// One single-line JSON object (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Parse a record back from its JSON line. Integer-valued numbers
+    /// come back as [`Value::Int`] (JSON does not distinguish); `null`
+    /// fields (non-finite floats on write) are dropped, mirroring the
+    /// optional-field convention.
+    pub fn from_json_line(line: &str) -> Result<Record, String> {
+        let v = Json::parse(line)?;
+        let kvs = match v {
+            Json::Obj(kvs) => kvs,
+            _ => return Err("record line is not a JSON object".into()),
+        };
+        let mut rec = Record::default();
+        for (k, v) in kvs {
+            match v {
+                Json::Str(s) if k == "experiment" => rec.experiment = s,
+                Json::Num(x) if k == "point" => rec.point = x as usize,
+                Json::Null => {}
+                Json::Str(s) => rec.fields.push((k, Value::Str(s))),
+                Json::Num(x) => {
+                    let v = if x.fract() == 0.0 && x.abs() < 9e15 {
+                        Value::Int(x as i64)
+                    } else {
+                        Value::Num(x)
+                    };
+                    rec.fields.push((k, v));
+                }
+                other => return Err(format!("field {k}: unsupported value {other:?}")),
+            }
+        }
+        Ok(rec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_line_roundtrips_fields() {
+        let mut r = Record::new("fig4a")
+            .str("variant", "sssr16")
+            .int("nnz", 4096)
+            .num("utilization", 0.7612345678901234)
+            .num("speedup", 2.0);
+        r.point = 7;
+        let line = r.to_json_line();
+        let back = Record::from_json_line(&line).unwrap();
+        assert_eq!(back.experiment, "fig4a");
+        assert_eq!(back.point, 7);
+        assert_eq!(back.str_of("variant"), Some("sssr16"));
+        // numeric fields round-trip exactly (Rust's shortest float repr)
+        for key in ["nnz", "utilization", "speedup"] {
+            assert_eq!(back.f64(key), r.f64(key), "field {key}");
+        }
+        // integer-valued floats come back as Int
+        assert_eq!(back.get("speedup"), Some(&Value::Int(2)));
+    }
+
+    #[test]
+    fn non_finite_floats_serialize_null_and_stay_parseable() {
+        let r = Record::new("t")
+            .num("ok", 1.5)
+            .num("bad", f64::NAN)
+            .num("inf", f64::INFINITY);
+        let line = r.to_json_line();
+        assert!(line.contains("\"bad\":null") && line.contains("\"inf\":null"), "{line}");
+        let back = Record::from_json_line(&line).unwrap();
+        assert_eq!(back.f64("ok"), Some(1.5));
+        // null fields are dropped on read — same as never-measured optionals
+        assert!(back.get("bad").is_none() && back.get("inf").is_none());
+    }
+
+    #[test]
+    fn optional_fields_are_omitted() {
+        let r = Record::new("t").opt_num("present", Some(0.25)).opt_num("absent", None);
+        assert_eq!(r.f64("present"), Some(0.25));
+        assert!(r.get("absent").is_none());
+        assert!(!r.to_json_line().contains("absent"));
+    }
+
+    #[test]
+    fn json_line_is_single_line() {
+        let r = Record::new("t").str("name", "a\nb");
+        let line = r.to_json_line();
+        assert!(!line.contains('\n'));
+        assert_eq!(Record::from_json_line(&line).unwrap().str_of("name"), Some("a\nb"));
+    }
+}

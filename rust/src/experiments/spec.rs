@@ -1,0 +1,226 @@
+//! Declarative experiment descriptions.
+//!
+//! An [`ExperimentSpec`] is the unit every figure/table of the paper's
+//! evaluation is expressed in: a name, a grid of [`Point`]s (the sweep
+//! coordinates — variant, index width, size/density, matrix …), a
+//! measurement closure mapping one point to [`Record`]s, and the column
+//! layout its human-readable table renders with. The generic
+//! [`super::Runner`] executes the grid — in parallel when asked — and
+//! [`ExperimentSpec::print`] / [`super::write_json`] consume the
+//! resulting records.
+
+use crate::kernels::{IdxWidth, Variant};
+
+use super::record::{Record, Value};
+
+/// One grid point of an experiment: the declarative coordinates the
+/// measurement closure receives. Unused axes stay `None`.
+#[derive(Clone, Debug, Default)]
+pub struct Point {
+    /// Index into an experiment-owned collection (corpus entry, streamer
+    /// config table, …).
+    pub idx: Option<usize>,
+    /// Human-readable label (matrix or configuration name).
+    pub label: Option<String>,
+    pub variant: Option<Variant>,
+    pub iw: Option<IdxWidth>,
+    /// Operand size axis (nonzero count).
+    pub nnz: Option<usize>,
+    pub density_a: Option<f64>,
+    pub density_b: Option<f64>,
+    /// Generic sweep coordinate (Gb/s/pin, latency cycles, period ps …).
+    pub x: Option<f64>,
+}
+
+impl Point {
+    pub fn at(idx: usize) -> Point {
+        Point { idx: Some(idx), ..Point::default() }
+    }
+
+    pub fn label(mut self, s: impl Into<String>) -> Point {
+        self.label = Some(s.into());
+        self
+    }
+
+    pub fn variant(mut self, v: Variant) -> Point {
+        self.variant = Some(v);
+        self
+    }
+
+    pub fn iw(mut self, w: IdxWidth) -> Point {
+        self.iw = Some(w);
+        self
+    }
+
+    pub fn nnz(mut self, n: usize) -> Point {
+        self.nnz = Some(n);
+        self
+    }
+
+    pub fn densities(mut self, a: f64, b: f64) -> Point {
+        self.density_a = Some(a);
+        self.density_b = Some(b);
+        self
+    }
+
+    pub fn density(mut self, d: f64) -> Point {
+        self.density_a = Some(d);
+        self
+    }
+
+    pub fn x(mut self, x: f64) -> Point {
+        self.x = Some(x);
+        self
+    }
+}
+
+/// How a column formats its record field.
+#[derive(Clone, Copy, Debug)]
+pub enum ColFmt {
+    /// Left-aligned string.
+    Str,
+    /// Right-aligned string (yes/no flags, category letters).
+    StrR,
+    /// Right-aligned integer.
+    Int,
+    /// Right-aligned fixed-point with the given precision.
+    Fixed(usize),
+    /// Fixed-point suffixed with `x` (speedups): the number is one
+    /// narrower than the column so `1.87x` occupies the full width.
+    FixedX(usize),
+    /// Fraction printed as a percentage with `%` suffix.
+    Pct(usize),
+}
+
+/// One column of an experiment's human-readable table.
+#[derive(Clone, Copy, Debug)]
+pub struct Column {
+    /// Record field this column reads.
+    pub key: &'static str,
+    pub header: &'static str,
+    pub width: usize,
+    pub fmt: ColFmt,
+}
+
+impl Column {
+    pub const fn new(key: &'static str, header: &'static str, width: usize, fmt: ColFmt) -> Column {
+        Column { key, header, width, fmt }
+    }
+
+    fn render(&self, rec: &Record) -> String {
+        let w = self.width;
+        match (self.fmt, rec.get(self.key)) {
+            (ColFmt::Str, Some(Value::Str(s))) => format!("{s:<w$}"),
+            (ColFmt::Str, Some(v)) => format!("{:<w$}", v.as_f64().unwrap_or(f64::NAN)),
+            (ColFmt::StrR, Some(Value::Str(s))) => format!("{s:>w$}"),
+            (ColFmt::StrR, Some(v)) => format!("{:>w$}", v.as_f64().unwrap_or(f64::NAN)),
+            (ColFmt::StrR, None) => format!("{:>w$}", "-"),
+            (ColFmt::Int, Some(v)) => match v.as_f64() {
+                Some(x) => format!("{:>w$}", x as i64),
+                None => format!("{:>w$}", v.as_str().unwrap_or("-")),
+            },
+            (ColFmt::Fixed(p), Some(v)) => match v.as_f64() {
+                Some(x) => format!("{x:>w$.p$}"),
+                None => format!("{:>w$}", v.as_str().unwrap_or("-")),
+            },
+            (ColFmt::FixedX(p), Some(v)) => {
+                let n = w.saturating_sub(1);
+                match v.as_f64() {
+                    Some(x) => format!("{x:>n$.p$}x"),
+                    None => format!("{:>w$}", "-"),
+                }
+            }
+            (ColFmt::Pct(p), Some(v)) => {
+                let n = w.saturating_sub(1);
+                match v.as_f64() {
+                    Some(x) => format!("{:>n$.p$}%", x * 100.0),
+                    None => format!("{:>w$}", "-"),
+                }
+            }
+            (ColFmt::Str, None) => format!("{:<w$}", "-"),
+            (_, None) => format!("{:>w$}", "-"),
+        }
+    }
+
+    fn render_header(&self) -> String {
+        let w = self.width;
+        match self.fmt {
+            ColFmt::Str => format!("{:<w$}", self.header),
+            _ => format!("{:>w$}", self.header),
+        }
+    }
+}
+
+/// Measurement closure: one grid point in, zero or more records out.
+/// `Send + Sync` so the runner may evaluate points from worker threads.
+pub type Measure = Box<dyn Fn(&Point) -> Vec<Record> + Send + Sync>;
+
+/// A declaratively described experiment sweep.
+pub struct ExperimentSpec {
+    /// Short machine name; keys the `BENCH_<name>.json` output file.
+    pub name: &'static str,
+    /// Table heading, e.g. `"Fig. 4a: CC sVxdV FPU utilization"`.
+    pub title: String,
+    pub columns: Vec<Column>,
+    pub points: Vec<Point>,
+    pub measure: Measure,
+}
+
+impl ExperimentSpec {
+    /// Run the whole grid with `jobs` worker threads (see [`super::Runner`]).
+    pub fn run(&self, jobs: usize) -> Vec<Record> {
+        super::Runner::new(jobs).run(self)
+    }
+
+    /// Render records as the experiment's human-readable table.
+    pub fn print(&self, records: &[Record]) {
+        println!("\n== {} ==", self.title);
+        let header: Vec<String> = self.columns.iter().map(Column::render_header).collect();
+        println!("{}", header.join(" "));
+        for r in records {
+            let row: Vec<String> = self.columns.iter().map(|c| c.render(r)).collect();
+            println!("{}", row.join(" "));
+        }
+    }
+}
+
+/// Cartesian product helper for two sweep axes.
+pub fn grid2<A: Clone, B: Clone>(xs: &[A], ys: &[B]) -> Vec<(A, B)> {
+    let mut out = Vec::with_capacity(xs.len() * ys.len());
+    for x in xs {
+        for y in ys {
+            out.push((x.clone(), y.clone()));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_rendering_matches_legacy_layout() {
+        let rec = Record::new("t")
+            .str("variant", "sssr16")
+            .int("nnz", 64)
+            .num("util", 0.756)
+            .num("speedup", 1.8712);
+        let c = Column::new("variant", "variant", 8, ColFmt::Str);
+        assert_eq!(c.render(&rec), "sssr16  ");
+        let c = Column::new("nnz", "nnz", 8, ColFmt::Int);
+        assert_eq!(c.render(&rec), "      64");
+        let c = Column::new("util", "FPU util", 10, ColFmt::Fixed(3));
+        assert_eq!(c.render(&rec), "     0.756");
+        let c = Column::new("speedup", "speedup", 8, ColFmt::FixedX(2));
+        assert_eq!(c.render(&rec), "   1.87x");
+        let c = Column::new("missing", "w/o reduc.", 12, ColFmt::Fixed(3));
+        assert_eq!(c.render(&rec), "           -");
+    }
+
+    #[test]
+    fn grid2_is_row_major() {
+        let g = grid2(&[1, 2], &["a", "b"]);
+        assert_eq!(g, vec![(1, "a"), (1, "b"), (2, "a"), (2, "b")]);
+    }
+}

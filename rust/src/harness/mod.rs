@@ -1,17 +1,22 @@
-//! Benchmark harness: regenerates every table and figure of the paper's
-//! evaluation (§4–§5). Each `figNx()` function runs the corresponding
-//! experiment on the simulator and returns printable rows; the bench
-//! targets under `rust/benches/` and the `repro` CLI both call in here.
+//! Benchmark harness: every table and figure of the paper's evaluation
+//! (§4–§5) expressed as a declarative [`ExperimentSpec`] over the
+//! [`crate::experiments`] engine. The bench targets under `rust/benches/`
+//! and the `repro` CLI both obtain specs here, execute them through the
+//! parallel [`crate::experiments::Runner`], and render the resulting
+//! unified [`Record`]s as tables and/or `BENCH_<fig>.json` files.
 //!
 //! Sweep sizes: the default ("quick") configuration subsamples the
 //! corpus and caps matrix sizes so `cargo bench` completes in minutes;
 //! set `REPRO_FULL=1` for the full corpus (including mycielskian12's
-//! 407 k stored nonzeros).
+//! 407 k stored nonzeros). Every grid point seeds its own workload
+//! generators, so results are independent of `--jobs`.
 
 use crate::coordinator::{run_cluster_smxdv, run_cluster_smxsv};
+use crate::experiments::{grid2, ColFmt, Column, ExperimentSpec, Point, Record};
 use crate::formats::SpVec;
 use crate::kernels::driver::{
-    run_smxdv_sized, run_smxsv_sized, run_svpdv, run_svpsv, run_svxdv, run_svxsv,
+    run_smxdv_sized, run_smxsv_sized, run_svpdv, run_svpdv_unchecked, run_svpsv, run_svxdv,
+    run_svxsv,
 };
 use crate::kernels::{IdxWidth, Variant};
 use crate::matgen;
@@ -41,24 +46,19 @@ fn corpus_selection() -> Vec<matgen::CorpusEntry> {
     }
 }
 
-// ======================================================================
-// Fig. 4a/4b — single-CC sV×dV / sV+dV FPU utilization vs nonzeros
-// ======================================================================
-
-#[derive(Clone, Debug)]
-pub struct UtilRow {
-    pub variant: &'static str,
-    pub nnz: usize,
-    pub utilization: f64,
-    /// Without reductions (dashed series; sV×dV SSSR only).
-    pub utilization_nored: Option<f64>,
-}
-
 fn nnz_sweep() -> Vec<usize> {
     if full_mode() {
         vec![4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096]
     } else {
         vec![4, 16, 64, 256, 1024, 4096]
+    }
+}
+
+fn density_sweep() -> Vec<f64> {
+    if full_mode() {
+        vec![0.0003, 0.001, 0.003, 0.01, 0.03, 0.1, 0.3]
+    } else {
+        vec![0.001, 0.01, 0.1, 0.3]
     }
 }
 
@@ -72,143 +72,245 @@ fn repeated_idx_fiber(seed: u64, dim: usize, nnz: usize) -> SpVec {
     SpVec { dim, idcs, vals }
 }
 
-pub fn fig4a() -> Vec<UtilRow> {
-    let dim16 = 8192; // dense operand resident in the TCDM
-    let dim8 = 256;
-    let b16 = matgen::random_dense(101, dim16);
-    let b8 = matgen::random_dense(102, dim8);
-    let mut rows = vec![];
-    for &nnz in &nnz_sweep() {
-        let a16 = matgen::random_spvec(200 + nnz as u64, dim16, nnz);
-        // BASE and SSR perform identically for all index sizes (§4.1.1)
-        let (_, r) = run_svxdv(Variant::Base, IdxWidth::U16, &a16, &b16, false);
-        rows.push(UtilRow { variant: "base", nnz, utilization: r.utilization, utilization_nored: None });
-        let (_, r) = run_svxdv(Variant::Ssr, IdxWidth::U16, &a16, &b16, false);
-        rows.push(UtilRow { variant: "ssr", nnz, utilization: r.utilization, utilization_nored: None });
-        for (name, iw) in [("sssr16", IdxWidth::U16), ("sssr32", IdxWidth::U32)] {
-            let (_, with) = run_svxdv(Variant::Sssr, iw, &a16, &b16, false);
-            let (_, wo) = run_svxdv(Variant::Sssr, iw, &a16, &b16, true);
-            rows.push(UtilRow {
-                variant: name,
-                nnz,
-                utilization: with.utilization,
-                utilization_nored: Some(wo.utilization),
-            });
-        }
-        if nnz <= dim8 {
-            let a8 = matgen::random_spvec(300 + nnz as u64, dim8, nnz);
-            let (_, with) = run_svxdv(Variant::Sssr, IdxWidth::U8, &a8, &b8, false);
-            let (_, wo) = run_svxdv(Variant::Sssr, IdxWidth::U8, &a8, &b8, true);
-            rows.push(UtilRow {
-                variant: "sssr8",
-                nnz,
-                utilization: with.utilization,
-                utilization_nored: Some(wo.utilization),
-            });
-        }
-        // repeated 8-bit indices scale past 256 nonzeros
-        let a8r = repeated_idx_fiber(400 + nnz as u64, dim8, nnz);
-        let (_, with) = run_svxdv(Variant::Sssr, IdxWidth::U8, &a8r, &b8, false);
-        let (_, wo) = run_svxdv(Variant::Sssr, IdxWidth::U8, &a8r, &b8, true);
-        rows.push(UtilRow {
-            variant: "sssr8r",
-            nnz,
-            utilization: with.utilization,
-            utilization_nored: Some(wo.utilization),
-        });
+/// The paper uses its peak-speedup matrix mycielskian12 here; quick mode
+/// uses mycielskian11 (same construction, quarter size).
+fn fig6_matrix() -> crate::formats::Csr {
+    if full_mode() {
+        matgen::mycielskian(12)
+    } else {
+        matgen::mycielskian(11)
     }
-    rows
 }
 
-pub fn fig4b() -> Vec<UtilRow> {
+// ======================================================================
+// column layouts
+// ======================================================================
+
+fn util_columns() -> Vec<Column> {
+    vec![
+        Column::new("variant", "variant", 8, ColFmt::Str),
+        Column::new("nnz", "nnz", 8, ColFmt::Int),
+        Column::new("utilization", "FPU util", 10, ColFmt::Fixed(3)),
+        Column::new("utilization_nored", "w/o reduc.", 12, ColFmt::Fixed(3)),
+    ]
+}
+
+fn speedup_columns() -> Vec<Column> {
+    vec![
+        Column::new("matrix", "matrix", 14, ColFmt::Str),
+        Column::new("avg_row_nnz", "n_nz/row", 8, ColFmt::Fixed(1)),
+        Column::new("variant", "variant", 8, ColFmt::Str),
+        Column::new("speedup", "speedup", 8, ColFmt::FixedX(2)),
+        Column::new("utilization", "util", 8, ColFmt::Fixed(3)),
+    ]
+}
+
+fn density_columns() -> Vec<Column> {
+    vec![
+        Column::new("density_a", "dens_a", 9, ColFmt::Fixed(4)),
+        Column::new("density_b", "dens_b", 9, ColFmt::Fixed(4)),
+        Column::new("speedup", "speedup", 8, ColFmt::FixedX(2)),
+    ]
+}
+
+fn matsv_columns() -> Vec<Column> {
+    vec![
+        Column::new("matrix", "matrix", 14, ColFmt::Str),
+        Column::new("avg_row_nnz", "n_nz/row", 8, ColFmt::Fixed(1)),
+        Column::new("density", "dens_v", 8, ColFmt::Fixed(3)),
+        Column::new("speedup", "speedup", 8, ColFmt::FixedX(2)),
+    ]
+}
+
+fn cluster_columns() -> Vec<Column> {
+    vec![
+        Column::new("matrix", "matrix", 14, ColFmt::Str),
+        Column::new("avg_row_nnz", "n_nz/row", 8, ColFmt::Fixed(1)),
+        Column::new("density", "dens_v", 8, ColFmt::Fixed(3)),
+        Column::new("speedup", "speedup", 8, ColFmt::FixedX(2)),
+        Column::new("utilization", "FPU util", 9, ColFmt::Fixed(3)),
+        Column::new("base_cycles", "base cyc", 12, ColFmt::Int),
+        Column::new("sssr_cycles", "sssr cyc", 12, ColFmt::Int),
+    ]
+}
+
+fn sensitivity_columns(xlabel: &'static str) -> Vec<Column> {
+    vec![
+        Column::new("x", xlabel, 10, ColFmt::Fixed(2)),
+        Column::new("kernel", "kernel", 8, ColFmt::Str),
+        Column::new("speedup", "speedup", 8, ColFmt::FixedX(2)),
+    ]
+}
+
+fn energy_columns() -> Vec<Column> {
+    vec![
+        Column::new("matrix", "matrix", 14, ColFmt::Str),
+        Column::new("variant", "var", 6, ColFmt::Str),
+        Column::new("pj_per_op", "pJ/op", 10, ColFmt::Fixed(1)),
+        Column::new("power_mw", "power mW", 10, ColFmt::Fixed(1)),
+        Column::new("total_uj", "total uJ", 10, ColFmt::Fixed(2)),
+    ]
+}
+
+// ======================================================================
+// Fig. 4a/4b — single-CC sV×dV / sV+dV FPU utilization vs nonzeros
+// ======================================================================
+
+pub fn spec_fig4a() -> ExperimentSpec {
+    let points = nnz_sweep().into_iter().map(|n| Point::default().nnz(n)).collect();
+    let dim16 = 8192; // dense operand resident in the TCDM
+    let dim8 = 256;
+    // shared across grid points; immutable, so safe under parallel workers
+    let b16 = matgen::random_dense(101, dim16);
+    let b8 = matgen::random_dense(102, dim8);
+    ExperimentSpec {
+        name: "fig4a",
+        title: "Fig. 4a: CC sVxdV FPU utilization vs nonzeros".into(),
+        columns: util_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let nnz = p.nnz.unwrap();
+            let rec = |variant: &str, utilization: f64, nored: Option<f64>| {
+                Record::new("fig4a")
+                    .str("variant", variant)
+                    .int("nnz", nnz as i64)
+                    .num("utilization", utilization)
+                    .opt_num("utilization_nored", nored)
+            };
+            let mut out = vec![];
+            let a16 = matgen::random_spvec(200 + nnz as u64, dim16, nnz);
+            // BASE and SSR perform identically for all index sizes (§4.1.1)
+            let (_, r) = run_svxdv(Variant::Base, IdxWidth::U16, &a16, &b16, false);
+            out.push(rec("base", r.utilization, None));
+            let (_, r) = run_svxdv(Variant::Ssr, IdxWidth::U16, &a16, &b16, false);
+            out.push(rec("ssr", r.utilization, None));
+            for (name, iw) in [("sssr16", IdxWidth::U16), ("sssr32", IdxWidth::U32)] {
+                let (_, with) = run_svxdv(Variant::Sssr, iw, &a16, &b16, false);
+                let (_, wo) = run_svxdv(Variant::Sssr, iw, &a16, &b16, true);
+                out.push(rec(name, with.utilization, Some(wo.utilization)));
+            }
+            if nnz <= dim8 {
+                let a8 = matgen::random_spvec(300 + nnz as u64, dim8, nnz);
+                let (_, with) = run_svxdv(Variant::Sssr, IdxWidth::U8, &a8, &b8, false);
+                let (_, wo) = run_svxdv(Variant::Sssr, IdxWidth::U8, &a8, &b8, true);
+                out.push(rec("sssr8", with.utilization, Some(wo.utilization)));
+            }
+            // repeated 8-bit indices scale past 256 nonzeros
+            let a8r = repeated_idx_fiber(400 + nnz as u64, dim8, nnz);
+            let (_, with) = run_svxdv(Variant::Sssr, IdxWidth::U8, &a8r, &b8, false);
+            let (_, wo) = run_svxdv(Variant::Sssr, IdxWidth::U8, &a8r, &b8, true);
+            out.push(rec("sssr8r", with.utilization, Some(wo.utilization)));
+            out
+        }),
+    }
+}
+
+pub fn spec_fig4b() -> ExperimentSpec {
+    let points = nnz_sweep().into_iter().map(|n| Point::default().nnz(n)).collect();
     let dim16 = 8192;
     let dim8 = 256;
     let b16 = matgen::random_dense(111, dim16);
     let b8 = matgen::random_dense(112, dim8);
-    let mut rows = vec![];
-    for &nnz in &nnz_sweep() {
-        let a16 = matgen::random_spvec(500 + nnz as u64, dim16, nnz);
-        for (name, v, iw) in [
-            ("base", Variant::Base, IdxWidth::U16),
-            ("ssr", Variant::Ssr, IdxWidth::U16),
-            ("sssr16", Variant::Sssr, IdxWidth::U16),
-            ("sssr32", Variant::Sssr, IdxWidth::U32),
-        ] {
-            let (_, r) = run_svpdv(v, iw, &a16, &b16);
-            rows.push(UtilRow { variant: name, nnz, utilization: r.utilization, utilization_nored: None });
-        }
-        // timing-only: repeated indices make the in-place update
-        // order-dependent (see run_svpdv_unchecked)
-        let a8r = repeated_idx_fiber(600 + nnz as u64, dim8, nnz);
-        let (_, r) = crate::kernels::driver::run_svpdv_unchecked(Variant::Sssr, IdxWidth::U8, &a8r, &b8);
-        rows.push(UtilRow { variant: "sssr8r", nnz, utilization: r.utilization, utilization_nored: None });
+    ExperimentSpec {
+        name: "fig4b",
+        title: "Fig. 4b: CC sV+dV FPU utilization vs nonzeros".into(),
+        columns: util_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let nnz = p.nnz.unwrap();
+            let mut out = vec![];
+            let a16 = matgen::random_spvec(500 + nnz as u64, dim16, nnz);
+            for (name, v, iw) in [
+                ("base", Variant::Base, IdxWidth::U16),
+                ("ssr", Variant::Ssr, IdxWidth::U16),
+                ("sssr16", Variant::Sssr, IdxWidth::U16),
+                ("sssr32", Variant::Sssr, IdxWidth::U32),
+            ] {
+                let (_, r) = run_svpdv(v, iw, &a16, &b16);
+                out.push(
+                    Record::new("fig4b")
+                        .str("variant", name)
+                        .int("nnz", nnz as i64)
+                        .num("utilization", r.utilization),
+                );
+            }
+            // timing-only: repeated indices make the in-place update
+            // order-dependent (see run_svpdv_unchecked)
+            let a8r = repeated_idx_fiber(600 + nnz as u64, dim8, nnz);
+            let (_, r) = run_svpdv_unchecked(Variant::Sssr, IdxWidth::U8, &a8r, &b8);
+            out.push(
+                Record::new("fig4b")
+                    .str("variant", "sssr8r")
+                    .int("nnz", nnz as i64)
+                    .num("utilization", r.utilization),
+            );
+            out
+        }),
     }
-    rows
 }
 
 // ======================================================================
 // Fig. 4c — single-CC sM×dV speedups over BASE per matrix
 // ======================================================================
 
-#[derive(Clone, Debug)]
-pub struct SpeedupRow {
-    pub matrix: String,
-    pub avg_row_nnz: f64,
-    pub variant: &'static str,
-    pub speedup: f64,
-    pub utilization: f64,
-}
-
-pub fn fig4c() -> Vec<SpeedupRow> {
-    let mut rows = vec![];
-    for e in corpus_selection() {
-        let b = matgen::random_dense(700, e.matrix.ncols);
-        let (_, base) = run_smxdv_sized(Variant::Base, IdxWidth::U16, &e.matrix, &b, BIG_TCDM);
-        for (name, v, iw) in [
-            ("ssr", Variant::Ssr, IdxWidth::U16),
-            ("sssr16", Variant::Sssr, IdxWidth::U16),
-            ("sssr32", Variant::Sssr, IdxWidth::U32),
-        ] {
-            let (_, r) = run_smxdv_sized(v, iw, &e.matrix, &b, BIG_TCDM);
-            rows.push(SpeedupRow {
-                matrix: e.name.to_string(),
-                avg_row_nnz: e.matrix.avg_row_nnz(),
-                variant: name,
-                speedup: base.cycles as f64 / r.cycles as f64,
-                utilization: r.utilization,
-            });
-        }
+pub fn spec_fig4c() -> ExperimentSpec {
+    let corpus = corpus_selection();
+    let points = corpus
+        .iter()
+        .enumerate()
+        .map(|(i, e)| Point::at(i).label(e.name))
+        .collect();
+    ExperimentSpec {
+        name: "fig4c",
+        title: "Fig. 4c: CC sMxdV speedups over BASE".into(),
+        columns: speedup_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let e = &corpus[p.idx.unwrap()];
+            let b = matgen::random_dense(700, e.matrix.ncols);
+            let (_, base) = run_smxdv_sized(Variant::Base, IdxWidth::U16, &e.matrix, &b, BIG_TCDM);
+            let mut out = vec![];
+            for (name, v, iw) in [
+                ("ssr", Variant::Ssr, IdxWidth::U16),
+                ("sssr16", Variant::Sssr, IdxWidth::U16),
+                ("sssr32", Variant::Sssr, IdxWidth::U32),
+            ] {
+                let (_, r) = run_smxdv_sized(v, iw, &e.matrix, &b, BIG_TCDM);
+                out.push(
+                    Record::new("fig4c")
+                        .str("matrix", e.name)
+                        .num("avg_row_nnz", e.matrix.avg_row_nnz())
+                        .str("variant", name)
+                        .num("speedup", base.cycles as f64 / r.cycles as f64)
+                        .num("utilization", r.utilization),
+                );
+            }
+            out
+        }),
     }
-    rows
 }
 
 // ======================================================================
 // Fig. 4d/4e — single-CC sV×sV / sV+sV speedups vs operand densities
 // ======================================================================
 
-#[derive(Clone, Debug)]
-pub struct DensityRow {
-    pub density_a: f64,
-    pub density_b: f64,
-    pub speedup: f64,
-}
-
-fn density_sweep() -> Vec<f64> {
-    if full_mode() {
-        vec![0.0003, 0.001, 0.003, 0.01, 0.03, 0.1, 0.3]
-    } else {
-        vec![0.001, 0.01, 0.1, 0.3]
-    }
-}
-
-/// Shared sweep for the sparse-sparse vector kernels. The paper uses
+/// Shared spec for the sparse-sparse vector kernels. The paper uses
 /// dense size 60k; quick mode uses 20k (same density semantics, smaller
 /// wall time).
-fn svv_sweep(which: &str) -> Vec<DensityRow> {
+fn spec_svv(name: &'static str, title: &str, which: &'static str) -> ExperimentSpec {
     let dim = if full_mode() { 60_000 } else { 20_000 };
-    let mut rows = vec![];
-    for &da in &density_sweep() {
-        for &db in &density_sweep() {
+    let ds = density_sweep();
+    let points = grid2(&ds, &ds)
+        .into_iter()
+        .map(|(da, db)| Point::default().densities(da, db))
+        .collect();
+    ExperimentSpec {
+        name,
+        title: title.into(),
+        columns: density_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let (da, db) = (p.density_a.unwrap(), p.density_b.unwrap());
             let na = ((da * dim as f64) as usize).max(1);
             let nb = ((db * dim as f64) as usize).max(1);
             let a = matgen::random_spvec(800 + na as u64, dim, na);
@@ -226,298 +328,365 @@ fn svv_sweep(which: &str) -> Vec<DensityRow> {
                 }
                 _ => unreachable!(),
             };
-            rows.push(DensityRow {
-                density_a: da,
-                density_b: db,
-                speedup: base.cycles as f64 / sssr.cycles as f64,
-            });
-        }
+            vec![Record::new(name)
+                .num("density_a", da)
+                .num("density_b", db)
+                .num("speedup", base.cycles as f64 / sssr.cycles as f64)]
+        }),
     }
-    rows
 }
 
-pub fn fig4d() -> Vec<DensityRow> {
-    svv_sweep("svxsv")
+pub fn spec_fig4d() -> ExperimentSpec {
+    spec_svv("fig4d", "Fig. 4d: CC sVxsV speedup vs densities", "svxsv")
 }
 
-pub fn fig4e() -> Vec<DensityRow> {
-    svv_sweep("svpsv")
+pub fn spec_fig4e() -> ExperimentSpec {
+    spec_svv("fig4e", "Fig. 4e: CC sV+sV speedup vs densities", "svpsv")
 }
 
 // ======================================================================
 // Fig. 4f — single-CC sM×sV speedups per matrix and vector density
 // ======================================================================
 
-#[derive(Clone, Debug)]
-pub struct MatSvRow {
-    pub matrix: String,
-    pub avg_row_nnz: f64,
-    pub density: f64,
-    pub speedup: f64,
-}
-
-pub fn fig4f() -> Vec<MatSvRow> {
+pub fn spec_fig4f() -> ExperimentSpec {
+    let corpus = corpus_selection();
     let densities = if full_mode() { vec![0.001, 0.01, 0.1, 0.3] } else { vec![0.01, 0.3] };
-    let mut rows = vec![];
-    for e in corpus_selection() {
+    let mut points = vec![];
+    for (i, e) in corpus.iter().enumerate() {
         for &dv in &densities {
+            points.push(Point::at(i).label(e.name).density(dv));
+        }
+    }
+    ExperimentSpec {
+        name: "fig4f",
+        title: "Fig. 4f: CC sMxsV speedups over BASE".into(),
+        columns: matsv_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let e = &corpus[p.idx.unwrap()];
+            let dv = p.density_a.unwrap();
             let nnz = ((dv * e.matrix.ncols as f64) as usize).max(1);
             let b = matgen::random_spvec(1000 + nnz as u64, e.matrix.ncols, nnz);
             let (_, base) = run_smxsv_sized(Variant::Base, IdxWidth::U16, &e.matrix, &b, BIG_TCDM);
             let (_, sssr) = run_smxsv_sized(Variant::Sssr, IdxWidth::U16, &e.matrix, &b, BIG_TCDM);
-            rows.push(MatSvRow {
-                matrix: e.name.to_string(),
-                avg_row_nnz: e.matrix.avg_row_nnz(),
-                density: dv,
-                speedup: base.cycles as f64 / sssr.cycles as f64,
-            });
-        }
+            vec![Record::new("fig4f")
+                .str("matrix", e.name)
+                .num("avg_row_nnz", e.matrix.avg_row_nnz())
+                .num("density", dv)
+                .num("speedup", base.cycles as f64 / sssr.cycles as f64)]
+        }),
     }
-    rows
 }
 
 // ======================================================================
 // Fig. 5a/5b — eight-core cluster speedups (HBM + interconnect models)
 // ======================================================================
 
-#[derive(Clone, Debug)]
-pub struct ClusterRow {
-    pub matrix: String,
-    pub avg_row_nnz: f64,
-    pub density: f64,
-    pub speedup: f64,
-    pub utilization: f64,
-    pub base_cycles: u64,
-    pub sssr_cycles: u64,
+fn cluster_record(
+    experiment: &str,
+    name: &str,
+    avg_row_nnz: f64,
+    density: f64,
+    base: &crate::coordinator::ClusterRun,
+    sssr: &crate::coordinator::ClusterRun,
+    cores: usize,
+) -> Record {
+    Record::new(experiment)
+        .str("matrix", name)
+        .num("avg_row_nnz", avg_row_nnz)
+        .num("density", density)
+        .num("speedup", base.report.cycles as f64 / sssr.report.cycles as f64)
+        .num(
+            "utilization",
+            sssr.report.payload as f64 / (sssr.report.cycles as f64 * cores as f64),
+        )
+        .int("base_cycles", base.report.cycles as i64)
+        .int("sssr_cycles", sssr.report.cycles as i64)
 }
 
-pub fn fig5a() -> Vec<ClusterRow> {
-    let cfg = ClusterCfg::paper_cluster();
-    let mut rows = vec![];
-    for e in corpus_selection() {
-        let b = matgen::random_dense(1100, e.matrix.ncols);
-        let base = run_cluster_smxdv(Variant::Base, IdxWidth::U16, &e.matrix, &b, &cfg);
-        let sssr = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &e.matrix, &b, &cfg);
-        rows.push(ClusterRow {
-            matrix: e.name.to_string(),
-            avg_row_nnz: e.matrix.avg_row_nnz(),
-            density: 1.0,
-            speedup: base.report.cycles as f64 / sssr.report.cycles as f64,
-            utilization: sssr.report.payload as f64 / (sssr.report.cycles as f64 * cfg.cores as f64),
-            base_cycles: base.report.cycles,
-            sssr_cycles: sssr.report.cycles,
-        });
+pub fn spec_fig5a() -> ExperimentSpec {
+    let corpus = corpus_selection();
+    let points = corpus
+        .iter()
+        .enumerate()
+        .map(|(i, e)| Point::at(i).label(e.name))
+        .collect();
+    ExperimentSpec {
+        name: "fig5a",
+        title: "Fig. 5a: cluster sMxdV speedups (16-bit)".into(),
+        columns: cluster_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let cfg = ClusterCfg::paper_cluster();
+            let e = &corpus[p.idx.unwrap()];
+            let b = matgen::random_dense(1100, e.matrix.ncols);
+            let base = run_cluster_smxdv(Variant::Base, IdxWidth::U16, &e.matrix, &b, &cfg);
+            let sssr = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &e.matrix, &b, &cfg);
+            vec![cluster_record(
+                "fig5a",
+                e.name,
+                e.matrix.avg_row_nnz(),
+                1.0,
+                &base,
+                &sssr,
+                cfg.cores,
+            )]
+        }),
     }
-    rows
 }
 
-pub fn fig5b() -> Vec<ClusterRow> {
-    let cfg = ClusterCfg::paper_cluster();
+pub fn spec_fig5b() -> ExperimentSpec {
+    let corpus = corpus_selection();
     let densities = if full_mode() { vec![0.001, 0.01, 0.1, 0.3] } else { vec![0.01, 0.3] };
-    let mut rows = vec![];
-    for e in corpus_selection() {
+    let mut points = vec![];
+    for (i, e) in corpus.iter().enumerate() {
         for &dv in &densities {
+            points.push(Point::at(i).label(e.name).density(dv));
+        }
+    }
+    ExperimentSpec {
+        name: "fig5b",
+        title: "Fig. 5b: cluster sMxsV speedups (16-bit)".into(),
+        columns: cluster_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let cfg = ClusterCfg::paper_cluster();
+            let e = &corpus[p.idx.unwrap()];
+            let dv = p.density_a.unwrap();
             let nnz = ((dv * e.matrix.ncols as f64) as usize).max(1);
             let b = matgen::random_spvec(1200 + nnz as u64, e.matrix.ncols, nnz);
             let base = run_cluster_smxsv(Variant::Base, IdxWidth::U16, &e.matrix, &b, &cfg);
             let sssr = run_cluster_smxsv(Variant::Sssr, IdxWidth::U16, &e.matrix, &b, &cfg);
-            rows.push(ClusterRow {
-                matrix: e.name.to_string(),
-                avg_row_nnz: e.matrix.avg_row_nnz(),
-                density: dv,
-                speedup: base.report.cycles as f64 / sssr.report.cycles as f64,
-                utilization: sssr.report.payload as f64
-                    / (sssr.report.cycles as f64 * cfg.cores as f64),
-                base_cycles: base.report.cycles,
-                sssr_cycles: sssr.report.cycles,
-            });
-        }
+            vec![cluster_record(
+                "fig5b",
+                e.name,
+                e.matrix.avg_row_nnz(),
+                dv,
+                &base,
+                &sssr,
+                cfg.cores,
+            )]
+        }),
     }
-    rows
 }
 
 // ======================================================================
 // Fig. 6 — bandwidth / latency sensitivity
 // ======================================================================
 
-#[derive(Clone, Debug)]
-pub struct SensitivityRow {
-    pub x: f64, // Gb/s/pin or cycles
-    pub kernel: &'static str,
-    pub speedup: f64,
-}
-
-/// The paper uses its peak-speedup matrix mycielskian12 here; quick mode
-/// uses mycielskian11 (same construction, quarter size).
-fn fig6_matrix() -> crate::formats::Csr {
-    if full_mode() {
-        matgen::mycielskian(12)
-    } else {
-        matgen::mycielskian(11)
+/// Shared shape of Fig. 6a/6b: sweep one cluster parameter on the
+/// Mycielskian peak matrix, measure smxdv and smxsv speedups per point.
+fn spec_fig6(
+    name: &'static str,
+    title: &str,
+    xlabel: &'static str,
+    xs: Vec<f64>,
+    cfg_of: impl Fn(f64) -> ClusterCfg + Send + Sync + 'static,
+    seed_dense: u64,
+    seed_spvec: u64,
+) -> ExperimentSpec {
+    let points = xs.into_iter().map(|x| Point::default().x(x)).collect();
+    // one matrix + operand pair for the whole sweep (fig6_matrix is the
+    // largest corpus member; don't rebuild it per grid point)
+    let m = fig6_matrix();
+    let b = matgen::random_dense(seed_dense, m.ncols);
+    let dv = 0.01;
+    let sv = matgen::random_spvec(seed_spvec, m.ncols, ((dv * m.ncols as f64) as usize).max(1));
+    ExperimentSpec {
+        name,
+        title: title.into(),
+        columns: sensitivity_columns(xlabel),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let x = p.x.unwrap();
+            let cfg = cfg_of(x);
+            let mut out = vec![];
+            let base = run_cluster_smxdv(Variant::Base, IdxWidth::U16, &m, &b, &cfg);
+            let sssr = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &cfg);
+            out.push(
+                Record::new(name)
+                    .num("x", x)
+                    .str("kernel", "smxdv")
+                    .num("speedup", base.report.cycles as f64 / sssr.report.cycles as f64),
+            );
+            let base = run_cluster_smxsv(Variant::Base, IdxWidth::U16, &m, &sv, &cfg);
+            let sssr = run_cluster_smxsv(Variant::Sssr, IdxWidth::U16, &m, &sv, &cfg);
+            out.push(
+                Record::new(name)
+                    .num("x", x)
+                    .str("kernel", "smxsv")
+                    .num("speedup", base.report.cycles as f64 / sssr.report.cycles as f64),
+            );
+            out
+        }),
     }
 }
 
-pub fn fig6a() -> Vec<SensitivityRow> {
-    let m = fig6_matrix();
-    let b = matgen::random_dense(1300, m.ncols);
-    let dv = 0.01;
-    let sv = matgen::random_spvec(1301, m.ncols, ((dv * m.ncols as f64) as usize).max(1));
-    let mut rows = vec![];
+pub fn spec_fig6a() -> ExperimentSpec {
     let bws = if full_mode() {
         vec![3.6, 2.4, 1.6, 1.2, 0.8, 0.6, 0.4]
     } else {
         vec![3.6, 1.6, 0.8, 0.4]
     };
-    for &bw in &bws {
-        let cfg = ClusterCfg { dram_gbps_pin: bw, ..ClusterCfg::paper_cluster() };
-        let base = run_cluster_smxdv(Variant::Base, IdxWidth::U16, &m, &b, &cfg);
-        let sssr = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &cfg);
-        rows.push(SensitivityRow {
-            x: bw,
-            kernel: "smxdv",
-            speedup: base.report.cycles as f64 / sssr.report.cycles as f64,
-        });
-        let base = run_cluster_smxsv(Variant::Base, IdxWidth::U16, &m, &sv, &cfg);
-        let sssr = run_cluster_smxsv(Variant::Sssr, IdxWidth::U16, &m, &sv, &cfg);
-        rows.push(SensitivityRow {
-            x: bw,
-            kernel: "smxsv",
-            speedup: base.report.cycles as f64 / sssr.report.cycles as f64,
-        });
-    }
-    rows
+    spec_fig6(
+        "fig6a",
+        "Fig. 6a: speedup vs DRAM channel bandwidth",
+        "Gb/s/pin",
+        bws,
+        |bw| ClusterCfg { dram_gbps_pin: bw, ..ClusterCfg::paper_cluster() },
+        1300,
+        1301,
+    )
 }
 
-pub fn fig6b() -> Vec<SensitivityRow> {
-    let m = fig6_matrix();
-    let b = matgen::random_dense(1400, m.ncols);
-    let dv = 0.01;
-    let sv = matgen::random_spvec(1401, m.ncols, ((dv * m.ncols as f64) as usize).max(1));
-    let mut rows = vec![];
-    let lats: Vec<u64> = if full_mode() {
-        vec![0, 16, 32, 64, 128, 256, 512]
+pub fn spec_fig6b() -> ExperimentSpec {
+    let lats: Vec<f64> = if full_mode() {
+        vec![0.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0]
     } else {
-        vec![0, 16, 64, 256]
+        vec![0.0, 16.0, 64.0, 256.0]
     };
-    for &lat in &lats {
-        let cfg = ClusterCfg { ic_latency: lat, ..ClusterCfg::paper_cluster() };
-        let base = run_cluster_smxdv(Variant::Base, IdxWidth::U16, &m, &b, &cfg);
-        let sssr = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &cfg);
-        rows.push(SensitivityRow {
-            x: lat as f64,
-            kernel: "smxdv",
-            speedup: base.report.cycles as f64 / sssr.report.cycles as f64,
-        });
-        let base = run_cluster_smxsv(Variant::Base, IdxWidth::U16, &m, &sv, &cfg);
-        let sssr = run_cluster_smxsv(Variant::Sssr, IdxWidth::U16, &m, &sv, &cfg);
-        rows.push(SensitivityRow {
-            x: lat as f64,
-            kernel: "smxsv",
-            speedup: base.report.cycles as f64 / sssr.report.cycles as f64,
-        });
-    }
-    rows
+    spec_fig6(
+        "fig6b",
+        "Fig. 6b: speedup vs on-chip interconnect latency",
+        "cycles",
+        lats,
+        |lat| ClusterCfg { ic_latency: lat as u64, ..ClusterCfg::paper_cluster() },
+        1400,
+        1401,
+    )
 }
 
 // ======================================================================
 // Fig. 7 — area and timing (analytical model)
 // ======================================================================
 
-#[derive(Clone, Debug)]
-pub struct AreaRow {
-    pub config: String,
-    pub area_kge: f64,
-    pub min_period_ps: f64,
-}
-
-pub fn fig7_configs() -> Vec<AreaRow> {
+/// The streamer configurations of Fig. 7b, in ascending area order.
+fn fig7_streamer_configs() -> Vec<(&'static str, StreamerCfg)> {
     use SlotKind::*;
-    let configs: Vec<(&str, StreamerCfg)> = vec![
+    vec![
         ("S+S+S (baseline)", StreamerCfg::baseline_ssr()),
         ("I+S+S", StreamerCfg { slots: vec![Issr, Ssr, Ssr], union: false }),
         ("I+I+S", StreamerCfg { slots: vec![Issr, Issr, Ssr], union: false }),
         ("I*+I*+S", StreamerCfg { slots: vec![IssrCmp, IssrCmp, Ssr], union: false }),
         ("I*+I*+E", StreamerCfg { slots: vec![IssrCmp, IssrCmp, Essr], union: false }),
         ("I*+I*+E+union (default)", StreamerCfg::default_sssr()),
-    ];
-    configs
-        .into_iter()
-        .map(|(name, cfg)| AreaRow {
-            config: name.to_string(),
-            area_kge: streamer_area(&cfg),
-            min_period_ps: streamer_min_period_ps(&cfg),
-        })
-        .collect()
+    ]
 }
 
-#[derive(Clone, Debug)]
-pub struct AreaPeriodRow {
-    pub target_ps: f64,
-    pub area_kge: f64,
-}
-
-pub fn fig7_area_vs_period() -> Vec<AreaPeriodRow> {
-    let cfg = StreamerCfg::default_sssr();
-    [450.0, 500.0, 550.0, 600.0, 700.0, 800.0, 1000.0]
+pub fn spec_fig7b() -> ExperimentSpec {
+    let configs = fig7_streamer_configs();
+    let points = configs
         .iter()
-        .map(|&t| AreaPeriodRow {
-            target_ps: t,
-            area_kge: crate::model::area::streamer_area_at_period(&cfg, t),
-        })
-        .collect()
+        .enumerate()
+        .map(|(i, (name, _))| Point::at(i).label(*name))
+        .collect();
+    ExperimentSpec {
+        name: "fig7b",
+        title: "Fig. 7b: streamer configurations".into(),
+        columns: vec![
+            Column::new("config", "config", 26, ColFmt::Str),
+            Column::new("area_kge", "area kGE", 10, ColFmt::Fixed(1)),
+            Column::new("min_period_ps", "min period ps", 14, ColFmt::Fixed(0)),
+        ],
+        points,
+        measure: Box::new(move |p: &Point| {
+            let (name, cfg) = &configs[p.idx.unwrap()];
+            vec![Record::new("fig7b")
+                .str("config", *name)
+                .num("area_kge", streamer_area(cfg))
+                .num("min_period_ps", streamer_min_period_ps(cfg))]
+        }),
+    }
+}
+
+pub fn spec_fig7c() -> ExperimentSpec {
+    let targets = [450.0, 500.0, 550.0, 600.0, 700.0, 800.0, 1000.0];
+    let points = targets.iter().map(|&t| Point::default().x(t)).collect();
+    ExperimentSpec {
+        name: "fig7c",
+        title: "Fig. 7c: area vs clock target (default streamer)".into(),
+        columns: vec![
+            Column::new("target_ps", "target ps", 10, ColFmt::Fixed(0)),
+            Column::new("area_kge", "area kGE", 10, ColFmt::Fixed(1)),
+        ],
+        points,
+        measure: Box::new(|p: &Point| {
+            let t = p.x.unwrap();
+            let cfg = StreamerCfg::default_sssr();
+            vec![Record::new("fig7c")
+                .num("target_ps", t)
+                .num("area_kge", crate::model::area::streamer_area_at_period(&cfg, t))]
+        }),
+    }
+}
+
+/// The Fig. 7 companion line: modeled SSSR area overhead at cluster level.
+pub fn print_fig7_footer() {
+    let oh = crate::model::area::cluster_overhead_fraction(8);
+    println!("\ncluster area overhead (8 cores): {:.2} %", oh * 100.0);
 }
 
 // ======================================================================
 // Fig. 8 — energy (activity-scaled model over cluster runs)
 // ======================================================================
 
-#[derive(Clone, Debug)]
-pub struct EnergyRow {
-    pub matrix: String,
-    pub kernel: &'static str,
-    pub variant: &'static str,
-    pub pj_per_op: f64,
-    pub power_mw: f64,
-    pub total_uj: f64,
+fn spec_fig8(name: &'static str, title: &str, kernel: &'static str) -> ExperimentSpec {
+    let corpus = corpus_selection();
+    let points = corpus
+        .iter()
+        .enumerate()
+        .map(|(i, e)| Point::at(i).label(e.name))
+        .collect();
+    ExperimentSpec {
+        name,
+        title: title.into(),
+        columns: energy_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let cfg = ClusterCfg::paper_cluster();
+            let em = EnergyModel::default();
+            let e = &corpus[p.idx.unwrap()];
+            let runs: Vec<(&'static str, crate::coordinator::ClusterRun, u64)> = match kernel {
+                "smxdv" => {
+                    let b = matgen::random_dense(1500, e.matrix.ncols);
+                    let base = run_cluster_smxdv(Variant::Base, IdxWidth::U16, &e.matrix, &b, &cfg);
+                    let sssr = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &e.matrix, &b, &cfg);
+                    let nnz = e.matrix.nnz() as u64;
+                    vec![("base", base, nnz), ("sssr", sssr, nnz)]
+                }
+                "smxsv" => {
+                    let nnz_v = ((0.01 * e.matrix.ncols as f64) as usize).max(1);
+                    let b = matgen::random_spvec(1600, e.matrix.ncols, nnz_v);
+                    let base = run_cluster_smxsv(Variant::Base, IdxWidth::U16, &e.matrix, &b, &cfg);
+                    let sssr = run_cluster_smxsv(Variant::Sssr, IdxWidth::U16, &e.matrix, &b, &cfg);
+                    // Fig. 8b normalizes per *matrix nonzero*
+                    let nnz = e.matrix.nnz() as u64;
+                    vec![("base", base, nnz), ("sssr", sssr, nnz)]
+                }
+                _ => unreachable!(),
+            };
+            runs.into_iter()
+                .map(|(variant, run, ops)| {
+                    let er = em.estimate(&run.report.stats, ops);
+                    Record::new(name)
+                        .str("matrix", e.name)
+                        .str("kernel", kernel)
+                        .str("variant", variant)
+                        .num("pj_per_op", er.pj_per_op)
+                        .num("power_mw", er.avg_power_w * 1e3)
+                        .num("total_uj", er.total_j * 1e6)
+                })
+                .collect()
+        }),
+    }
 }
 
-pub fn fig8(kernel: &'static str) -> Vec<EnergyRow> {
-    let cfg = ClusterCfg::paper_cluster();
-    let em = EnergyModel::default();
-    let mut rows = vec![];
-    for e in corpus_selection() {
-        let runs: Vec<(&'static str, crate::coordinator::ClusterRun, u64)> = match kernel {
-            "smxdv" => {
-                let b = matgen::random_dense(1500, e.matrix.ncols);
-                let base = run_cluster_smxdv(Variant::Base, IdxWidth::U16, &e.matrix, &b, &cfg);
-                let sssr = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &e.matrix, &b, &cfg);
-                let nnz = e.matrix.nnz() as u64;
-                vec![("base", base, nnz), ("sssr", sssr, nnz)]
-            }
-            "smxsv" => {
-                let nnz_v = ((0.01 * e.matrix.ncols as f64) as usize).max(1);
-                let b = matgen::random_spvec(1600, e.matrix.ncols, nnz_v);
-                let base = run_cluster_smxsv(Variant::Base, IdxWidth::U16, &e.matrix, &b, &cfg);
-                let sssr = run_cluster_smxsv(Variant::Sssr, IdxWidth::U16, &e.matrix, &b, &cfg);
-                // Fig. 8b normalizes per *matrix nonzero*
-                let nnz = e.matrix.nnz() as u64;
-                vec![("base", base, nnz), ("sssr", sssr, nnz)]
-            }
-            _ => unreachable!(),
-        };
-        for (variant, run, ops) in runs {
-            let er = em.estimate(&run.report.stats, ops);
-            rows.push(EnergyRow {
-                matrix: e.name.to_string(),
-                kernel,
-                variant,
-                pj_per_op: er.pj_per_op,
-                power_mw: er.avg_power_w * 1e3,
-                total_uj: er.total_j * 1e6,
-            });
-        }
-    }
-    rows
+pub fn spec_fig8a() -> ExperimentSpec {
+    spec_fig8("fig8a", "Fig. 8a: cluster sMxdV energy", "smxdv")
+}
+
+pub fn spec_fig8b() -> ExperimentSpec {
+    spec_fig8("fig8b", "Fig. 8b: cluster sMxsV energy (d_v=1%)", "smxsv")
 }
 
 // ======================================================================
@@ -538,145 +707,59 @@ pub const TABLE2_LITERATURE: &[(&str, &str, &str, f64)] = &[
     ("TileSpMV [39]", "Titan RTX", "tile-adapt.", 0.27),
 ];
 
+pub fn spec_table2() -> ExperimentSpec {
+    let points = (0..TABLE2_LITERATURE.len()).map(Point::at).collect();
+    ExperimentSpec {
+        name: "table2",
+        title: "Table 2: FP64 sMxdV peak FP utilization".into(),
+        columns: vec![
+            Column::new("work", "work", 22, ColFmt::Str),
+            Column::new("platform", "platform", 16, ColFmt::Str),
+            Column::new("format", "format", 14, ColFmt::Str),
+            Column::new("peak_util", "peak util", 10, ColFmt::Pct(2)),
+        ],
+        points,
+        measure: Box::new(|p: &Point| {
+            let (work, platform, format, util) = TABLE2_LITERATURE[p.idx.unwrap()];
+            vec![Record::new("table2")
+                .str("work", work)
+                .str("platform", platform)
+                .str("format", format)
+                .num("peak_util", util)]
+        }),
+    }
+}
+
 /// Our measured peak cluster sM×dV utilization (Table 2 bottom row):
-/// best over the corpus sweep.
-pub fn table2_ours(fig5a_rows: &[ClusterRow]) -> f64 {
-    fig5a_rows.iter().map(|r| r.utilization).fold(0.0, f64::max)
+/// best over the Fig. 5a corpus sweep.
+pub fn table2_ours(fig5a_records: &[Record]) -> f64 {
+    fig5a_records
+        .iter()
+        .filter_map(|r| r.f64("utilization"))
+        .fold(0.0, f64::max)
 }
 
-/// Table 3 hardware-design comparison (qualitative features from the
-/// paper + our modeled area).
-pub struct Table3Row {
-    pub work: &'static str,
-    pub open_source: bool,
-    pub one_sided: bool,
-    pub two_sided: bool,
-    pub format_flex: &'static str,
-    pub sparsity_flex: &'static str,
-    pub area_kge: Option<f64>,
+/// Table 2 spec plus its full record set: the literature rows and the
+/// measured "ours" bottom row. Goes through the same Record layer as
+/// every figure so `--json` captures the headline number too.
+pub fn table2_records(ours: f64) -> (ExperimentSpec, Vec<Record>) {
+    let spec = spec_table2();
+    let mut recs = spec.run(1);
+    let mut bottom = Record::new("table2")
+        .str("work", "SSSRs (ours, sim)")
+        .str("platform", "Snitch + SSSRs")
+        .str("format", "CSR")
+        .num("peak_util", ours);
+    bottom.point = spec.points.len();
+    recs.push(bottom);
+    (spec, recs)
 }
 
-pub fn table3() -> Vec<Table3Row> {
-    let ours_area = streamer_area(&StreamerCfg::default_sssr());
-    vec![
-        Table3Row { work: "SVE S/G [29]", open_source: false, one_sided: true, two_sided: false, format_flex: "M", sparsity_flex: "H", area_kge: None },
-        Table3Row { work: "KNL S/G [30]", open_source: false, one_sided: true, two_sided: false, format_flex: "M", sparsity_flex: "H", area_kge: None },
-        Table3Row { work: "UVE [31]", open_source: false, one_sided: true, two_sided: false, format_flex: "M", sparsity_flex: "H", area_kge: Some(72.0) },
-        Table3Row { work: "Gong et al. [32]", open_source: false, one_sided: true, two_sided: false, format_flex: "L", sparsity_flex: "L", area_kge: Some(31.0) },
-        Table3Row { work: "Prodigy [8]", open_source: true, one_sided: true, two_sided: false, format_flex: "M", sparsity_flex: "H", area_kge: Some(10.0) },
-        Table3Row { work: "SpZip [41]", open_source: false, one_sided: true, two_sided: false, format_flex: "M", sparsity_flex: "H", area_kge: Some(116.0) },
-        Table3Row { work: "Z. Wang et al. [9]", open_source: false, one_sided: true, two_sided: false, format_flex: "M", sparsity_flex: "H", area_kge: None },
-        Table3Row { work: "SparseCore [6]", open_source: false, one_sided: false, two_sided: true, format_flex: "H", sparsity_flex: "H", area_kge: Some(619.0) },
-        Table3Row { work: "A100 [17]", open_source: false, one_sided: true, two_sided: false, format_flex: "M", sparsity_flex: "L", area_kge: None },
-        Table3Row { work: "ExTensor [12]", open_source: false, one_sided: false, two_sided: true, format_flex: "M", sparsity_flex: "H", area_kge: None },
-        Table3Row { work: "SSSRs (ours)", open_source: true, one_sided: true, two_sided: true, format_flex: "H", sparsity_flex: "H", area_kge: Some(ours_area) },
-    ]
-}
-
-// ======================================================================
-// printing helpers
-// ======================================================================
-
-pub fn print_util_rows(title: &str, rows: &[UtilRow]) {
-    println!("\n== {title} ==");
-    println!("{:<8} {:>8} {:>10} {:>12}", "variant", "nnz", "FPU util", "w/o reduc.");
-    for r in rows {
-        let nr = r
-            .utilization_nored
-            .map(|u| format!("{u:.3}"))
-            .unwrap_or_else(|| "-".into());
-        println!("{:<8} {:>8} {:>10.3} {:>12}", r.variant, r.nnz, r.utilization, nr);
-    }
-}
-
-pub fn print_speedup_rows(title: &str, rows: &[SpeedupRow]) {
-    println!("\n== {title} ==");
-    println!("{:<14} {:>8} {:<8} {:>8} {:>8}", "matrix", "n_nz/row", "variant", "speedup", "util");
-    for r in rows {
-        println!(
-            "{:<14} {:>8.1} {:<8} {:>7.2}x {:>8.3}",
-            r.matrix, r.avg_row_nnz, r.variant, r.speedup, r.utilization
-        );
-    }
-}
-
-pub fn print_density_rows(title: &str, rows: &[DensityRow]) {
-    println!("\n== {title} ==");
-    println!("{:>9} {:>9} {:>8}", "dens_a", "dens_b", "speedup");
-    for r in rows {
-        println!("{:>9.4} {:>9.4} {:>7.2}x", r.density_a, r.density_b, r.speedup);
-    }
-}
-
-pub fn print_matsv_rows(title: &str, rows: &[MatSvRow]) {
-    println!("\n== {title} ==");
-    println!("{:<14} {:>8} {:>8} {:>8}", "matrix", "n_nz/row", "dens_v", "speedup");
-    for r in rows {
-        println!("{:<14} {:>8.1} {:>8.3} {:>7.2}x", r.matrix, r.avg_row_nnz, r.density, r.speedup);
-    }
-}
-
-pub fn print_cluster_rows(title: &str, rows: &[ClusterRow]) {
-    println!("\n== {title} ==");
-    println!(
-        "{:<14} {:>8} {:>8} {:>8} {:>9} {:>12} {:>12}",
-        "matrix", "n_nz/row", "dens_v", "speedup", "FPU util", "base cyc", "sssr cyc"
-    );
-    for r in rows {
-        println!(
-            "{:<14} {:>8.1} {:>8.3} {:>7.2}x {:>9.3} {:>12} {:>12}",
-            r.matrix, r.avg_row_nnz, r.density, r.speedup, r.utilization, r.base_cycles, r.sssr_cycles
-        );
-    }
-}
-
-pub fn print_sensitivity_rows(title: &str, xlabel: &str, rows: &[SensitivityRow]) {
-    println!("\n== {title} ==");
-    println!("{:>10} {:<8} {:>8}", xlabel, "kernel", "speedup");
-    for r in rows {
-        println!("{:>10.2} {:<8} {:>7.2}x", r.x, r.kernel, r.speedup);
-    }
-}
-
-pub fn print_fig7() {
-    println!("\n== Fig. 7b: streamer configurations ==");
-    println!("{:<26} {:>10} {:>14}", "config", "area kGE", "min period ps");
-    for r in fig7_configs() {
-        println!("{:<26} {:>10.1} {:>14.0}", r.config, r.area_kge, r.min_period_ps);
-    }
-    println!("\n== Fig. 7c: area vs clock target (default streamer) ==");
-    println!("{:>10} {:>10}", "target ps", "area kGE");
-    for r in fig7_area_vs_period() {
-        println!("{:>10.0} {:>10.1}", r.target_ps, r.area_kge);
-    }
-    let oh = crate::model::area::cluster_overhead_fraction(8);
-    println!("\ncluster area overhead (8 cores): {:.2} %", oh * 100.0);
-}
-
-pub fn print_energy_rows(title: &str, rows: &[EnergyRow]) {
-    println!("\n== {title} ==");
-    println!(
-        "{:<14} {:<6} {:>10} {:>10} {:>10}",
-        "matrix", "var", "pJ/op", "power mW", "total uJ"
-    );
-    for r in rows {
-        println!(
-            "{:<14} {:<6} {:>10.1} {:>10.1} {:>10.2}",
-            r.matrix, r.variant, r.pj_per_op, r.power_mw, r.total_uj
-        );
-    }
-}
-
+/// Render Table 2 including the measured bottom row and the headline
+/// ratios against the best CPU/GPU results.
 pub fn print_table2(ours: f64) {
-    println!("\n== Table 2: FP64 sMxdV peak FP utilization ==");
-    println!("{:<22} {:<16} {:<14} {:>10}", "work", "platform", "format", "peak util");
-    for (work, platform, format, util) in TABLE2_LITERATURE {
-        println!("{:<22} {:<16} {:<14} {:>9.2}%", work, platform, format, util * 100.0);
-    }
-    println!(
-        "{:<22} {:<16} {:<14} {:>9.2}%",
-        "SSSRs (ours, sim)", "Snitch + SSSRs", "CSR", ours * 100.0
-    );
+    let (spec, recs) = table2_records(ours);
+    spec.print(&recs);
     let best_cpu = 0.047;
     let best_gpu = 0.27;
     println!(
@@ -686,29 +769,105 @@ pub fn print_table2(ours: f64) {
     );
 }
 
-pub fn print_table3() {
-    println!("\n== Table 3: hardware designs ==");
-    println!(
-        "{:<20} {:>5} {:>9} {:>9} {:>7} {:>9} {:>9}",
-        "work", "open", "1-sided", "2-sided", "fmt", "sparsity", "kGE"
-    );
-    for r in table3() {
-        println!(
-            "{:<20} {:>5} {:>9} {:>9} {:>7} {:>9} {:>9}",
-            r.work,
-            if r.open_source { "yes" } else { "no" },
-            if r.one_sided { "yes" } else { "no" },
-            if r.two_sided { "yes" } else { "no" },
-            r.format_flex,
-            r.sparsity_flex,
-            r.area_kge.map(|a| format!("{a:.0}")).unwrap_or_else(|| "-".into()),
-        );
+/// Table 3 literature rows: (work, open-source, one-sided, two-sided,
+/// format flexibility, sparsity flexibility, area kGE if published).
+const TABLE3_LITERATURE: &[(&str, bool, bool, bool, &str, &str, Option<f64>)] = &[
+    ("SVE S/G [29]", false, true, false, "M", "H", None),
+    ("KNL S/G [30]", false, true, false, "M", "H", None),
+    ("UVE [31]", false, true, false, "M", "H", Some(72.0)),
+    ("Gong et al. [32]", false, true, false, "L", "L", Some(31.0)),
+    ("Prodigy [8]", true, true, false, "M", "H", Some(10.0)),
+    ("SpZip [41]", false, true, false, "M", "H", Some(116.0)),
+    ("Z. Wang et al. [9]", false, true, false, "M", "H", None),
+    ("SparseCore [6]", false, false, true, "H", "H", Some(619.0)),
+    ("A100 [17]", false, true, false, "M", "L", None),
+    ("ExTensor [12]", false, false, true, "M", "H", None),
+];
+
+pub fn spec_table3() -> ExperimentSpec {
+    // literature rows plus the measured "ours" row
+    let points = (0..TABLE3_LITERATURE.len() + 1).map(Point::at).collect();
+    ExperimentSpec {
+        name: "table3",
+        title: "Table 3: hardware designs".into(),
+        columns: vec![
+            Column::new("work", "work", 20, ColFmt::Str),
+            Column::new("open", "open", 5, ColFmt::StrR),
+            Column::new("one_sided", "1-sided", 9, ColFmt::StrR),
+            Column::new("two_sided", "2-sided", 9, ColFmt::StrR),
+            Column::new("format_flex", "fmt", 7, ColFmt::StrR),
+            Column::new("sparsity_flex", "sparsity", 9, ColFmt::StrR),
+            Column::new("area_kge", "kGE", 9, ColFmt::Fixed(0)),
+        ],
+        points,
+        measure: Box::new(|p: &Point| {
+            let i = p.idx.unwrap();
+            let (work, open, one, two, fmt, sparsity, area) = if i < TABLE3_LITERATURE.len() {
+                TABLE3_LITERATURE[i]
+            } else {
+                let ours_area = streamer_area(&StreamerCfg::default_sssr());
+                ("SSSRs (ours)", true, true, true, "H", "H", Some(ours_area))
+            };
+            let yn = |b: bool| if b { "yes" } else { "no" };
+            vec![Record::new("table3")
+                .str("work", work)
+                .str("open", yn(open))
+                .str("one_sided", yn(one))
+                .str("two_sided", yn(two))
+                .str("format_flex", fmt)
+                .str("sparsity_flex", sparsity)
+                .opt_num("area_kge", area)]
+        }),
     }
+}
+
+// ======================================================================
+// spec registry
+// ======================================================================
+
+/// Every figure sweep as a (name, constructor) pair, in `repro all`
+/// order. Construction generates the sweep's shared workloads (corpus,
+/// operands) eagerly, so build one spec at a time and drop it before
+/// the next — materializing all fourteen at once holds every workload
+/// in memory simultaneously. Tables 2/3 are available via
+/// [`spec_table2`]/[`spec_table3`] (Table 2's bottom row derives from
+/// Fig. 5a records, see [`table2_ours`]).
+pub const SPEC_BUILDERS: &[(&str, fn() -> ExperimentSpec)] = &[
+    ("fig4a", spec_fig4a),
+    ("fig4b", spec_fig4b),
+    ("fig4c", spec_fig4c),
+    ("fig4d", spec_fig4d),
+    ("fig4e", spec_fig4e),
+    ("fig4f", spec_fig4f),
+    ("fig5a", spec_fig5a),
+    ("fig5b", spec_fig5b),
+    ("fig6a", spec_fig6a),
+    ("fig6b", spec_fig6b),
+    ("fig7b", spec_fig7b),
+    ("fig7c", spec_fig7c),
+    ("fig8a", spec_fig8a),
+    ("fig8b", spec_fig8b),
+];
+
+/// Look up one figure spec constructor by name (`"fig4a"`, `"fig7b"`, …).
+pub fn spec_builder(name: &str) -> Option<fn() -> ExperimentSpec> {
+    SPEC_BUILDERS.iter().find(|(n, _)| *n == name).map(|(_, f)| *f)
+}
+
+/// Look up and build one figure spec by name.
+pub fn spec_by_name(name: &str) -> Option<ExperimentSpec> {
+    spec_builder(name).map(|f| f())
+}
+
+/// All figure sweep names, space-joined (help/error text).
+pub fn spec_names() -> String {
+    SPEC_BUILDERS.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(" ")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::experiments::Runner;
 
     #[test]
     fn table2_literature_data_hygiene() {
@@ -717,10 +876,13 @@ mod tests {
     }
 
     #[test]
-    fn fig7_rows_cover_configs() {
-        let rows = fig7_configs();
+    fn fig7_spec_covers_configs() {
+        let spec = spec_fig7b();
+        let rows = spec.run(1);
         assert_eq!(rows.len(), 6);
-        assert!(rows[0].area_kge < rows.last().unwrap().area_kge);
+        let first = rows[0].f64("area_kge").unwrap();
+        let last = rows.last().unwrap().f64("area_kge").unwrap();
+        assert!(first < last);
     }
 
     #[test]
@@ -732,10 +894,38 @@ mod tests {
 
     #[test]
     fn table3_has_ours_with_modeled_area() {
-        let rows = table3();
+        let spec = spec_table3();
+        let rows = spec.run(1);
+        assert_eq!(rows.len(), 11);
         let ours = rows.last().unwrap();
-        assert_eq!(ours.work, "SSSRs (ours)");
-        assert!(ours.one_sided && ours.two_sided && ours.open_source);
-        assert!((29.0..31.0).contains(&ours.area_kge.unwrap()));
+        assert_eq!(ours.str_of("work"), Some("SSSRs (ours)"));
+        for key in ["open", "one_sided", "two_sided"] {
+            assert_eq!(ours.str_of(key), Some("yes"));
+        }
+        assert!((29.0..31.0).contains(&ours.f64("area_kge").unwrap()));
+    }
+
+    #[test]
+    fn analytical_specs_are_jobs_invariant() {
+        // fig7b/7c are pure analytical-model sweeps: cheap enough for a
+        // real end-to-end determinism check of the parallel runner.
+        for spec in [spec_fig7b(), spec_fig7c(), spec_table2(), spec_table3()] {
+            let serial = Runner::new(1).run(&spec);
+            let par = Runner::new(4).run(&spec);
+            assert_eq!(serial, par, "{} diverged under --jobs 4", spec.name);
+        }
+    }
+
+    #[test]
+    fn spec_registry_is_consistent() {
+        assert_eq!(SPEC_BUILDERS.len(), 14);
+        for (n, build) in SPEC_BUILDERS {
+            let s = build();
+            assert_eq!(s.name, *n);
+            assert!(!s.points.is_empty(), "{} has an empty grid", s.name);
+            assert!(!s.columns.is_empty(), "{} has no table layout", s.name);
+        }
+        assert!(spec_by_name("fig4a").is_some());
+        assert!(spec_by_name("nope").is_none());
     }
 }

@@ -3,6 +3,10 @@
 //! exclusive I$ — pre-warmed — and a three-port data memory), verify the
 //! results against the [`crate::formats::ops`] oracles, and report
 //! cycles / payload FLOPs / utilization.
+//!
+//! All twelve `run_*` drivers share the [`Cc`] setup/teardown helper:
+//! operand placement via the bump [`Arena`], argument-register loading
+//! via [`Cc::args`], and the warm-I$ run loop via [`Cc::run`].
 
 use crate::formats::{ops, Csr, SpVec};
 use crate::sim::isa::*;
@@ -48,6 +52,8 @@ pub(crate) fn write_ptrs(t: &mut Tcdm, addr: u64, ptrs: &[u32]) {
     }
 }
 
+/// One single-CC kernel execution context: TCDM arena + cluster with the
+/// program loaded and the I$ pre-warmed.
 struct Cc {
     cl: Cluster,
     arena: Arena,
@@ -101,6 +107,13 @@ impl Cc {
         (vals, idcs, ptrs)
     }
 
+    /// Load the kernel's argument registers (core 0).
+    fn args(&mut self, regs: &[(u8, i64)]) {
+        for &(r, v) in regs {
+            self.cl.set_reg(0, r, v);
+        }
+    }
+
     fn run(mut self, payload: u64) -> (Cluster, Report) {
         let cycles = self.cl.run(LIMIT);
         let stats = self.cl.stats();
@@ -152,11 +165,13 @@ pub fn run_svxdv(
     let (vals, idcs) = cc.place_spvec(a, iw);
     let bb = cc.place_dense(b);
     let out = cc.arena.alloc_f64(1);
-    cc.cl.set_reg(0, A0, vals as i64);
-    cc.cl.set_reg(0, A1, idcs as i64);
-    cc.cl.set_reg(0, A2, bb as i64);
-    cc.cl.set_reg(0, A3, a.nnz() as i64);
-    cc.cl.set_reg(0, A4, out as i64);
+    cc.args(&[
+        (A0, vals as i64),
+        (A1, idcs as i64),
+        (A2, bb as i64),
+        (A3, a.nnz() as i64),
+        (A4, out as i64),
+    ]);
     let (cl, rep) = cc.run(a.nnz() as u64);
     let got = cl.tcdm.peek_f64(out);
     if !skip_reduction {
@@ -166,24 +181,25 @@ pub fn run_svxdv(
 }
 
 /// sV+dV (in place on the dense vector). Returns (updated dense, report).
+/// Wraps the timing-only [`run_svpdv_unchecked`] and verifies the result
+/// against the oracle.
 pub fn run_svpdv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &[f64]) -> (Vec<f64>, Report) {
-    run_svpdv_impl(variant, iw, a, b, true)
+    let (got, rep) = run_svpdv_unchecked(variant, iw, a, b);
+    let mut want = b.to_vec();
+    ops::svpdv(a, &mut want);
+    assert_all_close(&got, &want, "svpdv");
+    (got, rep)
 }
 
 /// Timing-only sV+dV for fibers with *repeated* indices (the Fig. 4b
 /// `sssr8r` reuse series): duplicated indices create a genuine
 /// gather/scatter RAW hazard in the decoupled streams — in the real
 /// hardware as much as here — so the numeric result is not checked.
-pub fn run_svpdv_unchecked(variant: Variant, iw: IdxWidth, a: &SpVec, b: &[f64]) -> (Vec<f64>, Report) {
-    run_svpdv_impl(variant, iw, a, b, false)
-}
-
-fn run_svpdv_impl(
+pub fn run_svpdv_unchecked(
     variant: Variant,
     iw: IdxWidth,
     a: &SpVec,
     b: &[f64],
-    verify: bool,
 ) -> (Vec<f64>, Report) {
     assert_eq!(a.dim, b.len());
     let prog = match variant {
@@ -194,17 +210,14 @@ fn run_svpdv_impl(
     let mut cc = Cc::new(prog);
     let (vals, idcs) = cc.place_spvec(a, iw);
     let bb = cc.place_dense(b);
-    cc.cl.set_reg(0, A0, vals as i64);
-    cc.cl.set_reg(0, A1, idcs as i64);
-    cc.cl.set_reg(0, A2, bb as i64);
-    cc.cl.set_reg(0, A3, a.nnz() as i64);
+    cc.args(&[
+        (A0, vals as i64),
+        (A1, idcs as i64),
+        (A2, bb as i64),
+        (A3, a.nnz() as i64),
+    ]);
     let (cl, rep) = cc.run(a.nnz() as u64);
     let got = read_f64s(&cl.tcdm, bb, b.len());
-    if verify {
-        let mut want = b.to_vec();
-        ops::svpdv(a, &mut want);
-        assert_all_close(&got, &want, "svpdv");
-    }
     (got, rep)
 }
 
@@ -220,11 +233,13 @@ pub fn run_svodv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &[f64]) -> (Vec<f
     let (vals, idcs) = cc.place_spvec(a, iw);
     let bb = cc.place_dense(b);
     let out = cc.arena.alloc_f64(a.nnz() as u64);
-    cc.cl.set_reg(0, A0, vals as i64);
-    cc.cl.set_reg(0, A1, idcs as i64);
-    cc.cl.set_reg(0, A2, bb as i64);
-    cc.cl.set_reg(0, A3, a.nnz() as i64);
-    cc.cl.set_reg(0, A4, out as i64);
+    cc.args(&[
+        (A0, vals as i64),
+        (A1, idcs as i64),
+        (A2, bb as i64),
+        (A3, a.nnz() as i64),
+        (A4, out as i64),
+    ]);
     let (cl, rep) = cc.run(a.nnz() as u64);
     let got = read_f64s(&cl.tcdm, out, a.nnz());
     assert_all_close(&got, &ops::svodv(a, b).vals, "svodv");
@@ -254,13 +269,15 @@ pub fn run_smxdv_sized(
     let (vals, idcs, ptrs) = cc.place_csr(m, iw);
     let bb = cc.place_dense(b);
     let out = cc.arena.alloc_f64(m.nrows as u64);
-    cc.cl.set_reg(0, A0, vals as i64);
-    cc.cl.set_reg(0, A1, idcs as i64);
-    cc.cl.set_reg(0, A2, bb as i64);
-    cc.cl.set_reg(0, A3, m.nrows as i64);
-    cc.cl.set_reg(0, A4, out as i64);
-    cc.cl.set_reg(0, A5, ptrs as i64);
-    cc.cl.set_reg(0, A6, m.nnz() as i64);
+    cc.args(&[
+        (A0, vals as i64),
+        (A1, idcs as i64),
+        (A2, bb as i64),
+        (A3, m.nrows as i64),
+        (A4, out as i64),
+        (A5, ptrs as i64),
+        (A6, m.nnz() as i64),
+    ]);
     let (cl, rep) = cc.run(m.nnz() as u64);
     let got = read_f64s(&cl.tcdm, out, m.nrows);
     assert_all_close(&got, &ops::smxdv(m, b), "smxdv");
@@ -268,7 +285,13 @@ pub fn run_smxdv_sized(
 }
 
 /// sM×dM with a power-of-two-column dense matrix (row-major).
-pub fn run_smxdm(variant: Variant, iw: IdxWidth, m: &Csr, d: &[f64], log2_cols: u8) -> (Vec<f64>, Report) {
+pub fn run_smxdm(
+    variant: Variant,
+    iw: IdxWidth,
+    m: &Csr,
+    d: &[f64],
+    log2_cols: u8,
+) -> (Vec<f64>, Report) {
     let cols = 1usize << log2_cols;
     assert_eq!(d.len(), m.ncols * cols);
     let prog = match variant {
@@ -280,13 +303,15 @@ pub fn run_smxdm(variant: Variant, iw: IdxWidth, m: &Csr, d: &[f64], log2_cols: 
     let (vals, idcs, ptrs) = cc.place_csr(m, iw);
     let dd = cc.place_dense(d);
     let out = cc.arena.alloc_f64((m.nrows * cols) as u64);
-    cc.cl.set_reg(0, A0, vals as i64);
-    cc.cl.set_reg(0, A1, idcs as i64);
-    cc.cl.set_reg(0, A2, dd as i64);
-    cc.cl.set_reg(0, A3, m.nrows as i64);
-    cc.cl.set_reg(0, A4, out as i64);
-    cc.cl.set_reg(0, A5, ptrs as i64);
-    cc.cl.set_reg(0, A6, m.nnz() as i64);
+    cc.args(&[
+        (A0, vals as i64),
+        (A1, idcs as i64),
+        (A2, dd as i64),
+        (A3, m.nrows as i64),
+        (A4, out as i64),
+        (A5, ptrs as i64),
+        (A6, m.nnz() as i64),
+    ]);
     let (cl, rep) = cc.run((m.nnz() * cols) as u64);
     let got = read_f64s(&cl.tcdm, out, m.nrows * cols);
     assert_all_close(&got, &ops::smxdm(m, d, cols), "smxdm");
@@ -313,16 +338,60 @@ pub fn run_svxsv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &SpVec) -> (f64, 
     let (a_vals, a_idcs) = cc.place_spvec(a, iw);
     let (b_vals, b_idcs) = cc.place_spvec(b, iw);
     let out = cc.arena.alloc_f64(1);
-    cc.cl.set_reg(0, A0, a_vals as i64);
-    cc.cl.set_reg(0, A1, a_idcs as i64);
-    cc.cl.set_reg(0, A2, b_vals as i64);
-    cc.cl.set_reg(0, A3, b_idcs as i64);
-    cc.cl.set_reg(0, A4, out as i64);
-    cc.cl.set_reg(0, A5, a.nnz() as i64);
-    cc.cl.set_reg(0, A6, b.nnz() as i64);
+    cc.args(&[
+        (A0, a_vals as i64),
+        (A1, a_idcs as i64),
+        (A2, b_vals as i64),
+        (A3, b_idcs as i64),
+        (A4, out as i64),
+        (A5, a.nnz() as i64),
+        (A6, b.nnz() as i64),
+    ]);
     let (cl, rep) = cc.run(intersection_count(a, b));
     let got = cl.tcdm.peek_f64(out);
     assert_close(got, ops::svxsv(a, b), "svxsv");
+    (got, rep)
+}
+
+/// Shared driver for the fiber-producing set kernels (union sV+sV and
+/// intersection sV⊙sV): identical operand layout, argument convention
+/// (`S11` = output length cell), and result read-back/verification.
+fn run_fiber_setlike(
+    prog: Program,
+    iw: IdxWidth,
+    a: &SpVec,
+    b: &SpVec,
+    cap: usize,
+    want: &SpVec,
+    what: &str,
+) -> (SpVec, Report) {
+    let mut cc = Cc::new(prog);
+    let (a_vals, a_idcs) = cc.place_spvec(a, iw);
+    let (b_vals, b_idcs) = cc.place_spvec(b, iw);
+    let out_vals = cc.arena.alloc_f64(cap as u64);
+    let out_idcs = cc.arena.alloc_idx(cap as u64, iw);
+    let out_len = cc.arena.alloc(8);
+    cc.args(&[
+        (A0, a_vals as i64),
+        (A1, a_idcs as i64),
+        (A2, b_vals as i64),
+        (A3, b_idcs as i64),
+        (A4, out_vals as i64),
+        (A5, a.nnz() as i64),
+        (A6, b.nnz() as i64),
+        (A7, out_idcs as i64),
+        (S11, out_len as i64),
+    ]);
+    let (cl, rep) = cc.run(want.nnz() as u64);
+    let len = cl.tcdm.peek(out_len, 8) as usize;
+    assert_eq!(len, want.nnz(), "{what} result length");
+    let got = SpVec {
+        dim: a.dim,
+        idcs: read_idx(&cl.tcdm, out_idcs, len, iw),
+        vals: read_f64s(&cl.tcdm, out_vals, len),
+    };
+    assert_eq!(got.idcs, want.idcs, "{what} indices");
+    assert_all_close(&got.vals, &want.vals, what);
     (got, rep)
 }
 
@@ -336,32 +405,7 @@ pub fn run_svpsv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &SpVec) -> (SpVec
     };
     let want = ops::svpsv(a, b);
     let cap = a.nnz() + b.nnz();
-    let mut cc = Cc::new(prog);
-    let (a_vals, a_idcs) = cc.place_spvec(a, iw);
-    let (b_vals, b_idcs) = cc.place_spvec(b, iw);
-    let out_vals = cc.arena.alloc_f64(cap as u64);
-    let out_idcs = cc.arena.alloc_idx(cap as u64, iw);
-    let out_len = cc.arena.alloc(8);
-    cc.cl.set_reg(0, A0, a_vals as i64);
-    cc.cl.set_reg(0, A1, a_idcs as i64);
-    cc.cl.set_reg(0, A2, b_vals as i64);
-    cc.cl.set_reg(0, A3, b_idcs as i64);
-    cc.cl.set_reg(0, A4, out_vals as i64);
-    cc.cl.set_reg(0, A5, a.nnz() as i64);
-    cc.cl.set_reg(0, A6, b.nnz() as i64);
-    cc.cl.set_reg(0, A7, out_idcs as i64);
-    cc.cl.set_reg(0, S11, out_len as i64);
-    let (cl, rep) = cc.run(want.nnz() as u64);
-    let len = cl.tcdm.peek(out_len, 8) as usize;
-    assert_eq!(len, want.nnz(), "svpsv result length");
-    let got = SpVec {
-        dim: a.dim,
-        idcs: read_idx(&cl.tcdm, out_idcs, len, iw),
-        vals: read_f64s(&cl.tcdm, out_vals, len),
-    };
-    assert_eq!(got.idcs, want.idcs, "svpsv indices");
-    assert_all_close(&got.vals, &want.vals, "svpsv values");
-    (got, rep)
+    run_fiber_setlike(prog, iw, a, b, cap, &want, "svpsv")
 }
 
 /// sV⊙sV. Returns (result sparse vector, report). Payload = |intersection|.
@@ -374,32 +418,7 @@ pub fn run_svosv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &SpVec) -> (SpVec
     };
     let want = ops::svosv(a, b);
     let cap = a.nnz().min(b.nnz()).max(1);
-    let mut cc = Cc::new(prog);
-    let (a_vals, a_idcs) = cc.place_spvec(a, iw);
-    let (b_vals, b_idcs) = cc.place_spvec(b, iw);
-    let out_vals = cc.arena.alloc_f64(cap as u64);
-    let out_idcs = cc.arena.alloc_idx(cap as u64, iw);
-    let out_len = cc.arena.alloc(8);
-    cc.cl.set_reg(0, A0, a_vals as i64);
-    cc.cl.set_reg(0, A1, a_idcs as i64);
-    cc.cl.set_reg(0, A2, b_vals as i64);
-    cc.cl.set_reg(0, A3, b_idcs as i64);
-    cc.cl.set_reg(0, A4, out_vals as i64);
-    cc.cl.set_reg(0, A5, a.nnz() as i64);
-    cc.cl.set_reg(0, A6, b.nnz() as i64);
-    cc.cl.set_reg(0, A7, out_idcs as i64);
-    cc.cl.set_reg(0, S11, out_len as i64);
-    let (cl, rep) = cc.run(want.nnz() as u64);
-    let len = cl.tcdm.peek(out_len, 8) as usize;
-    assert_eq!(len, want.nnz(), "svosv result length");
-    let got = SpVec {
-        dim: a.dim,
-        idcs: read_idx(&cl.tcdm, out_idcs, len, iw),
-        vals: read_f64s(&cl.tcdm, out_vals, len),
-    };
-    assert_eq!(got.idcs, want.idcs, "svosv indices");
-    assert_all_close(&got.vals, &want.vals, "svosv values");
-    (got, rep)
+    run_fiber_setlike(prog, iw, a, b, cap, &want, "svosv")
 }
 
 /// sM×sV (dense result). Payload = total matched pairs over all rows.
@@ -428,14 +447,16 @@ pub fn run_smxsv_sized(
     let (a_vals, a_idcs, ptrs) = cc.place_csr(m, iw);
     let (b_vals, b_idcs) = cc.place_spvec(b, iw);
     let out = cc.arena.alloc_f64(m.nrows as u64);
-    cc.cl.set_reg(0, A0, a_vals as i64);
-    cc.cl.set_reg(0, A1, a_idcs as i64);
-    cc.cl.set_reg(0, A2, b_vals as i64);
-    cc.cl.set_reg(0, A3, b_idcs as i64);
-    cc.cl.set_reg(0, A4, out as i64);
-    cc.cl.set_reg(0, A5, ptrs as i64);
-    cc.cl.set_reg(0, A6, m.nrows as i64);
-    cc.cl.set_reg(0, A7, b.nnz() as i64);
+    cc.args(&[
+        (A0, a_vals as i64),
+        (A1, a_idcs as i64),
+        (A2, b_vals as i64),
+        (A3, b_idcs as i64),
+        (A4, out as i64),
+        (A5, ptrs as i64),
+        (A6, m.nrows as i64),
+        (A7, b.nnz() as i64),
+    ]);
     let (cl, rep) = cc.run(payload);
     let got = read_f64s(&cl.tcdm, out, m.nrows);
     assert_all_close(&got, &ops::smxsv(m, b), "smxsv");
@@ -463,15 +484,17 @@ pub fn run_smxsm(variant: Variant, iw: IdxWidth, a: &Csr, b: &Csr) -> (Vec<f64>,
     let (a_vals, a_idcs, a_ptrs) = cc.place_csr(a, iw);
     let (b_vals, b_idcs, b_ptrs) = cc.place_csr(&b_csc.0, iw);
     let out = cc.arena.alloc_f64((a.nrows * b.ncols) as u64);
-    cc.cl.set_reg(0, A0, a_vals as i64);
-    cc.cl.set_reg(0, A1, a_idcs as i64);
-    cc.cl.set_reg(0, A2, b_vals as i64);
-    cc.cl.set_reg(0, A3, b_idcs as i64);
-    cc.cl.set_reg(0, A4, out as i64);
-    cc.cl.set_reg(0, A5, a_ptrs as i64);
-    cc.cl.set_reg(0, A6, a.nrows as i64);
-    cc.cl.set_reg(0, A7, b_ptrs as i64);
-    cc.cl.set_reg(0, S8, b.ncols as i64);
+    cc.args(&[
+        (A0, a_vals as i64),
+        (A1, a_idcs as i64),
+        (A2, b_vals as i64),
+        (A3, b_idcs as i64),
+        (A4, out as i64),
+        (A5, a_ptrs as i64),
+        (A6, a.nrows as i64),
+        (A7, b_ptrs as i64),
+        (S8, b.ncols as i64),
+    ]);
     let (cl, rep) = cc.run(payload);
     let got = read_f64s(&cl.tcdm, out, a.nrows * b.ncols);
     assert_all_close(&got, &ops::smxsm_inner(a, &b_csc), "smxsm");
@@ -533,6 +556,18 @@ mod tests {
         }
         // 8-bit fits dim 256
         run_svpdv(Variant::Sssr, IdxWidth::U8, &a, &b);
+    }
+
+    #[test]
+    fn svpdv_checked_matches_unchecked_timing() {
+        // the checked wrapper must not change what is simulated
+        let dim = 300;
+        let a = matgen::random_spvec(35, dim, 70);
+        let b = matgen::random_dense(36, dim);
+        let (got_c, rep_c) = run_svpdv(Variant::Sssr, IdxWidth::U16, &a, &b);
+        let (got_u, rep_u) = run_svpdv_unchecked(Variant::Sssr, IdxWidth::U16, &a, &b);
+        assert_eq!(rep_c.cycles, rep_u.cycles);
+        assert_eq!(got_c, got_u);
     }
 
     #[test]

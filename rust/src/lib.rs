@@ -2,8 +2,7 @@
 //!
 //! This crate reproduces Scheffler et al., *"Sparse Stream Semantic
 //! Registers: A Lightweight ISA Extension Accelerating General Sparse
-//! Linear Algebra"* (IEEE TPDS 2023), as a three-layer Rust + JAX + Pallas
-//! system:
+//! Linear Algebra"* (IEEE TPDS 2023), as a Rust + JAX/Pallas system:
 //!
 //! - [`sim`] — a cycle-level microarchitectural simulator of the RISC-V
 //!   Snitch core complex and eight-core cluster, extended with SSSRs
@@ -17,21 +16,47 @@
 //!   vector and matrix ops for 8/16/32-bit index types.
 //! - [`coordinator`] — the parallel scaleout (§4.2): row chunking over
 //!   worker cores and double-buffered DMA data movement.
+//! - [`experiments`] — the declarative, parallel experiment engine: an
+//!   [`experiments::ExperimentSpec`] describes a sweep (seeded workload
+//!   grid + measurement closure), the generic [`experiments::Runner`]
+//!   executes grid points on `std::thread::scope` workers with
+//!   deterministic output order, and every run can emit both human
+//!   tables and machine-readable `BENCH_<fig>.json` lines.
+//! - [`harness`] — every table and figure of the paper's evaluation,
+//!   expressed as `ExperimentSpec` definitions over [`experiments`].
 //! - [`runtime`] — the PJRT golden-model runtime: loads AOT-compiled
 //!   JAX/Pallas artifacts (HLO text) and executes them on the XLA CPU
-//!   client to cross-check simulator numerics.
+//!   client to cross-check simulator numerics. Requires the native
+//!   PJRT/XLA closure and is therefore gated behind the optional `xla`
+//!   cargo feature; the default (offline) build ships a stub whose
+//!   `Runtime::load` returns a clear "built without the `xla` feature"
+//!   error.
 //! - [`model`] — analytical area/timing (GF12LP+-calibrated) and
 //!   utilization-scaled energy models (§4.3, §4.4).
 //! - [`formats`], [`matgen`] — sparse tensor formats and the
 //!   deterministic matrix corpus standing in for SuiteSparse.
-//! - [`harness`] — regenerates every table and figure of the paper's
-//!   evaluation.
+//! - [`util`] — seeded PRNG, summary statistics, and the dependency-free
+//!   JSON reader/writer behind manifests and `BENCH_*.json`.
+//!
+//! ## Build features
+//!
+//! The default feature set compiles offline against the standard library
+//! only: `cargo build --release && cargo test -q` needs no network and
+//! no native dependencies. Enable `--features xla` to compile the real
+//! PJRT runtime (requires the vendored `xla` crate closure).
+//!
+//! ## Reproducing the paper
+//!
+//! The `repro` binary drives everything; see `README.md` at the repo
+//! root for the CLI (including `repro sweep --jobs N --json DIR`) and
+//! the `BENCH_*.json` schema.
 
 pub mod sim;
 pub mod formats;
 pub mod matgen;
 pub mod kernels;
 pub mod coordinator;
+pub mod experiments;
 pub mod runtime;
 pub mod model;
 pub mod harness;

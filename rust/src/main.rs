@@ -1,68 +1,158 @@
 //! `repro` — the SSSR reproduction CLI.
 //!
-//! Subcommands regenerate individual paper figures/tables, run single
-//! kernels, and verify the simulator against the AOT JAX/Pallas golden
-//! models via PJRT. (Argument parsing is hand-rolled: the offline build
-//! environment only vendors the `xla` closure, no clap.)
+//! Subcommands regenerate individual paper figures/tables through the
+//! declarative experiment engine ([`sssr::experiments`]), run single
+//! kernels, and (with `--features xla`) verify the simulator against the
+//! AOT JAX/Pallas golden models via PJRT. Argument parsing is
+//! hand-rolled: the offline build vendors no clap.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
+use sssr::experiments::{write_json, ExperimentSpec, Runner};
 use sssr::harness as h;
 use sssr::kernels::driver::{run_smxdv_sized, run_svxdv, run_svxsv};
 use sssr::kernels::{IdxWidth, Variant};
 use sssr::matgen;
-use sssr::runtime::Runtime;
 
 const USAGE: &str = "\
 repro — Sparse Stream Semantic Registers reproduction
 
 USAGE:
-    repro <command> [args]
+    repro <command> [args] [--jobs N] [--json DIR]
 
 COMMANDS:
     fig 4a|4b|4c|4d|4e|4f|5a|5b|6a|6b|7|8a|8b   regenerate one figure
     table 1|2|3                                  regenerate one table
+    sweep [fig4a fig7b ...]                      run figure sweeps (default:
+                                                 all) and write BENCH_*.json
     kernel <name> <variant>                      run one kernel demo
                                                  (names: svxdv svxsv smxdv;
                                                   variants: base ssr sssr)
-    verify [manifest.json]                       simulator vs PJRT golden models
+    verify [manifest.json]                       simulator vs PJRT golden
+                                                 models (needs --features xla)
     all                                          every figure and table
+
+OPTIONS:
+    --jobs N        experiment worker threads (default: one per core;
+                    results are identical for every N)
+    --json DIR      also write one BENCH_<fig>.json per sweep into DIR
 
 ENV:
     REPRO_FULL=1    full paper-size sweeps (default: quick)";
 
+/// Options shared by the sweep-running subcommands, parsed from the tail
+/// of the argument list.
+struct Opts {
+    jobs: usize,
+    json: Option<PathBuf>,
+    rest: Vec<String>,
+}
+
+fn parse_opts(args: &[String]) -> Opts {
+    let mut jobs = 0; // 0 = auto
+    let mut json = None;
+    let mut rest = vec![];
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--jobs" | "-j" => {
+                let v = it.next().unwrap_or_else(|| die("--jobs needs a value"));
+                jobs = v
+                    .parse()
+                    .unwrap_or_else(|_| die(&format!("bad --jobs value {v:?}")));
+            }
+            "--json" => {
+                let v = it.next().unwrap_or_else(|| die("--json needs a directory"));
+                json = Some(PathBuf::from(v));
+            }
+            _ => rest.push(a.clone()),
+        }
+    }
+    Opts { jobs, json, rest }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let mut it = args.iter().map(|s| s.as_str());
-    match it.next() {
-        Some("fig") => match it.next() {
-            Some("4a") => h::print_util_rows("Fig. 4a", &h::fig4a()),
-            Some("4b") => h::print_util_rows("Fig. 4b", &h::fig4b()),
-            Some("4c") => h::print_speedup_rows("Fig. 4c", &h::fig4c()),
-            Some("4d") => h::print_density_rows("Fig. 4d", &h::fig4d()),
-            Some("4e") => h::print_density_rows("Fig. 4e", &h::fig4e()),
-            Some("4f") => h::print_matsv_rows("Fig. 4f", &h::fig4f()),
-            Some("5a") => h::print_cluster_rows("Fig. 5a", &h::fig5a()),
-            Some("5b") => h::print_cluster_rows("Fig. 5b", &h::fig5b()),
-            Some("6a") => h::print_sensitivity_rows("Fig. 6a", "Gb/s/pin", &h::fig6a()),
-            Some("6b") => h::print_sensitivity_rows("Fig. 6b", "cycles", &h::fig6b()),
-            Some("7") => h::print_fig7(),
-            Some("8a") => h::print_energy_rows("Fig. 8a", &h::fig8("smxdv")),
-            Some("8b") => h::print_energy_rows("Fig. 8b", &h::fig8("smxsv")),
-            other => die(&format!("unknown figure {other:?}")),
+    let cmd = args.first().map(|s| s.as_str());
+    let opts = parse_opts(args.get(1..).unwrap_or(&[]));
+    match cmd {
+        Some("fig") => match opts.rest.first().map(|s| s.as_str()) {
+            Some("7") => {
+                // Fig. 7 spans two analytical sweeps plus the overhead line
+                run_and_print(&h::spec_fig7b(), &opts);
+                run_and_print(&h::spec_fig7c(), &opts);
+                h::print_fig7_footer();
+            }
+            Some(id) => {
+                let spec = h::spec_by_name(&format!("fig{id}"))
+                    .unwrap_or_else(|| die(&format!("unknown figure {id:?}")));
+                run_and_print(&spec, &opts);
+            }
+            None => die("fig needs an id (4a..4f, 5a, 5b, 6a, 6b, 7, 8a, 8b)"),
         },
-        Some("table") => match it.next() {
+        Some("table") => match opts.rest.first().map(|s| s.as_str()) {
             Some("1") => print_table1(),
             Some("2") => {
-                let rows = h::fig5a();
-                h::print_table2(h::table2_ours(&rows));
+                let rows = run_spec(&h::spec_fig5a(), &opts);
+                let ours = h::table2_ours(&rows);
+                h::print_table2(ours);
+                if let Some(dir) = &opts.json {
+                    let (spec, recs) = h::table2_records(ours);
+                    let path = write_json(dir, &spec, &recs)
+                        .unwrap_or_else(|e| die(&format!("writing table2 JSON: {e}")));
+                    eprintln!("[wrote {}]", path.display());
+                }
             }
-            Some("3") => h::print_table3(),
+            Some("3") => {
+                let spec = h::spec_table3();
+                run_and_print(&spec, &opts);
+            }
             other => die(&format!("unknown table {other:?}")),
         },
+        Some("sweep") => {
+            // specs are built lazily, one at a time: each holds its
+            // generated workloads (corpus, operands) until dropped
+            let builders: Vec<fn() -> ExperimentSpec> = if opts.rest.is_empty() {
+                h::SPEC_BUILDERS.iter().map(|(_, f)| *f).collect()
+            } else {
+                opts.rest
+                    .iter()
+                    .map(|n| {
+                        h::spec_builder(n).unwrap_or_else(|| {
+                            die(&format!("unknown sweep {n:?} (known: {})", h::spec_names()))
+                        })
+                    })
+                    .collect()
+            };
+            // sweep always emits JSON: default to the current directory
+            let dir = opts.json.clone().unwrap_or_else(|| PathBuf::from("."));
+            let runner = Runner::new(opts.jobs);
+            println!(
+                "sweep: {} experiment(s), {} worker thread(s), JSON -> {}",
+                builders.len(),
+                runner.jobs,
+                dir.display()
+            );
+            let t0 = std::time::Instant::now();
+            for build in builders {
+                let spec = build();
+                let t = std::time::Instant::now();
+                let recs = runner.run(&spec);
+                let path = write_json(&dir, &spec, &recs)
+                    .unwrap_or_else(|e| die(&format!("writing {}: {e}", spec.name)));
+                println!(
+                    "  {:<8} {:>5} records {:>8.1}s  -> {}",
+                    spec.name,
+                    recs.len(),
+                    t.elapsed().as_secs_f64(),
+                    path.display()
+                );
+            }
+            println!("sweep done in {:.1}s", t0.elapsed().as_secs_f64());
+        }
         Some("kernel") => {
-            let name = it.next().unwrap_or("svxdv").to_string();
-            let variant = match it.next().unwrap_or("sssr") {
+            let name = opts.rest.first().cloned().unwrap_or_else(|| "svxdv".into());
+            let variant = match opts.rest.get(1).map(|s| s.as_str()).unwrap_or("sssr") {
                 "base" => Variant::Base,
                 "ssr" => Variant::Ssr,
                 "sssr" => Variant::Sssr,
@@ -71,30 +161,51 @@ fn main() {
             kernel_demo(&name, variant);
         }
         Some("verify") => {
-            let path = args.get(1).cloned().unwrap_or("artifacts/manifest.json".into());
+            let path = opts
+                .rest
+                .first()
+                .cloned()
+                .unwrap_or_else(|| "artifacts/manifest.json".into());
             verify(Path::new(&path));
         }
         Some("all") => {
-            h::print_util_rows("Fig. 4a", &h::fig4a());
-            h::print_util_rows("Fig. 4b", &h::fig4b());
-            h::print_speedup_rows("Fig. 4c", &h::fig4c());
-            h::print_density_rows("Fig. 4d", &h::fig4d());
-            h::print_density_rows("Fig. 4e", &h::fig4e());
-            h::print_matsv_rows("Fig. 4f", &h::fig4f());
-            let a = h::fig5a();
-            h::print_cluster_rows("Fig. 5a", &a);
-            h::print_cluster_rows("Fig. 5b", &h::fig5b());
-            h::print_sensitivity_rows("Fig. 6a", "Gb/s/pin", &h::fig6a());
-            h::print_sensitivity_rows("Fig. 6b", "cycles", &h::fig6b());
-            h::print_fig7();
-            h::print_energy_rows("Fig. 8a", &h::fig8("smxdv"));
-            h::print_energy_rows("Fig. 8b", &h::fig8("smxsv"));
+            let mut fig5a_records = None;
+            for (name, build) in h::SPEC_BUILDERS {
+                let spec = build();
+                let recs = run_spec(&spec, &opts);
+                spec.print(&recs);
+                if *name == "fig7c" {
+                    h::print_fig7_footer();
+                }
+                if *name == "fig5a" {
+                    fig5a_records = Some(recs);
+                }
+            }
             print_table1();
-            h::print_table2(h::table2_ours(&a));
-            h::print_table3();
+            let fig5a = fig5a_records.expect("fig5a missing from SPEC_BUILDERS");
+            h::print_table2(h::table2_ours(&fig5a));
+            let spec = h::spec_table3();
+            let recs = run_spec(&spec, &opts);
+            spec.print(&recs);
         }
         _ => println!("{USAGE}"),
     }
+}
+
+/// Run one spec with the CLI's worker/JSON options.
+fn run_spec(spec: &ExperimentSpec, opts: &Opts) -> Vec<sssr::experiments::Record> {
+    let recs = Runner::new(opts.jobs).run(spec);
+    if let Some(dir) = &opts.json {
+        let path = write_json(dir, spec, &recs)
+            .unwrap_or_else(|e| die(&format!("writing {} JSON: {e}", spec.name)));
+        eprintln!("[wrote {}]", path.display());
+    }
+    recs
+}
+
+fn run_and_print(spec: &ExperimentSpec, opts: &Opts) {
+    let recs = run_spec(spec, opts);
+    spec.print(&recs);
 }
 
 fn die(msg: &str) -> ! {
@@ -158,15 +269,29 @@ fn kernel_demo(name: &str, variant: Variant) {
 }
 
 /// Cross-check the simulator against every PJRT-executed golden model.
+#[cfg(feature = "xla")]
 fn verify(manifest: &Path) {
-    let rt = match Runtime::load(manifest) {
+    let rt = match sssr::runtime::Runtime::load(manifest) {
         Ok(rt) => rt,
-        Err(e) => die(&format!("loading artifacts: {e:#} (run `make artifacts`)")),
+        Err(e) => die(&format!("loading artifacts: {e} (run `make artifacts`)")),
     };
     println!("PJRT platform: {}", rt.platform());
     println!("artifacts: {:?}", rt.names());
     match sssr::runtime::golden::verify_all(&rt) {
         Ok(n) => println!("golden verification: {n} checks OK (simulator == XLA within 1e-9)"),
-        Err(e) => die(&format!("{e:#}")),
+        Err(e) => die(&format!("{e}")),
     }
+}
+
+#[cfg(not(feature = "xla"))]
+fn verify(manifest: &Path) {
+    // Keep the manifest arg in the signature so the CLI shape is
+    // identical across feature sets.
+    let _ = manifest;
+    die(
+        "repro was built without the `xla` feature; the PJRT golden-model \
+         runtime is unavailable. To enable it, declare the vendored xla crate \
+         in rust/Cargo.toml (see the [features] comment there), then rebuild \
+         with `cargo build --features xla`.",
+    )
 }

@@ -6,14 +6,12 @@
 //! kernel in the simulator (SSSR variant — the paper's contribution
 //! path), and compare element-wise.
 
-use anyhow::{bail, Context, Result};
-
 use crate::formats::{Csr, SpVec};
 use crate::kernels::driver::{run_smxdv, run_smxsv, run_svpsv, run_svxdv, run_svxsv};
 use crate::kernels::{IdxWidth, Variant};
 use crate::util::Pcg;
 
-use super::Runtime;
+use super::{RtError, RtResult, Runtime};
 
 /// ELL-pack a CSR matrix to the artifact's fixed [rows, k] shape,
 /// returning (vals, idcs-as-f64) flattened row-major.
@@ -44,14 +42,14 @@ fn fiber_pack(v: &SpVec, k: usize) -> (Vec<f64>, Vec<f64>) {
     (vals, idcs)
 }
 
-fn check_close(got: &[f64], want: &[f64], what: &str) -> Result<()> {
+fn check_close(got: &[f64], want: &[f64], what: &str) -> RtResult<()> {
     if got.len() != want.len() {
-        bail!("{what}: length {} vs {}", got.len(), want.len());
+        return Err(RtError(format!("{what}: length {} vs {}", got.len(), want.len())));
     }
     for (i, (g, w)) in got.iter().zip(want).enumerate() {
         let tol = 1e-9 * w.abs().max(1.0);
         if (g - w).abs() > tol {
-            bail!("{what}[{i}]: sim {g} vs xla {w}");
+            return Err(RtError(format!("{what}[{i}]: sim {g} vs xla {w}")));
         }
     }
     Ok(())
@@ -76,7 +74,7 @@ fn random_ell_csr(seed: u64, rows: usize, k: usize, cols: usize) -> Csr {
 }
 
 /// Run every golden check; returns the number of comparisons performed.
-pub fn verify_all(rt: &Runtime) -> Result<usize> {
+pub fn verify_all(rt: &Runtime) -> RtResult<usize> {
     let mut checks = 0usize;
 
     // ---- spmv: ELL [64,16] x dense [256] --------------------------------
@@ -88,7 +86,7 @@ pub fn verify_all(rt: &Runtime) -> Result<usize> {
         let (vals, idcs) = ell_pack(&m, rows, k);
         let xla = rt
             .execute_f64("spmv", &[&vals, &idcs, &b])
-            .context("executing spmv artifact")?;
+            .map_err(|e| RtError(format!("executing spmv artifact: {e}")))?;
         let (sim, _) = run_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b);
         check_close(&sim, &xla[0], "spmv")?;
         checks += 1;
@@ -157,7 +155,11 @@ pub fn verify_all(rt: &Runtime) -> Result<usize> {
             }
         }
         if xi != sim.idcs {
-            bail!("svpsv pattern mismatch: {} vs {} entries", xi.len(), sim.idcs.len());
+            return Err(RtError(format!(
+                "svpsv pattern mismatch: {} vs {} entries",
+                xi.len(),
+                sim.idcs.len()
+            )));
         }
         check_close(&sim.vals, &xv, "svpsv values")?;
         checks += 1;
@@ -197,7 +199,7 @@ pub fn verify_all(rt: &Runtime) -> Result<usize> {
     }
 
     if checks == 0 {
-        bail!("no artifacts found in the manifest");
+        return Err(RtError::new("no artifacts found in the manifest"));
     }
     Ok(checks)
 }

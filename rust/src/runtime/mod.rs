@@ -6,15 +6,49 @@
 //! 0.5.1 rejects), compiles them on the XLA CPU PJRT client, and
 //! executes them. The L3 verification path cross-checks every simulated
 //! kernel result against these executables; Python never runs here.
+//!
+//! The PJRT client needs the native XLA closure, which the default
+//! offline build does not carry, so the real [`Runtime`] is gated behind
+//! the optional `xla` cargo feature. Without it, [`Runtime::load`]
+//! returns a clear "built without the `xla` feature" error and the rest
+//! of this module (manifest parsing) still works — it is plain std.
 
+#[cfg(feature = "xla")]
 pub mod golden;
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(feature = "xla")]
+pub use pjrt::Runtime;
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
 use crate::util::Json;
+
+/// Runtime error: a plain message type so the default build needs no
+/// external error crate (the offline environment vendors none).
+#[derive(Clone, Debug)]
+pub struct RtError(pub String);
+
+impl RtError {
+    pub fn new(msg: impl Into<String>) -> RtError {
+        RtError(msg.into())
+    }
+
+    /// Wrap any displayable error (XLA client errors, io errors, …).
+    pub fn of(e: impl std::fmt::Display) -> RtError {
+        RtError(e.to_string())
+    }
+}
+
+impl std::fmt::Display for RtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+pub type RtResult<T> = Result<T, RtError>;
 
 /// One entry of the artifact manifest produced by `aot.py`.
 #[derive(Clone, Debug)]
@@ -35,43 +69,50 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    pub fn load(path: &Path) -> Result<Manifest> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading manifest {} (run `make artifacts`)", path.display()))?;
-        let v = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    pub fn load(path: &Path) -> RtResult<Manifest> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            RtError(format!(
+                "reading manifest {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        let v = Json::parse(&text).map_err(|e| RtError(format!("manifest parse: {e}")))?;
         let dir = path.parent().unwrap_or(Path::new(".")).to_path_buf();
         let mut entries = vec![];
         for e in v
             .get("entries")
             .and_then(|x| x.as_arr())
-            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .ok_or_else(|| RtError::new("manifest missing entries"))?
         {
             let name = e
                 .get("name")
                 .and_then(|x| x.as_str())
-                .ok_or_else(|| anyhow!("entry missing name"))?
+                .ok_or_else(|| RtError::new("entry missing name"))?
                 .to_string();
             let path = e
                 .get("path")
                 .and_then(|x| x.as_str())
-                .ok_or_else(|| anyhow!("entry missing path"))?
+                .ok_or_else(|| RtError::new("entry missing path"))?
                 .to_string();
             let inputs = e
                 .get("inputs")
                 .and_then(|x| x.as_arr())
-                .ok_or_else(|| anyhow!("entry missing inputs"))?
+                .ok_or_else(|| RtError::new("entry missing inputs"))?
                 .iter()
                 .map(|shape| {
                     shape
                         .as_arr()
-                        .map(|dims| dims.iter().filter_map(|d| d.as_f64()).map(|d| d as usize).collect())
-                        .ok_or_else(|| anyhow!("bad shape"))
+                        .ok_or_else(|| RtError::new("bad shape"))?
+                        .iter()
+                        .map(|d| {
+                            d.as_f64()
+                                .map(|d| d as usize)
+                                .ok_or_else(|| RtError(format!("non-numeric dim {d:?}")))
+                        })
+                        .collect()
                 })
-                .collect::<Result<Vec<Vec<usize>>>>()?;
-            let n_outputs = e
-                .get("n_outputs")
-                .and_then(|x| x.as_f64())
-                .unwrap_or(1.0) as usize;
+                .collect::<RtResult<Vec<Vec<usize>>>>()?;
+            let n_outputs = e.get("n_outputs").and_then(|x| x.as_f64()).unwrap_or(1.0) as usize;
             entries.push(ArtifactSpec { name, path, inputs, n_outputs });
         }
         Ok(Manifest { entries, dir })
@@ -82,70 +123,23 @@ impl Manifest {
     }
 }
 
-/// A loaded+compiled artifact collection on the CPU PJRT client.
+/// Stub runtime for builds without the `xla` feature: loading always
+/// fails with an actionable message, so every downstream path (the
+/// `repro verify` subcommand, examples) degrades gracefully.
+#[cfg(not(feature = "xla"))]
 pub struct Runtime {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    _private: (),
 }
 
+#[cfg(not(feature = "xla"))]
 impl Runtime {
-    /// Load every artifact in the manifest. `manifest_path` is typically
-    /// `artifacts/manifest.json`.
-    pub fn load(manifest_path: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(manifest_path)?;
-        let client = xla::PjRtClient::cpu()?;
-        let mut exes = HashMap::new();
-        for e in &manifest.entries {
-            let path = manifest.dir.join(&e.path);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("loading HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling artifact {}", e.name))?;
-            exes.insert(e.name.clone(), exe);
-        }
-        Ok(Runtime { manifest, client, exes })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn names(&self) -> Vec<&str> {
-        self.manifest.entries.iter().map(|e| e.name.as_str()).collect()
-    }
-
-    /// Execute artifact `name` on f64 inputs (flattened row-major, one
-    /// slice per parameter). Returns the flattened outputs.
-    pub fn execute_f64(&self, name: &str, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
-        let spec = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
-        let exe = &self.exes[name];
-        if inputs.len() != spec.inputs.len() {
-            bail!("{name}: got {} inputs, expected {}", inputs.len(), spec.inputs.len());
-        }
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs.iter().zip(&spec.inputs) {
-            let n: usize = shape.iter().product();
-            if data.len() != n {
-                bail!("{name}: input length {} != shape {:?}", data.len(), shape);
-            }
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data).reshape(&dims)?;
-            lits.push(lit);
-        }
-        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        // Lowered with return_tuple=True: the result is always a tuple.
-        let parts = result.to_tuple()?;
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            out.push(p.to_vec::<f64>()?);
-        }
-        Ok(out)
+    pub fn load(_manifest_path: &Path) -> RtResult<Runtime> {
+        Err(RtError::new(
+            "sssr was built without the `xla` feature: the PJRT golden-model \
+             runtime is unavailable. To enable it, declare the vendored xla \
+             crate in rust/Cargo.toml (see the [features] comment there), then \
+             rebuild with `cargo build --features xla`.",
+        ))
     }
 }
 
@@ -154,5 +148,35 @@ pub fn default_manifest_path() -> PathBuf {
     PathBuf::from("artifacts/manifest.json")
 }
 
-// NOTE: runtime integration tests live in rust/tests/runtime_golden.rs
-// (they require `make artifacts` to have produced the HLO files).
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_aot_style_json() {
+        let dir = std::env::temp_dir().join("sssr_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        std::fs::write(
+            &path,
+            r#"{"version": 1, "entries": [
+                {"name": "spmv", "path": "spmv.hlo.txt",
+                 "inputs": [[64, 16], [64, 16], [256]], "n_outputs": 1}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.get("spmv").unwrap();
+        assert_eq!(e.inputs, vec![vec![64, 16], vec![64, 16], vec![256]]);
+        assert_eq!(e.n_outputs, 1);
+        assert!(m.get("nope").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = Runtime::load(Path::new("artifacts/manifest.json")).err().unwrap();
+        assert!(err.to_string().contains("without the `xla` feature"), "{err}");
+    }
+}

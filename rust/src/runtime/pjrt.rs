@@ -1,0 +1,87 @@
+//! The real PJRT-backed runtime (compiled only with `--features xla`):
+//! compiles every manifest artifact on the XLA CPU client and executes
+//! it on f64 literals.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::{Manifest, RtError, RtResult};
+
+/// A loaded+compiled artifact collection on the CPU PJRT client.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load every artifact in the manifest. `manifest_path` is typically
+    /// `artifacts/manifest.json`.
+    pub fn load(manifest_path: &Path) -> RtResult<Runtime> {
+        let manifest = Manifest::load(manifest_path)?;
+        let client = xla::PjRtClient::cpu().map_err(RtError::of)?;
+        let mut exes = HashMap::new();
+        for e in &manifest.entries {
+            let path = manifest.dir.join(&e.path);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|err| RtError(format!("loading HLO text {}: {err}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|err| RtError(format!("compiling artifact {}: {err}", e.name)))?;
+            exes.insert(e.name.clone(), exe);
+        }
+        Ok(Runtime { manifest, client, exes })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Execute artifact `name` on f64 inputs (flattened row-major, one
+    /// slice per parameter). Returns the flattened outputs.
+    pub fn execute_f64(&self, name: &str, inputs: &[&[f64]]) -> RtResult<Vec<Vec<f64>>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| RtError(format!("unknown artifact {name}")))?;
+        let exe = &self.exes[name];
+        if inputs.len() != spec.inputs.len() {
+            return Err(RtError(format!(
+                "{name}: got {} inputs, expected {}",
+                inputs.len(),
+                spec.inputs.len()
+            )));
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&spec.inputs) {
+            let n: usize = shape.iter().product();
+            if data.len() != n {
+                return Err(RtError(format!(
+                    "{name}: input length {} != shape {:?}",
+                    data.len(),
+                    shape
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims).map_err(RtError::of)?;
+            lits.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(RtError::of)?[0][0]
+            .to_literal_sync()
+            .map_err(RtError::of)?;
+        // Lowered with return_tuple=True: the result is always a tuple.
+        let parts = result.to_tuple().map_err(RtError::of)?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f64>().map_err(RtError::of)?);
+        }
+        Ok(out)
+    }
+}

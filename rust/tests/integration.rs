@@ -8,6 +8,7 @@
 //! cases, shrink-free but reproducible by seed.
 
 use sssr::coordinator::{run_cluster_smxdv, run_cluster_smxsv};
+use sssr::experiments::{ColFmt, Column, ExperimentSpec, Point, Record, Runner};
 use sssr::formats::{ops, SpVec};
 use sssr::kernels::driver::*;
 use sssr::kernels::{IdxWidth, Variant};
@@ -154,8 +155,47 @@ fn calibration_issue_bounds_and_arbitration_limits() {
     }
 }
 
-/// PJRT golden path (skipped when artifacts are absent so `cargo test`
-/// works before `make artifacts`).
+/// The experiment engine drives real simulator runs deterministically:
+/// a small sV×dV sweep produces byte-identical JSON under any --jobs.
+#[test]
+fn experiment_engine_is_deterministic_over_real_sims() {
+    let spec = ExperimentSpec {
+        name: "itest",
+        title: "integration determinism sweep".into(),
+        columns: vec![
+            Column::new("nnz", "nnz", 8, ColFmt::Int),
+            Column::new("utilization", "util", 8, ColFmt::Fixed(3)),
+        ],
+        points: [8usize, 32, 96].iter().map(|&n| Point::default().nnz(n)).collect(),
+        measure: Box::new(|p| {
+            let nnz = p.nnz.unwrap();
+            let dim = 512;
+            let a = matgen::random_spvec(40_000 + nnz as u64, dim, nnz);
+            let b = matgen::random_dense(41_000, dim);
+            let (dot, rep) = run_svxdv(Variant::Sssr, IdxWidth::U16, &a, &b, false);
+            vec![Record::new("itest")
+                .int("nnz", nnz as i64)
+                .num("dot", dot)
+                .int("cycles", rep.cycles as i64)
+                .num("utilization", rep.utilization)]
+        }),
+    };
+    let serial: Vec<String> =
+        Runner::new(1).run(&spec).iter().map(|r| r.to_json_line()).collect();
+    let parallel: Vec<String> =
+        Runner::new(3).run(&spec).iter().map(|r| r.to_json_line()).collect();
+    assert_eq!(serial, parallel);
+    assert_eq!(serial.len(), 3);
+    // and the lines parse back as records
+    for line in &serial {
+        let r = Record::from_json_line(line).unwrap();
+        assert!(r.f64("cycles").unwrap() > 0.0);
+    }
+}
+
+/// PJRT golden path (needs `--features xla`; skipped when artifacts are
+/// absent so `cargo test` works before `make artifacts`).
+#[cfg(feature = "xla")]
 #[test]
 fn golden_models_match_simulator() {
     let path = std::path::Path::new("artifacts/manifest.json");
