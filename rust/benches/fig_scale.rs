@@ -1,0 +1,23 @@
+//! Regenerates the system-layer scaling sweeps (`scale` = multi-cluster
+//! SpMV, `scale_sv` = SpMSpV) through the parallel experiment engine and
+//! writes `BENCH_scale.json` / `BENCH_scale_sv.json` next to the other
+//! bench trajectories. Quick sweeps by default; REPRO_FULL=1 for the
+//! full corpus and channel counts.
+use std::path::Path;
+
+use sssr::experiments::{write_json, Runner};
+use sssr::harness as h;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let runner = Runner::new(0);
+    // lazy constructors: one spec's captured workloads live at a time
+    for name in ["scale", "scale_sv"] {
+        let spec = h::spec_by_name(name).expect("scale spec registered");
+        let recs = runner.run(&spec);
+        spec.print(&recs);
+        let path = write_json(Path::new("."), &spec, &recs).expect("writing BENCH json");
+        println!("[wrote {}]", path.display());
+    }
+    println!("\n[fig_scale bench wall time: {:.1}s]", t0.elapsed().as_secs_f64());
+}

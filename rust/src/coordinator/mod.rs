@@ -14,15 +14,24 @@
 //! two TCDM buffers (compute on one while the DMA prefetches the other —
 //! the barrier only awaits *prior* phases), and the result is written
 //! back to DRAM at the end.
+//!
+//! Planning ([`plan_job`]) is split from execution: it lays the DRAM
+//! image into an arbitrary [`MemPort`] region, so the same plan drives
+//! both the standalone one-cluster topology here and the row-sharded
+//! multi-cluster systems of [`crate::kernels::multi`].
 
 use crate::formats::{ops, Csr, SpVec};
 use crate::kernels::sparse_dense::{cfg_imm, emit_smxdv_rows_sssr, N_ACC};
 use crate::kernels::{Arena, IdxWidth, Report, Variant};
 use crate::sim::asm::Asm;
+use crate::sim::dram::Dram;
 use crate::sim::isa::{ssr_mode, SsrField as F, *};
-use crate::sim::{Cluster, ClusterCfg, DmaJob, DmaSchedule, Program};
+use crate::sim::{Cluster, ClusterCfg, DmaJob, DmaSchedule, MemPort, Program};
 
-const LIMIT: u64 = 2_000_000_000;
+/// Deadlock guard for cluster/system kernel runs (shared with the
+/// multi-cluster drivers in [`crate::kernels::multi`], whose 1-cluster
+/// runs must stay regression-identical to this path).
+pub(crate) const LIMIT: u64 = 2_000_000_000;
 
 /// Per-core, per-phase job descriptor (7 x u64, written by the DMCC).
 const DESC_BYTES: u64 = 56;
@@ -317,6 +326,24 @@ pub struct ClusterRun {
     pub chunks: usize,
 }
 
+/// The resident vector operand of a cluster kernel: the dense vector of
+/// sM×dV or the sparse fiber of sM×sV.
+#[derive(Clone, Copy)]
+pub(crate) enum Operand<'a> {
+    Dense(&'a [f64]),
+    Fiber(&'a SpVec),
+}
+
+/// One cluster's slice of backing main memory: the planner lays the
+/// whole DRAM image (matrix, operand, descriptors, result) inside
+/// `base..base + bytes`. Standalone runs span the whole private DRAM;
+/// sharded system runs give each cluster a disjoint region of the
+/// shared HBM.
+pub(crate) struct MemRegion {
+    pub base: u64,
+    pub bytes: u64,
+}
+
 /// DRAM image layout.
 struct DramImage {
     m_vals: u64,
@@ -329,71 +356,110 @@ struct DramImage {
     desc: u64,
 }
 
+/// Everything the DMCC prepares before a cluster run: the worker
+/// program, per-core register presets, and the double-buffered DMA
+/// schedule, with the operands and descriptor tables already placed in
+/// backing memory. Produced by [`plan_job`], applied via
+/// [`PlannedJob::apply`].
+pub(crate) struct PlannedJob {
+    pub prog: Program,
+    pub schedule: DmaSchedule,
+    /// Register presets per core (descriptor pointers, operand bases).
+    pub core_regs: Vec<Vec<(u8, i64)>>,
+    /// DRAM address the result vector is written back to.
+    pub c_out: u64,
+    /// Rows produced by this job.
+    pub nrows: usize,
+    pub chunks: usize,
+}
+
+impl PlannedJob {
+    pub(crate) fn apply(&self, cl: &mut Cluster) {
+        for (c, regs) in self.core_regs.iter().enumerate() {
+            for &(r, v) in regs {
+                cl.set_reg(c, r, v);
+            }
+        }
+        cl.set_dma_schedule(self.schedule.clone());
+    }
+}
+
 fn place_in_dram(
-    cl: &mut Cluster,
+    mem: &mut dyn MemPort,
+    region: &MemRegion,
     m: &Csr,
     iw: IdxWidth,
-    dense: Option<&[f64]>,
-    fiber: Option<&SpVec>,
+    operand: Operand,
 ) -> DramImage {
-    let mut a = Arena::new(0, cl.dram.size() as u64);
+    assert_eq!(region.base % 8, 0, "DRAM image base must be 8B-aligned");
+    assert!(
+        (region.base + region.bytes) as usize <= mem.size(),
+        "memory region exceeds backing store"
+    );
+    let mut a = Arena::new(region.base, region.base + region.bytes);
     let m_vals = a.alloc_f64(m.nnz() as u64);
     let m_idcs = a.alloc_idx(m.nnz() as u64, iw);
     let m_ptrs = a.alloc(4 * (m.nrows as u64 + 1) + 8);
     let v_vals;
     let mut v_idcs = 0;
-    if let Some(d) = dense {
-        v_vals = a.alloc_f64(d.len() as u64);
-    } else {
-        let f = fiber.unwrap();
-        v_vals = a.alloc_f64(f.nnz() as u64);
-        v_idcs = a.alloc_idx(f.nnz() as u64, iw);
+    match operand {
+        Operand::Dense(d) => {
+            v_vals = a.alloc_f64(d.len() as u64);
+        }
+        Operand::Fiber(f) => {
+            v_vals = a.alloc_f64(f.nnz() as u64);
+            v_idcs = a.alloc_idx(f.nnz() as u64, iw);
+        }
     }
     let c_out = a.alloc_f64(m.nrows as u64);
     let desc = a.alloc(DESC_SLOT * 4096); // up to 4096 phases
     for (i, &v) in m.vals.iter().enumerate() {
-        cl.dram.poke_f64(m_vals + 8 * i as u64, v);
+        mem.poke_f64(m_vals + 8 * i as u64, v);
     }
     for (i, &x) in m.idcs.iter().enumerate() {
-        cl.dram.poke(m_idcs + iw.bytes() * i as u64, iw.bytes(), x as u64);
+        mem.poke(m_idcs + iw.bytes() * i as u64, iw.bytes(), x as u64);
     }
     for (i, &p) in m.ptrs.iter().enumerate() {
-        cl.dram.poke(m_ptrs + 4 * i as u64, 4, p as u64);
+        mem.poke(m_ptrs + 4 * i as u64, 4, p as u64);
     }
-    if let Some(d) = dense {
-        for (i, &v) in d.iter().enumerate() {
-            cl.dram.poke_f64(v_vals + 8 * i as u64, v);
+    match operand {
+        Operand::Dense(d) => {
+            for (i, &v) in d.iter().enumerate() {
+                mem.poke_f64(v_vals + 8 * i as u64, v);
+            }
         }
-    } else {
-        let f = fiber.unwrap();
-        for (i, &v) in f.vals.iter().enumerate() {
-            cl.dram.poke_f64(v_vals + 8 * i as u64, v);
-        }
-        for (i, &x) in f.idcs.iter().enumerate() {
-            cl.dram.poke(v_idcs + iw.bytes() * i as u64, iw.bytes(), x as u64);
+        Operand::Fiber(f) => {
+            for (i, &v) in f.vals.iter().enumerate() {
+                mem.poke_f64(v_vals + 8 * i as u64, v);
+            }
+            for (i, &x) in f.idcs.iter().enumerate() {
+                mem.poke(v_idcs + iw.bytes() * i as u64, iw.bytes(), x as u64);
+            }
         }
     }
     DramImage { m_vals, m_idcs, m_ptrs, v_vals, v_idcs, c_out, desc }
 }
 
-/// Shared cluster run implementation for sM×dV / sM×sV.
-fn run_cluster(
+/// Plan one cluster's job: chunk the matrix, lay out TCDM and the DRAM
+/// image inside `region`, build the worker program and double-buffered
+/// DMA schedule, and write the per-phase descriptor tables into `mem`.
+/// Pure setup — nothing here advances simulated time.
+pub(crate) fn plan_job(
     variant: Variant,
     iw: IdxWidth,
     m: &Csr,
-    dense: Option<&[f64]>,
-    fiber: Option<&SpVec>,
+    operand: Operand,
     cfg: &ClusterCfg,
-    payload: u64,
-) -> ClusterRun {
+    mem: &mut dyn MemPort,
+    region: MemRegion,
+) -> PlannedJob {
     let cores = cfg.cores;
     let tcdm = cfg.tcdm_bytes as u64;
 
     // --- chunk planning against the available buffer budget -----------
-    let resident = match (dense, fiber) {
-        (Some(d), _) => d.len() as u64 * 8,
-        (_, Some(f)) => f.nnz() as u64 * (8 + iw.bytes()) + 24,
-        _ => unreachable!(),
+    let resident = match operand {
+        Operand::Dense(d) => d.len() as u64 * 8,
+        Operand::Fiber(f) => f.nnz() as u64 * (8 + iw.bytes()) + 24,
     };
     // resident vector + result + 2 descriptor slots + slack
     let reserve = resident + m.nrows as u64 * 8 + 2 * DESC_SLOT + 1024;
@@ -418,12 +484,15 @@ fn run_cluster(
 
     // --- TCDM layout ----------------------------------------------------
     let mut ar = Arena::new(0, tcdm);
-    let vec_vals = ar.alloc_f64(match (dense, fiber) {
-        (Some(d), _) => d.len() as u64,
-        (_, Some(f)) => f.nnz() as u64,
-        _ => unreachable!(),
+    let vec_vals = ar.alloc_f64(match operand {
+        Operand::Dense(d) => d.len() as u64,
+        Operand::Fiber(f) => f.nnz() as u64,
     });
-    let vec_idcs = if let Some(f) = fiber { ar.alloc_idx(f.nnz() as u64, iw) } else { 0 };
+    let vec_idcs = if let Operand::Fiber(f) = operand {
+        ar.alloc_idx(f.nnz() as u64, iw)
+    } else {
+        0
+    };
     let c_base = ar.alloc_f64(m.nrows as u64);
     let desc_buf = [ar.alloc(DESC_SLOT), ar.alloc(DESC_SLOT)];
     let max_rows = chunks.iter().map(|c| c.rows).max().unwrap() as u64;
@@ -448,24 +517,27 @@ fn run_cluster(
     };
     let _ = layout.buf_bytes;
 
-    // --- programs + cluster ---------------------------------------------
-    let prog = match dense.is_some() {
-        true => build_worker_smxdv(variant, iw, nphases),
-        false => build_worker_smxsv(variant, iw, nphases),
+    // --- program + DRAM image -------------------------------------------
+    let prog = match operand {
+        Operand::Dense(_) => build_worker_smxdv(variant, iw, nphases),
+        Operand::Fiber(_) => build_worker_smxsv(variant, iw, nphases),
     };
-    let mut cl = Cluster::new(cfg.clone(), vec![prog; cores]);
-    let img = place_in_dram(&mut cl, m, iw, dense, fiber);
+    let img = place_in_dram(mem, &region, m, iw, operand);
 
+    let mut core_regs: Vec<Vec<(u8, i64)>> = Vec::with_capacity(cores);
     for c in 0..cores {
         let d0 = layout.desc_buf[0] + c as u64 * DESC_BYTES;
         let d1 = layout.desc_buf[1] + c as u64 * DESC_BYTES;
-        cl.set_reg(c, S0, d0 as i64);
-        cl.set_reg(c, S7, (d0 ^ d1) as i64);
-        cl.set_reg(c, A2, layout.vec_vals as i64);
-        if let Some(f) = fiber {
-            cl.set_reg(c, S8, layout.vec_idcs as i64);
-            cl.set_reg(c, S9, f.nnz() as i64);
+        let mut regs = vec![
+            (S0, d0 as i64),
+            (S7, (d0 ^ d1) as i64),
+            (A2, layout.vec_vals as i64),
+        ];
+        if let Operand::Fiber(f) = operand {
+            regs.push((S8, layout.vec_idcs as i64));
+            regs.push((S9, f.nnz() as i64));
         }
+        core_regs.push(regs);
     }
 
     // --- descriptor table + DMA schedule (alignment-aware) ---------------
@@ -495,7 +567,7 @@ fn run_cluster(
                 (4, layout.c_base + first_row as u64 * 8),
                 (5, my_nnz),
             ] {
-                cl.dram.poke(base + 8 * slot, 8, val);
+                mem.poke(base + 8 * slot, 8, val);
             }
         }
         // transfers: submitted with phase k (phase 0 also carries the
@@ -507,39 +579,77 @@ fn run_cluster(
             DESC_SLOT,
             true,
         ));
-        jobs.push(DmaJob::flat(img.m_vals + ch.nnz0 as u64 * 8, layout.buf_vals[buf], ch.nnz as u64 * 8, true));
-        let idx_bytes = (idx_off + ch.nnz as u64 * iw.bytes() + 7) & !7;
-        jobs.push(DmaJob::flat(idx_src_al, layout.buf_idcs[buf], idx_bytes, true));
+        // all-empty-row chunks (possible in a sparse shard) move no
+        // value/index bytes; a zero-length DMA job is invalid
+        if ch.nnz > 0 {
+            jobs.push(DmaJob::flat(img.m_vals + ch.nnz0 as u64 * 8, layout.buf_vals[buf], ch.nnz as u64 * 8, true));
+            let idx_bytes = (idx_off + ch.nnz as u64 * iw.bytes() + 7) & !7;
+            jobs.push(DmaJob::flat(idx_src_al, layout.buf_idcs[buf], idx_bytes, true));
+        }
         let ptr_bytes = (ptr_off + (ch.rows as u64 + 1) * 4 + 7) & !7;
         jobs.push(DmaJob::flat(ptr_src_al, layout.buf_ptrs[buf], ptr_bytes, true));
     }
     // resident vector with phase 0 (the initial transfer that cannot be
     // overlapped, §4.2)
-    if let Some(d) = dense {
-        phases[0].insert(0, DmaJob::flat(img.v_vals, layout.vec_vals, d.len() as u64 * 8, true));
-    } else {
-        let f = fiber.unwrap();
-        phases[0].insert(0, DmaJob::flat(img.v_vals, layout.vec_vals, f.nnz() as u64 * 8, true));
-        phases[0].insert(
-            1,
-            DmaJob::flat(img.v_idcs, layout.vec_idcs, (f.nnz() as u64 * iw.bytes() + 15) & !7, true),
-        );
+    match operand {
+        Operand::Dense(d) => {
+            phases[0].insert(0, DmaJob::flat(img.v_vals, layout.vec_vals, d.len() as u64 * 8, true));
+        }
+        Operand::Fiber(f) if f.nnz() > 0 => {
+            phases[0].insert(0, DmaJob::flat(img.v_vals, layout.vec_vals, f.nnz() as u64 * 8, true));
+            phases[0].insert(
+                1,
+                DmaJob::flat(img.v_idcs, layout.vec_idcs, (f.nnz() as u64 * iw.bytes() + 15) & !7, true),
+            );
+        }
+        Operand::Fiber(_) => {} // empty operand fiber: nothing to stage
     }
     // phases[nphases] stays empty (release before the last compute);
     // the final barrier triggers the result writeback.
     phases[nphases as usize + 1] =
         vec![DmaJob::flat(img.c_out, layout.c_base, m.nrows as u64 * 8, false)];
-    cl.set_dma_schedule(DmaSchedule { phases });
 
-    let cycles = cl.run(LIMIT);
+    PlannedJob {
+        prog,
+        schedule: DmaSchedule { phases },
+        core_regs,
+        c_out: img.c_out,
+        nrows: m.nrows,
+        chunks: chunks.len(),
+    }
+}
+
+/// Shared standalone-cluster run implementation for sM×dV / sM×sV: one
+/// cluster in front of its own private DRAM channel (the paper's §4.2
+/// topology). The multi-cluster counterpart lives in
+/// [`crate::kernels::multi`] and shares [`plan_job`].
+fn run_cluster(
+    variant: Variant,
+    iw: IdxWidth,
+    m: &Csr,
+    operand: Operand,
+    cfg: &ClusterCfg,
+    payload: u64,
+) -> ClusterRun {
+    let mut dram = Dram::with_params(
+        cfg.dram_bytes,
+        cfg.dram_gbps_pin,
+        cfg.dram_latency,
+        cfg.ic_latency,
+    );
+    let bytes = dram.size() as u64;
+    let job = plan_job(variant, iw, m, operand, cfg, &mut dram, MemRegion { base: 0, bytes });
+    let mut cl = Cluster::new(cfg.clone(), vec![job.prog.clone(); cfg.cores]);
+    job.apply(&mut cl);
+    let cycles = cl.run(&mut dram, LIMIT);
     let stats = cl.stats();
     let result: Vec<f64> = (0..m.nrows)
-        .map(|r| cl.dram.peek_f64(img.c_out + 8 * r as u64))
+        .map(|r| dram.peek_f64(job.c_out + 8 * r as u64))
         .collect();
     ClusterRun {
         result,
         report: Report::from_run(cycles, payload, stats),
-        chunks: chunks.len(),
+        chunks: job.chunks,
     }
 }
 
@@ -547,7 +657,7 @@ fn run_cluster(
 /// the dense oracle.
 pub fn run_cluster_smxdv(variant: Variant, iw: IdxWidth, m: &Csr, b: &[f64], cfg: &ClusterCfg) -> ClusterRun {
     assert_eq!(m.ncols, b.len());
-    let run = run_cluster(variant, iw, m, Some(b), None, cfg, m.nnz() as u64);
+    let run = run_cluster(variant, iw, m, Operand::Dense(b), cfg, m.nnz() as u64);
     let want = ops::smxdv(m, b);
     for (i, (g, w)) in run.result.iter().zip(&want).enumerate() {
         let tol = 1e-9 * w.abs().max(1.0);
@@ -562,7 +672,7 @@ pub fn run_cluster_smxsv(variant: Variant, iw: IdxWidth, m: &Csr, b: &SpVec, cfg
     let payload: u64 = (0..m.nrows)
         .map(|r| ops::svosv(&m.row_spvec(r), b).nnz() as u64)
         .sum();
-    let run = run_cluster(variant, iw, m, None, Some(b), cfg, payload);
+    let run = run_cluster(variant, iw, m, Operand::Fiber(b), cfg, payload);
     let want = ops::smxsv(m, b);
     for (i, (g, w)) in run.result.iter().zip(&want).enumerate() {
         let tol = 1e-9 * w.abs().max(1.0);

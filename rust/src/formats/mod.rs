@@ -156,10 +156,8 @@ impl Csr {
                     continue;
                 }
             }
-            // close out rows up to r
-            while (ptrs.len() as u32) <= r {
-                unreachable!();
-            }
+            // rows are closed out by the ptr backfill below
+            debug_assert!((r as usize) < nrows, "triplet row {r} out of range");
             idcs.push(c);
             vals.push(v);
             for p in &mut ptrs[r as usize + 1..] {
@@ -213,6 +211,59 @@ impl Csr {
     pub fn row_spvec(&self, r: usize) -> SpVec {
         let (idx, val) = self.row(r);
         SpVec { dim: self.ncols, idcs: idx.to_vec(), vals: val.to_vec() }
+    }
+
+    /// Split the row space into `k` contiguous, nnz-balanced shards (the
+    /// unit of multi-cluster SpMV work distribution): shard `i` gets the
+    /// rows up to the point where the cumulative nonzero count crosses
+    /// `(i+1)/k` of the total, and every shard gets at least one row.
+    /// The ranges are disjoint and cover `0..nrows` exactly.
+    pub fn row_partition(&self, k: usize) -> Vec<std::ops::Range<usize>> {
+        assert!(k >= 1, "need at least one shard");
+        assert!(
+            k <= self.nrows,
+            "cannot split {} rows into {k} shards",
+            self.nrows
+        );
+        let total = self.nnz();
+        let mut out = Vec::with_capacity(k);
+        let mut r0 = 0usize;
+        for i in 0..k {
+            let r1 = if i == k - 1 {
+                self.nrows
+            } else {
+                // leave at least one row for each remaining shard
+                let cap = self.nrows - (k - 1 - i);
+                let goal = (total * (i + 1)).div_ceil(k);
+                let mut r1 = r0 + 1;
+                while r1 < cap && (self.ptrs[r1] as usize) < goal {
+                    r1 += 1;
+                }
+                r1
+            };
+            out.push(r0..r1);
+            r0 = r1;
+        }
+        out
+    }
+
+    /// Extract the contiguous row range `rows` as its own CSR over the
+    /// same column space (shard view for the multi-cluster drivers).
+    pub fn slice_rows(&self, rows: std::ops::Range<usize>) -> Csr {
+        assert!(rows.start <= rows.end && rows.end <= self.nrows);
+        let lo = self.ptrs[rows.start] as usize;
+        let hi = self.ptrs[rows.end] as usize;
+        let ptrs = self.ptrs[rows.start..=rows.end]
+            .iter()
+            .map(|&p| p - lo as u32)
+            .collect();
+        Csr::new(
+            rows.len(),
+            self.ncols,
+            ptrs,
+            self.idcs[lo..hi].to_vec(),
+            self.vals[lo..hi].to_vec(),
+        )
     }
 }
 
@@ -403,5 +454,125 @@ mod tests {
         assert_eq!(v.idcs, vec![1, 2]);
         assert_eq!(v.vals, vec![3.0, 4.0]);
         assert_eq!(v.dim, 3);
+    }
+
+    #[test]
+    fn transpose_roundtrip_on_random_rectangular() {
+        let m = crate::matgen::random_csr(71, 60, 110, 900);
+        let rt = m.transpose().transpose();
+        assert_eq!(rt, m);
+        // transpose swaps the shape and preserves every entry
+        let t = m.transpose();
+        assert_eq!((t.nrows, t.ncols, t.nnz()), (m.ncols, m.nrows, m.nnz()));
+        for r in 0..m.nrows {
+            let (idx, val) = m.row(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                let (ti, tv) = t.row(c as usize);
+                let k = ti.iter().position(|&x| x as usize == r).expect("entry lost");
+                assert_eq!(tv[k], v);
+            }
+        }
+    }
+
+    #[test]
+    fn csc_to_csr_is_identity() {
+        for seed in [5, 6] {
+            let m = crate::matgen::random_csr(seed, 40, 70, 500);
+            assert_eq!(Csc::from_csr(&m).to_csr(), m);
+        }
+        // including matrices with empty rows and columns
+        let sparse = Csr::new(4, 4, vec![0, 0, 1, 1, 2], vec![2, 0], vec![1.5, -2.5]);
+        assert_eq!(Csc::from_csr(&sparse).to_csr(), sparse);
+    }
+
+    #[test]
+    fn bcsr_from_csr_with_empty_rows() {
+        // rows 1 and 3 empty; block 2 pads them inside nonzero block rows
+        let m = Csr::new(
+            5,
+            6,
+            vec![0, 2, 2, 3, 3, 4],
+            vec![0, 5, 2, 1],
+            vec![1.0, 2.0, 3.0, 4.0],
+        );
+        let b = Bcsr::from_csr(&m, 2);
+        let d = b.to_dense();
+        assert_eq!(d[0][0], 1.0);
+        assert_eq!(d[0][5], 2.0);
+        assert_eq!(d[2][2], 3.0);
+        assert_eq!(d[4][1], 4.0);
+        // everything not in the original is zero
+        let dense_m = m.to_dense();
+        for (r, row) in dense_m.iter().enumerate() {
+            for (c, &v) in row.iter().enumerate() {
+                assert_eq!(d[r][c], v, "mismatch at ({r},{c})");
+            }
+        }
+        // an all-empty matrix produces zero blocks
+        let empty = Csr::new(3, 3, vec![0, 0, 0, 0], vec![], vec![]);
+        assert_eq!(Bcsr::from_csr(&empty, 2).nnz_blocks(), 0);
+    }
+
+    #[test]
+    fn spvec_dense_roundtrip_preserves_signs_and_gaps() {
+        let d = vec![0.0, -1.25, 0.0, 0.0, 3.5, 0.0, 1e-300, 0.0];
+        let s = SpVec::from_dense(&d);
+        assert_eq!(s.nnz(), 3);
+        assert_eq!(s.idcs, vec![1, 4, 6]);
+        assert_eq!(s.to_dense(), d);
+        // and back through from_dense again
+        assert_eq!(SpVec::from_dense(&s.to_dense()), s);
+        let empty = SpVec::from_dense(&[0.0; 16]);
+        assert_eq!(empty.nnz(), 0);
+        assert_eq!(empty.to_dense(), vec![0.0; 16]);
+    }
+
+    #[test]
+    fn row_partition_covers_and_balances() {
+        let m = crate::matgen::random_csr(72, 203, 64, 4000);
+        for k in [1, 2, 3, 8] {
+            let parts = m.row_partition(k);
+            assert_eq!(parts.len(), k);
+            assert_eq!(parts[0].start, 0);
+            assert_eq!(parts[k - 1].end, m.nrows);
+            for w in parts.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "shards must be contiguous");
+            }
+            for p in &parts {
+                assert!(!p.is_empty(), "every shard needs at least one row");
+            }
+            // nnz balance within one max row of ideal
+            let max_row = (0..m.nrows).map(|r| m.row(r).0.len()).max().unwrap();
+            let ideal = m.nnz() as f64 / k as f64;
+            for p in &parts {
+                let nnz = (m.ptrs[p.end] - m.ptrs[p.start]) as usize;
+                assert!(
+                    (nnz as f64 - ideal).abs() <= ideal + max_row as f64 + 1.0,
+                    "shard {p:?} nnz {nnz} too far from ideal {ideal}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn slice_rows_matches_dense_view() {
+        let m = crate::matgen::random_csr(73, 37, 29, 300);
+        let parts = m.row_partition(4);
+        let mut rebuilt_rows = 0;
+        for p in parts {
+            let s = m.slice_rows(p.clone());
+            assert_eq!(s.ncols, m.ncols);
+            assert_eq!(s.nrows, p.len());
+            for (local, global) in p.clone().enumerate() {
+                assert_eq!(s.row(local), m.row(global));
+            }
+            rebuilt_rows += s.nrows;
+        }
+        assert_eq!(rebuilt_rows, m.nrows);
+        // degenerate slices
+        let whole = m.slice_rows(0..m.nrows);
+        assert_eq!(whole, m);
+        let none = m.slice_rows(5..5);
+        assert_eq!(none.nnz(), 0);
     }
 }

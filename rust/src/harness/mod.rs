@@ -18,11 +18,12 @@ use crate::kernels::driver::{
     run_smxdv_sized, run_smxsv_sized, run_svpdv, run_svpdv_unchecked, run_svpsv, run_svxdv,
     run_svxsv,
 };
+use crate::kernels::multi::{run_system_smxdv, run_system_smxsv, SystemRun};
 use crate::kernels::{IdxWidth, Variant};
 use crate::matgen;
 use crate::model::energy::EnergyModel;
 use crate::model::{streamer_area, streamer_min_period_ps, SlotKind, StreamerCfg};
-use crate::sim::ClusterCfg;
+use crate::sim::{ClusterCfg, SystemCfg};
 
 /// Enlarged single-CC TCDM for the §4.1 "matrix fits the TCDM" runs.
 pub const BIG_TCDM: usize = 16 << 20;
@@ -557,6 +558,160 @@ pub fn spec_fig6b() -> ExperimentSpec {
 }
 
 // ======================================================================
+// scale — multi-cluster scaling on shared HBM channels (system layer)
+// ======================================================================
+
+/// Cluster counts swept by every `spec_scale_*` experiment.
+pub const SCALE_CLUSTERS: [usize; 4] = [1, 2, 4, 8];
+
+fn scale_channel_counts() -> Vec<usize> {
+    if full_mode() {
+        vec![1, 2, 4, 8]
+    } else {
+        vec![1, 2]
+    }
+}
+
+/// Matrices for the scaling sweeps: bandwidth-hungry corpus members
+/// with enough rows to shard eight ways.
+fn scale_corpus() -> Vec<matgen::CorpusEntry> {
+    let mut v = vec![
+        matgen::CorpusEntry {
+            name: "rand2k_64k",
+            matrix: matgen::random_csr(16, 2048, 2048, 65536),
+        },
+        matgen::CorpusEntry { name: "mycielskian11", matrix: matgen::mycielskian(11) },
+    ];
+    if full_mode() {
+        v.push(matgen::CorpusEntry {
+            name: "rand2k_128k",
+            matrix: matgen::random_csr(17, 2048, 2048, 131072),
+        });
+        v.push(matgen::CorpusEntry { name: "mycielskian12", matrix: matgen::mycielskian(12) });
+    }
+    v
+}
+
+fn scale_columns() -> Vec<Column> {
+    vec![
+        Column::new("matrix", "matrix", 14, ColFmt::Str),
+        Column::new("channels", "chan", 5, ColFmt::Int),
+        Column::new("clusters", "clus", 5, ColFmt::Int),
+        Column::new("cycles", "cycles", 12, ColFmt::Int),
+        Column::new("speedup", "speedup", 8, ColFmt::FixedX(2)),
+        Column::new("efficiency", "par eff", 8, ColFmt::Fixed(2)),
+        Column::new("queue_cycles", "hbm queue", 12, ColFmt::Int),
+        Column::new("skew_cycles", "skew", 9, ColFmt::Int),
+    ]
+}
+
+fn scale_record(
+    name: &'static str,
+    matrix: &str,
+    channels: usize,
+    clusters: usize,
+    base_cycles: u64,
+    run: &SystemRun,
+) -> Record {
+    let speedup = base_cycles as f64 / run.report.cycles as f64;
+    Record::new(name)
+        .str("matrix", matrix)
+        .int("channels", channels as i64)
+        .int("clusters", clusters as i64)
+        .int("cycles", run.report.cycles as i64)
+        .num("speedup", speedup)
+        .num("efficiency", speedup / clusters as f64)
+        .int(
+            "queue_cycles",
+            run.shards.iter().map(|s| s.hbm.queue_cycles).sum::<u64>() as i64,
+        )
+        .int("skew_cycles", run.reduction.skew_cycles as i64)
+        .int("hbm_bytes", run.report.stats.dram_bytes as i64)
+        .num("utilization", run.utilization())
+}
+
+/// Shared shape of the `scale`/`scale_sv` sweeps: one grid point per
+/// (matrix, channel count); each point runs the SSSR kernel at every
+/// cluster count and reports speedups against the matrix's 1-cluster
+/// run. That baseline is channel-count-invariant (a single cluster
+/// always maps to channel 0) and the most expensive run of the sweep,
+/// so it is simulated once per matrix and shared across that matrix's
+/// channel points through a `OnceLock` — value-deterministic, so the
+/// records stay byte-identical for every `--jobs`.
+fn spec_scale_kernel(name: &'static str, title: String, smxsv: bool) -> ExperimentSpec {
+    let corpus = scale_corpus();
+    let mut points = vec![];
+    for (i, e) in corpus.iter().enumerate() {
+        for &ch in &scale_channel_counts() {
+            points.push(Point::at(i).label(e.name).x(ch as f64));
+        }
+    }
+    let baselines: Vec<std::sync::OnceLock<SystemRun>> =
+        corpus.iter().map(|_| std::sync::OnceLock::new()).collect();
+    ExperimentSpec {
+        name,
+        title,
+        columns: scale_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let i = p.idx.unwrap();
+            let e = &corpus[i];
+            let channels = p.x.unwrap() as usize;
+            let dense;
+            let fiber;
+            if smxsv {
+                let nnz = ((0.01 * e.matrix.ncols as f64) as usize).max(1);
+                fiber = Some(matgen::random_spvec(1800 + nnz as u64, e.matrix.ncols, nnz));
+                dense = None;
+            } else {
+                dense = Some(matgen::random_dense(1700, e.matrix.ncols));
+                fiber = None;
+            }
+            let run_at = |clusters: usize, channels: usize| -> SystemRun {
+                let cfg = SystemCfg::paper_system(clusters, channels);
+                match (&dense, &fiber) {
+                    (Some(b), _) => {
+                        run_system_smxdv(Variant::Sssr, IdxWidth::U16, &e.matrix, b, &cfg)
+                    }
+                    (_, Some(v)) => {
+                        run_system_smxsv(Variant::Sssr, IdxWidth::U16, &e.matrix, v, &cfg)
+                    }
+                    _ => unreachable!(),
+                }
+            };
+            let base = baselines[i].get_or_init(|| run_at(1, 1));
+            let mut out = vec![scale_record(name, e.name, channels, 1, base.report.cycles, base)];
+            for &clusters in &SCALE_CLUSTERS[1..] {
+                let run = run_at(clusters, channels);
+                let rec = scale_record(name, e.name, channels, clusters, base.report.cycles, &run);
+                out.push(rec);
+            }
+            out
+        }),
+    }
+}
+
+/// `scale`: multi-cluster SSSR SpMV (sM×dV) cycle counts and speedups
+/// over clusters × channels × matrices — the system layer's headline
+/// sweep (`repro sweep scale` → `BENCH_scale.json`).
+pub fn spec_scale() -> ExperimentSpec {
+    spec_scale_kernel(
+        "scale",
+        "scale: multi-cluster SpMV on shared HBM channels".into(),
+        false,
+    )
+}
+
+/// `scale_sv`: the SpMSpV (sM×sV) companion sweep.
+pub fn spec_scale_sv() -> ExperimentSpec {
+    spec_scale_kernel(
+        "scale_sv",
+        "scale_sv: multi-cluster SpMSpV on shared HBM channels (d_v=1%)".into(),
+        true,
+    )
+}
+
+// ======================================================================
 // Fig. 7 — area and timing (analytical model)
 // ======================================================================
 
@@ -826,9 +981,10 @@ pub fn spec_table3() -> ExperimentSpec {
 // ======================================================================
 
 /// Every figure sweep as a (name, constructor) pair, in `repro all`
-/// order. Construction generates the sweep's shared workloads (corpus,
+/// order (the paper figures plus the system-layer `scale` family).
+/// Construction generates the sweep's shared workloads (corpus,
 /// operands) eagerly, so build one spec at a time and drop it before
-/// the next — materializing all fourteen at once holds every workload
+/// the next — materializing all sixteen at once holds every workload
 /// in memory simultaneously. Tables 2/3 are available via
 /// [`spec_table2`]/[`spec_table3`] (Table 2's bottom row derives from
 /// Fig. 5a records, see [`table2_ours`]).
@@ -847,6 +1003,8 @@ pub const SPEC_BUILDERS: &[(&str, fn() -> ExperimentSpec)] = &[
     ("fig7c", spec_fig7c),
     ("fig8a", spec_fig8a),
     ("fig8b", spec_fig8b),
+    ("scale", spec_scale),
+    ("scale_sv", spec_scale_sv),
 ];
 
 /// Look up one figure spec constructor by name (`"fig4a"`, `"fig7b"`, …).
@@ -918,7 +1076,7 @@ mod tests {
 
     #[test]
     fn spec_registry_is_consistent() {
-        assert_eq!(SPEC_BUILDERS.len(), 14);
+        assert_eq!(SPEC_BUILDERS.len(), 16);
         for (n, build) in SPEC_BUILDERS {
             let s = build();
             assert_eq!(s.name, *n);

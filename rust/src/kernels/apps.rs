@@ -148,7 +148,7 @@ pub fn run_stencil1d(variant: Variant, iw: IdxWidth, st: &Stencil1d, grid: &[f64
     for (k, &(_, w)) in st.taps.iter().enumerate() {
         cl.ccs[0].fpu.regs[(FA0 + k as u8) as usize] = w;
     }
-    let cycles = cl.run(50_000_000);
+    let cycles = cl.run_isolated(50_000_000);
     let stats = cl.stats();
     let got = read_f64s(&cl.tcdm, out_a, n);
     let want = st.reference(grid);
@@ -230,7 +230,7 @@ pub fn run_codebook_decode(
     cl.set_reg(0, A1, cd as i64);
     cl.set_reg(0, A2, out as i64);
     cl.set_reg(0, A3, codes.len() as i64);
-    let cycles = cl.run(50_000_000);
+    let cycles = cl.run_isolated(50_000_000);
     let stats = cl.stats();
     let got = read_f64s(&cl.tcdm, out, codes.len());
     for (i, &c) in codes.iter().enumerate() {

@@ -115,7 +115,9 @@ impl Cc {
     }
 
     fn run(mut self, payload: u64) -> (Cluster, Report) {
-        let cycles = self.cl.run(LIMIT);
+        // §4.1 single-CC methodology: no DMA/DRAM traffic on the
+        // measured path, so no memory system is attached.
+        let cycles = self.cl.run_isolated(LIMIT);
         let stats = self.cl.stats();
         (self.cl, Report::from_run(cycles, payload, stats))
     }

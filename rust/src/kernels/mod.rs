@@ -17,6 +17,7 @@
 
 pub mod apps;
 pub mod driver;
+pub mod multi;
 pub mod sparse_dense;
 pub mod sparse_sparse;
 

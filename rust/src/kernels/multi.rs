@@ -1,0 +1,351 @@
+//! Row-sharded multi-cluster SpMV / SpMSpV over the system layer
+//! (§VII scale-out; the Occamy topology of many clusters on shared
+//! HBM2E channels).
+//!
+//! The matrix is split into contiguous, nnz-balanced row shards
+//! ([`Csr::row_partition`]); each cluster gets one shard, its own slice
+//! of the shared HBM address space, and its own double-buffered DMA
+//! schedule from the same planner the standalone cluster uses
+//! ([`crate::coordinator`]). All clusters run concurrently through
+//! [`System`], contending for the configured HBM channels; with one
+//! cluster and one channel the run is cycle-identical to the standalone
+//! topology (pinned by the regression tests below).
+//!
+//! Row sharding keeps output rows exclusive, so the cross-cluster
+//! "reduction" is a pure gather: each cluster writes its result slice
+//! back to HBM and the host concatenates. [`ReduceStats`] accounts for
+//! that explicitly (writeback bytes, zero combine FLOPs, load-balance
+//! skew) so future column-sharded dataflows report through the same
+//! structure.
+
+use std::ops::Range;
+
+use crate::coordinator::{plan_job, MemRegion, Operand, PlannedJob, LIMIT};
+use crate::formats::{ops, Csr, SpVec};
+use crate::sim::{Cluster, Hbm, HbmClusterStats, RunStats, System, SystemCfg};
+
+use super::{IdxWidth, Report, Variant};
+
+/// One cluster's outcome within a sharded run.
+pub struct ShardRun {
+    /// Global row range this cluster owned.
+    pub rows: Range<usize>,
+    /// Cycle at which this cluster finished (including its result
+    /// writeback).
+    pub cycles: u64,
+    pub report: Report,
+    /// This cluster's HBM traffic and queueing (contention) counters.
+    pub hbm: HbmClusterStats,
+    pub chunks: usize,
+}
+
+/// Cross-cluster reduction/gather accounting.
+pub struct ReduceStats {
+    /// Result bytes written back to HBM across all clusters.
+    pub writeback_bytes: u64,
+    /// FLOPs spent combining shard results (0 for row sharding: rows
+    /// are exclusive).
+    pub combine_flops: u64,
+    /// Finish-cycle spread between the fastest and slowest shard (the
+    /// load-imbalance cost the max-cycle total absorbs).
+    pub skew_cycles: u64,
+}
+
+/// Outcome of a sharded multi-cluster run.
+pub struct SystemRun {
+    pub result: Vec<f64>,
+    /// Aggregate report: `cycles` = slowest cluster, `payload` = whole
+    /// matrix, utilization normalized over all cores of all clusters.
+    pub report: Report,
+    pub shards: Vec<ShardRun>,
+    pub reduction: ReduceStats,
+}
+
+impl SystemRun {
+    /// System-wide FPU utilization: payload FLOPs per core-cycle over
+    /// every core of every cluster (the aggregate stats carry the total
+    /// core count).
+    pub fn utilization(&self) -> f64 {
+        self.report.payload as f64 / (self.report.cycles as f64 * self.report.stats.cores as f64)
+    }
+}
+
+/// Accumulate one cluster's stats into a system aggregate. The
+/// exhaustive destructuring (no `..`) makes the compiler flag any field
+/// later added to [`RunStats`] instead of silently dropping it.
+fn add_stats(t: &mut RunStats, s: &RunStats) {
+    let RunStats {
+        cycles,
+        cores,
+        instret,
+        flops,
+        fpu_ops,
+        tcdm_grants,
+        tcdm_conflicts,
+        icache_hits,
+        icache_misses,
+        dram_bytes,
+        dma_busy_cycles,
+        ssr_mem_accesses,
+        comparisons,
+        stall_icache,
+        stall_mem,
+        barrier_cycles,
+    } = *s;
+    t.cycles = t.cycles.max(cycles);
+    t.cores += cores;
+    t.instret += instret;
+    t.flops += flops;
+    t.fpu_ops += fpu_ops;
+    t.tcdm_grants += tcdm_grants;
+    t.tcdm_conflicts += tcdm_conflicts;
+    t.icache_hits += icache_hits;
+    t.icache_misses += icache_misses;
+    t.dram_bytes += dram_bytes;
+    t.dma_busy_cycles += dma_busy_cycles;
+    t.ssr_mem_accesses += ssr_mem_accesses;
+    t.comparisons += comparisons;
+    t.stall_icache += stall_icache;
+    t.stall_mem += stall_mem;
+    t.barrier_cycles += barrier_cycles;
+}
+
+/// Shared sharded-run implementation: plan one job per shard against
+/// the shared HBM, assemble the system, run all clusters to completion,
+/// and gather the concatenated result.
+fn run_system(
+    variant: Variant,
+    iw: IdxWidth,
+    m: &Csr,
+    operand: Operand,
+    cfg: &SystemCfg,
+    parts: &[std::ops::Range<usize>],
+    payloads: &[u64],
+) -> SystemRun {
+    let k = cfg.clusters;
+    assert_eq!(parts.len(), k);
+    assert_eq!(payloads.len(), k);
+    let stride = cfg.shard_stride();
+    let mut hbm = Hbm::new(cfg);
+    let mut jobs: Vec<PlannedJob> = Vec::with_capacity(k);
+    for (i, r) in parts.iter().enumerate() {
+        let shard = m.slice_rows(r.clone());
+        let mut port = hbm.port(i);
+        jobs.push(plan_job(
+            variant,
+            iw,
+            &shard,
+            operand,
+            &cfg.cluster,
+            &mut port,
+            MemRegion { base: i as u64 * stride, bytes: stride },
+        ));
+    }
+    let clusters: Vec<Cluster> = jobs
+        .iter()
+        .map(|j| Cluster::new(cfg.cluster.clone(), vec![j.prog.clone(); cfg.cluster.cores]))
+        .collect();
+    let mut sys = System::assemble(cfg.clone(), clusters, hbm);
+    for (i, job) in jobs.iter().enumerate() {
+        job.apply(&mut sys.clusters[i]);
+    }
+    let total = sys.run(LIMIT);
+    let finished = sys.finished_cycles();
+
+    // gather: concatenate the exclusive shard row slices
+    let mut result = Vec::with_capacity(m.nrows);
+    for job in &jobs {
+        for r in 0..job.nrows {
+            result.push(sys.hbm.peek_f64(job.c_out + 8 * r as u64));
+        }
+    }
+
+    let mut agg = RunStats::default();
+    let shards: Vec<ShardRun> = (0..k)
+        .map(|i| {
+            // a finished cluster keeps lockstep-ticking until the whole
+            // system drains; report its own finish cycle, not the global
+            // end, so per-shard cycle-derived metrics (energy statics,
+            // utilization) stay attributable
+            let mut stats = sys.clusters[i].stats();
+            stats.cycles = finished[i];
+            add_stats(&mut agg, &stats);
+            ShardRun {
+                rows: parts[i].clone(),
+                cycles: finished[i],
+                report: Report::from_run(finished[i], payloads[i], stats),
+                hbm: sys.hbm.cluster_stats[i],
+                chunks: jobs[i].chunks,
+            }
+        })
+        .collect();
+    let payload: u64 = payloads.iter().sum();
+    agg.cycles = total;
+    let report = Report::from_run(total, payload, agg);
+    let skew = finished.iter().max().unwrap() - finished.iter().min().unwrap();
+    SystemRun {
+        result,
+        report,
+        shards,
+        reduction: ReduceStats {
+            writeback_bytes: m.nrows as u64 * 8,
+            combine_flops: 0,
+            skew_cycles: skew,
+        },
+    }
+}
+
+/// Row-sharded multi-cluster sM×dV (SpMV). Every cluster receives its
+/// own copy of the dense vector over its HBM channel (the broadcast
+/// traffic a real system pays). Verifies against the dense oracle.
+pub fn run_system_smxdv(
+    variant: Variant,
+    iw: IdxWidth,
+    m: &Csr,
+    b: &[f64],
+    cfg: &SystemCfg,
+) -> SystemRun {
+    assert_eq!(m.ncols, b.len());
+    let parts = m.row_partition(cfg.clusters);
+    let payloads: Vec<u64> = parts
+        .iter()
+        .map(|r| (m.ptrs[r.end] - m.ptrs[r.start]) as u64)
+        .collect();
+    let run = run_system(variant, iw, m, Operand::Dense(b), cfg, &parts, &payloads);
+    let want = ops::smxdv(m, b);
+    for (i, (g, w)) in run.result.iter().zip(&want).enumerate() {
+        let tol = 1e-9 * w.abs().max(1.0);
+        assert!((g - w).abs() <= tol, "system smxdv[{i}]: {g} vs {w}");
+    }
+    run
+}
+
+/// Row-sharded multi-cluster sM×sV (SpMSpV). The sparse operand fiber
+/// is broadcast like the dense vector of SpMV.
+pub fn run_system_smxsv(
+    variant: Variant,
+    iw: IdxWidth,
+    m: &Csr,
+    b: &SpVec,
+    cfg: &SystemCfg,
+) -> SystemRun {
+    assert_eq!(m.ncols, b.dim);
+    let parts = m.row_partition(cfg.clusters);
+    let payloads: Vec<u64> = parts
+        .iter()
+        .map(|rg| {
+            rg.clone()
+                .map(|r| ops::svosv(&m.row_spvec(r), b).nnz() as u64)
+                .sum()
+        })
+        .collect();
+    let run = run_system(variant, iw, m, Operand::Fiber(b), cfg, &parts, &payloads);
+    let want = ops::smxsv(m, b);
+    for (i, (g, w)) in run.result.iter().zip(&want).enumerate() {
+        let tol = 1e-9 * w.abs().max(1.0);
+        assert!((g - w).abs() <= tol, "system smxsv[{i}]: {g} vs {w}");
+    }
+    run
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_cluster_smxdv, run_cluster_smxsv};
+    use crate::matgen;
+    use crate::sim::ClusterCfg;
+
+    /// Acceptance regression: a 1-cluster system reproduces the exact
+    /// cycle counts of the standalone cluster on sM×dV (both variants).
+    #[test]
+    fn one_cluster_system_cycle_identical_smxdv() {
+        let m = matgen::random_csr(51, 200, 256, 2400);
+        let b = matgen::random_dense(52, 256);
+        let ccfg = ClusterCfg::paper_cluster();
+        let scfg = SystemCfg::paper_system(1, 1);
+        for v in [Variant::Base, Variant::Sssr] {
+            let standalone = run_cluster_smxdv(v, IdxWidth::U16, &m, &b, &ccfg);
+            let system = run_system_smxdv(v, IdxWidth::U16, &m, &b, &scfg);
+            assert_eq!(
+                system.report.cycles, standalone.report.cycles,
+                "{v:?}: 1-cluster system diverged from standalone cluster"
+            );
+            assert_eq!(system.result, standalone.result);
+            assert_eq!(system.shards[0].chunks, standalone.chunks);
+        }
+    }
+
+    /// Second kernel for the regression: sM×sV.
+    #[test]
+    fn one_cluster_system_cycle_identical_smxsv() {
+        let m = matgen::random_csr(55, 150, 512, 3000);
+        let v = matgen::random_spvec(56, 512, 50);
+        let standalone =
+            run_cluster_smxsv(Variant::Sssr, IdxWidth::U16, &m, &v, &ClusterCfg::paper_cluster());
+        let system =
+            run_system_smxsv(Variant::Sssr, IdxWidth::U16, &m, &v, &SystemCfg::paper_system(1, 1));
+        assert_eq!(system.report.cycles, standalone.report.cycles);
+        assert_eq!(system.result, standalone.result);
+    }
+
+    #[test]
+    fn eight_clusters_on_one_channel_scale_sublinearly() {
+        let m = matgen::random_csr(62, 512, 512, 24_000);
+        let b = matgen::random_dense(63, 512);
+        let one =
+            run_system_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &SystemCfg::paper_system(1, 1));
+        let eight =
+            run_system_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &SystemCfg::paper_system(8, 1));
+        let speedup = one.report.cycles as f64 / eight.report.cycles as f64;
+        assert!(
+            speedup < 8.0,
+            "8 clusters on one shared channel cannot scale linearly (got {speedup}x)"
+        );
+        let queued: u64 = eight.shards.iter().map(|s| s.hbm.queue_cycles).sum();
+        assert!(queued > 0, "shared-channel contention must be visible");
+        assert_eq!(eight.reduction.combine_flops, 0);
+        assert_eq!(eight.reduction.writeback_bytes, m.nrows as u64 * 8);
+    }
+
+    #[test]
+    fn more_channels_relieve_contention() {
+        let m = matgen::random_csr(64, 400, 512, 20_000);
+        let b = matgen::random_dense(65, 512);
+        let shared =
+            run_system_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &SystemCfg::paper_system(4, 1));
+        let private =
+            run_system_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &SystemCfg::paper_system(4, 4));
+        assert!(
+            shared.report.cycles > private.report.cycles,
+            "adding channels must relieve a contended system: {} vs {}",
+            shared.report.cycles,
+            private.report.cycles
+        );
+        // queue_cycles includes a cluster's own pipelined bursts, so
+        // private channels are not zero — but cross-cluster sharing must
+        // dominate it.
+        let shared_q: u64 = shared.shards.iter().map(|s| s.hbm.queue_cycles).sum();
+        let private_q: u64 = private.shards.iter().map(|s| s.hbm.queue_cycles).sum();
+        assert!(
+            shared_q > 2 * private_q,
+            "sharing one channel must queue far more: {shared_q} vs {private_q}"
+        );
+    }
+
+    #[test]
+    fn sharded_smxsv_reduction_accounting() {
+        let m = matgen::random_csr(66, 240, 512, 6000);
+        let v = matgen::random_spvec(67, 512, 60);
+        let run =
+            run_system_smxsv(Variant::Sssr, IdxWidth::U16, &m, &v, &SystemCfg::paper_system(4, 2));
+        assert_eq!(run.shards.len(), 4);
+        let rows: usize = run.shards.iter().map(|s| s.rows.len()).sum();
+        assert_eq!(rows, m.nrows);
+        assert!(run.reduction.skew_cycles < run.report.cycles);
+        let max_finish = run.shards.iter().map(|s| s.cycles).max().unwrap();
+        assert_eq!(max_finish, run.report.cycles);
+        // per-shard payloads sum to the total
+        let p: u64 = run.shards.iter().map(|s| s.report.payload).sum();
+        assert_eq!(p, run.report.payload);
+    }
+}

@@ -9,13 +9,18 @@
 //!   (indirection, intersection, union) exactly as §2 of the paper
 //!   describes: address generators, data/index FIFOs, shared-port
 //!   round-robin arbitration, index comparator, FREP hardware loop,
-//!   banked TCDM, cluster DMA, instruction cache, and an HBM2E DRAM
-//!   channel model.
+//!   banked TCDM, cluster DMA, instruction cache — plus an explicit
+//!   system-level memory hierarchy ([`sim::System`]): N clusters
+//!   sharing a multi-channel HBM through the [`sim::MemPort`]
+//!   interface, with per-channel FCFS arbitration and per-cluster
+//!   traffic statistics.
 //! - [`kernels`] — the paper's hand-optimized kernel library (§3.2):
 //!   BASE / SSR / SSSR variants of sparse-dense and sparse-sparse
-//!   vector and matrix ops for 8/16/32-bit index types.
+//!   vector and matrix ops for 8/16/32-bit index types, and the
+//!   row-sharded multi-cluster SpMV/SpMSpV drivers ([`kernels::multi`]).
 //! - [`coordinator`] — the parallel scaleout (§4.2): row chunking over
-//!   worker cores and double-buffered DMA data movement.
+//!   worker cores and double-buffered DMA data movement, split into a
+//!   reusable planning stage and the standalone one-cluster runner.
 //! - [`experiments`] — the declarative, parallel experiment engine: an
 //!   [`experiments::ExperimentSpec`] describes a sweep (seeded workload
 //!   grid + measurement closure), the generic [`experiments::Runner`]

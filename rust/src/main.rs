@@ -23,8 +23,11 @@ USAGE:
 COMMANDS:
     fig 4a|4b|4c|4d|4e|4f|5a|5b|6a|6b|7|8a|8b   regenerate one figure
     table 1|2|3                                  regenerate one table
-    sweep [fig4a fig7b ...]                      run figure sweeps (default:
-                                                 all) and write BENCH_*.json
+    sweep [fig4a scale scale_sv ...]             run experiment sweeps
+                                                 (default: all) and write
+                                                 BENCH_*.json; `scale` /
+                                                 `scale_sv` are the multi-
+                                                 cluster system-layer sweeps
     kernel <name> <variant>                      run one kernel demo
                                                  (names: svxdv svxsv smxdv;
                                                   variants: base ssr sssr)
@@ -33,8 +36,9 @@ COMMANDS:
     all                                          every figure and table
 
 OPTIONS:
-    --jobs N        experiment worker threads (default: one per core;
-                    results are identical for every N)
+    --jobs N        experiment worker threads (default:
+                    std::thread::available_parallelism(); results are
+                    identical for every N)
     --json DIR      also write one BENCH_<fig>.json per sweep into DIR
 
 ENV:
@@ -128,9 +132,10 @@ fn main() {
             let dir = opts.json.clone().unwrap_or_else(|| PathBuf::from("."));
             let runner = Runner::new(opts.jobs);
             println!(
-                "sweep: {} experiment(s), {} worker thread(s), JSON -> {}",
+                "sweep: {} experiment(s), {} worker thread(s){}, JSON -> {}",
                 builders.len(),
                 runner.jobs,
+                if opts.jobs == 0 { " (auto)" } else { "" },
                 dir.display()
             );
             let t0 = std::time::Instant::now();

@@ -223,6 +223,93 @@ pub fn ragusa18() -> Csr {
     random_csr(18, 23, 23, 64)
 }
 
+/// Parse a Matrix Market *coordinate* matrix (the SuiteSparse download
+/// format), so real corpus matrices can replace the deterministic
+/// stand-ins. Supports the `real` / `integer` / `pattern` fields and
+/// `general` / `symmetric` / `skew-symmetric` symmetries; `pattern`
+/// entries get value 1.0 and symmetric off-diagonals are mirrored.
+/// Duplicate entries are summed (as [`Csr::from_triplets`] does).
+pub fn parse_mtx(text: &str) -> Result<Csr, String> {
+    let mut lines = text.lines();
+    let header = lines.next().ok_or("empty .mtx file")?;
+    let h: Vec<String> = header.split_whitespace().map(str::to_ascii_lowercase).collect();
+    if h.len() < 5 || h[0] != "%%matrixmarket" || h[1] != "matrix" {
+        return Err(format!("not a MatrixMarket matrix header: {header:?}"));
+    }
+    if h[2] != "coordinate" {
+        return Err(format!("unsupported format {:?} (only coordinate)", h[2]));
+    }
+    let pattern = match h[3].as_str() {
+        "real" | "integer" => false,
+        "pattern" => true,
+        f => return Err(format!("unsupported field {f:?} (real/integer/pattern)")),
+    };
+    let (mirror, skew) = match h[4].as_str() {
+        "general" => (false, false),
+        "symmetric" => (true, false),
+        "skew-symmetric" => (true, true),
+        s => return Err(format!("unsupported symmetry {s:?}")),
+    };
+
+    let mut dims: Option<(usize, usize, usize)> = None;
+    let mut t: Vec<(u32, u32, f64)> = vec![];
+    let mut stored = 0usize;
+    for (lineno, line) in lines.enumerate() {
+        let s = line.trim();
+        if s.is_empty() || s.starts_with('%') {
+            continue;
+        }
+        let toks: Vec<&str> = s.split_whitespace().collect();
+        match dims {
+            None => {
+                if toks.len() < 3 {
+                    return Err(format!("line {}: expected 'nrows ncols nnz'", lineno + 2));
+                }
+                let nrows: usize = toks[0].parse().map_err(|e| format!("nrows: {e}"))?;
+                let ncols: usize = toks[1].parse().map_err(|e| format!("ncols: {e}"))?;
+                let nnz: usize = toks[2].parse().map_err(|e| format!("nnz: {e}"))?;
+                dims = Some((nrows, ncols, nnz));
+                t.reserve(if mirror { 2 * nnz } else { nnz });
+            }
+            Some((nrows, ncols, _)) => {
+                let need = if pattern { 2 } else { 3 };
+                if toks.len() < need {
+                    return Err(format!("line {}: expected {need} fields", lineno + 2));
+                }
+                let r: usize = toks[0].parse().map_err(|e| format!("row: {e}"))?;
+                let c: usize = toks[1].parse().map_err(|e| format!("col: {e}"))?;
+                let v: f64 = if pattern {
+                    1.0
+                } else {
+                    toks[2].parse().map_err(|e| format!("value: {e}"))?
+                };
+                if !(1..=nrows).contains(&r) || !(1..=ncols).contains(&c) {
+                    return Err(format!(
+                        "line {}: entry ({r},{c}) outside {nrows}x{ncols}",
+                        lineno + 2
+                    ));
+                }
+                stored += 1;
+                t.push((r as u32 - 1, c as u32 - 1, v));
+                if mirror && r != c {
+                    t.push((c as u32 - 1, r as u32 - 1, if skew { -v } else { v }));
+                }
+            }
+        }
+    }
+    let (nrows, ncols, nnz) = dims.ok_or("missing dimensions line")?;
+    if stored != nnz {
+        return Err(format!("header declares {nnz} entries, file has {stored}"));
+    }
+    Ok(Csr::from_triplets(nrows, ncols, t))
+}
+
+/// Load a `.mtx` file from disk via [`parse_mtx`].
+pub fn load_mtx(path: &std::path::Path) -> Result<Csr, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    parse_mtx(&text)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -323,6 +410,97 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(a.nnz(), 50);
         a.validate().unwrap();
+    }
+
+    /// Embedded fixture: a 4x5 general real matrix in SuiteSparse
+    /// download format, with comments and blank lines.
+    const FIXTURE_GENERAL: &str = "\
+%%MatrixMarket matrix coordinate real general
+% generated fixture
+% rows cols nnz
+
+4 5 6
+1 1 2.5
+1 4 -1.0
+2 2 3.25
+3 5 4.0
+4 1 -0.5
+4 4 1.5
+";
+
+    const FIXTURE_SYMMETRIC: &str = "\
+%%MatrixMarket matrix coordinate real symmetric
+3 3 4
+1 1 1.0
+2 1 2.0
+3 2 3.0
+3 3 4.0
+";
+
+    const FIXTURE_PATTERN: &str = "\
+%%MatrixMarket matrix coordinate pattern general
+2 2 2
+1 2
+2 1
+";
+
+    #[test]
+    fn parse_mtx_general_fixture() {
+        let m = parse_mtx(FIXTURE_GENERAL).unwrap();
+        assert_eq!((m.nrows, m.ncols, m.nnz()), (4, 5, 6));
+        let d = m.to_dense();
+        assert_eq!(d[0][0], 2.5);
+        assert_eq!(d[0][3], -1.0);
+        assert_eq!(d[1][1], 3.25);
+        assert_eq!(d[2][4], 4.0);
+        assert_eq!(d[3][0], -0.5);
+        assert_eq!(d[3][3], 1.5);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn parse_mtx_symmetric_mirrors_off_diagonals() {
+        let m = parse_mtx(FIXTURE_SYMMETRIC).unwrap();
+        assert_eq!(m.nnz(), 6); // 2 diagonal + 2 mirrored pairs
+        let d = m.to_dense();
+        assert_eq!(d[1][0], 2.0);
+        assert_eq!(d[0][1], 2.0);
+        assert_eq!(d[2][1], 3.0);
+        assert_eq!(d[1][2], 3.0);
+        assert_eq!(d[0][0], 1.0);
+        assert_eq!(d[2][2], 4.0);
+    }
+
+    #[test]
+    fn parse_mtx_pattern_gets_unit_values() {
+        let m = parse_mtx(FIXTURE_PATTERN).unwrap();
+        assert_eq!(m.to_dense(), vec![vec![0.0, 1.0], vec![1.0, 0.0]]);
+    }
+
+    #[test]
+    fn parse_mtx_rejects_bad_input() {
+        assert!(parse_mtx("").is_err());
+        assert!(parse_mtx("%%MatrixMarket matrix array real general\n2 2\n1.0\n").is_err());
+        assert!(parse_mtx("%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1 0\n")
+            .is_err());
+        // out-of-range entry
+        assert!(parse_mtx("%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n")
+            .is_err());
+        // count mismatch vs header
+        assert!(parse_mtx("%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n")
+            .is_err());
+    }
+
+    #[test]
+    fn load_mtx_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join("sssr_mtx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fixture.mtx");
+        std::fs::write(&path, FIXTURE_GENERAL).unwrap();
+        let m = load_mtx(&path).unwrap();
+        assert_eq!(m, parse_mtx(FIXTURE_GENERAL).unwrap());
+        assert!(load_mtx(&dir.join("missing.mtx")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! The Snitch compute cluster (Fig. 3, Table 1): `p` worker core
-//! complexes sharing a banked TCDM and an L1 I$, a wide DMA engine in
-//! front of an HBM2E channel model, and the hardware barrier.
+//! complexes sharing a banked TCDM and an L1 I$, a wide DMA engine, and
+//! the hardware barrier. The cluster does *not* own its main memory:
+//! `tick`/`run` take a [`MemPort`] — a private [`Dram`] channel in the
+//! standalone topology, or the cluster's port into the shared HBM when
+//! driven by [`super::system::System`].
 //!
 //! The data-movement core (DMCC) of the real cluster runs a small
 //! software loop that programs the DMA and sequences double-buffer
@@ -15,6 +18,7 @@ use super::dram::Dram;
 use super::fpu::Fpu;
 use super::icache::ICache;
 use super::isa::Program;
+use super::mem::MemPort;
 use super::ssr::{Ports, Streamer};
 use super::tcdm::Tcdm;
 
@@ -27,7 +31,10 @@ pub struct ClusterCfg {
     pub tcdm_bytes: usize,
     /// Memory bank count `k`.
     pub banks: usize,
-    /// DRAM size in bytes (backing store for the workload).
+    /// Backing DRAM size in bytes for *standalone* runs (the cluster no
+    /// longer owns its memory: a [`super::system::System`] shares one
+    /// HBM across clusters; standalone paths build a private
+    /// [`Dram`] of this size).
     pub dram_bytes: usize,
     /// DRAM channel bandwidth in Gb/s/pin (3.6 = full HBM2E channel).
     pub dram_gbps_pin: f64,
@@ -109,7 +116,6 @@ pub struct Cluster {
     pub cfg: ClusterCfg,
     pub ccs: Vec<CoreComplex>,
     pub tcdm: Tcdm,
-    pub dram: Dram,
     pub dma: Dma,
     pub icache: ICache,
     pub cycle: u64,
@@ -138,7 +144,6 @@ impl Cluster {
         Cluster {
             ccs,
             tcdm: Tcdm::new(cfg.tcdm_bytes, cfg.banks),
-            dram: Dram::with_params(cfg.dram_bytes, cfg.dram_gbps_pin, cfg.dram_latency, cfg.ic_latency),
             dma: Dma::new(),
             icache,
             cycle: 0,
@@ -190,12 +195,15 @@ impl Cluster {
         self.ccs[core].core.regs[reg as usize] = value;
     }
 
-    /// Advance one cycle.
-    pub fn tick(&mut self) {
+    /// Advance one cycle. `mem` is this cluster's port into backing main
+    /// memory: a private [`Dram`] in the standalone topology, or its
+    /// channel port into the shared HBM when driven by a
+    /// [`super::system::System`].
+    pub fn tick(&mut self, mem: &mut dyn MemPort) {
         self.cycle += 1;
         let now = self.cycle;
         self.tcdm.new_cycle(now);
-        self.dma.tick(now, &mut self.tcdm, &mut self.dram);
+        self.dma.tick(now, &mut self.tcdm, mem);
 
         // Barrier: all live cores waiting and the *required* DMA phases
         // drained -> release, submit the next phase's prefetch (which is
@@ -244,10 +252,10 @@ impl Cluster {
 
     /// Run until all cores halt (and FPUs/streams drain). Returns total
     /// cycles. Panics after `limit` cycles (deadlock guard).
-    pub fn run(&mut self, limit: u64) -> u64 {
+    pub fn run(&mut self, mem: &mut dyn MemPort, limit: u64) -> u64 {
         let start = self.cycle;
         while !self.done() {
-            self.tick();
+            self.tick(mem);
             assert!(
                 self.cycle - start < limit,
                 "cluster did not finish within {limit} cycles (pc0={}, barrier={:?})",
@@ -256,6 +264,20 @@ impl Cluster {
             );
         }
         self.cycle - start
+    }
+
+    /// Run with a throwaway zero-size private DRAM. The single-CC kernel
+    /// drivers and most unit tests move no DMA/DRAM traffic at all
+    /// (§4.1 methodology), so they need no memory system behind the
+    /// cluster — and skip allocating one.
+    pub fn run_isolated(&mut self, limit: u64) -> u64 {
+        let mut scratch = Dram::with_params(
+            0,
+            self.cfg.dram_gbps_pin,
+            self.cfg.dram_latency,
+            self.cfg.ic_latency,
+        );
+        self.run(&mut scratch, limit)
     }
 
     /// Pre-touch every instruction line of every program so the run
@@ -285,7 +307,7 @@ impl Cluster {
             tcdm_conflicts: self.tcdm.conflicts,
             icache_hits: self.icache.hits,
             icache_misses: self.icache.l1_misses,
-            dram_bytes: self.dram.bytes_read + self.dram.bytes_written,
+            dram_bytes: self.dma.bytes_read + self.dma.bytes_written,
             dma_busy_cycles: self.dma.busy_cycles,
             ssr_mem_accesses: self
                 .ccs
@@ -342,7 +364,7 @@ mod tests {
         a.bne(T0, ZERO, "l");
         a.halt();
         let mut cl = Cluster::single(a.finish());
-        let cycles = cl.run(10_000);
+        let cycles = cl.run_isolated(10_000);
         assert!(cycles > 10); // includes cold icache misses
         assert!(cl.done());
     }
@@ -365,7 +387,7 @@ mod tests {
         };
         let cfg = ClusterCfg { cores: 2, ..ClusterCfg::paper_cluster() };
         let mut cl = Cluster::new(cfg, vec![mk(500, 0x100), mk(1, 0x108)]);
-        cl.run(100_000);
+        cl.run_isolated(100_000);
         assert_eq!(cl.tcdm.peek(0x100, 8), 1);
         assert_eq!(cl.tcdm.peek(0x108, 8), 1);
         assert_eq!(cl.barriers_released, 1);
@@ -381,13 +403,20 @@ mod tests {
         a.ld(T0, A0, 0);
         a.halt();
         let cfg = ClusterCfg { cores: 1, ..ClusterCfg::paper_cluster() };
+        let mut dram = Dram::with_params(
+            cfg.dram_bytes,
+            cfg.dram_gbps_pin,
+            cfg.dram_latency,
+            cfg.ic_latency,
+        );
         let mut cl = Cluster::new(cfg, vec![a.finish()]);
-        cl.dram.poke(0x1000, 8, 0xABCD);
+        dram.poke(0x1000, 8, 0xABCD);
         cl.set_dma_schedule(DmaSchedule {
             phases: vec![vec![DmaJob::flat(0x1000, 0x0, 64, true)]],
         });
-        cl.run(100_000);
+        cl.run(&mut dram, 100_000);
         assert_eq!(cl.ccs[0].core.regs[T0 as usize], 0xABCD);
+        assert_eq!(cl.stats().dram_bytes, 64);
     }
 
     #[test]
@@ -399,7 +428,7 @@ mod tests {
         a.fpu_fence();
         a.halt();
         let mut cl = Cluster::single(a.finish());
-        cl.run(10_000);
+        cl.run_isolated(10_000);
         let st = cl.stats();
         assert_eq!(st.flops, 1);
         assert!(st.instret >= 5);
@@ -426,7 +455,7 @@ mod tests {
         };
         let cfg = ClusterCfg { cores: 2, ..ClusterCfg::paper_cluster() };
         let mut cl = Cluster::new(cfg, vec![mk(), mk()]);
-        cl.run(1_000_000);
+        cl.run_isolated(1_000_000);
         assert!(cl.stats().tcdm_conflicts > 50, "conflicts={}", cl.stats().tcdm_conflicts);
     }
 }

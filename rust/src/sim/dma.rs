@@ -14,7 +14,7 @@
 
 use std::collections::VecDeque;
 
-use super::dram::Dram;
+use super::mem::MemPort;
 use super::tcdm::Tcdm;
 
 pub const MAX_OUTSTANDING: usize = 4;
@@ -93,6 +93,12 @@ pub struct Dma {
     pub jobs_submitted: u64,
     /// Busy-cycle statistic (any in-flight work).
     pub busy_cycles: u64,
+    /// Main-memory bytes fetched by this engine (mirrors the backing
+    /// channel's read counter, but stays per-cluster when the channel
+    /// is shared by a multi-cluster system).
+    pub bytes_read: u64,
+    /// Main-memory bytes written back by this engine.
+    pub bytes_written: u64,
 }
 
 impl Default for Dma {
@@ -111,6 +117,8 @@ impl Dma {
             jobs_done: 0,
             jobs_submitted: 0,
             busy_cycles: 0,
+            bytes_read: 0,
+            bytes_written: 0,
         }
     }
 
@@ -125,8 +133,11 @@ impl Dma {
     }
 
     /// Tick one cycle. Moves at most one 64 B beat through the TCDM wide
-    /// port (the engine has a single wide port).
-    pub fn tick(&mut self, now: u64, tcdm: &mut Tcdm, dram: &mut Dram) {
+    /// port (the engine has a single wide port). `mem` is this cluster's
+    /// port into backing main memory — a private [`super::dram::Dram`]
+    /// in the standalone topology, or a shared-HBM channel port in a
+    /// multi-cluster [`super::system::System`].
+    pub fn tick(&mut self, now: u64, tcdm: &mut Tcdm, mem: &mut dyn MemPort) {
         if self.active.is_none() {
             if let Some(job) = self.queue.pop_front() {
                 self.active = Some(job);
@@ -144,7 +155,8 @@ impl Dma {
             let dram_addr = job.dram_addr + r * job.dram_stride;
             let tcdm_addr = job.tcdm_addr + r * job.tcdm_stride;
             if job.to_tcdm {
-                let t = dram.schedule_read(now, job.row_bytes);
+                let t = mem.schedule_read(now, job.row_bytes);
+                self.bytes_read += job.row_bytes;
                 self.inflight.push_back(RowXfer {
                     dram_addr,
                     tcdm_addr,
@@ -174,7 +186,7 @@ impl Dma {
                 let arrived = if now < row.first_beat {
                     0
                 } else {
-                    (((now - row.first_beat + 1) as f64) * dram.bytes_per_cycle()) as u64
+                    (((now - row.first_beat + 1) as f64) * mem.bytes_per_cycle()) as u64
                 }
                 .min(row.bytes);
                 let pending = arrived.saturating_sub(row.moved);
@@ -183,7 +195,7 @@ impl Dma {
                     let chunk = if chunk == 0 { pending } else { chunk };
                     let src = row.dram_addr + row.moved;
                     let dst = row.tcdm_addr + row.moved;
-                    let data: Vec<u8> = dram.read_bytes(src, chunk as usize).to_vec();
+                    let data: Vec<u8> = mem.read_bytes(src, chunk as usize).to_vec();
                     if tcdm.try_write_wide(dst, &data) {
                         row.moved += chunk;
                     }
@@ -199,10 +211,11 @@ impl Dma {
                     let src = row.tcdm_addr + row.moved;
                     let mut buf = vec![0u8; chunk as usize];
                     if tcdm.try_read_wide(src, &mut buf) {
-                        dram.write_bytes(row.dram_addr + row.moved, &buf);
+                        mem.write_bytes(row.dram_addr + row.moved, &buf);
                         row.moved += chunk;
                         if row.moved == row.bytes {
-                            let t = dram.schedule_write(now, row.bytes);
+                            let t = mem.schedule_write(now, row.bytes);
+                            self.bytes_written += row.bytes;
                             row.drain_done = Some(t.last_beat);
                         }
                     }
@@ -224,6 +237,7 @@ impl Dma {
 
 #[cfg(test)]
 mod tests {
+    use super::super::dram::Dram;
     use super::*;
 
     fn run_until_done(dma: &mut Dma, tcdm: &mut Tcdm, dram: &mut Dram, limit: u64) -> u64 {

@@ -9,15 +9,16 @@
 //! FCFS data-bus occupancy — which are exactly the knobs Fig. 6 sweeps.
 //!
 //! Backing storage doubles as the simulated main memory contents.
+//!
+//! `Dram` is the standalone (one cluster, one private channel) topology;
+//! it implements the extracted [`MemPort`] interface, whose multi-cluster
+//! counterpart is the shared HBM of [`super::system`]. Both build on the
+//! same [`schedule_burst`] math, so an unloaded channel times bursts
+//! identically in either topology.
 
-/// Timing descriptor for one scheduled burst.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct BurstTiming {
-    /// Cycle at which the first beat arrives back at the cluster.
-    pub first_beat: u64,
-    /// Cycle at which the last beat has arrived (transfer complete).
-    pub last_beat: u64,
-}
+use super::mem::{peek_le, poke_le, schedule_burst, MemPort};
+
+pub use super::mem::BurstTiming;
 
 pub struct Dram {
     mem: Vec<u8>,
@@ -93,15 +94,15 @@ impl Dram {
 
     fn schedule(&mut self, now: u64, bytes: u64) -> BurstTiming {
         self.bursts += 1;
-        let request_at_device = now + self.ic_latency;
-        let data_start = (request_at_device + self.latency).max(self.busy_until);
-        let occupancy = (bytes as f64 / self.bytes_per_cycle).ceil() as u64;
-        let data_end = data_start + occupancy.max(1);
-        self.busy_until = data_end;
-        BurstTiming {
-            first_beat: data_start + self.ic_latency,
-            last_beat: data_end + self.ic_latency,
-        }
+        let (timing, _queued) = schedule_burst(
+            &mut self.busy_until,
+            now,
+            bytes,
+            self.bytes_per_cycle,
+            self.latency,
+            self.ic_latency,
+        );
+        timing
     }
 
     /// Cycle until which the channel data bus is occupied.
@@ -124,19 +125,11 @@ impl Dram {
     }
 
     pub fn peek(&self, addr: u64, bytes: u64) -> u64 {
-        let a = addr as usize;
-        let mut v = 0u64;
-        for i in 0..bytes as usize {
-            v |= (self.mem[a + i] as u64) << (8 * i);
-        }
-        v
+        peek_le(&self.mem, addr, bytes)
     }
 
     pub fn poke(&mut self, addr: u64, bytes: u64, value: u64) {
-        let a = addr as usize;
-        for i in 0..bytes as usize {
-            self.mem[a + i] = (value >> (8 * i)) as u8;
-        }
+        poke_le(&mut self.mem, addr, bytes, value)
     }
 
     pub fn poke_f64(&mut self, addr: u64, v: f64) {
@@ -146,6 +139,35 @@ impl Dram {
     pub fn peek_f64(&self, addr: u64) -> f64 {
         f64::from_bits(self.peek(addr, 8))
     }
+}
+
+impl MemPort for Dram {
+    fn schedule_read(&mut self, now: u64, bytes: u64) -> BurstTiming {
+        Dram::schedule_read(self, now, bytes)
+    }
+
+    fn schedule_write(&mut self, now: u64, bytes: u64) -> BurstTiming {
+        Dram::schedule_write(self, now, bytes)
+    }
+
+    fn bytes_per_cycle(&self) -> f64 {
+        Dram::bytes_per_cycle(self)
+    }
+
+    fn size(&self) -> usize {
+        Dram::size(self)
+    }
+
+    fn read_bytes(&self, addr: u64, len: usize) -> &[u8] {
+        Dram::read_bytes(self, addr, len)
+    }
+
+    fn write_bytes(&mut self, addr: u64, bytes: &[u8]) {
+        Dram::write_bytes(self, addr, bytes)
+    }
+
+    // peek/poke use the MemPort defaults over read_bytes/write_bytes,
+    // which match the inherent accessors bit for bit.
 }
 
 #[cfg(test)]

@@ -1,0 +1,152 @@
+//! Backing-memory interface of the simulator.
+//!
+//! [`MemPort`] is the contract the cluster DMA engine programs against:
+//! burst timing (FCFS data-bus scheduling with interconnect and device
+//! latency) plus zero-time backing-store access for DMA payload movement
+//! and host-side workload setup. Two implementations exist:
+//!
+//! - [`super::dram::Dram`] — the original single-cluster topology: one
+//!   private HBM2E channel per cluster (the paper's §4.2 configuration),
+//! - [`super::system::HbmPort`] — one cluster's view of the shared
+//!   multi-channel HBM of the system layer, where bursts from several
+//!   clusters arbitrate for the same channel data bus.
+//!
+//! The burst-timing math itself lives here ([`schedule_burst`]) so both
+//! topologies are cycle-identical when unloaded — which is what lets a
+//! one-cluster [`super::system::System`] reproduce the standalone
+//! [`super::cluster::Cluster`] exactly.
+
+/// Timing descriptor for one scheduled burst.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BurstTiming {
+    /// Cycle at which the first beat arrives back at the cluster.
+    pub first_beat: u64,
+    /// Cycle at which the last beat has arrived (transfer complete).
+    pub last_beat: u64,
+}
+
+/// FCFS data-bus burst scheduling shared by [`super::dram::Dram`] and
+/// the HBM channels of the system layer: the request travels
+/// `ic_latency` cycles to the device, waits the `latency` round-trip,
+/// then occupies the data bus behind any earlier burst (`busy_until`).
+/// Returns the burst timing plus the cycles the burst spent queued
+/// behind other traffic (0 on an idle channel) — the per-channel
+/// arbitration/contention signal of the system layer.
+pub(crate) fn schedule_burst(
+    busy_until: &mut u64,
+    now: u64,
+    bytes: u64,
+    bytes_per_cycle: f64,
+    latency: u64,
+    ic_latency: u64,
+) -> (BurstTiming, u64) {
+    let request_at_device = now + ic_latency;
+    let unloaded_start = request_at_device + latency;
+    let data_start = unloaded_start.max(*busy_until);
+    let occupancy = (bytes as f64 / bytes_per_cycle).ceil() as u64;
+    let data_end = data_start + occupancy.max(1);
+    *busy_until = data_end;
+    let timing = BurstTiming {
+        first_beat: data_start + ic_latency,
+        last_beat: data_end + ic_latency,
+    };
+    (timing, data_start - unloaded_start)
+}
+
+/// Little-endian word read out of a backing store.
+pub(crate) fn peek_le(mem: &[u8], addr: u64, bytes: u64) -> u64 {
+    let a = addr as usize;
+    let mut v = 0u64;
+    for (i, &b) in mem[a..a + bytes as usize].iter().enumerate() {
+        v |= (b as u64) << (8 * i);
+    }
+    v
+}
+
+/// Little-endian word write into a backing store.
+pub(crate) fn poke_le(mem: &mut [u8], addr: u64, bytes: u64, value: u64) {
+    let a = addr as usize;
+    for (i, b) in mem[a..a + bytes as usize].iter_mut().enumerate() {
+        *b = (value >> (8 * i)) as u8;
+    }
+}
+
+/// One cluster's port into backing main memory: burst timing for the
+/// DMA engine plus zero-time payload/setup access. See the module docs
+/// for the two implementations.
+pub trait MemPort {
+    /// Schedule a read burst of `bytes` issued at cycle `now`; returns
+    /// when its beats arrive at the cluster.
+    fn schedule_read(&mut self, now: u64, bytes: u64) -> BurstTiming;
+
+    /// Schedule a write burst (timing symmetric to reads; posted writes
+    /// complete when the channel has absorbed the last beat).
+    fn schedule_write(&mut self, now: u64, bytes: u64) -> BurstTiming;
+
+    /// Peak deliverable bandwidth of this port's channel in bytes per
+    /// cluster cycle (the DMA uses it to pace beat arrival).
+    fn bytes_per_cycle(&self) -> f64;
+
+    /// Backing-store capacity visible through this port, in bytes.
+    fn size(&self) -> usize;
+
+    /// Zero-time backing-store read (DMA payload + result readback).
+    fn read_bytes(&self, addr: u64, len: usize) -> &[u8];
+
+    /// Zero-time backing-store write (DMA payload + host setup).
+    fn write_bytes(&mut self, addr: u64, bytes: &[u8]);
+
+    /// Read up to 8 little-endian bytes as one value.
+    fn peek(&self, addr: u64, bytes: u64) -> u64 {
+        peek_le(self.read_bytes(addr, bytes as usize), 0, bytes)
+    }
+
+    /// Write up to 8 little-endian bytes of one value.
+    fn poke(&mut self, addr: u64, bytes: u64, value: u64) {
+        let mut buf = [0u8; 8];
+        poke_le(&mut buf, 0, bytes, value);
+        self.write_bytes(addr, &buf[..bytes as usize]);
+    }
+
+    fn poke_f64(&mut self, addr: u64, v: f64) {
+        self.poke(addr, 8, v.to_bits());
+    }
+
+    fn peek_f64(&self, addr: u64) -> f64 {
+        f64::from_bits(self.peek(addr, 8))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_burst_idle_channel_pays_full_latency() {
+        let mut busy = 0u64;
+        let (t, queued) = schedule_burst(&mut busy, 0, 576, 57.6, 88, 16);
+        assert_eq!(t.first_beat, 16 + 88 + 16);
+        assert_eq!(t.last_beat, 16 + 88 + 10 + 16);
+        assert_eq!(queued, 0);
+        assert_eq!(busy, 16 + 88 + 10);
+    }
+
+    #[test]
+    fn schedule_burst_queues_behind_prior_traffic() {
+        let mut busy = 0u64;
+        let (a, _) = schedule_burst(&mut busy, 0, 5760, 57.6, 88, 16);
+        let (b, queued) = schedule_burst(&mut busy, 0, 5760, 57.6, 88, 16);
+        // second burst's data starts right after the first's occupancy
+        assert_eq!(b.first_beat - 16, a.last_beat - 16);
+        assert_eq!(queued, 100);
+    }
+
+    #[test]
+    fn le_word_roundtrip() {
+        let mut mem = vec![0u8; 32];
+        poke_le(&mut mem, 3, 4, 0xA1B2_C3D4);
+        assert_eq!(peek_le(&mem, 3, 4), 0xA1B2_C3D4);
+        assert_eq!(mem[3], 0xD4);
+        assert_eq!(mem[6], 0xA1);
+    }
+}

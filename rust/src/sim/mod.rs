@@ -12,7 +12,13 @@
 //! - the index comparator performing streaming intersection and union,
 //! - banked TCDM with per-cycle bank-conflict arbitration,
 //! - shared two-level instruction cache,
-//! - wide DMA engine and an HBM2E DRAM channel model.
+//! - wide DMA engine programmed against the [`mem::MemPort`]
+//!   backing-memory interface,
+//! - and an explicit system layer ([`system`]): N clusters sharing a
+//!   multi-channel HBM through an interconnect, with per-channel FCFS
+//!   arbitration and per-cluster traffic stats. The standalone
+//!   one-cluster topology ([`dram::Dram`] behind a single [`Cluster`])
+//!   remains available and cycle-identical to a one-cluster system.
 
 pub mod asm;
 pub mod cluster;
@@ -22,10 +28,14 @@ pub mod dram;
 pub mod fpu;
 pub mod icache;
 pub mod isa;
+pub mod mem;
 pub mod ssr;
+pub mod system;
 pub mod tcdm;
 
 pub use asm::Asm;
 pub use cluster::{Cluster, ClusterCfg, DmaSchedule, RunStats};
 pub use dma::DmaJob;
 pub use isa::Program;
+pub use mem::{BurstTiming, MemPort};
+pub use system::{Hbm, HbmClusterStats, HbmPort, System, SystemCfg};

@@ -1,0 +1,482 @@
+//! System layer: N Snitch clusters in front of a shared multi-channel
+//! HBM through an on-chip interconnect (the §VII scale-out topology and
+//! the Occamy follow-up: many clusters contending for a few HBM2E
+//! channels).
+//!
+//! The memory hierarchy is explicit here instead of inside
+//! [`Cluster`]: the clusters own compute, TCDM, and their DMA engines;
+//! this module owns the backing memory. Each cluster is statically
+//! wired to channel `cluster % channels` and reaches it through an
+//! [`HbmPort`], which implements the extracted [`MemPort`]
+//! interface. Bursts on the same channel arbitrate FCFS on the channel
+//! data bus (ties within a cycle break in rotating cluster order, like
+//! the TCDM's CC rotation), so an oversubscribed channel shows up as
+//! queued cycles in [`HbmClusterStats`] — and as sub-linear scaling in
+//! the `repro sweep scale` family.
+//!
+//! A one-cluster, one-channel `System` is cycle-identical to the
+//! standalone [`Cluster`] + [`super::dram::Dram`] topology: both sides
+//! use the same [`schedule_burst`] math and the same DMA engine, which
+//! the regression tests in `kernels::multi` and `tests/integration.rs`
+//! pin down.
+
+use super::cluster::{Cluster, ClusterCfg, RunStats};
+use super::dram::CHANNEL_PINS;
+use super::isa::Program;
+use super::mem::{peek_le, poke_le, schedule_burst, BurstTiming, MemPort};
+
+/// System-level parameterization: how many clusters share how many HBM
+/// channels. Channel timing (bandwidth, device latency, interconnect
+/// latency) comes from the embedded per-cluster [`ClusterCfg`], so a
+/// sweep over `ClusterCfg` knobs applies uniformly to every channel.
+#[derive(Clone, Debug)]
+pub struct SystemCfg {
+    /// Number of compute clusters.
+    pub clusters: usize,
+    /// Number of independent HBM channels (each with the full per-channel
+    /// bandwidth of `cluster.dram_gbps_pin`).
+    pub channels: usize,
+    /// Per-cluster parameters (Table 1) shared by all clusters.
+    pub cluster: ClusterCfg,
+    /// HBM backing bytes reserved per cluster shard; total capacity is
+    /// `clusters * shard_bytes`.
+    pub shard_bytes: usize,
+}
+
+impl SystemCfg {
+    /// The paper's cluster (Table 1) replicated `clusters` times in
+    /// front of `channels` HBM2E channels.
+    pub fn paper_system(clusters: usize, channels: usize) -> Self {
+        assert!(clusters >= 1, "a system needs at least one cluster");
+        assert!(channels >= 1, "a system needs at least one HBM channel");
+        SystemCfg {
+            clusters,
+            channels,
+            cluster: ClusterCfg::paper_cluster(),
+            shard_bytes: 64 << 20,
+        }
+    }
+
+    /// Byte distance between consecutive cluster shards in the HBM
+    /// address space.
+    pub fn shard_stride(&self) -> u64 {
+        self.shard_bytes as u64
+    }
+
+    /// Total HBM backing capacity.
+    pub fn total_bytes(&self) -> usize {
+        self.clusters * self.shard_bytes
+    }
+}
+
+/// Per-cluster view of the HBM traffic (the "per-cluster stats" of the
+/// system layer; the per-channel counters live in [`HbmChannel`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HbmClusterStats {
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub bursts: u64,
+    /// Cycles this cluster's bursts spent queued behind earlier bursts
+    /// on their channel. A cluster's own pipelined bursts count too
+    /// (back-to-back rows stream contiguously), so the contention signal
+    /// is the *growth* of this number over the private-channel baseline.
+    pub queue_cycles: u64,
+}
+
+/// One HBM channel: an independent FCFS data bus with its own occupancy
+/// horizon and traffic counters.
+pub struct HbmChannel {
+    bytes_per_cycle: f64,
+    busy_until: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub bursts: u64,
+    /// Total cycles bursts on this channel spent queued behind earlier
+    /// bursts (over all clusters wired to it).
+    pub queue_cycles: u64,
+}
+
+impl HbmChannel {
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.bytes_per_cycle
+    }
+}
+
+/// The shared main memory: one backing store behind several channels.
+pub struct Hbm {
+    mem: Vec<u8>,
+    /// Average device round-trip latency in cycles.
+    pub latency: u64,
+    /// One-way on-chip interconnect latency in cycles.
+    pub ic_latency: u64,
+    pub channels: Vec<HbmChannel>,
+    pub cluster_stats: Vec<HbmClusterStats>,
+}
+
+impl Hbm {
+    pub fn new(cfg: &SystemCfg) -> Self {
+        let bpc = cfg.cluster.dram_gbps_pin * CHANNEL_PINS / 8.0;
+        Hbm {
+            mem: vec![0; cfg.total_bytes()],
+            latency: cfg.cluster.dram_latency,
+            ic_latency: cfg.cluster.ic_latency,
+            channels: (0..cfg.channels)
+                .map(|_| HbmChannel {
+                    bytes_per_cycle: bpc,
+                    busy_until: 0,
+                    bytes_read: 0,
+                    bytes_written: 0,
+                    bursts: 0,
+                    queue_cycles: 0,
+                })
+                .collect(),
+            cluster_stats: vec![HbmClusterStats::default(); cfg.clusters],
+        }
+    }
+
+    /// Static interleave: cluster `i` is wired to channel `i % channels`.
+    pub fn channel_of(&self, cluster: usize) -> usize {
+        cluster % self.channels.len()
+    }
+
+    /// Cluster `i`'s port into its channel (the [`MemPort`] the DMA and
+    /// the workload planners program against).
+    pub fn port(&mut self, cluster: usize) -> HbmPort<'_> {
+        assert!(cluster < self.cluster_stats.len(), "cluster {cluster} out of range");
+        HbmPort { hbm: self, cluster }
+    }
+
+    // ---- zero-time backing-store access (host setup + result gather) ----
+
+    pub fn size(&self) -> usize {
+        self.mem.len()
+    }
+
+    pub fn read_bytes(&self, addr: u64, len: usize) -> &[u8] {
+        &self.mem[addr as usize..addr as usize + len]
+    }
+
+    pub fn write_bytes(&mut self, addr: u64, bytes: &[u8]) {
+        self.mem[addr as usize..addr as usize + bytes.len()].copy_from_slice(bytes);
+    }
+
+    pub fn peek(&self, addr: u64, bytes: u64) -> u64 {
+        peek_le(&self.mem, addr, bytes)
+    }
+
+    pub fn poke(&mut self, addr: u64, bytes: u64, value: u64) {
+        poke_le(&mut self.mem, addr, bytes, value)
+    }
+
+    pub fn peek_f64(&self, addr: u64) -> f64 {
+        f64::from_bits(self.peek(addr, 8))
+    }
+
+    pub fn poke_f64(&mut self, addr: u64, v: f64) {
+        self.poke(addr, 8, v.to_bits());
+    }
+}
+
+/// One cluster's [`MemPort`] into the shared HBM: routes bursts to the
+/// cluster's channel and attributes traffic/queueing to both the channel
+/// and the cluster.
+pub struct HbmPort<'a> {
+    hbm: &'a mut Hbm,
+    cluster: usize,
+}
+
+impl HbmPort<'_> {
+    fn schedule(&mut self, now: u64, bytes: u64, is_read: bool) -> BurstTiming {
+        let ch = self.hbm.channel_of(self.cluster);
+        let (latency, ic_latency) = (self.hbm.latency, self.hbm.ic_latency);
+        let c = &mut self.hbm.channels[ch];
+        let (timing, queued) =
+            schedule_burst(&mut c.busy_until, now, bytes, c.bytes_per_cycle, latency, ic_latency);
+        c.bursts += 1;
+        c.queue_cycles += queued;
+        let s = &mut self.hbm.cluster_stats[self.cluster];
+        s.bursts += 1;
+        s.queue_cycles += queued;
+        if is_read {
+            c.bytes_read += bytes;
+            s.bytes_read += bytes;
+        } else {
+            c.bytes_written += bytes;
+            s.bytes_written += bytes;
+        }
+        timing
+    }
+}
+
+impl MemPort for HbmPort<'_> {
+    fn schedule_read(&mut self, now: u64, bytes: u64) -> BurstTiming {
+        self.schedule(now, bytes, true)
+    }
+
+    fn schedule_write(&mut self, now: u64, bytes: u64) -> BurstTiming {
+        self.schedule(now, bytes, false)
+    }
+
+    fn bytes_per_cycle(&self) -> f64 {
+        self.hbm.channels[self.hbm.channel_of(self.cluster)].bytes_per_cycle
+    }
+
+    fn size(&self) -> usize {
+        self.hbm.size()
+    }
+
+    fn read_bytes(&self, addr: u64, len: usize) -> &[u8] {
+        self.hbm.read_bytes(addr, len)
+    }
+
+    fn write_bytes(&mut self, addr: u64, bytes: &[u8]) {
+        self.hbm.write_bytes(addr, bytes)
+    }
+}
+
+/// N clusters sharing one HBM: the simulator's top level.
+pub struct System {
+    pub cfg: SystemCfg,
+    pub clusters: Vec<Cluster>,
+    pub hbm: Hbm,
+    /// Global cycle counter (all clusters tick in lockstep).
+    pub cycle: u64,
+    /// First cycle at which each cluster was observed fully done.
+    pub finished_at: Vec<Option<u64>>,
+    rotate: usize,
+}
+
+impl System {
+    /// Build a system where cluster `i` runs `programs[i]` (one program
+    /// per core, as in [`Cluster::new`]).
+    pub fn new(cfg: SystemCfg, programs: Vec<Vec<Program>>) -> System {
+        let hbm = Hbm::new(&cfg);
+        let clusters = programs
+            .into_iter()
+            .map(|p| Cluster::new(cfg.cluster.clone(), p))
+            .collect();
+        System::assemble(cfg, clusters, hbm)
+    }
+
+    /// Assemble from pre-built parts. The sharded kernel drivers need
+    /// this order: the HBM image (operands, descriptors) must be placed
+    /// before the per-cluster programs exist, because program shape
+    /// depends on each shard's chunk plan.
+    pub fn assemble(cfg: SystemCfg, clusters: Vec<Cluster>, hbm: Hbm) -> System {
+        assert_eq!(clusters.len(), cfg.clusters, "cluster count mismatch");
+        assert_eq!(hbm.cluster_stats.len(), cfg.clusters, "HBM sized for wrong cluster count");
+        let n = clusters.len();
+        System {
+            cfg,
+            clusters,
+            hbm,
+            cycle: 0,
+            finished_at: vec![None; n],
+            rotate: 0,
+        }
+    }
+
+    /// Advance the whole system one cycle. Clusters are served in
+    /// rotating order so no cluster systematically wins same-cycle
+    /// channel arbitration. Fully-done clusters (cores halted, streams
+    /// and DMA drained — a state nothing can undo mid-run) are skipped:
+    /// their clock freezes at the finish line instead of burning host
+    /// time on idle ticks while slower shards drain.
+    pub fn tick(&mut self) {
+        self.cycle += 1;
+        let n = self.clusters.len();
+        for i in 0..n {
+            let k = (i + self.rotate) % n;
+            if self.clusters[k].done() {
+                continue;
+            }
+            let mut port = self.hbm.port(k);
+            self.clusters[k].tick(&mut port);
+        }
+        self.rotate = (self.rotate + 1) % n.max(1);
+        for i in 0..n {
+            if self.finished_at[i].is_none() && self.clusters[i].done() {
+                self.finished_at[i] = Some(self.clusters[i].cycle);
+            }
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.clusters.iter().all(|c| c.done())
+    }
+
+    /// Run until every cluster is done; returns the slowest cluster's
+    /// finish cycle. Panics after `limit` cycles (deadlock guard).
+    pub fn run(&mut self, limit: u64) -> u64 {
+        let start = self.cycle;
+        while !self.done() {
+            self.tick();
+            assert!(
+                self.cycle - start < limit,
+                "system did not finish within {limit} cycles ({} of {} clusters done)",
+                self.finished_at.iter().filter(|f| f.is_some()).count(),
+                self.clusters.len()
+            );
+        }
+        self.finished_cycles().into_iter().max().unwrap_or(0)
+    }
+
+    /// Per-cluster finish cycles (valid once [`System::done`]).
+    pub fn finished_cycles(&self) -> Vec<u64> {
+        self.finished_at
+            .iter()
+            .map(|f| f.expect("cluster not finished yet"))
+            .collect()
+    }
+
+    /// One cluster's aggregate run statistics (`cycles` freezes at the
+    /// cluster's own finish, see [`System::tick`]).
+    pub fn cluster_stats(&self, i: usize) -> RunStats {
+        self.clusters[i].stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::asm::Asm;
+    use crate::sim::cluster::DmaSchedule;
+    use crate::sim::dma::DmaJob;
+    use crate::sim::dram::Dram;
+    use crate::sim::isa::*;
+
+    fn halt_prog() -> Program {
+        let mut a = Asm::new();
+        a.halt();
+        a.finish()
+    }
+
+    /// A one-core cluster that waits for one DMA phase, reads the data,
+    /// and halts — the smallest program exercising the full DMA/barrier/
+    /// memory path.
+    fn dma_read_prog() -> Program {
+        let mut a = Asm::new();
+        a.barrier();
+        a.li(A0, 0);
+        a.ld(T0, A0, 0);
+        a.halt();
+        a.finish()
+    }
+
+    fn one_core_cfg() -> ClusterCfg {
+        ClusterCfg { cores: 1, ..ClusterCfg::paper_cluster() }
+    }
+
+    #[test]
+    fn one_cluster_system_matches_standalone_cluster() {
+        let cfg = one_core_cfg();
+        // standalone topology
+        let mut dram = Dram::with_params(
+            cfg.dram_bytes,
+            cfg.dram_gbps_pin,
+            cfg.dram_latency,
+            cfg.ic_latency,
+        );
+        let mut cl = Cluster::new(cfg.clone(), vec![dma_read_prog()]);
+        dram.poke(0x2000, 8, 0x5EED);
+        cl.set_dma_schedule(DmaSchedule {
+            phases: vec![vec![DmaJob::flat(0x2000, 0x0, 4096, true)]],
+        });
+        let standalone = cl.run(&mut dram, 1_000_000);
+
+        // same workload through a 1-cluster system
+        let scfg = SystemCfg {
+            clusters: 1,
+            channels: 1,
+            cluster: cfg,
+            shard_bytes: 1 << 20,
+        };
+        let mut sys = System::new(scfg, vec![vec![dma_read_prog()]]);
+        sys.hbm.poke(0x2000, 8, 0x5EED);
+        sys.clusters[0].set_dma_schedule(DmaSchedule {
+            phases: vec![vec![DmaJob::flat(0x2000, 0x0, 4096, true)]],
+        });
+        let system = sys.run(1_000_000);
+
+        assert_eq!(system, standalone, "1-cluster system must be cycle-identical");
+        assert_eq!(sys.clusters[0].ccs[0].core.regs[T0 as usize], 0x5EED);
+        assert_eq!(sys.hbm.cluster_stats[0].queue_cycles, 0);
+    }
+
+    #[test]
+    fn shared_channel_serializes_clusters() {
+        // Two DMA-only clusters each pulling 64 KiB: on one shared
+        // channel the transfers serialize; on two channels they overlap.
+        let run_with_channels = |channels: usize| -> (u64, u64) {
+            let scfg = SystemCfg {
+                clusters: 2,
+                channels,
+                cluster: one_core_cfg(),
+                shard_bytes: 1 << 20,
+            };
+            let mut sys = System::new(scfg, vec![vec![halt_prog()], vec![halt_prog()]]);
+            for i in 0..2 {
+                sys.clusters[i].set_dma_schedule(DmaSchedule {
+                    phases: vec![vec![DmaJob::flat(
+                        (i as u64) << 20,
+                        0x0,
+                        64 << 10,
+                        true,
+                    )]],
+                });
+            }
+            let cycles = sys.run(10_000_000);
+            let queued: u64 = sys
+                .hbm
+                .cluster_stats
+                .iter()
+                .map(|s| s.queue_cycles)
+                .sum();
+            (cycles, queued)
+        };
+        let (shared, shared_queued) = run_with_channels(1);
+        let (private, private_queued) = run_with_channels(2);
+        assert!(
+            shared as f64 > 1.5 * private as f64,
+            "no contention visible: shared={shared} private={private}"
+        );
+        assert!(shared_queued > 0, "shared channel must record queueing");
+        assert_eq!(private_queued, 0, "private channels must not queue");
+    }
+
+    #[test]
+    fn channel_map_interleaves_clusters() {
+        let scfg = SystemCfg {
+            clusters: 4,
+            channels: 2,
+            cluster: one_core_cfg(),
+            shard_bytes: 1 << 16,
+        };
+        let hbm = Hbm::new(&scfg);
+        assert_eq!(hbm.channel_of(0), 0);
+        assert_eq!(hbm.channel_of(1), 1);
+        assert_eq!(hbm.channel_of(2), 0);
+        assert_eq!(hbm.channel_of(3), 1);
+        assert_eq!(hbm.size(), 4 << 16);
+    }
+
+    #[test]
+    fn hbm_backing_store_roundtrip() {
+        let scfg = SystemCfg {
+            clusters: 1,
+            channels: 1,
+            cluster: one_core_cfg(),
+            shard_bytes: 1 << 12,
+        };
+        let mut hbm = Hbm::new(&scfg);
+        hbm.poke_f64(64, -3.75);
+        assert_eq!(hbm.peek_f64(64), -3.75);
+        let mut port = hbm.port(0);
+        port.poke(128, 4, 0xBEEF);
+        assert_eq!(port.peek(128, 4), 0xBEEF);
+        let t = port.schedule_read(0, 576);
+        assert_eq!(t.first_beat, 16 + 88 + 16); // identical to Dram timing
+        assert_eq!(hbm.cluster_stats[0].bytes_read, 576);
+        assert_eq!(hbm.channels[0].bytes_read, 576);
+    }
+}

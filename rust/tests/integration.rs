@@ -11,9 +11,10 @@ use sssr::coordinator::{run_cluster_smxdv, run_cluster_smxsv};
 use sssr::experiments::{ColFmt, Column, ExperimentSpec, Point, Record, Runner};
 use sssr::formats::{ops, SpVec};
 use sssr::kernels::driver::*;
+use sssr::kernels::multi::{run_system_smxdv, run_system_smxsv};
 use sssr::kernels::{IdxWidth, Variant};
 use sssr::matgen;
-use sssr::sim::ClusterCfg;
+use sssr::sim::{ClusterCfg, SystemCfg};
 use sssr::util::Pcg;
 
 const WIDTHS: [IdxWidth; 2] = [IdxWidth::U16, IdxWidth::U32];
@@ -96,6 +97,37 @@ fn property_cluster_matches_single_core() {
             assert!((x - y).abs() < 1e-9 * y.abs().max(1.0));
         }
     }
+}
+
+/// System-layer regression (public API): a one-cluster system is
+/// cycle-identical to the standalone cluster on both sharded kernels,
+/// and multi-cluster scaling shows shared-channel contention.
+#[test]
+fn system_layer_regression_and_contention() {
+    let m = matgen::random_csr(12_000, 300, 400, 9000);
+    let b = matgen::random_dense(12_001, 400);
+    let sv = matgen::random_spvec(12_002, 400, 40);
+    let ccfg = ClusterCfg::paper_cluster();
+
+    let alone_dv = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &ccfg);
+    let sys_dv =
+        run_system_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &SystemCfg::paper_system(1, 1));
+    assert_eq!(sys_dv.report.cycles, alone_dv.report.cycles, "smxdv cycle identity");
+    assert_eq!(sys_dv.result, alone_dv.result);
+
+    let alone_sv = run_cluster_smxsv(Variant::Sssr, IdxWidth::U16, &m, &sv, &ccfg);
+    let sys_sv =
+        run_system_smxsv(Variant::Sssr, IdxWidth::U16, &m, &sv, &SystemCfg::paper_system(1, 1));
+    assert_eq!(sys_sv.report.cycles, alone_sv.report.cycles, "smxsv cycle identity");
+    assert_eq!(sys_sv.result, alone_sv.result);
+
+    // four clusters on one shared channel: strictly sub-linear scaling
+    let four =
+        run_system_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &SystemCfg::paper_system(4, 1));
+    let speedup = alone_dv.report.cycles as f64 / four.report.cycles as f64;
+    assert!(speedup < 4.0, "shared channel cannot scale linearly: {speedup}x");
+    assert_eq!(four.shards.len(), 4);
+    assert_eq!(four.reduction.combine_flops, 0);
 }
 
 /// Edge cases that have historically broken sparse kernels.
