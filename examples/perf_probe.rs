@@ -1,5 +1,5 @@
 use std::time::Instant;
-use sssr::kernels::driver::{run_smxdv_sized, run_svxsv};
+use sssr::kernels::driver::{run_smxdv, run_svxsv};
 use sssr::kernels::{IdxWidth, Variant};
 use sssr::coordinator::run_cluster_smxdv;
 use sssr::sim::ClusterCfg;
@@ -8,8 +8,8 @@ fn main() {
     let m = matgen::mycielskian(11); // 1535^2, 135k nnz
     let b = matgen::random_dense(2, m.ncols);
     let t = Instant::now();
-    let (_, rep) = run_smxdv_sized(Variant::Sssr, IdxWidth::U16, &m, &b, 16 << 20);
-    let (_, rep2) = run_smxdv_sized(Variant::Base, IdxWidth::U16, &m, &b, 16 << 20);
+    let (_, rep) = run_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b);
+    let (_, rep2) = run_smxdv(Variant::Base, IdxWidth::U16, &m, &b);
     let dt = t.elapsed().as_secs_f64();
     println!("single-CC smxdv sssr+base: {} cycles in {:.2}s = {:.2} Mcyc/s",
         rep.cycles + rep2.cycles, dt, (rep.cycles + rep2.cycles) as f64 / dt / 1e6);

@@ -4,7 +4,7 @@
 use std::time::Instant;
 
 use sssr::coordinator::run_cluster_smxdv;
-use sssr::kernels::driver::{run_smxdv_sized, run_svxsv};
+use sssr::kernels::driver::{run_smxdv, run_svxsv};
 use sssr::kernels::{IdxWidth, Variant};
 use sssr::matgen;
 use sssr::sim::ClusterCfg;
@@ -14,7 +14,7 @@ fn main() {
     let m = matgen::random_csr(1, 512, 1024, 40_000);
     let b = matgen::random_dense(2, 1024);
     let t = Instant::now();
-    let (_, rep) = run_smxdv_sized(Variant::Sssr, IdxWidth::U16, &m, &b, 16 << 20);
+    let (_, rep) = run_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b);
     let dt = t.elapsed().as_secs_f64();
     println!(
         "single-CC sssr smxdv : {:>10} cycles in {:>6.2}s = {:>7.2} Mcycles/s",

@@ -19,19 +19,20 @@
 //! image into an arbitrary [`MemPort`] region, so the same plan drives
 //! both the standalone one-cluster topology here and the row-sharded
 //! multi-cluster systems of [`crate::kernels::multi`].
+//!
+//! Execution goes through the unified kernel API: the `smxdv` / `smxsv`
+//! registry kernels dispatch their cluster target onto [`run_cluster`],
+//! and the public [`run_cluster_smxdv`] / [`run_cluster_smxsv`] helpers
+//! are thin wrappers over [`crate::kernels::api::execute`].
 
-use crate::formats::{ops, Csr, SpVec};
+use crate::formats::{Csr, SpVec};
+use crate::kernels::api::{must_execute, Detail, ExecCfg, KernelError, KernelRun, Operand, Value};
 use crate::kernels::sparse_dense::{cfg_imm, emit_smxdv_rows_sssr, N_ACC};
 use crate::kernels::{Arena, IdxWidth, Report, Variant};
 use crate::sim::asm::Asm;
 use crate::sim::dram::Dram;
 use crate::sim::isa::{ssr_mode, SsrField as F, *};
 use crate::sim::{Cluster, ClusterCfg, DmaJob, DmaSchedule, MemPort, Program};
-
-/// Deadlock guard for cluster/system kernel runs (shared with the
-/// multi-cluster drivers in [`crate::kernels::multi`], whose 1-cluster
-/// runs must stay regression-identical to this path).
-pub(crate) const LIMIT: u64 = 2_000_000_000;
 
 /// Per-core, per-phase job descriptor (7 x u64, written by the DMCC).
 const DESC_BYTES: u64 = 56;
@@ -326,14 +327,6 @@ pub struct ClusterRun {
     pub chunks: usize,
 }
 
-/// The resident vector operand of a cluster kernel: the dense vector of
-/// sM×dV or the sparse fiber of sM×sV.
-#[derive(Clone, Copy)]
-pub(crate) enum Operand<'a> {
-    Dense(&'a [f64]),
-    Fiber(&'a SpVec),
-}
-
 /// One cluster's slice of backing main memory: the planner lays the
 /// whole DRAM image (matrix, operand, descriptors, result) inside
 /// `base..base + bytes`. Standalone runs span the whole private DRAM;
@@ -406,10 +399,11 @@ fn place_in_dram(
         Operand::Dense(d) => {
             v_vals = a.alloc_f64(d.len() as u64);
         }
-        Operand::Fiber(f) => {
+        Operand::SpVec(f) => {
             v_vals = a.alloc_f64(f.nnz() as u64);
             v_idcs = a.alloc_idx(f.nnz() as u64, iw);
         }
+        _ => unreachable!("cluster resident operand is Dense or SpVec"),
     }
     let c_out = a.alloc_f64(m.nrows as u64);
     let desc = a.alloc(DESC_SLOT * 4096); // up to 4096 phases
@@ -428,7 +422,7 @@ fn place_in_dram(
                 mem.poke_f64(v_vals + 8 * i as u64, v);
             }
         }
-        Operand::Fiber(f) => {
+        Operand::SpVec(f) => {
             for (i, &v) in f.vals.iter().enumerate() {
                 mem.poke_f64(v_vals + 8 * i as u64, v);
             }
@@ -436,6 +430,7 @@ fn place_in_dram(
                 mem.poke(v_idcs + iw.bytes() * i as u64, iw.bytes(), x as u64);
             }
         }
+        _ => unreachable!("cluster resident operand is Dense or SpVec"),
     }
     DramImage { m_vals, m_idcs, m_ptrs, v_vals, v_idcs, c_out, desc }
 }
@@ -459,7 +454,8 @@ pub(crate) fn plan_job(
     // --- chunk planning against the available buffer budget -----------
     let resident = match operand {
         Operand::Dense(d) => d.len() as u64 * 8,
-        Operand::Fiber(f) => f.nnz() as u64 * (8 + iw.bytes()) + 24,
+        Operand::SpVec(f) => f.nnz() as u64 * (8 + iw.bytes()) + 24,
+        _ => unreachable!("cluster resident operand is Dense or SpVec"),
     };
     // resident vector + result + 2 descriptor slots + slack
     let reserve = resident + m.nrows as u64 * 8 + 2 * DESC_SLOT + 1024;
@@ -486,9 +482,10 @@ pub(crate) fn plan_job(
     let mut ar = Arena::new(0, tcdm);
     let vec_vals = ar.alloc_f64(match operand {
         Operand::Dense(d) => d.len() as u64,
-        Operand::Fiber(f) => f.nnz() as u64,
+        Operand::SpVec(f) => f.nnz() as u64,
+        _ => unreachable!("cluster resident operand is Dense or SpVec"),
     });
-    let vec_idcs = if let Operand::Fiber(f) = operand {
+    let vec_idcs = if let Operand::SpVec(f) = operand {
         ar.alloc_idx(f.nnz() as u64, iw)
     } else {
         0
@@ -520,7 +517,8 @@ pub(crate) fn plan_job(
     // --- program + DRAM image -------------------------------------------
     let prog = match operand {
         Operand::Dense(_) => build_worker_smxdv(variant, iw, nphases),
-        Operand::Fiber(_) => build_worker_smxsv(variant, iw, nphases),
+        Operand::SpVec(_) => build_worker_smxsv(variant, iw, nphases),
+        _ => unreachable!("cluster resident operand is Dense or SpVec"),
     };
     let img = place_in_dram(mem, &region, m, iw, operand);
 
@@ -533,7 +531,7 @@ pub(crate) fn plan_job(
             (S7, (d0 ^ d1) as i64),
             (A2, layout.vec_vals as i64),
         ];
-        if let Operand::Fiber(f) = operand {
+        if let Operand::SpVec(f) = operand {
             regs.push((S8, layout.vec_idcs as i64));
             regs.push((S9, f.nnz() as i64));
         }
@@ -595,14 +593,15 @@ pub(crate) fn plan_job(
         Operand::Dense(d) => {
             phases[0].insert(0, DmaJob::flat(img.v_vals, layout.vec_vals, d.len() as u64 * 8, true));
         }
-        Operand::Fiber(f) if f.nnz() > 0 => {
+        Operand::SpVec(f) if f.nnz() > 0 => {
             phases[0].insert(0, DmaJob::flat(img.v_vals, layout.vec_vals, f.nnz() as u64 * 8, true));
             phases[0].insert(
                 1,
                 DmaJob::flat(img.v_idcs, layout.vec_idcs, (f.nnz() as u64 * iw.bytes() + 15) & !7, true),
             );
         }
-        Operand::Fiber(_) => {} // empty operand fiber: nothing to stage
+        Operand::SpVec(_) => {} // empty operand fiber: nothing to stage
+        _ => unreachable!("cluster resident operand is Dense or SpVec"),
     }
     // phases[nphases] stays empty (release before the last compute);
     // the final barrier triggers the result writeback.
@@ -622,15 +621,18 @@ pub(crate) fn plan_job(
 /// Shared standalone-cluster run implementation for sM×dV / sM×sV: one
 /// cluster in front of its own private DRAM channel (the paper's §4.2
 /// topology). The multi-cluster counterpart lives in
-/// [`crate::kernels::multi`] and shares [`plan_job`].
-fn run_cluster(
+/// [`crate::kernels::multi`] and shares [`plan_job`]. `operand` is the
+/// resident vector ([`Operand::Dense`] or [`Operand::SpVec`]); a run
+/// exceeding `limit` cycles surfaces as [`KernelError::Hang`].
+pub(crate) fn run_cluster(
     variant: Variant,
     iw: IdxWidth,
     m: &Csr,
     operand: Operand,
     cfg: &ClusterCfg,
     payload: u64,
-) -> ClusterRun {
+    limit: u64,
+) -> Result<ClusterRun, KernelError> {
     let mut dram = Dram::with_params(
         cfg.dram_bytes,
         cfg.dram_gbps_pin,
@@ -641,44 +643,56 @@ fn run_cluster(
     let job = plan_job(variant, iw, m, operand, cfg, &mut dram, MemRegion { base: 0, bytes });
     let mut cl = Cluster::new(cfg.clone(), vec![job.prog.clone(); cfg.cores]);
     job.apply(&mut cl);
-    let cycles = cl.run(&mut dram, LIMIT);
+    let cycles = cl
+        .try_run(&mut dram, limit)
+        .map_err(|cycles| KernelError::Hang { kernel: "", cycles })?;
     let stats = cl.stats();
     let result: Vec<f64> = (0..m.nrows)
         .map(|r| dram.peek_f64(job.c_out + 8 * r as u64))
         .collect();
-    ClusterRun {
+    Ok(ClusterRun {
         result,
         report: Report::from_run(cycles, payload, stats),
         chunks: job.chunks,
+    })
+}
+
+/// Unwrap a [`must_execute`] outcome into the cluster-run shape.
+fn cluster_run_of(run: KernelRun) -> ClusterRun {
+    let KernelRun { output, report, detail } = run;
+    match (output, detail) {
+        (Value::Dense(result), Detail::Cluster { chunks }) => ClusterRun { result, report, chunks },
+        _ => unreachable!("cluster execution yields a dense result"),
     }
 }
 
-/// Parallel sM×dV on the cluster (Fig. 5a workload). Verifies against
-/// the dense oracle.
-pub fn run_cluster_smxdv(variant: Variant, iw: IdxWidth, m: &Csr, b: &[f64], cfg: &ClusterCfg) -> ClusterRun {
-    assert_eq!(m.ncols, b.len());
-    let run = run_cluster(variant, iw, m, Operand::Dense(b), cfg, m.nnz() as u64);
-    let want = ops::smxdv(m, b);
-    for (i, (g, w)) in run.result.iter().zip(&want).enumerate() {
-        let tol = 1e-9 * w.abs().max(1.0);
-        assert!((g - w).abs() <= tol, "cluster smxdv[{i}]: {g} vs {w}");
-    }
-    run
+/// Parallel sM×dV on the cluster (Fig. 5a workload): thin wrapper over
+/// [`must_execute`] with [`ExecCfg::cluster`] (which verifies against the
+/// dense oracle).
+pub fn run_cluster_smxdv(
+    variant: Variant,
+    iw: IdxWidth,
+    m: &Csr,
+    b: &[f64],
+    cfg: &ClusterCfg,
+) -> ClusterRun {
+    let ops = [Operand::Csr(m), Operand::Dense(b)];
+    let run = must_execute("smxdv", variant, iw, &ops, &ExecCfg::cluster(cfg.clone()));
+    cluster_run_of(run)
 }
 
-/// Parallel sM×sV on the cluster (Fig. 5b workload).
-pub fn run_cluster_smxsv(variant: Variant, iw: IdxWidth, m: &Csr, b: &SpVec, cfg: &ClusterCfg) -> ClusterRun {
-    assert_eq!(m.ncols, b.dim);
-    let payload: u64 = (0..m.nrows)
-        .map(|r| ops::svosv(&m.row_spvec(r), b).nnz() as u64)
-        .sum();
-    let run = run_cluster(variant, iw, m, Operand::Fiber(b), cfg, payload);
-    let want = ops::smxsv(m, b);
-    for (i, (g, w)) in run.result.iter().zip(&want).enumerate() {
-        let tol = 1e-9 * w.abs().max(1.0);
-        assert!((g - w).abs() <= tol, "cluster smxsv[{i}]: {g} vs {w}");
-    }
-    run
+/// Parallel sM×sV on the cluster (Fig. 5b workload): thin wrapper over
+/// [`must_execute`] with [`ExecCfg::cluster`].
+pub fn run_cluster_smxsv(
+    variant: Variant,
+    iw: IdxWidth,
+    m: &Csr,
+    b: &SpVec,
+    cfg: &ClusterCfg,
+) -> ClusterRun {
+    let ops = [Operand::Csr(m), Operand::SpVec(b)];
+    let run = must_execute("smxsv", variant, iw, &ops, &ExecCfg::cluster(cfg.clone()));
+    cluster_run_of(run)
 }
 
 #[cfg(test)]

@@ -11,22 +11,14 @@
 //! 407 k stored nonzeros). Every grid point seeds its own workload
 //! generators, so results are independent of `--jobs`.
 
-use crate::coordinator::{run_cluster_smxdv, run_cluster_smxsv};
 use crate::experiments::{grid2, ColFmt, Column, ExperimentSpec, Point, Record};
 use crate::formats::SpVec;
-use crate::kernels::driver::{
-    run_smxdv_sized, run_smxsv_sized, run_svpdv, run_svpdv_unchecked, run_svpsv, run_svxdv,
-    run_svxsv,
-};
-use crate::kernels::multi::{run_system_smxdv, run_system_smxsv, SystemRun};
-use crate::kernels::{IdxWidth, Variant};
+use crate::kernels::api::{must_execute, Detail, ExecCfg, KernelRun, Operand};
+use crate::kernels::{IdxWidth, Report, Variant};
 use crate::matgen;
 use crate::model::energy::EnergyModel;
 use crate::model::{streamer_area, streamer_min_period_ps, SlotKind, StreamerCfg};
 use crate::sim::{ClusterCfg, SystemCfg};
-
-/// Enlarged single-CC TCDM for the §4.1 "matrix fits the TCDM" runs.
-pub const BIG_TCDM: usize = 16 << 20;
 
 pub fn full_mode() -> bool {
     std::env::var("REPRO_FULL").map(|v| v == "1").unwrap_or(false)
@@ -178,28 +170,35 @@ pub fn spec_fig4a() -> ExperimentSpec {
                     .num("utilization", utilization)
                     .opt_num("utilization_nored", nored)
             };
+            let svxdv = |v: Variant, iw: IdxWidth, a: &SpVec, b: &[f64], skip: bool| -> Report {
+                let mut cfg = ExecCfg::single_cc();
+                if skip {
+                    cfg = cfg.skip_reduction();
+                }
+                must_execute("svxdv", v, iw, &[Operand::SpVec(a), Operand::Dense(b)], &cfg).report
+            };
             let mut out = vec![];
             let a16 = matgen::random_spvec(200 + nnz as u64, dim16, nnz);
             // BASE and SSR perform identically for all index sizes (§4.1.1)
-            let (_, r) = run_svxdv(Variant::Base, IdxWidth::U16, &a16, &b16, false);
+            let r = svxdv(Variant::Base, IdxWidth::U16, &a16, &b16, false);
             out.push(rec("base", r.utilization, None));
-            let (_, r) = run_svxdv(Variant::Ssr, IdxWidth::U16, &a16, &b16, false);
+            let r = svxdv(Variant::Ssr, IdxWidth::U16, &a16, &b16, false);
             out.push(rec("ssr", r.utilization, None));
             for (name, iw) in [("sssr16", IdxWidth::U16), ("sssr32", IdxWidth::U32)] {
-                let (_, with) = run_svxdv(Variant::Sssr, iw, &a16, &b16, false);
-                let (_, wo) = run_svxdv(Variant::Sssr, iw, &a16, &b16, true);
+                let with = svxdv(Variant::Sssr, iw, &a16, &b16, false);
+                let wo = svxdv(Variant::Sssr, iw, &a16, &b16, true);
                 out.push(rec(name, with.utilization, Some(wo.utilization)));
             }
             if nnz <= dim8 {
                 let a8 = matgen::random_spvec(300 + nnz as u64, dim8, nnz);
-                let (_, with) = run_svxdv(Variant::Sssr, IdxWidth::U8, &a8, &b8, false);
-                let (_, wo) = run_svxdv(Variant::Sssr, IdxWidth::U8, &a8, &b8, true);
+                let with = svxdv(Variant::Sssr, IdxWidth::U8, &a8, &b8, false);
+                let wo = svxdv(Variant::Sssr, IdxWidth::U8, &a8, &b8, true);
                 out.push(rec("sssr8", with.utilization, Some(wo.utilization)));
             }
             // repeated 8-bit indices scale past 256 nonzeros
             let a8r = repeated_idx_fiber(400 + nnz as u64, dim8, nnz);
-            let (_, with) = run_svxdv(Variant::Sssr, IdxWidth::U8, &a8r, &b8, false);
-            let (_, wo) = run_svxdv(Variant::Sssr, IdxWidth::U8, &a8r, &b8, true);
+            let with = svxdv(Variant::Sssr, IdxWidth::U8, &a8r, &b8, false);
+            let wo = svxdv(Variant::Sssr, IdxWidth::U8, &a8r, &b8, true);
             out.push(rec("sssr8r", with.utilization, Some(wo.utilization)));
             out
         }),
@@ -221,13 +220,14 @@ pub fn spec_fig4b() -> ExperimentSpec {
             let nnz = p.nnz.unwrap();
             let mut out = vec![];
             let a16 = matgen::random_spvec(500 + nnz as u64, dim16, nnz);
+            let ops = [Operand::SpVec(&a16), Operand::Dense(&b16)];
             for (name, v, iw) in [
                 ("base", Variant::Base, IdxWidth::U16),
                 ("ssr", Variant::Ssr, IdxWidth::U16),
                 ("sssr16", Variant::Sssr, IdxWidth::U16),
                 ("sssr32", Variant::Sssr, IdxWidth::U32),
             ] {
-                let (_, r) = run_svpdv(v, iw, &a16, &b16);
+                let r = must_execute("svpdv", v, iw, &ops, &ExecCfg::single_cc()).report;
                 out.push(
                     Record::new("fig4b")
                         .str("variant", name)
@@ -235,10 +235,18 @@ pub fn spec_fig4b() -> ExperimentSpec {
                         .num("utilization", r.utilization),
                 );
             }
-            // timing-only: repeated indices make the in-place update
-            // order-dependent (see run_svpdv_unchecked)
+            // timing-only (ExecCfg::unchecked): repeated indices make
+            // the in-place update order-dependent
             let a8r = repeated_idx_fiber(600 + nnz as u64, dim8, nnz);
-            let (_, r) = run_svpdv_unchecked(Variant::Sssr, IdxWidth::U8, &a8r, &b8);
+            let ops = [Operand::SpVec(&a8r), Operand::Dense(&b8)];
+            let r = must_execute(
+                "svpdv",
+                Variant::Sssr,
+                IdxWidth::U8,
+                &ops,
+                &ExecCfg::single_cc().unchecked(),
+            )
+            .report;
             out.push(
                 Record::new("fig4b")
                     .str("variant", "sssr8r")
@@ -269,14 +277,16 @@ pub fn spec_fig4c() -> ExperimentSpec {
         measure: Box::new(move |p: &Point| {
             let e = &corpus[p.idx.unwrap()];
             let b = matgen::random_dense(700, e.matrix.ncols);
-            let (_, base) = run_smxdv_sized(Variant::Base, IdxWidth::U16, &e.matrix, &b, BIG_TCDM);
+            let ops = [Operand::Csr(&e.matrix), Operand::Dense(&b)];
+            let cfg = ExecCfg::single_cc();
+            let base = must_execute("smxdv", Variant::Base, IdxWidth::U16, &ops, &cfg).report;
             let mut out = vec![];
             for (name, v, iw) in [
                 ("ssr", Variant::Ssr, IdxWidth::U16),
                 ("sssr16", Variant::Sssr, IdxWidth::U16),
                 ("sssr32", Variant::Sssr, IdxWidth::U32),
             ] {
-                let (_, r) = run_smxdv_sized(v, iw, &e.matrix, &b, BIG_TCDM);
+                let r = must_execute("smxdv", v, iw, &ops, &cfg).report;
                 out.push(
                     Record::new("fig4c")
                         .str("matrix", e.name)
@@ -295,9 +305,10 @@ pub fn spec_fig4c() -> ExperimentSpec {
 // Fig. 4d/4e — single-CC sV×sV / sV+sV speedups vs operand densities
 // ======================================================================
 
-/// Shared spec for the sparse-sparse vector kernels. The paper uses
-/// dense size 60k; quick mode uses 20k (same density semantics, smaller
-/// wall time).
+/// Shared spec for the sparse-sparse vector kernels, parameterized by
+/// registry kernel name (`"svxsv"` / `"svpsv"`). The paper uses dense
+/// size 60k; quick mode uses 20k (same density semantics, smaller wall
+/// time).
 fn spec_svv(name: &'static str, title: &str, which: &'static str) -> ExperimentSpec {
     let dim = if full_mode() { 60_000 } else { 20_000 };
     let ds = density_sweep();
@@ -316,19 +327,10 @@ fn spec_svv(name: &'static str, title: &str, which: &'static str) -> ExperimentS
             let nb = ((db * dim as f64) as usize).max(1);
             let a = matgen::random_spvec(800 + na as u64, dim, na);
             let b = matgen::random_spvec(900 + nb as u64, dim, nb);
-            let (base, sssr) = match which {
-                "svxsv" => {
-                    let (_, x) = run_svxsv(Variant::Base, IdxWidth::U32, &a, &b);
-                    let (_, y) = run_svxsv(Variant::Sssr, IdxWidth::U32, &a, &b);
-                    (x, y)
-                }
-                "svpsv" => {
-                    let (_, x) = run_svpsv(Variant::Base, IdxWidth::U32, &a, &b);
-                    let (_, y) = run_svpsv(Variant::Sssr, IdxWidth::U32, &a, &b);
-                    (x, y)
-                }
-                _ => unreachable!(),
-            };
+            let ops = [Operand::SpVec(&a), Operand::SpVec(&b)];
+            let cfg = ExecCfg::single_cc();
+            let base = must_execute(which, Variant::Base, IdxWidth::U32, &ops, &cfg).report;
+            let sssr = must_execute(which, Variant::Sssr, IdxWidth::U32, &ops, &cfg).report;
             vec![Record::new(name)
                 .num("density_a", da)
                 .num("density_b", db)
@@ -368,8 +370,10 @@ pub fn spec_fig4f() -> ExperimentSpec {
             let dv = p.density_a.unwrap();
             let nnz = ((dv * e.matrix.ncols as f64) as usize).max(1);
             let b = matgen::random_spvec(1000 + nnz as u64, e.matrix.ncols, nnz);
-            let (_, base) = run_smxsv_sized(Variant::Base, IdxWidth::U16, &e.matrix, &b, BIG_TCDM);
-            let (_, sssr) = run_smxsv_sized(Variant::Sssr, IdxWidth::U16, &e.matrix, &b, BIG_TCDM);
+            let ops = [Operand::Csr(&e.matrix), Operand::SpVec(&b)];
+            let cfg = ExecCfg::single_cc();
+            let base = must_execute("smxsv", Variant::Base, IdxWidth::U16, &ops, &cfg).report;
+            let sssr = must_execute("smxsv", Variant::Sssr, IdxWidth::U16, &ops, &cfg).report;
             vec![Record::new("fig4f")
                 .str("matrix", e.name)
                 .num("avg_row_nnz", e.matrix.avg_row_nnz())
@@ -388,21 +392,21 @@ fn cluster_record(
     name: &str,
     avg_row_nnz: f64,
     density: f64,
-    base: &crate::coordinator::ClusterRun,
-    sssr: &crate::coordinator::ClusterRun,
+    base: &Report,
+    sssr: &Report,
     cores: usize,
 ) -> Record {
     Record::new(experiment)
         .str("matrix", name)
         .num("avg_row_nnz", avg_row_nnz)
         .num("density", density)
-        .num("speedup", base.report.cycles as f64 / sssr.report.cycles as f64)
+        .num("speedup", base.cycles as f64 / sssr.cycles as f64)
         .num(
             "utilization",
-            sssr.report.payload as f64 / (sssr.report.cycles as f64 * cores as f64),
+            sssr.payload as f64 / (sssr.cycles as f64 * cores as f64),
         )
-        .int("base_cycles", base.report.cycles as i64)
-        .int("sssr_cycles", sssr.report.cycles as i64)
+        .int("base_cycles", base.cycles as i64)
+        .int("sssr_cycles", sssr.cycles as i64)
 }
 
 pub fn spec_fig5a() -> ExperimentSpec {
@@ -421,8 +425,10 @@ pub fn spec_fig5a() -> ExperimentSpec {
             let cfg = ClusterCfg::paper_cluster();
             let e = &corpus[p.idx.unwrap()];
             let b = matgen::random_dense(1100, e.matrix.ncols);
-            let base = run_cluster_smxdv(Variant::Base, IdxWidth::U16, &e.matrix, &b, &cfg);
-            let sssr = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &e.matrix, &b, &cfg);
+            let ops = [Operand::Csr(&e.matrix), Operand::Dense(&b)];
+            let ec = ExecCfg::cluster(cfg.clone());
+            let base = must_execute("smxdv", Variant::Base, IdxWidth::U16, &ops, &ec).report;
+            let sssr = must_execute("smxdv", Variant::Sssr, IdxWidth::U16, &ops, &ec).report;
             vec![cluster_record(
                 "fig5a",
                 e.name,
@@ -456,8 +462,10 @@ pub fn spec_fig5b() -> ExperimentSpec {
             let dv = p.density_a.unwrap();
             let nnz = ((dv * e.matrix.ncols as f64) as usize).max(1);
             let b = matgen::random_spvec(1200 + nnz as u64, e.matrix.ncols, nnz);
-            let base = run_cluster_smxsv(Variant::Base, IdxWidth::U16, &e.matrix, &b, &cfg);
-            let sssr = run_cluster_smxsv(Variant::Sssr, IdxWidth::U16, &e.matrix, &b, &cfg);
+            let ops = [Operand::Csr(&e.matrix), Operand::SpVec(&b)];
+            let ec = ExecCfg::cluster(cfg.clone());
+            let base = must_execute("smxsv", Variant::Base, IdxWidth::U16, &ops, &ec).report;
+            let sssr = must_execute("smxsv", Variant::Sssr, IdxWidth::U16, &ops, &ec).report;
             vec![cluster_record(
                 "fig5b",
                 e.name,
@@ -500,23 +508,25 @@ fn spec_fig6(
         points,
         measure: Box::new(move |p: &Point| {
             let x = p.x.unwrap();
-            let cfg = cfg_of(x);
+            let ec = ExecCfg::cluster(cfg_of(x));
             let mut out = vec![];
-            let base = run_cluster_smxdv(Variant::Base, IdxWidth::U16, &m, &b, &cfg);
-            let sssr = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &cfg);
+            let ops = [Operand::Csr(&m), Operand::Dense(&b)];
+            let base = must_execute("smxdv", Variant::Base, IdxWidth::U16, &ops, &ec).report;
+            let sssr = must_execute("smxdv", Variant::Sssr, IdxWidth::U16, &ops, &ec).report;
             out.push(
                 Record::new(name)
                     .num("x", x)
                     .str("kernel", "smxdv")
-                    .num("speedup", base.report.cycles as f64 / sssr.report.cycles as f64),
+                    .num("speedup", base.cycles as f64 / sssr.cycles as f64),
             );
-            let base = run_cluster_smxsv(Variant::Base, IdxWidth::U16, &m, &sv, &cfg);
-            let sssr = run_cluster_smxsv(Variant::Sssr, IdxWidth::U16, &m, &sv, &cfg);
+            let ops = [Operand::Csr(&m), Operand::SpVec(&sv)];
+            let base = must_execute("smxsv", Variant::Base, IdxWidth::U16, &ops, &ec).report;
+            let sssr = must_execute("smxsv", Variant::Sssr, IdxWidth::U16, &ops, &ec).report;
             out.push(
                 Record::new(name)
                     .num("x", x)
                     .str("kernel", "smxsv")
-                    .num("speedup", base.report.cycles as f64 / sssr.report.cycles as f64),
+                    .num("speedup", base.cycles as f64 / sssr.cycles as f64),
             );
             out
         }),
@@ -611,9 +621,17 @@ fn scale_record(
     channels: usize,
     clusters: usize,
     base_cycles: u64,
-    run: &SystemRun,
+    run: &KernelRun,
 ) -> Record {
+    let (queue_cycles, skew_cycles) = match &run.detail {
+        Detail::System { shards, reduction } => (
+            shards.iter().map(|s| s.hbm.queue_cycles).sum::<u64>(),
+            reduction.skew_cycles,
+        ),
+        _ => unreachable!("scale sweeps run on the system target"),
+    };
     let speedup = base_cycles as f64 / run.report.cycles as f64;
+    let utilization = run.report.per_core_utilization();
     Record::new(name)
         .str("matrix", matrix)
         .int("channels", channels as i64)
@@ -621,13 +639,10 @@ fn scale_record(
         .int("cycles", run.report.cycles as i64)
         .num("speedup", speedup)
         .num("efficiency", speedup / clusters as f64)
-        .int(
-            "queue_cycles",
-            run.shards.iter().map(|s| s.hbm.queue_cycles).sum::<u64>() as i64,
-        )
-        .int("skew_cycles", run.reduction.skew_cycles as i64)
+        .int("queue_cycles", queue_cycles as i64)
+        .int("skew_cycles", skew_cycles as i64)
         .int("hbm_bytes", run.report.stats.dram_bytes as i64)
-        .num("utilization", run.utilization())
+        .num("utilization", utilization)
 }
 
 /// Shared shape of the `scale`/`scale_sv` sweeps: one grid point per
@@ -646,7 +661,7 @@ fn spec_scale_kernel(name: &'static str, title: String, smxsv: bool) -> Experime
             points.push(Point::at(i).label(e.name).x(ch as f64));
         }
     }
-    let baselines: Vec<std::sync::OnceLock<SystemRun>> =
+    let baselines: Vec<std::sync::OnceLock<KernelRun>> =
         corpus.iter().map(|_| std::sync::OnceLock::new()).collect();
     ExperimentSpec {
         name,
@@ -667,14 +682,16 @@ fn spec_scale_kernel(name: &'static str, title: String, smxsv: bool) -> Experime
                 dense = Some(matgen::random_dense(1700, e.matrix.ncols));
                 fiber = None;
             }
-            let run_at = |clusters: usize, channels: usize| -> SystemRun {
-                let cfg = SystemCfg::paper_system(clusters, channels);
+            let run_at = |clusters: usize, channels: usize| -> KernelRun {
+                let ec = ExecCfg::system(SystemCfg::paper_system(clusters, channels));
                 match (&dense, &fiber) {
                     (Some(b), _) => {
-                        run_system_smxdv(Variant::Sssr, IdxWidth::U16, &e.matrix, b, &cfg)
+                        let ops = [Operand::Csr(&e.matrix), Operand::Dense(b)];
+                        must_execute("smxdv", Variant::Sssr, IdxWidth::U16, &ops, &ec)
                     }
                     (_, Some(v)) => {
-                        run_system_smxsv(Variant::Sssr, IdxWidth::U16, &e.matrix, v, &cfg)
+                        let ops = [Operand::Csr(&e.matrix), Operand::SpVec(v)];
+                        must_execute("smxsv", Variant::Sssr, IdxWidth::U16, &ops, &ec)
                     }
                     _ => unreachable!(),
                 }
@@ -801,19 +818,22 @@ fn spec_fig8(name: &'static str, title: &str, kernel: &'static str) -> Experimen
             let cfg = ClusterCfg::paper_cluster();
             let em = EnergyModel::default();
             let e = &corpus[p.idx.unwrap()];
-            let runs: Vec<(&'static str, crate::coordinator::ClusterRun, u64)> = match kernel {
+            let ec = ExecCfg::cluster(cfg.clone());
+            let runs: Vec<(&'static str, KernelRun, u64)> = match kernel {
                 "smxdv" => {
                     let b = matgen::random_dense(1500, e.matrix.ncols);
-                    let base = run_cluster_smxdv(Variant::Base, IdxWidth::U16, &e.matrix, &b, &cfg);
-                    let sssr = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &e.matrix, &b, &cfg);
+                    let ops = [Operand::Csr(&e.matrix), Operand::Dense(&b)];
+                    let base = must_execute("smxdv", Variant::Base, IdxWidth::U16, &ops, &ec);
+                    let sssr = must_execute("smxdv", Variant::Sssr, IdxWidth::U16, &ops, &ec);
                     let nnz = e.matrix.nnz() as u64;
                     vec![("base", base, nnz), ("sssr", sssr, nnz)]
                 }
                 "smxsv" => {
                     let nnz_v = ((0.01 * e.matrix.ncols as f64) as usize).max(1);
                     let b = matgen::random_spvec(1600, e.matrix.ncols, nnz_v);
-                    let base = run_cluster_smxsv(Variant::Base, IdxWidth::U16, &e.matrix, &b, &cfg);
-                    let sssr = run_cluster_smxsv(Variant::Sssr, IdxWidth::U16, &e.matrix, &b, &cfg);
+                    let ops = [Operand::Csr(&e.matrix), Operand::SpVec(&b)];
+                    let base = must_execute("smxsv", Variant::Base, IdxWidth::U16, &ops, &ec);
+                    let sssr = must_execute("smxsv", Variant::Sssr, IdxWidth::U16, &ops, &ec);
                     // Fig. 8b normalizes per *matrix nonzero*
                     let nnz = e.matrix.nnz() as u64;
                     vec![("base", base, nnz), ("sssr", sssr, nnz)]

@@ -1,0 +1,1039 @@
+//! The unified, typed kernel execution API.
+//!
+//! The paper's pitch is *generality*: one stream extension serving
+//! sparse-dense, sparse-sparse, stencil, and graph workloads across
+//! formats, index widths, and machine scales (§3.2, §4.1). This module
+//! mirrors that taxonomy in the type system so the rest of the crate —
+//! harness, CLI, benches, tests — talks to every kernel through one
+//! entry point instead of a dozen bespoke `run_*` signatures:
+//!
+//! - a [`Kernel`] describes one operation: its registry [`Kernel::name`],
+//!   supported [`Variant`]s / [`IdxWidth`]s / [`TargetKind`]s, typed
+//!   [`Operand`] signature, program builder, TCDM placement, oracle, and
+//!   randomized [`Kernel::sample`] workloads;
+//! - [`REGISTRY`] enumerates every implemented kernel (`repro kernel
+//!   --list` renders it);
+//! - [`execute`] drives any kernel on any supported target —
+//!   [`Target::SingleCc`], [`Target::Cluster`], or [`Target::System`] —
+//!   and returns a [`KernelRun`] (output [`Value`], cycle [`Report`],
+//!   per-target [`Detail`]) or a typed [`KernelError`] instead of a
+//!   process abort.
+//!
+//! # Adding a new kernel
+//!
+//! Implement [`Kernel`] for a unit struct and add it to [`REGISTRY`]:
+//!
+//! ```
+//! use sssr::kernels::api::{
+//!     self, dense_at, execute, Cc, ExecCfg, KernelError, Operand, OutSpec, OwnedOperand, Value,
+//! };
+//! use sssr::kernels::{IdxWidth, Variant};
+//! use sssr::sim::{isa::*, Asm, Program};
+//!
+//! /// Dense vector scale-by-2 (toy example).
+//! struct Scale2;
+//!
+//! impl api::Kernel for Scale2 {
+//!     fn name(&self) -> &'static str {
+//!         "scale2"
+//!     }
+//!     fn describe(&self) -> &'static str {
+//!         "dense out[i] = 2 * a[i] (toy)"
+//!     }
+//!     fn signature(&self) -> &'static str {
+//!         "Dense(a)"
+//!     }
+//!     fn variants(&self) -> &'static [Variant] {
+//!         &[Variant::Base]
+//!     }
+//!     fn validate(&self, ops: &[Operand], _iw: IdxWidth) -> Result<(), KernelError> {
+//!         api::expect_kinds(self.name(), self.signature(), ops, &["Dense"])
+//!     }
+//!     fn payload(&self, ops: &[Operand]) -> u64 {
+//!         dense_at(ops, 0).len() as u64
+//!     }
+//!     fn oracle(&self, ops: &[Operand]) -> Value {
+//!         Value::Dense(dense_at(ops, 0).iter().map(|x| 2.0 * x).collect())
+//!     }
+//!     fn program(&self, _v: Variant, _iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+//!         let mut a = Asm::new();
+//!         a.label("loop");
+//!         a.fld(FT0, A0, 0);
+//!         a.fadd_d(FT0, FT0, FT0);
+//!         a.fsd(FT0, A1, 0);
+//!         a.addi(A0, A0, 8);
+//!         a.addi(A1, A1, 8);
+//!         a.addi(A2, A2, -1);
+//!         a.bne(A2, ZERO, "loop");
+//!         a.fpu_fence();
+//!         a.halt();
+//!         a.finish()
+//!     }
+//!     fn place(&self, cc: &mut Cc, _iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+//!         let a = dense_at(ops, 0);
+//!         let src = cc.place_dense(a);
+//!         let out = cc.arena.alloc_f64(a.len() as u64);
+//!         cc.args(&[(A0, src as i64), (A1, out as i64), (A2, a.len() as i64)]);
+//!         OutSpec::Dense { addr: out, len: a.len() }
+//!     }
+//!     fn sample(&self, seed: u64, _iw: IdxWidth) -> Vec<OwnedOperand> {
+//!         vec![OwnedOperand::Dense(sssr::matgen::random_dense(seed, 64))]
+//!     }
+//! }
+//!
+//! let ops = [Operand::Dense(&[1.0, 2.0, 3.0])];
+//! let run = execute(&Scale2, Variant::Base, IdxWidth::U16, &ops, &ExecCfg::single_cc()).unwrap();
+//! assert_eq!(run.output, Value::Dense(vec![2.0, 4.0, 6.0]));
+//! ```
+
+use std::fmt;
+
+use crate::formats::{Csr, SpVec};
+use crate::sim::tcdm::Tcdm;
+use crate::sim::{Cluster, ClusterCfg, Program, RunStats, SystemCfg};
+
+use super::multi::{ReduceStats, ShardRun};
+use super::{Arena, IdxWidth, Report, Variant};
+
+/// Deadlock guard for single-CC kernel runs (overridable per run via
+/// [`ExecCfg::limit`]).
+pub const SINGLE_CC_LIMIT: u64 = 50_000_000;
+
+/// Deadlock guard for cluster and multi-cluster system runs.
+pub const CLUSTER_LIMIT: u64 = 2_000_000_000;
+
+/// Enlarged single-CC TCDM honoring the §4.1 "matrix fits the TCDM"
+/// methodology (timing is bank-, not capacity-, dependent).
+pub const BIG_TCDM: usize = 16 << 20;
+
+// =====================================================================
+// operands and values
+// =====================================================================
+
+/// One typed kernel operand (the unification of the coordinator's
+/// former private `Operand` enum with the single-CC driver signatures).
+#[derive(Clone, Copy, Debug)]
+pub enum Operand<'a> {
+    /// A CSR sparse matrix.
+    Csr(&'a Csr),
+    /// A sparse vector fiber.
+    SpVec(&'a SpVec),
+    /// A dense `f64` array.
+    Dense(&'a [f64]),
+    /// A raw index array (e.g. codebook codes).
+    Idx(&'a [u32]),
+    /// A small integer parameter (e.g. `log2` of a dense matrix width).
+    Scalar(i64),
+}
+
+impl Operand<'_> {
+    /// Operand kind tag used in signatures and error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Operand::Csr(_) => "Csr",
+            Operand::SpVec(_) => "SpVec",
+            Operand::Dense(_) => "Dense",
+            Operand::Idx(_) => "Idx",
+            Operand::Scalar(_) => "Scalar",
+        }
+    }
+}
+
+/// An owned operand, as produced by [`Kernel::sample`] for conformance
+/// sweeps and CLI demos; borrow with [`OwnedOperand::as_operand`].
+#[derive(Clone, Debug)]
+pub enum OwnedOperand {
+    Csr(Csr),
+    SpVec(SpVec),
+    Dense(Vec<f64>),
+    Idx(Vec<u32>),
+    Scalar(i64),
+}
+
+impl OwnedOperand {
+    /// View this owned operand as a borrowing [`Operand`].
+    pub fn as_operand(&self) -> Operand<'_> {
+        match self {
+            OwnedOperand::Csr(m) => Operand::Csr(m),
+            OwnedOperand::SpVec(v) => Operand::SpVec(v),
+            OwnedOperand::Dense(d) => Operand::Dense(d),
+            OwnedOperand::Idx(i) => Operand::Idx(i),
+            OwnedOperand::Scalar(s) => Operand::Scalar(*s),
+        }
+    }
+}
+
+/// Borrow a whole sampled operand set (see [`Kernel::sample`]).
+pub fn borrow_all(owned: &[OwnedOperand]) -> Vec<Operand<'_>> {
+    owned.iter().map(OwnedOperand::as_operand).collect()
+}
+
+/// Check operand arity and kind tags against a kernel's signature.
+/// Kernel [`Kernel::validate`] implementations call this first, then
+/// add shape checks (dimension agreement etc.).
+pub fn expect_kinds(
+    kernel: &'static str,
+    signature: &'static str,
+    ops: &[Operand],
+    kinds: &[&str],
+) -> Result<(), KernelError> {
+    let got: Vec<&str> = ops.iter().map(Operand::kind).collect();
+    if got != kinds {
+        return Err(KernelError::BadOperands {
+            kernel,
+            msg: format!("expected ({signature}), got ({})", got.join(", ")),
+        });
+    }
+    Ok(())
+}
+
+/// Check that every index in `idcs` fits width `iw`; kernels call this
+/// from [`Kernel::validate`] so an operand/width mismatch surfaces as a
+/// typed [`KernelError::BadOperands`] instead of a panic mid-placement.
+pub fn check_width(
+    kernel: &'static str,
+    iw: IdxWidth,
+    what: &str,
+    idcs: &[u32],
+) -> Result<(), KernelError> {
+    if let Some(&bad) = idcs.iter().find(|&&x| x as u64 > iw.max()) {
+        return Err(KernelError::BadOperands {
+            kernel,
+            msg: format!("{what} index {bad} does not fit a {}-bit width", iw.name()),
+        });
+    }
+    Ok(())
+}
+
+/// Operand accessor for kernel implementations; valid after
+/// [`Kernel::validate`] (panics on kind mismatch).
+pub fn csr_at<'a>(ops: &[Operand<'a>], i: usize) -> &'a Csr {
+    match ops.get(i) {
+        Some(&Operand::Csr(m)) => m,
+        other => panic!("operand {i}: expected Csr, got {other:?}"),
+    }
+}
+
+/// See [`csr_at`].
+pub fn spvec_at<'a>(ops: &[Operand<'a>], i: usize) -> &'a SpVec {
+    match ops.get(i) {
+        Some(&Operand::SpVec(v)) => v,
+        other => panic!("operand {i}: expected SpVec, got {other:?}"),
+    }
+}
+
+/// See [`csr_at`].
+pub fn dense_at<'a>(ops: &[Operand<'a>], i: usize) -> &'a [f64] {
+    match ops.get(i) {
+        Some(&Operand::Dense(d)) => d,
+        other => panic!("operand {i}: expected Dense, got {other:?}"),
+    }
+}
+
+/// See [`csr_at`].
+pub fn idx_at<'a>(ops: &[Operand<'a>], i: usize) -> &'a [u32] {
+    match ops.get(i) {
+        Some(&Operand::Idx(x)) => x,
+        other => panic!("operand {i}: expected Idx, got {other:?}"),
+    }
+}
+
+/// See [`csr_at`].
+pub fn scalar_at(ops: &[Operand], i: usize) -> i64 {
+    match ops.get(i) {
+        Some(&Operand::Scalar(s)) => s,
+        other => panic!("operand {i}: expected Scalar, got {other:?}"),
+    }
+}
+
+/// A kernel's output value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// A scalar result (dot products).
+    Scalar(f64),
+    /// A dense `f64` array.
+    Dense(Vec<f64>),
+    /// A sparse vector fiber (set-algebra kernels).
+    Sparse(SpVec),
+}
+
+impl Value {
+    pub fn as_scalar(&self) -> Option<f64> {
+        match self {
+            Value::Scalar(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_dense(&self) -> Option<&[f64]> {
+        match self {
+            Value::Dense(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn as_sparse(&self) -> Option<&SpVec> {
+        match self {
+            Value::Sparse(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Short human summary for the CLI (`repro kernel`).
+    pub fn summarize(&self) -> String {
+        match self {
+            Value::Scalar(x) => format!("scalar {x:.6}"),
+            Value::Dense(d) => format!("dense[{}]", d.len()),
+            Value::Sparse(v) => format!("sparse fiber ({} nnz of dim {})", v.nnz(), v.dim),
+        }
+    }
+}
+
+// =====================================================================
+// execution configuration
+// =====================================================================
+
+/// Which machine a kernel executes on.
+#[derive(Clone, Debug)]
+pub enum Target {
+    /// One core complex, operands resident in the TCDM (§4.1).
+    /// `tcdm_bytes` = 0 keeps the Table-1 default (128 KiB); the matrix
+    /// experiments pass an enlarged size ([`BIG_TCDM`]).
+    SingleCc { tcdm_bytes: usize },
+    /// One eight-core cluster in front of a private DRAM channel, fed
+    /// by the double-buffered DMA coordinator (§4.2).
+    Cluster(ClusterCfg),
+    /// N row-sharded clusters on a shared multi-channel HBM (§VII
+    /// scale-out).
+    System(SystemCfg),
+}
+
+/// Target discriminant, used for capability checks and error messages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TargetKind {
+    SingleCc,
+    Cluster,
+    System,
+}
+
+impl Target {
+    pub fn kind(&self) -> TargetKind {
+        match self {
+            Target::SingleCc { .. } => TargetKind::SingleCc,
+            Target::Cluster(_) => TargetKind::Cluster,
+            Target::System(_) => TargetKind::System,
+        }
+    }
+}
+
+impl fmt::Display for TargetKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            TargetKind::SingleCc => "single-cc",
+            TargetKind::Cluster => "cluster",
+            TargetKind::System => "system",
+        })
+    }
+}
+
+/// How one [`execute`] call runs: the target machine plus the options
+/// that used to leak into individual `run_*` signatures.
+#[derive(Clone, Debug)]
+pub struct ExecCfg {
+    pub target: Target,
+    /// Skip the final scalar reduction (the timing-only series of
+    /// Fig. 4a's dashed lines). SSSR-only; implies no verification.
+    pub skip_reduction: bool,
+    /// Verify the output against the kernel's oracle (default). Turn
+    /// off for timing-only runs whose numeric result is inherently
+    /// order-dependent (e.g. sV+dV with repeated indices).
+    pub verify: bool,
+    /// Override of the hang guard in simulated cycles; `None` uses
+    /// [`SINGLE_CC_LIMIT`] / [`CLUSTER_LIMIT`] by target.
+    pub limit: Option<u64>,
+}
+
+impl ExecCfg {
+    /// Single CC with the enlarged §4.1 TCDM ([`BIG_TCDM`]).
+    pub fn single_cc() -> Self {
+        Self::single_sized(BIG_TCDM)
+    }
+
+    /// Single CC with an explicit TCDM size (0 = Table-1 128 KiB).
+    pub fn single_sized(tcdm_bytes: usize) -> Self {
+        ExecCfg {
+            target: Target::SingleCc { tcdm_bytes },
+            skip_reduction: false,
+            verify: true,
+            limit: None,
+        }
+    }
+
+    /// One cluster in front of its private DRAM channel (§4.2).
+    pub fn cluster(cfg: ClusterCfg) -> Self {
+        ExecCfg {
+            target: Target::Cluster(cfg),
+            skip_reduction: false,
+            verify: true,
+            limit: None,
+        }
+    }
+
+    /// Row-sharded multi-cluster system on shared HBM.
+    pub fn system(cfg: SystemCfg) -> Self {
+        ExecCfg {
+            target: Target::System(cfg),
+            skip_reduction: false,
+            verify: true,
+            limit: None,
+        }
+    }
+
+    /// Disable oracle verification (timing-only run).
+    pub fn unchecked(mut self) -> Self {
+        self.verify = false;
+        self
+    }
+
+    /// Skip the final scalar reduction (SSSR variants only).
+    pub fn skip_reduction(mut self) -> Self {
+        self.skip_reduction = true;
+        self
+    }
+
+    /// Override the hang guard.
+    pub fn with_limit(mut self, limit: u64) -> Self {
+        self.limit = Some(limit);
+        self
+    }
+}
+
+impl Default for ExecCfg {
+    fn default() -> Self {
+        Self::single_cc()
+    }
+}
+
+// =====================================================================
+// errors and results
+// =====================================================================
+
+/// A typed kernel-execution failure. Every failure mode that used to be
+/// a `panic!`/`assert!` deep in a driver surfaces here so callers (CLI,
+/// services, tests) can report and recover cleanly.
+#[derive(Clone, Debug)]
+pub enum KernelError {
+    /// The requested variant is not implemented for this kernel (or for
+    /// this kernel on the requested target).
+    UnsupportedVariant {
+        kernel: &'static str,
+        variant: Variant,
+    },
+    /// The requested index width is not supported.
+    UnsupportedWidth {
+        kernel: &'static str,
+        iw: IdxWidth,
+    },
+    /// The kernel does not run on the requested execution target.
+    UnsupportedTarget {
+        kernel: &'static str,
+        target: TargetKind,
+    },
+    /// Operand arity, kinds, or shapes don't match the kernel signature.
+    BadOperands { kernel: &'static str, msg: String },
+    /// Contradictory execution options (e.g. `skip_reduction` on BASE).
+    InvalidConfig(String),
+    /// The simulation exceeded its cycle limit without completing.
+    /// `kernel` is filled in by [`execute`]; paths below it (e.g.
+    /// [`Cc::run`]) construct it with an empty name.
+    Hang { kernel: &'static str, cycles: u64 },
+    /// The output failed verification against the oracle.
+    Mismatch { kernel: &'static str, msg: String },
+}
+
+impl fmt::Display for KernelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KernelError::UnsupportedVariant { kernel, variant } => {
+                write!(f, "kernel {kernel} has no {} variant here", variant.name())
+            }
+            KernelError::UnsupportedWidth { kernel, iw } => {
+                write!(f, "kernel {kernel} does not support {}-bit indices", iw.name())
+            }
+            KernelError::UnsupportedTarget { kernel, target } => {
+                write!(f, "kernel {kernel} does not run on the {target} target")
+            }
+            KernelError::BadOperands { kernel, msg } => {
+                write!(f, "kernel {kernel}: bad operands: {msg}")
+            }
+            KernelError::InvalidConfig(msg) => write!(f, "invalid execution config: {msg}"),
+            KernelError::Hang { kernel, cycles } => {
+                let name = if kernel.is_empty() { "kernel" } else { kernel };
+                write!(
+                    f,
+                    "{name} did not finish within {cycles} simulated cycles (hang guard)"
+                )
+            }
+            KernelError::Mismatch { kernel, msg } => {
+                write!(f, "kernel {kernel}: output mismatch vs oracle: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KernelError {}
+
+/// Target-specific execution detail beyond the unified output/report.
+pub enum Detail {
+    /// Single-CC runs have no extra structure.
+    SingleCc,
+    /// Cluster runs report the double-buffer chunk count.
+    Cluster { chunks: usize },
+    /// System runs report per-shard outcomes and reduction accounting.
+    System {
+        shards: Vec<ShardRun>,
+        reduction: ReduceStats,
+    },
+}
+
+/// The outcome of one [`execute`] call.
+pub struct KernelRun {
+    /// The kernel's output, read back from the simulated memory.
+    pub output: Value,
+    /// Cycles, payload FLOPs, utilization, and raw run statistics.
+    pub report: Report,
+    /// Per-target extras (chunking, shards, reduction accounting).
+    pub detail: Detail,
+}
+
+// =====================================================================
+// single-CC execution context
+// =====================================================================
+
+/// Write an index array of width `iw` into a TCDM.
+pub fn write_idx(t: &mut Tcdm, addr: u64, idcs: &[u32], iw: IdxWidth) {
+    for (i, &idx) in idcs.iter().enumerate() {
+        assert!(
+            (idx as u64) <= iw.max(),
+            "index {idx} does not fit {}-bit width",
+            8 * iw.bytes()
+        );
+        t.poke(addr + i as u64 * iw.bytes(), iw.bytes(), idx as u64);
+    }
+}
+
+/// Write an `f64` array into a TCDM.
+pub fn write_f64s(t: &mut Tcdm, addr: u64, vals: &[f64]) {
+    for (i, &v) in vals.iter().enumerate() {
+        t.poke_f64(addr + 8 * i as u64, v);
+    }
+}
+
+/// Read `n` `f64`s back from a TCDM.
+pub fn read_f64s(t: &Tcdm, addr: u64, n: usize) -> Vec<f64> {
+    (0..n).map(|i| t.peek_f64(addr + 8 * i as u64)).collect()
+}
+
+/// Read `n` indices of width `iw` back from a TCDM.
+pub fn read_idx(t: &Tcdm, addr: u64, n: usize, iw: IdxWidth) -> Vec<u32> {
+    (0..n)
+        .map(|i| t.peek(addr + i as u64 * iw.bytes(), iw.bytes()) as u32)
+        .collect()
+}
+
+/// Write a 32-bit CSR row-pointer array into a TCDM.
+pub fn write_ptrs(t: &mut Tcdm, addr: u64, ptrs: &[u32]) {
+    for (i, &p) in ptrs.iter().enumerate() {
+        t.poke(addr + 4 * i as u64, 4, p as u64);
+    }
+}
+
+/// One single-CC kernel execution context: TCDM bump [`Arena`] + cluster
+/// with the program loaded and the I$ pre-warmed (§4.1 methodology:
+/// exclusive I$, three-port data memory, no DMA/DRAM on the measured
+/// path). [`Kernel::place`] implementations lay operands out through
+/// this and load the argument registers.
+pub struct Cc {
+    pub cl: Cluster,
+    pub arena: Arena,
+}
+
+impl Cc {
+    /// Enlarged-TCDM context ([`BIG_TCDM`], the §4.1 matrix methodology).
+    pub fn new(prog: Program) -> Self {
+        Self::sized(prog, BIG_TCDM)
+    }
+
+    /// `tcdm_bytes` = 0 keeps the Table-1 default (128 KiB). The §4.1
+    /// matrix experiments "assume the TCDM is large enough to store the
+    /// full matrix" — pass an enlarged size for those.
+    pub fn sized(prog: Program, tcdm_bytes: usize) -> Self {
+        let mut cfg = crate::sim::ClusterCfg::single_cc();
+        if tcdm_bytes > 0 {
+            cfg.tcdm_bytes = tcdm_bytes;
+        }
+        let mut cl = Cluster::new(cfg, vec![prog]);
+        cl.warm_icache();
+        let limit = cl.tcdm.size() as u64;
+        Cc { cl, arena: Arena::new(0, limit) }
+    }
+
+    /// Place a sparse vector; returns `(vals_addr, idcs_addr)`.
+    pub fn place_spvec(&mut self, v: &SpVec, iw: IdxWidth) -> (u64, u64) {
+        let vals = self.arena.alloc_f64(v.nnz() as u64);
+        let idcs = self.arena.alloc_idx(v.nnz() as u64, iw);
+        write_f64s(&mut self.cl.tcdm, vals, &v.vals);
+        write_idx(&mut self.cl.tcdm, idcs, &v.idcs, iw);
+        (vals, idcs)
+    }
+
+    /// Place a dense array; returns its base address.
+    pub fn place_dense(&mut self, d: &[f64]) -> u64 {
+        let addr = self.arena.alloc_f64(d.len() as u64);
+        write_f64s(&mut self.cl.tcdm, addr, d);
+        addr
+    }
+
+    /// Place a CSR matrix; returns `(vals, idcs, ptrs)` addresses.
+    pub fn place_csr(&mut self, m: &Csr, iw: IdxWidth) -> (u64, u64, u64) {
+        let vals = self.arena.alloc_f64(m.nnz() as u64);
+        let idcs = self.arena.alloc_idx(m.nnz() as u64, iw);
+        let ptrs = self.arena.alloc(4 * (m.nrows as u64 + 1));
+        write_f64s(&mut self.cl.tcdm, vals, &m.vals);
+        write_idx(&mut self.cl.tcdm, idcs, &m.idcs, iw);
+        write_ptrs(&mut self.cl.tcdm, ptrs, &m.ptrs);
+        (vals, idcs, ptrs)
+    }
+
+    /// Load the kernel's argument registers (core 0).
+    pub fn args(&mut self, regs: &[(u8, i64)]) {
+        for &(r, v) in regs {
+            self.cl.set_reg(0, r, v);
+        }
+    }
+
+    /// Run to completion; returns the cluster (for output read-back),
+    /// cycle count, and run statistics, or [`KernelError::Hang`].
+    pub fn run(mut self, limit: u64) -> Result<(Cluster, u64, RunStats), KernelError> {
+        match self.cl.try_run_isolated(limit) {
+            Ok(cycles) => {
+                let stats = self.cl.stats();
+                Ok((self.cl, cycles, stats))
+            }
+            Err(cycles) => Err(KernelError::Hang { kernel: "", cycles }),
+        }
+    }
+}
+
+/// Where and how a kernel's output lives in the TCDM after the run;
+/// returned by [`Kernel::place`], consumed generically by [`execute`].
+#[derive(Clone, Copy, Debug)]
+pub enum OutSpec {
+    /// One `f64` cell.
+    Scalar { addr: u64 },
+    /// `len` contiguous `f64`s.
+    Dense { addr: u64, len: usize },
+    /// A produced fiber: value and index arrays of capacity `cap`, with
+    /// the realized length in the 8-byte `len_cell`.
+    Sparse {
+        vals: u64,
+        idcs: u64,
+        len_cell: u64,
+        cap: usize,
+        dim: usize,
+    },
+}
+
+fn read_out(
+    t: &Tcdm,
+    out: &OutSpec,
+    iw: IdxWidth,
+    kernel: &'static str,
+) -> Result<Value, KernelError> {
+    Ok(match *out {
+        OutSpec::Scalar { addr } => Value::Scalar(t.peek_f64(addr)),
+        OutSpec::Dense { addr, len } => Value::Dense(read_f64s(t, addr, len)),
+        OutSpec::Sparse { vals, idcs, len_cell, cap, dim } => {
+            let len = t.peek(len_cell, 8) as usize;
+            if len > cap {
+                return Err(KernelError::Mismatch {
+                    kernel,
+                    msg: format!("output fiber length {len} exceeds capacity {cap}"),
+                });
+            }
+            Value::Sparse(SpVec {
+                dim,
+                idcs: read_idx(t, idcs, len, iw),
+                vals: read_f64s(t, vals, len),
+            })
+        }
+    })
+}
+
+fn close(got: f64, want: f64) -> bool {
+    (got - want).abs() <= 1e-9 * want.abs().max(1.0)
+}
+
+/// Compare a kernel output against its oracle value (relative 1e-9
+/// tolerance on floats, exact index patterns on fibers). Also used by
+/// the registry conformance tests.
+pub fn check_output(kernel: &'static str, got: &Value, want: &Value) -> Result<(), KernelError> {
+    let err = |msg: String| Err(KernelError::Mismatch { kernel, msg });
+    match (got, want) {
+        (Value::Scalar(g), Value::Scalar(w)) => {
+            if !close(*g, *w) {
+                return err(format!("got {g}, want {w}"));
+            }
+        }
+        (Value::Dense(g), Value::Dense(w)) => {
+            if g.len() != w.len() {
+                return err(format!("length {} vs {}", g.len(), w.len()));
+            }
+            for (i, (x, y)) in g.iter().zip(w).enumerate() {
+                if !close(*x, *y) {
+                    return err(format!("[{i}]: got {x}, want {y}"));
+                }
+            }
+        }
+        (Value::Sparse(g), Value::Sparse(w)) => {
+            if g.dim != w.dim {
+                return err(format!("dim {} vs {}", g.dim, w.dim));
+            }
+            if g.idcs != w.idcs {
+                return err(format!(
+                    "index pattern differs ({} vs {} nnz)",
+                    g.nnz(),
+                    w.nnz()
+                ));
+            }
+            for (i, (x, y)) in g.vals.iter().zip(&w.vals).enumerate() {
+                if !close(*x, *y) {
+                    return err(format!("vals[{i}]: got {x}, want {y}"));
+                }
+            }
+        }
+        _ => return err(format!("output shape {:?} vs oracle {:?}", shape(got), shape(want))),
+    }
+    Ok(())
+}
+
+fn shape(v: &Value) -> &'static str {
+    match v {
+        Value::Scalar(_) => "scalar",
+        Value::Dense(_) => "dense",
+        Value::Sparse(_) => "sparse",
+    }
+}
+
+// =====================================================================
+// the Kernel trait
+// =====================================================================
+
+/// All index widths (§2.1.1: any unsigned power-of-two byte width).
+pub const ALL_WIDTHS: [IdxWidth; 3] = [IdxWidth::U8, IdxWidth::U16, IdxWidth::U32];
+
+/// One kernel of the paper's library, as a typed execution description.
+/// [`execute`] drives any implementation over any supported target; the
+/// [`REGISTRY`] enumerates them by name.
+pub trait Kernel: Sync {
+    /// Registry name (`"svxdv"`, `"stencil1d"`, …).
+    fn name(&self) -> &'static str;
+
+    /// One-line human description (`repro kernel --list`).
+    fn describe(&self) -> &'static str;
+
+    /// Operand signature, e.g. `"Csr(m), Dense(b)"`.
+    fn signature(&self) -> &'static str;
+
+    /// Variants implemented on the single-CC target.
+    fn variants(&self) -> &'static [Variant];
+
+    /// Variants implemented on `target` (defaults to [`Kernel::variants`];
+    /// the cluster scaleout implements BASE and SSSR only).
+    fn variants_for(&self, target: TargetKind) -> &'static [Variant] {
+        let _ = target;
+        self.variants()
+    }
+
+    /// Supported index widths (default: all of §2.1.1's widths).
+    fn widths(&self) -> &'static [IdxWidth] {
+        &ALL_WIDTHS
+    }
+
+    /// Supported execution targets (default: single CC only).
+    fn targets(&self) -> &'static [TargetKind] {
+        &[TargetKind::SingleCc]
+    }
+
+    /// Default single-CC TCDM size for demos/conformance runs
+    /// ([`BIG_TCDM`]; stencil/codebook keep the Table-1 128 KiB).
+    fn tcdm_default(&self) -> usize {
+        BIG_TCDM
+    }
+
+    /// Whether this kernel's program builder honors
+    /// [`ExecCfg::skip_reduction`] (only the sV×dV dot product does).
+    /// [`execute`] rejects the option on kernels that would silently
+    /// ignore it — skipping verification for an unchanged program.
+    fn supports_skip_reduction(&self) -> bool {
+        false
+    }
+
+    /// Check operand arity, kinds, shape agreement, and that every
+    /// operand index fits `iw` (see [`check_width`]).
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError>;
+
+    /// Payload FLOPs — the numerator of the paper's utilization metric
+    /// (excludes reductions and zero-inits).
+    fn payload(&self, ops: &[Operand]) -> u64;
+
+    /// Reference result via the [`crate::formats::ops`] oracles.
+    fn oracle(&self, ops: &[Operand]) -> Value;
+
+    /// Build the single-CC program for `(variant, iw)`; `cfg` carries
+    /// options that specialize code generation (`skip_reduction`).
+    /// Only called with a variant in [`Kernel::variants`].
+    fn program(&self, variant: Variant, iw: IdxWidth, ops: &[Operand], cfg: &ExecCfg) -> Program;
+
+    /// Lay the operands out in the context's TCDM, load the argument
+    /// registers, and describe where the output will be read from.
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec;
+
+    /// A randomized, self-consistent operand set for conformance tests
+    /// and CLI demos, sized to fit `iw`'s index range.
+    fn sample(&self, seed: u64, iw: IdxWidth) -> Vec<OwnedOperand>;
+
+    /// Cluster-target execution (§4.2). Sharded matrix kernels override.
+    fn run_cluster(
+        &self,
+        variant: Variant,
+        iw: IdxWidth,
+        ops: &[Operand],
+        cfg: &ClusterCfg,
+        limit: u64,
+    ) -> Result<(Value, Report, Detail), KernelError> {
+        let _ = (variant, iw, ops, cfg, limit);
+        Err(KernelError::UnsupportedTarget { kernel: self.name(), target: TargetKind::Cluster })
+    }
+
+    /// Multi-cluster system execution. Sharded matrix kernels override.
+    fn run_system(
+        &self,
+        variant: Variant,
+        iw: IdxWidth,
+        ops: &[Operand],
+        cfg: &SystemCfg,
+        limit: u64,
+    ) -> Result<(Value, Report, Detail), KernelError> {
+        let _ = (variant, iw, ops, cfg, limit);
+        Err(KernelError::UnsupportedTarget { kernel: self.name(), target: TargetKind::System })
+    }
+}
+
+// =====================================================================
+// execute
+// =====================================================================
+
+/// Execute `kernel` with `variant` and index width `iw` on the target
+/// selected by `cfg`, verify the output against the kernel's oracle
+/// (unless disabled), and report cycles/payload/utilization.
+///
+/// This is the single entry point behind every figure sweep, bench, and
+/// the `repro kernel` CLI; the legacy `run_*` helpers are thin wrappers
+/// around it.
+pub fn execute(
+    kernel: &dyn Kernel,
+    variant: Variant,
+    iw: IdxWidth,
+    ops: &[Operand],
+    cfg: &ExecCfg,
+) -> Result<KernelRun, KernelError> {
+    let tk = cfg.target.kind();
+    if !kernel.targets().contains(&tk) {
+        return Err(KernelError::UnsupportedTarget { kernel: kernel.name(), target: tk });
+    }
+    if !kernel.variants_for(tk).contains(&variant) {
+        return Err(KernelError::UnsupportedVariant { kernel: kernel.name(), variant });
+    }
+    if !kernel.widths().contains(&iw) {
+        return Err(KernelError::UnsupportedWidth { kernel: kernel.name(), iw });
+    }
+    if cfg.skip_reduction && !kernel.supports_skip_reduction() {
+        return Err(KernelError::InvalidConfig(format!(
+            "kernel {} has no skip_reduction mode",
+            kernel.name()
+        )));
+    }
+    if cfg.skip_reduction && variant != Variant::Sssr {
+        return Err(KernelError::InvalidConfig(
+            "skip_reduction only applies to the SSSR variant".into(),
+        ));
+    }
+    kernel.validate(ops, iw)?;
+    // attribute hangs raised below the API layer (Cc::run, the cluster
+    // and system run loops) to the kernel being executed
+    let name = kernel.name();
+    let attribute = |e: KernelError| match e {
+        KernelError::Hang { kernel: "", cycles } => KernelError::Hang { kernel: name, cycles },
+        other => other,
+    };
+    let (output, report, detail) = match &cfg.target {
+        Target::SingleCc { tcdm_bytes } => {
+            let limit = cfg.limit.unwrap_or(SINGLE_CC_LIMIT);
+            let prog = kernel.program(variant, iw, ops, cfg);
+            let mut cc = Cc::sized(prog, *tcdm_bytes);
+            let out = kernel.place(&mut cc, iw, ops);
+            let payload = kernel.payload(ops);
+            let (cl, cycles, stats) = cc.run(limit).map_err(attribute)?;
+            let output = read_out(&cl.tcdm, &out, iw, kernel.name())?;
+            (output, Report::from_run(cycles, payload, stats), Detail::SingleCc)
+        }
+        Target::Cluster(ccfg) => kernel
+            .run_cluster(variant, iw, ops, ccfg, cfg.limit.unwrap_or(CLUSTER_LIMIT))
+            .map_err(attribute)?,
+        Target::System(scfg) => kernel
+            .run_system(variant, iw, ops, scfg, cfg.limit.unwrap_or(CLUSTER_LIMIT))
+            .map_err(attribute)?,
+    };
+    // skip_reduction deliberately leaves the reduction out of the
+    // simulated result, so there is nothing meaningful to verify.
+    if cfg.verify && !cfg.skip_reduction {
+        check_output(kernel.name(), &output, &kernel.oracle(ops))?;
+    }
+    Ok(KernelRun { output, report, detail })
+}
+
+// =====================================================================
+// registry
+// =====================================================================
+
+/// Every implemented kernel, in the paper's presentation order
+/// (sparse-dense §3.2.1, sparse-sparse §3.2.2, further applications
+/// §3.3). `repro kernel --list` renders this table.
+pub static REGISTRY: [&dyn Kernel; 12] = [
+    &super::driver::Svxdv,
+    &super::driver::Svpdv,
+    &super::driver::Svodv,
+    &super::driver::Smxdv,
+    &super::driver::Smxdm,
+    &super::driver::Svxsv,
+    &super::driver::Svpsv,
+    &super::driver::Svosv,
+    &super::driver::Smxsv,
+    &super::driver::Smxsm,
+    &super::apps::Stencil1dKernel,
+    &super::apps::CodebookDecode,
+];
+
+/// Resolve one registered kernel by name.
+pub fn kernel(name: &str) -> Option<&'static dyn Kernel> {
+    REGISTRY.iter().find(|k| k.name() == name).copied()
+}
+
+/// Resolve a registry kernel by name and [`execute`] it, panicking on
+/// any [`KernelError`] — the shared backbone of the legacy `run_*`
+/// wrappers and the harness sweeps, whose workloads are pre-validated
+/// grid constructions. Fallible callers use [`kernel`] + [`execute`].
+pub fn must_execute(
+    name: &'static str,
+    variant: Variant,
+    iw: IdxWidth,
+    ops: &[Operand],
+    cfg: &ExecCfg,
+) -> KernelRun {
+    let k = kernel(name).unwrap_or_else(|| panic!("kernel {name} not in registry"));
+    execute(k, variant, iw, ops, cfg).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// All registry names, space-joined (help/error text).
+pub fn kernel_names() -> String {
+    REGISTRY.iter().map(|k| k.name()).collect::<Vec<_>>().join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen;
+
+    #[test]
+    fn registry_names_are_unique_and_complete() {
+        let names: Vec<&str> = REGISTRY.iter().map(|k| k.name()).collect();
+        let expect = [
+            "svxdv", "svpdv", "svodv", "smxdv", "smxdm", "svxsv", "svpsv", "svosv", "smxsv",
+            "smxsm", "stencil1d", "codebook",
+        ];
+        assert_eq!(names, expect);
+        for n in names {
+            assert!(kernel(n).is_some(), "{n} not resolvable");
+        }
+        assert!(kernel("nope").is_none());
+    }
+
+    #[test]
+    fn execute_rejects_bad_requests_with_typed_errors() {
+        let k = kernel("svxsv").unwrap();
+        let a = matgen::random_spvec(1, 100, 10);
+        let b = matgen::random_dense(2, 100);
+        // svxsv has no SSR variant (§3.2: intersection kernels)
+        let ops = [Operand::SpVec(&a), Operand::SpVec(&a)];
+        match execute(k, Variant::Ssr, IdxWidth::U16, &ops, &ExecCfg::single_cc()) {
+            Err(KernelError::UnsupportedVariant { kernel: "svxsv", .. }) => {}
+            other => panic!("expected UnsupportedVariant, got {:?}", other.err()),
+        }
+        // wrong operand kinds
+        let ops = [Operand::Dense(&b), Operand::Dense(&b)];
+        match execute(k, Variant::Sssr, IdxWidth::U16, &ops, &ExecCfg::single_cc()) {
+            Err(KernelError::BadOperands { .. }) => {}
+            other => panic!("expected BadOperands, got {:?}", other.err()),
+        }
+        // svxdv does not run on the cluster target
+        let k = kernel("svxdv").unwrap();
+        let ops = [Operand::SpVec(&a), Operand::Dense(&b)];
+        let cfg = ExecCfg::cluster(crate::sim::ClusterCfg::paper_cluster());
+        match execute(k, Variant::Sssr, IdxWidth::U16, &ops, &cfg) {
+            Err(KernelError::UnsupportedTarget { target: TargetKind::Cluster, .. }) => {}
+            other => panic!("expected UnsupportedTarget, got {:?}", other.err()),
+        }
+        // skip_reduction is SSSR-only
+        match execute(k, Variant::Base, IdxWidth::U16, &ops, &ExecCfg::single_cc().skip_reduction())
+        {
+            Err(KernelError::InvalidConfig(_)) => {}
+            other => panic!("expected InvalidConfig, got {:?}", other.err()),
+        }
+        // ... and only for kernels whose program builder honors it; on
+        // any other kernel it would silently skip verification only
+        let k = kernel("smxdv").unwrap();
+        let m = matgen::random_csr(5, 10, 16, 30);
+        let ops = [Operand::Csr(&m), Operand::Dense(&b[..16])];
+        match execute(k, Variant::Sssr, IdxWidth::U16, &ops, &ExecCfg::single_cc().skip_reduction())
+        {
+            Err(KernelError::InvalidConfig(_)) => {}
+            other => panic!("expected InvalidConfig, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn hang_guard_is_a_typed_error_not_a_panic() {
+        let k = kernel("svxdv").unwrap();
+        let a = matgen::random_spvec(3, 512, 128);
+        let b = matgen::random_dense(4, 512);
+        let ops = [Operand::SpVec(&a), Operand::Dense(&b)];
+        let cfg = ExecCfg::single_cc().with_limit(8);
+        match execute(k, Variant::Sssr, IdxWidth::U16, &ops, &cfg) {
+            Err(KernelError::Hang { kernel: "svxdv", cycles }) => assert!(cycles >= 8),
+            other => panic!("expected Hang, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn mismatching_output_shapes_are_reported() {
+        let got = Value::Scalar(1.0);
+        let want = Value::Dense(vec![1.0]);
+        assert!(matches!(
+            check_output("t", &got, &want),
+            Err(KernelError::Mismatch { .. })
+        ));
+        assert!(check_output("t", &Value::Scalar(1.0), &Value::Scalar(1.0 + 1e-12)).is_ok());
+        assert!(check_output("t", &Value::Scalar(1.0), &Value::Scalar(2.0)).is_err());
+    }
+}

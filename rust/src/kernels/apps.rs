@@ -2,15 +2,26 @@
 //! and graph pattern matching (triangle counting via adjacency-fiber
 //! intersection). These exercise the same hardware paths as the LA
 //! kernels on the workloads the paper's §3.3 sketches.
+//!
+//! The stencil and codebook kernels implement the unified
+//! [`super::api::Kernel`] trait ([`Stencil1dKernel`],
+//! [`CodebookDecode`]) and are registered in [`super::api::REGISTRY`];
+//! `run_stencil1d` / `run_codebook_decode` remain as thin wrappers.
+//! Unlike the LA kernels they keep the Table-1 128 KiB TCDM
+//! ([`super::api::Kernel::tcdm_default`] = 0).
 
-use crate::formats::Csr;
+use crate::formats::{Csr, SpVec};
+use crate::matgen;
 use crate::sim::asm::Asm;
 use crate::sim::isa::{ssr_mode, SsrField as F, *};
-use crate::sim::{Cluster, Program};
+use crate::sim::Program;
 
-use super::driver::{read_f64s, write_f64s, write_idx};
+use super::api::{
+    self, check_width, dense_at, expect_kinds, idx_at, spvec_at, write_f64s, write_idx, Cc,
+    ExecCfg, Kernel, KernelError, Operand, OutSpec, OwnedOperand, Value,
+};
 use super::sparse_dense::cfg_imm;
-use super::{Arena, IdxWidth, Report, Variant};
+use super::{IdxWidth, Report, Variant};
 
 /// 1D stencil: out[p] = sum_k w[k] * grid[p + off[k]] for interior
 /// points. The stencil is stored as an index array streamed per point
@@ -33,6 +44,24 @@ impl Stencil1d {
         Stencil1d {
             taps: vec![(0, -1.0), (1, 2.0), (2, 6.0), (3, 2.0), (4, -1.0)],
             halo: 2,
+        }
+    }
+
+    /// Encode the stencil as the kernel API's fiber operand: offsets as
+    /// indices, weights as values, `dim = 2*halo + 1` (the tap span).
+    pub fn to_spvec(&self) -> SpVec {
+        SpVec {
+            dim: 2 * self.halo + 1,
+            idcs: self.taps.iter().map(|&(o, _)| o).collect(),
+            vals: self.taps.iter().map(|&(_, w)| w).collect(),
+        }
+    }
+
+    /// Inverse of [`Stencil1d::to_spvec`].
+    pub fn from_spvec(taps: &SpVec) -> Self {
+        Stencil1d {
+            taps: taps.idcs.iter().copied().zip(taps.vals.iter().copied()).collect(),
+            halo: (taps.dim - 1) / 2,
         }
     }
 
@@ -120,42 +149,113 @@ pub fn stencil1d_base(taps: usize, halo: usize) -> Program {
     a.finish()
 }
 
+/// 1D stencil as a registry [`Kernel`]: operands are the tap fiber
+/// ([`Stencil1d::to_spvec`]) and the grid.
+pub struct Stencil1dKernel;
+
+impl Kernel for Stencil1dKernel {
+    fn name(&self) -> &'static str {
+        "stencil1d"
+    }
+    fn describe(&self) -> &'static str {
+        "1D stencil over a dense grid (taps as index fiber)"
+    }
+    fn signature(&self) -> &'static str {
+        "SpVec(taps), Dense(grid)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &[Variant::Base, Variant::Sssr]
+    }
+    fn tcdm_default(&self) -> usize {
+        0 // Table-1 128 KiB, as the §3.3 demos use
+    }
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
+        expect_kinds(self.name(), self.signature(), ops, &["SpVec", "Dense"])?;
+        let (taps, grid) = (spvec_at(ops, 0), dense_at(ops, 1));
+        let bad = |msg: String| KernelError::BadOperands { kernel: "stencil1d", msg };
+        if taps.dim % 2 == 0 {
+            return Err(bad(format!("tap span {} must be odd (2*halo + 1)", taps.dim)));
+        }
+        if taps.nnz() == 0 || taps.nnz() > 5 {
+            return Err(bad(format!(
+                "{} taps unsupported (1..=5 weights fit fa0..fa4)",
+                taps.nnz()
+            )));
+        }
+        if grid.len() < taps.dim {
+            return Err(bad(format!(
+                "grid length {} shorter than the tap span {}",
+                grid.len(),
+                taps.dim
+            )));
+        }
+        check_width(self.name(), iw, "tap", &taps.idcs)
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        let (taps, grid) = (spvec_at(ops, 0), dense_at(ops, 1));
+        let halo = (taps.dim - 1) / 2;
+        ((grid.len() - 2 * halo) * taps.nnz()) as u64
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        let (taps, grid) = (spvec_at(ops, 0), dense_at(ops, 1));
+        Value::Dense(Stencil1d::from_spvec(taps).reference(grid))
+    }
+    fn program(&self, variant: Variant, iw: IdxWidth, ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        let taps = spvec_at(ops, 0);
+        let halo = (taps.dim - 1) / 2;
+        match variant {
+            Variant::Base => stencil1d_base(taps.nnz(), halo),
+            Variant::Sssr => stencil1d_sssr(iw, taps.nnz(), halo),
+            Variant::Ssr => unreachable!("variant capability checked by execute"),
+        }
+    }
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (taps, grid) = (spvec_at(ops, 0), dense_at(ops, 1));
+        let n = grid.len();
+        let halo = (taps.dim - 1) / 2;
+        let interior = n - 2 * halo;
+        let grid_a = cc.arena.alloc_f64(n as u64);
+        let out_a = cc.arena.alloc_f64(n as u64);
+        let idx_a = cc.arena.alloc_idx(taps.nnz() as u64, iw);
+        write_f64s(&mut cc.cl.tcdm, grid_a, grid);
+        write_idx(&mut cc.cl.tcdm, idx_a, &taps.idcs, iw);
+        cc.args(&[
+            (A0, grid_a as i64),
+            (A1, idx_a as i64),
+            (A2, out_a as i64),
+            (A3, interior as i64),
+            (A4, halo as i64),
+            (A5, taps.nnz() as i64),
+        ]);
+        for (k, &w) in taps.vals.iter().enumerate() {
+            cc.cl.ccs[0].fpu.regs[(FA0 + k as u8) as usize] = w;
+        }
+        OutSpec::Dense { addr: out_a, len: n }
+    }
+    fn sample(&self, seed: u64, _iw: IdxWidth) -> Vec<OwnedOperand> {
+        let st = if seed % 2 == 0 { Stencil1d::three_point() } else { Stencil1d::five_point() };
+        vec![
+            OwnedOperand::SpVec(st.to_spvec()),
+            OwnedOperand::Dense(matgen::random_dense(seed.wrapping_add(1), 96)),
+        ]
+    }
+}
+
 /// Run a 1D stencil over `grid`; returns (interior result, report).
-pub fn run_stencil1d(variant: Variant, iw: IdxWidth, st: &Stencil1d, grid: &[f64]) -> (Vec<f64>, Report) {
-    let n = grid.len();
-    let taps = st.taps.len();
-    let interior = n - 2 * st.halo;
-    let prog = match variant {
-        Variant::Base => stencil1d_base(taps, st.halo),
-        Variant::Sssr => stencil1d_sssr(iw, taps, st.halo),
-        Variant::Ssr => panic!("stencil has BASE and SSSR variants only"),
-    };
-    let mut cl = Cluster::single(prog);
-    cl.warm_icache();
-    let mut arena = Arena::new(0, cl.tcdm.size() as u64);
-    let grid_a = arena.alloc_f64(n as u64);
-    let out_a = arena.alloc_f64(n as u64);
-    let idx_a = arena.alloc_idx(taps as u64, iw);
-    write_f64s(&mut cl.tcdm, grid_a, grid);
-    let offs: Vec<u32> = st.taps.iter().map(|&(o, _)| o).collect();
-    write_idx(&mut cl.tcdm, idx_a, &offs, iw);
-    cl.set_reg(0, A0, grid_a as i64);
-    cl.set_reg(0, A1, idx_a as i64);
-    cl.set_reg(0, A2, out_a as i64);
-    cl.set_reg(0, A3, interior as i64);
-    cl.set_reg(0, A4, st.halo as i64);
-    cl.set_reg(0, A5, taps as i64);
-    for (k, &(_, w)) in st.taps.iter().enumerate() {
-        cl.ccs[0].fpu.regs[(FA0 + k as u8) as usize] = w;
+pub fn run_stencil1d(
+    variant: Variant,
+    iw: IdxWidth,
+    st: &Stencil1d,
+    grid: &[f64],
+) -> (Vec<f64>, Report) {
+    let taps = st.to_spvec();
+    let ops = [Operand::SpVec(&taps), Operand::Dense(grid)];
+    let run = api::execute(&Stencil1dKernel, variant, iw, &ops, &ExecCfg::single_sized(0))
+        .unwrap_or_else(|e| panic!("{e}"));
+    match run.output {
+        Value::Dense(d) => (d, run.report),
+        _ => unreachable!("stencil output is dense"),
     }
-    let cycles = cl.run_isolated(50_000_000);
-    let stats = cl.stats();
-    let got = read_f64s(&cl.tcdm, out_a, n);
-    let want = st.reference(grid);
-    for p in st.halo..n - st.halo {
-        assert!((got[p] - want[p]).abs() < 1e-9, "stencil[{p}]: {} vs {}", got[p], want[p]);
-    }
-    (got, Report::from_run(cycles, (interior * taps) as u64, stats))
 }
 
 /// Codebook decoding (§3.3): stream `codes[i]` as indices into a small
@@ -206,6 +306,78 @@ pub fn codebook_decode_base(iw: IdxWidth) -> Program {
     a.finish()
 }
 
+/// Codebook decode as a registry [`Kernel`].
+pub struct CodebookDecode;
+
+impl Kernel for CodebookDecode {
+    fn name(&self) -> &'static str {
+        "codebook"
+    }
+    fn describe(&self) -> &'static str {
+        "codebook decode: gather codebook[codes[i]]"
+    }
+    fn signature(&self) -> &'static str {
+        "Dense(codebook), Idx(codes)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &[Variant::Base, Variant::Sssr]
+    }
+    fn tcdm_default(&self) -> usize {
+        0 // Table-1 128 KiB, as the §3.3 demos use
+    }
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
+        expect_kinds(self.name(), self.signature(), ops, &["Dense", "Idx"])?;
+        let (codebook, codes) = (dense_at(ops, 0), idx_at(ops, 1));
+        if codebook.is_empty() {
+            return Err(KernelError::BadOperands {
+                kernel: self.name(),
+                msg: "empty codebook".into(),
+            });
+        }
+        if let Some(&bad) = codes.iter().find(|&&c| c as usize >= codebook.len()) {
+            return Err(KernelError::BadOperands {
+                kernel: self.name(),
+                msg: format!("code {bad} out of range for codebook of {}", codebook.len()),
+            });
+        }
+        check_width(self.name(), iw, "code", codes)
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        idx_at(ops, 1).len() as u64
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        let (codebook, codes) = (dense_at(ops, 0), idx_at(ops, 1));
+        Value::Dense(codes.iter().map(|&c| codebook[c as usize]).collect())
+    }
+    fn program(&self, variant: Variant, iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => codebook_decode_base(iw),
+            Variant::Sssr => codebook_decode_sssr(iw),
+            Variant::Ssr => unreachable!("variant capability checked by execute"),
+        }
+    }
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (codebook, codes) = (dense_at(ops, 0), idx_at(ops, 1));
+        let cb = cc.place_dense(codebook);
+        let cd = cc.arena.alloc_idx(codes.len() as u64, iw);
+        let out = cc.arena.alloc_f64(codes.len() as u64);
+        write_idx(&mut cc.cl.tcdm, cd, codes, iw);
+        cc.args(&[
+            (A0, cb as i64),
+            (A1, cd as i64),
+            (A2, out as i64),
+            (A3, codes.len() as i64),
+        ]);
+        OutSpec::Dense { addr: out, len: codes.len() }
+    }
+    fn sample(&self, seed: u64, _iw: IdxWidth) -> Vec<OwnedOperand> {
+        let codebook: Vec<f64> = (0..16).map(|i| i as f64 * 1.5).collect();
+        let mut r = crate::util::Pcg::new(seed);
+        let codes: Vec<u32> = (0..300).map(|_| r.below(16) as u32).collect();
+        vec![OwnedOperand::Dense(codebook), OwnedOperand::Idx(codes)]
+    }
+}
+
 /// Run codebook decode; verifies against direct indexing.
 pub fn run_codebook_decode(
     variant: Variant,
@@ -213,30 +385,13 @@ pub fn run_codebook_decode(
     codebook: &[f64],
     codes: &[u32],
 ) -> (Vec<f64>, Report) {
-    let prog = match variant {
-        Variant::Base => codebook_decode_base(iw),
-        Variant::Sssr => codebook_decode_sssr(iw),
-        Variant::Ssr => panic!("codebook decode has BASE and SSSR variants only"),
-    };
-    let mut cl = Cluster::single(prog);
-    cl.warm_icache();
-    let mut arena = Arena::new(0, cl.tcdm.size() as u64);
-    let cb = arena.alloc_f64(codebook.len() as u64);
-    let cd = arena.alloc_idx(codes.len() as u64, iw);
-    let out = arena.alloc_f64(codes.len() as u64);
-    write_f64s(&mut cl.tcdm, cb, codebook);
-    write_idx(&mut cl.tcdm, cd, codes, iw);
-    cl.set_reg(0, A0, cb as i64);
-    cl.set_reg(0, A1, cd as i64);
-    cl.set_reg(0, A2, out as i64);
-    cl.set_reg(0, A3, codes.len() as i64);
-    let cycles = cl.run_isolated(50_000_000);
-    let stats = cl.stats();
-    let got = read_f64s(&cl.tcdm, out, codes.len());
-    for (i, &c) in codes.iter().enumerate() {
-        assert_eq!(got[i], codebook[c as usize], "decode[{i}]");
+    let ops = [Operand::Dense(codebook), Operand::Idx(codes)];
+    let run = api::execute(&CodebookDecode, variant, iw, &ops, &ExecCfg::single_sized(0))
+        .unwrap_or_else(|e| panic!("{e}"));
+    match run.output {
+        Value::Dense(d) => (d, run.report),
+        _ => unreachable!("codebook output is dense"),
     }
-    (got, Report::from_run(cycles, codes.len() as u64, stats))
 }
 
 /// Triangle counting by adjacency-fiber intersection (§3.3 "Graph
@@ -276,7 +431,6 @@ pub fn triangle_count_ref(g: &Csr) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matgen;
 
     #[test]
     fn stencil_base_and_sssr_match_reference() {
@@ -285,6 +439,16 @@ mod tests {
             let (_, base) = run_stencil1d(Variant::Base, IdxWidth::U16, &st, &grid);
             let (_, sssr) = run_stencil1d(Variant::Sssr, IdxWidth::U16, &st, &grid);
             assert!(base.cycles > 0 && sssr.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn stencil_spvec_round_trip() {
+        for st in [Stencil1d::three_point(), Stencil1d::five_point()] {
+            let f = st.to_spvec();
+            let back = Stencil1d::from_spvec(&f);
+            assert_eq!(back.taps, st.taps);
+            assert_eq!(back.halo, st.halo);
         }
     }
 

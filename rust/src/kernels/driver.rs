@@ -1,373 +1,504 @@
-//! Single-core-complex kernel drivers: lay the operands out in the
-//! simulated TCDM, run the kernel program on one CC (§4.1 methodology:
-//! exclusive I$ — pre-warmed — and a three-port data memory), verify the
-//! results against the [`crate::formats::ops`] oracles, and report
-//! cycles / payload FLOPs / utilization.
+//! [`Kernel`] implementations for the ten sparse linear-algebra kernels
+//! of §3.2, plus thin legacy `run_*` wrappers.
 //!
-//! All twelve `run_*` drivers share the [`Cc`] setup/teardown helper:
-//! operand placement via the bump [`Arena`], argument-register loading
-//! via [`Cc::args`], and the warm-I$ run loop via [`Cc::run`].
+//! Each unit struct below describes one operation for the unified typed
+//! API in [`super::api`]: operand signature and validation, payload FLOP
+//! count, [`crate::formats::ops`] oracle, program selection, and TCDM
+//! placement. [`api::execute`] drives them on any supported target —
+//! the sharded matrix kernels ([`Smxdv`], [`Smxsv`]) additionally run on
+//! the cluster (§4.2 coordinator) and multi-cluster system targets.
+//!
+//! The `run_*` functions keep the historical call shapes (examples,
+//! golden models, tests); they are one-line conveniences over
+//! [`api::execute`] and panic on any [`api::KernelError`].
 
-use crate::formats::{ops, Csr, SpVec};
+use crate::formats::{ops, Csc, Csr, SpVec};
+use crate::matgen;
 use crate::sim::isa::*;
-use crate::sim::tcdm::Tcdm;
-use crate::sim::{Cluster, Program};
+use crate::sim::{ClusterCfg, Program, SystemCfg};
 
+use super::api::{
+    self, check_width, csr_at, dense_at, expect_kinds, scalar_at, spvec_at, Cc, Detail, ExecCfg,
+    Kernel, KernelError, KernelRun, Operand, OutSpec, OwnedOperand, TargetKind, Value,
+};
 use super::{sparse_dense as sd, sparse_sparse as ss};
-use super::{Arena, IdxWidth, Report, Variant};
+use super::{IdxWidth, Report, Variant};
 
-/// Maximum simulated cycles before a kernel run is declared hung.
-const LIMIT: u64 = 50_000_000;
+const ALL3: [Variant; 3] = [Variant::Base, Variant::Ssr, Variant::Sssr];
+const BASE_SSSR: [Variant; 2] = [Variant::Base, Variant::Sssr];
+const SHARDED_TARGETS: [TargetKind; 3] =
+    [TargetKind::SingleCc, TargetKind::Cluster, TargetKind::System];
 
-pub(crate) fn write_idx(t: &mut Tcdm, addr: u64, idcs: &[u32], iw: IdxWidth) {
-    for (i, &idx) in idcs.iter().enumerate() {
-        assert!(
-            (idx as u64) <= iw.max(),
-            "index {idx} does not fit {}-bit width",
-            8 * iw.bytes()
-        );
-        t.poke(addr + i as u64 * iw.bytes(), iw.bytes(), idx as u64);
+/// Sample workload dimension that fits the width's index range.
+fn sample_dim(iw: IdxWidth) -> usize {
+    match iw {
+        IdxWidth::U8 => 192,
+        _ => 1024,
     }
 }
-
-pub(crate) fn write_f64s(t: &mut Tcdm, addr: u64, vals: &[f64]) {
-    for (i, &v) in vals.iter().enumerate() {
-        t.poke_f64(addr + 8 * i as u64, v);
-    }
-}
-
-pub(crate) fn read_f64s(t: &Tcdm, addr: u64, n: usize) -> Vec<f64> {
-    (0..n).map(|i| t.peek_f64(addr + 8 * i as u64)).collect()
-}
-
-pub(crate) fn read_idx(t: &Tcdm, addr: u64, n: usize, iw: IdxWidth) -> Vec<u32> {
-    (0..n)
-        .map(|i| t.peek(addr + i as u64 * iw.bytes(), iw.bytes()) as u32)
-        .collect()
-}
-
-pub(crate) fn write_ptrs(t: &mut Tcdm, addr: u64, ptrs: &[u32]) {
-    for (i, &p) in ptrs.iter().enumerate() {
-        t.poke(addr + 4 * i as u64, 4, p as u64);
-    }
-}
-
-/// One single-CC kernel execution context: TCDM arena + cluster with the
-/// program loaded and the I$ pre-warmed.
-struct Cc {
-    cl: Cluster,
-    arena: Arena,
-}
-
-impl Cc {
-    fn new(prog: Program) -> Self {
-        // §4.1 methodology: "the kernel runtimes do not depend on the
-        // dense vector's length as long as it fits into the TCDM" / "we
-        // assume the TCDM is large enough to store the full matrix" —
-        // the single-CC experiments use an enlarged data memory with the
-        // same bank count (timing is bank-, not capacity-, dependent).
-        Self::sized(prog, 16 << 20)
-    }
-
-    /// `tcdm_bytes` = 0 keeps the Table-1 default (128 KiB). The §4.1
-    /// matrix experiments "assume the TCDM is large enough to store the
-    /// full matrix" — pass an enlarged size for those.
-    fn sized(prog: Program, tcdm_bytes: usize) -> Self {
-        let mut cfg = crate::sim::ClusterCfg::single_cc();
-        if tcdm_bytes > 0 {
-            cfg.tcdm_bytes = tcdm_bytes;
-        }
-        let mut cl = Cluster::new(cfg, vec![prog]);
-        cl.warm_icache();
-        let limit = cl.tcdm.size() as u64;
-        Cc { cl, arena: Arena::new(0, limit) }
-    }
-
-    fn place_spvec(&mut self, v: &SpVec, iw: IdxWidth) -> (u64, u64) {
-        let vals = self.arena.alloc_f64(v.nnz() as u64);
-        let idcs = self.arena.alloc_idx(v.nnz() as u64, iw);
-        write_f64s(&mut self.cl.tcdm, vals, &v.vals);
-        write_idx(&mut self.cl.tcdm, idcs, &v.idcs, iw);
-        (vals, idcs)
-    }
-
-    fn place_dense(&mut self, d: &[f64]) -> u64 {
-        let addr = self.arena.alloc_f64(d.len() as u64);
-        write_f64s(&mut self.cl.tcdm, addr, d);
-        addr
-    }
-
-    fn place_csr(&mut self, m: &Csr, iw: IdxWidth) -> (u64, u64, u64) {
-        let vals = self.arena.alloc_f64(m.nnz() as u64);
-        let idcs = self.arena.alloc_idx(m.nnz() as u64, iw);
-        let ptrs = self.arena.alloc(4 * (m.nrows as u64 + 1));
-        write_f64s(&mut self.cl.tcdm, vals, &m.vals);
-        write_idx(&mut self.cl.tcdm, idcs, &m.idcs, iw);
-        write_ptrs(&mut self.cl.tcdm, ptrs, &m.ptrs);
-        (vals, idcs, ptrs)
-    }
-
-    /// Load the kernel's argument registers (core 0).
-    fn args(&mut self, regs: &[(u8, i64)]) {
-        for &(r, v) in regs {
-            self.cl.set_reg(0, r, v);
-        }
-    }
-
-    fn run(mut self, payload: u64) -> (Cluster, Report) {
-        // §4.1 single-CC methodology: no DMA/DRAM traffic on the
-        // measured path, so no memory system is attached.
-        let cycles = self.cl.run_isolated(LIMIT);
-        let stats = self.cl.stats();
-        (self.cl, Report::from_run(cycles, payload, stats))
-    }
-}
-
-fn assert_close(got: f64, want: f64, what: &str) {
-    let tol = 1e-9 * want.abs().max(1.0);
-    assert!(
-        (got - want).abs() <= tol,
-        "{what}: got {got}, want {want} (err {})",
-        (got - want).abs()
-    );
-}
-
-fn assert_all_close(got: &[f64], want: &[f64], what: &str) {
-    assert_eq!(got.len(), want.len(), "{what}: length");
-    for (i, (g, w)) in got.iter().zip(want).enumerate() {
-        let tol = 1e-9 * w.abs().max(1.0);
-        assert!((g - w).abs() <= tol, "{what}[{i}]: got {g}, want {w}");
-    }
-}
-
-// =====================================================================
-// sparse-dense drivers
-// =====================================================================
-
-/// sV×dV. Returns (dot product, report). `skip_reduction` gives the
-/// timing-only variant of Fig. 4a's dashed series (result not checked).
-pub fn run_svxdv(
-    variant: Variant,
-    iw: IdxWidth,
-    a: &SpVec,
-    b: &[f64],
-    skip_reduction: bool,
-) -> (f64, Report) {
-    assert_eq!(a.dim, b.len());
-    let prog = match variant {
-        Variant::Base => sd::svxdv_base(iw),
-        Variant::Ssr => sd::svxdv_ssr(iw),
-        Variant::Sssr => sd::svxdv_sssr(iw, skip_reduction),
-    };
-    assert!(
-        !(skip_reduction && variant != Variant::Sssr),
-        "skip_reduction only applies to the SSSR variant"
-    );
-    let mut cc = Cc::new(prog);
-    let (vals, idcs) = cc.place_spvec(a, iw);
-    let bb = cc.place_dense(b);
-    let out = cc.arena.alloc_f64(1);
-    cc.args(&[
-        (A0, vals as i64),
-        (A1, idcs as i64),
-        (A2, bb as i64),
-        (A3, a.nnz() as i64),
-        (A4, out as i64),
-    ]);
-    let (cl, rep) = cc.run(a.nnz() as u64);
-    let got = cl.tcdm.peek_f64(out);
-    if !skip_reduction {
-        assert_close(got, ops::svxdv(a, b), "svxdv");
-    }
-    (got, rep)
-}
-
-/// sV+dV (in place on the dense vector). Returns (updated dense, report).
-/// Wraps the timing-only [`run_svpdv_unchecked`] and verifies the result
-/// against the oracle.
-pub fn run_svpdv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &[f64]) -> (Vec<f64>, Report) {
-    let (got, rep) = run_svpdv_unchecked(variant, iw, a, b);
-    let mut want = b.to_vec();
-    ops::svpdv(a, &mut want);
-    assert_all_close(&got, &want, "svpdv");
-    (got, rep)
-}
-
-/// Timing-only sV+dV for fibers with *repeated* indices (the Fig. 4b
-/// `sssr8r` reuse series): duplicated indices create a genuine
-/// gather/scatter RAW hazard in the decoupled streams — in the real
-/// hardware as much as here — so the numeric result is not checked.
-pub fn run_svpdv_unchecked(
-    variant: Variant,
-    iw: IdxWidth,
-    a: &SpVec,
-    b: &[f64],
-) -> (Vec<f64>, Report) {
-    assert_eq!(a.dim, b.len());
-    let prog = match variant {
-        Variant::Base => sd::svpdv_base(iw),
-        Variant::Ssr => sd::svpdv_ssr(iw),
-        Variant::Sssr => sd::svpdv_sssr(iw),
-    };
-    let mut cc = Cc::new(prog);
-    let (vals, idcs) = cc.place_spvec(a, iw);
-    let bb = cc.place_dense(b);
-    cc.args(&[
-        (A0, vals as i64),
-        (A1, idcs as i64),
-        (A2, bb as i64),
-        (A3, a.nnz() as i64),
-    ]);
-    let (cl, rep) = cc.run(a.nnz() as u64);
-    let got = read_f64s(&cl.tcdm, bb, b.len());
-    (got, rep)
-}
-
-/// sV⊙dV. Returns (result value array, report).
-pub fn run_svodv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &[f64]) -> (Vec<f64>, Report) {
-    assert_eq!(a.dim, b.len());
-    let prog = match variant {
-        Variant::Base => sd::svodv_base(iw),
-        Variant::Ssr => sd::svodv_ssr(iw),
-        Variant::Sssr => sd::svodv_sssr(iw),
-    };
-    let mut cc = Cc::new(prog);
-    let (vals, idcs) = cc.place_spvec(a, iw);
-    let bb = cc.place_dense(b);
-    let out = cc.arena.alloc_f64(a.nnz() as u64);
-    cc.args(&[
-        (A0, vals as i64),
-        (A1, idcs as i64),
-        (A2, bb as i64),
-        (A3, a.nnz() as i64),
-        (A4, out as i64),
-    ]);
-    let (cl, rep) = cc.run(a.nnz() as u64);
-    let got = read_f64s(&cl.tcdm, out, a.nnz());
-    assert_all_close(&got, &ops::svodv(a, b).vals, "svodv");
-    (got, rep)
-}
-
-/// sM×dV. Returns (dense result, report).
-pub fn run_smxdv(variant: Variant, iw: IdxWidth, m: &Csr, b: &[f64]) -> (Vec<f64>, Report) {
-    run_smxdv_sized(variant, iw, m, b, 16 << 20)
-}
-
-/// sM×dV with an enlarged single-CC TCDM (§4.1 full-matrix assumption).
-pub fn run_smxdv_sized(
-    variant: Variant,
-    iw: IdxWidth,
-    m: &Csr,
-    b: &[f64],
-    tcdm_bytes: usize,
-) -> (Vec<f64>, Report) {
-    assert_eq!(m.ncols, b.len());
-    let prog = match variant {
-        Variant::Base => sd::smxdv_base(iw),
-        Variant::Ssr => sd::smxdv_ssr(iw),
-        Variant::Sssr => sd::smxdv_sssr(iw),
-    };
-    let mut cc = Cc::sized(prog, tcdm_bytes);
-    let (vals, idcs, ptrs) = cc.place_csr(m, iw);
-    let bb = cc.place_dense(b);
-    let out = cc.arena.alloc_f64(m.nrows as u64);
-    cc.args(&[
-        (A0, vals as i64),
-        (A1, idcs as i64),
-        (A2, bb as i64),
-        (A3, m.nrows as i64),
-        (A4, out as i64),
-        (A5, ptrs as i64),
-        (A6, m.nnz() as i64),
-    ]);
-    let (cl, rep) = cc.run(m.nnz() as u64);
-    let got = read_f64s(&cl.tcdm, out, m.nrows);
-    assert_all_close(&got, &ops::smxdv(m, b), "smxdv");
-    (got, rep)
-}
-
-/// sM×dM with a power-of-two-column dense matrix (row-major).
-pub fn run_smxdm(
-    variant: Variant,
-    iw: IdxWidth,
-    m: &Csr,
-    d: &[f64],
-    log2_cols: u8,
-) -> (Vec<f64>, Report) {
-    let cols = 1usize << log2_cols;
-    assert_eq!(d.len(), m.ncols * cols);
-    let prog = match variant {
-        Variant::Base => sd::smxdm_base(iw, log2_cols),
-        Variant::Ssr => panic!("no SSR sMxdM variant (see kernel docs)"),
-        Variant::Sssr => sd::smxdm_sssr(iw, log2_cols),
-    };
-    let mut cc = Cc::new(prog);
-    let (vals, idcs, ptrs) = cc.place_csr(m, iw);
-    let dd = cc.place_dense(d);
-    let out = cc.arena.alloc_f64((m.nrows * cols) as u64);
-    cc.args(&[
-        (A0, vals as i64),
-        (A1, idcs as i64),
-        (A2, dd as i64),
-        (A3, m.nrows as i64),
-        (A4, out as i64),
-        (A5, ptrs as i64),
-        (A6, m.nnz() as i64),
-    ]);
-    let (cl, rep) = cc.run((m.nnz() * cols) as u64);
-    let got = read_f64s(&cl.tcdm, out, m.nrows * cols);
-    assert_all_close(&got, &ops::smxdm(m, d, cols), "smxdm");
-    (got, rep)
-}
-
-// =====================================================================
-// sparse-sparse drivers
-// =====================================================================
 
 fn intersection_count(a: &SpVec, b: &SpVec) -> u64 {
     ops::svosv(a, b).nnz() as u64
 }
 
-/// sV×sV. Returns (dot product, report). Payload = matched pairs.
-pub fn run_svxsv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &SpVec) -> (f64, Report) {
-    assert_eq!(a.dim, b.dim);
-    let prog = match variant {
-        Variant::Base => ss::svxsv_base(iw),
-        Variant::Ssr => panic!("no SSR variant for intersection kernels (§3.2)"),
-        Variant::Sssr => ss::svxsv_sssr(iw),
-    };
-    let mut cc = Cc::new(prog);
-    let (a_vals, a_idcs) = cc.place_spvec(a, iw);
-    let (b_vals, b_idcs) = cc.place_spvec(b, iw);
-    let out = cc.arena.alloc_f64(1);
-    cc.args(&[
-        (A0, a_vals as i64),
-        (A1, a_idcs as i64),
-        (A2, b_vals as i64),
-        (A3, b_idcs as i64),
-        (A4, out as i64),
-        (A5, a.nnz() as i64),
-        (A6, b.nnz() as i64),
-    ]);
-    let (cl, rep) = cc.run(intersection_count(a, b));
-    let got = cl.tcdm.peek_f64(out);
-    assert_close(got, ops::svxsv(a, b), "svxsv");
-    (got, rep)
+// =====================================================================
+// sparse-dense kernels
+// =====================================================================
+
+/// sV×dV: sparse-dense dot product (Listing 2 lineage).
+pub struct Svxdv;
+
+impl Kernel for Svxdv {
+    fn name(&self) -> &'static str {
+        "svxdv"
+    }
+    fn describe(&self) -> &'static str {
+        "sparse-dense dot product sVxdV"
+    }
+    fn signature(&self) -> &'static str {
+        "SpVec(a), Dense(b)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &ALL3
+    }
+    fn supports_skip_reduction(&self) -> bool {
+        true
+    }
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
+        expect_kinds(self.name(), self.signature(), ops, &["SpVec", "Dense"])?;
+        let (a, b) = (spvec_at(ops, 0), dense_at(ops, 1));
+        if a.dim != b.len() {
+            return Err(KernelError::BadOperands {
+                kernel: self.name(),
+                msg: format!("fiber dim {} vs dense length {}", a.dim, b.len()),
+            });
+        }
+        check_width(self.name(), iw, "fiber", &a.idcs)
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        spvec_at(ops, 0).nnz() as u64
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        Value::Scalar(ops::svxdv(spvec_at(ops, 0), dense_at(ops, 1)))
+    }
+    fn program(&self, variant: Variant, iw: IdxWidth, _ops: &[Operand], cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => sd::svxdv_base(iw),
+            Variant::Ssr => sd::svxdv_ssr(iw),
+            Variant::Sssr => sd::svxdv_sssr(iw, cfg.skip_reduction),
+        }
+    }
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (a, b) = (spvec_at(ops, 0), dense_at(ops, 1));
+        let (vals, idcs) = cc.place_spvec(a, iw);
+        let bb = cc.place_dense(b);
+        let out = cc.arena.alloc_f64(1);
+        cc.args(&[
+            (A0, vals as i64),
+            (A1, idcs as i64),
+            (A2, bb as i64),
+            (A3, a.nnz() as i64),
+            (A4, out as i64),
+        ]);
+        OutSpec::Scalar { addr: out }
+    }
+    fn sample(&self, seed: u64, iw: IdxWidth) -> Vec<OwnedOperand> {
+        let dim = sample_dim(iw);
+        vec![
+            OwnedOperand::SpVec(matgen::random_spvec(seed, dim, dim / 5)),
+            OwnedOperand::Dense(matgen::random_dense(seed.wrapping_add(1), dim)),
+        ]
+    }
 }
 
-/// Shared driver for the fiber-producing set kernels (union sV+sV and
-/// intersection sV⊙sV): identical operand layout, argument convention
-/// (`S11` = output length cell), and result read-back/verification.
-fn run_fiber_setlike(
-    prog: Program,
+/// sV+dV: sparse-dense vector addition, in place on the dense operand.
+pub struct Svpdv;
+
+impl Kernel for Svpdv {
+    fn name(&self) -> &'static str {
+        "svpdv"
+    }
+    fn describe(&self) -> &'static str {
+        "sparse-dense addition sV+dV (in place)"
+    }
+    fn signature(&self) -> &'static str {
+        "SpVec(a), Dense(b)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &ALL3
+    }
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
+        Svxdv.validate(ops, iw).map_err(|e| rename(e, self.name()))
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        spvec_at(ops, 0).nnz() as u64
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        let mut want = dense_at(ops, 1).to_vec();
+        ops::svpdv(spvec_at(ops, 0), &mut want);
+        Value::Dense(want)
+    }
+    fn program(&self, variant: Variant, iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => sd::svpdv_base(iw),
+            Variant::Ssr => sd::svpdv_ssr(iw),
+            Variant::Sssr => sd::svpdv_sssr(iw),
+        }
+    }
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (a, b) = (spvec_at(ops, 0), dense_at(ops, 1));
+        let (vals, idcs) = cc.place_spvec(a, iw);
+        let bb = cc.place_dense(b);
+        cc.args(&[
+            (A0, vals as i64),
+            (A1, idcs as i64),
+            (A2, bb as i64),
+            (A3, a.nnz() as i64),
+        ]);
+        OutSpec::Dense { addr: bb, len: b.len() }
+    }
+    fn sample(&self, seed: u64, iw: IdxWidth) -> Vec<OwnedOperand> {
+        Svxdv.sample(seed, iw)
+    }
+}
+
+/// sV⊙dV: sparse-dense elementwise product over the fiber pattern.
+pub struct Svodv;
+
+impl Kernel for Svodv {
+    fn name(&self) -> &'static str {
+        "svodv"
+    }
+    fn describe(&self) -> &'static str {
+        "sparse-dense elementwise product sVodV"
+    }
+    fn signature(&self) -> &'static str {
+        "SpVec(a), Dense(b)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &ALL3
+    }
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
+        Svxdv.validate(ops, iw).map_err(|e| rename(e, self.name()))
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        spvec_at(ops, 0).nnz() as u64
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        Value::Dense(ops::svodv(spvec_at(ops, 0), dense_at(ops, 1)).vals)
+    }
+    fn program(&self, variant: Variant, iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => sd::svodv_base(iw),
+            Variant::Ssr => sd::svodv_ssr(iw),
+            Variant::Sssr => sd::svodv_sssr(iw),
+        }
+    }
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (a, b) = (spvec_at(ops, 0), dense_at(ops, 1));
+        let (vals, idcs) = cc.place_spvec(a, iw);
+        let bb = cc.place_dense(b);
+        let out = cc.arena.alloc_f64(a.nnz() as u64);
+        cc.args(&[
+            (A0, vals as i64),
+            (A1, idcs as i64),
+            (A2, bb as i64),
+            (A3, a.nnz() as i64),
+            (A4, out as i64),
+        ]);
+        OutSpec::Dense { addr: out, len: a.nnz() }
+    }
+    fn sample(&self, seed: u64, iw: IdxWidth) -> Vec<OwnedOperand> {
+        Svxdv.sample(seed, iw)
+    }
+}
+
+/// sM×dV: CSR SpMV. Also runs sharded on the cluster/system targets.
+pub struct Smxdv;
+
+impl Kernel for Smxdv {
+    fn name(&self) -> &'static str {
+        "smxdv"
+    }
+    fn describe(&self) -> &'static str {
+        "CSR SpMV sMxdV (single-CC, cluster, system)"
+    }
+    fn signature(&self) -> &'static str {
+        "Csr(m), Dense(b)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &ALL3
+    }
+    fn variants_for(&self, target: TargetKind) -> &'static [Variant] {
+        match target {
+            TargetKind::SingleCc => &ALL3,
+            // the cluster scaleout implements BASE and SSSR (Fig. 5)
+            _ => &BASE_SSSR,
+        }
+    }
+    fn targets(&self) -> &'static [TargetKind] {
+        &SHARDED_TARGETS
+    }
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
+        expect_kinds(self.name(), self.signature(), ops, &["Csr", "Dense"])?;
+        let (m, b) = (csr_at(ops, 0), dense_at(ops, 1));
+        if m.ncols != b.len() {
+            return Err(KernelError::BadOperands {
+                kernel: self.name(),
+                msg: format!("matrix ncols {} vs dense length {}", m.ncols, b.len()),
+            });
+        }
+        check_width(self.name(), iw, "matrix", &m.idcs)
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        csr_at(ops, 0).nnz() as u64
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        Value::Dense(ops::smxdv(csr_at(ops, 0), dense_at(ops, 1)))
+    }
+    fn program(&self, variant: Variant, iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => sd::smxdv_base(iw),
+            Variant::Ssr => sd::smxdv_ssr(iw),
+            Variant::Sssr => sd::smxdv_sssr(iw),
+        }
+    }
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (m, b) = (csr_at(ops, 0), dense_at(ops, 1));
+        let (vals, idcs, ptrs) = cc.place_csr(m, iw);
+        let bb = cc.place_dense(b);
+        let out = cc.arena.alloc_f64(m.nrows as u64);
+        cc.args(&[
+            (A0, vals as i64),
+            (A1, idcs as i64),
+            (A2, bb as i64),
+            (A3, m.nrows as i64),
+            (A4, out as i64),
+            (A5, ptrs as i64),
+            (A6, m.nnz() as i64),
+        ]);
+        OutSpec::Dense { addr: out, len: m.nrows }
+    }
+    fn sample(&self, seed: u64, _iw: IdxWidth) -> Vec<OwnedOperand> {
+        vec![
+            OwnedOperand::Csr(matgen::random_csr(seed, 40, 64, 300)),
+            OwnedOperand::Dense(matgen::random_dense(seed.wrapping_add(1), 64)),
+        ]
+    }
+    fn run_cluster(
+        &self,
+        variant: Variant,
+        iw: IdxWidth,
+        ops: &[Operand],
+        cfg: &ClusterCfg,
+        limit: u64,
+    ) -> Result<(Value, Report, Detail), KernelError> {
+        let (m, b) = (csr_at(ops, 0), dense_at(ops, 1));
+        let run = crate::coordinator::run_cluster(
+            variant,
+            iw,
+            m,
+            Operand::Dense(b),
+            cfg,
+            self.payload(ops),
+            limit,
+        )?;
+        Ok((Value::Dense(run.result), run.report, Detail::Cluster { chunks: run.chunks }))
+    }
+    fn run_system(
+        &self,
+        variant: Variant,
+        iw: IdxWidth,
+        ops: &[Operand],
+        cfg: &SystemCfg,
+        limit: u64,
+    ) -> Result<(Value, Report, Detail), KernelError> {
+        let (m, b) = (csr_at(ops, 0), dense_at(ops, 1));
+        let parts = m.row_partition(cfg.clusters);
+        let payloads: Vec<u64> = parts
+            .iter()
+            .map(|r| (m.ptrs[r.end] - m.ptrs[r.start]) as u64)
+            .collect();
+        let run = super::multi::run_system(
+            variant,
+            iw,
+            m,
+            Operand::Dense(b),
+            cfg,
+            &parts,
+            &payloads,
+            limit,
+        )?;
+        Ok((
+            Value::Dense(run.result),
+            run.report,
+            Detail::System { shards: run.shards, reduction: run.reduction },
+        ))
+    }
+}
+
+/// sM×dM: CSR times a power-of-two-column dense matrix (row-major).
+pub struct Smxdm;
+
+impl Kernel for Smxdm {
+    fn name(&self) -> &'static str {
+        "smxdm"
+    }
+    fn describe(&self) -> &'static str {
+        "CSR x dense-matrix sMxdM (power-of-two columns)"
+    }
+    fn signature(&self) -> &'static str {
+        "Csr(m), Dense(d), Scalar(log2_cols)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &BASE_SSSR
+    }
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
+        expect_kinds(self.name(), self.signature(), ops, &["Csr", "Dense", "Scalar"])?;
+        let (m, d, s) = (csr_at(ops, 0), dense_at(ops, 1), scalar_at(ops, 2));
+        if !(0..=8).contains(&s) {
+            return Err(KernelError::BadOperands {
+                kernel: self.name(),
+                msg: format!("log2_cols {s} out of range 0..=8"),
+            });
+        }
+        let cols = 1usize << s;
+        if d.len() != m.ncols * cols {
+            return Err(KernelError::BadOperands {
+                kernel: self.name(),
+                msg: format!("dense length {} vs ncols*cols {}", d.len(), m.ncols * cols),
+            });
+        }
+        check_width(self.name(), iw, "matrix", &m.idcs)
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        (csr_at(ops, 0).nnz() as u64) << scalar_at(ops, 2)
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        let cols = 1usize << scalar_at(ops, 2);
+        Value::Dense(ops::smxdm(csr_at(ops, 0), dense_at(ops, 1), cols))
+    }
+    fn program(&self, variant: Variant, iw: IdxWidth, ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        let log2_cols = scalar_at(ops, 2) as u8;
+        match variant {
+            Variant::Base => sd::smxdm_base(iw, log2_cols),
+            Variant::Sssr => sd::smxdm_sssr(iw, log2_cols),
+            Variant::Ssr => unreachable!("variant capability checked by execute"),
+        }
+    }
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (m, d) = (csr_at(ops, 0), dense_at(ops, 1));
+        let cols = 1usize << scalar_at(ops, 2);
+        let (vals, idcs, ptrs) = cc.place_csr(m, iw);
+        let dd = cc.place_dense(d);
+        let out = cc.arena.alloc_f64((m.nrows * cols) as u64);
+        cc.args(&[
+            (A0, vals as i64),
+            (A1, idcs as i64),
+            (A2, dd as i64),
+            (A3, m.nrows as i64),
+            (A4, out as i64),
+            (A5, ptrs as i64),
+            (A6, m.nnz() as i64),
+        ]);
+        OutSpec::Dense { addr: out, len: m.nrows * cols }
+    }
+    fn sample(&self, seed: u64, _iw: IdxWidth) -> Vec<OwnedOperand> {
+        vec![
+            OwnedOperand::Csr(matgen::random_csr(seed, 24, 32, 120)),
+            OwnedOperand::Dense(matgen::random_dense(seed.wrapping_add(1), 32 * 4)),
+            OwnedOperand::Scalar(2),
+        ]
+    }
+}
+
+// =====================================================================
+// sparse-sparse kernels
+// =====================================================================
+
+fn validate_svsv(
+    kernel: &'static str,
+    ops: &[Operand],
     iw: IdxWidth,
-    a: &SpVec,
-    b: &SpVec,
-    cap: usize,
-    want: &SpVec,
-    what: &str,
-) -> (SpVec, Report) {
-    let mut cc = Cc::new(prog);
+) -> Result<(), KernelError> {
+    expect_kinds(kernel, "SpVec(a), SpVec(b)", ops, &["SpVec", "SpVec"])?;
+    let (a, b) = (spvec_at(ops, 0), spvec_at(ops, 1));
+    if a.dim != b.dim {
+        return Err(KernelError::BadOperands {
+            kernel,
+            msg: format!("fiber dims differ: {} vs {}", a.dim, b.dim),
+        });
+    }
+    check_width(kernel, iw, "fiber a", &a.idcs)?;
+    check_width(kernel, iw, "fiber b", &b.idcs)
+}
+
+fn sample_svsv(seed: u64, iw: IdxWidth) -> Vec<OwnedOperand> {
+    let dim = sample_dim(iw);
+    vec![
+        OwnedOperand::SpVec(matgen::random_spvec(seed, dim, dim / 5)),
+        OwnedOperand::SpVec(matgen::random_spvec(seed.wrapping_add(1), dim, dim / 4)),
+    ]
+}
+
+/// sV×sV: sparse-sparse dot product (streaming intersection).
+pub struct Svxsv;
+
+impl Kernel for Svxsv {
+    fn name(&self) -> &'static str {
+        "svxsv"
+    }
+    fn describe(&self) -> &'static str {
+        "sparse-sparse dot product sVxsV (intersection)"
+    }
+    fn signature(&self) -> &'static str {
+        "SpVec(a), SpVec(b)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        // regular SSRs cannot accelerate conditional stream loads (§3.2)
+        &BASE_SSSR
+    }
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
+        validate_svsv(self.name(), ops, iw)
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        intersection_count(spvec_at(ops, 0), spvec_at(ops, 1))
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        Value::Scalar(ops::svxsv(spvec_at(ops, 0), spvec_at(ops, 1)))
+    }
+    fn program(&self, variant: Variant, iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => ss::svxsv_base(iw),
+            Variant::Sssr => ss::svxsv_sssr(iw),
+            Variant::Ssr => unreachable!("variant capability checked by execute"),
+        }
+    }
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (a, b) = (spvec_at(ops, 0), spvec_at(ops, 1));
+        let (a_vals, a_idcs) = cc.place_spvec(a, iw);
+        let (b_vals, b_idcs) = cc.place_spvec(b, iw);
+        let out = cc.arena.alloc_f64(1);
+        cc.args(&[
+            (A0, a_vals as i64),
+            (A1, a_idcs as i64),
+            (A2, b_vals as i64),
+            (A3, b_idcs as i64),
+            (A4, out as i64),
+            (A5, a.nnz() as i64),
+            (A6, b.nnz() as i64),
+        ]);
+        OutSpec::Scalar { addr: out }
+    }
+    fn sample(&self, seed: u64, iw: IdxWidth) -> Vec<OwnedOperand> {
+        sample_svsv(seed, iw)
+    }
+}
+
+/// Shared placement for the fiber-producing set kernels (union sV+sV
+/// and intersection sV⊙sV): identical operand layout, argument
+/// convention (`S11` = output length cell), and read-back.
+fn place_fiber_setlike(cc: &mut Cc, iw: IdxWidth, a: &SpVec, b: &SpVec, cap: usize) -> OutSpec {
     let (a_vals, a_idcs) = cc.place_spvec(a, iw);
     let (b_vals, b_idcs) = cc.place_spvec(b, iw);
     let out_vals = cc.arena.alloc_f64(cap as u64);
@@ -384,129 +515,428 @@ fn run_fiber_setlike(
         (A7, out_idcs as i64),
         (S11, out_len as i64),
     ]);
-    let (cl, rep) = cc.run(want.nnz() as u64);
-    let len = cl.tcdm.peek(out_len, 8) as usize;
-    assert_eq!(len, want.nnz(), "{what} result length");
-    let got = SpVec {
-        dim: a.dim,
-        idcs: read_idx(&cl.tcdm, out_idcs, len, iw),
-        vals: read_f64s(&cl.tcdm, out_vals, len),
-    };
-    assert_eq!(got.idcs, want.idcs, "{what} indices");
-    assert_all_close(&got.vals, &want.vals, what);
-    (got, rep)
+    OutSpec::Sparse { vals: out_vals, idcs: out_idcs, len_cell: out_len, cap, dim: a.dim }
+}
+
+/// sV+sV: sparse-sparse union addition, producing a result fiber.
+pub struct Svpsv;
+
+impl Kernel for Svpsv {
+    fn name(&self) -> &'static str {
+        "svpsv"
+    }
+    fn describe(&self) -> &'static str {
+        "sparse-sparse union addition sV+sV"
+    }
+    fn signature(&self) -> &'static str {
+        "SpVec(a), SpVec(b)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &BASE_SSSR
+    }
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
+        validate_svsv(self.name(), ops, iw)
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        ops::svpsv(spvec_at(ops, 0), spvec_at(ops, 1)).nnz() as u64
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        Value::Sparse(ops::svpsv(spvec_at(ops, 0), spvec_at(ops, 1)))
+    }
+    fn program(&self, variant: Variant, iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => ss::svpsv_base(iw),
+            Variant::Sssr => ss::svpsv_sssr(iw),
+            Variant::Ssr => unreachable!("variant capability checked by execute"),
+        }
+    }
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (a, b) = (spvec_at(ops, 0), spvec_at(ops, 1));
+        place_fiber_setlike(cc, iw, a, b, a.nnz() + b.nnz())
+    }
+    fn sample(&self, seed: u64, iw: IdxWidth) -> Vec<OwnedOperand> {
+        sample_svsv(seed, iw)
+    }
+}
+
+/// sV⊙sV: sparse-sparse intersection product, producing a result fiber.
+pub struct Svosv;
+
+impl Kernel for Svosv {
+    fn name(&self) -> &'static str {
+        "svosv"
+    }
+    fn describe(&self) -> &'static str {
+        "sparse-sparse intersection product sVosV"
+    }
+    fn signature(&self) -> &'static str {
+        "SpVec(a), SpVec(b)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &BASE_SSSR
+    }
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
+        validate_svsv(self.name(), ops, iw)
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        intersection_count(spvec_at(ops, 0), spvec_at(ops, 1))
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        Value::Sparse(ops::svosv(spvec_at(ops, 0), spvec_at(ops, 1)))
+    }
+    fn program(&self, variant: Variant, iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => ss::svosv_base(iw),
+            Variant::Sssr => ss::svosv_sssr(iw),
+            Variant::Ssr => unreachable!("variant capability checked by execute"),
+        }
+    }
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (a, b) = (spvec_at(ops, 0), spvec_at(ops, 1));
+        place_fiber_setlike(cc, iw, a, b, a.nnz().min(b.nnz()).max(1))
+    }
+    fn sample(&self, seed: u64, iw: IdxWidth) -> Vec<OwnedOperand> {
+        sample_svsv(seed, iw)
+    }
+}
+
+/// sM×sV: SpMSpV with dense result. Also runs sharded on the
+/// cluster/system targets.
+pub struct Smxsv;
+
+impl Kernel for Smxsv {
+    fn name(&self) -> &'static str {
+        "smxsv"
+    }
+    fn describe(&self) -> &'static str {
+        "SpMSpV sMxsV (single-CC, cluster, system)"
+    }
+    fn signature(&self) -> &'static str {
+        "Csr(m), SpVec(b)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &BASE_SSSR
+    }
+    fn targets(&self) -> &'static [TargetKind] {
+        &SHARDED_TARGETS
+    }
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
+        expect_kinds(self.name(), self.signature(), ops, &["Csr", "SpVec"])?;
+        let (m, b) = (csr_at(ops, 0), spvec_at(ops, 1));
+        if m.ncols != b.dim {
+            return Err(KernelError::BadOperands {
+                kernel: self.name(),
+                msg: format!("matrix ncols {} vs fiber dim {}", m.ncols, b.dim),
+            });
+        }
+        check_width(self.name(), iw, "matrix", &m.idcs)?;
+        check_width(self.name(), iw, "fiber", &b.idcs)
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        let (m, b) = (csr_at(ops, 0), spvec_at(ops, 1));
+        (0..m.nrows)
+            .map(|r| intersection_count(&m.row_spvec(r), b))
+            .sum()
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        Value::Dense(ops::smxsv(csr_at(ops, 0), spvec_at(ops, 1)))
+    }
+    fn program(&self, variant: Variant, iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => ss::smxsv_base(iw),
+            Variant::Sssr => ss::smxsv_sssr(iw),
+            Variant::Ssr => unreachable!("variant capability checked by execute"),
+        }
+    }
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (m, b) = (csr_at(ops, 0), spvec_at(ops, 1));
+        let (a_vals, a_idcs, ptrs) = cc.place_csr(m, iw);
+        let (b_vals, b_idcs) = cc.place_spvec(b, iw);
+        let out = cc.arena.alloc_f64(m.nrows as u64);
+        cc.args(&[
+            (A0, a_vals as i64),
+            (A1, a_idcs as i64),
+            (A2, b_vals as i64),
+            (A3, b_idcs as i64),
+            (A4, out as i64),
+            (A5, ptrs as i64),
+            (A6, m.nrows as i64),
+            (A7, b.nnz() as i64),
+        ]);
+        OutSpec::Dense { addr: out, len: m.nrows }
+    }
+    fn sample(&self, seed: u64, _iw: IdxWidth) -> Vec<OwnedOperand> {
+        vec![
+            OwnedOperand::Csr(matgen::random_csr(seed, 30, 128, 200)),
+            OwnedOperand::SpVec(matgen::random_spvec(seed.wrapping_add(1), 128, 40)),
+        ]
+    }
+    fn run_cluster(
+        &self,
+        variant: Variant,
+        iw: IdxWidth,
+        ops: &[Operand],
+        cfg: &ClusterCfg,
+        limit: u64,
+    ) -> Result<(Value, Report, Detail), KernelError> {
+        let (m, b) = (csr_at(ops, 0), spvec_at(ops, 1));
+        let run = crate::coordinator::run_cluster(
+            variant,
+            iw,
+            m,
+            Operand::SpVec(b),
+            cfg,
+            self.payload(ops),
+            limit,
+        )?;
+        Ok((Value::Dense(run.result), run.report, Detail::Cluster { chunks: run.chunks }))
+    }
+    fn run_system(
+        &self,
+        variant: Variant,
+        iw: IdxWidth,
+        ops: &[Operand],
+        cfg: &SystemCfg,
+        limit: u64,
+    ) -> Result<(Value, Report, Detail), KernelError> {
+        let (m, b) = (csr_at(ops, 0), spvec_at(ops, 1));
+        let parts = m.row_partition(cfg.clusters);
+        let payloads: Vec<u64> = parts
+            .iter()
+            .map(|rg| {
+                rg.clone()
+                    .map(|r| intersection_count(&m.row_spvec(r), b))
+                    .sum()
+            })
+            .collect();
+        let run = super::multi::run_system(
+            variant,
+            iw,
+            m,
+            Operand::SpVec(b),
+            cfg,
+            &parts,
+            &payloads,
+            limit,
+        )?;
+        Ok((
+            Value::Dense(run.result),
+            run.report,
+            Detail::System { shards: run.shards, reduction: run.reduction },
+        ))
+    }
+}
+
+/// sM×sM inner-product dataflow (CSR × CSC, dense row-major result).
+pub struct Smxsm;
+
+impl Kernel for Smxsm {
+    fn name(&self) -> &'static str {
+        "smxsm"
+    }
+    fn describe(&self) -> &'static str {
+        "SpGEMM inner dataflow sMxsM (dense result)"
+    }
+    fn signature(&self) -> &'static str {
+        "Csr(a), Csr(b)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &BASE_SSSR
+    }
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
+        expect_kinds(self.name(), self.signature(), ops, &["Csr", "Csr"])?;
+        let (a, b) = (csr_at(ops, 0), csr_at(ops, 1));
+        if a.ncols != b.nrows {
+            return Err(KernelError::BadOperands {
+                kernel: self.name(),
+                msg: format!("inner dims differ: a.ncols {} vs b.nrows {}", a.ncols, b.nrows),
+            });
+        }
+        check_width(self.name(), iw, "matrix a", &a.idcs)?;
+        // the CSC operand streams the row indices of b's *nonzeros*, so
+        // only the highest row actually holding one must fit the width
+        let max_row = (0..b.nrows).rev().find(|&r| b.ptrs[r + 1] > b.ptrs[r]);
+        if let Some(r) = max_row {
+            if r as u64 > iw.max() {
+                return Err(KernelError::BadOperands {
+                    kernel: self.name(),
+                    msg: format!(
+                        "b nonzero row index {r} does not fit a {}-bit width",
+                        iw.name()
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        let (a, b) = (csr_at(ops, 0), csr_at(ops, 1));
+        let b_csc = Csc::from_csr(b);
+        (0..a.nrows)
+            .map(|r| {
+                let ra = a.row_spvec(r);
+                (0..b.ncols)
+                    .map(|c| intersection_count(&ra, &b_csc.col_spvec(c)))
+                    .sum::<u64>()
+            })
+            .sum()
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        let (a, b) = (csr_at(ops, 0), csr_at(ops, 1));
+        Value::Dense(ops::smxsm_inner(a, &Csc::from_csr(b)))
+    }
+    fn program(&self, variant: Variant, iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => ss::smxsm_inner_base(iw),
+            Variant::Sssr => ss::smxsm_inner_sssr(iw),
+            Variant::Ssr => unreachable!("variant capability checked by execute"),
+        }
+    }
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (a, b) = (csr_at(ops, 0), csr_at(ops, 1));
+        let b_csc = Csc::from_csr(b);
+        let (a_vals, a_idcs, a_ptrs) = cc.place_csr(a, iw);
+        let (b_vals, b_idcs, b_ptrs) = cc.place_csr(&b_csc.0, iw);
+        let out = cc.arena.alloc_f64((a.nrows * b.ncols) as u64);
+        cc.args(&[
+            (A0, a_vals as i64),
+            (A1, a_idcs as i64),
+            (A2, b_vals as i64),
+            (A3, b_idcs as i64),
+            (A4, out as i64),
+            (A5, a_ptrs as i64),
+            (A6, a.nrows as i64),
+            (A7, b_ptrs as i64),
+            (S8, b.ncols as i64),
+        ]);
+        OutSpec::Dense { addr: out, len: a.nrows * b.ncols }
+    }
+    fn sample(&self, seed: u64, _iw: IdxWidth) -> Vec<OwnedOperand> {
+        vec![
+            OwnedOperand::Csr(matgen::random_csr(seed, 12, 16, 40)),
+            OwnedOperand::Csr(matgen::random_csr(seed.wrapping_add(1), 16, 10, 30)),
+        ]
+    }
+}
+
+/// Re-attribute an error produced by a shared validator to the kernel
+/// the caller actually invoked.
+fn rename(e: KernelError, kernel: &'static str) -> KernelError {
+    match e {
+        KernelError::BadOperands { msg, .. } => KernelError::BadOperands { kernel, msg },
+        other => other,
+    }
+}
+
+// =====================================================================
+// legacy thin wrappers
+// =====================================================================
+
+fn into_scalar(run: KernelRun) -> (f64, Report) {
+    match run.output {
+        Value::Scalar(x) => (x, run.report),
+        other => unreachable!("expected scalar output, got {}", other.summarize()),
+    }
+}
+
+fn into_dense(run: KernelRun) -> (Vec<f64>, Report) {
+    match run.output {
+        Value::Dense(d) => (d, run.report),
+        other => unreachable!("expected dense output, got {}", other.summarize()),
+    }
+}
+
+fn into_sparse(run: KernelRun) -> (SpVec, Report) {
+    match run.output {
+        Value::Sparse(v) => (v, run.report),
+        other => unreachable!("expected sparse output, got {}", other.summarize()),
+    }
+}
+
+/// sV×dV. Returns (dot product, report). `skip_reduction` gives the
+/// timing-only variant of Fig. 4a's dashed series (result not checked).
+pub fn run_svxdv(
+    variant: Variant,
+    iw: IdxWidth,
+    a: &SpVec,
+    b: &[f64],
+    skip_reduction: bool,
+) -> (f64, Report) {
+    let mut cfg = ExecCfg::single_cc();
+    if skip_reduction {
+        cfg = cfg.skip_reduction();
+    }
+    let ops = [Operand::SpVec(a), Operand::Dense(b)];
+    into_scalar(api::must_execute("svxdv", variant, iw, &ops, &cfg))
+}
+
+/// sV+dV (in place on the dense vector). Returns (updated dense, report).
+/// For fibers with *repeated* indices (the Fig. 4b `sssr8r` reuse
+/// series) run through [`api::execute`] with [`ExecCfg::unchecked`]:
+/// duplicated indices create a genuine gather/scatter RAW hazard in the
+/// decoupled streams, so the numeric result is order-dependent.
+pub fn run_svpdv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &[f64]) -> (Vec<f64>, Report) {
+    let ops = [Operand::SpVec(a), Operand::Dense(b)];
+    into_dense(api::must_execute("svpdv", variant, iw, &ops, &ExecCfg::single_cc()))
+}
+
+/// sV⊙dV. Returns (result value array, report).
+pub fn run_svodv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &[f64]) -> (Vec<f64>, Report) {
+    let ops = [Operand::SpVec(a), Operand::Dense(b)];
+    into_dense(api::must_execute("svodv", variant, iw, &ops, &ExecCfg::single_cc()))
+}
+
+/// sM×dV. Returns (dense result, report).
+pub fn run_smxdv(variant: Variant, iw: IdxWidth, m: &Csr, b: &[f64]) -> (Vec<f64>, Report) {
+    let ops = [Operand::Csr(m), Operand::Dense(b)];
+    into_dense(api::must_execute("smxdv", variant, iw, &ops, &ExecCfg::single_cc()))
+}
+
+/// sM×dM with a power-of-two-column dense matrix (row-major).
+pub fn run_smxdm(
+    variant: Variant,
+    iw: IdxWidth,
+    m: &Csr,
+    d: &[f64],
+    log2_cols: u8,
+) -> (Vec<f64>, Report) {
+    let ops = [Operand::Csr(m), Operand::Dense(d), Operand::Scalar(log2_cols as i64)];
+    into_dense(api::must_execute("smxdm", variant, iw, &ops, &ExecCfg::single_cc()))
+}
+
+/// sV×sV. Returns (dot product, report). Payload = matched pairs.
+pub fn run_svxsv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &SpVec) -> (f64, Report) {
+    let ops = [Operand::SpVec(a), Operand::SpVec(b)];
+    into_scalar(api::must_execute("svxsv", variant, iw, &ops, &ExecCfg::single_cc()))
 }
 
 /// sV+sV. Returns (result sparse vector, report). Payload = |union|.
 pub fn run_svpsv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &SpVec) -> (SpVec, Report) {
-    assert_eq!(a.dim, b.dim);
-    let prog = match variant {
-        Variant::Base => ss::svpsv_base(iw),
-        Variant::Ssr => panic!("no SSR variant for union kernels (§3.2)"),
-        Variant::Sssr => ss::svpsv_sssr(iw),
-    };
-    let want = ops::svpsv(a, b);
-    let cap = a.nnz() + b.nnz();
-    run_fiber_setlike(prog, iw, a, b, cap, &want, "svpsv")
+    let ops = [Operand::SpVec(a), Operand::SpVec(b)];
+    into_sparse(api::must_execute("svpsv", variant, iw, &ops, &ExecCfg::single_cc()))
 }
 
 /// sV⊙sV. Returns (result sparse vector, report). Payload = |intersection|.
 pub fn run_svosv(variant: Variant, iw: IdxWidth, a: &SpVec, b: &SpVec) -> (SpVec, Report) {
-    assert_eq!(a.dim, b.dim);
-    let prog = match variant {
-        Variant::Base => ss::svosv_base(iw),
-        Variant::Ssr => panic!("no SSR variant for intersection kernels (§3.2)"),
-        Variant::Sssr => ss::svosv_sssr(iw),
-    };
-    let want = ops::svosv(a, b);
-    let cap = a.nnz().min(b.nnz()).max(1);
-    run_fiber_setlike(prog, iw, a, b, cap, &want, "svosv")
+    let ops = [Operand::SpVec(a), Operand::SpVec(b)];
+    into_sparse(api::must_execute("svosv", variant, iw, &ops, &ExecCfg::single_cc()))
 }
 
 /// sM×sV (dense result). Payload = total matched pairs over all rows.
 pub fn run_smxsv(variant: Variant, iw: IdxWidth, m: &Csr, b: &SpVec) -> (Vec<f64>, Report) {
-    run_smxsv_sized(variant, iw, m, b, 16 << 20)
-}
-
-/// sM×sV with an enlarged single-CC TCDM (§4.1 full-matrix assumption).
-pub fn run_smxsv_sized(
-    variant: Variant,
-    iw: IdxWidth,
-    m: &Csr,
-    b: &SpVec,
-    tcdm_bytes: usize,
-) -> (Vec<f64>, Report) {
-    assert_eq!(m.ncols, b.dim);
-    let prog = match variant {
-        Variant::Base => ss::smxsv_base(iw),
-        Variant::Ssr => panic!("no SSR variant for intersection kernels (§3.2)"),
-        Variant::Sssr => ss::smxsv_sssr(iw),
-    };
-    let payload: u64 = (0..m.nrows)
-        .map(|r| intersection_count(&m.row_spvec(r), b))
-        .sum();
-    let mut cc = Cc::sized(prog, tcdm_bytes);
-    let (a_vals, a_idcs, ptrs) = cc.place_csr(m, iw);
-    let (b_vals, b_idcs) = cc.place_spvec(b, iw);
-    let out = cc.arena.alloc_f64(m.nrows as u64);
-    cc.args(&[
-        (A0, a_vals as i64),
-        (A1, a_idcs as i64),
-        (A2, b_vals as i64),
-        (A3, b_idcs as i64),
-        (A4, out as i64),
-        (A5, ptrs as i64),
-        (A6, m.nrows as i64),
-        (A7, b.nnz() as i64),
-    ]);
-    let (cl, rep) = cc.run(payload);
-    let got = read_f64s(&cl.tcdm, out, m.nrows);
-    assert_all_close(&got, &ops::smxsv(m, b), "smxsv");
-    (got, rep)
+    let ops = [Operand::Csr(m), Operand::SpVec(b)];
+    into_dense(api::must_execute("smxsv", variant, iw, &ops, &ExecCfg::single_cc()))
 }
 
 /// sM×sM inner dataflow (CSR × CSC, dense row-major result).
 pub fn run_smxsm(variant: Variant, iw: IdxWidth, a: &Csr, b: &Csr) -> (Vec<f64>, Report) {
-    assert_eq!(a.ncols, b.nrows);
-    let b_csc = crate::formats::Csc::from_csr(b);
-    let prog = match variant {
-        Variant::Base => ss::smxsm_inner_base(iw),
-        Variant::Ssr => panic!("no SSR variant for intersection kernels (§3.2)"),
-        Variant::Sssr => ss::smxsm_inner_sssr(iw),
-    };
-    let payload: u64 = (0..a.nrows)
-        .map(|r| {
-            let ra = a.row_spvec(r);
-            (0..b.ncols)
-                .map(|c| intersection_count(&ra, &b_csc.col_spvec(c)))
-                .sum::<u64>()
-        })
-        .sum();
-    let mut cc = Cc::new(prog);
-    let (a_vals, a_idcs, a_ptrs) = cc.place_csr(a, iw);
-    let (b_vals, b_idcs, b_ptrs) = cc.place_csr(&b_csc.0, iw);
-    let out = cc.arena.alloc_f64((a.nrows * b.ncols) as u64);
-    cc.args(&[
-        (A0, a_vals as i64),
-        (A1, a_idcs as i64),
-        (A2, b_vals as i64),
-        (A3, b_idcs as i64),
-        (A4, out as i64),
-        (A5, a_ptrs as i64),
-        (A6, a.nrows as i64),
-        (A7, b_ptrs as i64),
-        (S8, b.ncols as i64),
-    ]);
-    let (cl, rep) = cc.run(payload);
-    let got = read_f64s(&cl.tcdm, out, a.nrows * b.ncols);
-    assert_all_close(&got, &ops::smxsm_inner(a, &b_csc), "smxsm");
-    (got, rep)
+    let ops = [Operand::Csr(a), Operand::Csr(b)];
+    into_dense(api::must_execute("smxsm", variant, iw, &ops, &ExecCfg::single_cc()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matgen;
 
     const WIDTHS: [IdxWidth; 3] = [IdxWidth::U8, IdxWidth::U16, IdxWidth::U32];
 
@@ -562,14 +992,23 @@ mod tests {
 
     #[test]
     fn svpdv_checked_matches_unchecked_timing() {
-        // the checked wrapper must not change what is simulated
+        // the unchecked (timing-only) config must not change what is
+        // simulated
         let dim = 300;
         let a = matgen::random_spvec(35, dim, 70);
         let b = matgen::random_dense(36, dim);
         let (got_c, rep_c) = run_svpdv(Variant::Sssr, IdxWidth::U16, &a, &b);
-        let (got_u, rep_u) = run_svpdv_unchecked(Variant::Sssr, IdxWidth::U16, &a, &b);
-        assert_eq!(rep_c.cycles, rep_u.cycles);
-        assert_eq!(got_c, got_u);
+        let ops = [Operand::SpVec(&a), Operand::Dense(&b)];
+        let run_u = api::execute(
+            api::kernel("svpdv").unwrap(),
+            Variant::Sssr,
+            IdxWidth::U16,
+            &ops,
+            &ExecCfg::single_cc().unchecked(),
+        )
+        .unwrap();
+        assert_eq!(rep_c.cycles, run_u.report.cycles);
+        assert_eq!(Value::Dense(got_c), run_u.output);
     }
 
     #[test]

@@ -11,10 +11,15 @@
 //!   (Listings 2–4).
 //!
 //! Kernels are assembled against the register convention documented in
-//! each builder; the [`driver`] module loads operands into the simulated
-//! TCDM, runs a single core complex, verifies against the
-//! [`crate::formats::ops`] oracles, and reports cycle counts.
+//! each builder. Execution goes through the unified typed API in
+//! [`api`]: every kernel implements the [`api::Kernel`] trait (operand
+//! placement, program selection, oracle), is enumerable via
+//! [`api::REGISTRY`], and runs — on a single CC, a cluster, or a
+//! multi-cluster system — through the single [`api::execute`] entry
+//! point. The `run_*` helpers in [`driver`] / [`apps`] remain as thin
+//! convenience wrappers around it.
 
+pub mod api;
 pub mod apps;
 pub mod driver;
 pub mod multi;
@@ -59,6 +64,16 @@ impl IdxWidth {
         }
     }
 
+    /// Parse a CLI width spec (`"8"`, `"16"`, `"32"`).
+    pub fn parse(s: &str) -> Option<IdxWidth> {
+        match s {
+            "8" => Some(IdxWidth::U8),
+            "16" => Some(IdxWidth::U16),
+            "32" => Some(IdxWidth::U32),
+            _ => None,
+        }
+    }
+
     /// Unsigned load of this width.
     pub fn load(self, a: &mut crate::sim::Asm, rd: u8, base: u8, imm: i64) {
         match self {
@@ -99,6 +114,16 @@ impl Variant {
             Variant::Base => "base",
             Variant::Ssr => "ssr",
             Variant::Sssr => "sssr",
+        }
+    }
+
+    /// Parse a CLI variant spec (`"base"`, `"ssr"`, `"sssr"`).
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "base" => Some(Variant::Base),
+            "ssr" => Some(Variant::Ssr),
+            "sssr" => Some(Variant::Sssr),
+            _ => None,
         }
     }
 }
@@ -159,6 +184,14 @@ pub struct Report {
 impl Report {
     pub fn from_run(cycles: u64, payload: u64, stats: crate::sim::RunStats) -> Self {
         Report { cycles, payload, utilization: payload as f64 / cycles as f64, stats }
+    }
+
+    /// FPU utilization normalized over every core the run statistics
+    /// cover: payload FLOPs per core-cycle. Equals [`Report::utilization`]
+    /// for single-core runs (`stats.cores == 1`); the machine-wide
+    /// metric for cluster and multi-cluster system runs.
+    pub fn per_core_utilization(&self) -> f64 {
+        self.payload as f64 / (self.cycles as f64 * self.stats.cores as f64)
     }
 }
 

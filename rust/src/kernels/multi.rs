@@ -20,10 +20,11 @@
 
 use std::ops::Range;
 
-use crate::coordinator::{plan_job, MemRegion, Operand, PlannedJob, LIMIT};
-use crate::formats::{ops, Csr, SpVec};
+use crate::coordinator::{plan_job, MemRegion, PlannedJob};
+use crate::formats::{Csr, SpVec};
 use crate::sim::{Cluster, Hbm, HbmClusterStats, RunStats, System, SystemCfg};
 
+use super::api::{must_execute, Detail, ExecCfg, KernelError, KernelRun, Operand, Value};
 use super::{IdxWidth, Report, Variant};
 
 /// One cluster's outcome within a sharded run.
@@ -66,7 +67,7 @@ impl SystemRun {
     /// every core of every cluster (the aggregate stats carry the total
     /// core count).
     pub fn utilization(&self) -> f64 {
-        self.report.payload as f64 / (self.report.cycles as f64 * self.report.stats.cores as f64)
+        self.report.per_core_utilization()
     }
 }
 
@@ -112,8 +113,12 @@ fn add_stats(t: &mut RunStats, s: &RunStats) {
 
 /// Shared sharded-run implementation: plan one job per shard against
 /// the shared HBM, assemble the system, run all clusters to completion,
-/// and gather the concatenated result.
-fn run_system(
+/// and gather the concatenated result. `operand` is the broadcast
+/// resident vector ([`Operand::Dense`] or [`Operand::SpVec`]); a run
+/// exceeding `limit` cycles surfaces as [`KernelError::Hang`]. The
+/// `smxdv` / `smxsv` registry kernels dispatch their system target here.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_system(
     variant: Variant,
     iw: IdxWidth,
     m: &Csr,
@@ -121,7 +126,8 @@ fn run_system(
     cfg: &SystemCfg,
     parts: &[std::ops::Range<usize>],
     payloads: &[u64],
-) -> SystemRun {
+    limit: u64,
+) -> Result<SystemRun, KernelError> {
     let k = cfg.clusters;
     assert_eq!(parts.len(), k);
     assert_eq!(payloads.len(), k);
@@ -149,7 +155,9 @@ fn run_system(
     for (i, job) in jobs.iter().enumerate() {
         job.apply(&mut sys.clusters[i]);
     }
-    let total = sys.run(LIMIT);
+    let total = sys
+        .try_run(limit)
+        .map_err(|cycles| KernelError::Hang { kernel: "", cycles })?;
     let finished = sys.finished_cycles();
 
     // gather: concatenate the exclusive shard row slices
@@ -183,7 +191,7 @@ fn run_system(
     agg.cycles = total;
     let report = Report::from_run(total, payload, agg);
     let skew = finished.iter().max().unwrap() - finished.iter().min().unwrap();
-    SystemRun {
+    Ok(SystemRun {
         result,
         report,
         shards,
@@ -192,12 +200,24 @@ fn run_system(
             combine_flops: 0,
             skew_cycles: skew,
         },
+    })
+}
+
+/// Unwrap a [`must_execute`] outcome into the system-run shape.
+fn system_run_of(run: KernelRun) -> SystemRun {
+    let KernelRun { output, report, detail } = run;
+    match (output, detail) {
+        (Value::Dense(result), Detail::System { shards, reduction }) => {
+            SystemRun { result, report, shards, reduction }
+        }
+        _ => unreachable!("system execution yields a dense result"),
     }
 }
 
 /// Row-sharded multi-cluster sM×dV (SpMV). Every cluster receives its
 /// own copy of the dense vector over its HBM channel (the broadcast
-/// traffic a real system pays). Verifies against the dense oracle.
+/// traffic a real system pays). Thin wrapper over [`must_execute`] with
+/// [`ExecCfg::system`] (which verifies against the dense oracle).
 pub fn run_system_smxdv(
     variant: Variant,
     iw: IdxWidth,
@@ -205,23 +225,14 @@ pub fn run_system_smxdv(
     b: &[f64],
     cfg: &SystemCfg,
 ) -> SystemRun {
-    assert_eq!(m.ncols, b.len());
-    let parts = m.row_partition(cfg.clusters);
-    let payloads: Vec<u64> = parts
-        .iter()
-        .map(|r| (m.ptrs[r.end] - m.ptrs[r.start]) as u64)
-        .collect();
-    let run = run_system(variant, iw, m, Operand::Dense(b), cfg, &parts, &payloads);
-    let want = ops::smxdv(m, b);
-    for (i, (g, w)) in run.result.iter().zip(&want).enumerate() {
-        let tol = 1e-9 * w.abs().max(1.0);
-        assert!((g - w).abs() <= tol, "system smxdv[{i}]: {g} vs {w}");
-    }
-    run
+    let ops = [Operand::Csr(m), Operand::Dense(b)];
+    let run = must_execute("smxdv", variant, iw, &ops, &ExecCfg::system(cfg.clone()));
+    system_run_of(run)
 }
 
 /// Row-sharded multi-cluster sM×sV (SpMSpV). The sparse operand fiber
-/// is broadcast like the dense vector of SpMV.
+/// is broadcast like the dense vector of SpMV. Thin wrapper over
+/// [`must_execute`] with [`ExecCfg::system`].
 pub fn run_system_smxsv(
     variant: Variant,
     iw: IdxWidth,
@@ -229,23 +240,9 @@ pub fn run_system_smxsv(
     b: &SpVec,
     cfg: &SystemCfg,
 ) -> SystemRun {
-    assert_eq!(m.ncols, b.dim);
-    let parts = m.row_partition(cfg.clusters);
-    let payloads: Vec<u64> = parts
-        .iter()
-        .map(|rg| {
-            rg.clone()
-                .map(|r| ops::svosv(&m.row_spvec(r), b).nnz() as u64)
-                .sum()
-        })
-        .collect();
-    let run = run_system(variant, iw, m, Operand::Fiber(b), cfg, &parts, &payloads);
-    let want = ops::smxsv(m, b);
-    for (i, (g, w)) in run.result.iter().zip(&want).enumerate() {
-        let tol = 1e-9 * w.abs().max(1.0);
-        assert!((g - w).abs() <= tol, "system smxsv[{i}]: {g} vs {w}");
-    }
-    run
+    let ops = [Operand::Csr(m), Operand::SpVec(b)];
+    let run = must_execute("smxsv", variant, iw, &ops, &ExecCfg::system(cfg.clone()));
+    system_run_of(run)
 }
 
 #[cfg(test)]

@@ -16,8 +16,16 @@
 //!   traffic statistics.
 //! - [`kernels`] — the paper's hand-optimized kernel library (§3.2):
 //!   BASE / SSR / SSSR variants of sparse-dense and sparse-sparse
-//!   vector and matrix ops for 8/16/32-bit index types, and the
-//!   row-sharded multi-cluster SpMV/SpMSpV drivers ([`kernels::multi`]).
+//!   vector and matrix ops for 8/16/32-bit index types, plus stencil
+//!   and codebook-decode applications (§3.3) and the row-sharded
+//!   multi-cluster SpMV/SpMSpV drivers ([`kernels::multi`]). All of
+//!   them implement the unified typed execution API
+//!   ([`kernels::api`]): a [`kernels::api::Kernel`] trait + registry
+//!   with one [`kernels::api::execute`] entry point spanning the
+//!   single-CC, cluster, and multi-cluster system targets, typed
+//!   [`kernels::api::KernelError`]s instead of process aborts, and
+//!   per-kernel randomized sample workloads feeding a registry-driven
+//!   conformance sweep.
 //! - [`coordinator`] — the parallel scaleout (§4.2): row chunking over
 //!   worker cores and double-buffered DMA data movement, split into a
 //!   reusable planning stage and the standalone one-cluster runner.

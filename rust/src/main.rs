@@ -10,9 +10,8 @@ use std::path::{Path, PathBuf};
 
 use sssr::experiments::{write_json, ExperimentSpec, Runner};
 use sssr::harness as h;
-use sssr::kernels::driver::{run_smxdv_sized, run_svxdv, run_svxsv};
+use sssr::kernels::api;
 use sssr::kernels::{IdxWidth, Variant};
-use sssr::matgen;
 
 const USAGE: &str = "\
 repro — Sparse Stream Semantic Registers reproduction
@@ -28,9 +27,11 @@ COMMANDS:
                                                  BENCH_*.json; `scale` /
                                                  `scale_sv` are the multi-
                                                  cluster system-layer sweeps
-    kernel <name> <variant>                      run one kernel demo
-                                                 (names: svxdv svxsv smxdv;
-                                                  variants: base ssr sssr)
+    kernel --list                                list the kernel registry
+    kernel <name> [variant] [--iw 8|16|32]       run one registered kernel
+                                                 on a sample workload
+                                                 (variants: base ssr sssr;
+                                                  default sssr, 16-bit)
     verify [manifest.json]                       simulator vs PJRT golden
                                                  models (needs --features xla)
     all                                          every figure and table
@@ -155,16 +156,7 @@ fn main() {
             }
             println!("sweep done in {:.1}s", t0.elapsed().as_secs_f64());
         }
-        Some("kernel") => {
-            let name = opts.rest.first().cloned().unwrap_or_else(|| "svxdv".into());
-            let variant = match opts.rest.get(1).map(|s| s.as_str()).unwrap_or("sssr") {
-                "base" => Variant::Base,
-                "ssr" => Variant::Ssr,
-                "sssr" => Variant::Sssr,
-                v => die(&format!("unknown variant {v}")),
-            };
-            kernel_demo(&name, variant);
-        }
+        Some("kernel") => kernel_cmd(&opts.rest),
         Some("verify") => {
             let path = opts
                 .rest
@@ -234,42 +226,80 @@ fn print_table1() {
     println!("interconnect latency     : {} cycles one-way", cfg.ic_latency);
 }
 
-fn kernel_demo(name: &str, variant: Variant) {
-    match name {
-        "svxdv" => {
-            let a = matgen::random_spvec(1, 4096, 1024);
-            let b = matgen::random_dense(2, 4096);
-            let (dot, rep) = run_svxdv(variant, IdxWidth::U16, &a, &b, false);
-            println!(
-                "svxdv[{}]: dot={dot:.6}, {} cycles, {:.1} % FPU utilization",
-                variant.name(),
-                rep.cycles,
-                100.0 * rep.utilization
-            );
+/// The `repro kernel` subcommand: list the registry, or resolve one
+/// kernel by name and run it on a sample workload through the single
+/// [`api::execute`] entry point. Errors (unsupported variant/width,
+/// bad operands, hangs) surface as clean one-line messages.
+fn kernel_cmd(rest: &[String]) {
+    let first = match rest.first() {
+        Some(f) => f.as_str(),
+        None => die("kernel needs a name; `repro kernel --list` shows the registry"),
+    };
+    if first == "--list" || first == "list" {
+        list_kernels();
+        return;
+    }
+    let mut variant = Variant::Sssr;
+    let mut iw = IdxWidth::U16;
+    let mut it = rest[1..].iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--iw" => {
+                let v = it.next().unwrap_or_else(|| die("--iw needs a value (8|16|32)"));
+                iw = IdxWidth::parse(v)
+                    .unwrap_or_else(|| die(&format!("bad --iw value {v:?} (8|16|32)")));
+            }
+            s => {
+                variant = Variant::parse(s)
+                    .unwrap_or_else(|| die(&format!("unknown variant {s:?} (base|ssr|sssr)")));
+            }
         }
-        "svxsv" => {
-            let a = matgen::random_spvec(3, 20_000, 2000);
-            let b = matgen::random_spvec(4, 20_000, 2000);
-            let (dot, rep) = run_svxsv(variant, IdxWidth::U16, &a, &b);
-            println!(
-                "svxsv[{}]: dot={dot:.6}, {} cycles ({} matches)",
-                variant.name(),
-                rep.cycles,
-                rep.payload
-            );
-        }
-        "smxdv" => {
-            let m = matgen::mycielskian(10);
-            let b = matgen::random_dense(5, m.ncols);
-            let (_, rep) = run_smxdv_sized(variant, IdxWidth::U16, &m, &b, 16 << 20);
-            println!(
-                "smxdv[{}] on mycielskian10: {} cycles, {:.1} % FPU utilization",
-                variant.name(),
-                rep.cycles,
-                100.0 * rep.utilization
-            );
-        }
-        other => die(&format!("unknown kernel {other}")),
+    }
+    kernel_demo(first, variant, iw);
+}
+
+/// Render the kernel registry (`repro kernel --list`).
+fn list_kernels() {
+    println!("registered kernels ({}):\n", api::REGISTRY.len());
+    println!(
+        "{:<10} {:<34} {:<14} {:<8} {:<26} description",
+        "name", "operands", "variants", "widths", "targets"
+    );
+    for k in api::REGISTRY.iter() {
+        let variants: Vec<&str> = k.variants().iter().map(|v| v.name()).collect();
+        let widths: Vec<&str> = k.widths().iter().map(|w| w.name()).collect();
+        let targets: Vec<String> = k.targets().iter().map(|t| t.to_string()).collect();
+        println!(
+            "{:<10} {:<34} {:<14} {:<8} {:<26} {}",
+            k.name(),
+            k.signature(),
+            variants.join("/"),
+            widths.join("/"),
+            targets.join("/"),
+            k.describe()
+        );
+    }
+}
+
+fn kernel_demo(name: &str, variant: Variant, iw: IdxWidth) {
+    let k = match api::kernel(name) {
+        Some(k) => k,
+        None => die(&format!("unknown kernel {name:?} (known: {})", api::kernel_names())),
+    };
+    let owned = k.sample(0xD5, iw);
+    let ops = api::borrow_all(&owned);
+    let cfg = api::ExecCfg::single_sized(k.tcdm_default());
+    match api::execute(k, variant, iw, &ops, &cfg) {
+        Ok(run) => println!(
+            "{name}[{}] {}-bit: {} in {} cycles ({} payload flops, {:.1} % FPU utilization)",
+            variant.name(),
+            iw.name(),
+            run.output.summarize(),
+            run.report.cycles,
+            run.report.payload,
+            100.0 * run.report.utilization
+        ),
+        Err(e) => die(&e.to_string()),
     }
 }
 

@@ -251,19 +251,30 @@ impl Cluster {
     }
 
     /// Run until all cores halt (and FPUs/streams drain). Returns total
-    /// cycles. Panics after `limit` cycles (deadlock guard).
-    pub fn run(&mut self, mem: &mut dyn MemPort, limit: u64) -> u64 {
+    /// cycles, or `Err(cycles_simulated)` once `limit` cycles pass
+    /// without completion (deadlock guard). The kernel API layer maps
+    /// the error onto [`crate::kernels::api::KernelError::Hang`].
+    pub fn try_run(&mut self, mem: &mut dyn MemPort, limit: u64) -> Result<u64, u64> {
         let start = self.cycle;
         while !self.done() {
+            if self.cycle - start >= limit {
+                return Err(self.cycle - start);
+            }
             self.tick(mem);
-            assert!(
-                self.cycle - start < limit,
+        }
+        Ok(self.cycle - start)
+    }
+
+    /// Panicking [`Self::try_run`] for tests and probes that treat a
+    /// hang as a plain bug.
+    pub fn run(&mut self, mem: &mut dyn MemPort, limit: u64) -> u64 {
+        self.try_run(mem, limit).unwrap_or_else(|_| {
+            panic!(
                 "cluster did not finish within {limit} cycles (pc0={}, barrier={:?})",
                 self.ccs[0].core.pc,
                 self.ccs.iter().map(|c| c.core.at_barrier()).collect::<Vec<_>>()
-            );
-        }
-        self.cycle - start
+            )
+        })
     }
 
     /// Run with a throwaway zero-size private DRAM. The single-CC kernel
@@ -271,13 +282,24 @@ impl Cluster {
     /// (§4.1 methodology), so they need no memory system behind the
     /// cluster — and skip allocating one.
     pub fn run_isolated(&mut self, limit: u64) -> u64 {
-        let mut scratch = Dram::with_params(
+        let mut scratch = self.scratch_dram();
+        self.run(&mut scratch, limit)
+    }
+
+    /// Non-panicking [`Self::run_isolated`]: `Err(cycles)` on hang.
+    pub fn try_run_isolated(&mut self, limit: u64) -> Result<u64, u64> {
+        let mut scratch = self.scratch_dram();
+        self.try_run(&mut scratch, limit)
+    }
+
+    /// The zero-size stand-in DRAM behind the isolated run loops.
+    fn scratch_dram(&self) -> Dram {
+        Dram::with_params(
             0,
             self.cfg.dram_gbps_pin,
             self.cfg.dram_latency,
             self.cfg.ic_latency,
-        );
-        self.run(&mut scratch, limit)
+        )
     }
 
     /// Pre-touch every instruction line of every program so the run

@@ -306,19 +306,29 @@ impl System {
     }
 
     /// Run until every cluster is done; returns the slowest cluster's
-    /// finish cycle. Panics after `limit` cycles (deadlock guard).
-    pub fn run(&mut self, limit: u64) -> u64 {
+    /// finish cycle, or `Err(cycles_simulated)` once `limit` cycles pass
+    /// without completion (deadlock guard). The kernel API layer maps
+    /// the error onto [`crate::kernels::api::KernelError::Hang`].
+    pub fn try_run(&mut self, limit: u64) -> Result<u64, u64> {
         let start = self.cycle;
         while !self.done() {
+            if self.cycle - start >= limit {
+                return Err(self.cycle - start);
+            }
             self.tick();
-            assert!(
-                self.cycle - start < limit,
+        }
+        Ok(self.finished_cycles().into_iter().max().unwrap_or(0))
+    }
+
+    /// Panicking [`Self::try_run`] for tests that treat a hang as a bug.
+    pub fn run(&mut self, limit: u64) -> u64 {
+        self.try_run(limit).unwrap_or_else(|_| {
+            panic!(
                 "system did not finish within {limit} cycles ({} of {} clusters done)",
                 self.finished_at.iter().filter(|f| f.is_some()).count(),
                 self.clusters.len()
-            );
-        }
-        self.finished_cycles().into_iter().max().unwrap_or(0)
+            )
+        })
     }
 
     /// Per-cluster finish cycles (valid once [`System::done`]).

@@ -1,0 +1,112 @@
+//! Registry-driven kernel conformance sweep: every registered kernel ×
+//! every supported variant × every supported index width runs on
+//! randomized sample operands through the single `execute` entry point,
+//! and the output is checked against the `formats::ops` oracle in one
+//! generic loop. Adding a kernel to the registry automatically enrolls
+//! it here — no per-kernel test code.
+
+use sssr::kernels::api::{
+    self, borrow_all, check_output, execute, ExecCfg, KernelError, Operand, TargetKind,
+};
+use sssr::kernels::{IdxWidth, Variant};
+use sssr::matgen;
+use sssr::sim::{ClusterCfg, SystemCfg};
+
+#[test]
+fn every_kernel_variant_width_conforms_to_its_oracle() {
+    for (ki, k) in api::REGISTRY.iter().enumerate() {
+        for (wi, &iw) in k.widths().iter().enumerate() {
+            for (vi, &v) in k.variants().iter().enumerate() {
+                let seed = 0x5EED_0000 + (ki as u64) * 64 + (wi as u64) * 8 + vi as u64;
+                let owned = k.sample(seed, iw);
+                let ops = borrow_all(&owned);
+                let cfg = ExecCfg::single_sized(k.tcdm_default());
+                // execute() verifies internally; any mismatch or hang is
+                // a typed error here, not a process abort
+                let run = execute(*k, v, iw, &ops, &cfg).unwrap_or_else(|e| {
+                    panic!("{} [{:?} {:?}]: {e}", k.name(), v, iw);
+                });
+                assert!(run.report.cycles > 0, "{}: zero-cycle run", k.name());
+                // and the generic loop re-checks against the oracle
+                check_output(k.name(), &run.output, &k.oracle(&ops)).unwrap_or_else(|e| {
+                    panic!("{} [{:?} {:?}] oracle recheck: {e}", k.name(), v, iw);
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_kernels_conform_on_cluster_and_system_targets() {
+    // the sharded matrix kernels also run on the cluster/system targets;
+    // sweep those through the same generic entry point
+    let m = matgen::random_csr(77, 120, 256, 2000);
+    let b = matgen::random_dense(78, 256);
+    let sv = matgen::random_spvec(79, 256, 30);
+    let dv_ops = [Operand::Csr(&m), Operand::Dense(&b)];
+    let sv_ops = [Operand::Csr(&m), Operand::SpVec(&sv)];
+    for (name, ops) in [("smxdv", &dv_ops), ("smxsv", &sv_ops)] {
+        let k = api::kernel(name).unwrap();
+        assert!(k.targets().contains(&TargetKind::Cluster));
+        assert!(k.targets().contains(&TargetKind::System));
+        for cfg in [
+            ExecCfg::cluster(ClusterCfg::paper_cluster()),
+            ExecCfg::system(SystemCfg::paper_system(2, 1)),
+        ] {
+            let run = execute(k, Variant::Sssr, IdxWidth::U16, ops, &cfg)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            check_output(k.name(), &run.output, &k.oracle(ops))
+                .unwrap_or_else(|e| panic!("{name} oracle recheck: {e}"));
+        }
+    }
+}
+
+#[test]
+fn registry_capability_metadata_is_consistent() {
+    for k in api::REGISTRY.iter() {
+        assert!(!k.name().is_empty());
+        assert!(!k.variants().is_empty(), "{} declares no variants", k.name());
+        assert!(!k.widths().is_empty(), "{} declares no widths", k.name());
+        assert!(
+            k.targets().contains(&TargetKind::SingleCc),
+            "{} must run on the single-CC target",
+            k.name()
+        );
+        // sample operands must validate for every supported width
+        for &iw in k.widths() {
+            let owned = k.sample(1, iw);
+            let ops = borrow_all(&owned);
+            k.validate(&ops, iw)
+                .unwrap_or_else(|e| panic!("{} sample invalid: {e}", k.name()));
+        }
+    }
+}
+
+#[test]
+fn hang_guard_surfaces_on_every_target() {
+    // single-CC
+    let a = matgen::random_spvec(5, 512, 128);
+    let d = matgen::random_dense(6, 512);
+    let ops = [Operand::SpVec(&a), Operand::Dense(&d)];
+    let k = api::kernel("svxdv").unwrap();
+    match execute(k, Variant::Sssr, IdxWidth::U16, &ops, &ExecCfg::single_cc().with_limit(4)) {
+        Err(KernelError::Hang { .. }) => {}
+        other => panic!("expected single-CC hang, got {:?}", other.err()),
+    }
+    // cluster
+    let m = matgen::random_csr(7, 64, 128, 600);
+    let b = matgen::random_dense(8, 128);
+    let ops = [Operand::Csr(&m), Operand::Dense(&b)];
+    let k = api::kernel("smxdv").unwrap();
+    let cfg = ExecCfg::cluster(ClusterCfg::paper_cluster()).with_limit(4);
+    match execute(k, Variant::Sssr, IdxWidth::U16, &ops, &cfg) {
+        Err(KernelError::Hang { .. }) => {}
+        other => panic!("expected cluster hang, got {:?}", other.err()),
+    }
+    // system
+    let cfg = ExecCfg::system(SystemCfg::paper_system(2, 1)).with_limit(4);
+    match execute(k, Variant::Sssr, IdxWidth::U16, &ops, &cfg) {
+        Err(KernelError::Hang { .. }) => {}
+        other => panic!("expected system hang, got {:?}", other.err()),
+    }
+}
