@@ -1,0 +1,20 @@
+//! Regenerates the CSF tensor / graph kernel sweep (`graph`: triangle
+//! counting and CSF SpGEMM, SSSR vs BASE over the graph corpus) through
+//! the parallel experiment engine and writes `BENCH_graph.json` next to
+//! the other bench trajectories. Quick graphs by default; REPRO_FULL=1
+//! for the corpus-sized instances.
+use std::path::Path;
+
+use sssr::experiments::{write_json, Runner};
+use sssr::harness as h;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let runner = Runner::new(0);
+    let spec = h::spec_by_name("graph").expect("graph spec registered");
+    let recs = runner.run(&spec);
+    spec.print(&recs);
+    let path = write_json(Path::new("."), &spec, &recs).expect("writing BENCH json");
+    println!("[wrote {}]", path.display());
+    println!("\n[fig_graph bench wall time: {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,317 @@
+//! Compressed Sparse Fiber (CSF) tensors (§3.1: "widespread sparse
+//! formats like CSR and CSF").
+//!
+//! CSF compresses *every* tensor level: where CSR stores one pointer per
+//! row — empty or not — CSF level 0 stores only the ids of non-empty
+//! rows next to pointers into the level-1 fibers, so a hypersparse
+//! matrix costs memory proportional to its *fiber* count, not its
+//! dimension. Each level is exactly the (index array, payload) pair the
+//! SSSR index streams iterate: level 0 walks the fiber directory,
+//! level 1 streams one column fiber per entry. The two-level [`Csf`]
+//! here is the matrix instance of the general n-level format; the leaf
+//! fibers are interchangeable with [`SpVec`] (see [`Csf::fiber_spvec`]).
+
+use super::{Csr, SpVec};
+
+/// A sparse matrix in two-level CSF form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csf {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Level-0 indices: ids of the non-empty rows, strictly increasing.
+    pub row_idcs: Vec<u32>,
+    /// Level-0 pointers into the level-1 arrays, length `nfibers + 1`,
+    /// strictly increasing (every stored fiber is non-empty).
+    pub row_ptrs: Vec<u32>,
+    /// Level-1 indices: column ids, strictly increasing within a fiber.
+    pub col_idcs: Vec<u32>,
+    /// Leaf values, one per level-1 index.
+    pub vals: Vec<f64>,
+}
+
+impl Csf {
+    pub fn new(
+        nrows: usize,
+        ncols: usize,
+        row_idcs: Vec<u32>,
+        row_ptrs: Vec<u32>,
+        col_idcs: Vec<u32>,
+        vals: Vec<f64>,
+    ) -> Self {
+        let t = Csf { nrows, ncols, row_idcs, row_ptrs, col_idcs, vals };
+        t.validate().expect("invalid CSF");
+        t
+    }
+
+    /// An all-zero matrix: no fibers at all (the hypersparse win over
+    /// CSR, whose pointer array alone would be `nrows + 1` words).
+    pub fn empty(nrows: usize, ncols: usize) -> Self {
+        Csf { nrows, ncols, row_idcs: vec![], row_ptrs: vec![0], col_idcs: vec![], vals: vec![] }
+    }
+
+    /// Number of stored (non-empty) row fibers.
+    pub fn nfibers(&self) -> usize {
+        self.row_idcs.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col_idcs.len()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptrs.len() != self.nfibers() + 1 {
+            return Err(format!(
+                "row_ptrs length {} != nfibers {} + 1",
+                self.row_ptrs.len(),
+                self.nfibers()
+            ));
+        }
+        if self.row_ptrs[0] != 0 {
+            return Err("row_ptrs[0] != 0".into());
+        }
+        if *self.row_ptrs.last().unwrap() as usize != self.col_idcs.len() {
+            return Err("last row_ptr != nnz".into());
+        }
+        if self.col_idcs.len() != self.vals.len() {
+            return Err("col_idcs/vals length".into());
+        }
+        for w in self.row_idcs.windows(2) {
+            if w[0] >= w[1] {
+                return Err(format!("row ids not strictly increasing: {} >= {}", w[0], w[1]));
+            }
+        }
+        if let Some(&last) = self.row_idcs.last() {
+            if last as usize >= self.nrows {
+                return Err(format!("row id {last} out of nrows {}", self.nrows));
+            }
+        }
+        for f in 0..self.nfibers() {
+            let (a, b) = (self.row_ptrs[f] as usize, self.row_ptrs[f + 1] as usize);
+            if a >= b {
+                return Err(format!("fiber {f} empty (CSF stores only non-empty fibers)"));
+            }
+            let idx = &self.col_idcs[a..b];
+            for w in idx.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("fiber {f} indices not increasing"));
+                }
+            }
+            if *idx.last().unwrap() as usize >= self.ncols {
+                return Err(format!("fiber {f} index out of ncols {}", self.ncols));
+            }
+        }
+        Ok(())
+    }
+
+    /// Fiber `f` as `(row_id, column indices, values)`.
+    pub fn fiber(&self, f: usize) -> (u32, &[u32], &[f64]) {
+        let (a, b) = (self.row_ptrs[f] as usize, self.row_ptrs[f + 1] as usize);
+        (self.row_idcs[f], &self.col_idcs[a..b], &self.vals[a..b])
+    }
+
+    /// Fiber `f` as an owned sparse vector over the column space.
+    pub fn fiber_spvec(&self, f: usize) -> SpVec {
+        let (_, idx, val) = self.fiber(f);
+        SpVec { dim: self.ncols, idcs: idx.to_vec(), vals: val.to_vec() }
+    }
+
+    /// Iterate `(row_id, column indices, values)` over the stored fibers.
+    pub fn fibers(&self) -> impl Iterator<Item = (u32, &[u32], &[f64])> + '_ {
+        (0..self.nfibers()).map(|f| self.fiber(f))
+    }
+
+    /// Convert from CSR, dropping the empty rows into level-0 gaps.
+    pub fn from_csr(m: &Csr) -> Self {
+        let mut row_idcs = vec![];
+        let mut row_ptrs = vec![0u32];
+        let mut col_idcs = vec![];
+        let mut vals = vec![];
+        for r in 0..m.nrows {
+            let (idx, val) = m.row(r);
+            if idx.is_empty() {
+                continue;
+            }
+            row_idcs.push(r as u32);
+            col_idcs.extend_from_slice(idx);
+            vals.extend_from_slice(val);
+            row_ptrs.push(col_idcs.len() as u32);
+        }
+        Csf { nrows: m.nrows, ncols: m.ncols, row_idcs, row_ptrs, col_idcs, vals }
+    }
+
+    /// Convert back to CSR, re-materializing the empty rows.
+    pub fn to_csr(&self) -> Csr {
+        // fiber lengths at ptrs[r + 1], then one prefix-sum pass
+        let mut ptrs = vec![0u32; self.nrows + 1];
+        for f in 0..self.nfibers() {
+            let r = self.row_idcs[f] as usize;
+            ptrs[r + 1] = self.row_ptrs[f + 1] - self.row_ptrs[f];
+        }
+        for r in 0..self.nrows {
+            ptrs[r + 1] += ptrs[r];
+        }
+        Csr::new(self.nrows, self.ncols, ptrs, self.col_idcs.clone(), self.vals.clone())
+    }
+
+    /// Expand level 0 into a CSR-style full row-pointer directory of
+    /// `nrows + 1` entries (empty rows get zero-length ranges). This is
+    /// the placement layout the [`crate::kernels`] SpGEMM programs use
+    /// for their *B* operand, which they must index by arbitrary row id.
+    pub fn row_directory(&self) -> Vec<u32> {
+        let mut dir = vec![0u32; self.nrows + 1];
+        let mut f = 0usize;
+        let mut nnz = 0u32;
+        for r in 0..self.nrows {
+            if f < self.nfibers() && self.row_idcs[f] as usize == r {
+                nnz = self.row_ptrs[f + 1];
+                f += 1;
+            }
+            dir[r + 1] = nnz;
+        }
+        dir
+    }
+
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.ncols]; self.nrows];
+        for (r, idx, val) in self.fibers() {
+            for (&c, &v) in idx.iter().zip(val) {
+                d[r as usize][c as usize] = v;
+            }
+        }
+        d
+    }
+
+    pub fn from_dense(d: &[Vec<f64>]) -> Self {
+        Csf::from_csr(&Csr::from_dense(d))
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.nrows * self.ncols) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gappy_csr() -> Csr {
+        // rows 1 and 3 empty
+        Csr::new(
+            5,
+            4,
+            vec![0, 2, 2, 3, 3, 5],
+            vec![0, 3, 1, 0, 2],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        )
+    }
+
+    #[test]
+    fn csf_roundtrips_csr_with_empty_rows() {
+        let m = gappy_csr();
+        let t = Csf::from_csr(&m);
+        assert_eq!(t.nfibers(), 3);
+        assert_eq!(t.row_idcs, vec![0, 2, 4]);
+        assert_eq!(t.nnz(), m.nnz());
+        assert_eq!(t.to_csr(), m);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn csf_dense_roundtrip() {
+        let m = gappy_csr();
+        let t = Csf::from_csr(&m);
+        assert_eq!(t.to_dense(), m.to_dense());
+        assert_eq!(Csf::from_dense(&t.to_dense()), t);
+    }
+
+    #[test]
+    fn csf_empty_and_hypersparse() {
+        let e = Csf::empty(1000, 1000);
+        assert_eq!(e.nfibers(), 0);
+        assert_eq!(e.nnz(), 0);
+        e.validate().unwrap();
+        assert_eq!(e.to_csr().nnz(), 0);
+        // one nonzero in a huge matrix: one fiber, not 1001 pointers
+        let mut d = vec![vec![0.0; 8]; 8];
+        d[5][2] = 7.0;
+        let t = Csf::from_dense(&d);
+        assert_eq!((t.nfibers(), t.row_idcs[0], t.nnz()), (1, 5, 1));
+    }
+
+    #[test]
+    fn csf_fiber_views() {
+        let t = Csf::from_csr(&gappy_csr());
+        let (r, idx, val) = t.fiber(2);
+        assert_eq!(r, 4);
+        assert_eq!(idx, &[0, 2]);
+        assert_eq!(val, &[4.0, 5.0]);
+        let v = t.fiber_spvec(0);
+        assert_eq!(v.dim, 4);
+        assert_eq!(v.idcs, vec![0, 3]);
+        let rows: Vec<u32> = t.fibers().map(|(r, _, _)| r).collect();
+        assert_eq!(rows, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn csf_row_directory_matches_csr_ptrs() {
+        let m = gappy_csr();
+        let t = Csf::from_csr(&m);
+        assert_eq!(t.row_directory(), m.ptrs);
+        assert_eq!(Csf::empty(3, 3).row_directory(), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn csf_validate_rejects_bad() {
+        // empty fiber
+        let t = Csf {
+            nrows: 2,
+            ncols: 2,
+            row_idcs: vec![0, 1],
+            row_ptrs: vec![0, 0, 1],
+            col_idcs: vec![0],
+            vals: vec![1.0],
+        };
+        assert!(t.validate().is_err());
+        // row id out of range
+        let t = Csf {
+            nrows: 2,
+            ncols: 2,
+            row_idcs: vec![2],
+            row_ptrs: vec![0, 1],
+            col_idcs: vec![0],
+            vals: vec![1.0],
+        };
+        assert!(t.validate().is_err());
+        // unsorted row ids
+        let t = Csf {
+            nrows: 4,
+            ncols: 2,
+            row_idcs: vec![1, 0],
+            row_ptrs: vec![0, 1, 2],
+            col_idcs: vec![0, 0],
+            vals: vec![1.0, 1.0],
+        };
+        assert!(t.validate().is_err());
+        // unsorted columns within a fiber
+        let t = Csf {
+            nrows: 1,
+            ncols: 4,
+            row_idcs: vec![0],
+            row_ptrs: vec![0, 2],
+            col_idcs: vec![2, 1],
+            vals: vec![1.0, 1.0],
+        };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn csf_roundtrip_on_random_matrices() {
+        for seed in [41, 42, 43] {
+            let m = crate::matgen::random_csr(seed, 60, 45, 250);
+            let t = Csf::from_csr(&m);
+            t.validate().unwrap();
+            assert_eq!(t.to_csr(), m);
+            assert_eq!(t.row_directory(), m.ptrs);
+        }
+    }
+}

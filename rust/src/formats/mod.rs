@@ -1,11 +1,16 @@
 //! Sparse tensor formats (§3.1): CSR/CSC matrices, CSF sparse vectors
-//! (fibers), blocked BCSR, and the dense reference operations used as
-//! correctness oracles throughout the test suite.
+//! (fibers) and multi-level CSF tensors, blocked BCSR, and the dense
+//! reference operations used as correctness oracles throughout the test
+//! suite.
 //!
 //! A sparse *fiber* is the pair (value array, index array) along the
-//! major axis — the unit SSSRs iterate.
+//! major axis — the unit SSSRs iterate. [`Csf`] stacks fibers into a
+//! fully compressed two-level tensor (see [`csf`]).
 
+pub mod csf;
 pub mod ops;
+
+pub use csf::Csf;
 
 /// A sparse vector in CSF form: one fiber with strictly increasing
 /// indices.

@@ -2,7 +2,7 @@
 //! — the correctness oracles the simulated kernels (and the JAX/Pallas
 //! artifacts) are checked against.
 
-use super::{Csr, SpVec};
+use super::{Csf, Csr, SpVec};
 
 /// sV×dV: sparse-dense dot product.
 pub fn svxdv(a: &SpVec, b: &[f64]) -> f64 {
@@ -159,6 +159,158 @@ pub fn smxsm_inner(a: &Csr, b_csc: &super::Csc) -> Vec<f64> {
     out
 }
 
+/// Scale a sparse vector by `alpha` (helper for the row-wise SpGEMM
+/// oracle; keeps the pattern, even when `alpha == 0`).
+pub fn svscale(alpha: f64, a: &SpVec) -> SpVec {
+    SpVec {
+        dim: a.dim,
+        idcs: a.idcs.clone(),
+        vals: a.vals.iter().map(|&v| alpha * v).collect(),
+    }
+}
+
+/// Assemble a CSF tensor from per-row leaf fibers (empty fibers are
+/// compressed away).
+fn csf_from_fibers(nrows: usize, ncols: usize, rows: Vec<(u32, SpVec)>) -> Csf {
+    let mut row_idcs = vec![];
+    let mut row_ptrs = vec![0u32];
+    let mut col_idcs = vec![];
+    let mut vals = vec![];
+    for (r, f) in rows {
+        if f.nnz() == 0 {
+            continue;
+        }
+        row_idcs.push(r);
+        col_idcs.extend_from_slice(&f.idcs);
+        vals.extend_from_slice(&f.vals);
+        row_ptrs.push(col_idcs.len() as u32);
+    }
+    Csf { nrows, ncols, row_idcs, row_ptrs, col_idcs, vals }
+}
+
+/// Merge the level-0 fiber directories of two CSF tensors: the union or
+/// intersection of their non-empty-row id sets, with the leaf fibers
+/// combined by `leaf`. Empty combined fibers are dropped (intersection
+/// of disjoint leaf patterns).
+fn csf_merge(a: &Csf, b: &Csf, union: bool, leaf: impl Fn(&SpVec, &SpVec) -> SpVec) -> Csf {
+    assert_eq!((a.nrows, a.ncols), (b.nrows, b.ncols), "CSF shapes differ");
+    let empty = SpVec::empty(a.ncols);
+    let mut rows = vec![];
+    let (mut fa, mut fb) = (0usize, 0usize);
+    while fa < a.nfibers() || fb < b.nfibers() {
+        let ra = a.row_idcs.get(fa).copied();
+        let rb = b.row_idcs.get(fb).copied();
+        match (ra, rb) {
+            (Some(x), Some(y)) if x == y => {
+                rows.push((x, leaf(&a.fiber_spvec(fa), &b.fiber_spvec(fb))));
+                fa += 1;
+                fb += 1;
+            }
+            (Some(x), yo) if yo.is_none() || x < yo.unwrap() => {
+                if union {
+                    rows.push((x, leaf(&a.fiber_spvec(fa), &empty)));
+                }
+                fa += 1;
+            }
+            _ => {
+                if union {
+                    rows.push((rb.unwrap(), leaf(&empty, &b.fiber_spvec(fb))));
+                }
+                fb += 1;
+            }
+        }
+    }
+    csf_from_fibers(a.nrows, a.ncols, rows)
+}
+
+/// CSF + CSF: elementwise addition — level-0 union of the fiber
+/// directories, level-1 `sV+sV` union per shared row.
+pub fn csf_add(a: &Csf, b: &Csf) -> Csf {
+    csf_merge(a, b, true, svpsv)
+}
+
+/// CSF ⊙ CSF: elementwise product — level-0 intersection of the fiber
+/// directories, level-1 `sV⊙sV` intersection per shared row.
+pub fn csf_mul(a: &Csf, b: &Csf) -> Csf {
+    csf_merge(a, b, false, svosv)
+}
+
+/// CSF × CSF row-wise SpGEMM (Gustavson dataflow, §3.2.2 lineage): for
+/// each stored row fiber `i` of A, accumulate `Σ_k a_ik · B[k,:]` by a
+/// chain of scaled unions — exactly the dataflow the `smxsm_csf` kernel
+/// streams through the union-mode SSSRs. The result keeps the union
+/// pattern (explicit zeros from cancellation survive, as in [`svpsv`]).
+pub fn smxsm_csf(a: &Csf, b: &Csf) -> Csf {
+    assert_eq!(a.ncols, b.nrows, "inner dims differ");
+    let mut rows = vec![];
+    for (r, idx, val) in a.fibers() {
+        let mut acc = SpVec::empty(b.ncols);
+        for (&k, &aik) in idx.iter().zip(val) {
+            if let Ok(f) = b.row_idcs.binary_search(&k) {
+                acc = svpsv(&acc, &svscale(aik, &b.fiber_spvec(f)));
+            }
+        }
+        rows.push((r, acc));
+    }
+    csf_from_fibers(a.nrows, b.ncols, rows)
+}
+
+/// Payload FLOP count of the row-wise CSF SpGEMM: one fmadd per element
+/// of every intermediate union (the `frep.s` trip counts the SSSR
+/// variant executes, which the paper's utilization metric is based on).
+/// A step whose B row is empty still streams the accumulator through
+/// (a union against the empty fiber), so it counts `|acc|` fmadds.
+pub fn smxsm_csf_flops(a: &Csf, b: &Csf) -> u64 {
+    let mut flops = 0u64;
+    for (_, idx, val) in a.fibers() {
+        let mut acc = SpVec::empty(b.ncols);
+        for (&k, &aik) in idx.iter().zip(val) {
+            if let Ok(f) = b.row_idcs.binary_search(&k) {
+                acc = svpsv(&acc, &svscale(aik, &b.fiber_spvec(f)));
+            }
+            flops += acc.nnz() as u64;
+        }
+    }
+    flops
+}
+
+/// Triangle count of an undirected graph given as a symmetric adjacency
+/// pattern with zero diagonal: Σ over edges (u,v), u < v, of
+/// |N(u) ∩ N(v)| counts every triangle three times (once per edge).
+/// This is the §3.3 pattern-matching dataflow the `tricnt` kernel
+/// streams through the intersection-mode SSSRs.
+pub fn triangle_count(g: &Csr) -> u64 {
+    let matched = triangle_matches(g);
+    debug_assert_eq!(matched % 3, 0, "non-symmetric or self-looped adjacency");
+    matched / 3
+}
+
+/// Total intersection matches of the triangle-counting sweep (= 3× the
+/// triangle count): one fmadd per match, i.e. the `tricnt` kernel's
+/// payload FLOP count. Counts over borrowed row slices — no allocation.
+pub fn triangle_matches(g: &Csr) -> u64 {
+    let mut matched = 0u64;
+    for u in 0..g.nrows {
+        let (nu, _) = g.row(u);
+        for &v in nu.iter().filter(|&&v| v as usize > u) {
+            let (nv, _) = g.row(v as usize);
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < nu.len() && j < nv.len() {
+                match nu[i].cmp(&nv[j]) {
+                    std::cmp::Ordering::Equal => {
+                        matched += 1;
+                        i += 1;
+                        j += 1;
+                    }
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                }
+            }
+        }
+    }
+    matched
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +411,72 @@ mod tests {
         let m = Csr::from_dense(&vec![vec![1.0, 0.0, 2.0], vec![0.0, 5.0, 0.0]]);
         let b = SpVec::from_dense(&[0.0, 7.0, 3.0]);
         assert_eq!(smxsv(&m, &b), vec![6.0, 35.0]);
+    }
+
+    fn rand_csf(r: &mut Pcg, nrows: usize, ncols: usize, nnz: usize) -> Csf {
+        Csf::from_csr(&crate::matgen::random_csr(r.below(1 << 30), nrows, ncols, nnz))
+    }
+
+    #[test]
+    fn csf_add_mul_match_dense() {
+        let mut r = Pcg::new(7);
+        for _ in 0..20 {
+            let (n, m) = (1 + r.below(20) as usize, 1 + r.below(20) as usize);
+            let a = rand_csf(&mut r, n, m, r.below((n * m) as u64 + 1) as usize);
+            let b = rand_csf(&mut r, n, m, r.below((n * m) as u64 + 1) as usize);
+            let (da, db) = (a.to_dense(), b.to_dense());
+            let sum = csf_add(&a, &b);
+            sum.validate().unwrap();
+            let prod = csf_mul(&a, &b);
+            prod.validate().unwrap();
+            let (ds, dp) = (sum.to_dense(), prod.to_dense());
+            for i in 0..n {
+                for j in 0..m {
+                    assert_eq!(ds[i][j], da[i][j] + db[i][j], "add ({i},{j})");
+                    assert_eq!(dp[i][j], da[i][j] * db[i][j], "mul ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn smxsm_csf_matches_dense_matmul() {
+        let mut r = Pcg::new(8);
+        for _ in 0..15 {
+            let (n, k, m) = (
+                1 + r.below(12) as usize,
+                1 + r.below(12) as usize,
+                1 + r.below(12) as usize,
+            );
+            let a = rand_csf(&mut r, n, k, r.below((n * k) as u64 / 2 + 1) as usize);
+            let b = rand_csf(&mut r, k, m, r.below((k * m) as u64 / 2 + 1) as usize);
+            let c = smxsm_csf(&a, &b);
+            c.validate().unwrap();
+            let (da, db, dc) = (a.to_dense(), b.to_dense(), c.to_dense());
+            for i in 0..n {
+                for j in 0..m {
+                    let want: f64 = (0..k).map(|x| da[i][x] * db[x][j]).sum();
+                    assert!((dc[i][j] - want).abs() < 1e-9, "({i},{j})");
+                }
+            }
+            // flops bound the result size and dominate the nnz
+            assert!(smxsm_csf_flops(&a, &b) >= c.nnz() as u64);
+        }
+    }
+
+    #[test]
+    fn triangle_count_matches_reference() {
+        for (seed, scale) in [(1u64, 5u32), (2, 6), (3, 7)] {
+            let g = crate::matgen::undirected_graph(seed, scale, 4);
+            assert_eq!(
+                triangle_count(&g),
+                crate::kernels::apps::triangle_count_ref(&g),
+                "seed {seed}"
+            );
+            assert_eq!(triangle_matches(&g), 3 * triangle_count(&g));
+        }
+        // Mycielski graphs are triangle-free by construction
+        assert_eq!(triangle_count(&crate::matgen::mycielskian(7)), 0);
     }
 
     #[test]

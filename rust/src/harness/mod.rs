@@ -729,6 +729,104 @@ pub fn spec_scale_sv() -> ExperimentSpec {
 }
 
 // ======================================================================
+// graph — CSF SpGEMM and pattern matching on the corpus graphs
+// ======================================================================
+
+/// Graphs for the `graph` sweep: exact Mycielskian constructions (the
+/// corpus' triangle-free family) plus symmetrized R-MAT power-law
+/// graphs. Quick mode keeps the sweep in seconds; `REPRO_FULL=1` scales
+/// to the corpus-sized instances.
+fn graph_corpus() -> Vec<matgen::CorpusEntry> {
+    if full_mode() {
+        vec![
+            matgen::CorpusEntry { name: "mycielskian8", matrix: matgen::mycielskian(8) },
+            matgen::CorpusEntry { name: "mycielskian9", matrix: matgen::mycielskian(9) },
+            matgen::CorpusEntry { name: "rmat9u_4", matrix: matgen::undirected_graph(21, 9, 4) },
+            matgen::CorpusEntry { name: "rmat10u_8", matrix: matgen::undirected_graph(22, 10, 8) },
+        ]
+    } else {
+        vec![
+            matgen::CorpusEntry { name: "mycielskian7", matrix: matgen::mycielskian(7) },
+            matgen::CorpusEntry { name: "mycielskian8", matrix: matgen::mycielskian(8) },
+            matgen::CorpusEntry { name: "rmat7u_4", matrix: matgen::undirected_graph(21, 7, 4) },
+            matgen::CorpusEntry { name: "rmat8u_8", matrix: matgen::undirected_graph(22, 8, 8) },
+        ]
+    }
+}
+
+fn graph_columns() -> Vec<Column> {
+    vec![
+        Column::new("graph", "graph", 14, ColFmt::Str),
+        Column::new("nodes", "nodes", 6, ColFmt::Int),
+        Column::new("edges", "edges", 8, ColFmt::Int),
+        Column::new("kernel", "kernel", 10, ColFmt::Str),
+        Column::new("base_cycles", "base cyc", 12, ColFmt::Int),
+        Column::new("sssr_cycles", "sssr cyc", 12, ColFmt::Int),
+        Column::new("speedup", "speedup", 8, ColFmt::FixedX(2)),
+        Column::new("payload", "payload", 10, ColFmt::Int),
+    ]
+}
+
+/// `graph`: SSSR-vs-BASE cycle counts of the CSF tensor and graph
+/// kernels — triangle counting (`tricnt`, streamed intersections) and
+/// adjacency squaring (`smxsm_csf`, streamed unions) — over the graph
+/// corpus (`repro sweep graph` → `BENCH_graph.json`).
+pub fn spec_graph() -> ExperimentSpec {
+    let corpus = graph_corpus();
+    let points = corpus
+        .iter()
+        .enumerate()
+        .map(|(i, e)| Point::at(i).label(e.name))
+        .collect();
+    ExperimentSpec {
+        name: "graph",
+        title: "graph: CSF SpGEMM + triangle counting, SSSR vs BASE".into(),
+        columns: graph_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let e = &corpus[p.idx.unwrap()];
+            let g = &e.matrix;
+            // the BASE SpGEMM merges grow with flops, not nnz: give the
+            // full-mode graphs headroom over the default hang guard
+            let cfg = ExecCfg::single_cc().with_limit(2_000_000_000);
+            let rec = |kernel: &str, base: &Report, sssr: &Report, extra: Option<(&str, f64)>| {
+                let mut r = Record::new("graph")
+                    .str("graph", e.name)
+                    .int("nodes", g.nrows as i64)
+                    .int("edges", (g.nnz() / 2) as i64)
+                    .str("kernel", kernel)
+                    .int("base_cycles", base.cycles as i64)
+                    .int("sssr_cycles", sssr.cycles as i64)
+                    .num("speedup", base.cycles as f64 / sssr.cycles as f64)
+                    .int("payload", sssr.payload as i64);
+                if let Some((k, v)) = extra {
+                    r = r.num(k, v);
+                }
+                r
+            };
+            // triangle counting on the adjacency pattern
+            let tri_ops = [Operand::Csr(g)];
+            let base = must_execute("tricnt", Variant::Base, IdxWidth::U16, &tri_ops, &cfg);
+            let sssr = must_execute("tricnt", Variant::Sssr, IdxWidth::U16, &tri_ops, &cfg);
+            let triangles = sssr.output.as_scalar().unwrap();
+            let mut out = vec![rec(
+                "tricnt",
+                &base.report,
+                &sssr.report,
+                Some(("triangles", triangles)),
+            )];
+            // CSF SpGEMM: square the adjacency (paths of length two)
+            let t = crate::formats::Csf::from_csr(g);
+            let csf_ops = [Operand::Csf(&t), Operand::Csf(&t)];
+            let base = must_execute("smxsm_csf", Variant::Base, IdxWidth::U16, &csf_ops, &cfg);
+            let sssr = must_execute("smxsm_csf", Variant::Sssr, IdxWidth::U16, &csf_ops, &cfg);
+            out.push(rec("smxsm_csf", &base.report, &sssr.report, None));
+            out
+        }),
+    }
+}
+
+// ======================================================================
 // Fig. 7 — area and timing (analytical model)
 // ======================================================================
 
@@ -1001,11 +1099,11 @@ pub fn spec_table3() -> ExperimentSpec {
 // ======================================================================
 
 /// Every figure sweep as a (name, constructor) pair, in `repro all`
-/// order (the paper figures plus the system-layer `scale` family).
-/// Construction generates the sweep's shared workloads (corpus,
-/// operands) eagerly, so build one spec at a time and drop it before
-/// the next — materializing all sixteen at once holds every workload
-/// in memory simultaneously. Tables 2/3 are available via
+/// order (the paper figures plus the system-layer `scale` family and
+/// the CSF/graph `graph` sweep). Construction generates the sweep's
+/// shared workloads (corpus, operands) eagerly, so build one spec at a
+/// time and drop it before the next — materializing all seventeen at
+/// once holds every workload in memory simultaneously. Tables 2/3 are available via
 /// [`spec_table2`]/[`spec_table3`] (Table 2's bottom row derives from
 /// Fig. 5a records, see [`table2_ours`]).
 pub const SPEC_BUILDERS: &[(&str, fn() -> ExperimentSpec)] = &[
@@ -1025,6 +1123,7 @@ pub const SPEC_BUILDERS: &[(&str, fn() -> ExperimentSpec)] = &[
     ("fig8b", spec_fig8b),
     ("scale", spec_scale),
     ("scale_sv", spec_scale_sv),
+    ("graph", spec_graph),
 ];
 
 /// Look up one figure spec constructor by name (`"fig4a"`, `"fig7b"`, …).
@@ -1096,7 +1195,7 @@ mod tests {
 
     #[test]
     fn spec_registry_is_consistent() {
-        assert_eq!(SPEC_BUILDERS.len(), 16);
+        assert_eq!(SPEC_BUILDERS.len(), 17);
         for (n, build) in SPEC_BUILDERS {
             let s = build();
             assert_eq!(s.name, *n);

@@ -88,7 +88,7 @@
 
 use std::fmt;
 
-use crate::formats::{Csr, SpVec};
+use crate::formats::{Csf, Csr, SpVec};
 use crate::sim::tcdm::Tcdm;
 use crate::sim::{Cluster, ClusterCfg, Program, RunStats, SystemCfg};
 
@@ -116,6 +116,8 @@ pub const BIG_TCDM: usize = 16 << 20;
 pub enum Operand<'a> {
     /// A CSR sparse matrix.
     Csr(&'a Csr),
+    /// A two-level CSF sparse tensor.
+    Csf(&'a Csf),
     /// A sparse vector fiber.
     SpVec(&'a SpVec),
     /// A dense `f64` array.
@@ -131,6 +133,7 @@ impl Operand<'_> {
     pub fn kind(&self) -> &'static str {
         match self {
             Operand::Csr(_) => "Csr",
+            Operand::Csf(_) => "Csf",
             Operand::SpVec(_) => "SpVec",
             Operand::Dense(_) => "Dense",
             Operand::Idx(_) => "Idx",
@@ -144,6 +147,7 @@ impl Operand<'_> {
 #[derive(Clone, Debug)]
 pub enum OwnedOperand {
     Csr(Csr),
+    Csf(Csf),
     SpVec(SpVec),
     Dense(Vec<f64>),
     Idx(Vec<u32>),
@@ -155,6 +159,7 @@ impl OwnedOperand {
     pub fn as_operand(&self) -> Operand<'_> {
         match self {
             OwnedOperand::Csr(m) => Operand::Csr(m),
+            OwnedOperand::Csf(t) => Operand::Csf(t),
             OwnedOperand::SpVec(v) => Operand::SpVec(v),
             OwnedOperand::Dense(d) => Operand::Dense(d),
             OwnedOperand::Idx(i) => Operand::Idx(i),
@@ -215,6 +220,14 @@ pub fn csr_at<'a>(ops: &[Operand<'a>], i: usize) -> &'a Csr {
 }
 
 /// See [`csr_at`].
+pub fn csf_at<'a>(ops: &[Operand<'a>], i: usize) -> &'a Csf {
+    match ops.get(i) {
+        Some(&Operand::Csf(t)) => t,
+        other => panic!("operand {i}: expected Csf, got {other:?}"),
+    }
+}
+
+/// See [`csr_at`].
 pub fn spvec_at<'a>(ops: &[Operand<'a>], i: usize) -> &'a SpVec {
     match ops.get(i) {
         Some(&Operand::SpVec(v)) => v,
@@ -255,6 +268,8 @@ pub enum Value {
     Dense(Vec<f64>),
     /// A sparse vector fiber (set-algebra kernels).
     Sparse(SpVec),
+    /// A two-level CSF sparse tensor (CSF SpGEMM).
+    Csf(Csf),
 }
 
 impl Value {
@@ -279,12 +294,26 @@ impl Value {
         }
     }
 
+    pub fn as_csf(&self) -> Option<&Csf> {
+        match self {
+            Value::Csf(t) => Some(t),
+            _ => None,
+        }
+    }
+
     /// Short human summary for the CLI (`repro kernel`).
     pub fn summarize(&self) -> String {
         match self {
             Value::Scalar(x) => format!("scalar {x:.6}"),
             Value::Dense(d) => format!("dense[{}]", d.len()),
             Value::Sparse(v) => format!("sparse fiber ({} nnz of dim {})", v.nnz(), v.dim),
+            Value::Csf(t) => format!(
+                "CSF {}x{} ({} fibers, {} nnz)",
+                t.nrows,
+                t.ncols,
+                t.nfibers(),
+                t.nnz()
+            ),
         }
     }
 }
@@ -642,6 +671,21 @@ pub enum OutSpec {
         cap: usize,
         dim: usize,
     },
+    /// A produced two-level CSF tensor: level-0 row ids (width `iw`,
+    /// capacity `fib_cap`) and pointers (32-bit, `fib_cap + 1` slots),
+    /// level-1 column indices (width `iw`) and values of capacity `cap`;
+    /// the realized fiber count lives in the 8-byte `fib_cell`.
+    Csf {
+        row_idcs: u64,
+        row_ptrs: u64,
+        col_idcs: u64,
+        vals: u64,
+        fib_cell: u64,
+        fib_cap: usize,
+        cap: usize,
+        nrows: usize,
+        ncols: usize,
+    },
 }
 
 fn read_out(
@@ -665,6 +709,43 @@ fn read_out(
                 dim,
                 idcs: read_idx(t, idcs, len, iw),
                 vals: read_f64s(t, vals, len),
+            })
+        }
+        OutSpec::Csf {
+            row_idcs,
+            row_ptrs,
+            col_idcs,
+            vals,
+            fib_cell,
+            fib_cap,
+            cap,
+            nrows,
+            ncols,
+        } => {
+            let nfib = t.peek(fib_cell, 8) as usize;
+            if nfib > fib_cap {
+                return Err(KernelError::Mismatch {
+                    kernel,
+                    msg: format!("output fiber count {nfib} exceeds capacity {fib_cap}"),
+                });
+            }
+            let ptrs: Vec<u32> = (0..=nfib)
+                .map(|i| t.peek(row_ptrs + 4 * i as u64, 4) as u32)
+                .collect();
+            let nnz = *ptrs.last().unwrap() as usize;
+            if nnz > cap {
+                return Err(KernelError::Mismatch {
+                    kernel,
+                    msg: format!("output nnz {nnz} exceeds capacity {cap}"),
+                });
+            }
+            Value::Csf(Csf {
+                nrows,
+                ncols,
+                row_idcs: read_idx(t, row_idcs, nfib, iw),
+                row_ptrs: ptrs,
+                col_idcs: read_idx(t, col_idcs, nnz, iw),
+                vals: read_f64s(t, vals, nnz),
             })
         }
     })
@@ -712,6 +793,33 @@ pub fn check_output(kernel: &'static str, got: &Value, want: &Value) -> Result<(
                 }
             }
         }
+        (Value::Csf(g), Value::Csf(w)) => {
+            if (g.nrows, g.ncols) != (w.nrows, w.ncols) {
+                return err(format!(
+                    "shape {}x{} vs {}x{}",
+                    g.nrows, g.ncols, w.nrows, w.ncols
+                ));
+            }
+            if g.row_idcs != w.row_idcs || g.row_ptrs != w.row_ptrs {
+                return err(format!(
+                    "fiber directory differs ({} vs {} fibers)",
+                    g.nfibers(),
+                    w.nfibers()
+                ));
+            }
+            if g.col_idcs != w.col_idcs {
+                return err(format!(
+                    "leaf index pattern differs ({} vs {} nnz)",
+                    g.nnz(),
+                    w.nnz()
+                ));
+            }
+            for (i, (x, y)) in g.vals.iter().zip(&w.vals).enumerate() {
+                if !close(*x, *y) {
+                    return err(format!("vals[{i}]: got {x}, want {y}"));
+                }
+            }
+        }
         _ => return err(format!("output shape {:?} vs oracle {:?}", shape(got), shape(want))),
     }
     Ok(())
@@ -722,6 +830,7 @@ fn shape(v: &Value) -> &'static str {
         Value::Scalar(_) => "scalar",
         Value::Dense(_) => "dense",
         Value::Sparse(_) => "sparse",
+        Value::Csf(_) => "csf",
     }
 }
 
@@ -909,8 +1018,9 @@ pub fn execute(
 
 /// Every implemented kernel, in the paper's presentation order
 /// (sparse-dense §3.2.1, sparse-sparse §3.2.2, further applications
-/// §3.3). `repro kernel --list` renders this table.
-pub static REGISTRY: [&dyn Kernel; 12] = [
+/// §3.3 — including the CSF tensor and graph kernels). `repro kernel
+/// --list` renders this table.
+pub static REGISTRY: [&dyn Kernel; 14] = [
     &super::driver::Svxdv,
     &super::driver::Svpdv,
     &super::driver::Svodv,
@@ -921,8 +1031,10 @@ pub static REGISTRY: [&dyn Kernel; 12] = [
     &super::driver::Svosv,
     &super::driver::Smxsv,
     &super::driver::Smxsm,
+    &super::csf::SmxsmCsf,
     &super::apps::Stencil1dKernel,
     &super::apps::CodebookDecode,
+    &super::apps::Tricnt,
 ];
 
 /// Resolve one registered kernel by name.
@@ -960,7 +1072,7 @@ mod tests {
         let names: Vec<&str> = REGISTRY.iter().map(|k| k.name()).collect();
         let expect = [
             "svxdv", "svpdv", "svodv", "smxdv", "smxdm", "svxsv", "svpsv", "svosv", "smxsv",
-            "smxsm", "stencil1d", "codebook",
+            "smxsm", "smxsm_csf", "stencil1d", "codebook", "tricnt",
         ];
         assert_eq!(names, expect);
         for n in names {

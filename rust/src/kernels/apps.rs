@@ -3,22 +3,23 @@
 //! intersection). These exercise the same hardware paths as the LA
 //! kernels on the workloads the paper's §3.3 sketches.
 //!
-//! The stencil and codebook kernels implement the unified
-//! [`super::api::Kernel`] trait ([`Stencil1dKernel`],
-//! [`CodebookDecode`]) and are registered in [`super::api::REGISTRY`];
-//! `run_stencil1d` / `run_codebook_decode` remain as thin wrappers.
-//! Unlike the LA kernels they keep the Table-1 128 KiB TCDM
-//! ([`super::api::Kernel::tcdm_default`] = 0).
+//! The stencil, codebook, and triangle-counting kernels implement the
+//! unified [`super::api::Kernel`] trait ([`Stencil1dKernel`],
+//! [`CodebookDecode`], [`Tricnt`]) and are registered in
+//! [`super::api::REGISTRY`]; `run_stencil1d` / `run_codebook_decode` /
+//! `run_tricnt` remain as thin wrappers. Unlike the LA kernels they
+//! keep the Table-1 128 KiB TCDM ([`super::api::Kernel::tcdm_default`]
+//! = 0).
 
-use crate::formats::{Csr, SpVec};
+use crate::formats::{ops, Csr, SpVec};
 use crate::matgen;
 use crate::sim::asm::Asm;
 use crate::sim::isa::{ssr_mode, SsrField as F, *};
 use crate::sim::Program;
 
 use super::api::{
-    self, check_width, dense_at, expect_kinds, idx_at, spvec_at, write_f64s, write_idx, Cc,
-    ExecCfg, Kernel, KernelError, Operand, OutSpec, OwnedOperand, Value,
+    self, check_width, csr_at, dense_at, expect_kinds, idx_at, spvec_at, write_f64s, write_idx,
+    write_ptrs, Cc, ExecCfg, Kernel, KernelError, Operand, OutSpec, OwnedOperand, Value,
 };
 use super::sparse_dense::cfg_imm;
 use super::{IdxWidth, Report, Variant};
@@ -394,6 +395,240 @@ pub fn run_codebook_decode(
     }
 }
 
+/// SSSR triangle counting (§3.3 "Graph pattern matching"): for every
+/// edge (u,v) with u < v, stream the intersection of the neighbor
+/// fibers N(u) and N(v) — one intersection job per edge, one `fmadd.d`
+/// per common neighbor under `frep.s`. With unit adjacency values the
+/// accumulator totals the match count, which is exactly three times the
+/// triangle count (each triangle is seen once per edge), so the final
+/// step scales by the preset 1/3 in `fa0`.
+///
+/// Registers: A0 = unit values, A1 = column indices, A4 = result cell,
+/// A5 = row pointers, A6 = n rows; fa0 = 1/3, fa1 = 1.0 (preset).
+pub fn tricnt_sssr(iw: IdxWidth) -> Program {
+    let ib = iw.bytes() as i64;
+    let lg = iw.log2();
+    let mut a = Asm::new();
+    a.ssr_enable();
+    cfg_imm(&mut a, 0, F::IdxSize, lg as i64);
+    cfg_imm(&mut a, 1, F::IdxSize, lg as i64);
+    a.li(S10, ssr_mode::INTERSECT);
+    a.fcvt_d_w_zero(FT3); // running match total
+    a.li(S6, 0); // u
+    a.mv(S5, A5); // row-pointer cursor
+    a.beq(A6, ZERO, "done");
+    a.label("urow");
+    a.lwu(T0, S5, 0);
+    a.lwu(T1, S5, 4);
+    a.sub(S0, T1, T0); // |N(u)|
+    a.slli(S1, T0, lg);
+    a.add(S1, A1, S1); // N(u) index base
+    a.slli(S2, T0, 3);
+    a.add(S2, A0, S2); // N(u) value base
+    a.mv(S3, S1); // neighbor scan cursor
+    a.mv(S4, S0); // neighbor countdown
+    a.beq(S4, ZERO, "unext");
+    // invariant unit-0 shadow for this u: the N(u) fiber
+    a.scfgw(0, F::DataBase, S2);
+    a.scfgw(0, F::IdxBase, S1);
+    a.scfgw(0, F::IdxLen, S0);
+    a.label("edge");
+    iw.load(&mut a, T2, S3, 0); // v
+    a.bgeu(S6, T2, "skip"); // only edges with v > u
+    a.slli(T4, T2, 2);
+    a.add(T4, A5, T4);
+    a.lwu(T5, T4, 0);
+    a.lwu(T6, T4, 4);
+    a.sub(T6, T6, T5); // |N(v)|
+    a.slli(T4, T5, lg);
+    a.add(T4, A1, T4); // N(v) index base
+    a.slli(T5, T5, 3);
+    a.add(T5, A0, T5); // N(v) value base
+    a.scfgw(1, F::DataBase, T5);
+    a.scfgw(1, F::IdxBase, T4);
+    a.scfgw(1, F::IdxLen, T6);
+    a.scfgw(0, F::Launch, S10);
+    a.scfgw(1, F::Launch, S10);
+    a.frep_s(1, 0, 0);
+    a.fmadd_d(FT3, FT0, FT1, FT3); // unit values: +1 per match
+    a.label("skip");
+    a.addi(S3, S3, ib);
+    a.addi(S4, S4, -1);
+    a.bne(S4, ZERO, "edge");
+    a.label("unext");
+    a.addi(S5, S5, 4);
+    a.addi(S6, S6, 1);
+    a.bne(S6, A6, "urow");
+    a.label("done");
+    a.fpu_fence();
+    a.fmul_d(FT3, FT3, FA0); // matches / 3 = triangles
+    a.fsd(FT3, A4, 0);
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+/// BASE triangle counting: the same edge sweep with an explicit
+/// two-pointer intersection per edge (pattern only — no value loads,
+/// `fadd` of the preset 1.0 per match).
+pub fn tricnt_base(iw: IdxWidth) -> Program {
+    let ib = iw.bytes() as i64;
+    let lg = iw.log2();
+    let mut a = Asm::new();
+    a.fcvt_d_w_zero(FT3);
+    a.li(S6, 0);
+    a.mv(S5, A5);
+    a.beq(A6, ZERO, "done");
+    a.label("urow");
+    a.lwu(T0, S5, 0);
+    a.lwu(T1, S5, 4);
+    a.sub(S0, T1, T0);
+    a.slli(S1, T0, lg);
+    a.add(S1, A1, S1); // N(u) index base
+    a.slli(S2, S0, lg);
+    a.add(S2, S1, S2); // N(u) index end
+    a.mv(S3, S1);
+    a.mv(S4, S0);
+    a.beq(S4, ZERO, "unext");
+    a.label("edge");
+    iw.load(&mut a, T2, S3, 0); // v
+    a.bgeu(S6, T2, "skip");
+    a.slli(T4, T2, 2);
+    a.add(T4, A5, T4);
+    a.lwu(T0, T4, 0);
+    a.lwu(T1, T4, 4);
+    a.slli(T3, T0, lg);
+    a.add(T3, A1, T3); // N(v) cursor
+    a.slli(T5, T1, lg);
+    a.add(T5, A1, T5); // N(v) end
+    a.mv(T0, S1); // N(u) cursor
+    a.label("isect");
+    a.bgeu(T0, S2, "skip");
+    a.bgeu(T3, T5, "skip");
+    iw.load(&mut a, T1, T0, 0);
+    iw.load(&mut a, T4, T3, 0);
+    a.beq(T1, T4, "match");
+    a.bltu(T1, T4, "skipu");
+    a.addi(T3, T3, ib);
+    a.j("isect");
+    a.label("skipu");
+    a.addi(T0, T0, ib);
+    a.j("isect");
+    a.label("match");
+    a.fadd_d(FT3, FT3, FA1);
+    a.addi(T0, T0, ib);
+    a.addi(T3, T3, ib);
+    a.j("isect");
+    a.label("skip");
+    a.addi(S3, S3, ib);
+    a.addi(S4, S4, -1);
+    a.bne(S4, ZERO, "edge");
+    a.label("unext");
+    a.addi(S5, S5, 4);
+    a.addi(S6, S6, 1);
+    a.bne(S6, A6, "urow");
+    a.label("done");
+    a.fmul_d(FT3, FT3, FA0);
+    a.fsd(FT3, A4, 0);
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}
+
+/// Triangle counting as a registry [`Kernel`]. A *pattern* kernel: the
+/// operand is an undirected graph's adjacency (symmetric, zero
+/// diagonal); its stored values are ignored and placed as 1.0 so the
+/// intersection `fmadd` chain counts matches.
+pub struct Tricnt;
+
+impl Kernel for Tricnt {
+    fn name(&self) -> &'static str {
+        "tricnt"
+    }
+    fn describe(&self) -> &'static str {
+        "triangle counting by neighbor-fiber intersection (pattern kernel)"
+    }
+    fn signature(&self) -> &'static str {
+        "Csr(g)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &[Variant::Base, Variant::Sssr]
+    }
+    fn tcdm_default(&self) -> usize {
+        0 // Table-1 128 KiB, as the §3.3 demos use
+    }
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
+        expect_kinds(self.name(), self.signature(), ops, &["Csr"])?;
+        let g = csr_at(ops, 0);
+        let bad = |msg: String| KernelError::BadOperands { kernel: "tricnt", msg };
+        if g.nrows != g.ncols {
+            return Err(bad(format!("adjacency must be square, got {}x{}", g.nrows, g.ncols)));
+        }
+        for r in 0..g.nrows {
+            if g.row(r).0.contains(&(r as u32)) {
+                return Err(bad(format!("self-loop at vertex {r} (need zero diagonal)")));
+            }
+        }
+        let t = g.transpose();
+        if t.ptrs != g.ptrs || t.idcs != g.idcs {
+            return Err(bad("adjacency pattern is not symmetric".into()));
+        }
+        check_width(self.name(), iw, "adjacency", &g.idcs)
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        ops::triangle_matches(csr_at(ops, 0))
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        Value::Scalar(ops::triangle_count(csr_at(ops, 0)) as f64)
+    }
+    fn program(&self, variant: Variant, iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => tricnt_base(iw),
+            Variant::Sssr => tricnt_sssr(iw),
+            Variant::Ssr => unreachable!("variant capability checked by execute"),
+        }
+    }
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let g = csr_at(ops, 0);
+        let vals = cc.arena.alloc_f64(g.nnz() as u64);
+        let idcs = cc.arena.alloc_idx(g.nnz() as u64, iw);
+        let ptrs = cc.arena.alloc(4 * (g.nrows as u64 + 1));
+        let ones = vec![1.0; g.nnz()];
+        write_f64s(&mut cc.cl.tcdm, vals, &ones);
+        write_idx(&mut cc.cl.tcdm, idcs, &g.idcs, iw);
+        write_ptrs(&mut cc.cl.tcdm, ptrs, &g.ptrs);
+        let out = cc.arena.alloc_f64(1);
+        cc.args(&[
+            (A0, vals as i64),
+            (A1, idcs as i64),
+            (A4, out as i64),
+            (A5, ptrs as i64),
+            (A6, g.nrows as i64),
+        ]);
+        cc.cl.ccs[0].fpu.regs[FA0 as usize] = 1.0 / 3.0;
+        cc.cl.ccs[0].fpu.regs[FA1 as usize] = 1.0;
+        OutSpec::Scalar { addr: out }
+    }
+    fn sample(&self, seed: u64, iw: IdxWidth) -> Vec<OwnedOperand> {
+        // vertex count bounded by the index range (U8: 128 < 256)
+        let scale = if iw == IdxWidth::U8 { 7 } else { 8 };
+        vec![OwnedOperand::Csr(matgen::undirected_graph(seed, scale, 4))]
+    }
+}
+
+/// Count the triangles of an undirected graph; returns (count, report).
+/// Keeps the Table-1 128 KiB TCDM like the other §3.3 demos; graphs
+/// beyond it go through [`api::execute`] with an explicit `ExecCfg`.
+pub fn run_tricnt(variant: Variant, iw: IdxWidth, g: &Csr) -> (u64, Report) {
+    let ops = [Operand::Csr(g)];
+    let run = api::must_execute("tricnt", variant, iw, &ops, &ExecCfg::single_sized(0));
+    match run.output {
+        Value::Scalar(x) => (x.round() as u64, run.report),
+        other => unreachable!("expected scalar output, got {}", other.summarize()),
+    }
+}
+
 /// Triangle counting by adjacency-fiber intersection (§3.3 "Graph
 /// pattern matching"): for every edge (u,v) with u < v, count
 /// |N(u) ∩ N(v)| restricted to w > v; the total is the triangle count.
@@ -462,6 +697,92 @@ mod tests {
         // SSSR decode streams ~1 elem/cycle at the 8/9 limit vs 8 slots
         let speedup = base.cycles as f64 / sssr.cycles as f64;
         assert!(speedup > 4.0, "codebook speedup {speedup}");
+    }
+
+    /// Brute-force O(n³) triangle count over the dense adjacency — the
+    /// most naive possible oracle, deliberately independent of every
+    /// sparse intersection routine in the crate.
+    fn brute_force_triangles(g: &Csr) -> u64 {
+        let d = g.to_dense();
+        let n = g.nrows;
+        let mut count = 0u64;
+        for a in 0..n {
+            for b in (a + 1)..n {
+                if d[a][b] == 0.0 {
+                    continue;
+                }
+                for c in (b + 1)..n {
+                    if d[a][c] != 0.0 && d[b][c] != 0.0 {
+                        count += 1;
+                    }
+                }
+            }
+        }
+        count
+    }
+
+    #[test]
+    fn tricnt_is_zero_on_triangle_free_mycielskians() {
+        // Mycielski graphs are triangle-free by construction (proven
+        // against the dense definition in matgen's tests); the kernel
+        // must report exactly zero on every variant.
+        for k in [6u32, 7, 8] {
+            let g = matgen::mycielskian(k);
+            for v in [Variant::Base, Variant::Sssr] {
+                let (t, rep) = run_tricnt(v, IdxWidth::U16, &g);
+                assert_eq!(t, 0, "mycielskian{k} [{v:?}]");
+                assert!(rep.cycles > 0);
+                assert_eq!(rep.payload, 0, "no intersection matches exist");
+            }
+        }
+    }
+
+    #[test]
+    fn tricnt_matches_brute_force_on_rmat_graphs() {
+        for (seed, scale, ef) in [(11u64, 6u32, 4usize), (12, 7, 4), (13, 7, 8)] {
+            let g = matgen::undirected_graph(seed, scale, ef);
+            let want = brute_force_triangles(&g);
+            assert_eq!(want, triangle_count_ref(&g), "reference disagrees");
+            for v in [Variant::Base, Variant::Sssr] {
+                let (t, _) = run_tricnt(v, IdxWidth::U16, &g);
+                assert_eq!(t, want, "seed {seed} [{v:?}]");
+            }
+            // power-law graphs of this size are never triangle-free:
+            // the zero result on Mycielskians is not a degenerate path
+            assert!(want > 0, "seed {seed} produced a triangle-free rmat");
+        }
+    }
+
+    #[test]
+    fn tricnt_sssr_beats_base() {
+        let g = matgen::undirected_graph(14, 8, 8);
+        let (tb, base) = run_tricnt(Variant::Base, IdxWidth::U16, &g);
+        let (ts, sssr) = run_tricnt(Variant::Sssr, IdxWidth::U16, &g);
+        assert_eq!(tb, ts);
+        let speedup = base.cycles as f64 / sssr.cycles as f64;
+        assert!(speedup > 1.5, "tricnt speedup only {speedup}");
+    }
+
+    #[test]
+    fn tricnt_rejects_malformed_adjacency() {
+        use crate::kernels::api::{execute, kernel};
+        let k = kernel("tricnt").unwrap();
+        let run = |g: &Csr| {
+            let ops = [Operand::Csr(g)];
+            execute(k, Variant::Sssr, IdxWidth::U16, &ops, &ExecCfg::single_cc())
+        };
+        // non-square
+        let g = matgen::random_csr(1, 4, 5, 6);
+        assert!(matches!(run(&g), Err(KernelError::BadOperands { .. })));
+        // self-loop
+        let g = Csr::from_dense(&[vec![1.0, 1.0], vec![1.0, 0.0]]);
+        assert!(matches!(run(&g), Err(KernelError::BadOperands { .. })));
+        // asymmetric pattern
+        let g = Csr::from_dense(&[vec![0.0, 1.0], vec![0.0, 0.0]]);
+        assert!(matches!(run(&g), Err(KernelError::BadOperands { .. })));
+        // a valid adjacency passes
+        let g = Csr::from_dense(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        assert!(run(&g).is_ok());
     }
 
     #[test]

@@ -1,0 +1,501 @@
+//! CSF tensor kernels: row-wise sparse-sparse matrix multiply over the
+//! two-level [`Csf`] format, accumulating result rows through the
+//! union-mode SSSR streams (the Gustavson dataflow SparseZipper-style
+//! matrix engines accelerate, here expressed with nothing but the
+//! paper's §2.3 union/egress streams).
+//!
+//! Register convention (preset by [`SmxsmCsf::place`]):
+//!
+//! | reg   | smxsm_csf                                              |
+//! |-------|--------------------------------------------------------|
+//! | A0    | A leaf values cursor                                   |
+//! | A1    | A leaf (column) indices cursor                         |
+//! | A2    | B leaf values base                                     |
+//! | A3    | B leaf indices base                                    |
+//! | A4    | out leaf values cursor                                 |
+//! | A5    | A level-0 pointer cursor                               |
+//! | A6    | A fiber countdown                                      |
+//! | A7    | B row directory base (32-bit, `nrows(B)+1` entries)    |
+//! | S0/S1 | current accumulator fiber (values / indices)           |
+//! | S2/S3 | destination accumulator fiber (values / indices)       |
+//! | S4    | accumulator length                                     |
+//! | S5    | in-fiber nonzero countdown                             |
+//! | S6    | A level-0 row-id cursor                                |
+//! | S7    | output fiber count                                     |
+//! | S8    | out leaf indices cursor                                |
+//! | S9    | out level-0 pointer cursor                             |
+//! | S10   | UNION launch word (SSSR) / dst index cursor (BASE)     |
+//! | S11   | EGRESS launch word (SSSR) / dst value cursor (BASE)    |
+//! | RA    | out level-0 row-id cursor                              |
+//! | SP    | output fiber-count cell address                        |
+//! | FA0   | current `a_ik` scale factor                            |
+//!
+//! Each inner step computes `acc' = a_ik * B[k,:] + acc` as one streamed
+//! union: both ISSRs in union mode (zero-injecting the absent side), the
+//! loop body a single `fmadd.d` scaled by `a_ik`, the ESSR writing the
+//! joint fiber into the other ping-pong buffer. The finished row is
+//! appended to the output CSF (level-0 row id + pointer entry only when
+//! non-empty, preserving full compression).
+
+use crate::formats::{ops, Csf};
+use crate::matgen;
+use crate::sim::asm::Asm;
+use crate::sim::isa::{ssr_mode, SsrField as F, *};
+
+use super::api::{
+    self, check_width, csf_at, expect_kinds, write_f64s, write_idx, write_ptrs, Cc, ExecCfg,
+    Kernel, KernelError, Operand, OutSpec, OwnedOperand, Value,
+};
+use super::sparse_dense::cfg_imm;
+use super::{IdxWidth, Report, Variant};
+
+/// Emit the fiber-close sequence shared by both variants: append the
+/// accumulator (S0/S1, length S4) to the output CSF — row id, leaf copy,
+/// level-0 pointer entry — skipping entirely when the row came out
+/// empty. Falls through to the `"skipout"` label the caller defines.
+fn emit_fiber_flush(a: &mut Asm, iw: IdxWidth) {
+    let ib = iw.bytes() as i64;
+    a.beq(S4, ZERO, "skipout");
+    // level-0 entry: the output row id is A's fiber row id
+    iw.load(a, T0, S6, 0);
+    iw.store(a, T0, RA, 0);
+    a.addi(RA, RA, ib);
+    // leaf copy: accumulator fiber -> output arrays
+    a.mv(T0, S0);
+    a.mv(T1, S1);
+    a.mv(T2, S4);
+    a.label("copy");
+    a.fld(FT3, T0, 0);
+    a.fsd(FT3, A4, 0);
+    iw.load(a, T3, T1, 0);
+    iw.store(a, T3, S8, 0);
+    a.addi(T0, T0, 8);
+    a.addi(A4, A4, 8);
+    a.addi(T1, T1, ib);
+    a.addi(S8, S8, ib);
+    a.addi(T2, T2, -1);
+    a.bne(T2, ZERO, "copy");
+    // level-0 pointer: previous total + fiber length
+    a.lwu(T0, S9, -4);
+    a.add(T0, T0, S4);
+    a.sw(T0, S9, 0);
+    a.addi(S9, S9, 4);
+    a.addi(S7, S7, 1);
+}
+
+/// SSSR CSF row-wise SpGEMM: one union-stream job per (fiber, nonzero)
+/// of A, `fmadd.d` under `frep.s`, ESSR writeback into the ping-pong
+/// accumulator.
+pub fn smxsm_csf_sssr(iw: IdxWidth) -> Program {
+    let ib = iw.bytes() as i64;
+    let lg = iw.log2();
+    let mut a = Asm::new();
+    a.ssr_enable();
+    cfg_imm(&mut a, 0, F::IdxSize, lg as i64);
+    cfg_imm(&mut a, 1, F::IdxSize, lg as i64);
+    cfg_imm(&mut a, 2, F::IdxSize, lg as i64);
+    a.li(S10, ssr_mode::UNION);
+    a.li(S11, ssr_mode::EGRESS);
+    a.sw(ZERO, S9, 0); // out row_ptrs[0] = 0
+    a.addi(S9, S9, 4);
+    a.li(S7, 0);
+    a.beq(A6, ZERO, "end");
+    a.label("fiber");
+    a.lwu(T0, A5, 0);
+    a.lwu(T1, A5, 4);
+    a.sub(S5, T1, T0); // fiber nonzero count (>= 1 in valid CSF)
+    a.li(S4, 0); // accumulator starts empty
+    a.beq(S5, ZERO, "skipout");
+    a.label("k");
+    iw.load(&mut a, T0, A1, 0); // column k
+    a.fld(FA0, A0, 0); // a_ik
+    // B row k through the expanded level-0 directory
+    a.slli(T3, T0, 2);
+    a.add(T3, A7, T3);
+    a.lwu(T1, T3, 0);
+    a.lwu(T2, T3, 4);
+    a.sub(T2, T2, T1); // B row length
+    a.slli(T4, T1, lg);
+    a.add(T4, A3, T4); // B row index base
+    a.slli(T5, T1, 3);
+    a.add(T5, A2, T5); // B row value base
+    // ESSR first so the comparator sees it attached from the start
+    a.scfgw(2, F::DataBase, S2);
+    a.scfgw(2, F::IdxBase, S3);
+    a.scfgw(2, F::Launch, S11);
+    a.scfgw(1, F::DataBase, T5);
+    a.scfgw(1, F::IdxBase, T4);
+    a.scfgw(1, F::IdxLen, T2);
+    a.scfgw(0, F::DataBase, S0);
+    a.scfgw(0, F::IdxBase, S1);
+    a.scfgw(0, F::IdxLen, S4);
+    a.scfgw(0, F::Launch, S10);
+    a.scfgw(1, F::Launch, S10);
+    a.frep_s(1, 0, 0);
+    a.fmadd_d(FT2, FT1, FA0, FT0); // acc' = a_ik * b + acc (zero-injected)
+    a.fpu_fence(); // drain the egress writes before reading the length
+    a.scfgr(S4, 2, F::StrCtlLen);
+    // ping-pong: the just-written buffer becomes the accumulator
+    a.mv(T6, S0);
+    a.mv(S0, S2);
+    a.mv(S2, T6);
+    a.mv(T6, S1);
+    a.mv(S1, S3);
+    a.mv(S3, T6);
+    a.addi(A0, A0, 8);
+    a.addi(A1, A1, ib);
+    a.addi(S5, S5, -1);
+    a.bne(S5, ZERO, "k");
+    emit_fiber_flush(&mut a, iw);
+    a.label("skipout");
+    a.addi(A5, A5, 4);
+    a.addi(S6, S6, ib);
+    a.addi(A6, A6, -1);
+    a.bne(A6, ZERO, "fiber");
+    a.label("end");
+    a.sd(S7, SP, 0);
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+/// BASE CSF row-wise SpGEMM: an explicit scaled three-way merge per
+/// (fiber, nonzero) of A into the ping-pong accumulator.
+pub fn smxsm_csf_base(iw: IdxWidth) -> Program {
+    let ib = iw.bytes() as i64;
+    let lg = iw.log2();
+    let mut a = Asm::new();
+    a.sw(ZERO, S9, 0);
+    a.addi(S9, S9, 4);
+    a.li(S7, 0);
+    a.beq(A6, ZERO, "end");
+    a.label("fiber");
+    a.lwu(T0, A5, 0);
+    a.lwu(T1, A5, 4);
+    a.sub(S5, T1, T0);
+    a.li(S4, 0);
+    a.beq(S5, ZERO, "skipout");
+    a.label("k");
+    iw.load(&mut a, T6, A1, 0); // column k
+    a.fld(FA0, A0, 0); // a_ik
+    a.slli(T3, T6, 2);
+    a.add(T3, A7, T3);
+    a.lwu(T0, T3, 0); // B row start position
+    a.lwu(T5, T3, 4); // B row end position
+    a.slli(T3, T0, lg);
+    a.add(T3, A3, T3); // b index cursor
+    a.slli(T4, T0, 3);
+    a.add(T4, A2, T4); // b value cursor
+    a.slli(T5, T5, lg);
+    a.add(T5, A3, T5); // b index end
+    a.mv(T0, S1); // acc index cursor
+    a.mv(T1, S0); // acc value cursor
+    a.slli(T2, S4, lg);
+    a.add(T2, S1, T2); // acc index end
+    a.mv(S10, S3); // dst index cursor
+    a.mv(S11, S2); // dst value cursor
+    a.label("merge");
+    a.bgeu(T0, T2, "drain_b");
+    a.bgeu(T3, T5, "drain_a");
+    iw.load(&mut a, T6, T0, 0);
+    iw.load(&mut a, GP, T3, 0);
+    a.beq(T6, GP, "both");
+    a.bltu(T6, GP, "acc_only");
+    // b only: dst = a_ik * b
+    a.fld(FT1, T4, 0);
+    a.fmul_d(FT2, FT1, FA0);
+    a.fsd(FT2, S11, 0);
+    iw.store(&mut a, GP, S10, 0);
+    a.addi(T3, T3, ib);
+    a.addi(T4, T4, 8);
+    a.addi(S10, S10, ib);
+    a.addi(S11, S11, 8);
+    a.j("merge");
+    a.label("acc_only"); // acc only: copy through
+    a.fld(FT0, T1, 0);
+    a.fsd(FT0, S11, 0);
+    iw.store(&mut a, T6, S10, 0);
+    a.addi(T0, T0, ib);
+    a.addi(T1, T1, 8);
+    a.addi(S10, S10, ib);
+    a.addi(S11, S11, 8);
+    a.j("merge");
+    a.label("both");
+    a.fld(FT0, T1, 0);
+    a.fld(FT1, T4, 0);
+    a.fmadd_d(FT2, FT1, FA0, FT0);
+    a.fsd(FT2, S11, 0);
+    iw.store(&mut a, T6, S10, 0);
+    a.addi(T0, T0, ib);
+    a.addi(T1, T1, 8);
+    a.addi(T3, T3, ib);
+    a.addi(T4, T4, 8);
+    a.addi(S10, S10, ib);
+    a.addi(S11, S11, 8);
+    a.j("merge");
+    a.label("drain_a"); // b exhausted: copy the accumulator tail
+    a.bgeu(T0, T2, "mdone");
+    iw.load(&mut a, T6, T0, 0);
+    a.fld(FT0, T1, 0);
+    a.fsd(FT0, S11, 0);
+    iw.store(&mut a, T6, S10, 0);
+    a.addi(T0, T0, ib);
+    a.addi(T1, T1, 8);
+    a.addi(S10, S10, ib);
+    a.addi(S11, S11, 8);
+    a.j("drain_a");
+    a.label("drain_b"); // acc exhausted: scale the B tail
+    a.bgeu(T3, T5, "mdone");
+    iw.load(&mut a, GP, T3, 0);
+    a.fld(FT1, T4, 0);
+    a.fmul_d(FT2, FT1, FA0);
+    a.fsd(FT2, S11, 0);
+    iw.store(&mut a, GP, S10, 0);
+    a.addi(T3, T3, ib);
+    a.addi(T4, T4, 8);
+    a.addi(S10, S10, ib);
+    a.addi(S11, S11, 8);
+    a.j("drain_b");
+    a.label("mdone");
+    a.sub(T0, S10, S3);
+    a.srli(S4, T0, lg); // new accumulator length
+    a.mv(T6, S0);
+    a.mv(S0, S2);
+    a.mv(S2, T6);
+    a.mv(T6, S1);
+    a.mv(S1, S3);
+    a.mv(S3, T6);
+    a.addi(A0, A0, 8);
+    a.addi(A1, A1, ib);
+    a.addi(S5, S5, -1);
+    a.bne(S5, ZERO, "k");
+    emit_fiber_flush(&mut a, iw);
+    a.label("skipout");
+    a.addi(A5, A5, 4);
+    a.addi(S6, S6, ib);
+    a.addi(A6, A6, -1);
+    a.bne(A6, ZERO, "fiber");
+    a.label("end");
+    a.sd(S7, SP, 0);
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}
+
+/// CSF × CSF row-wise SpGEMM as a registry [`Kernel`]: fully compressed
+/// CSF operands in, fully compressed CSF result out.
+pub struct SmxsmCsf;
+
+impl SmxsmCsf {
+    /// Per-fiber and total accumulator capacity bounds: each row of the
+    /// result holds at most `min(Σ_k nnz(B[k,:]), ncols(B))` entries.
+    fn caps(a: &Csf, b: &Csf) -> (usize, usize) {
+        let dir = b.row_directory();
+        let mut row_max = 1usize;
+        let mut total = 1usize;
+        for (_, idx, _) in a.fibers() {
+            let bound: usize = idx
+                .iter()
+                .map(|&k| (dir[k as usize + 1] - dir[k as usize]) as usize)
+                .sum();
+            let bound = bound.min(b.ncols);
+            row_max = row_max.max(bound);
+            total += bound;
+        }
+        (row_max, total)
+    }
+}
+
+impl Kernel for SmxsmCsf {
+    fn name(&self) -> &'static str {
+        "smxsm_csf"
+    }
+    fn describe(&self) -> &'static str {
+        "CSF row-wise SpGEMM sMxsM via streamed unions (CSF result)"
+    }
+    fn signature(&self) -> &'static str {
+        "Csf(a), Csf(b)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &[Variant::Base, Variant::Sssr]
+    }
+    fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
+        expect_kinds(self.name(), self.signature(), ops, &["Csf", "Csf"])?;
+        let (a, b) = (csf_at(ops, 0), csf_at(ops, 1));
+        if a.ncols != b.nrows {
+            return Err(KernelError::BadOperands {
+                kernel: self.name(),
+                msg: format!("inner dims differ: a.ncols {} vs b.nrows {}", a.ncols, b.nrows),
+            });
+        }
+        // A's level-0 row ids are streamed at index width (they become
+        // the output's level-0 ids); B's level 0 is expanded into the
+        // 32-bit row directory, so only its leaf indices must fit.
+        check_width(self.name(), iw, "tensor a leaf", &a.col_idcs)?;
+        check_width(self.name(), iw, "tensor a row id", &a.row_idcs)?;
+        check_width(self.name(), iw, "tensor b leaf", &b.col_idcs)
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        ops::smxsm_csf_flops(csf_at(ops, 0), csf_at(ops, 1))
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        Value::Csf(ops::smxsm_csf(csf_at(ops, 0), csf_at(ops, 1)))
+    }
+    fn program(&self, variant: Variant, iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => smxsm_csf_base(iw),
+            Variant::Sssr => smxsm_csf_sssr(iw),
+            Variant::Ssr => unreachable!("variant capability checked by execute"),
+        }
+    }
+    fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (a, b) = (csf_at(ops, 0), csf_at(ops, 1));
+        let (row_cap, cap) = SmxsmCsf::caps(a, b);
+        // A: true two-level CSF
+        let a_vals = cc.arena.alloc_f64(a.nnz() as u64);
+        let a_cidcs = cc.arena.alloc_idx(a.nnz() as u64, iw);
+        let a_rptrs = cc.arena.alloc(4 * (a.nfibers() as u64 + 1));
+        let a_ridcs = cc.arena.alloc_idx(a.nfibers() as u64, iw);
+        write_f64s(&mut cc.cl.tcdm, a_vals, &a.vals);
+        write_idx(&mut cc.cl.tcdm, a_cidcs, &a.col_idcs, iw);
+        write_ptrs(&mut cc.cl.tcdm, a_rptrs, &a.row_ptrs);
+        write_idx(&mut cc.cl.tcdm, a_ridcs, &a.row_idcs, iw);
+        // B: leaves plus the expanded level-0 directory (row-indexed)
+        let b_vals = cc.arena.alloc_f64(b.nnz() as u64);
+        let b_cidcs = cc.arena.alloc_idx(b.nnz() as u64, iw);
+        let b_dir = cc.arena.alloc(4 * (b.nrows as u64 + 1));
+        write_f64s(&mut cc.cl.tcdm, b_vals, &b.vals);
+        write_idx(&mut cc.cl.tcdm, b_cidcs, &b.col_idcs, iw);
+        write_ptrs(&mut cc.cl.tcdm, b_dir, &b.row_directory());
+        // ping-pong accumulator buffers
+        let acc_a_vals = cc.arena.alloc_f64(row_cap as u64);
+        let acc_a_idcs = cc.arena.alloc_idx(row_cap as u64, iw);
+        let acc_b_vals = cc.arena.alloc_f64(row_cap as u64);
+        let acc_b_idcs = cc.arena.alloc_idx(row_cap as u64, iw);
+        // output CSF
+        let fib_cap = a.nfibers();
+        let out_vals = cc.arena.alloc_f64(cap as u64);
+        let out_cidcs = cc.arena.alloc_idx(cap as u64, iw);
+        let out_ridcs = cc.arena.alloc_idx(fib_cap.max(1) as u64, iw);
+        let out_rptrs = cc.arena.alloc(4 * (fib_cap as u64 + 2));
+        let fib_cell = cc.arena.alloc(8);
+        cc.args(&[
+            (A0, a_vals as i64),
+            (A1, a_cidcs as i64),
+            (A2, b_vals as i64),
+            (A3, b_cidcs as i64),
+            (A4, out_vals as i64),
+            (A5, a_rptrs as i64),
+            (A6, a.nfibers() as i64),
+            (A7, b_dir as i64),
+            (S0, acc_a_vals as i64),
+            (S1, acc_a_idcs as i64),
+            (S2, acc_b_vals as i64),
+            (S3, acc_b_idcs as i64),
+            (S6, a_ridcs as i64),
+            (S8, out_cidcs as i64),
+            (S9, out_rptrs as i64),
+            (RA, out_ridcs as i64),
+            (SP, fib_cell as i64),
+        ]);
+        OutSpec::Csf {
+            row_idcs: out_ridcs,
+            row_ptrs: out_rptrs,
+            col_idcs: out_cidcs,
+            vals: out_vals,
+            fib_cell,
+            fib_cap,
+            cap,
+            nrows: a.nrows,
+            ncols: b.ncols,
+        }
+    }
+    fn sample(&self, seed: u64, _iw: IdxWidth) -> Vec<OwnedOperand> {
+        vec![
+            OwnedOperand::Csf(Csf::from_csr(&matgen::random_csr(seed, 20, 16, 60))),
+            OwnedOperand::Csf(Csf::from_csr(&matgen::random_csr(seed.wrapping_add(1), 16, 14, 50))),
+        ]
+    }
+}
+
+/// CSF × CSF row-wise SpGEMM (CSF result). Payload = union elements.
+pub fn run_smxsm_csf(variant: Variant, iw: IdxWidth, a: &Csf, b: &Csf) -> (Csf, Report) {
+    let ops = [Operand::Csf(a), Operand::Csf(b)];
+    let run = api::must_execute("smxsm_csf", variant, iw, &ops, &ExecCfg::single_cc());
+    match run.output {
+        Value::Csf(c) => (c, run.report),
+        other => unreachable!("expected CSF output, got {}", other.summarize()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Csr;
+
+    #[test]
+    fn smxsm_csf_variants_match_oracle() {
+        let a = Csf::from_csr(&matgen::random_csr(50, 18, 14, 70));
+        let b = Csf::from_csr(&matgen::random_csr(51, 14, 12, 50));
+        for v in [Variant::Base, Variant::Sssr] {
+            let (c, rep) = run_smxsm_csf(v, IdxWidth::U16, &a, &b);
+            c.validate().unwrap();
+            assert!(rep.cycles > 0);
+            assert_eq!(c, ops::smxsm_csf(&a, &b));
+        }
+    }
+
+    #[test]
+    fn smxsm_csf_handles_hypersparse_and_empty() {
+        // A with empty rows (compressed away) times a hypersparse B
+        let a = Csf::from_csr(&Csr::new(
+            6,
+            5,
+            vec![0, 2, 2, 2, 3, 3, 4],
+            vec![0, 3, 1, 4],
+            vec![1.0, 2.0, 3.0, 4.0],
+        ));
+        let mut db = vec![vec![0.0; 4]; 5];
+        db[0][1] = 5.0;
+        db[3][2] = -1.5;
+        let b = Csf::from_dense(&db);
+        for v in [Variant::Base, Variant::Sssr] {
+            let (c, _) = run_smxsm_csf(v, IdxWidth::U16, &a, &b);
+            assert_eq!(c, ops::smxsm_csf(&a, &b));
+            // row 3 of A hits only the empty row 1 of B -> fully empty
+            // result fiber, dropped from the output level 0
+            assert_eq!(c.row_idcs, vec![0]);
+        }
+        // an all-empty A produces an all-empty C on both variants
+        let empty = Csf::empty(6, 5);
+        for v in [Variant::Base, Variant::Sssr] {
+            let (c, _) = run_smxsm_csf(v, IdxWidth::U16, &empty, &b);
+            assert_eq!(c.nfibers(), 0);
+        }
+    }
+
+    #[test]
+    fn smxsm_csf_cancellation_keeps_union_pattern() {
+        // a row combining +1 and -1 times overlapping B rows produces an
+        // explicit zero; the kernel and oracle must agree on keeping it
+        let a = Csf::from_dense(&[vec![1.0, 1.0]]);
+        let b = Csf::from_dense(&[vec![2.0, 0.0], vec![-2.0, 1.0]]);
+        for v in [Variant::Base, Variant::Sssr] {
+            let (c, _) = run_smxsm_csf(v, IdxWidth::U16, &a, &b);
+            assert_eq!(c, ops::smxsm_csf(&a, &b));
+            assert_eq!(c.col_idcs, vec![0, 1]); // explicit zero at (0,0)
+            assert_eq!(c.vals, vec![0.0, 1.0]);
+        }
+    }
+
+    #[test]
+    fn smxsm_csf_sssr_beats_base_on_graph_squaring() {
+        let g = Csf::from_csr(&matgen::mycielskian(7));
+        let (_, base) = run_smxsm_csf(Variant::Base, IdxWidth::U16, &g, &g);
+        let (_, sssr) = run_smxsm_csf(Variant::Sssr, IdxWidth::U16, &g, &g);
+        let speedup = base.cycles as f64 / sssr.cycles as f64;
+        assert!(speedup > 1.5, "smxsm_csf speedup only {speedup}");
+        assert_eq!(base.payload, sssr.payload);
+    }
+}

@@ -21,6 +21,7 @@
 
 pub mod api;
 pub mod apps;
+pub mod csf;
 pub mod driver;
 pub mod multi;
 pub mod sparse_dense;

@@ -16,9 +16,12 @@
 //!   traffic statistics.
 //! - [`kernels`] — the paper's hand-optimized kernel library (§3.2):
 //!   BASE / SSR / SSSR variants of sparse-dense and sparse-sparse
-//!   vector and matrix ops for 8/16/32-bit index types, plus stencil
-//!   and codebook-decode applications (§3.3) and the row-sharded
-//!   multi-cluster SpMV/SpMSpV drivers ([`kernels::multi`]). All of
+//!   vector and matrix ops for 8/16/32-bit index types, plus the §3.3
+//!   applications — stencil, codebook decode, CSF row-wise SpGEMM over
+//!   the two-level [`formats::Csf`] tensor format ([`kernels::csf`]),
+//!   triangle counting on the streaming intersection core
+//!   ([`kernels::apps::Tricnt`]) — and the row-sharded multi-cluster
+//!   SpMV/SpMSpV drivers ([`kernels::multi`]). All of
 //!   them implement the unified typed execution API
 //!   ([`kernels::api`]): a [`kernels::api::Kernel`] trait + registry
 //!   with one [`kernels::api::execute`] entry point spanning the

@@ -22,11 +22,13 @@ USAGE:
 COMMANDS:
     fig 4a|4b|4c|4d|4e|4f|5a|5b|6a|6b|7|8a|8b   regenerate one figure
     table 1|2|3                                  regenerate one table
-    sweep [fig4a scale scale_sv ...]             run experiment sweeps
+    sweep [fig4a scale graph ...]                run experiment sweeps
                                                  (default: all) and write
                                                  BENCH_*.json; `scale` /
                                                  `scale_sv` are the multi-
-                                                 cluster system-layer sweeps
+                                                 cluster system-layer sweeps,
+                                                 `graph` the CSF SpGEMM +
+                                                 triangle-counting sweep
     kernel --list                                list the kernel registry
     kernel <name> [variant] [--iw 8|16|32]       run one registered kernel
                                                  on a sample workload

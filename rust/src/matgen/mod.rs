@@ -147,6 +147,26 @@ pub fn rmat(seed: u64, scale: u32, edge_factor: usize) -> Csr {
     Csr::from_triplets(n, n, t)
 }
 
+/// A simple undirected graph for the §3.3 pattern-matching kernels:
+/// R-MAT edges symmetrized, self-loops dropped, unit weights — the
+/// adjacency is a symmetric zero-diagonal 0/1 pattern (what `tricnt`
+/// requires).
+pub fn undirected_graph(seed: u64, scale: u32, edge_factor: usize) -> Csr {
+    let m = rmat(seed, scale, edge_factor);
+    let mut t = Vec::with_capacity(2 * m.nnz());
+    for r in 0..m.nrows {
+        let (idx, _) = m.row(r);
+        for &c in idx.iter().filter(|&&c| c as usize != r) {
+            t.push((r as u32, c, 1.0));
+            t.push((c, r as u32, 1.0));
+        }
+    }
+    // parallel edges collapse to a single unit entry
+    t.sort_unstable_by_key(|&(r, c, _)| (r, c));
+    t.dedup_by_key(|e| (e.0, e.1));
+    Csr::from_triplets(m.nrows, m.ncols, t)
+}
+
 /// Banded matrix with `band` diagonals each side (economics / circuit
 /// style regularity).
 pub fn banded(seed: u64, n: usize, band: usize) -> Csr {
@@ -292,6 +312,15 @@ pub fn parse_mtx(text: &str) -> Result<Csr, String> {
                 stored += 1;
                 t.push((r as u32 - 1, c as u32 - 1, v));
                 if mirror && r != c {
+                    // the mirrored entry (c,r) must be in bounds too —
+                    // a symmetric declaration with nrows != ncols can
+                    // pass the raw check above yet mirror out of range
+                    if !(1..=nrows).contains(&c) || !(1..=ncols).contains(&r) {
+                        return Err(format!(
+                            "line {}: mirrored entry ({c},{r}) outside {nrows}x{ncols}",
+                            lineno + 2
+                        ));
+                    }
                     t.push((c as u32 - 1, r as u32 - 1, if skew { -v } else { v }));
                 }
             }
@@ -489,6 +518,36 @@ mod tests {
         // count mismatch vs header
         assert!(parse_mtx("%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n")
             .is_err());
+    }
+
+    #[test]
+    fn parse_mtx_rejects_out_of_bounds_mirror() {
+        // (3,1) is in bounds of the declared 3x2 shape, but its mirror
+        // (1,3) is not: must be a clean error, not a panic downstream
+        let bad = "%%MatrixMarket matrix coordinate real symmetric\n3 2 1\n3 1 1.0\n";
+        let err = parse_mtx(bad).unwrap_err();
+        assert!(err.contains("mirrored"), "unexpected error: {err}");
+        // the same entry under `general` symmetry stays valid
+        let ok = "%%MatrixMarket matrix coordinate real general\n3 2 1\n3 1 1.0\n";
+        assert_eq!(parse_mtx(ok).unwrap().to_dense()[2][0], 1.0);
+        // square symmetric mirroring is unaffected by the new check
+        assert_eq!(parse_mtx(FIXTURE_SYMMETRIC).unwrap().nnz(), 6);
+    }
+
+    #[test]
+    fn undirected_graph_is_simple_symmetric() {
+        for seed in [1u64, 2, 3] {
+            let g = undirected_graph(seed, 7, 4);
+            g.validate().unwrap();
+            assert_eq!(g.nrows, 128);
+            let t = g.transpose();
+            assert_eq!((&g.ptrs, &g.idcs), (&t.ptrs, &t.idcs), "not symmetric");
+            for r in 0..g.nrows {
+                let (idx, val) = g.row(r);
+                assert!(!idx.contains(&(r as u32)), "self-loop at {r}");
+                assert!(val.iter().all(|&v| v == 1.0), "non-unit weight");
+            }
+        }
     }
 
     #[test]

@@ -19,8 +19,13 @@ pub type FReg = u8;
 
 // ---- ABI names ------------------------------------------------------------
 pub const ZERO: Reg = 0;
+/// x1/x2/x3/x4: the kernels are leaf programs with no calls, stack, or
+/// globals, so the ABI's ra/sp/gp/tp serve as four extra scratch
+/// registers (the register-hungriest kernels — CSF SpGEMM — use them).
 pub const RA: Reg = 1;
 pub const SP: Reg = 2;
+pub const GP: Reg = 3;
+pub const TP: Reg = 4;
 pub const T0: Reg = 5;
 pub const T1: Reg = 6;
 pub const T2: Reg = 7;

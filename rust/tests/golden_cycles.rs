@@ -1,0 +1,112 @@
+//! Golden cycle-count regression: one representative workload per
+//! registry kernel, BASE and SSSR cycle counts pinned in a snapshot
+//! file. Any change that shifts simulated timing — streamer arbitration,
+//! FREP issue, TCDM banking, kernel scheduling — fails here loudly
+//! instead of silently moving every figure.
+//!
+//! The simulator is pure and the workloads are seed-fixed, so the
+//! counts are exact and machine-invariant. On first run (no snapshot
+//! yet) the test records `tests/golden_cycles.snap` and passes; COMMIT
+//! that file to arm the guard — until it is committed, a fresh checkout
+//! self-records and the pin is inert. After an *intentional* timing
+//! change, regenerate with `GOLDEN_BLESS=1 cargo test --test
+//! golden_cycles` and commit the diff alongside the change that caused
+//! it.
+
+use std::path::PathBuf;
+
+use sssr::kernels::api::{self, borrow_all, execute, ExecCfg};
+use sssr::kernels::{IdxWidth, Variant};
+
+fn snapshot_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden_cycles.snap")
+}
+
+/// Fixed-seed representative run of every registry kernel: 16-bit
+/// indices (supported everywhere), BASE and SSSR variants (ditto), the
+/// kernel's own sample workload.
+fn measure() -> Vec<(&'static str, u64, u64)> {
+    api::REGISTRY
+        .iter()
+        .map(|k| {
+            let owned = k.sample(0x601D, IdxWidth::U16);
+            let ops = borrow_all(&owned);
+            let cfg = ExecCfg::single_sized(k.tcdm_default());
+            let mut cycles = [0u64; 2];
+            for (i, v) in [Variant::Base, Variant::Sssr].into_iter().enumerate() {
+                let run = execute(*k, v, IdxWidth::U16, &ops, &cfg)
+                    .unwrap_or_else(|e| panic!("{} [{v:?}]: {e}", k.name()));
+                cycles[i] = run.report.cycles;
+            }
+            (k.name(), cycles[0], cycles[1])
+        })
+        .collect()
+}
+
+fn render(rows: &[(&'static str, u64, u64)]) -> String {
+    let mut s = String::from("# kernel base_cycles sssr_cycles (seed 0x601D, 16-bit)\n");
+    for &(name, base, sssr) in rows {
+        s.push_str(&format!("{name} {base} {sssr}\n"));
+    }
+    s
+}
+
+#[test]
+fn golden_cycle_counts_are_pinned() {
+    let rows = measure();
+    let rendered = render(&rows);
+    let path = snapshot_path();
+    let bless = std::env::var("GOLDEN_BLESS").map(|v| v == "1").unwrap_or(false);
+    let pinned = std::fs::read_to_string(&path).ok();
+    match pinned {
+        Some(pinned) if !bless => {
+            if pinned == rendered {
+                return;
+            }
+            // report every drifted kernel, not just the first
+            let old: Vec<&str> = pinned.lines().collect();
+            let new: Vec<&str> = rendered.lines().collect();
+            let mut drift = String::new();
+            for line in &new {
+                if !old.contains(line) {
+                    drift.push_str(&format!("  now:    {line}\n"));
+                }
+            }
+            for line in &old {
+                if !new.contains(line) {
+                    drift.push_str(&format!("  pinned: {line}\n"));
+                }
+            }
+            panic!(
+                "golden cycle counts drifted from {}:\n{drift}\
+                 If this change is intentional, regenerate with \
+                 `GOLDEN_BLESS=1 cargo test --test golden_cycles` and \
+                 commit the updated snapshot.",
+                path.display()
+            );
+        }
+        _ => {
+            std::fs::write(&path, &rendered)
+                .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+            eprintln!(
+                "golden_cycles: recorded snapshot at {} — commit it to pin",
+                path.display()
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_workloads_cover_every_registry_kernel() {
+    // the snapshot keys are exactly the registry names, in order — a
+    // new kernel cannot land without entering the golden set
+    let rows = measure();
+    let names: Vec<&str> = rows.iter().map(|(n, _, _)| *n).collect();
+    let registry: Vec<&str> = api::REGISTRY.iter().map(|k| k.name()).collect();
+    assert_eq!(names, registry);
+    // loose sanity only — the exact values are the snapshot's job; the
+    // samples are small, so BASE-vs-SSSR ratios are not asserted here
+    for (name, base, sssr) in rows {
+        assert!(base > 0 && sssr > 0, "{name}: zero-cycle run");
+    }
+}

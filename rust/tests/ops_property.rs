@@ -1,0 +1,325 @@
+//! Property-based differential tests for `formats::ops`: a seeded,
+//! hand-rolled randomized sweep (no external property-testing deps)
+//! checking every sparse reference op — including the CSF union,
+//! intersection, and row-wise SpGEMM oracles — against naive dense
+//! implementations, across dimension, density, and duplicate-pattern
+//! corners the uniform generators rarely hit.
+
+use sssr::formats::{ops, Csf, Csr, SpVec};
+use sssr::util::Pcg;
+
+const CASES: usize = 120;
+
+/// Generator with deliberately adversarial corners: empty and singleton
+/// dimensions, zero and full density, and (for operand pairs) identical,
+/// subset, and disjoint index patterns.
+struct Gen {
+    r: Pcg,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen { r: Pcg::new(seed) }
+    }
+
+    fn dim(&mut self) -> usize {
+        match self.r.below(5) {
+            0 => 1,
+            1 => 2,
+            2 => 1 + self.r.below(8) as usize,
+            _ => 1 + self.r.below(120) as usize,
+        }
+    }
+
+    /// Nonzero count biased toward the corners (0, 1, full).
+    fn nnz(&mut self, dim: usize) -> usize {
+        match self.r.below(5) {
+            0 => 0,
+            1 => 1.min(dim),
+            2 => dim,
+            _ => self.r.below(dim as u64 + 1) as usize,
+        }
+    }
+
+    fn spvec(&mut self, dim: usize) -> SpVec {
+        let nnz = self.nnz(dim);
+        let idcs: Vec<u32> = self.r.distinct_sorted(nnz, dim).iter().map(|&x| x as u32).collect();
+        let vals: Vec<f64> = (0..nnz).map(|_| self.r.normal()).collect();
+        SpVec::new(dim, idcs, vals)
+    }
+
+    /// A partner for `a`: same pattern, subset, disjoint-ish, or fresh —
+    /// the duplicate-pattern corners of the set-algebra ops.
+    fn partner(&mut self, a: &SpVec) -> SpVec {
+        match self.r.below(4) {
+            0 => SpVec {
+                dim: a.dim,
+                idcs: a.idcs.clone(),
+                vals: a.idcs.iter().map(|_| self.r.normal()).collect(),
+            },
+            1 => {
+                // random subset of a's pattern
+                let mut idcs = vec![];
+                let mut vals = vec![];
+                for &i in &a.idcs {
+                    if self.r.below(2) == 0 {
+                        idcs.push(i);
+                        vals.push(self.r.normal());
+                    }
+                }
+                SpVec { dim: a.dim, idcs, vals }
+            }
+            2 => {
+                // complement-leaning pattern: indices a does not use
+                let used: Vec<bool> = {
+                    let mut u = vec![false; a.dim];
+                    for &i in &a.idcs {
+                        u[i as usize] = true;
+                    }
+                    u
+                };
+                let mut idcs = vec![];
+                let mut vals = vec![];
+                for i in 0..a.dim {
+                    if !used[i] && self.r.below(3) == 0 {
+                        idcs.push(i as u32);
+                        vals.push(self.r.normal());
+                    }
+                }
+                SpVec { dim: a.dim, idcs, vals }
+            }
+            _ => self.spvec(a.dim),
+        }
+    }
+
+    fn dense(&mut self, dim: usize) -> Vec<f64> {
+        (0..dim).map(|_| self.r.normal()).collect()
+    }
+
+    fn csr(&mut self, nrows: usize, ncols: usize) -> Csr {
+        let nnz = self.nnz(nrows * ncols);
+        let cells = self.r.distinct_sorted(nnz, nrows * ncols);
+        let t: Vec<(u32, u32, f64)> = cells
+            .iter()
+            .map(|&cell| {
+                let (r, c) = ((cell as usize / ncols) as u32, (cell as usize % ncols) as u32);
+                (r, c, self.r.normal())
+            })
+            .collect();
+        Csr::from_triplets(nrows, ncols, t)
+    }
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+}
+
+fn assert_dense_close(got: &[f64], want: &[f64], what: &str, case: usize) {
+    assert_eq!(got.len(), want.len(), "{what} length, case {case}");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(close(*g, *w), "{what}[{i}]: got {g}, want {w} (case {case})");
+    }
+}
+
+#[test]
+fn vector_ops_match_dense_references() {
+    let mut g = Gen::new(0xA11CE);
+    for case in 0..CASES {
+        let dim = g.dim();
+        let a = g.spvec(dim);
+        let b = g.partner(&a);
+        let d = g.dense(dim);
+        let (da, db) = (a.to_dense(), b.to_dense());
+
+        // sV x dV
+        let want: f64 = da.iter().zip(&d).map(|(x, y)| x * y).sum();
+        assert!(close(ops::svxdv(&a, &d), want), "svxdv case {case}");
+
+        // sV + dV (in place)
+        let mut got = d.clone();
+        ops::svpdv(&a, &mut got);
+        let want: Vec<f64> = da.iter().zip(&d).map(|(x, y)| x + y).collect();
+        assert_dense_close(&got, &want, "svpdv", case);
+
+        // sV o dV keeps a's pattern
+        let prod = ops::svodv(&a, &d);
+        assert_eq!(prod.idcs, a.idcs, "svodv pattern, case {case}");
+        let want: Vec<f64> = da.iter().zip(&d).map(|(x, y)| x * y).collect();
+        assert_dense_close(&prod.to_dense(), &want, "svodv", case);
+
+        // sV x sV
+        let want: f64 = da.iter().zip(&db).map(|(x, y)| x * y).sum();
+        assert!(close(ops::svxsv(&a, &b), want), "svxsv case {case}");
+
+        // sV + sV: dense agreement plus the union-pattern invariant
+        let sum = ops::svpsv(&a, &b);
+        sum.validate().expect("svpsv result invalid");
+        let want: Vec<f64> = da.iter().zip(&db).map(|(x, y)| x + y).collect();
+        assert_dense_close(&sum.to_dense(), &want, "svpsv", case);
+        let union: Vec<u32> = {
+            let mut u: Vec<u32> = a.idcs.iter().chain(&b.idcs).copied().collect();
+            u.sort_unstable();
+            u.dedup();
+            u
+        };
+        assert_eq!(sum.idcs, union, "svpsv union pattern, case {case}");
+
+        // sV o sV: dense agreement plus the intersection-pattern invariant
+        let prod = ops::svosv(&a, &b);
+        prod.validate().expect("svosv result invalid");
+        let want: Vec<f64> = da.iter().zip(&db).map(|(x, y)| x * y).collect();
+        assert_dense_close(&prod.to_dense(), &want, "svosv", case);
+        let inter: Vec<u32> =
+            a.idcs.iter().copied().filter(|i| b.idcs.contains(i)).collect();
+        assert_eq!(prod.idcs, inter, "svosv intersection pattern, case {case}");
+
+        // scale keeps the pattern even at alpha = 0
+        let z = ops::svscale(0.0, &a);
+        assert_eq!(z.idcs, a.idcs);
+        assert!(z.vals.iter().all(|&v| v == 0.0));
+    }
+}
+
+#[test]
+fn matrix_ops_match_dense_references() {
+    let mut g = Gen::new(0xB0B);
+    for case in 0..CASES {
+        let (n, k) = (g.dim(), g.dim());
+        let m = g.csr(n, k);
+        let dm = m.to_dense();
+        let v = g.dense(k);
+        let sv = g.spvec(k);
+
+        // sM x dV
+        let got = ops::smxdv(&m, &v);
+        let want: Vec<f64> = dm
+            .iter()
+            .map(|row| row.iter().zip(&v).map(|(x, y)| x * y).sum())
+            .collect();
+        assert_dense_close(&got, &want, "smxdv", case);
+
+        // sM x dM (small inner dense width)
+        let cols = 1 + g.r.below(4) as usize;
+        let d = g.dense(k * cols);
+        let got = ops::smxdm(&m, &d, cols);
+        let mut want = vec![0.0; n * cols];
+        for i in 0..n {
+            for x in 0..k {
+                for j in 0..cols {
+                    want[i * cols + j] += dm[i][x] * d[x * cols + j];
+                }
+            }
+        }
+        assert_dense_close(&got, &want, "smxdm", case);
+
+        // sM x sV
+        let got = ops::smxsv(&m, &sv);
+        let dsv = sv.to_dense();
+        let want: Vec<f64> = dm
+            .iter()
+            .map(|row| row.iter().zip(&dsv).map(|(x, y)| x * y).sum())
+            .collect();
+        assert_dense_close(&got, &want, "smxsv", case);
+
+        // sM x sM (inner dataflow, dense result)
+        let p = g.dim().min(24);
+        let b = g.csr(k, p);
+        let db = b.to_dense();
+        let got = ops::smxsm_inner(&m, &sssr::formats::Csc::from_csr(&b));
+        let mut want = vec![0.0; n * p];
+        for i in 0..n {
+            for x in 0..k {
+                for j in 0..p {
+                    want[i * p + j] += dm[i][x] * db[x][j];
+                }
+            }
+        }
+        assert_dense_close(&got, &want, "smxsm_inner", case);
+    }
+}
+
+#[test]
+fn csf_ops_match_dense_references() {
+    let mut g = Gen::new(0xC5F);
+    for case in 0..CASES {
+        let (n, k, p) = (g.dim(), g.dim(), g.dim().min(40));
+        let a = Csf::from_csr(&g.csr(n, k));
+        let b = Csf::from_csr(&g.csr(n, k));
+        let (da, db) = (a.to_dense(), b.to_dense());
+
+        // format round trips
+        assert_eq!(Csf::from_dense(&da), a, "csf dense roundtrip, case {case}");
+        assert_eq!(a.to_csr().ptrs, a.row_directory(), "row directory, case {case}");
+
+        // CSF + CSF
+        let sum = ops::csf_add(&a, &b);
+        sum.validate().expect("csf_add result invalid");
+        let ds = sum.to_dense();
+        for i in 0..n {
+            for j in 0..k {
+                assert!(
+                    close(ds[i][j], da[i][j] + db[i][j]),
+                    "csf_add ({i},{j}), case {case}"
+                );
+            }
+        }
+
+        // CSF o CSF
+        let prod = ops::csf_mul(&a, &b);
+        prod.validate().expect("csf_mul result invalid");
+        let dp = prod.to_dense();
+        for i in 0..n {
+            for j in 0..k {
+                assert!(
+                    close(dp[i][j], da[i][j] * db[i][j]),
+                    "csf_mul ({i},{j}), case {case}"
+                );
+            }
+        }
+        // intersection never stores rows absent from either operand
+        for &r in &prod.row_idcs {
+            assert!(a.row_idcs.contains(&r) && b.row_idcs.contains(&r));
+        }
+
+        // CSF x CSF row-wise SpGEMM
+        let c = Csf::from_csr(&g.csr(k, p));
+        let dc = c.to_dense();
+        let got = ops::smxsm_csf(&a, &c);
+        got.validate().expect("smxsm_csf result invalid");
+        let dg = got.to_dense();
+        for i in 0..n {
+            for j in 0..p {
+                let want: f64 = (0..k).map(|x| da[i][x] * dc[x][j]).sum();
+                assert!(close(dg[i][j], want), "smxsm_csf ({i},{j}), case {case}");
+            }
+        }
+        // the flop count bounds the result size
+        assert!(ops::smxsm_csf_flops(&a, &c) >= got.nnz() as u64);
+    }
+}
+
+#[test]
+fn csf_set_ops_duplicate_pattern_corners() {
+    // exactly equal patterns: add keeps the shared directory, mul too
+    let mut g = Gen::new(0xD0D0);
+    for case in 0..40 {
+        let (n, k) = (g.dim(), g.dim());
+        let a = Csf::from_csr(&g.csr(n, k));
+        let twin = Csf {
+            vals: a.vals.iter().map(|v| v * 2.0).collect(),
+            ..a.clone()
+        };
+        let sum = ops::csf_add(&a, &twin);
+        assert_eq!(sum.row_idcs, a.row_idcs, "case {case}");
+        assert_eq!(sum.col_idcs, a.col_idcs, "case {case}");
+        for (s, v) in sum.vals.iter().zip(&a.vals) {
+            assert!(close(*s, 3.0 * v), "case {case}");
+        }
+        let prod = ops::csf_mul(&a, &twin);
+        assert_eq!(prod.col_idcs, a.col_idcs, "case {case}");
+        // disjoint row sets: add concatenates, mul annihilates
+        let empty = Csf::empty(n, k);
+        assert_eq!(ops::csf_add(&a, &empty), a, "case {case}");
+        assert_eq!(ops::csf_mul(&a, &empty).nfibers(), 0, "case {case}");
+    }
+}
