@@ -1,0 +1,20 @@
+//! Regenerates the serving-engine sweep (`serve`: policy × clusters ×
+//! arrival rate × batch window × cache on/off over the same-matrix-heavy
+//! request stream) through the parallel experiment engine and writes
+//! `BENCH_serve.json` next to the other bench trajectories. Quick grid
+//! by default; REPRO_FULL=1 for the full cluster/rate grid and the
+//! longer stream.
+use std::path::Path;
+
+use sssr::experiments::{write_json, Runner};
+use sssr::harness as h;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let spec = h::spec_by_name("serve").expect("serve spec registered");
+    let recs = Runner::new(0).run(&spec);
+    spec.print(&recs);
+    let path = write_json(Path::new("."), &spec, &recs).expect("writing BENCH json");
+    println!("[wrote {}]", path.display());
+    println!("\n[fig_serve bench wall time: {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -76,4 +76,30 @@ mod tests {
         }
         std::fs::remove_dir_all(&dir).ok();
     }
+
+    /// `repro sweep --json DIR` (and every other `write_json` caller)
+    /// must create a missing output directory — including nested path
+    /// components — instead of failing at the first file write.
+    #[test]
+    fn write_json_creates_missing_nested_dirs() {
+        let spec = ExperimentSpec {
+            name: "mkdirtest",
+            title: "dir creation test".into(),
+            columns: vec![],
+            points: vec![Point::at(0)],
+            measure: Box::new(|_| vec![Record::new("mkdirtest").int("one", 1)]),
+        };
+        let recs = spec.run(1);
+        let root = std::env::temp_dir().join("sssr_mkdirtest");
+        std::fs::remove_dir_all(&root).ok();
+        let dir = root.join("deeply/nested/out");
+        assert!(!dir.exists());
+        let path = write_json(&dir, &spec, &recs).unwrap();
+        assert!(path.is_file(), "{} not written", path.display());
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(Record::from_json_line(text.trim()).unwrap().f64("one"), Some(1.0));
+        // a second write into the now-existing directory still works
+        write_json(&dir, &spec, &recs).unwrap();
+        std::fs::remove_dir_all(&root).ok();
+    }
 }

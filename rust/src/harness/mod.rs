@@ -18,6 +18,7 @@ use crate::kernels::{IdxWidth, Report, Variant};
 use crate::matgen;
 use crate::model::energy::EnergyModel;
 use crate::model::{streamer_area, streamer_min_period_ps, SlotKind, StreamerCfg};
+use crate::serve::{self, Policy, ServeCfg, StreamCfg};
 use crate::sim::{ClusterCfg, SystemCfg};
 
 pub fn full_mode() -> bool {
@@ -827,6 +828,164 @@ pub fn spec_graph() -> ExperimentSpec {
 }
 
 // ======================================================================
+// serve — the sparse serving engine sweep (policy × clusters × rate ×
+// batch window × cache on/off)
+// ======================================================================
+
+/// Stream seed shared by every `serve` grid point: all configurations
+/// serve the *same* request sequence, so policy/batching/cache effects
+/// are directly comparable row to row.
+pub const SERVE_SEED: u64 = 0x5E11E;
+
+/// Batch arrival window (cycles) of the batched grid points.
+pub const SERVE_WINDOW: u64 = 32_000;
+
+/// Per-batch request cap (truncated to a power of two by the coalescer).
+pub const SERVE_MAX_BATCH: usize = 16;
+
+/// Hot-tenant share of the same-matrix-heavy stream, in percent.
+pub const SERVE_HOT_PCT: u32 = 70;
+
+/// One serving configuration of the `serve` grid.
+#[derive(Clone, Debug)]
+pub struct ServeCombo {
+    pub policy: Policy,
+    pub clusters: usize,
+    /// Mean request inter-arrival gap in cycles (open-loop).
+    pub mean_gap: f64,
+    /// Batch window in cycles (0 = batching off).
+    pub window: u64,
+    pub cache: bool,
+}
+
+impl ServeCombo {
+    fn label(&self) -> String {
+        format!(
+            "{}/c{}/g{}/w{}/{}",
+            self.policy.name(),
+            self.clusters,
+            self.mean_gap as u64,
+            self.window,
+            if self.cache { "cache" } else { "nocache" }
+        )
+    }
+}
+
+/// The default `serve` grid. Quick mode sweeps 3 policies × {2, 4}
+/// clusters × two arrival rates × {unbatched+cache, batched+cache,
+/// unbatched+nocache}; `REPRO_FULL=1` adds 8 clusters, a third rate,
+/// and the batched-uncached corner.
+pub fn serve_combos() -> Vec<ServeCombo> {
+    let clusters: Vec<usize> = if full_mode() { vec![2, 4, 8] } else { vec![2, 4] };
+    let gaps: Vec<f64> = if full_mode() {
+        vec![1000.0, 2000.0, 4000.0]
+    } else {
+        vec![1500.0, 3000.0]
+    };
+    let wc: Vec<(u64, bool)> = if full_mode() {
+        vec![(0, true), (SERVE_WINDOW, true), (0, false), (SERVE_WINDOW, false)]
+    } else {
+        vec![(0, true), (SERVE_WINDOW, true), (0, false)]
+    };
+    let mut out = vec![];
+    for policy in Policy::ALL {
+        for &k in &clusters {
+            for &mean_gap in &gaps {
+                for &(window, cache) in &wc {
+                    out.push(ServeCombo { policy, clusters: k, mean_gap, window, cache });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Requests per serving grid point.
+pub fn serve_requests() -> usize {
+    if full_mode() {
+        120
+    } else {
+        40
+    }
+}
+
+fn serve_columns() -> Vec<Column> {
+    vec![
+        Column::new("policy", "policy", 9, ColFmt::Str),
+        Column::new("clusters", "clus", 5, ColFmt::Int),
+        Column::new("mean_gap", "gap", 6, ColFmt::Int),
+        Column::new("window", "window", 7, ColFmt::Int),
+        Column::new("cache", "cache", 6, ColFmt::StrR),
+        Column::new("p50", "p50 cyc", 10, ColFmt::Int),
+        Column::new("p95", "p95 cyc", 11, ColFmt::Int),
+        Column::new("throughput_nnz", "nnz/cyc", 8, ColFmt::Fixed(3)),
+        Column::new("utilization", "util", 6, ColFmt::Fixed(2)),
+        Column::new("hit_rate", "hit", 6, ColFmt::Pct(0)),
+        Column::new("batches", "batches", 8, ColFmt::Int),
+    ]
+}
+
+/// Build a `serve` spec over an explicit combo grid (the default sweep
+/// uses [`serve_combos`]; tests shrink the grid and request count).
+/// Every grid point serves the same seeded stream through one
+/// single-threaded engine run, so records are `--jobs`-invariant.
+pub fn spec_serve_with(requests: usize, combos: Vec<ServeCombo>) -> ExperimentSpec {
+    let corpus = serve::serve_corpus();
+    let points = combos
+        .iter()
+        .enumerate()
+        .map(|(i, cb)| Point::at(i).label(cb.label()))
+        .collect();
+    ExperimentSpec {
+        name: "serve",
+        title: "serve: multi-tenant serving engine (policy x clusters x rate x batching x cache)"
+            .into(),
+        columns: serve_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let cb = &combos[p.idx.unwrap()];
+            let stream =
+                StreamCfg::same_matrix_heavy(SERVE_SEED, requests, cb.mean_gap, SERVE_HOT_PCT);
+            let reqs = serve::gen_stream(&stream, &corpus);
+            let cfg = ServeCfg::new(cb.clusters, 1)
+                .policy(cb.policy)
+                .batched(cb.window, SERVE_MAX_BATCH)
+                .caching(cb.cache);
+            let out = serve::run_serve(&cfg, &corpus, &reqs)
+                .unwrap_or_else(|e| panic!("serve[{}]: {e}", cb.label()));
+            let s = out.summary;
+            vec![Record::new("serve")
+                .str("policy", cb.policy.name())
+                .int("clusters", cb.clusters as i64)
+                .int("channels", 1)
+                .int("mean_gap", cb.mean_gap as i64)
+                .int("window", cb.window as i64)
+                .str("cache", if cb.cache { "on" } else { "off" })
+                .int("requests", s.requests as i64)
+                .int("p50", s.p50_latency as i64)
+                .int("p95", s.p95_latency as i64)
+                .int("p99", s.p99_latency as i64)
+                .num("mean_latency", s.mean_latency)
+                .num("mean_queue", s.mean_queue)
+                .num("throughput_nnz", s.throughput_nnz)
+                .num("utilization", s.utilization)
+                .num("hit_rate", s.hit_rate)
+                .int("upload_bytes", s.upload_bytes as i64)
+                .int("batches", s.batches as i64)
+                .num("avg_batch", s.avg_batch)
+                .num("energy_uj", s.energy_j * 1e6)
+                .int("makespan", s.makespan as i64)]
+        }),
+    }
+}
+
+/// `serve`: the serving-engine sweep (`repro sweep serve` →
+/// `BENCH_serve.json`).
+pub fn spec_serve() -> ExperimentSpec {
+    spec_serve_with(serve_requests(), serve_combos())
+}
+
+// ======================================================================
 // Fig. 7 — area and timing (analytical model)
 // ======================================================================
 
@@ -1099,10 +1258,11 @@ pub fn spec_table3() -> ExperimentSpec {
 // ======================================================================
 
 /// Every figure sweep as a (name, constructor) pair, in `repro all`
-/// order (the paper figures plus the system-layer `scale` family and
-/// the CSF/graph `graph` sweep). Construction generates the sweep's
-/// shared workloads (corpus, operands) eagerly, so build one spec at a
-/// time and drop it before the next — materializing all seventeen at
+/// order (the paper figures plus the system-layer `scale` family, the
+/// CSF/graph `graph` sweep, and the serving-engine `serve` sweep).
+/// Construction generates the sweep's shared workloads (corpus,
+/// operands) eagerly, so build one spec at a time and drop it before
+/// the next — materializing all eighteen at
 /// once holds every workload in memory simultaneously. Tables 2/3 are available via
 /// [`spec_table2`]/[`spec_table3`] (Table 2's bottom row derives from
 /// Fig. 5a records, see [`table2_ours`]).
@@ -1124,6 +1284,7 @@ pub const SPEC_BUILDERS: &[(&str, fn() -> ExperimentSpec)] = &[
     ("scale", spec_scale),
     ("scale_sv", spec_scale_sv),
     ("graph", spec_graph),
+    ("serve", spec_serve),
 ];
 
 /// Look up one figure spec constructor by name (`"fig4a"`, `"fig7b"`, …).
@@ -1195,7 +1356,7 @@ mod tests {
 
     #[test]
     fn spec_registry_is_consistent() {
-        assert_eq!(SPEC_BUILDERS.len(), 17);
+        assert_eq!(SPEC_BUILDERS.len(), 18);
         for (n, build) in SPEC_BUILDERS {
             let s = build();
             assert_eq!(s.name, *n);

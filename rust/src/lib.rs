@@ -40,6 +40,13 @@
 //!   tables and machine-readable `BENCH_<fig>.json` lines.
 //! - [`harness`] — every table and figure of the paper's evaluation,
 //!   expressed as `ExperimentSpec` definitions over [`experiments`].
+//! - [`serve`] — the sparse serving engine: simulated-time multi-tenant
+//!   request streams over the kernel registry, with a per-cluster
+//!   HBM-resident operand cache (LRU inside each cluster's shard),
+//!   same-matrix `smxdv`→`smxdm` batching with bit-identical scatter,
+//!   pluggable schedulers (FIFO / SJF / cache-affinity), and
+//!   per-request latency/energy accounting — the `repro serve` CLI,
+//!   the `serve` sweep, and `BENCH_serve.json` sit on top.
 //! - [`runtime`] — the PJRT golden-model runtime: loads AOT-compiled
 //!   JAX/Pallas artifacts (HLO text) and executes them on the XLA CPU
 //!   client to cross-check simulator numerics. Requires the native
@@ -76,4 +83,5 @@ pub mod experiments;
 pub mod runtime;
 pub mod model;
 pub mod harness;
+pub mod serve;
 pub mod util;

@@ -22,14 +22,21 @@ USAGE:
 COMMANDS:
     fig 4a|4b|4c|4d|4e|4f|5a|5b|6a|6b|7|8a|8b   regenerate one figure
     table 1|2|3                                  regenerate one table
-    sweep [fig4a scale graph ...]                run experiment sweeps
+    sweep [fig4a scale graph serve ...]          run experiment sweeps
                                                  (default: all) and write
                                                  BENCH_*.json; `scale` /
                                                  `scale_sv` are the multi-
                                                  cluster system-layer sweeps,
                                                  `graph` the CSF SpGEMM +
-                                                 triangle-counting sweep
+                                                 triangle-counting sweep,
+                                                 `serve` the serving-engine
+                                                 sweep
+    serve [serve options]                        run one serving-engine
+                                                 configuration and print the
+                                                 latency/throughput summary
     kernel --list                                list the kernel registry
+                                                 (operands, per-target
+                                                 variants, index widths)
     kernel <name> [variant] [--iw 8|16|32]       run one registered kernel
                                                  on a sample workload
                                                  (variants: base ssr sssr;
@@ -43,6 +50,19 @@ OPTIONS:
                     std::thread::available_parallelism(); results are
                     identical for every N)
     --json DIR      also write one BENCH_<fig>.json per sweep into DIR
+
+SERVE OPTIONS:
+    --policy P      fifo | sjf | affinity (default fifo)
+    --clusters N    serving clusters (default 2)
+    --channels N    shared HBM channels (default 1)
+    --rate G        mean request inter-arrival gap in cycles (default 2000)
+    --window W      same-matrix batch window in cycles (default 0 = off)
+    --batch N       max requests per smxdm batch (default 16)
+    --no-cache      disable the per-cluster operand cache
+    --requests N    stream length (default 40)
+    --seed S        stream seed, decimal (default 385310)
+    --hot PCT       hot-tenant share percent (default 70)
+    --mtx FILE      serve a Matrix Market matrix as the hot matrix
 
 ENV:
     REPRO_FULL=1    full paper-size sweeps (default: quick)";
@@ -158,6 +178,7 @@ fn main() {
             }
             println!("sweep done in {:.1}s", t0.elapsed().as_secs_f64());
         }
+        Some("serve") => serve_cmd(&opts.rest),
         Some("kernel") => kernel_cmd(&opts.rest),
         Some("verify") => {
             let path = opts
@@ -260,27 +281,169 @@ fn kernel_cmd(rest: &[String]) {
     kernel_demo(first, variant, iw);
 }
 
-/// Render the kernel registry (`repro kernel --list`).
+/// Render the kernel registry (`repro kernel --list`) with full
+/// capability metadata: operand signature, index widths, and the
+/// supported variants *per execution target* — the same data
+/// `serve::validate_stream` checks workload specs against.
 fn list_kernels() {
     println!("registered kernels ({}):\n", api::REGISTRY.len());
     println!(
-        "{:<10} {:<34} {:<14} {:<8} {:<26} description",
-        "name", "operands", "variants", "widths", "targets"
+        "{:<10} {:<34} {:<8} {:<44} description",
+        "name", "operands", "widths", "targets[variants]"
     );
     for k in api::REGISTRY.iter() {
-        let variants: Vec<&str> = k.variants().iter().map(|v| v.name()).collect();
         let widths: Vec<&str> = k.widths().iter().map(|w| w.name()).collect();
-        let targets: Vec<String> = k.targets().iter().map(|t| t.to_string()).collect();
+        let targets: Vec<String> = k
+            .targets()
+            .iter()
+            .map(|&t| {
+                let vs: Vec<&str> = k.variants_for(t).iter().map(|v| v.name()).collect();
+                format!("{t}[{}]", vs.join("/"))
+            })
+            .collect();
         println!(
-            "{:<10} {:<34} {:<14} {:<8} {:<26} {}",
+            "{:<10} {:<34} {:<8} {:<44} {}",
             k.name(),
             k.signature(),
-            variants.join("/"),
             widths.join("/"),
-            targets.join("/"),
+            targets.join(" "),
             k.describe()
         );
     }
+}
+
+/// The `repro serve` subcommand: run one serving-engine configuration
+/// on the canonical same-matrix-heavy stream and print the summary.
+fn serve_cmd(rest: &[String]) {
+    use sssr::serve::{self, Policy, ServeCfg, ServeMatrix, StreamCfg};
+    let mut policy = Policy::Fifo;
+    let mut clusters = 2usize;
+    let mut channels = 1usize;
+    let mut rate = 2000.0f64;
+    let mut window = 0u64;
+    let mut max_batch = 16usize;
+    let mut cache = true;
+    let mut requests = 40usize;
+    let mut seed = 0x5E11Eu64;
+    let mut hot = 70u32;
+    let mut mtx: Option<PathBuf> = None;
+    let mut it = rest.iter();
+    let next_val = |it: &mut std::slice::Iter<String>, flag: &str| -> String {
+        it.next()
+            .unwrap_or_else(|| die(&format!("{flag} needs a value")))
+            .clone()
+    };
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--policy" => {
+                let v = next_val(&mut it, "--policy");
+                policy = Policy::parse(&v)
+                    .unwrap_or_else(|| die(&format!("unknown policy {v:?} (fifo|sjf|affinity)")));
+            }
+            "--clusters" => clusters = parse_num(&next_val(&mut it, "--clusters")),
+            "--channels" => channels = parse_num(&next_val(&mut it, "--channels")),
+            "--rate" => rate = parse_num::<f64>(&next_val(&mut it, "--rate")),
+            "--window" => window = parse_num(&next_val(&mut it, "--window")),
+            "--batch" => max_batch = parse_num(&next_val(&mut it, "--batch")),
+            "--no-cache" => cache = false,
+            "--requests" => requests = parse_num(&next_val(&mut it, "--requests")),
+            "--seed" => seed = parse_num(&next_val(&mut it, "--seed")),
+            "--hot" => hot = parse_num(&next_val(&mut it, "--hot")),
+            "--mtx" => mtx = Some(PathBuf::from(next_val(&mut it, "--mtx"))),
+            other => die(&format!("unknown serve option {other:?}")),
+        }
+    }
+    let mut corpus = serve::serve_corpus();
+    if let Some(path) = mtx {
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "mtx".into());
+        // the loaded matrix becomes the hot matrix (corpus entry 0)
+        corpus[0] = ServeMatrix::from_mtx(&name, &path)
+            .unwrap_or_else(|e| die(&format!("loading {}: {e}", path.display())));
+    }
+    if clusters == 0 || channels == 0 {
+        die("--clusters and --channels must be at least 1");
+    }
+    if hot > 90 {
+        die("--hot must be at most 90 (the background tenants need the rest)");
+    }
+    if rate <= 0.0 {
+        die("--rate must be a positive cycle count");
+    }
+    let stream = StreamCfg::same_matrix_heavy(seed, requests, rate, hot);
+    let reqs = serve::gen_stream(&stream, &corpus);
+    let cfg = ServeCfg::new(clusters, channels)
+        .policy(policy)
+        .batched(window, max_batch)
+        .caching(cache);
+    let out = serve::run_serve(&cfg, &corpus, &reqs).unwrap_or_else(|e| die(&e));
+    let s = out.summary;
+    println!(
+        "serve: {} requests, {} clusters / {} channel(s), policy {}, window {} cyc, cache {}",
+        s.requests,
+        clusters,
+        channels,
+        policy.name(),
+        window,
+        if cache { "on" } else { "off" }
+    );
+    println!("  hot matrix            : {} ({} nnz)", corpus[0].name, corpus[0].matrix.nnz());
+    println!("  makespan              : {} cycles", s.makespan);
+    println!(
+        "  latency p50/p95/p99   : {} / {} / {} cycles",
+        s.p50_latency, s.p95_latency, s.p99_latency
+    );
+    println!(
+        "  mean queue/upload/comp: {:.0} / {:.0} / {:.0} cycles",
+        s.mean_queue, s.mean_upload, s.mean_compute
+    );
+    println!("  throughput            : {:.4} nnz/cycle", s.throughput_nnz);
+    println!("  cluster utilization   : {:.1} %", 100.0 * s.utilization);
+    println!(
+        "  operand cache         : {} hits / {} misses ({:.0} % hit rate), {} KiB uploaded",
+        s.cache_hits,
+        s.cache_misses,
+        100.0 * s.hit_rate,
+        s.upload_bytes >> 10
+    );
+    println!(
+        "  batching              : {} batches, {} of {} requests coalesced (x{:.2} mean)",
+        s.batches, s.batched_requests, s.requests, s.avg_batch
+    );
+    println!("  energy                : {:.2} uJ total", s.energy_j * 1e6);
+    for (i, c) in out.clusters.iter().enumerate() {
+        println!(
+            "  cluster {i}: {} dispatches ({} batched), busy {:.1} %, {} KiB staged",
+            c.dispatches,
+            c.batches,
+            100.0 * c.busy_cycles as f64 / s.makespan.max(1) as f64,
+            c.staged_bytes >> 10
+        );
+    }
+    let mut slow: Vec<_> = out.requests.iter().collect();
+    slow.sort_by_key(|r| std::cmp::Reverse(r.latency));
+    println!("  slowest requests:");
+    for r in slow.iter().take(5) {
+        println!(
+            "    #{:<4} {:<10} {:<10} latency {:>9} (queue {:>9}, upload {:>6}, compute {:>8}) x{}",
+            r.id,
+            r.kernel,
+            corpus[r.matrix].name,
+            r.latency,
+            r.queue_cycles,
+            r.upload_cycles,
+            r.compute_cycles,
+            r.batch_size
+        );
+    }
+}
+
+/// Parse a numeric CLI value or die with a clean message.
+fn parse_num<T: std::str::FromStr>(v: &str) -> T {
+    v.parse()
+        .unwrap_or_else(|_| die(&format!("bad numeric value {v:?}")))
 }
 
 fn kernel_demo(name: &str, variant: Variant, iw: IdxWidth) {

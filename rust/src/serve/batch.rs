@@ -1,0 +1,168 @@
+//! Same-matrix request coalescing: fold queued `smxdv` requests on one
+//! matrix into a single multi-vector `smxdm` batch.
+//!
+//! The `smxdm` kernel iterates the exact `smxdv` row body once per
+//! dense column (§3.2.1: the SSSR variant re-launches the fiber jobs
+//! with the hardware index shifter doing the power-of-two column
+//! striding), so column `j` of a coalesced batch performs the *same
+//! fmadd sequence* as the standalone `smxdv` run it replaces — results
+//! are bit-identical, which the serving tests pin. What the batch
+//! amortizes is everything *around* the per-column compute: one matrix
+//! image staged HBM→TCDM instead of one per request, and one dispatch
+//! overhead instead of N.
+//!
+//! `smxdm` requires a power-of-two column count (≤ 256), so the
+//! coalescer truncates a collected group to the largest power of two
+//! rather than padding with zero columns — padding would burn real
+//! column passes on dead work and can cost more than the staging it
+//! saves.
+
+use super::workload::Request;
+
+/// Coalescer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchCfg {
+    /// Arrival-spread bound in cycles: only queued requests whose
+    /// arrival lies within `window` of the picked request coalesce.
+    /// `0` disables batching.
+    pub window: u64,
+    /// Upper bound on requests per batch (further truncated to a power
+    /// of two; the `smxdm` contract caps columns at 256).
+    pub max_batch: usize,
+}
+
+impl BatchCfg {
+    pub fn off() -> BatchCfg {
+        BatchCfg { window: 0, max_batch: 1 }
+    }
+
+    pub fn windowed(window: u64, max_batch: usize) -> BatchCfg {
+        BatchCfg { window, max_batch: max_batch.clamp(1, 256) }
+    }
+}
+
+/// Largest power of two ≤ `n` (n ≥ 1).
+pub fn floor_pow2(n: usize) -> usize {
+    assert!(n >= 1);
+    1 << (usize::BITS - 1 - n.leading_zeros())
+}
+
+/// Collect the batch dispatched for the picked request: request ids
+/// (the pick first, then queue order) of eligible queued `smxdv`
+/// requests on the same matrix within the arrival window, truncated to
+/// a power-of-two size. Returns just the pick when batching is off or
+/// nothing coalesces.
+pub fn collect(eligible: &[usize], pos: usize, reqs: &[Request], cfg: &BatchCfg) -> Vec<usize> {
+    let head = eligible[pos];
+    let h = &reqs[head];
+    if cfg.window == 0 || cfg.max_batch <= 1 || h.kernel != "smxdv" {
+        return vec![head];
+    }
+    let mut members = vec![head];
+    for (p, &i) in eligible.iter().enumerate() {
+        if members.len() >= cfg.max_batch.min(256) {
+            break;
+        }
+        if p == pos {
+            continue;
+        }
+        let r = &reqs[i];
+        let in_window = r.arrival.abs_diff(h.arrival) <= cfg.window;
+        if r.kernel == "smxdv" && r.matrix == h.matrix && in_window {
+            members.push(i);
+        }
+    }
+    members.truncate(floor_pow2(members.len()));
+    members
+}
+
+/// Interleave per-request operand vectors into the row-major dense
+/// operand `smxdm` expects: `d[k * cols + j] = vectors[j][k]`. All
+/// vectors must share a length; `vectors.len()` must be a power of two.
+pub fn interleave(vectors: &[&[f64]]) -> Vec<f64> {
+    let cols = vectors.len();
+    assert!(cols.is_power_of_two(), "smxdm needs a power-of-two column count");
+    let n = vectors[0].len();
+    assert!(vectors.iter().all(|v| v.len() == n), "batched vectors must share a length");
+    let mut d = vec![0.0; n * cols];
+    for (j, v) in vectors.iter().enumerate() {
+        for (k, &x) in v.iter().enumerate() {
+            d[k * cols + j] = x;
+        }
+    }
+    d
+}
+
+/// Scatter a row-major `smxdm` result (`nrows * cols`) back into the
+/// per-request result vectors its columns hold.
+pub fn scatter(out: &[f64], nrows: usize, cols: usize) -> Vec<Vec<f64>> {
+    assert_eq!(out.len(), nrows * cols);
+    (0..cols)
+        .map(|j| (0..nrows).map(|i| out[i * cols + j]).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, kernel: &'static str, matrix: usize, arrival: u64) -> Request {
+        Request { id, tenant: 0, kernel, matrix, arrival, opseed: id as u64 }
+    }
+
+    #[test]
+    fn floor_pow2_boundaries() {
+        for (n, want) in [(1, 1), (2, 2), (3, 2), (4, 4), (7, 4), (8, 8), (255, 128), (256, 256)] {
+            assert_eq!(floor_pow2(n), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn collect_folds_same_matrix_requests_in_window() {
+        let reqs: Vec<Request> = vec![
+            req(0, "smxdv", 3, 100),
+            req(1, "smxdv", 3, 150),
+            req(2, "smxdv", 7, 160), // other matrix
+            req(3, "smxsv", 3, 170), // other kernel
+            req(4, "smxdv", 3, 180),
+            req(5, "smxdv", 3, 5000), // outside the window
+        ];
+        let eligible: Vec<usize> = (0..6).collect();
+        let cfg = BatchCfg::windowed(200, 16);
+        let got = collect(&eligible, 0, &reqs, &cfg);
+        // 0, 1, 4 coalesce; 3 members truncate to the 2-column batch
+        assert_eq!(got, vec![0, 1]);
+        // a fourth in-window member completes the power of two
+        let reqs2 = [&reqs[..5], &[req(6, "smxdv", 3, 190)]].concat();
+        let eligible2: Vec<usize> = (0..6).collect();
+        assert_eq!(collect(&eligible2, 0, &reqs2, &cfg), vec![0, 1, 4, 5]);
+    }
+
+    #[test]
+    fn collect_respects_off_and_non_batchable_kernels() {
+        let reqs = vec![req(0, "smxsv", 1, 0), req(1, "smxsv", 1, 1)];
+        let eligible = vec![0, 1];
+        assert_eq!(collect(&eligible, 0, &reqs, &BatchCfg::windowed(100, 8)), vec![0]);
+        let reqs = vec![req(0, "smxdv", 1, 0), req(1, "smxdv", 1, 1)];
+        assert_eq!(collect(&eligible, 0, &reqs, &BatchCfg::off()), vec![0]);
+    }
+
+    #[test]
+    fn collect_honors_max_batch() {
+        let reqs: Vec<Request> = (0..10).map(|i| req(i, "smxdv", 0, i as u64)).collect();
+        let eligible: Vec<usize> = (0..10).collect();
+        let got = collect(&eligible, 0, &reqs, &BatchCfg::windowed(1000, 4));
+        assert_eq!(got.len(), 4);
+    }
+
+    #[test]
+    fn interleave_scatter_roundtrip() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        let d = interleave(&[&a, &b]);
+        assert_eq!(d, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        let back = scatter(&d, 3, 2);
+        assert_eq!(back[0], a.to_vec());
+        assert_eq!(back[1], b.to_vec());
+    }
+}

@@ -1,0 +1,196 @@
+//! The per-cluster HBM-resident operand cache.
+//!
+//! Every cluster of the serving system owns `shard_bytes` of the shared
+//! HBM (the same per-cluster shard the row-sharded kernels use, see
+//! [`crate::sim::SystemCfg`]). The serving engine keeps recently used
+//! operand images — the DMA-ready `vals`/`idcs`/`ptrs` (CSR) or
+//! two-level fiber (CSF) layouts a kernel run streams from — resident
+//! in that shard, keyed by corpus matrix id and format. A hit means a
+//! repeat request skips the host→HBM image build entirely; a miss pays
+//! the upload burst and LRU-evicts colder images until the new one
+//! fits.
+
+use crate::formats::{Csf, Csr};
+use crate::kernels::IdxWidth;
+
+/// Which operand image format a cache entry holds (one matrix may be
+/// resident in both: `smxdv`/`smxsv`/`tricnt` stream the CSR image,
+/// `smxsm_csf` the CSF one).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Form {
+    Csr,
+    Csf,
+}
+
+/// Bytes of the DMA-ready CSR image of `m` at index width `iw`
+/// (values + indices + 32-bit row pointers).
+pub fn csr_image_bytes(m: &Csr, iw: IdxWidth) -> u64 {
+    m.nnz() as u64 * (8 + iw.bytes()) + (m.nrows as u64 + 1) * 4
+}
+
+/// Bytes of the two-level CSF image of `t` at index width `iw`
+/// (leaf values + leaf indices + level-0 row ids and 32-bit pointers).
+pub fn csf_image_bytes(t: &Csf, iw: IdxWidth) -> u64 {
+    t.nnz() as u64 * (8 + iw.bytes()) + t.nfibers() as u64 * iw.bytes()
+        + (t.nfibers() as u64 + 1) * 4
+}
+
+/// Hit/miss/traffic accounting of one cluster's operand cache.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Host→HBM bytes paid by misses (the image builds skipped on hits).
+    pub upload_bytes: u64,
+}
+
+struct Entry {
+    matrix: usize,
+    form: Form,
+    bytes: u64,
+    last_use: u64,
+}
+
+/// LRU operand cache over one cluster's HBM shard.
+pub struct OperandCache {
+    cap: u64,
+    used: u64,
+    tick: u64,
+    entries: Vec<Entry>,
+    pub stats: CacheStats,
+}
+
+impl OperandCache {
+    pub fn new(cap_bytes: u64) -> OperandCache {
+        OperandCache {
+            cap: cap_bytes,
+            used: 0,
+            tick: 0,
+            entries: vec![],
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Whether any image of `matrix` is resident (the cache-affinity
+    /// scheduler's routing signal).
+    pub fn contains_matrix(&self, matrix: usize) -> bool {
+        self.entries.iter().any(|e| e.matrix == matrix)
+    }
+
+    /// Bytes currently resident.
+    pub fn resident_bytes(&self) -> u64 {
+        self.used
+    }
+
+    /// Access the image of (`matrix`, `form`) sized `bytes`. Returns
+    /// `true` on a hit (image already resident, upload skipped). On a
+    /// miss the image is uploaded (accounted in
+    /// [`CacheStats::upload_bytes`]) and inserted, LRU-evicting colder
+    /// images until it fits; an image larger than the whole shard is
+    /// never retained (every access stays a miss).
+    pub fn touch(&mut self, matrix: usize, form: Form, bytes: u64) -> bool {
+        self.tick += 1;
+        if let Some(e) = self
+            .entries
+            .iter_mut()
+            .find(|e| e.matrix == matrix && e.form == form)
+        {
+            e.last_use = self.tick;
+            self.stats.hits += 1;
+            return true;
+        }
+        self.stats.misses += 1;
+        self.stats.upload_bytes += bytes;
+        if bytes > self.cap {
+            return false;
+        }
+        while self.used + bytes > self.cap {
+            let (victim, _) = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_use)
+                .expect("used > 0 implies a resident entry");
+            self.used -= self.entries[victim].bytes;
+            self.entries.swap_remove(victim);
+            self.stats.evictions += 1;
+        }
+        self.used += bytes;
+        self.entries.push(Entry { matrix, form, bytes, last_use: self.tick });
+        false
+    }
+
+    /// Account a cache-bypassing access (engine running with the cache
+    /// disabled): every dispatch re-uploads its image.
+    pub fn bypass(&mut self, bytes: u64) {
+        self.stats.misses += 1;
+        self.stats.upload_bytes += bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen;
+
+    #[test]
+    fn image_sizes_count_every_array() {
+        let m = matgen::random_csr(1, 10, 16, 40);
+        // 40 * (8 + 2) + 11 * 4
+        assert_eq!(csr_image_bytes(&m, IdxWidth::U16), 444);
+        let t = crate::formats::Csf::from_csr(&m);
+        let want = t.nnz() as u64 * 10 + t.nfibers() as u64 * 2 + (t.nfibers() as u64 + 1) * 4;
+        assert_eq!(csf_image_bytes(&t, IdxWidth::U16), want);
+    }
+
+    #[test]
+    fn repeat_touches_hit_and_skip_upload() {
+        let mut c = OperandCache::new(1000);
+        assert!(!c.touch(0, Form::Csr, 400));
+        assert!(c.touch(0, Form::Csr, 400));
+        assert!(c.touch(0, Form::Csr, 400));
+        // same matrix, other format: its own image, its own miss
+        assert!(!c.touch(0, Form::Csf, 300));
+        assert_eq!(c.stats.hits, 2);
+        assert_eq!(c.stats.misses, 2);
+        assert_eq!(c.stats.upload_bytes, 700);
+        assert_eq!(c.resident_bytes(), 700);
+        assert!(c.contains_matrix(0));
+        assert!(!c.contains_matrix(1));
+    }
+
+    #[test]
+    fn lru_evicts_coldest_first() {
+        let mut c = OperandCache::new(1000);
+        c.touch(0, Form::Csr, 400); // tick 1
+        c.touch(1, Form::Csr, 400); // tick 2
+        c.touch(0, Form::Csr, 400); // tick 3: 0 is now warmer than 1
+        c.touch(2, Form::Csr, 400); // must evict 1
+        assert_eq!(c.stats.evictions, 1);
+        assert!(c.contains_matrix(0) && c.contains_matrix(2));
+        assert!(!c.contains_matrix(1));
+        // re-touching the evicted image is a miss again
+        assert!(!c.touch(1, Form::Csr, 400));
+    }
+
+    #[test]
+    fn oversized_images_are_never_retained() {
+        let mut c = OperandCache::new(100);
+        assert!(!c.touch(0, Form::Csr, 500));
+        assert!(!c.touch(0, Form::Csr, 500));
+        assert_eq!(c.resident_bytes(), 0);
+        assert_eq!(c.stats.misses, 2);
+        assert_eq!(c.stats.evictions, 0);
+    }
+
+    #[test]
+    fn bypass_counts_misses_without_residency() {
+        let mut c = OperandCache::new(1000);
+        c.bypass(250);
+        c.bypass(250);
+        assert_eq!(c.stats.misses, 2);
+        assert_eq!(c.stats.upload_bytes, 500);
+        assert!(!c.contains_matrix(0));
+    }
+}

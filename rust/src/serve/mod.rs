@@ -1,0 +1,59 @@
+//! The sparse serving engine: simulated-time request streams over the
+//! kernel registry.
+//!
+//! The paper's headline system claim (§7) is about *sustained*
+//! operation — peak FP utilization "even when accounting for off-chip
+//! main memory (HBM) and on-chip interconnect latency and bandwidth
+//! effects" — yet a figure sweep only ever measures cold one-shot
+//! kernel runs. This subsystem turns the repository into a system you
+//! can load-test: a multi-tenant serving engine in which seeded
+//! open-loop request streams issue registry kernels (`smxdv`, `smxsv`,
+//! `smxsm_csf`, `tricnt`) against a named matrix corpus, and an event
+//! loop advances *simulated time* from the cycle reports of real
+//! [`crate::kernels::api::execute`] runs plus the shared HBM burst
+//! timing model ([`crate::sim::mem`]).
+//!
+//! Structure:
+//!
+//! - [`workload`] — deterministic request streams: a named corpus
+//!   (matgen constructions, optionally Matrix Market files), tenant
+//!   mixes, seeded exponential inter-arrival times, and capability
+//!   validation against the kernel registry;
+//! - [`cache`] — the per-cluster HBM-resident operand cache: matrix
+//!   images keyed by corpus id, LRU-evicted inside each cluster's
+//!   `shard_bytes`, with hit/miss/eviction/upload accounting — a repeat
+//!   request skips the host→HBM image build;
+//! - [`batch`] — the same-matrix coalescer: queued `smxdv` requests on
+//!   one matrix inside a bounded arrival window fold into a single
+//!   multi-vector `smxdm` batch (power-of-two columns, per the kernel's
+//!   §3.2.1 contract) whose per-column results scatter back
+//!   bit-identically to the per-request runs they replace;
+//! - [`sched`] — pluggable dispatch policies: FIFO, nnz-estimated
+//!   shortest-job-first, and cache-affinity routing to the cluster
+//!   already holding the operand image;
+//! - [`engine`] — the discrete-event loop: per-request latency
+//!   breakdowns (queue + upload + stage + compute), p50/p95/p99
+//!   latency in cycles, throughput in matrix nonzeros per cycle,
+//!   per-cluster utilization, cache hit rates, and per-request energy
+//!   via [`crate::model::energy::EnergyModel`].
+//!
+//! The `serve` experiment sweep ([`crate::harness::spec_serve`]) grids
+//! policy × clusters × arrival rate × batch window × cache on/off
+//! through the parallel [`crate::experiments::Runner`] (each grid point
+//! is one single-threaded engine run seeded from its coordinates, so
+//! `BENCH_serve.json` is `--jobs`-invariant), and the `repro serve`
+//! CLI drives one configuration interactively.
+
+pub mod batch;
+pub mod cache;
+pub mod engine;
+pub mod sched;
+pub mod workload;
+
+pub use batch::BatchCfg;
+pub use cache::{CacheStats, Form, OperandCache};
+pub use engine::{run_serve, RequestOutcome, ServeCfg, ServeOutcome, ServeSummary};
+pub use sched::Policy;
+pub use workload::{
+    gen_stream, serve_corpus, validate_stream, Request, ServeMatrix, StreamCfg, TenantSpec,
+};

@@ -1,0 +1,168 @@
+//! Pluggable dispatch policies for the serving engine.
+//!
+//! The engine offers a policy the *eligible* queue slice (requests that
+//! have arrived by the dispatch instant, in arrival order) plus the
+//! serving cluster's operand cache, and the policy answers with the
+//! position to dispatch. All tie-breaks are deterministic (queue
+//! position), so an engine run is a pure function of its seeds.
+
+use super::cache::OperandCache;
+use super::workload::{Request, ServeMatrix};
+
+/// Which request a freed cluster serves next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Strict arrival order.
+    Fifo,
+    /// Shortest job first, estimated by the request matrix's nonzero
+    /// count (the dominant cost term of every served kernel); ties in
+    /// arrival order. Cuts mean latency, risks starving heavy tenants.
+    Sjf,
+    /// Cache affinity: prefer (in arrival order) a request whose matrix
+    /// image is already resident in this cluster's cache; fall back to
+    /// FIFO. Keeps hot matrices pinned to the cluster that first
+    /// touched them instead of spreading their uploads everywhere. An
+    /// aging guard bounds the preference: only requests arriving within
+    /// [`AFFINITY_REORDER_WINDOW`] of the oldest waiter may jump it, so
+    /// cold-matrix requests cannot starve behind a persistent hot queue.
+    Affinity,
+}
+
+/// Aging guard of [`Policy::Affinity`]: how far (in arrival cycles)
+/// behind the oldest waiter a resident-matrix request may be and still
+/// be served first.
+pub const AFFINITY_REORDER_WINDOW: u64 = 16_000;
+
+impl Policy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::Sjf => "sjf",
+            Policy::Affinity => "affinity",
+        }
+    }
+
+    /// Parse a CLI policy spec.
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "fifo" => Some(Policy::Fifo),
+            "sjf" => Some(Policy::Sjf),
+            "affinity" => Some(Policy::Affinity),
+            _ => None,
+        }
+    }
+
+    /// All policies, for sweeps and help text.
+    pub const ALL: [Policy; 3] = [Policy::Fifo, Policy::Sjf, Policy::Affinity];
+
+    /// Pick the position in `eligible` (non-empty, arrival-ordered
+    /// request ids) that the cluster owning `cache` dispatches next.
+    pub fn pick(
+        self,
+        eligible: &[usize],
+        reqs: &[Request],
+        corpus: &[ServeMatrix],
+        cache: &OperandCache,
+    ) -> usize {
+        assert!(!eligible.is_empty(), "policy consulted with an empty queue");
+        match self {
+            Policy::Fifo => 0,
+            Policy::Sjf => {
+                let mut best = 0usize;
+                let mut best_nnz = corpus[reqs[eligible[0]].matrix].matrix.nnz();
+                for (p, &i) in eligible.iter().enumerate().skip(1) {
+                    let nnz = corpus[reqs[i].matrix].matrix.nnz();
+                    if nnz < best_nnz {
+                        best = p;
+                        best_nnz = nnz;
+                    }
+                }
+                best
+            }
+            Policy::Affinity => {
+                let horizon = reqs[eligible[0]].arrival + AFFINITY_REORDER_WINDOW;
+                eligible
+                    .iter()
+                    .take_while(|&&i| reqs[i].arrival <= horizon)
+                    .position(|&i| cache.contains_matrix(reqs[i].matrix))
+                    .unwrap_or(0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::cache::Form;
+    use super::*;
+    use crate::matgen;
+
+    fn corpus() -> Vec<ServeMatrix> {
+        vec![
+            ServeMatrix {
+                name: "big".into(),
+                matrix: matgen::random_csr(1, 64, 64, 800),
+                graph: false,
+            },
+            ServeMatrix {
+                name: "small".into(),
+                matrix: matgen::random_csr(2, 64, 64, 100),
+                graph: false,
+            },
+        ]
+    }
+
+    fn req(id: usize, matrix: usize, arrival: u64) -> Request {
+        Request { id, tenant: 0, kernel: "smxdv", matrix, arrival, opseed: 0 }
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::parse(p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("lifo"), None);
+    }
+
+    #[test]
+    fn fifo_takes_the_front() {
+        let c = corpus();
+        let reqs = vec![req(0, 0, 0), req(1, 1, 1)];
+        let cache = OperandCache::new(1 << 20);
+        assert_eq!(Policy::Fifo.pick(&[0, 1], &reqs, &c, &cache), 0);
+    }
+
+    #[test]
+    fn sjf_prefers_the_smaller_matrix() {
+        let c = corpus();
+        let reqs = vec![req(0, 0, 0), req(1, 1, 1), req(2, 1, 2)];
+        let cache = OperandCache::new(1 << 20);
+        // matrix 1 is the small one; earliest small request wins the tie
+        assert_eq!(Policy::Sjf.pick(&[0, 1, 2], &reqs, &c, &cache), 1);
+    }
+
+    #[test]
+    fn affinity_routes_to_the_resident_matrix() {
+        let c = corpus();
+        let reqs = vec![req(0, 0, 0), req(1, 1, 1)];
+        let mut cache = OperandCache::new(1 << 20);
+        // nothing resident: falls back to FIFO
+        assert_eq!(Policy::Affinity.pick(&[0, 1], &reqs, &c, &cache), 0);
+        cache.touch(1, Form::Csr, 100);
+        assert_eq!(Policy::Affinity.pick(&[0, 1], &reqs, &c, &cache), 1);
+    }
+
+    #[test]
+    fn affinity_aging_guard_prevents_starvation() {
+        let c = corpus();
+        // the resident-matrix request arrived far after the oldest
+        // waiter: the aging guard forces FIFO order
+        let reqs = vec![req(0, 0, 0), req(1, 1, AFFINITY_REORDER_WINDOW + 1)];
+        let mut cache = OperandCache::new(1 << 20);
+        cache.touch(1, Form::Csr, 100);
+        assert_eq!(Policy::Affinity.pick(&[0, 1], &reqs, &c, &cache), 0);
+        // inside the window the resident request still jumps ahead
+        let reqs = vec![req(0, 0, 0), req(1, 1, AFFINITY_REORDER_WINDOW - 1)];
+        assert_eq!(Policy::Affinity.pick(&[0, 1], &reqs, &c, &cache), 1);
+    }
+}

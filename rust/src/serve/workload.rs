@@ -1,0 +1,344 @@
+//! Deterministic serving workloads: the named matrix corpus, tenant
+//! mixes, and seeded open-loop request streams.
+//!
+//! A stream is *open-loop*: arrival cycles come from a seeded
+//! exponential inter-arrival process and never react to completions, so
+//! an overloaded configuration visibly builds queue — the regime the
+//! scheduler/batching comparisons of `spec_serve` are about. Everything
+//! derives from seeds ([`crate::util::Pcg`]), so the same
+//! [`StreamCfg`] always produces the same requests, independent of
+//! host-thread parallelism.
+
+use crate::formats::Csr;
+use crate::kernels::api::{self, TargetKind};
+use crate::kernels::{IdxWidth, Variant};
+use crate::matgen;
+use crate::util::Pcg;
+
+/// One named matrix of the serving corpus.
+pub struct ServeMatrix {
+    pub name: String,
+    pub matrix: Csr,
+    /// Whether the matrix is a simple undirected graph adjacency
+    /// (symmetric 0/1 pattern, zero diagonal) — the operand contract of
+    /// the graph kernels (`tricnt`).
+    pub graph: bool,
+}
+
+impl ServeMatrix {
+    /// Load a corpus entry from a Matrix Market file (SuiteSparse
+    /// download format). Loaded matrices are served by the matrix
+    /// kernels only (`graph: false`); graph tenants keep their exact
+    /// generator-built adjacencies.
+    pub fn from_mtx(name: &str, path: &std::path::Path) -> Result<ServeMatrix, String> {
+        let matrix = matgen::load_mtx(path)?;
+        Ok(ServeMatrix { name: name.to_string(), matrix, graph: false })
+    }
+}
+
+/// The default serving corpus: small enough that one engine run stays
+/// in the quick-sweep budget, varied enough to exercise every request
+/// kind. Entry 0 is the "hot" matrix the same-matrix-heavy tenant
+/// hammers.
+pub fn serve_corpus() -> Vec<ServeMatrix> {
+    let mk = |name: &str, matrix: Csr, graph: bool| ServeMatrix {
+        name: name.to_string(),
+        matrix,
+        graph,
+    };
+    vec![
+        mk("hot4k", matgen::random_csr(0xA1, 512, 512, 4096), false),
+        mk("rand2k", matgen::random_csr(0xA2, 400, 512, 2048), false),
+        mk("band300", matgen::banded(0xA3, 300, 5), false),
+        mk("stencil24", matgen::stencil2d(24, 24), false),
+        mk("rmat7u", matgen::undirected_graph(0xA4, 7, 4), true),
+        // mycielskian: symmetric zero-diagonal pattern — tricnt places
+        // its own unit values, so the deterministic value jitter is fine
+        mk("myc7", matgen::mycielskian(7), true),
+    ]
+}
+
+/// One tenant of the multi-tenant mix: a kernel, the corpus entries it
+/// queries, its share of the request stream, and how many distinct
+/// operand vectors it cycles through (real query mixes repeat).
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: &'static str,
+    /// Registry kernel this tenant issues (`smxdv`, `smxsv`,
+    /// `smxsm_csf`, `tricnt`).
+    pub kernel: &'static str,
+    /// Corpus indices this tenant queries (uniformly).
+    pub matrices: Vec<usize>,
+    /// Relative share of the request stream.
+    pub weight: u32,
+    /// Size of the tenant's operand-seed pool (≥ 1).
+    pub vec_pool: u32,
+}
+
+/// An open-loop request stream description.
+#[derive(Clone, Debug)]
+pub struct StreamCfg {
+    pub seed: u64,
+    pub requests: usize,
+    /// Mean inter-arrival gap in cycles (exponentially distributed).
+    pub mean_gap: f64,
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl StreamCfg {
+    /// The canonical same-matrix-heavy mix over [`serve_corpus`]:
+    /// `hot_pct` % of requests are `smxdv` against corpus entry 0, the
+    /// rest spread over SpMV/SpMSpV on the cold matrices plus graph
+    /// and CSF-tensor traffic.
+    pub fn same_matrix_heavy(seed: u64, requests: usize, mean_gap: f64, hot_pct: u32) -> StreamCfg {
+        assert!(hot_pct <= 90, "leave room for the background tenants");
+        StreamCfg {
+            seed,
+            requests,
+            mean_gap,
+            tenants: vec![
+                TenantSpec {
+                    name: "hot",
+                    kernel: "smxdv",
+                    matrices: vec![0],
+                    weight: hot_pct,
+                    vec_pool: 4,
+                },
+                TenantSpec {
+                    name: "mixed",
+                    kernel: "smxdv",
+                    matrices: vec![1, 2, 3],
+                    weight: (100 - hot_pct) / 2,
+                    vec_pool: 4,
+                },
+                TenantSpec {
+                    name: "spmspv",
+                    kernel: "smxsv",
+                    matrices: vec![1, 3],
+                    weight: (100 - hot_pct) / 4,
+                    vec_pool: 4,
+                },
+                TenantSpec {
+                    name: "graph",
+                    kernel: "tricnt",
+                    matrices: vec![4, 5],
+                    weight: (100 - hot_pct) / 8,
+                    vec_pool: 1,
+                },
+                TenantSpec {
+                    name: "tensor",
+                    kernel: "smxsm_csf",
+                    matrices: vec![4],
+                    weight: (100 - hot_pct) - (100 - hot_pct) / 2 - (100 - hot_pct) / 4
+                        - (100 - hot_pct) / 8,
+                    vec_pool: 1,
+                },
+            ],
+        }
+    }
+}
+
+/// One serving request: which tenant issues which kernel against which
+/// corpus matrix, arriving at which simulated cycle, with which operand
+/// seed (shared inside the tenant's pool, so repeated queries repeat).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: usize,
+    pub tenant: usize,
+    pub kernel: &'static str,
+    pub matrix: usize,
+    pub arrival: u64,
+    pub opseed: u64,
+}
+
+/// Generate the request stream of `cfg`: arrival cycles are the running
+/// sum of seeded exponential gaps; tenant, matrix, and operand-pool
+/// slot draws all come from the same [`Pcg`]. Arrivals are
+/// nondecreasing.
+pub fn gen_stream(cfg: &StreamCfg, corpus: &[ServeMatrix]) -> Vec<Request> {
+    // corpus is reserved for future density-aware generators; matrix
+    // indices are data here and get checked by `validate_stream`
+    // before anything is served
+    let _ = corpus;
+    assert!(!cfg.tenants.is_empty(), "a stream needs at least one tenant");
+    let total_w: u64 = cfg.tenants.iter().map(|t| t.weight as u64).sum();
+    assert!(total_w > 0, "tenant weights sum to zero");
+    let mut r = Pcg::new(cfg.seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.requests);
+    for id in 0..cfg.requests {
+        t += -cfg.mean_gap * (1.0 - r.f64()).ln();
+        let mut w = r.below(total_w);
+        let mut ti = 0usize;
+        for (i, ten) in cfg.tenants.iter().enumerate() {
+            if w < ten.weight as u64 {
+                ti = i;
+                break;
+            }
+            w -= ten.weight as u64;
+        }
+        let ten = &cfg.tenants[ti];
+        let matrix = ten.matrices[r.below(ten.matrices.len() as u64) as usize];
+        let slot = r.below(ten.vec_pool.max(1) as u64);
+        // pool seeds are stream-seed-independent so the engine's
+        // compute memo keys stay stable across arrival-rate sweeps
+        let opseed = 0xC0FFEE00 + 64 * ti as u64 + slot;
+        out.push(Request {
+            id,
+            tenant: ti,
+            kernel: ten.kernel,
+            matrix,
+            arrival: t as u64,
+            opseed,
+        });
+    }
+    out
+}
+
+/// Validate a stream against the kernel registry's capability metadata
+/// (the reason `repro kernel --list` prints targets/widths/variants):
+/// every issued kernel must exist, run on the single-CC target with the
+/// configured variant and index width, and receive operands its
+/// contract accepts (graph kernels need graph adjacencies; batching
+/// needs the `smxdm` kernel). Returns a one-line error per violation.
+pub fn validate_stream(
+    reqs: &[Request],
+    corpus: &[ServeMatrix],
+    variant: Variant,
+    iw: IdxWidth,
+    batching: bool,
+) -> Result<(), String> {
+    let check_kernel = |name: &'static str| -> Result<(), String> {
+        let k = api::kernel(name).ok_or_else(|| format!("kernel {name:?} not in registry"))?;
+        if !k.targets().contains(&TargetKind::SingleCc) {
+            return Err(format!("kernel {name} does not run on the single-cc target"));
+        }
+        if !k.variants_for(TargetKind::SingleCc).contains(&variant) {
+            return Err(format!("kernel {name} has no {} variant", variant.name()));
+        }
+        if !k.widths().contains(&iw) {
+            return Err(format!("kernel {name} does not support {}-bit indices", iw.name()));
+        }
+        Ok(())
+    };
+    let mut seen: Vec<&'static str> = vec![];
+    for r in reqs {
+        if !seen.contains(&r.kernel) {
+            check_kernel(r.kernel)?;
+            seen.push(r.kernel);
+        }
+        let m = corpus
+            .get(r.matrix)
+            .ok_or_else(|| format!("request {}: matrix index {} out of corpus", r.id, r.matrix))?;
+        let max_dim = m.matrix.nrows.max(m.matrix.ncols) as u64;
+        if max_dim > iw.max() + 1 {
+            return Err(format!(
+                "request {}: matrix {} ({} rows/cols) exceeds the {}-bit index range",
+                r.id, m.name, max_dim, iw.name()
+            ));
+        }
+        if r.kernel == "tricnt" && !m.graph {
+            return Err(format!(
+                "request {}: tricnt needs a graph adjacency, {} is not one",
+                r.id, m.name
+            ));
+        }
+    }
+    if batching && seen.contains(&"smxdv") {
+        check_kernel("smxdm")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_well_formed() {
+        let c = serve_corpus();
+        assert!(c.len() >= 5);
+        for e in &c {
+            e.matrix.validate().unwrap();
+            assert!(e.matrix.nrows.max(e.matrix.ncols) <= 1 + u16::MAX as usize);
+        }
+        assert!(c.iter().filter(|e| e.graph).count() >= 2);
+        assert_eq!(c[0].name, "hot4k");
+    }
+
+    #[test]
+    fn stream_is_deterministic_and_monotone() {
+        let corpus = serve_corpus();
+        let cfg = StreamCfg::same_matrix_heavy(7, 64, 1000.0, 60);
+        let a = gen_stream(&cfg, &corpus);
+        let b = gen_stream(&cfg, &corpus);
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                (x.id, x.tenant, x.kernel, x.matrix, x.arrival, x.opseed),
+                (y.id, y.tenant, y.kernel, y.matrix, y.arrival, y.opseed)
+            );
+        }
+        for w in a.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival, "arrivals must be nondecreasing");
+        }
+        // the hot tenant dominates the mix
+        let hot = a.iter().filter(|r| r.tenant == 0).count();
+        assert!(hot * 100 >= 64 * 40, "hot share collapsed: {hot}/64");
+        validate_stream(&a, &corpus, Variant::Sssr, IdxWidth::U16, true).unwrap();
+    }
+
+    #[test]
+    fn tenant_weights_cover_the_whole_stream() {
+        let cfg = StreamCfg::same_matrix_heavy(1, 10, 100.0, 60);
+        let w: u32 = cfg.tenants.iter().map(|t| t.weight).sum();
+        assert_eq!(w, 100, "tenant weights must sum to 100");
+    }
+
+    #[test]
+    fn validate_rejects_capability_violations() {
+        let corpus = serve_corpus();
+        let req = |kernel: &'static str, matrix: usize| Request {
+            id: 0,
+            tenant: 0,
+            kernel,
+            matrix,
+            arrival: 0,
+            opseed: 1,
+        };
+        // unknown kernel
+        assert!(validate_stream(&[req("nope", 0)], &corpus, Variant::Sssr, IdxWidth::U16, false)
+            .is_err());
+        // smxsv has no SSR variant
+        assert!(validate_stream(&[req("smxsv", 0)], &corpus, Variant::Ssr, IdxWidth::U16, false)
+            .is_err());
+        // 512-column matrices do not fit 8-bit indices
+        assert!(validate_stream(&[req("smxdv", 0)], &corpus, Variant::Sssr, IdxWidth::U8, false)
+            .is_err());
+        // tricnt on a non-graph matrix
+        assert!(validate_stream(&[req("tricnt", 0)], &corpus, Variant::Sssr, IdxWidth::U16, false)
+            .is_err());
+        // matrix index out of range
+        assert!(validate_stream(&[req("smxdv", 99)], &corpus, Variant::Sssr, IdxWidth::U16, false)
+            .is_err());
+        // a valid graph request passes
+        validate_stream(&[req("tricnt", 4)], &corpus, Variant::Sssr, IdxWidth::U16, true).unwrap();
+    }
+
+    #[test]
+    fn mtx_corpus_entries_load_from_disk() {
+        let dir = std::env::temp_dir().join("sssr_serve_mtx");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n2 2 2.0\n",
+        )
+        .unwrap();
+        let e = ServeMatrix::from_mtx("tiny", &path).unwrap();
+        assert_eq!((e.matrix.nrows, e.matrix.nnz()), (2, 2));
+        assert!(!e.graph);
+        assert!(ServeMatrix::from_mtx("missing", &dir.join("gone.mtx")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

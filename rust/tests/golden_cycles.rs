@@ -57,7 +57,19 @@ fn golden_cycle_counts_are_pinned() {
     let rendered = render(&rows);
     let path = snapshot_path();
     let bless = std::env::var("GOLDEN_BLESS").map(|v| v == "1").unwrap_or(false);
+    // CI sets GOLDEN_REQUIRE=1: there a missing snapshot is a loud
+    // failure, not a silent self-record — an unarmed guard on a fresh
+    // checkout means the snapshot was never committed.
+    let require = std::env::var("GOLDEN_REQUIRE").map(|v| v == "1").unwrap_or(false);
     let pinned = std::fs::read_to_string(&path).ok();
+    if pinned.is_none() && require && !bless {
+        panic!(
+            "golden snapshot {} is missing but GOLDEN_REQUIRE=1 (CI): the \
+             cycle-count guard is unarmed. Run `cargo test -q` locally and \
+             commit the self-recorded rust/tests/golden_cycles.snap.",
+            path.display()
+        );
+    }
     match pinned {
         Some(pinned) if !bless => {
             if pinned == rendered {

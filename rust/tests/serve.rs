@@ -1,0 +1,179 @@
+//! Serving-engine integration tests: determinism of the `serve` sweep
+//! records across `--jobs`, bit-identity of coalesced `smxdm` batches
+//! vs the per-request `smxdv` runs they replace, and the acceptance
+//! regression pinning that batching + cache-affinity beats unbatched
+//! FIFO on a same-matrix-heavy stream (the ordering `BENCH_serve.json`
+//! reports).
+
+use sssr::experiments::Runner;
+use sssr::harness::{self, ServeCombo, SERVE_HOT_PCT, SERVE_MAX_BATCH, SERVE_SEED, SERVE_WINDOW};
+use sssr::kernels::api::{must_execute, ExecCfg, Operand};
+use sssr::kernels::{IdxWidth, Variant};
+use sssr::matgen;
+use sssr::serve::{self, batch, Policy, ServeCfg, StreamCfg};
+
+/// Differential: a coalesced `smxdm` batch returns bit-identical
+/// columns to the standalone `smxdv` runs it replaces (both variants).
+/// This is the contract that lets the serving engine batch without
+/// changing any tenant-visible number.
+#[test]
+fn smxdm_batch_bit_identical_to_smxdv_runs() {
+    let m = matgen::random_csr(0xB0, 48, 64, 320);
+    let vecs: Vec<Vec<f64>> = (0..4u64).map(|j| matgen::random_dense(0xB1 + j, 64)).collect();
+    let cfg = ExecCfg::single_cc();
+    for variant in [Variant::Base, Variant::Sssr] {
+        let singles: Vec<Vec<f64>> = vecs
+            .iter()
+            .map(|b| {
+                let ops = [Operand::Csr(&m), Operand::Dense(b)];
+                must_execute("smxdv", variant, IdxWidth::U16, &ops, &cfg)
+                    .output
+                    .as_dense()
+                    .unwrap()
+                    .to_vec()
+            })
+            .collect();
+        let refs: Vec<&[f64]> = vecs.iter().map(|v| v.as_slice()).collect();
+        let d = batch::interleave(&refs);
+        let ops = [Operand::Csr(&m), Operand::Dense(&d), Operand::Scalar(2)];
+        let run = must_execute("smxdm", variant, IdxWidth::U16, &ops, &cfg);
+        let cols = batch::scatter(run.output.as_dense().unwrap(), m.nrows, 4);
+        for (j, (got, want)) in cols.iter().zip(&singles).enumerate() {
+            assert_eq!(got.len(), want.len());
+            for (i, (a, b)) in got.iter().zip(want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{variant:?}: batch column {j} differs from its smxdv run at row {i}"
+                );
+            }
+        }
+    }
+}
+
+/// Engine-level differential: serving the same stream with batching on
+/// vs off yields bit-identical per-request results — coalescing changes
+/// timing only.
+#[test]
+fn engine_batching_preserves_results_bitwise() {
+    let corpus = serve::serve_corpus();
+    let stream = StreamCfg::same_matrix_heavy(SERVE_SEED, 32, 1500.0, SERVE_HOT_PCT);
+    let reqs = serve::gen_stream(&stream, &corpus);
+    let unbatched = serve::run_serve(&ServeCfg::new(2, 1), &corpus, &reqs).unwrap();
+    let batched = serve::run_serve(
+        &ServeCfg::new(2, 1).batched(SERVE_WINDOW, SERVE_MAX_BATCH),
+        &corpus,
+        &reqs,
+    )
+    .unwrap();
+    assert!(
+        batched.summary.batches > 0,
+        "the overloaded hot stream must actually coalesce"
+    );
+    assert!(batched.summary.batched_requests >= 2 * batched.summary.batches);
+    for (a, b) in unbatched.requests.iter().zip(&batched.requests) {
+        assert_eq!(a.id, b.id);
+        match (&a.result, &b.result) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(x.len(), y.len(), "request {}", a.id);
+                for (i, (p, q)) in x.iter().zip(y).enumerate() {
+                    assert_eq!(
+                        p.to_bits(),
+                        q.to_bits(),
+                        "request {} result diverged at row {i}",
+                        a.id
+                    );
+                }
+            }
+            _ => panic!("request {}: result presence diverged", a.id),
+        }
+    }
+}
+
+/// Acceptance regression: on the same-matrix-heavy stream, the batching
+/// + cache-affinity configuration beats unbatched FIFO on both p95
+/// simulated-cycle latency and nnz/cycle throughput. The two
+/// configurations are exactly the quick-grid rows
+/// `fifo/c2/g1500/w0/cache` and `affinity/c2/g1500/w32000/cache` of
+/// `spec_serve`, so this pins the ordering `BENCH_serve.json` records.
+#[test]
+fn batched_affinity_beats_unbatched_fifo() {
+    let corpus = serve::serve_corpus();
+    let stream =
+        StreamCfg::same_matrix_heavy(SERVE_SEED, harness::serve_requests(), 1500.0, SERVE_HOT_PCT);
+    let reqs = serve::gen_stream(&stream, &corpus);
+    let fifo = serve::run_serve(&ServeCfg::new(2, 1).policy(Policy::Fifo), &corpus, &reqs)
+        .unwrap()
+        .summary;
+    let best = serve::run_serve(
+        &ServeCfg::new(2, 1)
+            .policy(Policy::Affinity)
+            .batched(SERVE_WINDOW, SERVE_MAX_BATCH),
+        &corpus,
+        &reqs,
+    )
+    .unwrap()
+    .summary;
+    assert!(
+        best.p95_latency < fifo.p95_latency,
+        "batched affinity p95 {} must beat unbatched FIFO p95 {}",
+        best.p95_latency,
+        fifo.p95_latency
+    );
+    assert!(
+        best.throughput_nnz > fifo.throughput_nnz,
+        "batched affinity throughput {} must beat unbatched FIFO {}",
+        best.throughput_nnz,
+        fifo.throughput_nnz
+    );
+    // the mechanism: strictly less simulated time for the same work
+    assert!(best.makespan < fifo.makespan);
+    assert!(best.batches > 0);
+}
+
+/// `BENCH_serve.json` determinism: the same seed produces byte-identical
+/// record lines for every `--jobs` (the experiment-engine guarantee,
+/// exercised end to end through the serving engine).
+#[test]
+fn serve_records_are_jobs_invariant() {
+    let combos = || {
+        vec![
+            ServeCombo {
+                policy: Policy::Fifo,
+                clusters: 2,
+                mean_gap: 2000.0,
+                window: 0,
+                cache: true,
+            },
+            ServeCombo {
+                policy: Policy::Affinity,
+                clusters: 2,
+                mean_gap: 2000.0,
+                window: SERVE_WINDOW,
+                cache: true,
+            },
+            ServeCombo {
+                policy: Policy::Sjf,
+                clusters: 3,
+                mean_gap: 2500.0,
+                window: 0,
+                cache: false,
+            },
+        ]
+    };
+    let lines = |jobs: usize| -> Vec<String> {
+        let spec = harness::spec_serve_with(16, combos());
+        Runner::new(jobs)
+            .run(&spec)
+            .iter()
+            .map(|r| r.to_json_line())
+            .collect()
+    };
+    let serial = lines(1);
+    let par = lines(4);
+    assert_eq!(serial.len(), 3);
+    assert_eq!(serial, par, "BENCH_serve records must not depend on --jobs");
+    // and the whole pipeline is deterministic run to run
+    assert_eq!(serial, lines(2));
+}
