@@ -1,46 +1,115 @@
 //! Simulator performance benchmark (the §Perf hot path): measures
-//! simulated cycles per wall-second for the three characteristic
-//! workloads. This is the number the EXPERIMENTS.md §Perf log tracks.
-use std::time::Instant;
+//! simulated cycles per wall-second on the three characteristic
+//! workloads of `harness::spec_simperf` (single-CC streamer-heavy,
+//! single-CC core-heavy, eight-core cluster), prints the table, writes
+//! `BENCH_simperf.json`, and — when a committed baseline exists —
+//! fails (exit 1) if any workload regressed to below 70 % of its
+//! baseline Mcycles/s.
+//!
+//! Knobs:
+//! - `SIMPERF_JSON=<dir>`: where `BENCH_simperf.json` is written
+//!   (default: the repo root, i.e. the committed location).
+//! - `SIMPERF_BASELINE=<file>`: baseline to regress against (default:
+//!   the committed `BENCH_simperf.json` at the repo root).
 
-use sssr::coordinator::run_cluster_smxdv;
-use sssr::kernels::driver::{run_smxdv, run_svxsv};
-use sssr::kernels::{IdxWidth, Variant};
-use sssr::matgen;
-use sssr::sim::ClusterCfg;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use sssr::experiments::{write_json, Record, Runner};
+use sssr::harness::spec_simperf;
+
+/// Repo root: the committed `BENCH_simperf.json` lives next to the
+/// `rust/` package directory.
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+fn baseline_path() -> PathBuf {
+    std::env::var_os("SIMPERF_BASELINE")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| repo_root().join("BENCH_simperf.json"))
+}
+
+fn out_dir() -> PathBuf {
+    std::env::var_os("SIMPERF_JSON").map(PathBuf::from).unwrap_or_else(repo_root)
+}
+
+/// `workload -> Mcycles/s` of a BENCH_simperf.json file (records
+/// without a rate — e.g. written by an untimed run — are skipped).
+fn load_rates(path: &PathBuf) -> Option<HashMap<String, f64>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut rates = HashMap::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let rec = match Record::from_json_line(line) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("simperf: skipping malformed baseline line ({e})");
+                continue;
+            }
+        };
+        if let (Some(w), Some(rate)) = (rec.str_of("workload"), rec.f64("sim_mcycles_per_s")) {
+            rates.insert(w.to_string(), rate);
+        }
+    }
+    Some(rates)
+}
 
 fn main() {
-    // 1) single-CC SSSR sMxdV (streamer-heavy)
-    let m = matgen::random_csr(1, 512, 1024, 40_000);
-    let b = matgen::random_dense(2, 1024);
-    let t = Instant::now();
-    let (_, rep) = run_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b);
-    let dt = t.elapsed().as_secs_f64();
-    println!(
-        "single-CC sssr smxdv : {:>10} cycles in {:>6.2}s = {:>7.2} Mcycles/s",
-        rep.cycles, dt, rep.cycles as f64 / dt / 1e6
-    );
+    let spec = spec_simperf();
+    // One worker: the points time-share one host core each anyway, and
+    // serial runs keep the wall-clock numbers comparable across hosts.
+    let recs = Runner::new(1).timed(true).run(&spec);
+    spec.print(&recs);
 
-    // 2) single-CC BASE svxsv (core-heavy)
-    let a = matgen::random_spvec(3, 40_000, 8000);
-    let c = matgen::random_spvec(4, 40_000, 8000);
-    let t = Instant::now();
-    let (_, rep) = run_svxsv(Variant::Base, IdxWidth::U32, &a, &c);
-    let dt = t.elapsed().as_secs_f64();
-    println!(
-        "single-CC base svxsv : {:>10} cycles in {:>6.2}s = {:>7.2} Mcycles/s",
-        rep.cycles, dt, rep.cycles as f64 / dt / 1e6
-    );
+    // Regress against the committed baseline BEFORE overwriting it.
+    let baseline = baseline_path();
+    let verdict = match load_rates(&baseline) {
+        None => {
+            println!(
+                "\nsimperf: NO BASELINE at {} — recording this run as the new baseline \
+                 (no regression check performed)",
+                baseline.display()
+            );
+            Ok(())
+        }
+        Some(rates) => {
+            let mut failed = false;
+            for r in &recs {
+                let (Some(w), Some(now)) = (r.str_of("workload"), r.f64("sim_mcycles_per_s"))
+                else {
+                    continue;
+                };
+                match rates.get(w) {
+                    Some(&base) if base > 0.0 => {
+                        let ratio = now / base;
+                        println!(
+                            "simperf: {w}: {now:.2} Mcycles/s vs baseline {base:.2} ({:+.0}%)",
+                            (ratio - 1.0) * 100.0
+                        );
+                        if ratio < 0.7 {
+                            eprintln!(
+                                "simperf: REGRESSION on {w}: {now:.2} < 70% of baseline {base:.2}"
+                            );
+                            failed = true;
+                        }
+                    }
+                    _ => println!("simperf: {w}: no baseline rate recorded — skipping check"),
+                }
+            }
+            if failed {
+                Err(())
+            } else {
+                Ok(())
+            }
+        }
+    };
 
-    // 3) eight-core cluster SSSR sMxdV (full system)
-    let m = matgen::mycielskian(10);
-    let b = matgen::random_dense(5, m.ncols);
-    let cfg = ClusterCfg::paper_cluster();
-    let t = Instant::now();
-    let run = run_cluster_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &cfg);
-    let dt = t.elapsed().as_secs_f64();
-    println!(
-        "cluster  sssr smxdv : {:>10} cycles in {:>6.2}s = {:>7.2} Mcycles/s",
-        run.report.cycles, dt, run.report.cycles as f64 / dt / 1e6
-    );
+    match write_json(&out_dir(), &spec, &recs) {
+        Ok(path) => println!("simperf: wrote {}", path.display()),
+        Err(e) => eprintln!("simperf: could not write BENCH_simperf.json: {e}"),
+    }
+
+    if verdict.is_err() {
+        std::process::exit(1);
+    }
 }

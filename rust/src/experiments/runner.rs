@@ -8,16 +8,25 @@
 //! sorted by that index, so `--jobs N` produces byte-identical records
 //! to a single-threaded run: all workload generation is seeded per
 //! point, never shared across points.
+//!
+//! [`Runner::timed`] additionally stamps host wall-clock throughput
+//! (`wall_ms`, `sim_mcycles_per_s`) onto every record. It is opt-in and
+//! off by default precisely because wall-clock is nondeterministic —
+//! the byte-identity contract above only holds untimed.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
 
 use super::record::Record;
-use super::spec::ExperimentSpec;
+use super::spec::{ExperimentSpec, Point};
 
 /// Executes experiment grids with a fixed worker count.
 #[derive(Clone, Copy, Debug)]
 pub struct Runner {
     pub jobs: usize,
+    /// Stamp `wall_ms` / `sim_mcycles_per_s` on every record (see
+    /// module docs; default off).
+    pub timed: bool,
 }
 
 /// Worker count used when the caller passes `jobs = 0` ("auto"):
@@ -29,7 +38,36 @@ pub fn default_jobs() -> usize {
 impl Runner {
     /// `jobs = 0` selects one worker per available core.
     pub fn new(jobs: usize) -> Runner {
-        Runner { jobs: if jobs == 0 { default_jobs() } else { jobs } }
+        Runner { jobs: if jobs == 0 { default_jobs() } else { jobs }, timed: false }
+    }
+
+    /// Toggle wall-clock stamping (builder style).
+    pub fn timed(mut self, on: bool) -> Runner {
+        self.timed = on;
+        self
+    }
+
+    /// Evaluate one grid point, optionally stamping throughput fields:
+    /// `wall_ms` is the host wall-clock of the whole point's measure
+    /// call (attributed to each of its records), and a record that
+    /// carries a `cycles` field additionally gets `sim_mcycles_per_s` =
+    /// simulated megacycles per host second.
+    fn measure_point(&self, spec: &ExperimentSpec, p: &Point) -> Vec<Record> {
+        if !self.timed {
+            return (spec.measure)(p);
+        }
+        let t0 = Instant::now();
+        let recs = (spec.measure)(p);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        recs.into_iter()
+            .map(|r| {
+                let rate = r
+                    .f64("cycles")
+                    .filter(|_| wall_ms > 0.0)
+                    .map(|c| c / (wall_ms * 1e3));
+                r.num("wall_ms", wall_ms).opt_num("sim_mcycles_per_s", rate)
+            })
+            .collect()
     }
 
     /// Evaluate every grid point and return the records in point order.
@@ -40,7 +78,7 @@ impl Runner {
             spec.points
                 .iter()
                 .enumerate()
-                .map(|(i, p)| (i, (spec.measure)(p)))
+                .map(|(i, p)| (i, self.measure_point(spec, p)))
                 .collect()
         } else {
             let next = AtomicUsize::new(0);
@@ -54,7 +92,7 @@ impl Runner {
                                 if i >= n {
                                     break;
                                 }
-                                local.push((i, (spec.measure)(&spec.points[i])));
+                                local.push((i, self.measure_point(spec, &spec.points[i])));
                             }
                             local
                         })
@@ -131,6 +169,32 @@ mod tests {
         let a: Vec<String> = Runner::new(1).run(&spec).iter().map(|r| r.to_json_line()).collect();
         let b: Vec<String> = Runner::new(6).run(&spec).iter().map(|r| r.to_json_line()).collect();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn timed_mode_stamps_throughput_fields() {
+        let spec = synthetic_spec(3);
+        for r in &Runner::new(2).timed(true).run(&spec) {
+            assert!(r.f64("wall_ms").is_some(), "timed run must stamp wall_ms");
+            // synthetic records carry no `cycles` field -> no rate
+            assert!(r.get("sim_mcycles_per_s").is_none());
+        }
+        // untimed (default) runs stay stamp-free — the determinism
+        // contract of the tests above depends on it
+        for r in &Runner::new(1).run(&spec) {
+            assert!(r.get("wall_ms").is_none());
+        }
+        // records with a cycles field get a throughput rate
+        let spec = ExperimentSpec {
+            name: "cy",
+            title: "cycles probe".into(),
+            columns: vec![Column::new("cycles", "cycles", 8, ColFmt::Int)],
+            points: vec![Point::at(0)],
+            measure: Box::new(|_| vec![Record::new("cy").int("cycles", 1_000_000)]),
+        };
+        let recs = Runner::new(1).timed(true).run(&spec);
+        let rate = recs[0].f64("sim_mcycles_per_s").expect("rate stamped");
+        assert!(rate > 0.0);
     }
 
     #[test]

@@ -11,9 +11,11 @@
 //! 407 k stored nonzeros). Every grid point seeds its own workload
 //! generators, so results are independent of `--jobs`.
 
+use crate::coordinator::run_cluster_smxdv;
 use crate::experiments::{grid2, ColFmt, Column, ExperimentSpec, Point, Record};
 use crate::formats::SpVec;
 use crate::kernels::api::{must_execute, Detail, ExecCfg, KernelRun, Operand};
+use crate::kernels::driver::{run_smxdv, run_svxsv};
 use crate::kernels::{IdxWidth, Report, Variant};
 use crate::matgen;
 use crate::model::energy::EnergyModel;
@@ -1254,6 +1256,71 @@ pub fn spec_table3() -> ExperimentSpec {
 }
 
 // ======================================================================
+// simperf — simulator wall-clock throughput (not a paper figure)
+// ======================================================================
+
+fn simperf_columns() -> Vec<Column> {
+    vec![
+        Column::new("workload", "workload", 22, ColFmt::Str),
+        Column::new("cycles", "cycles", 12, ColFmt::Int),
+        Column::new("nnz", "nnz", 9, ColFmt::Int),
+        Column::new("wall_ms", "wall ms", 10, ColFmt::Fixed(1)),
+        Column::new("sim_mcycles_per_s", "Mcyc/s", 9, ColFmt::Fixed(2)),
+    ]
+}
+
+/// `simperf`: simulated-cycles-per-wall-second on the three
+/// characteristic workloads of `benches/sim_throughput.rs` — single-CC
+/// SSSR sM×dV (streamer-heavy), single-CC BASE sV×sV (core-heavy), and
+/// the eight-core-cluster SSSR sM×dV (full memory system). The
+/// `wall_ms` / `sim_mcycles_per_s` columns fill in when the spec runs
+/// under a timed runner ([`Runner::timed`], as `repro sweep simperf`
+/// and the `sim_throughput` bench do); the modeled `cycles` column is
+/// deterministic either way and doubles as a coarse golden guard.
+pub fn spec_simperf() -> ExperimentSpec {
+    let labels = ["single_cc_sssr_smxdv", "single_cc_base_svxsv", "cluster_sssr_smxdv"];
+    let points = labels.iter().enumerate().map(|(i, l)| Point::at(i).label(*l)).collect();
+    ExperimentSpec {
+        name: "simperf",
+        title: "simperf: simulator throughput on characteristic workloads".into(),
+        columns: simperf_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let (label, cycles, nnz) = match p.idx.unwrap() {
+                0 => {
+                    let m = matgen::random_csr(1, 512, 1024, 40_000);
+                    let b = matgen::random_dense(2, 1024);
+                    let (_, rep) = run_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b);
+                    (labels[0], rep.cycles, m.nnz())
+                }
+                1 => {
+                    let a = matgen::random_spvec(3, 40_000, 8000);
+                    let c = matgen::random_spvec(4, 40_000, 8000);
+                    let (_, rep) = run_svxsv(Variant::Base, IdxWidth::U32, &a, &c);
+                    (labels[1], rep.cycles, a.nnz() + c.nnz())
+                }
+                _ => {
+                    let m = matgen::mycielskian(10);
+                    let b = matgen::random_dense(5, m.ncols);
+                    let run = run_cluster_smxdv(
+                        Variant::Sssr,
+                        IdxWidth::U16,
+                        &m,
+                        &b,
+                        &ClusterCfg::paper_cluster(),
+                    );
+                    (labels[2], run.report.cycles, m.nnz())
+                }
+            };
+            vec![Record::new("simperf")
+                .str("workload", label)
+                .int("cycles", cycles as i64)
+                .int("nnz", nnz as i64)]
+        }),
+    }
+}
+
+// ======================================================================
 // spec registry
 // ======================================================================
 
@@ -1262,7 +1329,7 @@ pub fn spec_table3() -> ExperimentSpec {
 /// CSF/graph `graph` sweep, and the serving-engine `serve` sweep).
 /// Construction generates the sweep's shared workloads (corpus,
 /// operands) eagerly, so build one spec at a time and drop it before
-/// the next — materializing all eighteen at
+/// the next — materializing all nineteen at
 /// once holds every workload in memory simultaneously. Tables 2/3 are available via
 /// [`spec_table2`]/[`spec_table3`] (Table 2's bottom row derives from
 /// Fig. 5a records, see [`table2_ours`]).
@@ -1285,6 +1352,7 @@ pub const SPEC_BUILDERS: &[(&str, fn() -> ExperimentSpec)] = &[
     ("scale_sv", spec_scale_sv),
     ("graph", spec_graph),
     ("serve", spec_serve),
+    ("simperf", spec_simperf),
 ];
 
 /// Look up one figure spec constructor by name (`"fig4a"`, `"fig7b"`, …).
@@ -1356,7 +1424,7 @@ mod tests {
 
     #[test]
     fn spec_registry_is_consistent() {
-        assert_eq!(SPEC_BUILDERS.len(), 18);
+        assert_eq!(SPEC_BUILDERS.len(), 19);
         for (n, build) in SPEC_BUILDERS {
             let s = build();
             assert_eq!(s.name, *n);

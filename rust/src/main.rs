@@ -30,7 +30,9 @@ COMMANDS:
                                                  `graph` the CSF SpGEMM +
                                                  triangle-counting sweep,
                                                  `serve` the serving-engine
-                                                 sweep
+                                                 sweep, `simperf` the
+                                                 simulator wall-clock
+                                                 throughput probe
     serve [serve options]                        run one serving-engine
                                                  configuration and print the
                                                  latency/throughput summary
@@ -47,8 +49,9 @@ COMMANDS:
 
 OPTIONS:
     --jobs N        experiment worker threads (default:
-                    std::thread::available_parallelism(); results are
-                    identical for every N)
+                    std::thread::available_parallelism(); modeled results
+                    are identical for every N — only the wall-clock
+                    stamps sweeps add, wall_ms / sim_mcycles_per_s, vary)
     --json DIR      also write one BENCH_<fig>.json per sweep into DIR
 
 SERVE OPTIONS:
@@ -65,7 +68,11 @@ SERVE OPTIONS:
     --mtx FILE      serve a Matrix Market matrix as the hot matrix
 
 ENV:
-    REPRO_FULL=1    full paper-size sweeps (default: quick)";
+    REPRO_FULL=1    full paper-size sweeps (default: quick)
+    SIM_FASTPATH=0  disable the simulator's idle fast-forward (debug;
+                    modeled cycles are identical either way)
+    SIM_TICK_JOBS=N system-tick worker threads (0 = auto, 1 = the
+                    sequential reference loop; results identical)";
 
 /// Options shared by the sweep-running subcommands, parsed from the tail
 /// of the argument list.
@@ -153,7 +160,11 @@ fn main() {
             };
             // sweep always emits JSON: default to the current directory
             let dir = opts.json.clone().unwrap_or_else(|| PathBuf::from("."));
-            let runner = Runner::new(opts.jobs);
+            // sweeps are the benchmarking surface: stamp host wall-clock
+            // throughput (`wall_ms`, `sim_mcycles_per_s`) on every record.
+            // The modeled fields stay --jobs-invariant; only the two
+            // timing stamps vary run to run.
+            let runner = Runner::new(opts.jobs).timed(true);
             println!(
                 "sweep: {} experiment(s), {} worker thread(s){}, JSON -> {}",
                 builders.len(),

@@ -22,7 +22,12 @@
 //! Identical (kernel, matrix, operand-pool, batch-shape) computations
 //! are memoized within one engine run — tenants cycle small operand
 //! pools, so repeated queries repeat bit-identically and the memo cuts
-//! host wall time without changing any simulated number.
+//! host wall time without changing any simulated number. Below the
+//! memo, dispatches that do re-execute benefit transparently from the
+//! simulator's own fast path: repeat kernels hit the process-wide
+//! decoded-program cache ([`crate::sim::progcache`]) instead of
+//! re-decoding, and idle stretches inside each run are fast-forwarded
+//! ([`crate::sim::fastpath`]) — again with bit-identical results.
 
 use std::collections::HashMap;
 

@@ -76,6 +76,9 @@ pub struct CoreComplex {
     pub fpu: Fpu,
     pub streamer: Streamer,
     pub prog: Program,
+    /// Shared decoded form of `prog` (fetch-line table), deduplicated
+    /// across CCs / runs by [`super::progcache`].
+    decoded: std::sync::Arc<super::progcache::DecodedProg>,
     ports: Ports,
 }
 
@@ -83,7 +86,15 @@ impl CoreComplex {
     fn new(prog: Program, penalty: u32) -> Self {
         let mut core = Core::new();
         core.taken_branch_penalty = penalty;
-        CoreComplex { core, fpu: Fpu::new(), streamer: Streamer::new(), prog, ports: Ports::default() }
+        let decoded = super::progcache::decode(&prog);
+        CoreComplex {
+            core,
+            fpu: Fpu::new(),
+            streamer: Streamer::new(),
+            prog,
+            decoded,
+            ports: Ports::default(),
+        }
     }
 
     fn tick(&mut self, now: u64, tcdm: &mut Tcdm, icache: &mut ICache) {
@@ -94,7 +105,16 @@ impl CoreComplex {
         let mut port_a = !self.ports.a_used;
         let had_a = port_a;
         self.fpu.tick(now, &mut self.streamer, tcdm, &mut port_a);
-        self.core.tick(now, &self.prog, tcdm, icache, &mut self.fpu, &mut self.streamer, &mut port_a);
+        self.core.tick(
+            now,
+            &self.prog,
+            &self.decoded.ilines,
+            tcdm,
+            icache,
+            &mut self.fpu,
+            &mut self.streamer,
+            &mut port_a,
+        );
         if had_a && port_a {
             // nobody on the core side used port A this cycle
             self.ports.issr0_had_a = false;
@@ -103,6 +123,31 @@ impl CoreComplex {
 
     fn fully_idle(&self) -> bool {
         self.core.halted() && self.fpu.idle() && self.streamer.drained()
+    }
+
+    /// Quiescence probe for the idle fast-forward: `Some(t)` iff every
+    /// tick strictly before `t` is provably a no-op for this CC apart
+    /// from the stat side effects [`Self::skip`] compensates. The FP
+    /// subsystem and the streamers have no pure timer states — whenever
+    /// they hold work they may act next tick — so only a CC whose FPU is
+    /// idle and whose streams are drained can be skipped; the core then
+    /// contributes its parked-state horizon.
+    fn quiet_until(&self) -> Option<u64> {
+        if !self.fpu.idle() || !self.streamer.drained() || self.streamer.cmp.active() {
+            return None;
+        }
+        self.core.quiet_until()
+    }
+
+    /// Replay the side effects of `skipped` quiet ticks: core stat
+    /// counters, plus the `Ports` fields an idle tick would leave behind
+    /// (an idle CC tick is idempotent on `Ports`, so one application
+    /// covers any number of skipped ticks).
+    fn skip(&mut self, skipped: u64) {
+        self.core.fast_forward(skipped);
+        self.ports.new_cycle();
+        self.ports.core_wants_a = self.core.wants_port_a;
+        self.ports.issr0_had_a = false;
     }
 }
 
@@ -130,6 +175,11 @@ pub struct Cluster {
     /// Barriers released so far.
     pub barriers_released: u64,
     rotate: usize,
+    /// Idle fast-forward switch, captured from
+    /// [`super::fastpath::enabled`] at construction (so a thread-local
+    /// test override travels with the cluster even when it is later
+    /// ticked from a worker thread). Public so tests/tools can force it.
+    pub fastpath: bool,
 }
 
 impl Cluster {
@@ -152,6 +202,7 @@ impl Cluster {
             barrier_req: vec![],
             barriers_released: 0,
             rotate: 0,
+            fastpath: super::fastpath::enabled(),
             cfg,
         }
     }
@@ -195,11 +246,32 @@ impl Cluster {
         self.ccs[core].core.regs[reg as usize] = value;
     }
 
+    /// Would the barrier release fire on the next tick? (Exact mirror of
+    /// the release predicate inside [`Self::tick`].) Factored out so the
+    /// idle fast-forward can refuse to skip across a release: all inputs
+    /// to this predicate are frozen while every CC is parked and the DMA
+    /// is inside a latency window, so checking it once before a skip is
+    /// sound.
+    fn barrier_release_ready(&self) -> bool {
+        let any_waiting = self.ccs.iter().any(|c| c.core.at_barrier());
+        if !any_waiting {
+            return false;
+        }
+        let all_ready = self.ccs.iter().all(|c| c.core.at_barrier() || c.core.halted());
+        let dma_ready = match self.barrier_req.get(self.barriers_released as usize) {
+            Some(&req) => self.dma.jobs_done >= req,
+            None => !self.dma.busy(),
+        };
+        all_ready && dma_ready
+    }
+
     /// Advance one cycle. `mem` is this cluster's port into backing main
     /// memory: a private [`Dram`] in the standalone topology, or its
     /// channel port into the shared HBM when driven by a
-    /// [`super::system::System`].
-    pub fn tick(&mut self, mem: &mut dyn MemPort) {
+    /// [`super::system::System`]. Generic over the port type so the hot
+    /// loop devirtualizes for concrete callers (`&mut dyn MemPort` still
+    /// works: `M = dyn MemPort`).
+    pub fn tick<M: MemPort + ?Sized>(&mut self, mem: &mut M) {
         self.cycle += 1;
         let now = self.cycle;
         self.tcdm.new_cycle(now);
@@ -208,28 +280,17 @@ impl Cluster {
         // Barrier: all live cores waiting and the *required* DMA phases
         // drained -> release, submit the next phase's prefetch (which is
         // NOT awaited — double buffering).
-        let any_waiting = self.ccs.iter().any(|c| c.core.at_barrier());
-        if any_waiting {
-            let all_ready = self
-                .ccs
-                .iter()
-                .all(|c| c.core.at_barrier() || c.core.halted());
-            let dma_ready = match self.barrier_req.get(self.barriers_released as usize) {
-                Some(&req) => self.dma.jobs_done >= req,
-                None => !self.dma.busy(),
-            };
-            if all_ready && dma_ready {
-                for cc in &mut self.ccs {
-                    if cc.core.at_barrier() {
-                        cc.core.release_barrier();
-                    }
+        if self.barrier_release_ready() {
+            for cc in &mut self.ccs {
+                if cc.core.at_barrier() {
+                    cc.core.release_barrier();
                 }
-                self.barriers_released += 1;
-                self.phase += 1;
-                if let Some(jobs) = self.schedule.phases.get(self.phase) {
-                    for j in jobs {
-                        self.dma.submit(*j);
-                    }
+            }
+            self.barriers_released += 1;
+            self.phase += 1;
+            if let Some(jobs) = self.schedule.phases.get(self.phase) {
+                for j in jobs {
+                    self.dma.submit(*j);
                 }
             }
         }
@@ -250,15 +311,67 @@ impl Cluster {
         self.ccs.iter().all(|c| c.fully_idle()) && !self.dma.busy()
     }
 
+    /// Idle fast-forward probe: `Some(h)` iff every tick strictly before
+    /// cycle `h` is provably a no-op (modulo the stat side effects
+    /// [`Self::skip_to`] replays), so `try_run` may jump straight to
+    /// `h - 1`. Requires every CC parked (halted / at barrier / inside an
+    /// I$ refill) with idle FPU and drained streams, the DMA inside a
+    /// pure latency window, and the barrier release not ready (a release
+    /// mutates state on the very next tick). Returns `None` whenever any
+    /// component may act next tick — the naive path then runs, so this
+    /// can never change modeled cycle counts, only wall-clock.
+    pub(crate) fn idle_horizon(&self) -> Option<u64> {
+        if self.barrier_release_ready() {
+            return None;
+        }
+        let mut h = self.dma.quiet_until(self.cycle)?;
+        for cc in &self.ccs {
+            h = h.min(cc.quiet_until()?);
+        }
+        if h > self.cycle + 1 {
+            Some(h)
+        } else {
+            None
+        }
+    }
+
+    /// Jump the cluster clock to `target` (exclusive horizon minus one),
+    /// replaying the per-cycle side effects of the skipped quiet ticks:
+    /// TCDM cycle stamp, DMA/core busy+stall statistics, `Ports`
+    /// bookkeeping, and the CC service rotation.
+    pub(crate) fn skip_to(&mut self, target: u64) {
+        debug_assert!(target > self.cycle);
+        let skipped = target - self.cycle;
+        self.cycle = target;
+        self.tcdm.new_cycle(target);
+        self.dma.fast_forward(skipped);
+        for cc in &mut self.ccs {
+            cc.skip(skipped);
+        }
+        let n = self.ccs.len().max(1);
+        self.rotate = (self.rotate + (skipped % n as u64) as usize) % n;
+    }
+
     /// Run until all cores halt (and FPUs/streams drain). Returns total
     /// cycles, or `Err(cycles_simulated)` once `limit` cycles pass
     /// without completion (deadlock guard). The kernel API layer maps
     /// the error onto [`crate::kernels::api::KernelError::Hang`].
-    pub fn try_run(&mut self, mem: &mut dyn MemPort, limit: u64) -> Result<u64, u64> {
+    ///
+    /// With [`Self::fastpath`] on (the default), provably dead stretches
+    /// — DMA latency windows, I$ refills, barrier deadlocks — are jumped
+    /// in one step instead of ticked through; cycle counts and stats are
+    /// bit-identical either way (`tests/sim_fastpath.rs`).
+    pub fn try_run<M: MemPort + ?Sized>(&mut self, mem: &mut M, limit: u64) -> Result<u64, u64> {
         let start = self.cycle;
         while !self.done() {
             if self.cycle - start >= limit {
                 return Err(self.cycle - start);
+            }
+            if self.fastpath {
+                if let Some(h) = self.idle_horizon() {
+                    self.skip_to((h - 1).min(start.saturating_add(limit)));
+                    continue;
+                }
             }
             self.tick(mem);
         }
@@ -267,7 +380,7 @@ impl Cluster {
 
     /// Panicking [`Self::try_run`] for tests and probes that treat a
     /// hang as a plain bug.
-    pub fn run(&mut self, mem: &mut dyn MemPort, limit: u64) -> u64 {
+    pub fn run<M: MemPort + ?Sized>(&mut self, mem: &mut M, limit: u64) -> u64 {
         self.try_run(mem, limit).unwrap_or_else(|_| {
             panic!(
                 "cluster did not finish within {limit} cycles (pc0={}, barrier={:?})",

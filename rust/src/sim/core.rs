@@ -95,6 +95,29 @@ impl Core {
         self.state = State::Ready;
     }
 
+    /// Quiescence probe for the cluster idle fast-forward: earliest
+    /// future cycle at which this core can make progress on its own.
+    /// `None` means it may act on the very next tick; `Some(u64::MAX)`
+    /// means it is parked until an external event (barrier release) or
+    /// forever (halted).
+    pub(crate) fn quiet_until(&self) -> Option<u64> {
+        match self.state {
+            State::Halted | State::AtBarrier => Some(u64::MAX),
+            State::IcacheMiss(until) => Some(until),
+            State::Ready => None,
+        }
+    }
+
+    /// Apply the per-cycle stat side effects of `skipped` quiet ticks
+    /// (mirrors the top of [`Self::tick`] for the parked states).
+    pub(crate) fn fast_forward(&mut self, skipped: u64) {
+        match self.state {
+            State::AtBarrier => self.barrier_cycles += skipped,
+            State::IcacheMiss(_) => self.stall_icache += skipped,
+            State::Halted | State::Ready => {}
+        }
+    }
+
     #[inline]
     fn rs(&self, r: Reg) -> i64 {
         self.regs[r as usize]
@@ -143,12 +166,16 @@ impl Core {
     }
 
     /// Execute one cycle. `port_a_free` is the CC shared port (already
-    /// reduced by ISSR0 / FPU LSU claims this cycle).
+    /// reduced by ISSR0 / FPU LSU claims this cycle). `ilines` is the
+    /// precomputed per-pc I$ line table from
+    /// [`super::progcache::DecodedProg`] — hoisting the fetch address
+    /// arithmetic out of the issue loop.
     #[allow(clippy::too_many_arguments)]
     pub fn tick(
         &mut self,
         now: u64,
         prog: &Program,
+        ilines: &[u64],
         tcdm: &mut Tcdm,
         icache: &mut super::icache::ICache,
         fpu: &mut Fpu,
@@ -182,10 +209,9 @@ impl Core {
         );
 
         // Instruction fetch (fetch-buffer fast path for the current line).
-        let iaddr = prog.iaddr(pc);
-        let line = iaddr >> 5;
+        let line = ilines[pc as usize];
         if line != self.cur_iline {
-            match icache.fetch(iaddr, now) {
+            match icache.fetch(prog.iaddr(pc), now) {
                 super::icache::Fetch::Hit => self.cur_iline = line,
                 super::icache::Fetch::MissUntil(t) => {
                     self.cur_iline = line;
@@ -391,6 +417,8 @@ mod tests {
     }
 
     fn run(b: &mut Bench, max_cycles: u64) -> u64 {
+        let ilines: Vec<u64> =
+            (0..b.prog.instrs.len() as u32).map(|pc| b.prog.iaddr(pc) >> 5).collect();
         let mut now = 0;
         while !b.core.halted() {
             now += 1;
@@ -404,6 +432,7 @@ mod tests {
             b.core.tick(
                 now,
                 &b.prog,
+                &ilines,
                 &mut b.tcdm,
                 &mut b.icache,
                 &mut b.fpu,

@@ -136,8 +136,10 @@ impl Dma {
     /// port (the engine has a single wide port). `mem` is this cluster's
     /// port into backing main memory — a private [`super::dram::Dram`]
     /// in the standalone topology, or a shared-HBM channel port in a
-    /// multi-cluster [`super::system::System`].
-    pub fn tick(&mut self, now: u64, tcdm: &mut Tcdm, mem: &mut dyn MemPort) {
+    /// multi-cluster [`super::system::System`]. Generic over the port
+    /// type so the hot per-beat calls devirtualize for concrete callers
+    /// (`&mut dyn MemPort` still works: `M = dyn MemPort`).
+    pub fn tick<M: MemPort + ?Sized>(&mut self, now: u64, tcdm: &mut Tcdm, mem: &mut M) {
         if self.active.is_none() {
             if let Some(job) = self.queue.pop_front() {
                 self.active = Some(job);
@@ -195,8 +197,7 @@ impl Dma {
                     let chunk = if chunk == 0 { pending } else { chunk };
                     let src = row.dram_addr + row.moved;
                     let dst = row.tcdm_addr + row.moved;
-                    let data: Vec<u8> = mem.read_bytes(src, chunk as usize).to_vec();
-                    if tcdm.try_write_wide(dst, &data) {
+                    if tcdm.try_write_wide(dst, mem.read_bytes(src, chunk as usize)) {
                         row.moved += chunk;
                     }
                 }
@@ -209,9 +210,10 @@ impl Dma {
                 if row.moved < row.bytes {
                     let chunk = (row.bytes - row.moved).min(BEAT_BYTES);
                     let src = row.tcdm_addr + row.moved;
-                    let mut buf = vec![0u8; chunk as usize];
-                    if tcdm.try_read_wide(src, &mut buf) {
-                        mem.write_bytes(row.dram_addr + row.moved, &buf);
+                    let mut buf = [0u8; BEAT_BYTES as usize];
+                    let beat = &mut buf[..chunk as usize];
+                    if tcdm.try_read_wide(src, beat) {
+                        mem.write_bytes(row.dram_addr + row.moved, beat);
                         row.moved += chunk;
                         if row.moved == row.bytes {
                             let t = mem.schedule_write(now, row.bytes);
@@ -231,6 +233,52 @@ impl Dma {
         if self.next_row == job.rows && self.inflight.is_empty() {
             self.active = None;
             self.jobs_done += 1;
+        }
+    }
+
+    /// Quiescence probe for the cluster idle fast-forward: the earliest
+    /// future cycle at which this engine can do anything, assuming no
+    /// tick runs in between. `None` means it may act on the very next
+    /// tick (or we cannot cheaply prove otherwise — always safe);
+    /// `Some(u64::MAX)` means it is idle until someone submits a job.
+    ///
+    /// The analysis mirrors [`Self::tick`] exactly: with no launchable
+    /// row and an in-flight head waiting on a future `first_beat` (read)
+    /// or `drain_done` (write), a tick's only side effect is the
+    /// busy-cycle statistic — which [`Self::fast_forward`] compensates.
+    pub(crate) fn quiet_until(&self, now: u64) -> Option<u64> {
+        let Some(job) = self.active.as_ref() else {
+            return if self.queue.is_empty() { Some(u64::MAX) } else { None };
+        };
+        if self.next_row < job.rows && self.inflight.len() < MAX_OUTSTANDING {
+            return None; // next tick launches another row burst
+        }
+        let Some(row) = self.inflight.front() else {
+            return None; // job completion is imminent
+        };
+        if job.to_tcdm {
+            // The head row cannot pop (and thus nothing else can change)
+            // before its first beat arrives from the channel.
+            if now + 1 < row.first_beat {
+                Some(row.first_beat)
+            } else {
+                None
+            }
+        } else if row.moved < row.bytes {
+            None // draining TCDM reads: may progress every cycle
+        } else {
+            match row.drain_done {
+                Some(done) if now + 1 < done => Some(done),
+                _ => None,
+            }
+        }
+    }
+
+    /// Apply the per-cycle side effects of `skipped` quiet ticks in one
+    /// step: a quiet tick with an active job counts as busy.
+    pub(crate) fn fast_forward(&mut self, skipped: u64) {
+        if self.active.is_some() {
+            self.busy_cycles += skipped;
         }
     }
 }

@@ -1,0 +1,91 @@
+//! Runtime switches for the simulator fast path.
+//!
+//! Two independent knobs, both read once per run by the code that uses
+//! them (never from inside worker threads, so the thread-local overrides
+//! compose with the parallel `System` tick):
+//!
+//! - **idle fast-forward** ([`enabled`]): lets `Cluster::try_run` /
+//!   `System::try_run` jump over provably dead cycles (DMA latency
+//!   windows, I$ refills, barrier deadlocks) instead of ticking through
+//!   them. Guaranteed not to change any modeled cycle count or statistic
+//!   (see `tests/sim_fastpath.rs`). Env: `SIM_FASTPATH=0` disables;
+//!   default on.
+//! - **parallel cluster ticking** ([`tick_jobs`]): worker count for
+//!   `System::try_run`'s channel-group parallel path. Env:
+//!   `SIM_TICK_JOBS=N`; `1` forces the sequential path, `0`/unset means
+//!   "one worker per available core". Results are bit-identical for any
+//!   value (channel groups share no mutable state).
+//!
+//! The env vars are the debugging interface ("is the fast path hiding a
+//! bug?" → rerun with `SIM_FASTPATH=0 SIM_TICK_JOBS=1`); the setters are
+//! the per-test interface — they override only the calling thread, so
+//! parallel `cargo test` threads cannot race each other's settings.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+thread_local! {
+    static FASTPATH_OVERRIDE: Cell<Option<bool>> = const { Cell::new(None) };
+    static TICK_JOBS_OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+fn env_enabled() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("SIM_FASTPATH").map(|v| v != "0").unwrap_or(true))
+}
+
+fn env_tick_jobs() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("SIM_TICK_JOBS").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+    })
+}
+
+/// Is idle fast-forward on for the calling thread?
+pub fn enabled() -> bool {
+    FASTPATH_OVERRIDE.with(|c| c.get()).unwrap_or_else(env_enabled)
+}
+
+/// Override idle fast-forward for the calling thread (`None` restores
+/// the `SIM_FASTPATH` env default). Tests use this to compare fast and
+/// naive runs; clusters capture the value at construction.
+pub fn set_enabled(v: Option<bool>) {
+    FASTPATH_OVERRIDE.with(|c| c.set(v));
+}
+
+/// Worker count for the parallel `System` tick, resolved: `1` means
+/// sequential, anything larger enables the channel-group parallel path.
+pub fn tick_jobs() -> usize {
+    let j = TICK_JOBS_OVERRIDE.with(|c| c.get()).unwrap_or_else(env_tick_jobs);
+    if j == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        j
+    }
+}
+
+/// Override the parallel-tick worker count for the calling thread
+/// (`None` restores the `SIM_TICK_JOBS` env default, `Some(0)` means
+/// auto).
+pub fn set_tick_jobs(v: Option<usize>) {
+    TICK_JOBS_OVERRIDE.with(|c| c.set(v));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_are_thread_local() {
+        set_enabled(Some(false));
+        set_tick_jobs(Some(1));
+        assert!(!enabled());
+        assert_eq!(tick_jobs(), 1);
+        let other = std::thread::spawn(|| (enabled(), tick_jobs() >= 1)).join().unwrap();
+        // the spawned thread sees the env defaults, not our override
+        assert!(other.1);
+        set_enabled(None);
+        set_tick_jobs(None);
+        assert!(tick_jobs() >= 1);
+    }
+}

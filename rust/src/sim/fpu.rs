@@ -104,6 +104,10 @@ pub struct Fpu {
     ready_at: [u64; 32],
     seq: VecDeque<SeqEntry>,
     state: State,
+    /// Recycled FREP body buffer: each finished loop returns its body
+    /// allocation here so back-to-back FREPs (every streamed kernel's
+    /// steady state) allocate nothing per loop.
+    body_pool: Vec<ROp>,
     // ---- statistics ----
     pub flops: u64,
     pub ops_executed: u64,
@@ -126,6 +130,7 @@ impl Fpu {
             ready_at: [0; 32],
             seq: VecDeque::new(),
             state: State::Idle,
+            body_pool: Vec::new(),
             flops: 0,
             ops_executed: 0,
             fld_count: 0,
@@ -148,6 +153,15 @@ impl Fpu {
     /// FPU and sequencer fully idle (for `core_fpu_fence`).
     pub fn idle(&self) -> bool {
         self.seq.is_empty() && matches!(self.state, State::Idle)
+    }
+
+    /// Retire the active FREP loop, recycling its body buffer.
+    fn finish_loop(&mut self) {
+        if let State::Loop(l) = std::mem::replace(&mut self.state, State::Idle) {
+            let mut body = l.body;
+            body.clear();
+            self.body_pool = body;
+        }
     }
 
     #[inline]
@@ -226,8 +240,11 @@ impl Fpu {
                     assert!(n_instrs > 0, "empty FREP body");
                     self.seq.pop_front();
                     let zero_iters = matches!(count, RCount::Iters(0));
+                    let mut body = std::mem::take(&mut self.body_pool);
+                    body.clear();
+                    body.reserve(n_instrs as usize);
                     self.state = State::Loop(LoopState {
-                        body: Vec::with_capacity(n_instrs as usize),
+                        body,
                         need: n_instrs,
                         count,
                         iter: 0,
@@ -287,7 +304,7 @@ impl Fpu {
             }
         };
         if done {
-            self.state = State::Idle;
+            self.finish_loop();
             return;
         }
         let op = Self::apply_stagger(l.body[l.pos], l.iter, l.stagger_count, l.stagger_mask);
@@ -296,15 +313,19 @@ impl Fpu {
         if self.try_exec(op, now, streamer, tcdm, port_a_free) {
             let State::Loop(l) = &mut self.state else { unreachable!() };
             l.pos = pos + 1;
+            let mut finished = false;
             if l.pos == nbody {
                 l.pos = 0;
                 l.iter = iter + 1;
                 l.admitted = false;
                 if let RCount::Iters(n) = l.count {
                     if l.iter >= n {
-                        self.state = State::Idle;
+                        finished = true;
                     }
                 }
+            }
+            if finished {
+                self.finish_loop();
             }
         }
     }

@@ -72,7 +72,7 @@ pub const FA3: FReg = 13;
 pub const FA4: FReg = 14;
 
 /// Memory access width, log2 bytes.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum MemSize {
     B = 0,
     H = 1,
@@ -88,7 +88,7 @@ impl MemSize {
 }
 
 /// Branch conditions.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Cond {
     Eq,
     Ne,
@@ -115,7 +115,7 @@ impl Cond {
 /// FREP iteration count source: immediate, register (resolved at issue),
 /// or stream-controlled (`frep.s`, one iteration per joint-stream element —
 /// the new FREP mode §2.4 introduces for SSSR index matching).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum FrepCount {
     Imm(u32),
     Reg(Reg),
@@ -125,7 +125,7 @@ pub enum FrepCount {
 /// Instructions dispatched to the FP subsystem (the "FPU path" of Snitch's
 /// pseudo dual-issue scheme). Integer operands (addresses, counts) are
 /// resolved by the integer core at issue time.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum FpInstr {
     /// `fmadd.d rd, rs1, rs2, rs3` — rd = rs1*rs2 + rs3.
     Fmadd { rd: FReg, rs1: FReg, rs2: FReg, rs3: FReg },
@@ -167,7 +167,7 @@ impl FpInstr {
 /// SSR/SSSR configuration fields, written/read by `scfgwi`/`scfgri`
 /// (custom CSR-mapped config interface, §3). Writes land in the *shadow*
 /// configuration; `Launch` commits the shadow into the job queue.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SsrField {
     /// Byte address of the value (data) array.
     DataBase,
@@ -219,8 +219,10 @@ pub mod ssr_mode {
     pub const EGRESS: i64 = 6;
 }
 
-/// One instruction of the mini-ISA.
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// One instruction of the mini-ISA. `Eq`/`Hash` are exact (every field
+/// is integral — FP immediates are carried as bit patterns), which is
+/// what lets [`super::progcache`] key its cache by program content.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Instr {
     // ---- integer ALU ----
     Addi { rd: Reg, rs1: Reg, imm: i64 },

@@ -25,10 +25,12 @@ pub mod cluster;
 pub mod core;
 pub mod dma;
 pub mod dram;
+pub mod fastpath;
 pub mod fpu;
 pub mod icache;
 pub mod isa;
 pub mod mem;
+pub mod progcache;
 pub mod ssr;
 pub mod system;
 pub mod tcdm;

@@ -1,0 +1,110 @@
+//! Decoded-program cache.
+//!
+//! A [`Program`] is already a decoded instruction vector, but the core
+//! still derived per-fetch metadata (the I$ line id of each pc) with
+//! address arithmetic on every issue. [`DecodedProg`] hoists that work
+//! out of the tick loop into a flat per-pc table built once per distinct
+//! program — and the cache deduplicates that build (and the table's
+//! memory) across the places that construct the *same* program over and
+//! over: every core of a cluster running the SPMD kernel body, the
+//! serve engine's memoized repeat requests, and the conformance sweep's
+//! repeated variants.
+//!
+//! Keys are the full program content (`text_base` + instruction vector),
+//! not a hash, so collisions are impossible; the map is capped and
+//! cleared on overflow, which keeps long conformance sweeps from
+//! accumulating unbounded cached programs.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+
+use super::isa::{Instr, Program};
+
+/// Per-program metadata precomputed for the core's fetch path.
+#[derive(Debug)]
+pub struct DecodedProg {
+    /// I$ line id (`iaddr >> 5`) of every pc, indexed by pc.
+    pub ilines: Vec<u64>,
+}
+
+impl DecodedProg {
+    fn build(prog: &Program) -> Self {
+        let ilines = (0..prog.instrs.len() as u32).map(|pc| prog.iaddr(pc) >> 5).collect();
+        DecodedProg { ilines }
+    }
+}
+
+#[derive(PartialEq, Eq, Hash)]
+struct Key {
+    text_base: u64,
+    instrs: Vec<Instr>,
+}
+
+/// Cached-program cap; on overflow the whole map is dropped (simple and
+/// sufficient: the hot reuse patterns — serve repeats, per-core SPMD
+/// clones — revisit a small working set immediately).
+const CACHE_CAP: usize = 1024;
+
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+fn cache() -> &'static Mutex<HashMap<Key, Arc<DecodedProg>>> {
+    static CACHE: OnceLock<Mutex<HashMap<Key, Arc<DecodedProg>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Look up (or build and cache) the decoded form of `prog`.
+pub fn decode(prog: &Program) -> Arc<DecodedProg> {
+    let key = Key { text_base: prog.text_base, instrs: prog.instrs.clone() };
+    let mut map = cache().lock().unwrap_or_else(PoisonError::into_inner);
+    if let Some(hit) = map.get(&key) {
+        HITS.fetch_add(1, Ordering::Relaxed);
+        return Arc::clone(hit);
+    }
+    MISSES.fetch_add(1, Ordering::Relaxed);
+    let dec = Arc::new(DecodedProg::build(prog));
+    if map.len() >= CACHE_CAP {
+        map.clear();
+    }
+    map.insert(key, Arc::clone(&dec));
+    dec
+}
+
+/// Process-wide `(hits, misses)` counters (observability only; the
+/// counts are cumulative across all threads and runs).
+pub fn stats() -> (u64, u64) {
+    (HITS.load(Ordering::Relaxed), MISSES.load(Ordering::Relaxed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::asm::Asm;
+
+    fn prog(n: i64) -> Program {
+        let mut a = Asm::new();
+        a.li(crate::sim::isa::T0, n);
+        a.halt();
+        a.finish()
+    }
+
+    #[test]
+    fn identical_programs_share_one_decode() {
+        let a = decode(&prog(7));
+        let b = decode(&prog(7));
+        assert!(Arc::ptr_eq(&a, &b), "same content must hit the cache");
+        let c = decode(&prog(8));
+        assert!(!Arc::ptr_eq(&a, &c), "different content must not collide");
+    }
+
+    #[test]
+    fn ilines_match_the_fetch_arithmetic() {
+        let p = prog(1);
+        let d = decode(&p);
+        assert_eq!(d.ilines.len(), p.instrs.len());
+        for (pc, &line) in d.ilines.iter().enumerate() {
+            assert_eq!(line, p.iaddr(pc as u32) >> 5);
+        }
+    }
+}

@@ -309,14 +309,207 @@ impl System {
     /// finish cycle, or `Err(cycles_simulated)` once `limit` cycles pass
     /// without completion (deadlock guard). The kernel API layer maps
     /// the error onto [`crate::kernels::api::KernelError::Hang`].
+    ///
+    /// Two fast paths ride under the lockstep semantics, both
+    /// bit-identical to naively calling [`Self::tick`] in a loop
+    /// (`tests/sim_fastpath.rs` proves it): the sequential path skips
+    /// finished clusters entirely and idle-fast-forwards quiet stretches
+    /// across all live clusters at once; and when more than one HBM
+    /// channel is configured, clusters are partitioned into their
+    /// channel groups — which share no mutable state (cluster, shard,
+    /// per-cluster stats, channel) — and each group runs to completion
+    /// on its own worker thread ([`super::fastpath::tick_jobs`],
+    /// `SIM_TICK_JOBS=1` forces sequential). Same-cycle channel
+    /// arbitration order inside a group is derived from the global
+    /// rotation, so `queue_cycles` stay identical for any thread count.
     pub fn try_run(&mut self, limit: u64) -> Result<u64, u64> {
         let start = self.cycle;
-        while !self.done() {
+        let n = self.clusters.len();
+        let mut active: Vec<usize> = Vec::with_capacity(n);
+        for i in 0..n {
+            if self.clusters[i].done() {
+                if self.finished_at[i].is_none() {
+                    self.finished_at[i] = Some(self.clusters[i].cycle);
+                }
+            } else {
+                active.push(i);
+            }
+        }
+        if active.is_empty() {
+            return Ok(self.finished_cycles().into_iter().max().unwrap_or(0));
+        }
+        let jobs = super::fastpath::tick_jobs();
+        if jobs > 1
+            && active.len() > 1
+            && self.hbm.channels.len() > 1
+            && self.clusters.len() == self.cfg.clusters
+            && self.hbm.mem.len() == self.cfg.total_bytes()
+            && self.cfg.shard_bytes > 0
+        {
+            return self.try_run_parallel(active, start, limit, jobs);
+        }
+        self.try_run_sequential(active, start, limit)
+    }
+
+    /// Lockstep run over the `active` clusters: the naive per-cycle loop
+    /// plus the system-wide idle fast-forward (skip only when *every*
+    /// live cluster is provably quiet — their clocks stay in lockstep).
+    fn try_run_sequential(
+        &mut self,
+        mut active: Vec<usize>,
+        start: u64,
+        limit: u64,
+    ) -> Result<u64, u64> {
+        let n = self.clusters.len();
+        let fast = active.iter().all(|&i| self.clusters[i].fastpath);
+        let cap = start.saturating_add(limit);
+        while !active.is_empty() {
             if self.cycle - start >= limit {
                 return Err(self.cycle - start);
             }
-            self.tick();
+            if fast {
+                let mut horizon = Some(u64::MAX);
+                for &i in &active {
+                    horizon = match (horizon, self.clusters[i].idle_horizon()) {
+                        (Some(h), Some(hi)) => Some(h.min(hi)),
+                        _ => None,
+                    };
+                    if horizon.is_none() {
+                        break;
+                    }
+                }
+                if let Some(h) = horizon {
+                    let target = (h - 1).min(cap);
+                    let skipped = target - self.cycle;
+                    for &i in &active {
+                        self.clusters[i].skip_to(target);
+                    }
+                    self.cycle = target;
+                    self.rotate = (self.rotate + (skipped % n as u64) as usize) % n;
+                    continue;
+                }
+            }
+            self.cycle += 1;
+            // Serve in rotating order, exactly like [`Self::tick`]'s
+            // `(i + rotate) % n` walk restricted to live clusters:
+            // indices >= rotate first (ascending), then wrap.
+            let r = self.rotate;
+            let p = active.partition_point(|&k| k < r);
+            for pos in (p..active.len()).chain(0..p) {
+                let k = active[pos];
+                let mut port = self.hbm.port(k);
+                self.clusters[k].tick(&mut port);
+            }
+            self.rotate = (self.rotate + 1) % n.max(1);
+            active.retain(|&k| {
+                if self.clusters[k].done() {
+                    self.finished_at[k] = Some(self.clusters[k].cycle);
+                    false
+                } else {
+                    true
+                }
+            });
         }
+        Ok(self.finished_cycles().into_iter().max().unwrap_or(0))
+    }
+
+    /// Channel-group parallel run: cluster `i` owns HBM shard `i`, its
+    /// per-cluster stats, and (with the clusters wired `i % channels`)
+    /// shares its channel only with same-group clusters — so the groups
+    /// partition every byte of mutable state and can run to completion
+    /// concurrently with no per-tick barrier. Group-local service order
+    /// and the merged `cycle`/`rotate` are derived analytically from the
+    /// global rotation, keeping results bit-identical to the lockstep
+    /// loop for any worker count.
+    fn try_run_parallel(
+        &mut self,
+        active: Vec<usize>,
+        start: u64,
+        limit: u64,
+        jobs: usize,
+    ) -> Result<u64, u64> {
+        let n = self.clusters.len();
+        let nch = self.hbm.channels.len();
+        let rotate0 = self.rotate;
+        let shard = self.cfg.shard_bytes;
+        let (latency, ic_latency) = (self.hbm.latency, self.hbm.ic_latency);
+        let mut is_active = vec![false; n];
+        for &i in &active {
+            is_active[i] = true;
+        }
+        let mut groups: Vec<Vec<Member<'_>>> = (0..nch).map(|_| Vec::new()).collect();
+        for (i, ((cl, stats), shard_mem)) in self
+            .clusters
+            .iter_mut()
+            .zip(self.hbm.cluster_stats.iter_mut())
+            .zip(self.hbm.mem.chunks_mut(shard))
+            .enumerate()
+        {
+            if is_active[i] {
+                groups[i % nch].push(Member {
+                    idx: i,
+                    cl,
+                    stats,
+                    shard: shard_mem,
+                    base: (i * shard) as u64,
+                });
+            }
+        }
+        let tasks = groups
+            .into_iter()
+            .zip(self.hbm.channels.iter_mut())
+            .filter(|(g, _)| !g.is_empty());
+        let mut buckets: Vec<Vec<_>> = Vec::new();
+        for (t, task) in tasks.enumerate() {
+            if t < jobs {
+                buckets.push(Vec::new());
+            }
+            buckets[t % jobs].push(task);
+        }
+        let results: Vec<GroupRun> = std::thread::scope(|scope| {
+            let handles: Vec<_> = buckets
+                .into_iter()
+                .map(|bucket| {
+                    scope.spawn(move || {
+                        bucket
+                            .into_iter()
+                            .map(|(mut members, chan)| {
+                                run_group(
+                                    &mut members,
+                                    chan,
+                                    latency,
+                                    ic_latency,
+                                    start,
+                                    limit,
+                                    rotate0,
+                                    n,
+                                )
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("system tick worker panicked"))
+                .collect()
+        });
+        let mut hit_limit = false;
+        let mut max_end = start;
+        for g in &results {
+            hit_limit |= g.hit_limit;
+            for &(i, fin) in &g.finishes {
+                self.finished_at[i] = Some(fin);
+                max_end = max_end.max(fin);
+            }
+        }
+        if hit_limit {
+            self.cycle = start.saturating_add(limit);
+            self.rotate = (rotate0 + (limit % n as u64) as usize) % n;
+            return Err(limit);
+        }
+        self.cycle = max_end;
+        self.rotate = (rotate0 + ((max_end - start) % n as u64) as usize) % n;
         Ok(self.finished_cycles().into_iter().max().unwrap_or(0))
     }
 
@@ -343,6 +536,192 @@ impl System {
     /// cluster's own finish, see [`System::tick`]).
     pub fn cluster_stats(&self, i: usize) -> RunStats {
         self.clusters[i].stats()
+    }
+}
+
+/// One cluster's slice of mutable system state, handed to a channel-group
+/// worker by [`System::try_run`]'s parallel path.
+struct Member<'a> {
+    idx: usize,
+    cl: &'a mut Cluster,
+    stats: &'a mut HbmClusterStats,
+    shard: &'a mut [u8],
+    /// HBM address of `shard[0]`.
+    base: u64,
+}
+
+/// Outcome of running one channel group to completion (or the limit).
+struct GroupRun {
+    /// `(cluster index, finish cycle)` for every member that finished.
+    finishes: Vec<(usize, u64)>,
+    /// The group ran `limit` cycles without draining.
+    hit_limit: bool,
+}
+
+/// Run one channel group — `members` sorted by cluster index, all ticked
+/// in group-local lockstep against their shared channel — until every
+/// member is done or `limit` cycles pass. Same-cycle service order is
+/// the global rotation of the lockstep loop, reconstructed from
+/// `rotate0` (the system rotation at `start`) and the elapsed cycles;
+/// cross-group order needs no reconstruction because groups share no
+/// state.
+#[allow(clippy::too_many_arguments)]
+fn run_group(
+    members: &mut [Member<'_>],
+    chan: &mut HbmChannel,
+    latency: u64,
+    ic_latency: u64,
+    start: u64,
+    limit: u64,
+    rotate0: usize,
+    n: usize,
+) -> GroupRun {
+    let cap = start.saturating_add(limit);
+    let fast = members.iter().all(|m| m.cl.fastpath);
+    let mut alive: Vec<usize> = (0..members.len()).collect();
+    let mut finishes = Vec::with_capacity(members.len());
+    let mut cycle = start;
+    while !alive.is_empty() {
+        if cycle - start >= limit {
+            return GroupRun { finishes, hit_limit: true };
+        }
+        if fast {
+            let mut horizon = Some(u64::MAX);
+            for &mi in &alive {
+                horizon = match (horizon, members[mi].cl.idle_horizon()) {
+                    (Some(h), Some(hi)) => Some(h.min(hi)),
+                    _ => None,
+                };
+                if horizon.is_none() {
+                    break;
+                }
+            }
+            if let Some(h) = horizon {
+                let target = (h - 1).min(cap);
+                for &mi in &alive {
+                    members[mi].cl.skip_to(target);
+                }
+                cycle = target;
+                continue;
+            }
+        }
+        cycle += 1;
+        let r = (rotate0 + ((cycle - 1 - start) % n as u64) as usize) % n;
+        let p = alive.partition_point(|&mi| members[mi].idx < r);
+        for pos in (p..alive.len()).chain(0..p) {
+            let mi = alive[pos];
+            let m = &mut members[mi];
+            let mut port = ShardPort {
+                chan: &mut *chan,
+                stats: &mut *m.stats,
+                shard: &mut *m.shard,
+                base: m.base,
+                latency,
+                ic_latency,
+            };
+            m.cl.tick(&mut port);
+        }
+        alive.retain(|&mi| {
+            if members[mi].cl.done() {
+                finishes.push((members[mi].idx, members[mi].cl.cycle));
+                false
+            } else {
+                true
+            }
+        });
+    }
+    GroupRun { finishes, hit_limit: false }
+}
+
+/// A cluster's memory port inside the parallel `System` tick: its HBM
+/// channel plus *only its own shard* of the backing store. The shard
+/// restriction is what makes channel groups disjoint; every sharded
+/// workload planner in this repo confines a cluster's DMA jobs to its
+/// [`SystemCfg::shard_stride`] window, so an out-of-shard access here is
+/// a planning bug and panics (pointing at the sequential debug knob)
+/// rather than silently racing.
+struct ShardPort<'a> {
+    chan: &'a mut HbmChannel,
+    stats: &'a mut HbmClusterStats,
+    shard: &'a mut [u8],
+    /// HBM address of `shard[0]`.
+    base: u64,
+    latency: u64,
+    ic_latency: u64,
+}
+
+impl ShardPort<'_> {
+    /// Mirror of [`HbmPort::schedule`] against the pre-resolved channel.
+    fn schedule(&mut self, now: u64, bytes: u64, is_read: bool) -> BurstTiming {
+        let (timing, queued) = schedule_burst(
+            &mut self.chan.busy_until,
+            now,
+            bytes,
+            self.chan.bytes_per_cycle,
+            self.latency,
+            self.ic_latency,
+        );
+        self.chan.bursts += 1;
+        self.chan.queue_cycles += queued;
+        self.stats.bursts += 1;
+        self.stats.queue_cycles += queued;
+        if is_read {
+            self.chan.bytes_read += bytes;
+            self.stats.bytes_read += bytes;
+        } else {
+            self.chan.bytes_written += bytes;
+            self.stats.bytes_written += bytes;
+        }
+        timing
+    }
+
+    fn local(&self, addr: u64, len: usize) -> std::ops::Range<usize> {
+        let lo = match addr.checked_sub(self.base) {
+            Some(off) => off as usize,
+            None => panic!(
+                "HBM access at {addr:#x} below this cluster's shard (base {:#x}): \
+                 cross-shard traffic is unsupported in the parallel tick — \
+                 rerun with SIM_TICK_JOBS=1",
+                self.base
+            ),
+        };
+        assert!(
+            lo + len <= self.shard.len(),
+            "HBM access at {addr:#x}+{len} beyond this cluster's shard \
+             ({:#x}..{:#x}): cross-shard traffic is unsupported in the \
+             parallel tick — rerun with SIM_TICK_JOBS=1",
+            self.base,
+            self.base + self.shard.len() as u64
+        );
+        lo..lo + len
+    }
+}
+
+impl MemPort for ShardPort<'_> {
+    fn schedule_read(&mut self, now: u64, bytes: u64) -> BurstTiming {
+        self.schedule(now, bytes, true)
+    }
+
+    fn schedule_write(&mut self, now: u64, bytes: u64) -> BurstTiming {
+        self.schedule(now, bytes, false)
+    }
+
+    fn bytes_per_cycle(&self) -> f64 {
+        self.chan.bytes_per_cycle
+    }
+
+    fn size(&self) -> usize {
+        self.base as usize + self.shard.len()
+    }
+
+    fn read_bytes(&self, addr: u64, len: usize) -> &[u8] {
+        let r = self.local(addr, len);
+        &self.shard[r]
+    }
+
+    fn write_bytes(&mut self, addr: u64, bytes: &[u8]) {
+        let r = self.local(addr, bytes.len());
+        self.shard[r].copy_from_slice(bytes);
     }
 }
 

@@ -1,0 +1,198 @@
+//! Fast-path equivalence property tests.
+//!
+//! The simulator's performance fast path (idle fast-forward in the
+//! cluster/system run loops plus the parallel channel-group system
+//! tick, `sim::fastpath`) is a pure wall-clock optimization: it must
+//! never change a modeled number. These tests pin that contract by
+//! running the same seed-fixed workloads with the fast path disabled
+//! (the naive tick-every-cycle loops) and enabled, and demanding
+//! bit-identical outputs, cycle counts, and aggregated run statistics —
+//! including `--jobs`-invariance of the parallel system tick and the
+//! hang-limit (`Err`) path.
+//!
+//! The overrides are thread-local and every libtest test runs on its
+//! own thread, so tests cannot leak modes into each other; each test
+//! still restores the defaults on exit for tidiness.
+
+use sssr::kernels::api::{self, borrow_all, execute, ExecCfg, TargetKind};
+use sssr::kernels::multi::run_system_smxdv;
+use sssr::kernels::{IdxWidth, Variant};
+use sssr::matgen;
+use sssr::sim::asm::Asm;
+use sssr::sim::fastpath;
+use sssr::sim::isa::{Program, T0, ZERO};
+use sssr::sim::{Cluster, ClusterCfg, SystemCfg};
+
+/// Run `f` with the fast path forced to `fast` (and, when given, the
+/// system tick worker count forced to `jobs`), restoring the defaults
+/// afterwards. The overrides must be set *before* `f` builds any
+/// `Cluster`/`System`, because clusters capture the fast-path flag at
+/// construction — which is exactly what this helper guarantees.
+fn with_mode<T>(fast: bool, jobs: Option<usize>, f: impl FnOnce() -> T) -> T {
+    fastpath::set_enabled(Some(fast));
+    fastpath::set_tick_jobs(jobs);
+    let out = f();
+    fastpath::set_enabled(None);
+    fastpath::set_tick_jobs(None);
+    out
+}
+
+/// A run's complete observable outcome, in exactly-comparable form
+/// (`f64`s as bit patterns via the `Debug` rendering of the output
+/// value; `RunStats` via its `Debug` rendering, which covers every
+/// counter field).
+fn fingerprint(run: &api::KernelRun) -> (u64, String, String) {
+    (run.report.cycles, format!("{:?}", run.output), format!("{:?}", run.report.stats))
+}
+
+/// Property: for every registry kernel that runs on the single-CC
+/// target, BASE and SSSR at 16-bit indices produce identical cycles,
+/// outputs, and stats with the fast path off and on.
+#[test]
+fn single_cc_registry_equivalence() {
+    for k in api::REGISTRY.iter() {
+        if !k.targets().contains(&TargetKind::SingleCc) {
+            continue;
+        }
+        let owned = k.sample(0xFA57, IdxWidth::U16);
+        let ops = borrow_all(&owned);
+        let cfg = ExecCfg::single_sized(k.tcdm_default());
+        for v in [Variant::Base, Variant::Sssr] {
+            let run = |fast| {
+                with_mode(fast, None, || {
+                    execute(*k, v, IdxWidth::U16, &ops, &cfg)
+                        .unwrap_or_else(|e| panic!("{} [{v:?}]: {e}", k.name()))
+                })
+            };
+            let naive = fingerprint(&run(false));
+            let fast = fingerprint(&run(true));
+            assert_eq!(naive, fast, "{} [{v:?}]: fast path changed the run", k.name());
+        }
+    }
+}
+
+/// Shared small system workload: 4 nnz-balanced row shards on 2 HBM
+/// channels. `shard_bytes` is shrunk from the 64 MiB paper default so
+/// the test does not allocate a 256 MiB backing store.
+fn small_system() -> SystemCfg {
+    SystemCfg { shard_bytes: 4 << 20, ..SystemCfg::paper_system(4, 2) }
+}
+
+/// Property: the multi-cluster system run is invariant under the fast
+/// path AND under the parallel-tick worker count (`SIM_TICK_JOBS`):
+/// every mode reproduces the sequential naive run bit-identically,
+/// per shard.
+#[test]
+fn system_jobs_invariance() {
+    let m = matgen::random_csr(0xA11, 96, 160, 2200);
+    let b = matgen::random_dense(0xA12, 160);
+    let cfg = small_system();
+    let run = |fast, jobs| {
+        with_mode(fast, Some(jobs), || run_system_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &cfg))
+    };
+    let baseline = run(false, 1);
+    let base_bits: Vec<u64> = baseline.result.iter().map(|x| x.to_bits()).collect();
+    for (fast, jobs) in [(false, 2), (true, 1), (true, 2), (true, 8)] {
+        let sys = run(fast, jobs);
+        let bits: Vec<u64> = sys.result.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(base_bits, bits, "fast={fast} jobs={jobs}: result diverged");
+        assert_eq!(baseline.report.cycles, sys.report.cycles, "fast={fast} jobs={jobs}");
+        assert_eq!(
+            format!("{:?}", baseline.report.stats),
+            format!("{:?}", sys.report.stats),
+            "fast={fast} jobs={jobs}: aggregate stats diverged"
+        );
+        for (a, z) in baseline.shards.iter().zip(&sys.shards) {
+            assert_eq!(a.rows, z.rows);
+            assert_eq!(a.cycles, z.cycles, "fast={fast} jobs={jobs}: shard finish time moved");
+            assert_eq!(format!("{:?}", a.hbm), format!("{:?}", z.hbm));
+        }
+    }
+}
+
+/// Regression for the system-layer lockstep inefficiency: one giant
+/// row pins cluster 0 while the other shard's clusters finish almost
+/// immediately and idle. The early-finishing clusters must not change
+/// any modeled number when the surviving cluster is fast-forwarded
+/// past them — and the skew itself must be visible in the per-shard
+/// finish times.
+#[test]
+fn skewed_shard_equivalence() {
+    // Row 0 is fully dense and carries nearly all nonzeros; contiguous
+    // nnz-balanced sharding cannot split a row, so it isolates row 0 on
+    // cluster 0 while cluster 1 drains its 63 single-nonzero rows
+    // quickly and then idles.
+    let ncols = 2048usize;
+    let heavy = ncols;
+    let nrows = 64usize;
+    let mut ptrs = vec![0u32; nrows + 1];
+    let mut idcs = Vec::new();
+    let mut vals = Vec::new();
+    for j in 0..heavy {
+        idcs.push(j as u32);
+        vals.push(1.0 + j as f64 * 0.5);
+    }
+    ptrs[1] = heavy as u32;
+    for r in 1..nrows {
+        idcs.push((r % ncols) as u32);
+        vals.push(r as f64);
+        ptrs[r + 1] = ptrs[r] + 1;
+    }
+    let m = sssr::formats::Csr::new(nrows, ncols, ptrs, idcs, vals);
+    let b = matgen::random_dense(0xBEEF, ncols);
+    let cfg = SystemCfg { shard_bytes: 4 << 20, ..SystemCfg::paper_system(2, 2) };
+    let run = |fast, jobs| {
+        with_mode(fast, Some(jobs), || run_system_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &cfg))
+    };
+    let naive = run(false, 1);
+    assert!(
+        naive.shards[1].cycles < naive.shards[0].cycles,
+        "workload is not skewed: {} !< {}",
+        naive.shards[1].cycles,
+        naive.shards[0].cycles
+    );
+    for (fast, jobs) in [(true, 1), (true, 2)] {
+        let sys = run(fast, jobs);
+        assert_eq!(naive.report.cycles, sys.report.cycles, "fast={fast} jobs={jobs}");
+        let bits = |s: &sssr::kernels::multi::SystemRun| {
+            s.result.iter().map(|x| x.to_bits()).collect::<Vec<u64>>()
+        };
+        assert_eq!(bits(&naive), bits(&sys), "fast={fast} jobs={jobs}");
+        for (a, z) in naive.shards.iter().zip(&sys.shards) {
+            assert_eq!(a.cycles, z.cycles, "fast={fast} jobs={jobs}: shard finish time moved");
+        }
+    }
+}
+
+/// A deadlocked cluster (core 0 waits at a barrier core 1 never
+/// reaches) exercises the `u64::MAX` idle horizon: the fast path must
+/// report the exact same hang — same `Err(limit)`, same final cycle,
+/// same stall accounting — as ticking every cycle to the cap.
+#[test]
+fn hang_limit_err_equivalence() {
+    let deadlock_progs = || -> Vec<Program> {
+        let mut a = Asm::new();
+        a.barrier();
+        a.halt();
+        let waiter = a.finish();
+        let mut b = Asm::new();
+        b.li(T0, 7);
+        b.add(T0, T0, ZERO);
+        b.halt();
+        let quitter = b.finish();
+        vec![waiter, quitter]
+    };
+    let cfg = ClusterCfg { cores: 2, ..ClusterCfg::paper_cluster() };
+    let limit = 5_000u64;
+    let run = |fast| {
+        with_mode(fast, None, || {
+            let mut cl = Cluster::new(cfg.clone(), deadlock_progs());
+            let r = cl.try_run_isolated(limit);
+            (r, cl.cycle, format!("{:?}", cl.stats()))
+        })
+    };
+    let naive = run(false);
+    let fast = run(true);
+    assert_eq!(naive.0, Err(limit));
+    assert_eq!(naive, fast, "fast path changed the hang-limit outcome");
+}
