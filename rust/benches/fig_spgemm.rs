@@ -1,0 +1,21 @@
+//! Regenerates the two-phase SpGEMM scaling sweep (`spgemm`:
+//! symbolic/numeric CSF SpGEMM squaring the graph corpus on the system
+//! target, SSSR vs BASE at 1/2/4/8 clusters) through the parallel
+//! experiment engine and writes `BENCH_spgemm.json` next to the other
+//! bench trajectories. Quick graphs by default; REPRO_FULL=1 for the
+//! corpus-sized instances.
+use std::path::Path;
+
+use sssr::experiments::{write_json, Runner};
+use sssr::harness as h;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let runner = Runner::new(0);
+    let spec = h::spec_by_name("spgemm").expect("spgemm spec registered");
+    let recs = runner.run(&spec);
+    spec.print(&recs);
+    let path = write_json(Path::new("."), &spec, &recs).expect("writing BENCH json");
+    println!("[wrote {}]", path.display());
+    println!("\n[fig_spgemm bench wall time: {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -337,6 +337,22 @@ pub(crate) struct MemRegion {
     pub bytes: u64,
 }
 
+impl MemRegion {
+    /// A whole private DRAM of `bytes` bytes (standalone cluster runs).
+    pub(crate) fn whole(bytes: u64) -> MemRegion {
+        MemRegion { base: 0, bytes }
+    }
+
+    /// Cluster `i`'s shard window of the shared HBM: `stride` bytes at
+    /// `i * stride`. Every system driver (SpMV, two-phase SpGEMM,
+    /// tricnt) places its per-cluster images through this so the
+    /// ShardPort confinement check — a cluster touching HBM outside its
+    /// window panics the parallel tick — holds by construction.
+    pub(crate) fn window(i: usize, stride: u64) -> MemRegion {
+        MemRegion { base: i as u64 * stride, bytes: stride }
+    }
+}
+
 /// DRAM image layout.
 struct DramImage {
     m_vals: u64,
@@ -640,7 +656,7 @@ pub(crate) fn run_cluster(
         cfg.ic_latency,
     );
     let bytes = dram.size() as u64;
-    let job = plan_job(variant, iw, m, operand, cfg, &mut dram, MemRegion { base: 0, bytes });
+    let job = plan_job(variant, iw, m, operand, cfg, &mut dram, MemRegion::whole(bytes));
     let mut cl = Cluster::new(cfg.clone(), vec![job.prog.clone(); cfg.cores]);
     job.apply(&mut cl);
     let cycles = cl

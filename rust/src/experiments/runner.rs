@@ -51,7 +51,10 @@ impl Runner {
     /// `wall_ms` is the host wall-clock of the whole point's measure
     /// call (attributed to each of its records), and a record that
     /// carries a `cycles` field additionally gets `sim_mcycles_per_s` =
-    /// simulated megacycles per host second.
+    /// simulated megacycles per host second. A record that already
+    /// carries its own `wall_ms` (e.g. the serve engine stamps the
+    /// engine-loop wall time per policy) keeps it — the point-level
+    /// stamp would only duplicate the key.
     fn measure_point(&self, spec: &ExperimentSpec, p: &Point) -> Vec<Record> {
         if !self.timed {
             return (spec.measure)(p);
@@ -65,7 +68,8 @@ impl Runner {
                     .f64("cycles")
                     .filter(|_| wall_ms > 0.0)
                     .map(|c| c / (wall_ms * 1e3));
-                r.num("wall_ms", wall_ms).opt_num("sim_mcycles_per_s", rate)
+                let r = if r.get("wall_ms").is_none() { r.num("wall_ms", wall_ms) } else { r };
+                r.opt_num("sim_mcycles_per_s", rate)
             })
             .collect()
     }

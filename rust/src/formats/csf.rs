@@ -171,6 +171,52 @@ impl Csf {
         dir
     }
 
+    /// Extract the contiguous *fiber* range `fibers` as its own CSF.
+    /// Row ids stay global and `nrows`/`ncols` are preserved, so the
+    /// slice is a shard view over the same index space — the unit of
+    /// multi-cluster SpGEMM work, recombined with [`Csf::concat`].
+    pub fn slice_fibers(&self, fibers: std::ops::Range<usize>) -> Csf {
+        let (a, b) = (
+            self.row_ptrs[fibers.start] as usize,
+            self.row_ptrs[fibers.end] as usize,
+        );
+        let row_ptrs = self.row_ptrs[fibers.clone()]
+            .iter()
+            .map(|p| p - self.row_ptrs[fibers.start])
+            .chain(std::iter::once((b - a) as u32))
+            .collect();
+        Csf {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            row_idcs: self.row_idcs[fibers].to_vec(),
+            row_ptrs,
+            col_idcs: self.col_idcs[a..b].to_vec(),
+            vals: self.vals[a..b].to_vec(),
+        }
+    }
+
+    /// Deterministic concatenation of row-disjoint shards whose fiber
+    /// row ids are globally increasing shard-to-shard (the inverse of
+    /// row-range sharding + [`Csf::slice_fibers`]). This is the System
+    /// targets' merge step: because A is sharded by contiguous row
+    /// ranges, each cluster's output fibers land in disjoint, ordered
+    /// row windows and the merge is a pure gather.
+    pub fn concat(nrows: usize, ncols: usize, shards: &[Csf]) -> Csf {
+        let mut out = Csf::empty(nrows, ncols);
+        for s in shards {
+            assert_eq!((s.nrows, s.ncols), (nrows, ncols), "shard shape mismatch");
+            if let (Some(&prev), Some(&first)) = (out.row_idcs.last(), s.row_idcs.first()) {
+                assert!(prev < first, "shards out of row order: {prev} >= {first}");
+            }
+            let base = out.nnz() as u32;
+            out.row_idcs.extend_from_slice(&s.row_idcs);
+            out.row_ptrs.extend(s.row_ptrs[1..].iter().map(|p| base + p));
+            out.col_idcs.extend_from_slice(&s.col_idcs);
+            out.vals.extend_from_slice(&s.vals);
+        }
+        out
+    }
+
     pub fn to_dense(&self) -> Vec<Vec<f64>> {
         let mut d = vec![vec![0.0; self.ncols]; self.nrows];
         for (r, idx, val) in self.fibers() {
@@ -258,6 +304,31 @@ mod tests {
         let t = Csf::from_csr(&m);
         assert_eq!(t.row_directory(), m.ptrs);
         assert_eq!(Csf::empty(3, 3).row_directory(), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn csf_slice_concat_roundtrip() {
+        for seed in [44, 45] {
+            let m = crate::matgen::random_csr(seed, 40, 33, 180);
+            let t = Csf::from_csr(&m);
+            for k in [1, 2, 3] {
+                let cuts: Vec<usize> =
+                    (0..=k).map(|i| i * t.nfibers() / k).collect();
+                let shards: Vec<Csf> = cuts
+                    .windows(2)
+                    .map(|w| t.slice_fibers(w[0]..w[1]))
+                    .collect();
+                for s in &shards {
+                    s.validate().unwrap();
+                }
+                assert_eq!(Csf::concat(t.nrows, t.ncols, &shards), t);
+            }
+        }
+        // empty shards are absorbed
+        let t = Csf::from_csr(&gappy_csr());
+        let e = t.slice_fibers(0..0);
+        assert_eq!(e.nfibers(), 0);
+        assert_eq!(Csf::concat(t.nrows, t.ncols, &[e, t.clone()]), t);
     }
 
     #[test]

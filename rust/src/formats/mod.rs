@@ -224,32 +224,15 @@ impl Csr {
     /// `(i+1)/k` of the total, and every shard gets at least one row.
     /// The ranges are disjoint and cover `0..nrows` exactly.
     pub fn row_partition(&self, k: usize) -> Vec<std::ops::Range<usize>> {
-        assert!(k >= 1, "need at least one shard");
         assert!(
             k <= self.nrows,
             "cannot split {} rows into {k} shards",
             self.nrows
         );
-        let total = self.nnz();
-        let mut out = Vec::with_capacity(k);
-        let mut r0 = 0usize;
-        for i in 0..k {
-            let r1 = if i == k - 1 {
-                self.nrows
-            } else {
-                // leave at least one row for each remaining shard
-                let cap = self.nrows - (k - 1 - i);
-                let goal = (total * (i + 1)).div_ceil(k);
-                let mut r1 = r0 + 1;
-                while r1 < cap && (self.ptrs[r1] as usize) < goal {
-                    r1 += 1;
-                }
-                r1
-            };
-            out.push(r0..r1);
-            r0 = r1;
-        }
-        out
+        let costs: Vec<u64> = (0..self.nrows)
+            .map(|r| (self.ptrs[r + 1] - self.ptrs[r]) as u64)
+            .collect();
+        partition_by_cost(&costs, k)
     }
 
     /// Extract the contiguous row range `rows` as its own CSR over the
@@ -375,6 +358,43 @@ impl Bcsr {
         }
         d
     }
+}
+
+/// Split `0..costs.len()` into `k` contiguous shards balanced by an
+/// arbitrary per-item cost model: shard `i` ends where the cumulative
+/// cost crosses `(i+1)/k` of the total, and every shard gets at least
+/// one item. Generalizes [`Csr::row_partition`]'s nnz balance — the
+/// system SpGEMM drivers feed it per-row Gustavson flop counts so
+/// clusters receive equal *work*, not equal nonzeros. The ranges are
+/// disjoint and cover `0..costs.len()` exactly.
+pub fn partition_by_cost(costs: &[u64], k: usize) -> Vec<std::ops::Range<usize>> {
+    let n = costs.len();
+    assert!(k >= 1, "need at least one shard");
+    assert!(k <= n, "cannot split {n} items into {k} shards");
+    let mut prefix = vec![0u128; n + 1];
+    for (i, c) in costs.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + *c as u128;
+    }
+    let total = prefix[n];
+    let mut out = Vec::with_capacity(k);
+    let mut r0 = 0usize;
+    for i in 0..k {
+        let r1 = if i == k - 1 {
+            n
+        } else {
+            // leave at least one item for each remaining shard
+            let cap = n - (k - 1 - i);
+            let goal = (total * (i as u128 + 1)).div_ceil(k as u128);
+            let mut r1 = r0 + 1;
+            while r1 < cap && prefix[r1] < goal {
+                r1 += 1;
+            }
+            r1
+        };
+        out.push(r0..r1);
+        r0 = r1;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -557,6 +577,28 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn partition_by_cost_balances_weighted_items() {
+        // One dominating item must be isolated in its own shard.
+        let costs = [100u64, 1, 1, 1, 1, 1, 1, 1];
+        let parts = partition_by_cost(&costs, 4);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[0], 0..1, "the heavy item gets its own shard");
+        assert_eq!(parts[3].end, costs.len());
+        for w in parts.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "shards must be contiguous");
+        }
+        // All-zero costs still cover every item with non-empty shards.
+        let parts = partition_by_cost(&[0u64; 6], 3);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 6);
+        for p in &parts {
+            assert!(!p.is_empty());
+        }
+        // Uniform costs distribute evenly.
+        let parts = partition_by_cost(&[7u64; 12], 4);
+        assert!(parts.iter().all(|p| p.len() == 3), "{parts:?}");
     }
 
     #[test]

@@ -274,6 +274,99 @@ pub fn smxsm_csf_flops(a: &Csf, b: &Csf) -> u64 {
     flops
 }
 
+/// Symbolic (structure-only) pass of the row-wise CSF SpGEMM: the exact
+/// per-output-fiber nonzero count — `|∪_k pat(B[k,:])|` over the stored
+/// `k` of each A fiber — plus the exact total. The union pattern grows
+/// monotonically along the accumulation chain, so each entry also
+/// bounds every numeric intermediate of its fiber: the numeric pass
+/// streams into allocations of exactly this size, never more. Entries
+/// align with `a.fibers()`; a fiber whose union is empty predicts 0
+/// (the numeric pass stores no output fiber for it).
+pub fn smxsm_csf_symbolic(a: &Csf, b: &Csf) -> (Vec<usize>, usize) {
+    assert_eq!(a.ncols, b.nrows, "inner dims differ");
+    let mut sizes = Vec::with_capacity(a.nfibers());
+    let mut total = 0usize;
+    for (_, idx, _) in a.fibers() {
+        let mut acc: Vec<u32> = vec![];
+        for &k in idx {
+            if let Ok(f) = b.row_idcs.binary_search(&k) {
+                let (_, bi, _) = b.fiber(f);
+                let mut merged = Vec::with_capacity(acc.len() + bi.len());
+                let (mut i, mut j) = (0usize, 0usize);
+                while i < acc.len() || j < bi.len() {
+                    match (acc.get(i), bi.get(j)) {
+                        (Some(&x), Some(&y)) if x == y => {
+                            merged.push(x);
+                            i += 1;
+                            j += 1;
+                        }
+                        (Some(&x), Some(&y)) if x < y => {
+                            merged.push(x);
+                            i += 1;
+                        }
+                        (Some(_), Some(&y)) => {
+                            merged.push(y);
+                            j += 1;
+                        }
+                        (Some(&x), None) => {
+                            merged.push(x);
+                            i += 1;
+                        }
+                        (None, Some(&y)) => {
+                            merged.push(y);
+                            j += 1;
+                        }
+                        (None, None) => unreachable!(),
+                    }
+                }
+                acc = merged;
+            }
+        }
+        total += acc.len();
+        sizes.push(acc.len());
+    }
+    (sizes, total)
+}
+
+/// Per-matrix-row Gustavson work model for flop-balanced sharding of
+/// the CSF SpGEMM: row `r` of A costs `Σ_k (1 + nnz(B[k,:]))` over its
+/// stored entries — the scaled-union input elements each accumulation
+/// step streams, with empty-B-row steps still paying the accumulator
+/// pass. Rows absent from A's fiber directory cost 0, so the result
+/// feeds [`crate::formats::partition_by_cost`] over `0..a.nrows`
+/// directly.
+pub fn smxsm_csf_row_costs(a: &Csf, b: &Csf) -> Vec<u64> {
+    assert_eq!(a.ncols, b.nrows, "inner dims differ");
+    let mut costs = vec![0u64; a.nrows];
+    for (r, idx, _) in a.fibers() {
+        let mut c = 0u64;
+        for &k in idx {
+            c += 1;
+            if let Ok(f) = b.row_idcs.binary_search(&k) {
+                c += (b.row_ptrs[f + 1] - b.row_ptrs[f]) as u64;
+            }
+        }
+        costs[r as usize] = c;
+    }
+    costs
+}
+
+/// Per-vertex work model for edge-balanced sharding of the triangle
+/// count: vertex `u` costs the two-pointer scan length `|N(u)| + |N(v)|`
+/// summed over its forward edges `(u, v), v > u` — the intersection
+/// jobs the `tricnt` kernel issues when it owns row `u`.
+pub fn tricnt_row_costs(g: &Csr) -> Vec<u64> {
+    let mut costs = vec![0u64; g.nrows];
+    for u in 0..g.nrows {
+        let (nu, _) = g.row(u);
+        for &v in nu.iter().filter(|&&v| v as usize > u) {
+            let (nv, _) = g.row(v as usize);
+            costs[u] += (nu.len() + nv.len()) as u64;
+        }
+    }
+    costs
+}
+
 /// Triangle count of an undirected graph given as a symmetric adjacency
 /// pattern with zero diagonal: Σ over edges (u,v), u < v, of
 /// |N(u) ∩ N(v)| counts every triangle three times (once per edge).
@@ -462,6 +555,63 @@ mod tests {
             // flops bound the result size and dominate the nnz
             assert!(smxsm_csf_flops(&a, &b) >= c.nnz() as u64);
         }
+    }
+
+    #[test]
+    fn symbolic_sizes_match_numeric_output_exactly() {
+        let mut r = Pcg::new(21);
+        for _ in 0..25 {
+            let (n, k, m) = (
+                1 + r.below(14) as usize,
+                1 + r.below(14) as usize,
+                1 + r.below(14) as usize,
+            );
+            let a = rand_csf(&mut r, n, k, r.below((n * k) as u64 / 2 + 1) as usize);
+            let b = rand_csf(&mut r, k, m, r.below((k * m) as u64 / 2 + 1) as usize);
+            let (sizes, total) = smxsm_csf_symbolic(&a, &b);
+            let c = smxsm_csf(&a, &b);
+            assert_eq!(sizes.len(), a.nfibers());
+            assert_eq!(total, sizes.iter().sum::<usize>());
+            assert_eq!(total, c.nnz(), "total prediction must be exact");
+            // Per-fiber: every nonzero prediction is an output fiber of
+            // exactly that length; zero predictions produce no fiber.
+            let mut f_out = 0usize;
+            for (fa, (ra, _, _)) in a.fibers().enumerate() {
+                if sizes[fa] == 0 {
+                    continue;
+                }
+                let (rc, ic, _) = c.fiber(f_out);
+                assert_eq!(rc, ra, "output fiber order follows A's");
+                assert_eq!(ic.len(), sizes[fa], "fiber {fa} size prediction");
+                f_out += 1;
+            }
+            assert_eq!(f_out, c.nfibers(), "no unpredicted output fibers");
+        }
+    }
+
+    #[test]
+    fn row_cost_models_cover_work() {
+        let mut r = Pcg::new(22);
+        let a = rand_csf(&mut r, 20, 16, 60);
+        let b = rand_csf(&mut r, 16, 24, 70);
+        let costs = smxsm_csf_row_costs(&a, &b);
+        assert_eq!(costs.len(), a.nrows);
+        // Stored fibers cost at least one unit per entry; absent rows 0.
+        let stored: Vec<usize> = a.fibers().map(|(r, _, _)| r as usize).collect();
+        for r0 in 0..a.nrows {
+            if stored.contains(&r0) {
+                assert!(costs[r0] > 0);
+            } else {
+                assert_eq!(costs[r0], 0);
+            }
+        }
+        let g = crate::matgen::undirected_graph(3, 6, 4);
+        let tc = tricnt_row_costs(&g);
+        assert_eq!(tc.len(), g.nrows);
+        assert!(tc.iter().sum::<u64>() > 0);
+        // Both models feed the cost partitioner.
+        let parts = crate::formats::partition_by_cost(&tc, 4);
+        assert_eq!(parts.last().unwrap().end, g.nrows);
     }
 
     #[test]

@@ -830,6 +830,100 @@ pub fn spec_graph() -> ExperimentSpec {
 }
 
 // ======================================================================
+// spgemm — two-phase SpGEMM at system scale (symbolic/numeric split)
+// ======================================================================
+
+/// Cluster configuration of the `spgemm` sweep: the Table-1 cluster
+/// with the TCDM widened so one cluster can hold its exactly-sized
+/// output shard of the squared adjacency (the symbolic pass guarantees
+/// no over-allocation; the quick graphs fit in 8 MiB with headroom).
+fn spgemm_cluster() -> ClusterCfg {
+    ClusterCfg { tcdm_bytes: 8 << 20, ..ClusterCfg::paper_cluster() }
+}
+
+fn spgemm_columns() -> Vec<Column> {
+    vec![
+        Column::new("graph", "graph", 14, ColFmt::Str),
+        Column::new("clusters", "clus", 5, ColFmt::Int),
+        Column::new("base_cycles", "base cyc", 12, ColFmt::Int),
+        Column::new("sssr_cycles", "sssr cyc", 12, ColFmt::Int),
+        Column::new("speedup", "speedup", 8, ColFmt::FixedX(2)),
+        Column::new("scaling", "vs 1clus", 8, ColFmt::FixedX(2)),
+        Column::new("efficiency", "par eff", 8, ColFmt::Fixed(2)),
+        Column::new("skew_cycles", "skew", 9, ColFmt::Int),
+    ]
+}
+
+/// `spgemm`: two-phase (symbolic/numeric) CSF SpGEMM squaring the graph
+/// corpus' adjacencies on the system target — SSSR vs BASE at every
+/// [`SCALE_CLUSTERS`] count (`repro sweep spgemm` → `BENCH_spgemm.json`).
+/// Every run goes through the registry's verified execute path, so each
+/// grid point also re-checks the N-cluster result against the host
+/// oracle. The 1-cluster SSSR baseline of the `scaling` column is shared
+/// per matrix through a `OnceLock` (value-deterministic under `--jobs`).
+pub fn spec_spgemm() -> ExperimentSpec {
+    let corpus = graph_corpus();
+    let mut points = vec![];
+    for (i, e) in corpus.iter().enumerate() {
+        for &k in &SCALE_CLUSTERS {
+            points.push(Point::at(i).label(e.name).x(k as f64));
+        }
+    }
+    let baselines: Vec<std::sync::OnceLock<u64>> =
+        corpus.iter().map(|_| std::sync::OnceLock::new()).collect();
+    ExperimentSpec {
+        name: "spgemm",
+        title: "spgemm: two-phase system SpGEMM (symbolic/numeric), SSSR vs BASE".into(),
+        columns: spgemm_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let i = p.idx.unwrap();
+            let e = &corpus[i];
+            let clusters = p.x.unwrap() as usize;
+            let t = crate::formats::Csf::from_csr(&e.matrix);
+            let ops = [Operand::Csf(&t), Operand::Csf(&t)];
+            let ec = |k: usize| {
+                ExecCfg::system(SystemCfg {
+                    cluster: spgemm_cluster(),
+                    ..SystemCfg::paper_system(k, k)
+                })
+                .with_limit(4_000_000_000)
+            };
+            let base = must_execute("smxsm_csf", Variant::Base, IdxWidth::U16, &ops, &ec(clusters));
+            let sssr = must_execute("smxsm_csf", Variant::Sssr, IdxWidth::U16, &ops, &ec(clusters));
+            let skew = match &sssr.detail {
+                Detail::System { reduction, .. } => reduction.skew_cycles,
+                _ => unreachable!("spgemm sweeps run on the system target"),
+            };
+            // 1-cluster SSSR reference; the sim is deterministic, so the
+            // cell is value-identical whichever grid point fills it
+            let one = *baselines[i].get_or_init(|| {
+                if clusters == 1 {
+                    sssr.report.cycles
+                } else {
+                    must_execute("smxsm_csf", Variant::Sssr, IdxWidth::U16, &ops, &ec(1))
+                        .report
+                        .cycles
+                }
+            });
+            let scaling = one as f64 / sssr.report.cycles as f64;
+            vec![Record::new("spgemm")
+                .str("graph", e.name)
+                .int("nodes", e.matrix.nrows as i64)
+                .int("edges", (e.matrix.nnz() / 2) as i64)
+                .int("clusters", clusters as i64)
+                .int("base_cycles", base.report.cycles as i64)
+                .int("sssr_cycles", sssr.report.cycles as i64)
+                .num("speedup", base.report.cycles as f64 / sssr.report.cycles as f64)
+                .num("scaling", scaling)
+                .num("efficiency", scaling / clusters as f64)
+                .int("skew_cycles", skew as i64)
+                .int("payload", sssr.report.payload as i64)]
+        }),
+    }
+}
+
+// ======================================================================
 // serve — the sparse serving engine sweep (policy × clusters × rate ×
 // batch window × cache on/off)
 // ======================================================================
@@ -930,7 +1024,9 @@ fn serve_columns() -> Vec<Column> {
 /// Build a `serve` spec over an explicit combo grid (the default sweep
 /// uses [`serve_combos`]; tests shrink the grid and request count).
 /// Every grid point serves the same seeded stream through one
-/// single-threaded engine run, so records are `--jobs`-invariant.
+/// single-threaded engine run, so all simulated fields are
+/// `--jobs`-invariant; only the per-policy `wall_ms` /
+/// `wall_us_per_request` host stamps vary run to run.
 pub fn spec_serve_with(requests: usize, combos: Vec<ServeCombo>) -> ExperimentSpec {
     let corpus = serve::serve_corpus();
     let points = combos
@@ -976,7 +1072,12 @@ pub fn spec_serve_with(requests: usize, combos: Vec<ServeCombo>) -> ExperimentSp
                 .int("batches", s.batches as i64)
                 .num("avg_batch", s.avg_batch)
                 .num("energy_uj", s.energy_j * 1e6)
-                .int("makespan", s.makespan as i64)]
+                .int("makespan", s.makespan as i64)
+                // engine-loop host wall time per policy; the timed
+                // runner leaves this stamp alone (it only fills the key
+                // when the measure closure didn't)
+                .num("wall_ms", s.wall_ms)
+                .num("wall_us_per_request", s.wall_us_per_request)]
         }),
     }
 }
@@ -1326,10 +1427,11 @@ pub fn spec_simperf() -> ExperimentSpec {
 
 /// Every figure sweep as a (name, constructor) pair, in `repro all`
 /// order (the paper figures plus the system-layer `scale` family, the
-/// CSF/graph `graph` sweep, and the serving-engine `serve` sweep).
+/// CSF/graph `graph` sweep, the two-phase `spgemm` scaling sweep, and
+/// the serving-engine `serve` sweep).
 /// Construction generates the sweep's shared workloads (corpus,
 /// operands) eagerly, so build one spec at a time and drop it before
-/// the next — materializing all nineteen at
+/// the next — materializing all twenty at
 /// once holds every workload in memory simultaneously. Tables 2/3 are available via
 /// [`spec_table2`]/[`spec_table3`] (Table 2's bottom row derives from
 /// Fig. 5a records, see [`table2_ours`]).
@@ -1351,6 +1453,7 @@ pub const SPEC_BUILDERS: &[(&str, fn() -> ExperimentSpec)] = &[
     ("scale", spec_scale),
     ("scale_sv", spec_scale_sv),
     ("graph", spec_graph),
+    ("spgemm", spec_spgemm),
     ("serve", spec_serve),
     ("simperf", spec_simperf),
 ];
@@ -1424,7 +1527,7 @@ mod tests {
 
     #[test]
     fn spec_registry_is_consistent() {
-        assert_eq!(SPEC_BUILDERS.len(), 19);
+        assert_eq!(SPEC_BUILDERS.len(), 20);
         for (n, build) in SPEC_BUILDERS {
             let s = build();
             assert_eq!(s.name, *n);

@@ -688,7 +688,7 @@ pub enum OutSpec {
     },
 }
 
-fn read_out(
+pub(crate) fn read_out(
     t: &Tcdm,
     out: &OutSpec,
     iw: IdxWidth,
@@ -912,6 +912,23 @@ pub trait Kernel: Sync {
     /// and CLI demos, sized to fit `iw`'s index range.
     fn sample(&self, seed: u64, iw: IdxWidth) -> Vec<OwnedOperand>;
 
+    /// Single-CC execution override for kernels whose run is not one
+    /// program/place/run pass — the two-phase SpGEMM driver runs a
+    /// symbolic sizing pass and a numeric pass as two back-to-back
+    /// simulations. Return `None` (the default) to take the generic
+    /// single-pass path; `tcdm_bytes` = 0 keeps the Table-1 default.
+    fn run_single_cc(
+        &self,
+        variant: Variant,
+        iw: IdxWidth,
+        ops: &[Operand],
+        tcdm_bytes: usize,
+        limit: u64,
+    ) -> Option<Result<(Value, Report, Detail), KernelError>> {
+        let _ = (variant, iw, ops, tcdm_bytes, limit);
+        None
+    }
+
     /// Cluster-target execution (§4.2). Sharded matrix kernels override.
     fn run_cluster(
         &self,
@@ -989,13 +1006,17 @@ pub fn execute(
     let (output, report, detail) = match &cfg.target {
         Target::SingleCc { tcdm_bytes } => {
             let limit = cfg.limit.unwrap_or(SINGLE_CC_LIMIT);
-            let prog = kernel.program(variant, iw, ops, cfg);
-            let mut cc = Cc::sized(prog, *tcdm_bytes);
-            let out = kernel.place(&mut cc, iw, ops);
-            let payload = kernel.payload(ops);
-            let (cl, cycles, stats) = cc.run(limit).map_err(attribute)?;
-            let output = read_out(&cl.tcdm, &out, iw, kernel.name())?;
-            (output, Report::from_run(cycles, payload, stats), Detail::SingleCc)
+            if let Some(res) = kernel.run_single_cc(variant, iw, ops, *tcdm_bytes, limit) {
+                res.map_err(attribute)?
+            } else {
+                let prog = kernel.program(variant, iw, ops, cfg);
+                let mut cc = Cc::sized(prog, *tcdm_bytes);
+                let out = kernel.place(&mut cc, iw, ops);
+                let payload = kernel.payload(ops);
+                let (cl, cycles, stats) = cc.run(limit).map_err(attribute)?;
+                let output = read_out(&cl.tcdm, &out, iw, kernel.name())?;
+                (output, Report::from_run(cycles, payload, stats), Detail::SingleCc)
+            }
         }
         Target::Cluster(ccfg) => kernel
             .run_cluster(variant, iw, ops, ccfg, cfg.limit.unwrap_or(CLUSTER_LIMIT))

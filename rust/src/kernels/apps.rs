@@ -11,18 +11,27 @@
 //! keep the Table-1 128 KiB TCDM ([`super::api::Kernel::tcdm_default`]
 //! = 0).
 
+use std::ops::Range;
+
+use crate::coordinator::MemRegion;
 use crate::formats::{ops, Csr, SpVec};
 use crate::matgen;
 use crate::sim::asm::Asm;
+use crate::sim::dram::Dram;
 use crate::sim::isa::{ssr_mode, SsrField as F, *};
-use crate::sim::Program;
+use crate::sim::{
+    Cluster, ClusterCfg, DmaSchedule, Hbm, MemPort, Program, RunStats, System, SystemCfg,
+};
 
 use super::api::{
     self, check_width, csr_at, dense_at, expect_kinds, idx_at, spvec_at, write_f64s, write_idx,
-    write_ptrs, Cc, ExecCfg, Kernel, KernelError, Operand, OutSpec, OwnedOperand, Value,
+    write_ptrs, Cc, Detail, ExecCfg, Kernel, KernelError, Operand, OutSpec, OwnedOperand,
+    TargetKind, Value,
 };
+use super::csf::{partition_padded, poke_f64s, poke_idx, poke_ptrs, push_dma};
+use super::multi::{add_stats, ReduceStats, ShardRun};
 use super::sparse_dense::cfg_imm;
-use super::{IdxWidth, Report, Variant};
+use super::{Arena, IdxWidth, Report, Variant};
 
 /// 1D stencil: out[p] = sum_k w[k] * grid[p + off[k]] for interior
 /// points. The stencil is stored as an index array streamed per point
@@ -403,9 +412,19 @@ pub fn run_codebook_decode(
 /// triangle count (each triangle is seen once per edge), so the final
 /// step scales by the preset 1/3 in `fa0`.
 ///
-/// Registers: A0 = unit values, A1 = column indices, A4 = result cell,
-/// A5 = row pointers, A6 = n rows; fa0 = 1/3, fa1 = 1.0 (preset).
+/// Registers: A0 = unit values, A1 = column indices, A2 = start vertex
+/// (defaults to 0), A4 = result cell, A5 = row pointers, A6 = end
+/// vertex (exclusive); fa0 = scale factor, fa1 = 1.0 (preset).
 pub fn tricnt_sssr(iw: IdxWidth) -> Program {
+    tricnt_sssr_prog(iw, false)
+}
+
+/// Body of [`tricnt_sssr`], parameterized for multi-core phases: the
+/// edge sweep covers the vertex range `[a2, a6)` so nnz-balanced row
+/// shards run the identical per-edge instruction sequence, and
+/// `barriers` brackets the body with the cluster barrier pair that
+/// fences the input-DMA / compute / writeback-DMA phases.
+pub fn tricnt_sssr_prog(iw: IdxWidth, barriers: bool) -> Program {
     let ib = iw.bytes() as i64;
     let lg = iw.log2();
     let mut a = Asm::new();
@@ -414,9 +433,13 @@ pub fn tricnt_sssr(iw: IdxWidth) -> Program {
     cfg_imm(&mut a, 1, F::IdxSize, lg as i64);
     a.li(S10, ssr_mode::INTERSECT);
     a.fcvt_d_w_zero(FT3); // running match total
-    a.li(S6, 0); // u
-    a.mv(S5, A5); // row-pointer cursor
-    a.beq(A6, ZERO, "done");
+    if barriers {
+        a.barrier(); // inputs resident
+    }
+    a.mv(S6, A2); // u = start vertex
+    a.slli(T0, A2, 2);
+    a.add(S5, A5, T0); // row-pointer cursor
+    a.beq(S6, A6, "done");
     a.label("urow");
     a.lwu(T0, S5, 0);
     a.lwu(T1, S5, 4);
@@ -464,6 +487,9 @@ pub fn tricnt_sssr(iw: IdxWidth) -> Program {
     a.fmul_d(FT3, FT3, FA0); // matches / 3 = triangles
     a.fsd(FT3, A4, 0);
     a.fpu_fence();
+    if barriers {
+        a.barrier(); // result stored; release writeback
+    }
     a.ssr_disable();
     a.halt();
     a.finish()
@@ -473,13 +499,23 @@ pub fn tricnt_sssr(iw: IdxWidth) -> Program {
 /// two-pointer intersection per edge (pattern only — no value loads,
 /// `fadd` of the preset 1.0 per match).
 pub fn tricnt_base(iw: IdxWidth) -> Program {
+    tricnt_base_prog(iw, false)
+}
+
+/// Body of [`tricnt_base`]; see [`tricnt_sssr_prog`] for the range and
+/// barrier parameterization.
+pub fn tricnt_base_prog(iw: IdxWidth, barriers: bool) -> Program {
     let ib = iw.bytes() as i64;
     let lg = iw.log2();
     let mut a = Asm::new();
     a.fcvt_d_w_zero(FT3);
-    a.li(S6, 0);
-    a.mv(S5, A5);
-    a.beq(A6, ZERO, "done");
+    if barriers {
+        a.barrier(); // inputs resident
+    }
+    a.mv(S6, A2); // u = start vertex
+    a.slli(T0, A2, 2);
+    a.add(S5, A5, T0); // row-pointer cursor
+    a.beq(S6, A6, "done");
     a.label("urow");
     a.lwu(T0, S5, 0);
     a.lwu(T1, S5, 4);
@@ -532,6 +568,9 @@ pub fn tricnt_base(iw: IdxWidth) -> Program {
     a.fmul_d(FT3, FT3, FA0);
     a.fsd(FT3, A4, 0);
     a.fpu_fence();
+    if barriers {
+        a.barrier(); // result stored; release writeback
+    }
     a.halt();
     a.finish()
 }
@@ -557,6 +596,29 @@ impl Kernel for Tricnt {
     }
     fn tcdm_default(&self) -> usize {
         0 // Table-1 128 KiB, as the §3.3 demos use
+    }
+    fn targets(&self) -> &'static [TargetKind] {
+        &[TargetKind::SingleCc, TargetKind::Cluster, TargetKind::System]
+    }
+    fn run_cluster(
+        &self,
+        variant: Variant,
+        iw: IdxWidth,
+        ops: &[Operand],
+        cfg: &ClusterCfg,
+        limit: u64,
+    ) -> Result<(Value, Report, Detail), KernelError> {
+        run_cluster_tricnt(variant, iw, csr_at(ops, 0), cfg, limit)
+    }
+    fn run_system(
+        &self,
+        variant: Variant,
+        iw: IdxWidth,
+        ops: &[Operand],
+        cfg: &SystemCfg,
+        limit: u64,
+    ) -> Result<(Value, Report, Detail), KernelError> {
+        run_system_tricnt(variant, iw, csr_at(ops, 0), cfg, limit)
     }
     fn validate(&self, ops: &[Operand], iw: IdxWidth) -> Result<(), KernelError> {
         expect_kinds(self.name(), self.signature(), ops, &["Csr"])?;
@@ -615,6 +677,235 @@ impl Kernel for Tricnt {
         let scale = if iw == IdxWidth::U8 { 7 } else { 8 };
         vec![OwnedOperand::Csr(matgen::undirected_graph(seed, scale, 4))]
     }
+}
+
+// =====================================================================
+// tricnt scale-out: edge-partitioned cluster and system drivers
+// =====================================================================
+
+/// One planned triangle-counting cluster pass: the shared adjacency
+/// image, per-core pivot-vertex ranges, and the three-phase DMA schedule
+/// (inputs → compute → writeback). `d_out` is the DRAM address of the
+/// per-core raw match-count cells.
+struct TriPass {
+    prog: Program,
+    core_regs: Vec<Vec<(u8, i64)>>,
+    schedule: DmaSchedule,
+    d_out: u64,
+}
+
+impl TriPass {
+    fn build(&self, cfg: &ClusterCfg) -> Cluster {
+        let mut cl = Cluster::new(cfg.clone(), vec![self.prog.clone(); cfg.cores]);
+        for (c, regs) in self.core_regs.iter().enumerate() {
+            for &(r, v) in regs {
+                cl.set_reg(c, r, v);
+            }
+            // raw match counts per core: the host applies the final 1/3
+            // once, keeping the reduction bitwise identical to single-CC
+            cl.ccs[c].fpu.regs[FA0 as usize] = 1.0;
+            cl.ccs[c].fpu.regs[FA1 as usize] = 1.0;
+        }
+        cl.set_dma_schedule(self.schedule.clone());
+        cl
+    }
+}
+
+/// Plan one cluster's edge-partitioned triangle-counting pass. The full
+/// adjacency stays resident (an intersection reaches arbitrary N(v)),
+/// each core sweeps an nnz-balanced pivot-vertex range `[a2, a6)`, and
+/// writes its raw match count to its own output cell.
+fn plan_tricnt_pass(
+    variant: Variant,
+    iw: IdxWidth,
+    g: &Csr,
+    core_rows: &[Range<usize>],
+    cfg: &ClusterCfg,
+    mem: &mut dyn MemPort,
+    region: MemRegion,
+) -> TriPass {
+    let ib = iw.bytes();
+    let nnz = g.nnz() as u64;
+    let nptr = g.nrows as u64 + 1;
+    // DRAM image inside this cluster's memory window
+    let mut dr = Arena::new(region.base, region.base + region.bytes);
+    let d_vals = dr.alloc_f64(nnz);
+    let d_idcs = dr.alloc_idx(nnz, iw);
+    let d_ptrs = dr.alloc(4 * nptr);
+    let d_out = dr.alloc_f64(cfg.cores as u64);
+    let ones = vec![1.0; g.nnz()];
+    poke_f64s(mem, d_vals, &ones);
+    poke_idx(mem, d_idcs, &g.idcs, iw);
+    poke_ptrs(mem, d_ptrs, &g.ptrs);
+    // TCDM layout mirrors the DRAM image
+    let mut ar = Arena::new(0, cfg.tcdm_bytes as u64);
+    let t_vals = ar.alloc_f64(nnz);
+    let t_idcs = ar.alloc_idx(nnz, iw);
+    let t_ptrs = ar.alloc(4 * nptr);
+    let t_out = ar.alloc_f64(cfg.cores as u64);
+    let core_regs = core_rows
+        .iter()
+        .enumerate()
+        .map(|(c, vr)| {
+            vec![
+                (A0, t_vals as i64),
+                (A1, t_idcs as i64),
+                (A2, vr.start as i64),
+                (A4, (t_out + 8 * c as u64) as i64),
+                (A5, t_ptrs as i64),
+                (A6, vr.end as i64),
+            ]
+        })
+        .collect();
+    let mut inputs = Vec::new();
+    push_dma(&mut inputs, d_vals, t_vals, nnz * 8, true);
+    push_dma(&mut inputs, d_idcs, t_idcs, nnz * ib, true);
+    push_dma(&mut inputs, d_ptrs, t_ptrs, 4 * nptr, true);
+    let mut writeback = Vec::new();
+    push_dma(&mut writeback, d_out, t_out, cfg.cores as u64 * 8, false);
+    let prog = match variant {
+        Variant::Base => tricnt_base_prog(iw, true),
+        Variant::Sssr => tricnt_sssr_prog(iw, true),
+        Variant::Ssr => unreachable!("variant capability checked by execute"),
+    };
+    let schedule = DmaSchedule { phases: vec![inputs, Vec::new(), writeback] };
+    TriPass { prog, core_regs, schedule, d_out }
+}
+
+/// Host-side match count restricted to pivot vertices `rows`: the share
+/// of [`ops::triangle_matches`] contributed by a shard sweeping that
+/// vertex range (Σ over edges (u,v) with u ∈ rows, v > u of
+/// |N(u) ∩ N(v)|).
+fn matches_in_rows(g: &Csr, rows: Range<usize>) -> u64 {
+    let mut m = 0u64;
+    for u in rows {
+        let (nu, _) = g.row(u);
+        for &v in nu.iter().filter(|&&v| v as usize > u) {
+            let (nv, _) = g.row(v as usize);
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < nu.len() && j < nv.len() {
+                match nu[i].cmp(&nv[j]) {
+                    std::cmp::Ordering::Equal => {
+                        m += 1;
+                        i += 1;
+                        j += 1;
+                    }
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                }
+            }
+        }
+    }
+    m
+}
+
+/// Edge-partitioned cluster triangle counting: nnz-balanced pivot-vertex
+/// ranges per core over the shared resident adjacency, one raw match
+/// count per core, and the scalar ×1/3 reduction on the host. The
+/// per-core partials and their sum are exact integer-valued f64s, so the
+/// result is bitwise identical to the single-CC run.
+fn run_cluster_tricnt(
+    variant: Variant,
+    iw: IdxWidth,
+    g: &Csr,
+    cfg: &ClusterCfg,
+    limit: u64,
+) -> Result<(Value, Report, Detail), KernelError> {
+    let parts = partition_padded(&ops::tricnt_row_costs(g), cfg.cores);
+    let hang = |cycles| KernelError::Hang { kernel: "", cycles };
+    let mut dram =
+        Dram::with_params(cfg.dram_bytes, cfg.dram_gbps_pin, cfg.dram_latency, cfg.ic_latency);
+    let bytes = dram.size() as u64;
+    let pass =
+        plan_tricnt_pass(variant, iw, g, &parts, cfg, &mut dram, MemRegion::whole(bytes));
+    let mut cl = pass.build(cfg);
+    let cycles = cl.try_run(&mut dram, limit).map_err(hang)?;
+    let stats = cl.stats();
+    let matches: f64 =
+        (0..cfg.cores).map(|c| f64::from_bits(dram.peek(pass.d_out + 8 * c as u64, 8))).sum();
+    let report = Report::from_run(cycles, ops::triangle_matches(g), stats);
+    Ok((Value::Scalar(matches * (1.0 / 3.0)), report, Detail::Cluster { chunks: 1 }))
+}
+
+/// System-scale triangle counting: nnz-balanced pivot-vertex ranges
+/// across clusters (the adjacency replicated into every cluster's HBM
+/// window), edge-partitioned core ranges within each shard, and the host
+/// scalar reduction (Σ raw matches × 1/3) with per-shard gather
+/// accounting.
+fn run_system_tricnt(
+    variant: Variant,
+    iw: IdxWidth,
+    g: &Csr,
+    cfg: &SystemCfg,
+    limit: u64,
+) -> Result<(Value, Report, Detail), KernelError> {
+    let k = cfg.clusters;
+    let costs = ops::tricnt_row_costs(g);
+    let cparts = partition_padded(&costs, k);
+    let stride = cfg.shard_stride();
+    let hang = |cycles| KernelError::Hang { kernel: "", cycles };
+
+    let mut hbm = Hbm::new(cfg);
+    let mut passes = Vec::with_capacity(k);
+    for i in 0..k {
+        // per-core pivot ranges, offset into this shard's global range
+        let off = cparts[i].start;
+        let core_rows: Vec<Range<usize>> =
+            partition_padded(&costs[cparts[i].clone()], cfg.cluster.cores)
+                .into_iter()
+                .map(|r| r.start + off..r.end + off)
+                .collect();
+        let mut port = hbm.port(i);
+        passes.push(plan_tricnt_pass(
+            variant,
+            iw,
+            g,
+            &core_rows,
+            &cfg.cluster,
+            &mut port,
+            MemRegion::window(i, stride),
+        ));
+    }
+    let clusters = passes.iter().map(|p| p.build(&cfg.cluster)).collect();
+    let mut sys = System::assemble(cfg.clone(), clusters, hbm);
+    sys.try_run(limit).map_err(hang)?;
+    let finished = sys.finished_cycles();
+    let total = *finished.iter().max().unwrap();
+
+    let mut agg = RunStats::default();
+    let mut matches = 0.0f64;
+    let shard_runs: Vec<ShardRun> = (0..k)
+        .map(|i| {
+            let mut s = sys.clusters[i].stats();
+            s.cycles = finished[i];
+            add_stats(&mut agg, &s);
+            let m: f64 = (0..cfg.cluster.cores)
+                .map(|c| f64::from_bits(sys.hbm.peek(passes[i].d_out + 8 * c as u64, 8)))
+                .sum();
+            matches += m;
+            ShardRun {
+                rows: cparts[i].clone(),
+                cycles: finished[i],
+                report: Report::from_run(finished[i], matches_in_rows(g, cparts[i].clone()), s),
+                hbm: sys.hbm.cluster_stats[i],
+                chunks: 1,
+            }
+        })
+        .collect();
+    agg.cycles = total;
+    let report = Report::from_run(total, ops::triangle_matches(g), agg);
+    let skew = finished.iter().max().unwrap() - finished.iter().min().unwrap();
+    // gather of the per-core partials plus one host add per partial
+    let reduction = ReduceStats {
+        writeback_bytes: (k * cfg.cluster.cores) as u64 * 8,
+        combine_flops: (k * cfg.cluster.cores) as u64,
+        skew_cycles: skew,
+    };
+    Ok((
+        Value::Scalar(matches * (1.0 / 3.0)),
+        report,
+        Detail::System { shards: shard_runs, reduction },
+    ))
 }
 
 /// Count the triangles of an undirected graph; returns (count, report).
@@ -761,6 +1052,68 @@ mod tests {
         assert_eq!(tb, ts);
         let speedup = base.cycles as f64 / sssr.cycles as f64;
         assert!(speedup > 1.5, "tricnt speedup only {speedup}");
+    }
+
+    /// Cluster and system tricnt return the exact bits of the single-CC
+    /// run: per-core partials are integer-valued f64s, their sum is
+    /// exact, and the host's single ×1/3 mirrors the in-program
+    /// epilogue.
+    #[test]
+    fn tricnt_cluster_and_system_match_single_cc() {
+        use crate::sim::{ClusterCfg, SystemCfg};
+        let g = matgen::undirected_graph(21, 8, 6);
+        let ops_ = [Operand::Csr(&g)];
+        let big = || ClusterCfg { tcdm_bytes: 1 << 20, ..ClusterCfg::paper_cluster() };
+        for v in [Variant::Base, Variant::Sssr] {
+            let single = api::must_execute("tricnt", v, IdxWidth::U16, &ops_, &ExecCfg::single_cc());
+            let Value::Scalar(want) = single.output else { unreachable!() };
+            let cluster =
+                api::must_execute("tricnt", v, IdxWidth::U16, &ops_, &ExecCfg::cluster(big()));
+            let Value::Scalar(got) = cluster.output else { unreachable!() };
+            assert_eq!(got.to_bits(), want.to_bits(), "{v:?}: cluster diverged from single CC");
+            let cfg = SystemCfg { cluster: big(), ..SystemCfg::paper_system(4, 4) };
+            let system =
+                api::must_execute("tricnt", v, IdxWidth::U16, &ops_, &ExecCfg::system(cfg));
+            let Value::Scalar(got) = system.output else { unreachable!() };
+            assert_eq!(got.to_bits(), want.to_bits(), "{v:?}: system diverged from single CC");
+            let Detail::System { shards, reduction } = system.detail else { unreachable!() };
+            assert_eq!(shards.len(), 4);
+            let rows: usize = shards.iter().map(|s| s.rows.len()).sum();
+            assert_eq!(rows, g.nrows, "pivot ranges must cover every vertex");
+            // gather = one f64 cell per core per cluster
+            assert_eq!(reduction.writeback_bytes, 4 * 8 * 8);
+            // per-shard payloads partition the total match count
+            let payload: u64 = shards.iter().map(|s| s.report.payload).sum();
+            assert_eq!(payload, ops::triangle_matches(&g));
+        }
+    }
+
+    /// Degenerate sharding: a 2-vertex graph on an 8-core cluster and a
+    /// 4-cluster system pads with empty pivot ranges instead of
+    /// panicking.
+    #[test]
+    fn tricnt_sharding_handles_tiny_graphs() {
+        use crate::sim::{ClusterCfg, SystemCfg};
+        let g = Csr::from_dense(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let ops_ = [Operand::Csr(&g)];
+        let cluster = api::must_execute(
+            "tricnt",
+            Variant::Sssr,
+            IdxWidth::U16,
+            &ops_,
+            &ExecCfg::cluster(ClusterCfg::paper_cluster()),
+        );
+        let system = api::must_execute(
+            "tricnt",
+            Variant::Base,
+            IdxWidth::U16,
+            &ops_,
+            &ExecCfg::system(SystemCfg::paper_system(4, 4)),
+        );
+        for run in [cluster, system] {
+            let Value::Scalar(t) = run.output else { unreachable!() };
+            assert_eq!(t, 0.0, "an edge alone makes no triangle");
+        }
     }
 
     #[test]

@@ -37,17 +37,26 @@
 //! appended to the output CSF (level-0 row id + pointer entry only when
 //! non-empty, preserving full compression).
 
-use crate::formats::{ops, Csf};
+use std::ops::Range;
+
+use crate::coordinator::MemRegion;
+use crate::formats::{ops, partition_by_cost, Csf};
 use crate::matgen;
 use crate::sim::asm::Asm;
+use crate::sim::dram::Dram;
 use crate::sim::isa::{ssr_mode, SsrField as F, *};
+use crate::sim::{
+    Cluster, ClusterCfg, DmaJob, DmaSchedule, Hbm, HbmClusterStats, MemPort, RunStats, System,
+    SystemCfg,
+};
 
 use super::api::{
-    self, check_width, csf_at, expect_kinds, write_f64s, write_idx, write_ptrs, Cc, ExecCfg,
-    Kernel, KernelError, Operand, OutSpec, OwnedOperand, Value,
+    self, check_width, csf_at, expect_kinds, read_out, write_f64s, write_idx, write_ptrs, Cc,
+    Detail, ExecCfg, Kernel, KernelError, Operand, OutSpec, OwnedOperand, TargetKind, Value,
 };
+use super::multi::{add_stats, ReduceStats, ShardRun};
 use super::sparse_dense::cfg_imm;
-use super::{IdxWidth, Report, Variant};
+use super::{Arena, IdxWidth, Report, Variant};
 
 /// Emit the fiber-close sequence shared by both variants: append the
 /// accumulator (S0/S1, length S4) to the output CSF — row id, leaf copy,
@@ -87,6 +96,13 @@ fn emit_fiber_flush(a: &mut Asm, iw: IdxWidth) {
 /// of A, `fmadd.d` under `frep.s`, ESSR writeback into the ping-pong
 /// accumulator.
 pub fn smxsm_csf_sssr(iw: IdxWidth) -> Program {
+    smxsm_csf_sssr_prog(iw, false)
+}
+
+/// [`smxsm_csf_sssr`] body with optional cluster-phase barriers: one
+/// before the first TCDM access (awaits the input DMA phase) and one
+/// after the final fence (releases the result-writeback phase).
+fn smxsm_csf_sssr_prog(iw: IdxWidth, barriers: bool) -> Program {
     let ib = iw.bytes() as i64;
     let lg = iw.log2();
     let mut a = Asm::new();
@@ -96,6 +112,9 @@ pub fn smxsm_csf_sssr(iw: IdxWidth) -> Program {
     cfg_imm(&mut a, 2, F::IdxSize, lg as i64);
     a.li(S10, ssr_mode::UNION);
     a.li(S11, ssr_mode::EGRESS);
+    if barriers {
+        a.barrier();
+    }
     a.sw(ZERO, S9, 0); // out row_ptrs[0] = 0
     a.addi(S9, S9, 4);
     a.li(S7, 0);
@@ -155,6 +174,9 @@ pub fn smxsm_csf_sssr(iw: IdxWidth) -> Program {
     a.label("end");
     a.sd(S7, SP, 0);
     a.fpu_fence();
+    if barriers {
+        a.barrier();
+    }
     a.ssr_disable();
     a.halt();
     a.finish()
@@ -163,9 +185,18 @@ pub fn smxsm_csf_sssr(iw: IdxWidth) -> Program {
 /// BASE CSF row-wise SpGEMM: an explicit scaled three-way merge per
 /// (fiber, nonzero) of A into the ping-pong accumulator.
 pub fn smxsm_csf_base(iw: IdxWidth) -> Program {
+    smxsm_csf_base_prog(iw, false)
+}
+
+/// [`smxsm_csf_base`] body with the same optional cluster-phase
+/// barriers as [`smxsm_csf_sssr_prog`].
+fn smxsm_csf_base_prog(iw: IdxWidth, barriers: bool) -> Program {
     let ib = iw.bytes() as i64;
     let lg = iw.log2();
     let mut a = Asm::new();
+    if barriers {
+        a.barrier();
+    }
     a.sw(ZERO, S9, 0);
     a.addi(S9, S9, 4);
     a.li(S7, 0);
@@ -279,6 +310,206 @@ pub fn smxsm_csf_base(iw: IdxWidth) -> Program {
     a.label("end");
     a.sd(S7, SP, 0);
     a.fpu_fence();
+    if barriers {
+        a.barrier();
+    }
+    a.halt();
+    a.finish()
+}
+
+// =====================================================================
+// symbolic (structure-only) pass
+// =====================================================================
+//
+// The two-phase Gustavson split: before any FLOP is issued, a
+// structure-only pass walks the same (fiber, nonzero) schedule and
+// computes the *exact* nonzero count of every output fiber. Register
+// convention (a strict subset of the numeric one — no value arrays):
+//
+// | reg   | symbolic smxsm_csf                                     |
+// |-------|--------------------------------------------------------|
+// | A1    | A leaf (column) indices cursor                         |
+// | A3    | B leaf indices base                                    |
+// | A4    | per-fiber size cursor (u32, one per stored A fiber)    |
+// | A5    | A level-0 pointer cursor                               |
+// | A6    | A fiber countdown                                      |
+// | A7    | B row directory base                                   |
+// | S1/S3 | index-only ping-pong accumulator                       |
+// | S4    | accumulator length                                     |
+// | S5    | in-fiber nonzero countdown                             |
+// | S10   | UNION_IDX launch word (SSSR) / dst cursor (BASE)       |
+// | S11   | EGRESS_IDX launch word (SSSR)                          |
+//
+// Because the union accumulator only ever grows (`acc' = acc ∪ B[k,:]`),
+// the final fiber size recorded here also bounds every intermediate
+// ping-pong length of the numeric pass — so exact sizing of the numeric
+// buffers is safe, not just exact for the output arrays.
+
+/// SSSR structure-only symbolic pass: the union schedule of
+/// [`smxsm_csf_sssr`] run entirely through index streams —
+/// `UNION_IDX`-mode ISSRs merging into an `EGRESS_IDX`-mode ESSR, no
+/// FPU body at all. Writes one u32 output-fiber size per stored A
+/// fiber.
+pub fn smxsm_csf_symbolic_sssr(iw: IdxWidth) -> Program {
+    smxsm_csf_symbolic_sssr_prog(iw, false)
+}
+
+fn smxsm_csf_symbolic_sssr_prog(iw: IdxWidth, barriers: bool) -> Program {
+    let ib = iw.bytes() as i64;
+    let lg = iw.log2();
+    let mut a = Asm::new();
+    a.ssr_enable();
+    cfg_imm(&mut a, 0, F::IdxSize, lg as i64);
+    cfg_imm(&mut a, 1, F::IdxSize, lg as i64);
+    cfg_imm(&mut a, 2, F::IdxSize, lg as i64);
+    a.li(S10, ssr_mode::UNION_IDX);
+    a.li(S11, ssr_mode::EGRESS_IDX);
+    if barriers {
+        a.barrier();
+    }
+    a.beq(A6, ZERO, "end");
+    a.label("fiber");
+    a.lwu(T0, A5, 0);
+    a.lwu(T1, A5, 4);
+    a.sub(S5, T1, T0);
+    a.li(S4, 0);
+    a.beq(S5, ZERO, "record");
+    a.label("k");
+    iw.load(&mut a, T0, A1, 0); // column k
+    a.slli(T3, T0, 2);
+    a.add(T3, A7, T3);
+    a.lwu(T1, T3, 0);
+    a.lwu(T2, T3, 4);
+    a.sub(T2, T2, T1); // B row length
+    a.slli(T4, T1, lg);
+    a.add(T4, A3, T4); // B row index base
+    // ESSR first so the comparator sees it attached from the start;
+    // index-only egress needs no DataBase
+    a.scfgw(2, F::IdxBase, S3);
+    a.scfgw(2, F::Launch, S11);
+    a.scfgw(1, F::IdxBase, T4);
+    a.scfgw(1, F::IdxLen, T2);
+    a.scfgw(0, F::IdxBase, S1);
+    a.scfgw(0, F::IdxLen, S4);
+    a.scfgw(0, F::Launch, S10);
+    a.scfgw(1, F::Launch, S10);
+    // no FPU body: the comparator merges autonomously; the fence waits
+    // for the streamer to drain, then the joint length is read back
+    a.fpu_fence();
+    a.scfgr(S4, 2, F::StrCtlLen);
+    a.mv(T6, S1);
+    a.mv(S1, S3);
+    a.mv(S3, T6);
+    a.addi(A1, A1, ib);
+    a.addi(S5, S5, -1);
+    a.bne(S5, ZERO, "k");
+    a.label("record");
+    a.sw(S4, A4, 0);
+    a.addi(A4, A4, 4);
+    a.addi(A5, A5, 4);
+    a.addi(A6, A6, -1);
+    a.bne(A6, ZERO, "fiber");
+    a.label("end");
+    a.fpu_fence();
+    if barriers {
+        a.barrier();
+    }
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+/// BASE structure-only symbolic pass: an explicit index-only two-way
+/// merge per (fiber, nonzero) of A — the integer skeleton of
+/// [`smxsm_csf_base`] with every FP load/store removed.
+pub fn smxsm_csf_symbolic_base(iw: IdxWidth) -> Program {
+    smxsm_csf_symbolic_base_prog(iw, false)
+}
+
+fn smxsm_csf_symbolic_base_prog(iw: IdxWidth, barriers: bool) -> Program {
+    let ib = iw.bytes() as i64;
+    let lg = iw.log2();
+    let mut a = Asm::new();
+    if barriers {
+        a.barrier();
+    }
+    a.beq(A6, ZERO, "end");
+    a.label("fiber");
+    a.lwu(T0, A5, 0);
+    a.lwu(T1, A5, 4);
+    a.sub(S5, T1, T0);
+    a.li(S4, 0);
+    a.beq(S5, ZERO, "record");
+    a.label("k");
+    iw.load(&mut a, T6, A1, 0); // column k
+    a.slli(T3, T6, 2);
+    a.add(T3, A7, T3);
+    a.lwu(T0, T3, 0); // B row start position
+    a.lwu(T5, T3, 4); // B row end position
+    a.slli(T3, T0, lg);
+    a.add(T3, A3, T3); // b index cursor
+    a.slli(T5, T5, lg);
+    a.add(T5, A3, T5); // b index end
+    a.mv(T0, S1); // acc index cursor
+    a.slli(T2, S4, lg);
+    a.add(T2, S1, T2); // acc index end
+    a.mv(S10, S3); // dst index cursor
+    a.label("merge");
+    a.bgeu(T0, T2, "drain_b");
+    a.bgeu(T3, T5, "drain_a");
+    iw.load(&mut a, T6, T0, 0);
+    iw.load(&mut a, GP, T3, 0);
+    a.beq(T6, GP, "both");
+    a.bltu(T6, GP, "acc_only");
+    iw.store(&mut a, GP, S10, 0); // b only
+    a.addi(T3, T3, ib);
+    a.addi(S10, S10, ib);
+    a.j("merge");
+    a.label("acc_only");
+    iw.store(&mut a, T6, S10, 0);
+    a.addi(T0, T0, ib);
+    a.addi(S10, S10, ib);
+    a.j("merge");
+    a.label("both");
+    iw.store(&mut a, T6, S10, 0);
+    a.addi(T0, T0, ib);
+    a.addi(T3, T3, ib);
+    a.addi(S10, S10, ib);
+    a.j("merge");
+    a.label("drain_a"); // b exhausted: count the accumulator tail
+    a.bgeu(T0, T2, "mdone");
+    iw.load(&mut a, T6, T0, 0);
+    iw.store(&mut a, T6, S10, 0);
+    a.addi(T0, T0, ib);
+    a.addi(S10, S10, ib);
+    a.j("drain_a");
+    a.label("drain_b"); // acc exhausted: count the B tail
+    a.bgeu(T3, T5, "mdone");
+    iw.load(&mut a, GP, T3, 0);
+    iw.store(&mut a, GP, S10, 0);
+    a.addi(T3, T3, ib);
+    a.addi(S10, S10, ib);
+    a.j("drain_b");
+    a.label("mdone");
+    a.sub(T0, S10, S3);
+    a.srli(S4, T0, lg); // new accumulator length
+    a.mv(T6, S1);
+    a.mv(S1, S3);
+    a.mv(S3, T6);
+    a.addi(A1, A1, ib);
+    a.addi(S5, S5, -1);
+    a.bne(S5, ZERO, "k");
+    a.label("record");
+    a.sw(S4, A4, 0);
+    a.addi(A4, A4, 4);
+    a.addi(A5, A5, 4);
+    a.addi(A6, A6, -1);
+    a.bne(A6, ZERO, "fiber");
+    a.label("end");
+    a.fpu_fence();
+    if barriers {
+        a.barrier();
+    }
     a.halt();
     a.finish()
 }
@@ -287,22 +518,51 @@ pub fn smxsm_csf_base(iw: IdxWidth) -> Program {
 /// CSF operands in, fully compressed CSF result out.
 pub struct SmxsmCsf;
 
-impl SmxsmCsf {
-    /// Per-fiber and total accumulator capacity bounds: each row of the
-    /// result holds at most `min(Σ_k nnz(B[k,:]), ncols(B))` entries.
-    fn caps(a: &Csf, b: &Csf) -> (usize, usize) {
-        let dir = b.row_directory();
-        let mut row_max = 1usize;
-        let mut total = 1usize;
-        for (_, idx, _) in a.fibers() {
-            let bound: usize = idx
-                .iter()
+/// Worst-case output size bound per stored A fiber:
+/// `min(Σ_k nnz(B[k,:]), ncols(B))`. The symbolic pass's ping-pong
+/// buffers are sized from this (it has no better bound yet); the
+/// numeric pass of a two-phase run never sees it.
+fn fiber_caps(a: &Csf, b: &Csf) -> Vec<usize> {
+    let dir = b.row_directory();
+    a.fibers()
+        .map(|(_, idx, _)| {
+            idx.iter()
                 .map(|&k| (dir[k as usize + 1] - dir[k as usize]) as usize)
-                .sum();
-            let bound = bound.min(b.ncols);
-            row_max = row_max.max(bound);
-            total += bound;
-        }
+                .sum::<usize>()
+                .min(b.ncols)
+        })
+        .collect()
+}
+
+/// Gustavson cost of each stored A fiber: `Σ_k (1 + nnz(B[k,:]))` —
+/// the per-fiber specialization of [`ops::smxsm_csf_row_costs`] used to
+/// nnz-balance fiber shards across cores and clusters.
+fn fiber_costs(a: &Csf, b: &Csf) -> Vec<u64> {
+    let dir = b.row_directory();
+    a.fibers()
+        .map(|(_, idx, _)| {
+            idx.iter().map(|&k| 1 + (dir[k as usize + 1] - dir[k as usize]) as u64).sum()
+        })
+        .collect()
+}
+
+/// Exact numeric-pass capacities from the symbolic per-fiber sizes:
+/// `(row_cap, cap, fibs)` = largest fiber (≥ 1 so empty results still
+/// get a ping-pong cell), total nonzeros, stored (non-empty) fibers.
+fn exact_caps(sizes: &[u32]) -> (usize, usize, usize) {
+    let row_cap = sizes.iter().copied().max().unwrap_or(0).max(1) as usize;
+    let cap = sizes.iter().map(|&s| s as usize).sum();
+    let fibs = sizes.iter().filter(|&&s| s > 0).count();
+    (row_cap, cap, fibs)
+}
+
+impl SmxsmCsf {
+    /// Per-fiber and total accumulator capacity bounds for a one-pass
+    /// (worst-case) placement.
+    fn caps(a: &Csf, b: &Csf) -> (usize, usize) {
+        let caps = fiber_caps(a, b);
+        let row_max = caps.iter().copied().max().unwrap_or(0).max(1);
+        let total = 1 + caps.iter().sum::<usize>();
         (row_max, total)
     }
 }
@@ -352,64 +612,40 @@ impl Kernel for SmxsmCsf {
     fn place(&self, cc: &mut Cc, iw: IdxWidth, ops: &[Operand]) -> OutSpec {
         let (a, b) = (csf_at(ops, 0), csf_at(ops, 1));
         let (row_cap, cap) = SmxsmCsf::caps(a, b);
-        // A: true two-level CSF
-        let a_vals = cc.arena.alloc_f64(a.nnz() as u64);
-        let a_cidcs = cc.arena.alloc_idx(a.nnz() as u64, iw);
-        let a_rptrs = cc.arena.alloc(4 * (a.nfibers() as u64 + 1));
-        let a_ridcs = cc.arena.alloc_idx(a.nfibers() as u64, iw);
-        write_f64s(&mut cc.cl.tcdm, a_vals, &a.vals);
-        write_idx(&mut cc.cl.tcdm, a_cidcs, &a.col_idcs, iw);
-        write_ptrs(&mut cc.cl.tcdm, a_rptrs, &a.row_ptrs);
-        write_idx(&mut cc.cl.tcdm, a_ridcs, &a.row_idcs, iw);
-        // B: leaves plus the expanded level-0 directory (row-indexed)
-        let b_vals = cc.arena.alloc_f64(b.nnz() as u64);
-        let b_cidcs = cc.arena.alloc_idx(b.nnz() as u64, iw);
-        let b_dir = cc.arena.alloc(4 * (b.nrows as u64 + 1));
-        write_f64s(&mut cc.cl.tcdm, b_vals, &b.vals);
-        write_idx(&mut cc.cl.tcdm, b_cidcs, &b.col_idcs, iw);
-        write_ptrs(&mut cc.cl.tcdm, b_dir, &b.row_directory());
-        // ping-pong accumulator buffers
-        let acc_a_vals = cc.arena.alloc_f64(row_cap as u64);
-        let acc_a_idcs = cc.arena.alloc_idx(row_cap as u64, iw);
-        let acc_b_vals = cc.arena.alloc_f64(row_cap as u64);
-        let acc_b_idcs = cc.arena.alloc_idx(row_cap as u64, iw);
-        // output CSF
-        let fib_cap = a.nfibers();
-        let out_vals = cc.arena.alloc_f64(cap as u64);
-        let out_cidcs = cc.arena.alloc_idx(cap as u64, iw);
-        let out_ridcs = cc.arena.alloc_idx(fib_cap.max(1) as u64, iw);
-        let out_rptrs = cc.arena.alloc(4 * (fib_cap as u64 + 2));
-        let fib_cell = cc.arena.alloc(8);
-        cc.args(&[
-            (A0, a_vals as i64),
-            (A1, a_cidcs as i64),
-            (A2, b_vals as i64),
-            (A3, b_cidcs as i64),
-            (A4, out_vals as i64),
-            (A5, a_rptrs as i64),
-            (A6, a.nfibers() as i64),
-            (A7, b_dir as i64),
-            (S0, acc_a_vals as i64),
-            (S1, acc_a_idcs as i64),
-            (S2, acc_b_vals as i64),
-            (S3, acc_b_idcs as i64),
-            (S6, a_ridcs as i64),
-            (S8, out_cidcs as i64),
-            (S9, out_rptrs as i64),
-            (RA, out_ridcs as i64),
-            (SP, fib_cell as i64),
-        ]);
-        OutSpec::Csf {
-            row_idcs: out_ridcs,
-            row_ptrs: out_rptrs,
-            col_idcs: out_cidcs,
-            vals: out_vals,
-            fib_cell,
-            fib_cap,
-            cap,
-            nrows: a.nrows,
-            ncols: b.ncols,
-        }
+        place_numeric(cc, iw, a, b, row_cap, cap, a.nfibers())
+    }
+    fn targets(&self) -> &'static [TargetKind] {
+        &[TargetKind::SingleCc, TargetKind::Cluster, TargetKind::System]
+    }
+    fn run_single_cc(
+        &self,
+        variant: Variant,
+        iw: IdxWidth,
+        ops: &[Operand],
+        tcdm_bytes: usize,
+        limit: u64,
+    ) -> Option<Result<(Value, Report, Detail), KernelError>> {
+        Some(two_phase_single_cc(variant, iw, csf_at(ops, 0), csf_at(ops, 1), tcdm_bytes, limit))
+    }
+    fn run_cluster(
+        &self,
+        variant: Variant,
+        iw: IdxWidth,
+        ops: &[Operand],
+        cfg: &ClusterCfg,
+        limit: u64,
+    ) -> Result<(Value, Report, Detail), KernelError> {
+        run_cluster_csf(variant, iw, csf_at(ops, 0), csf_at(ops, 1), cfg, limit)
+    }
+    fn run_system(
+        &self,
+        variant: Variant,
+        iw: IdxWidth,
+        ops: &[Operand],
+        cfg: &SystemCfg,
+        limit: u64,
+    ) -> Result<(Value, Report, Detail), KernelError> {
+        run_system_csf(variant, iw, csf_at(ops, 0), csf_at(ops, 1), cfg, limit)
     }
     fn sample(&self, seed: u64, _iw: IdxWidth) -> Vec<OwnedOperand> {
         vec![
@@ -417,6 +653,680 @@ impl Kernel for SmxsmCsf {
             OwnedOperand::Csf(Csf::from_csr(&matgen::random_csr(seed.wrapping_add(1), 16, 14, 50))),
         ]
     }
+}
+
+// =====================================================================
+// two-phase drivers: single CC, cluster, system
+// =====================================================================
+
+/// Numeric-pass operand/output placement at explicit capacities. The
+/// one-pass [`Kernel::place`] path calls this with the worst-case
+/// [`SmxsmCsf::caps`] bounds; the two-phase path with the exact sizes
+/// the symbolic pass produced (no over-allocation beyond them).
+fn place_numeric(
+    cc: &mut Cc,
+    iw: IdxWidth,
+    a: &Csf,
+    b: &Csf,
+    row_cap: usize,
+    cap: usize,
+    fib_cap: usize,
+) -> OutSpec {
+    // A: true two-level CSF
+    let a_vals = cc.arena.alloc_f64(a.nnz() as u64);
+    let a_cidcs = cc.arena.alloc_idx(a.nnz() as u64, iw);
+    let a_rptrs = cc.arena.alloc(4 * (a.nfibers() as u64 + 1));
+    let a_ridcs = cc.arena.alloc_idx(a.nfibers() as u64, iw);
+    write_f64s(&mut cc.cl.tcdm, a_vals, &a.vals);
+    write_idx(&mut cc.cl.tcdm, a_cidcs, &a.col_idcs, iw);
+    write_ptrs(&mut cc.cl.tcdm, a_rptrs, &a.row_ptrs);
+    write_idx(&mut cc.cl.tcdm, a_ridcs, &a.row_idcs, iw);
+    // B: leaves plus the expanded level-0 directory (row-indexed)
+    let b_vals = cc.arena.alloc_f64(b.nnz() as u64);
+    let b_cidcs = cc.arena.alloc_idx(b.nnz() as u64, iw);
+    let b_dir = cc.arena.alloc(4 * (b.nrows as u64 + 1));
+    write_f64s(&mut cc.cl.tcdm, b_vals, &b.vals);
+    write_idx(&mut cc.cl.tcdm, b_cidcs, &b.col_idcs, iw);
+    write_ptrs(&mut cc.cl.tcdm, b_dir, &b.row_directory());
+    // ping-pong accumulator buffers (`row_cap` bounds every intermediate
+    // because the union accumulator only grows)
+    let acc_a_vals = cc.arena.alloc_f64(row_cap as u64);
+    let acc_a_idcs = cc.arena.alloc_idx(row_cap as u64, iw);
+    let acc_b_vals = cc.arena.alloc_f64(row_cap as u64);
+    let acc_b_idcs = cc.arena.alloc_idx(row_cap as u64, iw);
+    // output CSF
+    let out_vals = cc.arena.alloc_f64(cap as u64);
+    let out_cidcs = cc.arena.alloc_idx(cap as u64, iw);
+    let out_ridcs = cc.arena.alloc_idx(fib_cap.max(1) as u64, iw);
+    let out_rptrs = cc.arena.alloc(4 * (fib_cap as u64 + 2));
+    let fib_cell = cc.arena.alloc(8);
+    cc.args(&[
+        (A0, a_vals as i64),
+        (A1, a_cidcs as i64),
+        (A2, b_vals as i64),
+        (A3, b_cidcs as i64),
+        (A4, out_vals as i64),
+        (A5, a_rptrs as i64),
+        (A6, a.nfibers() as i64),
+        (A7, b_dir as i64),
+        (S0, acc_a_vals as i64),
+        (S1, acc_a_idcs as i64),
+        (S2, acc_b_vals as i64),
+        (S3, acc_b_idcs as i64),
+        (S6, a_ridcs as i64),
+        (S8, out_cidcs as i64),
+        (S9, out_rptrs as i64),
+        (RA, out_ridcs as i64),
+        (SP, fib_cell as i64),
+    ]);
+    OutSpec::Csf {
+        row_idcs: out_ridcs,
+        row_ptrs: out_rptrs,
+        col_idcs: out_cidcs,
+        vals: out_vals,
+        fib_cell,
+        fib_cap,
+        cap,
+        nrows: a.nrows,
+        ncols: b.ncols,
+    }
+}
+
+/// Symbolic-pass placement: index arrays, index-only ping-pong, and the
+/// per-fiber size table. Returns the size-table address.
+fn place_symbolic(cc: &mut Cc, iw: IdxWidth, a: &Csf, b: &Csf) -> u64 {
+    let row_cap = fiber_caps(a, b).into_iter().max().unwrap_or(0).max(1);
+    let a_cidcs = cc.arena.alloc_idx(a.nnz() as u64, iw);
+    let a_rptrs = cc.arena.alloc(4 * (a.nfibers() as u64 + 1));
+    write_idx(&mut cc.cl.tcdm, a_cidcs, &a.col_idcs, iw);
+    write_ptrs(&mut cc.cl.tcdm, a_rptrs, &a.row_ptrs);
+    let b_cidcs = cc.arena.alloc_idx(b.nnz() as u64, iw);
+    let b_dir = cc.arena.alloc(4 * (b.nrows as u64 + 1));
+    write_idx(&mut cc.cl.tcdm, b_cidcs, &b.col_idcs, iw);
+    write_ptrs(&mut cc.cl.tcdm, b_dir, &b.row_directory());
+    let pp0 = cc.arena.alloc_idx(row_cap as u64, iw);
+    let pp1 = cc.arena.alloc_idx(row_cap as u64, iw);
+    let sizes = cc.arena.alloc((4 * a.nfibers() as u64).max(8));
+    cc.args(&[
+        (A1, a_cidcs as i64),
+        (A3, b_cidcs as i64),
+        (A4, sizes as i64),
+        (A5, a_rptrs as i64),
+        (A6, a.nfibers() as i64),
+        (A7, b_dir as i64),
+        (S1, pp0 as i64),
+        (S3, pp1 as i64),
+    ]);
+    sizes
+}
+
+/// Drive one structure-only pass on a single CC; returns the exact
+/// per-fiber output sizes plus the pass's cycles and stats.
+fn run_symbolic_cc(
+    variant: Variant,
+    iw: IdxWidth,
+    a: &Csf,
+    b: &Csf,
+    tcdm_bytes: usize,
+    limit: u64,
+) -> Result<(Vec<u32>, u64, RunStats), KernelError> {
+    let prog = match variant {
+        Variant::Base => smxsm_csf_symbolic_base(iw),
+        Variant::Sssr => smxsm_csf_symbolic_sssr(iw),
+        Variant::Ssr => unreachable!("variant capability checked by execute"),
+    };
+    let mut cc = Cc::sized(prog, tcdm_bytes);
+    let sizes_addr = place_symbolic(&mut cc, iw, a, b);
+    let (cl, cycles, stats) = cc.run(limit)?;
+    let sizes =
+        (0..a.nfibers()).map(|f| cl.tcdm.peek(sizes_addr + 4 * f as u64, 4) as u32).collect();
+    Ok((sizes, cycles, stats))
+}
+
+/// Merge the stats of two back-to-back passes of one driver run.
+/// Sequential phases add cycles — unlike the concurrent-shard
+/// aggregation of [`super::multi`], which takes the max.
+fn merge_seq(t: &mut RunStats, s: &RunStats) {
+    let RunStats {
+        cycles,
+        cores,
+        instret,
+        flops,
+        fpu_ops,
+        tcdm_grants,
+        tcdm_conflicts,
+        icache_hits,
+        icache_misses,
+        dram_bytes,
+        dma_busy_cycles,
+        ssr_mem_accesses,
+        comparisons,
+        stall_icache,
+        stall_mem,
+        barrier_cycles,
+    } = *s;
+    t.cycles += cycles;
+    t.cores = t.cores.max(cores);
+    t.instret += instret;
+    t.flops += flops;
+    t.fpu_ops += fpu_ops;
+    t.tcdm_grants += tcdm_grants;
+    t.tcdm_conflicts += tcdm_conflicts;
+    t.icache_hits += icache_hits;
+    t.icache_misses += icache_misses;
+    t.dram_bytes += dram_bytes;
+    t.dma_busy_cycles += dma_busy_cycles;
+    t.ssr_mem_accesses += ssr_mem_accesses;
+    t.comparisons += comparisons;
+    t.stall_icache += stall_icache;
+    t.stall_mem += stall_mem;
+    t.barrier_cycles += barrier_cycles;
+}
+
+/// Two-phase single-CC SpGEMM: the symbolic pass sizes every output
+/// fiber exactly, then the numeric pass streams into exactly-sized
+/// allocations (no worst-case ping-pong or output bounds). The report
+/// totals both passes.
+fn two_phase_single_cc(
+    variant: Variant,
+    iw: IdxWidth,
+    a: &Csf,
+    b: &Csf,
+    tcdm_bytes: usize,
+    limit: u64,
+) -> Result<(Value, Report, Detail), KernelError> {
+    let (sizes, sym_cycles, mut stats) = run_symbolic_cc(variant, iw, a, b, tcdm_bytes, limit)?;
+    let (row_cap, cap, fibs) = exact_caps(&sizes);
+    let prog = match variant {
+        Variant::Base => smxsm_csf_base(iw),
+        Variant::Sssr => smxsm_csf_sssr(iw),
+        Variant::Ssr => unreachable!("variant capability checked by execute"),
+    };
+    let mut cc = Cc::sized(prog, tcdm_bytes);
+    let out = place_numeric(&mut cc, iw, a, b, row_cap, cap, fibs);
+    let (cl, num_cycles, num_stats) = cc.run(limit)?;
+    let output = read_out(&cl.tcdm, &out, iw, "smxsm_csf")?;
+    merge_seq(&mut stats, &num_stats);
+    let report = Report::from_run(sym_cycles + num_cycles, ops::smxsm_csf_flops(a, b), stats);
+    Ok((output, report, Detail::SingleCc))
+}
+
+/// [`partition_by_cost`] tolerant of more workers than items: the first
+/// `min(k, n)` workers get the balanced split, the rest empty ranges.
+pub(crate) fn partition_padded(costs: &[u64], k: usize) -> Vec<Range<usize>> {
+    let n = costs.len();
+    if n == 0 {
+        return vec![0..0; k];
+    }
+    let mut parts = partition_by_cost(costs, k.min(n));
+    parts.resize(k, n..n);
+    parts
+}
+
+pub(crate) fn poke_f64s(mem: &mut dyn MemPort, addr: u64, vals: &[f64]) {
+    for (i, &v) in vals.iter().enumerate() {
+        mem.poke_f64(addr + 8 * i as u64, v);
+    }
+}
+
+pub(crate) fn poke_idx(mem: &mut dyn MemPort, addr: u64, idcs: &[u32], iw: IdxWidth) {
+    let ib = iw.bytes();
+    for (i, &x) in idcs.iter().enumerate() {
+        mem.poke(addr + ib * i as u64, ib, x as u64);
+    }
+}
+
+pub(crate) fn poke_ptrs(mem: &mut dyn MemPort, addr: u64, ptrs: &[u32]) {
+    for (i, &p) in ptrs.iter().enumerate() {
+        mem.poke(addr + 4 * i as u64, 4, p as u64);
+    }
+}
+
+/// Queue a flat DMA transfer, rounding the byte count up to the 8-byte
+/// bus granule ([`super::Arena`] pads every allocation accordingly) and
+/// dropping empty transfers.
+pub(crate) fn push_dma(jobs: &mut Vec<DmaJob>, dram: u64, tcdm: u64, bytes: u64, to_tcdm: bool) {
+    if bytes > 0 {
+        jobs.push(DmaJob::flat(dram, tcdm, (bytes + 7) & !7, to_tcdm));
+    }
+}
+
+/// One fully planned cluster pass: the shared program, per-core argument
+/// registers, and the three-phase DMA schedule (inputs → compute →
+/// result writeback), synchronized by the two in-program barriers.
+struct CsfPass {
+    prog: Program,
+    core_regs: Vec<Vec<(u8, i64)>>,
+    schedule: DmaSchedule,
+}
+
+impl CsfPass {
+    fn build(&self, cfg: &ClusterCfg) -> Cluster {
+        let mut cl = Cluster::new(cfg.clone(), vec![self.prog.clone(); cfg.cores]);
+        for (c, regs) in self.core_regs.iter().enumerate() {
+            for &(r, v) in regs {
+                cl.set_reg(c, r, v);
+            }
+        }
+        cl.set_dma_schedule(self.schedule.clone());
+        cl
+    }
+}
+
+/// Plan the structure-only pass of one cluster over its fiber shard:
+/// DRAM image, TCDM layout, per-core registers and worst-case index
+/// ping-pong, DMA schedule. Returns the pass and the DRAM address of
+/// the size table.
+#[allow(clippy::too_many_arguments)]
+fn plan_symbolic_pass(
+    variant: Variant,
+    iw: IdxWidth,
+    a: &Csf,
+    b: &Csf,
+    parts: &[Range<usize>],
+    cfg: &ClusterCfg,
+    mem: &mut dyn MemPort,
+    region: MemRegion,
+) -> (CsfPass, u64) {
+    let ib = iw.bytes();
+    let nfib = a.nfibers() as u64;
+    // DRAM image inside this cluster's memory window
+    let mut dr = Arena::new(region.base, region.base + region.bytes);
+    let d_a_cidcs = dr.alloc_idx(a.nnz() as u64, iw);
+    let d_a_rptrs = dr.alloc(4 * (nfib + 1));
+    let d_b_cidcs = dr.alloc_idx(b.nnz() as u64, iw);
+    let d_b_dir = dr.alloc(4 * (b.nrows as u64 + 1));
+    let d_sizes = dr.alloc((4 * nfib).max(8));
+    poke_idx(mem, d_a_cidcs, &a.col_idcs, iw);
+    poke_ptrs(mem, d_a_rptrs, &a.row_ptrs);
+    poke_idx(mem, d_b_cidcs, &b.col_idcs, iw);
+    poke_ptrs(mem, d_b_dir, &b.row_directory());
+    // TCDM layout mirrors the DRAM image; ping-pong buffers are TCDM-only
+    let mut ar = Arena::new(0, cfg.tcdm_bytes as u64);
+    let t_a_cidcs = ar.alloc_idx(a.nnz() as u64, iw);
+    let t_a_rptrs = ar.alloc(4 * (nfib + 1));
+    let t_b_cidcs = ar.alloc_idx(b.nnz() as u64, iw);
+    let t_b_dir = ar.alloc(4 * (b.nrows as u64 + 1));
+    let t_sizes = ar.alloc((4 * nfib).max(8));
+    let caps = fiber_caps(a, b);
+    let core_regs = parts
+        .iter()
+        .map(|fr| {
+            let row_cap = caps[fr.clone()].iter().copied().max().unwrap_or(0).max(1) as u64;
+            let pp0 = ar.alloc_idx(row_cap, iw);
+            let pp1 = ar.alloc_idx(row_cap, iw);
+            vec![
+                (A1, (t_a_cidcs + a.row_ptrs[fr.start] as u64 * ib) as i64),
+                (A3, t_b_cidcs as i64),
+                (A4, (t_sizes + 4 * fr.start as u64) as i64),
+                (A5, (t_a_rptrs + 4 * fr.start as u64) as i64),
+                (A6, fr.len() as i64),
+                (A7, t_b_dir as i64),
+                (S1, pp0 as i64),
+                (S3, pp1 as i64),
+            ]
+        })
+        .collect();
+    let mut inputs = Vec::new();
+    push_dma(&mut inputs, d_a_cidcs, t_a_cidcs, a.nnz() as u64 * ib, true);
+    push_dma(&mut inputs, d_a_rptrs, t_a_rptrs, 4 * (nfib + 1), true);
+    push_dma(&mut inputs, d_b_cidcs, t_b_cidcs, b.nnz() as u64 * ib, true);
+    push_dma(&mut inputs, d_b_dir, t_b_dir, 4 * (b.nrows as u64 + 1), true);
+    let mut writeback = Vec::new();
+    push_dma(&mut writeback, d_sizes, t_sizes, 4 * nfib, false);
+    let prog = match variant {
+        Variant::Base => smxsm_csf_symbolic_base_prog(iw, true),
+        Variant::Sssr => smxsm_csf_symbolic_sssr_prog(iw, true),
+        Variant::Ssr => unreachable!("variant capability checked by execute"),
+    };
+    let schedule = DmaSchedule { phases: vec![inputs, Vec::new(), writeback] };
+    (CsfPass { prog, core_regs, schedule }, d_sizes)
+}
+
+/// DRAM locations of one core's output CSF piece after the numeric
+/// pass's writeback phase.
+struct CoreOut {
+    vals: u64,
+    cidcs: u64,
+    ridcs: u64,
+    rptrs: u64,
+    fib_cell: u64,
+}
+
+/// Plan the numeric pass of one cluster at the exact symbolic sizes:
+/// every per-core ping-pong, output array, and writeback transfer is
+/// sized from its fiber shard's slice of `sizes`.
+#[allow(clippy::too_many_arguments)]
+fn plan_numeric_pass(
+    variant: Variant,
+    iw: IdxWidth,
+    a: &Csf,
+    b: &Csf,
+    parts: &[Range<usize>],
+    sizes: &[u32],
+    cfg: &ClusterCfg,
+    mem: &mut dyn MemPort,
+    region: MemRegion,
+) -> (CsfPass, Vec<CoreOut>) {
+    let ib = iw.bytes();
+    let nfib = a.nfibers() as u64;
+    let mut dr = Arena::new(region.base, region.base + region.bytes);
+    let d_a_vals = dr.alloc_f64(a.nnz() as u64);
+    let d_a_cidcs = dr.alloc_idx(a.nnz() as u64, iw);
+    let d_a_rptrs = dr.alloc(4 * (nfib + 1));
+    let d_a_ridcs = dr.alloc_idx(nfib, iw);
+    let d_b_vals = dr.alloc_f64(b.nnz() as u64);
+    let d_b_cidcs = dr.alloc_idx(b.nnz() as u64, iw);
+    let d_b_dir = dr.alloc(4 * (b.nrows as u64 + 1));
+    poke_f64s(mem, d_a_vals, &a.vals);
+    poke_idx(mem, d_a_cidcs, &a.col_idcs, iw);
+    poke_ptrs(mem, d_a_rptrs, &a.row_ptrs);
+    poke_idx(mem, d_a_ridcs, &a.row_idcs, iw);
+    poke_f64s(mem, d_b_vals, &b.vals);
+    poke_idx(mem, d_b_cidcs, &b.col_idcs, iw);
+    poke_ptrs(mem, d_b_dir, &b.row_directory());
+    let mut ar = Arena::new(0, cfg.tcdm_bytes as u64);
+    let t_a_vals = ar.alloc_f64(a.nnz() as u64);
+    let t_a_cidcs = ar.alloc_idx(a.nnz() as u64, iw);
+    let t_a_rptrs = ar.alloc(4 * (nfib + 1));
+    let t_a_ridcs = ar.alloc_idx(nfib, iw);
+    let t_b_vals = ar.alloc_f64(b.nnz() as u64);
+    let t_b_cidcs = ar.alloc_idx(b.nnz() as u64, iw);
+    let t_b_dir = ar.alloc(4 * (b.nrows as u64 + 1));
+    let mut inputs = Vec::new();
+    push_dma(&mut inputs, d_a_vals, t_a_vals, a.nnz() as u64 * 8, true);
+    push_dma(&mut inputs, d_a_cidcs, t_a_cidcs, a.nnz() as u64 * ib, true);
+    push_dma(&mut inputs, d_a_rptrs, t_a_rptrs, 4 * (nfib + 1), true);
+    push_dma(&mut inputs, d_a_ridcs, t_a_ridcs, nfib * ib, true);
+    push_dma(&mut inputs, d_b_vals, t_b_vals, b.nnz() as u64 * 8, true);
+    push_dma(&mut inputs, d_b_cidcs, t_b_cidcs, b.nnz() as u64 * ib, true);
+    push_dma(&mut inputs, d_b_dir, t_b_dir, 4 * (b.nrows as u64 + 1), true);
+    let mut writeback = Vec::new();
+    let mut core_regs = Vec::with_capacity(parts.len());
+    let mut outs = Vec::with_capacity(parts.len());
+    for fr in parts {
+        let (row_cap, cap, fibs) = exact_caps(&sizes[fr.clone()]);
+        let acc_a_vals = ar.alloc_f64(row_cap as u64);
+        let acc_a_idcs = ar.alloc_idx(row_cap as u64, iw);
+        let acc_b_vals = ar.alloc_f64(row_cap as u64);
+        let acc_b_idcs = ar.alloc_idx(row_cap as u64, iw);
+        let t_vals = ar.alloc_f64(cap as u64);
+        let t_cidcs = ar.alloc_idx(cap as u64, iw);
+        let t_ridcs = ar.alloc_idx(fibs.max(1) as u64, iw);
+        let t_rptrs = ar.alloc(4 * (fibs as u64 + 2));
+        let t_fib = ar.alloc(8);
+        let d_vals = dr.alloc_f64(cap as u64);
+        let d_cidcs = dr.alloc_idx(cap as u64, iw);
+        let d_ridcs = dr.alloc_idx(fibs.max(1) as u64, iw);
+        let d_rptrs = dr.alloc(4 * (fibs as u64 + 2));
+        let d_fib = dr.alloc(8);
+        core_regs.push(vec![
+            (A0, (t_a_vals + a.row_ptrs[fr.start] as u64 * 8) as i64),
+            (A1, (t_a_cidcs + a.row_ptrs[fr.start] as u64 * ib) as i64),
+            (A2, t_b_vals as i64),
+            (A3, t_b_cidcs as i64),
+            (A4, t_vals as i64),
+            (A5, (t_a_rptrs + 4 * fr.start as u64) as i64),
+            (A6, fr.len() as i64),
+            (A7, t_b_dir as i64),
+            (S0, acc_a_vals as i64),
+            (S1, acc_a_idcs as i64),
+            (S2, acc_b_vals as i64),
+            (S3, acc_b_idcs as i64),
+            (S6, (t_a_ridcs + fr.start as u64 * ib) as i64),
+            (S8, t_cidcs as i64),
+            (S9, t_rptrs as i64),
+            (RA, t_ridcs as i64),
+            (SP, t_fib as i64),
+        ]);
+        push_dma(&mut writeback, d_vals, t_vals, cap as u64 * 8, false);
+        push_dma(&mut writeback, d_cidcs, t_cidcs, cap as u64 * ib, false);
+        push_dma(&mut writeback, d_ridcs, t_ridcs, fibs as u64 * ib, false);
+        push_dma(&mut writeback, d_rptrs, t_rptrs, 4 * (fibs as u64 + 1), false);
+        push_dma(&mut writeback, d_fib, t_fib, 8, false);
+        outs.push(CoreOut {
+            vals: d_vals,
+            cidcs: d_cidcs,
+            ridcs: d_ridcs,
+            rptrs: d_rptrs,
+            fib_cell: d_fib,
+        });
+    }
+    let prog = match variant {
+        Variant::Base => smxsm_csf_base_prog(iw, true),
+        Variant::Sssr => smxsm_csf_sssr_prog(iw, true),
+        Variant::Ssr => unreachable!("variant capability checked by execute"),
+    };
+    let schedule = DmaSchedule { phases: vec![inputs, Vec::new(), writeback] };
+    (CsfPass { prog, core_regs, schedule }, outs)
+}
+
+/// Read the per-core output CSF pieces back from a memory image.
+fn read_core_outputs(
+    peek: &dyn Fn(u64, u64) -> u64,
+    outs: &[CoreOut],
+    iw: IdxWidth,
+    nrows: usize,
+    ncols: usize,
+) -> Vec<Csf> {
+    let ib = iw.bytes();
+    outs.iter()
+        .map(|o| {
+            let nfib = peek(o.fib_cell, 8) as usize;
+            let row_ptrs: Vec<u32> =
+                (0..=nfib).map(|i| peek(o.rptrs + 4 * i as u64, 4) as u32).collect();
+            let nnz = *row_ptrs.last().unwrap() as usize;
+            Csf {
+                nrows,
+                ncols,
+                row_idcs: (0..nfib).map(|i| peek(o.ridcs + ib * i as u64, ib) as u32).collect(),
+                row_ptrs,
+                col_idcs: (0..nnz).map(|i| peek(o.cidcs + ib * i as u64, ib) as u32).collect(),
+                vals: (0..nnz).map(|i| f64::from_bits(peek(o.vals + 8 * i as u64, 8))).collect(),
+            }
+        })
+        .collect()
+}
+
+/// Two-phase cluster SpGEMM: Gustavson-cost-balanced fiber shards per
+/// core, a symbolic then an exactly-sized numeric pass (each with its
+/// own DMA-in / compute / writeback phases), and a deterministic
+/// per-core CSF concatenation — fiber sharding keeps output rows
+/// exclusive and ordered, so the result is bitwise identical to the
+/// single-CC run.
+fn run_cluster_csf(
+    variant: Variant,
+    iw: IdxWidth,
+    a: &Csf,
+    b: &Csf,
+    cfg: &ClusterCfg,
+    limit: u64,
+) -> Result<(Value, Report, Detail), KernelError> {
+    let parts = partition_padded(&fiber_costs(a, b), cfg.cores);
+    let hang = |cycles| KernelError::Hang { kernel: "", cycles };
+
+    let mut dram =
+        Dram::with_params(cfg.dram_bytes, cfg.dram_gbps_pin, cfg.dram_latency, cfg.ic_latency);
+    let bytes = dram.size() as u64;
+    let (sym, d_sizes) =
+        plan_symbolic_pass(variant, iw, a, b, &parts, cfg, &mut dram, MemRegion::whole(bytes));
+    let mut cl = sym.build(cfg);
+    let sym_cycles = cl.try_run(&mut dram, limit).map_err(hang)?;
+    let mut stats = cl.stats();
+    let sizes: Vec<u32> =
+        (0..a.nfibers()).map(|f| dram.peek(d_sizes + 4 * f as u64, 4) as u32).collect();
+
+    let mut dram =
+        Dram::with_params(cfg.dram_bytes, cfg.dram_gbps_pin, cfg.dram_latency, cfg.ic_latency);
+    let (num, outs) = plan_numeric_pass(
+        variant,
+        iw,
+        a,
+        b,
+        &parts,
+        &sizes,
+        cfg,
+        &mut dram,
+        MemRegion::whole(bytes),
+    );
+    let mut cl = num.build(cfg);
+    let num_cycles = cl.try_run(&mut dram, limit).map_err(hang)?;
+    merge_seq(&mut stats, &cl.stats());
+
+    let pieces = read_core_outputs(&|ad, by| dram.peek(ad, by), &outs, iw, a.nrows, b.ncols);
+    let c = Csf::concat(a.nrows, b.ncols, &pieces);
+    let report = Report::from_run(sym_cycles + num_cycles, ops::smxsm_csf_flops(a, b), stats);
+    Ok((Value::Csf(c), report, Detail::Cluster { chunks: 2 }))
+}
+
+fn merge_hbm(x: HbmClusterStats, y: HbmClusterStats) -> HbmClusterStats {
+    HbmClusterStats {
+        bytes_read: x.bytes_read + y.bytes_read,
+        bytes_written: x.bytes_written + y.bytes_written,
+        bursts: x.bursts + y.bursts,
+        queue_cycles: x.queue_cycles + y.queue_cycles,
+    }
+}
+
+/// Two-phase system SpGEMM: Gustavson-cost-balanced fiber shards of A
+/// across clusters (B replicated into every cluster's HBM window, as
+/// the vector operands of the sharded SpMV are), the symbolic pass run
+/// system-wide, then the numeric pass at the exact sizes, then a
+/// deterministic (cluster, core)-ordered CSF merge on the host.
+fn run_system_csf(
+    variant: Variant,
+    iw: IdxWidth,
+    a: &Csf,
+    b: &Csf,
+    cfg: &SystemCfg,
+    limit: u64,
+) -> Result<(Value, Report, Detail), KernelError> {
+    let k = cfg.clusters;
+    let costs = fiber_costs(a, b);
+    let cparts = partition_padded(&costs, k);
+    let shards: Vec<Csf> = cparts.iter().map(|r| a.slice_fibers(r.clone())).collect();
+    // nnz-balanced core split within each cluster's fiber shard
+    let core_parts: Vec<Vec<Range<usize>>> =
+        cparts.iter().map(|r| partition_padded(&costs[r.clone()], cfg.cluster.cores)).collect();
+    let stride = cfg.shard_stride();
+    let hang = |cycles| KernelError::Hang { kernel: "", cycles };
+
+    // ---- symbolic pass, system-wide ----
+    let mut hbm = Hbm::new(cfg);
+    let mut sym_passes = Vec::with_capacity(k);
+    for i in 0..k {
+        let mut port = hbm.port(i);
+        sym_passes.push(plan_symbolic_pass(
+            variant,
+            iw,
+            &shards[i],
+            b,
+            &core_parts[i],
+            &cfg.cluster,
+            &mut port,
+            MemRegion::window(i, stride),
+        ));
+    }
+    let clusters = sym_passes.iter().map(|(p, _)| p.build(&cfg.cluster)).collect();
+    let mut sys = System::assemble(cfg.clone(), clusters, hbm);
+    sys.try_run(limit).map_err(hang)?;
+    let sym_finished = sys.finished_cycles();
+    let sym_total = *sym_finished.iter().max().unwrap();
+    let sym_stats: Vec<RunStats> = (0..k)
+        .map(|i| {
+            let mut s = sys.clusters[i].stats();
+            s.cycles = sym_finished[i];
+            s
+        })
+        .collect();
+    let sym_hbm = sys.hbm.cluster_stats.clone();
+    let sizes: Vec<Vec<u32>> = (0..k)
+        .map(|i| {
+            let d_sizes = sym_passes[i].1;
+            (0..shards[i].nfibers())
+                .map(|f| sys.hbm.peek(d_sizes + 4 * f as u64, 4) as u32)
+                .collect()
+        })
+        .collect();
+
+    // ---- numeric pass at the exact sizes (fresh system: sequential) ----
+    let mut hbm = Hbm::new(cfg);
+    let mut num_passes = Vec::with_capacity(k);
+    for i in 0..k {
+        let mut port = hbm.port(i);
+        num_passes.push(plan_numeric_pass(
+            variant,
+            iw,
+            &shards[i],
+            b,
+            &core_parts[i],
+            &sizes[i],
+            &cfg.cluster,
+            &mut port,
+            MemRegion::window(i, stride),
+        ));
+    }
+    let clusters = num_passes.iter().map(|(p, _)| p.build(&cfg.cluster)).collect();
+    let mut sys = System::assemble(cfg.clone(), clusters, hbm);
+    sys.try_run(limit).map_err(hang)?;
+    let num_finished = sys.finished_cycles();
+    let num_total = *num_finished.iter().max().unwrap();
+
+    // gather: per-core pieces in (cluster, core) order — fiber sharding
+    // keeps output rows exclusive and globally ordered
+    let mut pieces = Vec::new();
+    for (_, outs) in &num_passes {
+        pieces.extend(read_core_outputs(
+            &|ad, by| sys.hbm.peek(ad, by),
+            outs,
+            iw,
+            a.nrows,
+            b.ncols,
+        ));
+    }
+    let c = Csf::concat(a.nrows, b.ncols, &pieces);
+
+    let mut agg = RunStats::default();
+    let shard_runs: Vec<ShardRun> = (0..k)
+        .map(|i| {
+            let mut s = sym_stats[i];
+            let mut ns = sys.clusters[i].stats();
+            ns.cycles = num_finished[i];
+            merge_seq(&mut s, &ns);
+            add_stats(&mut agg, &s);
+            ShardRun {
+                // stored-fiber range of A (the row sharding unit of the
+                // compressed level 0)
+                rows: cparts[i].clone(),
+                cycles: sym_finished[i] + num_finished[i],
+                report: Report::from_run(
+                    sym_finished[i] + num_finished[i],
+                    ops::smxsm_csf_flops(&shards[i], b),
+                    s,
+                ),
+                hbm: merge_hbm(sym_hbm[i], sys.hbm.cluster_stats[i]),
+                chunks: 2,
+            }
+        })
+        .collect();
+    let total = sym_total + num_total;
+    agg.cycles = total;
+    let report = Report::from_run(total, ops::smxsm_csf_flops(a, b), agg);
+    let combined: Vec<u64> = (0..k).map(|i| sym_finished[i] + num_finished[i]).collect();
+    let skew = combined.iter().max().unwrap() - combined.iter().min().unwrap();
+    let ib = iw.bytes();
+    // gathered output footprint: leaf values + indices, level-0 ids,
+    // and each piece's pointer array + fiber-count cell
+    let writeback_bytes =
+        c.nnz() as u64 * (8 + ib) + c.nfibers() as u64 * (ib + 4) + pieces.len() as u64 * 12;
+    Ok((
+        Value::Csf(c),
+        report,
+        Detail::System {
+            shards: shard_runs,
+            reduction: ReduceStats { writeback_bytes, combine_flops: 0, skew_cycles: skew },
+        },
+    ))
 }
 
 /// CSF × CSF row-wise SpGEMM (CSF result). Payload = union elements.
@@ -497,5 +1407,134 @@ mod tests {
         let speedup = base.cycles as f64 / sssr.cycles as f64;
         assert!(speedup > 1.5, "smxsm_csf speedup only {speedup}");
         assert_eq!(base.payload, sssr.payload);
+    }
+
+    /// Tentpole property: the in-simulator symbolic pass sizes every
+    /// output fiber exactly — per fiber and in total — on both variants,
+    /// across a corpus of random shapes (including empty rows of A and
+    /// empty rows of B).
+    #[test]
+    fn symbolic_pass_sizes_every_fiber_exactly() {
+        for seed in 80..88 {
+            let a = Csf::from_csr(&matgen::random_csr(seed, 24, 20, 40 + 11 * seed as usize % 90));
+            let b = Csf::from_csr(&matgen::random_csr(seed + 100, 20, 18, 70));
+            let (want, want_total) = ops::smxsm_csf_symbolic(&a, &b);
+            let oracle = ops::smxsm_csf(&a, &b);
+            assert_eq!(want_total, oracle.nnz(), "host symbolic model diverges from oracle");
+            for v in [Variant::Base, Variant::Sssr] {
+                let (sizes, cycles, _) =
+                    run_symbolic_cc(v, IdxWidth::U16, &a, &b, 0, 10_000_000).unwrap();
+                assert!(cycles > 0);
+                let got: Vec<usize> = sizes.iter().map(|&s| s as usize).collect();
+                assert_eq!(got, want, "{v:?} seed {seed}: symbolic sizes diverge");
+                assert_eq!(got.iter().sum::<usize>(), want_total);
+            }
+        }
+    }
+
+    /// The symbolic pass must cost no FLOPs: it is a pure index-stream
+    /// walk (that is the point of the split).
+    #[test]
+    fn symbolic_pass_is_flop_free() {
+        let a = Csf::from_csr(&matgen::random_csr(90, 30, 24, 150));
+        let b = Csf::from_csr(&matgen::random_csr(91, 24, 20, 120));
+        for v in [Variant::Base, Variant::Sssr] {
+            let (_, _, stats) = run_symbolic_cc(v, IdxWidth::U16, &a, &b, 0, 10_000_000).unwrap();
+            assert_eq!(stats.flops, 0, "{v:?} symbolic pass performed FP work");
+        }
+    }
+
+    /// Two-phase cluster result is bitwise identical to the single-CC
+    /// result (same per-fiber instruction sequences, deterministic
+    /// per-core concatenation).
+    #[test]
+    fn cluster_matches_single_cc_bitwise() {
+        let a = Csf::from_csr(&matgen::random_csr(92, 40, 32, 300));
+        let b = Csf::from_csr(&matgen::random_csr(93, 32, 28, 220));
+        let ops_ = [Operand::Csf(&a), Operand::Csf(&b)];
+        let cfg = ClusterCfg::paper_cluster();
+        for v in [Variant::Base, Variant::Sssr] {
+            let single = api::must_execute("smxsm_csf", v, IdxWidth::U16, &ops_, &ExecCfg::single_cc());
+            let cluster =
+                api::must_execute("smxsm_csf", v, IdxWidth::U16, &ops_, &ExecCfg::cluster(cfg.clone()));
+            let (Value::Csf(want), Value::Csf(got)) = (single.output, cluster.output) else {
+                unreachable!("smxsm_csf yields CSF")
+            };
+            assert_eq!(got, want, "{v:?}: cluster diverged from single CC");
+            match cluster.detail {
+                Detail::Cluster { chunks } => assert_eq!(chunks, 2),
+                _ => unreachable!("cluster detail"),
+            }
+        }
+    }
+
+    /// N-cluster system runs are bitwise identical to single-CC, and
+    /// more clusters are faster on a real graph workload.
+    #[test]
+    fn system_bit_identical_and_scales() {
+        let g = Csf::from_csr(&matgen::mycielskian(7));
+        let ops_ = [Operand::Csf(&g), Operand::Csf(&g)];
+        let single =
+            api::must_execute("smxsm_csf", Variant::Sssr, IdxWidth::U16, &ops_, &ExecCfg::single_cc());
+        let Value::Csf(want) = single.output else { unreachable!() };
+        let mut one_cluster_cycles = 0;
+        for clusters in [1usize, 4] {
+            let cfg = SystemCfg {
+                cluster: ClusterCfg { tcdm_bytes: 1 << 20, ..ClusterCfg::paper_cluster() },
+                ..SystemCfg::paper_system(clusters, clusters)
+            };
+            let run = api::must_execute(
+                "smxsm_csf",
+                Variant::Sssr,
+                IdxWidth::U16,
+                &ops_,
+                &ExecCfg::system(cfg),
+            );
+            let Value::Csf(got) = run.output else { unreachable!() };
+            assert_eq!(got, want, "{clusters}-cluster system diverged bitwise");
+            let Detail::System { shards, reduction } = run.detail else { unreachable!() };
+            assert_eq!(shards.len(), clusters);
+            let fibers: usize = shards.iter().map(|s| s.rows.len()).sum();
+            assert_eq!(fibers, g.nfibers());
+            assert!(reduction.combine_flops == 0, "gather-only merge");
+            if clusters == 1 {
+                one_cluster_cycles = run.report.cycles;
+            } else {
+                assert!(
+                    run.report.cycles < one_cluster_cycles,
+                    "4 clusters must beat 1: {} vs {}",
+                    run.report.cycles,
+                    one_cluster_cycles
+                );
+            }
+        }
+    }
+
+    /// Sharding degenerate shapes: fewer stored fibers than cores (and
+    /// than clusters) must pad with empty shards, not panic.
+    #[test]
+    fn sharding_handles_tiny_inputs() {
+        let a = Csf::from_dense(&[vec![1.0, 2.0], vec![0.0, 3.0]]);
+        let b = Csf::from_dense(&[vec![1.0, 0.0, 2.0], vec![0.0, 4.0, 0.0]]);
+        let ops_ = [Operand::Csf(&a), Operand::Csf(&b)];
+        let cluster = api::must_execute(
+            "smxsm_csf",
+            Variant::Sssr,
+            IdxWidth::U16,
+            &ops_,
+            &ExecCfg::cluster(ClusterCfg::paper_cluster()),
+        );
+        let system = api::must_execute(
+            "smxsm_csf",
+            Variant::Base,
+            IdxWidth::U16,
+            &ops_,
+            &ExecCfg::system(SystemCfg::paper_system(4, 2)),
+        );
+        let (Value::Csf(cc_), Value::Csf(cs)) = (cluster.output, system.output) else {
+            unreachable!()
+        };
+        assert_eq!(cc_, ops::smxsm_csf(&a, &b));
+        assert_eq!(cs, ops::smxsm_csf(&a, &b));
     }
 }

@@ -74,7 +74,7 @@ impl SystemRun {
 /// Accumulate one cluster's stats into a system aggregate. The
 /// exhaustive destructuring (no `..`) makes the compiler flag any field
 /// later added to [`RunStats`] instead of silently dropping it.
-fn add_stats(t: &mut RunStats, s: &RunStats) {
+pub(crate) fn add_stats(t: &mut RunStats, s: &RunStats) {
     let RunStats {
         cycles,
         cores,
@@ -144,7 +144,7 @@ pub(crate) fn run_system(
             operand,
             &cfg.cluster,
             &mut port,
-            MemRegion { base: i as u64 * stride, bytes: stride },
+            MemRegion::window(i, stride),
         ));
     }
     let clusters: Vec<Cluster> = jobs

@@ -22,13 +22,15 @@ USAGE:
 COMMANDS:
     fig 4a|4b|4c|4d|4e|4f|5a|5b|6a|6b|7|8a|8b   regenerate one figure
     table 1|2|3                                  regenerate one table
-    sweep [fig4a scale graph serve ...]          run experiment sweeps
+    sweep [fig4a scale spgemm ...]               run experiment sweeps
                                                  (default: all) and write
                                                  BENCH_*.json; `scale` /
                                                  `scale_sv` are the multi-
                                                  cluster system-layer sweeps,
                                                  `graph` the CSF SpGEMM +
                                                  triangle-counting sweep,
+                                                 `spgemm` the two-phase
+                                                 system-SpGEMM scaling sweep,
                                                  `serve` the serving-engine
                                                  sweep, `simperf` the
                                                  simulator wall-clock
@@ -424,6 +426,10 @@ fn serve_cmd(rest: &[String]) {
         s.batches, s.batched_requests, s.requests, s.avg_batch
     );
     println!("  energy                : {:.2} uJ total", s.energy_j * 1e6);
+    println!(
+        "  host wall             : {:.1} ms ({:.0} us/request)",
+        s.wall_ms, s.wall_us_per_request
+    );
     for (i, c) in out.clusters.iter().enumerate() {
         println!(
             "  cluster {i}: {} dispatches ({} batched), busy {:.1} %, {} KiB staged",

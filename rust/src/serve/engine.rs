@@ -173,6 +173,12 @@ pub struct ServeSummary {
     /// Mean requests per dispatch.
     pub avg_batch: f64,
     pub energy_j: f64,
+    /// Host wall-clock of the engine run (validation through summary),
+    /// milliseconds. The only non-deterministic field: it measures the
+    /// simulator, not the simulated system, and varies run to run.
+    pub wall_ms: f64,
+    /// Host microseconds of engine wall time per served request.
+    pub wall_us_per_request: f64,
 }
 
 /// Everything one engine run produced.
@@ -225,7 +231,8 @@ pub fn run_serve(
     corpus: &[ServeMatrix],
     reqs: &[Request],
 ) -> Result<ServeOutcome, String> {
-    validate_stream(reqs, corpus, cfg.variant, cfg.iw, cfg.batch.window > 0)?;
+    let wall_t0 = std::time::Instant::now();
+    validate_stream(reqs, corpus, cfg.variant, cfg.iw, cfg.sys.clusters, cfg.batch.window > 0)?;
     if reqs.windows(2).any(|w| w[0].arrival > w[1].arrival) {
         return Err("request stream must be arrival-sorted".into());
     }
@@ -418,7 +425,16 @@ pub fn run_serve(
     for (st, cache) in cl_stats.iter_mut().zip(&caches) {
         st.cache = cache.stats;
     }
-    let summary = summarize(&requests, &cl_stats, corpus);
+    let mut summary = summarize(&requests, &cl_stats, corpus);
+    // Host wall-clock stamps are the one non-simulated pair of fields:
+    // summarize() stays a pure function of the outcomes, the timing is
+    // applied here where the engine loop actually ran.
+    summary.wall_ms = wall_t0.elapsed().as_secs_f64() * 1e3;
+    summary.wall_us_per_request = if requests.is_empty() {
+        0.0
+    } else {
+        summary.wall_ms * 1e3 / requests.len() as f64
+    };
     Ok(ServeOutcome { requests, clusters: cl_stats, summary })
 }
 
@@ -470,6 +486,9 @@ fn summarize(
         batched_requests,
         avg_batch: n as f64 / dispatches.max(1) as f64,
         energy_j: requests.iter().map(|r| r.energy_j).sum(),
+        // filled by the caller from its own clock — see run_serve
+        wall_ms: 0.0,
+        wall_us_per_request: 0.0,
     }
 }
 
@@ -494,6 +513,10 @@ mod tests {
         assert_eq!(a.requests, b.requests);
         assert_eq!(a.summary.makespan, b.summary.makespan);
         assert_eq!(a.summary.p95_latency, b.summary.p95_latency);
+        // the host wall stamps are the one pair allowed to differ
+        // between the two runs, but both must be populated
+        assert!(a.summary.wall_ms > 0.0);
+        assert!(a.summary.wall_us_per_request > 0.0);
     }
 
     #[test]

@@ -200,15 +200,21 @@ pub fn gen_stream(cfg: &StreamCfg, corpus: &[ServeMatrix]) -> Vec<Request> {
 /// every issued kernel must exist, run on the single-CC target with the
 /// configured variant and index width, and receive operands its
 /// contract accepts (graph kernels need graph adjacencies; batching
-/// needs the `smxdm` kernel). Returns a one-line error per violation.
+/// needs the `smxdm` kernel). On a multi-cluster stream (`clusters >
+/// 1`) every issued kernel must additionally carry the System target
+/// row, so it stays schedulable when the engine promotes heavy requests
+/// to whole-system scale-out — `smxsm_csf`/`tricnt` only pass this
+/// since growing their two-phase Cluster/System drivers. Returns a
+/// one-line error per violation.
 pub fn validate_stream(
     reqs: &[Request],
     corpus: &[ServeMatrix],
     variant: Variant,
     iw: IdxWidth,
+    clusters: usize,
     batching: bool,
 ) -> Result<(), String> {
-    let check_kernel = |name: &'static str| -> Result<(), String> {
+    let check_kernel = |name: &'static str, issued: bool| -> Result<(), String> {
         let k = api::kernel(name).ok_or_else(|| format!("kernel {name:?} not in registry"))?;
         if !k.targets().contains(&TargetKind::SingleCc) {
             return Err(format!("kernel {name} does not run on the single-cc target"));
@@ -219,12 +225,28 @@ pub fn validate_stream(
         if !k.widths().contains(&iw) {
             return Err(format!("kernel {name} does not support {}-bit indices", iw.name()));
         }
+        // batching combiners (`smxdm`) always dispatch within one
+        // cluster, so only stream-issued kernels need the system row
+        if issued && clusters > 1 {
+            if !k.targets().contains(&TargetKind::System) {
+                return Err(format!(
+                    "kernel {name} cannot be served on a {clusters}-cluster stream \
+                     (no system target in the registry)"
+                ));
+            }
+            if !k.variants_for(TargetKind::System).contains(&variant) {
+                return Err(format!(
+                    "kernel {name} has no {} variant on the system target",
+                    variant.name()
+                ));
+            }
+        }
         Ok(())
     };
     let mut seen: Vec<&'static str> = vec![];
     for r in reqs {
         if !seen.contains(&r.kernel) {
-            check_kernel(r.kernel)?;
+            check_kernel(r.kernel, true)?;
             seen.push(r.kernel);
         }
         let m = corpus
@@ -245,7 +267,7 @@ pub fn validate_stream(
         }
     }
     if batching && seen.contains(&"smxdv") {
-        check_kernel("smxdm")?;
+        check_kernel("smxdm", false)?;
     }
     Ok(())
 }
@@ -285,7 +307,7 @@ mod tests {
         // the hot tenant dominates the mix
         let hot = a.iter().filter(|r| r.tenant == 0).count();
         assert!(hot * 100 >= 64 * 40, "hot share collapsed: {hot}/64");
-        validate_stream(&a, &corpus, Variant::Sssr, IdxWidth::U16, true).unwrap();
+        validate_stream(&a, &corpus, Variant::Sssr, IdxWidth::U16, 1, true).unwrap();
     }
 
     #[test]
@@ -307,22 +329,55 @@ mod tests {
             opseed: 1,
         };
         // unknown kernel
-        assert!(validate_stream(&[req("nope", 0)], &corpus, Variant::Sssr, IdxWidth::U16, false)
+        assert!(validate_stream(&[req("nope", 0)], &corpus, Variant::Sssr, IdxWidth::U16, 1, false)
             .is_err());
         // smxsv has no SSR variant
-        assert!(validate_stream(&[req("smxsv", 0)], &corpus, Variant::Ssr, IdxWidth::U16, false)
+        assert!(validate_stream(&[req("smxsv", 0)], &corpus, Variant::Ssr, IdxWidth::U16, 1, false)
             .is_err());
         // 512-column matrices do not fit 8-bit indices
-        assert!(validate_stream(&[req("smxdv", 0)], &corpus, Variant::Sssr, IdxWidth::U8, false)
+        assert!(validate_stream(&[req("smxdv", 0)], &corpus, Variant::Sssr, IdxWidth::U8, 1, false)
             .is_err());
         // tricnt on a non-graph matrix
-        assert!(validate_stream(&[req("tricnt", 0)], &corpus, Variant::Sssr, IdxWidth::U16, false)
+        assert!(validate_stream(&[req("tricnt", 0)], &corpus, Variant::Sssr, IdxWidth::U16, 1, false)
             .is_err());
         // matrix index out of range
-        assert!(validate_stream(&[req("smxdv", 99)], &corpus, Variant::Sssr, IdxWidth::U16, false)
+        assert!(validate_stream(&[req("smxdv", 99)], &corpus, Variant::Sssr, IdxWidth::U16, 1, false)
             .is_err());
         // a valid graph request passes
-        validate_stream(&[req("tricnt", 4)], &corpus, Variant::Sssr, IdxWidth::U16, true).unwrap();
+        validate_stream(&[req("tricnt", 4)], &corpus, Variant::Sssr, IdxWidth::U16, 1, true).unwrap();
+    }
+
+    #[test]
+    fn multi_cluster_streams_check_the_system_target() {
+        let corpus = serve_corpus();
+        let req = |kernel: &'static str, matrix: usize| Request {
+            id: 0,
+            tenant: 0,
+            kernel,
+            matrix,
+            arrival: 0,
+            opseed: 1,
+        };
+        // the two-phase scale-out gave smxsm_csf/tricnt System rows, so
+        // the heavy tenants are admissible on multi-cluster streams
+        validate_stream(
+            &[req("tricnt", 4), req("smxsm_csf", 5)],
+            &corpus,
+            Variant::Sssr,
+            IdxWidth::U16,
+            8,
+            false,
+        )
+        .unwrap();
+        // single-CC-only kernels stay rejected there (but pass on 1)
+        let e = validate_stream(&[req("stencil1d", 0)], &corpus, Variant::Sssr, IdxWidth::U16, 4, false);
+        assert!(e.unwrap_err().contains("4-cluster"));
+        validate_stream(&[req("stencil1d", 0)], &corpus, Variant::Sssr, IdxWidth::U16, 1, false)
+            .unwrap();
+        // the full canonical mix is admissible at 8 clusters
+        let cfg = StreamCfg::same_matrix_heavy(9, 48, 500.0, 60);
+        let reqs = gen_stream(&cfg, &corpus);
+        validate_stream(&reqs, &corpus, Variant::Sssr, IdxWidth::U16, 8, true).unwrap();
     }
 
     #[test]

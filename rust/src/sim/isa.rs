@@ -217,6 +217,13 @@ pub mod ssr_mode {
     /// Egress: write data sequentially and the joint index stream
     /// alongside it (ESSR).
     pub const EGRESS: i64 = 6;
+    /// Structure-only union: index matching without value fetches, FPU
+    /// commands, or stream-control tokens. The symbolic SpGEMM pass
+    /// uses it to size outputs before any numeric work.
+    pub const UNION_IDX: i64 = 7;
+    /// Structure-only egress: coalesce and write the joint index
+    /// stream, no value writeback (ESSR, symbolic pass).
+    pub const EGRESS_IDX: i64 = 8;
 }
 
 /// One instruction of the mini-ISA. `Eq`/`Hash` are exact (every field

@@ -65,7 +65,11 @@ impl Comparator {
             }
         }
         let mode = self.mode.unwrap();
-        if self.strctl.len() >= STRCTL_DEPTH {
+        // Structure-only unions feed no hardware loop: there is no
+        // stream-control queue to backpressure on (the joint count is
+        // read back from the ESSR's `strctl_len` after the fence).
+        let uses_strctl = mode != MatchMode::UnionIdx;
+        if uses_strctl && self.strctl.len() >= STRCTL_DEPTH {
             return; // backpressure from the hardware loop
         }
 
@@ -73,7 +77,7 @@ impl Comparator {
             && essr
                 .active
                 .as_ref()
-                .map(|j| matches!(j.cfg.mode, super::Mode::Egress))
+                .map(|j| matches!(j.cfg.mode, super::Mode::Egress | super::Mode::EgressIdx))
                 .unwrap_or(false);
 
         let a_ex = u0.active.as_ref().map(|j| j.match_exhausted()).unwrap_or(true);
@@ -81,7 +85,9 @@ impl Comparator {
 
         // Join complete: signal end everywhere, deactivate.
         if a_ex && b_ex {
-            self.strctl.push_back(StrCtl::End);
+            if uses_strctl {
+                self.strctl.push_back(StrCtl::End);
+            }
             u0.signal_end();
             u1.signal_end();
             if essr_attached {
@@ -172,6 +178,45 @@ impl Comparator {
                     essr.push_joint_idx(joint);
                 }
                 self.strctl.push_back(StrCtl::Elem);
+                self.emitted += 1;
+                self.total_emitted += 1;
+            }
+            MatchMode::UnionIdx => {
+                // Structure-only merge: same advance logic as `Union`,
+                // but no data commands and no stream-control tokens —
+                // the only downstream consumer is the (index-only)
+                // egress unit counting and writing the joint stream.
+                let head_a = u0.idx_head();
+                let head_b = u1.idx_head();
+                let advance = match (a_ex, b_ex, head_a, head_b) {
+                    (true, _, _, Some(_)) => Some((false, true)),
+                    (_, true, Some(_), _) => Some((true, false)),
+                    (false, false, Some(ia), Some(ib)) => {
+                        if ia == ib {
+                            Some((true, true))
+                        } else if ia < ib {
+                            Some((true, false))
+                        } else {
+                            Some((false, true))
+                        }
+                    }
+                    _ => None, // waiting on index fetch
+                };
+                let Some((adv_a, adv_b)) = advance else { return };
+                if essr_attached && !essr.joint_idx_space() {
+                    return;
+                }
+                self.comparisons += 1;
+                let joint = if adv_a { head_a.unwrap() } else { head_b.unwrap() };
+                if adv_a {
+                    u0.pop_idx();
+                }
+                if adv_b {
+                    u1.pop_idx();
+                }
+                if essr_attached {
+                    essr.push_joint_idx(joint);
+                }
                 self.emitted += 1;
                 self.total_emitted += 1;
             }
@@ -352,6 +397,68 @@ mod tests {
         let mut cmp = Comparator::new();
         let (pairs, _) = run_join(&mut t, &mut u0, &mut u1, &mut essr, &mut cmp, false);
         assert_eq!(pairs, vec![(0.0, 10.0), (0.0, 20.0)]);
+    }
+
+    /// Run a structure-only (symbolic) union join to completion:
+    /// no FPU loop, no strctl consumption — just tick until all three
+    /// units retire. Returns the ESSR's reported joint length.
+    fn run_symbolic_join(
+        t: &mut Tcdm,
+        u0: &mut SsrUnit,
+        u1: &mut SsrUnit,
+        essr: &mut SsrUnit,
+        cmp: &mut Comparator,
+    ) -> u64 {
+        let mut cycle = 0u64;
+        loop {
+            cycle += 1;
+            assert!(cycle < 100_000, "symbolic join timeout");
+            t.new_cycle(cycle);
+            cmp.tick(u0, u1, essr);
+            u0.tick(t, true);
+            u1.tick(t, true);
+            essr.tick(t, true);
+            if u0.idle() && u1.idle() && essr.idle() && !cmp.active() {
+                break;
+            }
+        }
+        assert!(cmp.strctl_pop().is_none(), "symbolic join must not emit strctl tokens");
+        essr.last_strctl_len
+    }
+
+    #[test]
+    fn symbolic_union_counts_and_writes_joint_indices() {
+        let a = [(0u64, 1.0), (2, 2.0), (4, 4.0)];
+        let b = [(2u64, 20.0), (3, 30.0), (7, 70.0)];
+        let (mut t, mut u0, mut u1, mut essr) = setup(&a, &b, ssr_mode::UNION_IDX, false);
+        essr.cfg_write(SsrField::IdxBase, 0x5000);
+        essr.cfg_write(SsrField::IdxSize, 1);
+        essr.cfg_write(SsrField::Launch, ssr_mode::EGRESS_IDX);
+        let mut cmp = Comparator::new();
+        let n = run_symbolic_join(&mut t, &mut u0, &mut u1, &mut essr, &mut cmp);
+        assert_eq!(n, 5, "|{{0,2,4}} ∪ {{2,3,7}}| = 5");
+        for (i, want) in [0u64, 2, 3, 4, 7].iter().enumerate() {
+            assert_eq!(t.peek(0x5000 + 2 * i as u64, 2), *want, "joint idx {i}");
+        }
+        // Structure-only: neither ISSR touched its value array.
+        assert_eq!(u0.zero_injections + u1.zero_injections, 0);
+        assert!(u0.data_fifo.is_empty() && u1.data_fifo.is_empty());
+    }
+
+    #[test]
+    fn symbolic_union_empty_operands() {
+        let a: [(u64, f64); 0] = [];
+        let b = [(1u64, 10.0), (5, 50.0), (9, 90.0)];
+        let (mut t, mut u0, mut u1, mut essr) = setup(&a, &b, ssr_mode::UNION_IDX, false);
+        essr.cfg_write(SsrField::IdxBase, 0x5000);
+        essr.cfg_write(SsrField::IdxSize, 1);
+        essr.cfg_write(SsrField::Launch, ssr_mode::EGRESS_IDX);
+        let mut cmp = Comparator::new();
+        let n = run_symbolic_join(&mut t, &mut u0, &mut u1, &mut essr, &mut cmp);
+        assert_eq!(n, 3, "union with empty operand streams the other");
+        for (i, want) in [1u64, 5, 9].iter().enumerate() {
+            assert_eq!(t.peek(0x5000 + 2 * i as u64, 2), *want);
+        }
     }
 
     #[test]

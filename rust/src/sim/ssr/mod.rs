@@ -32,6 +32,13 @@ pub enum Mode {
     Intersect,
     Union,
     Egress,
+    /// Structure-only union: the value datapath is disabled — only the
+    /// index fetch/serialize path runs, and the comparator performs the
+    /// merge without issuing data commands or stream-control tokens.
+    UnionIdx,
+    /// Structure-only egress: coalesce and write joint indices, no
+    /// value writeback.
+    EgressIdx,
 }
 
 impl Mode {
@@ -44,18 +51,20 @@ impl Mode {
             ssr_mode::INTERSECT => Mode::Intersect,
             ssr_mode::UNION => Mode::Union,
             ssr_mode::EGRESS => Mode::Egress,
+            ssr_mode::UNION_IDX => Mode::UnionIdx,
+            ssr_mode::EGRESS_IDX => Mode::EgressIdx,
             _ => panic!("invalid SSR launch mode {v}"),
         }
     }
 
     pub fn is_match(self) -> bool {
-        matches!(self, Mode::Intersect | Mode::Union)
+        matches!(self, Mode::Intersect | Mode::Union | Mode::UnionIdx)
     }
 
     pub fn reads_memory(self) -> bool {
         matches!(
             self,
-            Mode::AffineRead | Mode::IndirectRead | Mode::Intersect | Mode::Union
+            Mode::AffineRead | Mode::IndirectRead | Mode::Intersect | Mode::Union | Mode::UnionIdx
         )
     }
 }
@@ -65,6 +74,9 @@ impl Mode {
 pub enum MatchMode {
     Intersect,
     Union,
+    /// Structure-only union (symbolic pass): merge and count, no data
+    /// commands, no stream-control tokens.
+    UnionIdx,
 }
 
 /// Command from the comparator to an ISSR's value datapath (§2.1.1):

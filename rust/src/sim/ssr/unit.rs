@@ -193,11 +193,16 @@ impl ActiveJob {
             Mode::AffineRead | Mode::AffineWrite => self.gen.done(),
             Mode::IndirectRead | Mode::IndirectWrite => self.elems_done >= self.cfg.idx_len,
             Mode::Intersect | Mode::Union => self.end_seen && self.cmd_fifo.is_empty(),
+            // Structure-only union has no value datapath to drain.
+            Mode::UnionIdx => self.end_seen,
             Mode::Egress => {
                 self.end_seen
                     && self.elems_done >= self.joint_received
                     && self.idx_written >= self.joint_received
                     && self.coalesce_n == 0
+            }
+            Mode::EgressIdx => {
+                self.end_seen && self.idx_written >= self.joint_received && self.coalesce_n == 0
             }
         }
     }
@@ -327,6 +332,7 @@ impl SsrUnit {
         match self.active.as_ref().filter(|j| !j.end_seen).map(|j| j.cfg.mode) {
             Some(Mode::Intersect) => Some(super::MatchMode::Intersect),
             Some(Mode::Union) => Some(super::MatchMode::Union),
+            Some(Mode::UnionIdx) => Some(super::MatchMode::UnionIdx),
             _ => None,
         }
     }
@@ -370,7 +376,7 @@ impl SsrUnit {
         if let Some(j) = self.active.as_mut() {
             j.end_seen = true;
             j.strctl_len = match j.cfg.mode {
-                Mode::Egress => j.joint_received,
+                Mode::Egress | Mode::EgressIdx => j.joint_received,
                 _ => j.strctl_len,
             };
         }
@@ -490,6 +496,13 @@ impl SsrUnit {
                     port_used = Self::fetch_idx_word(job, tcdm, &mut self.idx_word_fetches, &mut self.mem_reads);
                 }
             }
+            Mode::UnionIdx => {
+                // Structure-only: the value datapath is dark — the port
+                // only ever carries index-word fetches for the comparator.
+                if port_free {
+                    port_used = Self::fetch_idx_word(job, tcdm, &mut self.idx_word_fetches, &mut self.mem_reads);
+                }
+            }
             Mode::Egress => {
                 // Coalesce received joint indices into the word buffer.
                 let per_word = 8 >> job.cfg.idx_size;
@@ -516,6 +529,32 @@ impl SsrUnit {
                     }
                     port_used = true;
                 } else if port_free && idx_word_ready {
+                    let addr = job.cfg.idx_base + job.idx_words_written * 8;
+                    if let Access::Granted(_) = tcdm.try_write(addr, 8, job.coalesce_buf) {
+                        job.idx_words_written += 1;
+                        job.idx_written += job.coalesce_n;
+                        job.coalesce_buf = 0;
+                        job.coalesce_n = 0;
+                        self.mem_writes += 1;
+                    }
+                    port_used = true;
+                }
+            }
+            Mode::EgressIdx => {
+                // Structure-only egress: same coalescer as `Egress`, but
+                // the value write channel never arms.
+                let per_word = 8 >> job.cfg.idx_size;
+                while job.coalesce_n < per_word {
+                    let Some(idx) = job.idx_in.pop_front() else { break };
+                    let bits = 8 * (1u64 << job.cfg.idx_size);
+                    let shifted = if bits == 64 { idx } else { idx & ((1 << bits) - 1) };
+                    job.coalesce_buf |= shifted << (bits * job.coalesce_n);
+                    job.coalesce_n += 1;
+                }
+                let flush_partial = job.end_seen
+                    && job.coalesce_n > 0
+                    && job.idx_written + job.coalesce_n >= job.joint_received;
+                if port_free && (job.coalesce_n == per_word || flush_partial) {
                     let addr = job.cfg.idx_base + job.idx_words_written * 8;
                     if let Access::Granted(_) = tcdm.try_write(addr, 8, job.coalesce_buf) {
                         job.idx_words_written += 1;
@@ -839,6 +878,82 @@ mod tests {
             assert_eq!(t.peek(0x500 + 2 * i as u64, 2), *idx, "idx[{i}]");
         }
         assert_eq!(u.last_strctl_len, 5);
+    }
+
+    #[test]
+    fn egress_idx_writes_indices_without_values() {
+        let mut t = Tcdm::new(64 << 10, 32);
+        let mut u = SsrUnit::new(2);
+        launch(
+            &mut u,
+            &[
+                (SsrField::IdxBase, 0x500),
+                (SsrField::IdxSize, 1), // 16-bit
+            ],
+            ssr_mode::EGRESS_IDX,
+        );
+        let idxs = [2u64, 4, 7, 9, 11];
+        let mut cycle = 0u64;
+        let mut sent = 0usize;
+        while !u.idle() {
+            cycle += 1;
+            assert!(cycle < 1000, "egress-idx did not finish");
+            t.new_cycle(cycle);
+            if sent < 5 && u.joint_idx_space() {
+                u.push_joint_idx(idxs[sent]);
+                sent += 1;
+                if sent == 5 {
+                    u.signal_end();
+                }
+            }
+            u.tick(&mut t, true);
+        }
+        for (i, idx) in idxs.iter().enumerate() {
+            assert_eq!(t.peek(0x500 + 2 * i as u64, 2), *idx, "idx[{i}]");
+        }
+        assert_eq!(u.last_strctl_len, 5);
+        assert_eq!(u.mem_writes, 2); // 5 u16 indices = 2 coalesced words
+    }
+
+    #[test]
+    fn union_idx_only_fetches_index_words() {
+        // 8 u16 indices at 0x300; no value array configured at all.
+        let mut t = Tcdm::new(64 << 10, 32);
+        for i in 0..8u64 {
+            t.poke(0x300 + 2 * i, 2, 3 * i);
+        }
+        let mut u = SsrUnit::new(0);
+        launch(
+            &mut u,
+            &[
+                (SsrField::IdxBase, 0x300),
+                (SsrField::IdxLen, 8),
+                (SsrField::IdxSize, 1),
+            ],
+            ssr_mode::UNION_IDX,
+        );
+        assert_eq!(u.match_mode(), Some(crate::sim::ssr::MatchMode::UnionIdx));
+        // Stream the indices through the comparator-side interface.
+        let mut got = vec![];
+        let mut cycle = 0u64;
+        while got.len() < 8 {
+            cycle += 1;
+            assert!(cycle < 1000);
+            t.new_cycle(cycle);
+            u.tick(&mut t, true);
+            if u.idx_head().is_some() {
+                got.push(u.pop_idx());
+            }
+        }
+        assert_eq!(got, (0..8).map(|i| 3 * i).collect::<Vec<u64>>());
+        assert_eq!(u.mem_reads, 2); // 8 u16 indices = 2 word fetches
+        assert_eq!(u.zero_injections, 0);
+        assert!(u.data_fifo.is_empty(), "structure-only mode must not touch values");
+        // End-of-join retires the unit with no drain phase.
+        u.signal_end();
+        t.new_cycle(cycle + 1);
+        u.tick(&mut t, true);
+        assert!(u.idle());
     }
 
     #[test]

@@ -59,6 +59,30 @@ fn sharded_kernels_conform_on_cluster_and_system_targets() {
                 .unwrap_or_else(|e| panic!("{name} oracle recheck: {e}"));
         }
     }
+    // the two-phase CSF SpGEMM and the triangle count also scale out
+    // now; sweep both variants through the same generic entry point
+    // (bigger TCDM: the symbolic/numeric passes tile whole fibers)
+    let g = matgen::undirected_graph(80, 7, 5);
+    let t = sssr::formats::Csf::from_csr(&g);
+    let csf_ops = [Operand::Csf(&t), Operand::Csf(&t)];
+    let tri_ops = [Operand::Csr(&g)];
+    let big = ClusterCfg { tcdm_bytes: 1 << 20, ..ClusterCfg::paper_cluster() };
+    for (name, ops) in [("smxsm_csf", &csf_ops[..]), ("tricnt", &tri_ops[..])] {
+        let k = api::kernel(name).unwrap();
+        assert!(k.targets().contains(&TargetKind::Cluster));
+        assert!(k.targets().contains(&TargetKind::System));
+        for v in [Variant::Base, Variant::Sssr] {
+            for cfg in [
+                ExecCfg::cluster(big.clone()),
+                ExecCfg::system(SystemCfg { cluster: big.clone(), ..SystemCfg::paper_system(2, 2) }),
+            ] {
+                let run = execute(k, v, IdxWidth::U16, ops, &cfg)
+                    .unwrap_or_else(|e| panic!("{name} [{v:?}]: {e}"));
+                check_output(k.name(), &run.output, &k.oracle(ops))
+                    .unwrap_or_else(|e| panic!("{name} [{v:?}] oracle recheck: {e}"));
+            }
+        }
+    }
 }
 
 #[test]

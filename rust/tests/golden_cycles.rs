@@ -15,8 +15,9 @@
 
 use std::path::PathBuf;
 
-use sssr::kernels::api::{self, borrow_all, execute, ExecCfg};
+use sssr::kernels::api::{self, borrow_all, execute, ExecCfg, TargetKind};
 use sssr::kernels::{IdxWidth, Variant};
+use sssr::sim::{ClusterCfg, SystemCfg};
 
 fn snapshot_path() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden_cycles.snap")
@@ -24,28 +25,45 @@ fn snapshot_path() -> PathBuf {
 
 /// Fixed-seed representative run of every registry kernel: 16-bit
 /// indices (supported everywhere), BASE and SSSR variants (ditto), the
-/// kernel's own sample workload.
-fn measure() -> Vec<(&'static str, u64, u64)> {
-    api::REGISTRY
-        .iter()
-        .map(|k| {
-            let owned = k.sample(0x601D, IdxWidth::U16);
-            let ops = borrow_all(&owned);
-            let cfg = ExecCfg::single_sized(k.tcdm_default());
-            let mut cycles = [0u64; 2];
-            for (i, v) in [Variant::Base, Variant::Sssr].into_iter().enumerate() {
-                let run = execute(*k, v, IdxWidth::U16, &ops, &cfg)
-                    .unwrap_or_else(|e| panic!("{} [{v:?}]: {e}", k.name()));
-                cycles[i] = run.report.cycles;
-            }
-            (k.name(), cycles[0], cycles[1])
-        })
-        .collect()
+/// kernel's own sample workload. Kernels carrying the System target row
+/// are additionally pinned on a 2-cluster system (`name@sys2`), so the
+/// scale-out paths — sharding, DMA phasing, barrier protocol, CSF
+/// gather — are cycle-guarded like the single-CC bodies.
+fn measure() -> Vec<(String, u64, u64)> {
+    let single = |k: &&'static dyn api::Kernel| {
+        let owned = k.sample(0x601D, IdxWidth::U16);
+        let ops = borrow_all(&owned);
+        let cfg = ExecCfg::single_sized(k.tcdm_default());
+        let mut cycles = [0u64; 2];
+        for (i, v) in [Variant::Base, Variant::Sssr].into_iter().enumerate() {
+            let run = execute(*k, v, IdxWidth::U16, &ops, &cfg)
+                .unwrap_or_else(|e| panic!("{} [{v:?}]: {e}", k.name()));
+            cycles[i] = run.report.cycles;
+        }
+        (k.name().to_string(), cycles[0], cycles[1])
+    };
+    let mut rows: Vec<(String, u64, u64)> = api::REGISTRY.iter().map(single).collect();
+    for k in api::REGISTRY.iter().filter(|k| k.targets().contains(&TargetKind::System)) {
+        let owned = k.sample(0x601D, IdxWidth::U16);
+        let ops = borrow_all(&owned);
+        let cfg = ExecCfg::system(SystemCfg {
+            cluster: ClusterCfg { tcdm_bytes: 1 << 20, ..ClusterCfg::paper_cluster() },
+            ..SystemCfg::paper_system(2, 2)
+        });
+        let mut cycles = [0u64; 2];
+        for (i, v) in [Variant::Base, Variant::Sssr].into_iter().enumerate() {
+            let run = execute(*k, v, IdxWidth::U16, &ops, &cfg)
+                .unwrap_or_else(|e| panic!("{}@sys2 [{v:?}]: {e}", k.name()));
+            cycles[i] = run.report.cycles;
+        }
+        rows.push((format!("{}@sys2", k.name()), cycles[0], cycles[1]));
+    }
+    rows
 }
 
-fn render(rows: &[(&'static str, u64, u64)]) -> String {
+fn render(rows: &[(String, u64, u64)]) -> String {
     let mut s = String::from("# kernel base_cycles sssr_cycles (seed 0x601D, 16-bit)\n");
-    for &(name, base, sssr) in rows {
+    for (name, base, sssr) in rows {
         s.push_str(&format!("{name} {base} {sssr}\n"));
     }
     s
@@ -113,9 +131,18 @@ fn golden_workloads_cover_every_registry_kernel() {
     // the snapshot keys are exactly the registry names, in order — a
     // new kernel cannot land without entering the golden set
     let rows = measure();
-    let names: Vec<&str> = rows.iter().map(|(n, _, _)| *n).collect();
+    let names: Vec<&str> = rows.iter().map(|(n, _, _)| n.as_str()).collect();
     let registry: Vec<&str> = api::REGISTRY.iter().map(|k| k.name()).collect();
-    assert_eq!(names, registry);
+    assert_eq!(&names[..registry.len()], &registry[..]);
+    // ...followed by one @sys2 pin per System-capable kernel
+    let sys: Vec<String> = api::REGISTRY
+        .iter()
+        .filter(|k| k.targets().contains(&TargetKind::System))
+        .map(|k| format!("{}@sys2", k.name()))
+        .collect();
+    assert_eq!(&names[registry.len()..], &sys[..]);
+    assert!(sys.iter().any(|n| n == "smxsm_csf@sys2"));
+    assert!(sys.iter().any(|n| n == "tricnt@sys2"));
     // loose sanity only — the exact values are the snapshot's job; the
     // samples are small, so BASE-vs-SSSR ratios are not asserted here
     for (name, base, sssr) in rows {

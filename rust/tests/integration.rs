@@ -239,3 +239,61 @@ fn golden_models_match_simulator() {
     let n = sssr::runtime::golden::verify_all(&rt).expect("golden verification");
     assert!(n >= 7, "expected >= 7 golden checks, ran {n}");
 }
+
+/// Property: N-cluster System SpGEMM is bit-identical to the single-CC
+/// `smxsm_csf` run — the nnz-balanced fiber sharding plus deterministic
+/// CSF concatenation must not reorder or re-associate a single flop —
+/// and `tricnt`'s sharded scalar reduction reproduces the single-CC
+/// count to the last mantissa bit. Swept over seeded rmat-style and
+/// mycielskian adjacencies at several cluster counts.
+#[test]
+fn property_system_spgemm_and_tricnt_bit_identical_to_single_cc() {
+    use sssr::formats::Csf;
+    use sssr::kernels::api::{self, Detail, ExecCfg, Operand, Value};
+
+    let corpus = [
+        ("rmat6", matgen::undirected_graph(0xD1, 6, 6)),
+        ("myc6", matgen::mycielskian(6)),
+    ];
+    let big = ClusterCfg { tcdm_bytes: 1 << 20, ..ClusterCfg::paper_cluster() };
+    for (name, g) in &corpus {
+        let t = Csf::from_csr(g);
+        let csf_ops = [Operand::Csf(&t), Operand::Csf(&t)];
+        let tri_ops = [Operand::Csr(g)];
+        for variant in [Variant::Base, Variant::Sssr] {
+            let single = api::must_execute(
+                "smxsm_csf", variant, IdxWidth::U16, &csf_ops, &ExecCfg::single_cc(),
+            );
+            let Value::Csf(want) = single.output else { unreachable!() };
+            let tri_single = api::must_execute(
+                "tricnt", variant, IdxWidth::U16, &tri_ops, &ExecCfg::single_cc(),
+            );
+            let Value::Scalar(tri_want) = tri_single.output else { unreachable!() };
+            for clusters in [2usize, 4] {
+                let sys = SystemCfg {
+                    cluster: big.clone(),
+                    ..SystemCfg::paper_system(clusters, clusters)
+                };
+                let run = api::must_execute(
+                    "smxsm_csf", variant, IdxWidth::U16, &csf_ops, &ExecCfg::system(sys.clone()),
+                );
+                let Value::Csf(got) = run.output else { unreachable!() };
+                assert_eq!(
+                    got, want,
+                    "{name} {variant:?}: {clusters}-cluster SpGEMM diverged from single-CC"
+                );
+                let Detail::System { shards, .. } = run.detail else { unreachable!() };
+                assert_eq!(shards.len(), clusters);
+                let tri = api::must_execute(
+                    "tricnt", variant, IdxWidth::U16, &tri_ops, &ExecCfg::system(sys),
+                );
+                let Value::Scalar(tri_got) = tri.output else { unreachable!() };
+                assert_eq!(
+                    tri_got.to_bits(),
+                    tri_want.to_bits(),
+                    "{name} {variant:?}: {clusters}-cluster tricnt diverged from single-CC"
+                );
+            }
+        }
+    }
+}

@@ -323,3 +323,52 @@ fn csf_set_ops_duplicate_pattern_corners() {
         assert_eq!(ops::csf_mul(&a, &empty).nfibers(), 0, "case {case}");
     }
 }
+
+/// The two-phase SpGEMM contract: the structure-only symbolic pass
+/// predicts the numeric output exactly — per output fiber and in total
+/// — so the numeric pass can stream into exactly-sized allocations with
+/// zero over-allocation. Swept over the adversarial corner generator
+/// plus the graph shapes the system sweep actually squares (rmat-style
+/// power-law adjacencies and mycielskians).
+#[test]
+fn spgemm_symbolic_sizing_is_exact() {
+    fn assert_symbolic_exact(a: &Csf, b: &Csf, what: &str) {
+        let (sizes, total) = ops::smxsm_csf_symbolic(a, b);
+        let c = ops::smxsm_csf(a, b);
+        assert_eq!(sizes.len(), a.nfibers(), "{what}: one prediction per A fiber");
+        assert_eq!(total, sizes.iter().sum::<usize>(), "{what}: total is the fiber sum");
+        assert_eq!(total, c.nnz(), "{what}: total output size prediction");
+        // per fiber: nonzero predictions are exact lengths in A's fiber
+        // order; zero predictions produce no output fiber at all
+        let mut f_out = 0usize;
+        for (fa, (ra, _, _)) in a.fibers().enumerate() {
+            if sizes[fa] == 0 {
+                continue;
+            }
+            let (rc, ic, _) = c.fiber(f_out);
+            assert_eq!(rc, ra, "{what}: output fiber order follows A");
+            assert_eq!(ic.len(), sizes[fa], "{what}: fiber {fa} size");
+            f_out += 1;
+        }
+        assert_eq!(f_out, c.nfibers(), "{what}: no unpredicted output fibers");
+    }
+
+    // corner-case random rectangles (empty/singleton/full densities)
+    let mut g = Gen::new(0x57A7);
+    for case in 0..CASES {
+        let (n, k, m) = (g.dim(), g.dim(), g.dim());
+        let a = Csf::from_csr(&g.csr(n, k));
+        let b = Csf::from_csr(&g.csr(k, m));
+        assert_symbolic_exact(&a, &b, &format!("corner case {case}"));
+    }
+    // the sweep corpus shapes: adjacency squaring A*A
+    for (name, m) in [
+        ("rmat6", sssr::matgen::undirected_graph(0xB0, 6, 5)),
+        ("rmat7", sssr::matgen::undirected_graph(0xB1, 7, 4)),
+        ("myc6", sssr::matgen::mycielskian(6)),
+        ("myc7", sssr::matgen::mycielskian(7)),
+    ] {
+        let t = Csf::from_csr(&m);
+        assert_symbolic_exact(&t, &t, name);
+    }
+}
