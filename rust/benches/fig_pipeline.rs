@@ -1,0 +1,20 @@
+//! Regenerates the kernel-DAG pipeline sweep (`pipeline`: four
+//! iterative applications — PageRank, CG, GNN layer, stencil
+//! time-stepping — × clusters × BASE/SSSR, each run HBM-resident and
+//! host-round-tripping with bit-identity checked) and writes
+//! `BENCH_pipeline.json` next to the other bench trajectories. Quick
+//! problem sizes by default; REPRO_FULL=1 for the paper-size grid.
+use std::path::Path;
+
+use sssr::experiments::{write_json, Runner};
+use sssr::harness as h;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let spec = h::spec_by_name("pipeline").expect("pipeline spec registered");
+    let recs = Runner::new(0).run(&spec);
+    spec.print(&recs);
+    let path = write_json(Path::new("."), &spec, &recs).expect("writing BENCH json");
+    println!("[wrote {}]", path.display());
+    println!("\n[fig_pipeline bench wall time: {:.1}s]", t0.elapsed().as_secs_f64());
+}

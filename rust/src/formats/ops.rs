@@ -159,6 +159,23 @@ pub fn smxsm_inner(a: &Csr, b_csc: &super::Csc) -> Vec<f64> {
     out
 }
 
+/// Dense axpy: `alpha * x + y` (oracle for the pipeline dense ops).
+pub fn axpy(alpha: f64, x: &[f64], y: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&a, &b)| alpha * a + b).collect()
+}
+
+/// Dense dot product (oracle for the pipeline dense ops).
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&a, &b)| a * b).sum()
+}
+
+/// Dense scale: `alpha * x` (oracle for the pipeline dense ops).
+pub fn scale(alpha: f64, x: &[f64]) -> Vec<f64> {
+    x.iter().map(|&a| alpha * a).collect()
+}
+
 /// Scale a sparse vector by `alpha` (helper for the row-wise SpGEMM
 /// oracle; keeps the pattern, even when `alpha == 0`).
 pub fn svscale(alpha: f64, a: &SpVec) -> SpVec {

@@ -15,9 +15,11 @@ use crate::coordinator::run_cluster_smxdv;
 use crate::experiments::{grid2, ColFmt, Column, ExperimentSpec, Point, Record};
 use crate::formats::SpVec;
 use crate::kernels::api::{must_execute, Detail, ExecCfg, KernelRun, Operand};
+use crate::kernels::apps::Stencil1d;
 use crate::kernels::driver::{run_smxdv, run_svxsv};
 use crate::kernels::{IdxWidth, Report, Variant};
 use crate::matgen;
+use crate::pipeline::{self, PipeCfg};
 use crate::model::energy::EnergyModel;
 use crate::model::{streamer_area, streamer_min_period_ps, SlotKind, StreamerCfg};
 use crate::serve::{self, Policy, ServeCfg, StreamCfg};
@@ -1089,6 +1091,144 @@ pub fn spec_serve() -> ExperimentSpec {
 }
 
 // ======================================================================
+// pipeline — kernel-DAG applications with HBM-resident intermediates
+// ======================================================================
+
+/// One `pipeline` sweep point.
+struct PipeCombo {
+    app: &'static str,
+    clusters: usize,
+    variant: Variant,
+}
+
+/// apps x clusters x BASE/SSSR. With `clusters > 1` the System-capable
+/// steps (sMxdV, sMxsV) run row-sharded; the dense tail stays
+/// single-CC.
+fn pipeline_combos() -> Vec<PipeCombo> {
+    let mut out = vec![];
+    for app in ["pagerank", "cg", "gnn", "stencil"] {
+        for clusters in [1usize, 2] {
+            for variant in [Variant::Base, Variant::Sssr] {
+                out.push(PipeCombo { app, clusters, variant });
+            }
+        }
+    }
+    out
+}
+
+/// Build one shipped application over its deterministic sweep workload.
+fn pipeline_app(app: &str) -> pipeline::Pipeline {
+    match app {
+        "pagerank" => {
+            let g = if full_mode() { matgen::mycielskian(8) } else { matgen::mycielskian(6) };
+            let p = pipeline::column_stochastic(&g);
+            pipeline::pagerank(&p, 0.85, 0, 1e-6, 40)
+        }
+        "cg" => {
+            let n = if full_mode() { 1024 } else { 256 };
+            let a = pipeline::laplacian1d(n);
+            let rhs = matgen::random_dense(0xC6, n);
+            pipeline::cg(&a, &rhs, 1e-8, 60)
+        }
+        "gnn" => {
+            let g = if full_mode() { matgen::mycielskian(8) } else { matgen::mycielskian(6) };
+            let a = pipeline::column_stochastic(&g);
+            let feats = matgen::random_dense(0xF0, a.nrows * 8);
+            let bias = matgen::random_dense(0xB1, a.nrows * 8);
+            pipeline::gnn_layer(&a, &feats, 3, 0.5, 0.5, &bias)
+        }
+        "stencil" => {
+            let n = if full_mode() { 4096 } else { 1024 };
+            let grid = matgen::random_dense(0x57, n);
+            pipeline::stencil_steps(&Stencil1d::three_point(), &grid, 8)
+        }
+        other => panic!("unknown pipeline app {other}"),
+    }
+}
+
+fn pipeline_columns() -> Vec<Column> {
+    vec![
+        Column::new("app", "app", 9, ColFmt::Str),
+        Column::new("clusters", "clus", 5, ColFmt::Int),
+        Column::new("variant", "variant", 8, ColFmt::Str),
+        Column::new("iters", "iters", 6, ColFmt::Int),
+        Column::new("cycles", "cycles", 12, ColFmt::Int),
+        Column::new("bytes_resident", "res B", 10, ColFmt::Int),
+        Column::new("bytes_roundtrip", "rt B", 11, ColFmt::Int),
+        Column::new("byte_reduction", "red x", 7, ColFmt::Fixed(2)),
+        Column::new("footprint", "hbm B", 10, ColFmt::Int),
+    ]
+}
+
+/// `pipeline`: every kernel-DAG application, run twice per grid point —
+/// HBM-resident and per-step round-tripped. The two runs must be
+/// bit-identical (same kernels, same order, same data; only transfer
+/// accounting differs), so `byte_reduction` is exactly the measured
+/// host↔HBM saving of residency. `BENCH_pipeline.json` additionally
+/// carries the per-iteration cycle/byte breakdown and the residual
+/// trajectory as comma-joined fields.
+pub fn spec_pipeline() -> ExperimentSpec {
+    let combos = pipeline_combos();
+    let points = combos
+        .iter()
+        .enumerate()
+        .map(|(i, cb)| {
+            Point::at(i).label(format!("{} k{} {}", cb.app, cb.clusters, cb.variant.name()))
+        })
+        .collect();
+    ExperimentSpec {
+        name: "pipeline",
+        title: "pipeline: kernel-DAG apps, HBM-resident vs round-tripped intermediates".into(),
+        columns: pipeline_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let cb = &combos[p.idx.unwrap()];
+            let dag = pipeline_app(cb.app);
+            let pcfg =
+                PipeCfg::new(cb.variant, IdxWidth::U16).on_system(cb.clusters, cb.clusters);
+            let res = dag
+                .run(&pcfg)
+                .unwrap_or_else(|e| panic!("pipeline[{} k{}]: {e}", cb.app, cb.clusters));
+            let rt = dag
+                .run(&pcfg.clone().roundtrip())
+                .unwrap_or_else(|e| panic!("pipeline[{} k{}]: {e}", cb.app, cb.clusters));
+            assert_eq!(
+                res.outputs, rt.outputs,
+                "{}: resident and round-tripped runs must be bit-identical",
+                cb.app
+            );
+            assert_eq!(res.cycles, rt.cycles);
+            let join = |it: Vec<String>| it.join(",");
+            let iter_cycles =
+                join(res.per_iter.iter().map(|t| t.cycles.to_string()).collect());
+            let iter_bytes =
+                join(res.per_iter.iter().map(|t| t.host_bytes.to_string()).collect());
+            let residuals =
+                join(res.residuals.iter().map(|r| format!("{r:.3e}")).collect());
+            vec![Record::new("pipeline")
+                .str("app", cb.app)
+                .int("clusters", cb.clusters as i64)
+                .str("variant", cb.variant.name())
+                .int("iters", res.iters as i64)
+                .int("steps", res.steps as i64)
+                .int("cycles", res.cycles as i64)
+                .int("bytes_resident", res.host_bytes as i64)
+                .int("bytes_roundtrip", rt.host_bytes as i64)
+                .num(
+                    "byte_reduction",
+                    rt.host_bytes as f64 / res.host_bytes.max(1) as f64,
+                )
+                .int("hbm_bytes", res.hbm_bytes as i64)
+                .int("footprint", res.plan.footprint as i64)
+                .int("naive_bytes", res.plan.naive_bytes as i64)
+                .str("iter_cycles", iter_cycles)
+                .str("iter_host_bytes", iter_bytes)
+                .str("residuals", residuals)]
+        }),
+    }
+}
+
+// ======================================================================
 // Fig. 7 — area and timing (analytical model)
 // ======================================================================
 
@@ -1427,11 +1567,11 @@ pub fn spec_simperf() -> ExperimentSpec {
 
 /// Every figure sweep as a (name, constructor) pair, in `repro all`
 /// order (the paper figures plus the system-layer `scale` family, the
-/// CSF/graph `graph` sweep, the two-phase `spgemm` scaling sweep, and
-/// the serving-engine `serve` sweep).
+/// CSF/graph `graph` sweep, the two-phase `spgemm` scaling sweep, the
+/// serving-engine `serve` sweep, and the kernel-DAG `pipeline` sweep).
 /// Construction generates the sweep's shared workloads (corpus,
 /// operands) eagerly, so build one spec at a time and drop it before
-/// the next — materializing all twenty at
+/// the next — materializing all twenty-one at
 /// once holds every workload in memory simultaneously. Tables 2/3 are available via
 /// [`spec_table2`]/[`spec_table3`] (Table 2's bottom row derives from
 /// Fig. 5a records, see [`table2_ours`]).
@@ -1455,6 +1595,7 @@ pub const SPEC_BUILDERS: &[(&str, fn() -> ExperimentSpec)] = &[
     ("graph", spec_graph),
     ("spgemm", spec_spgemm),
     ("serve", spec_serve),
+    ("pipeline", spec_pipeline),
     ("simperf", spec_simperf),
 ];
 
@@ -1527,7 +1668,7 @@ mod tests {
 
     #[test]
     fn spec_registry_is_consistent() {
-        assert_eq!(SPEC_BUILDERS.len(), 20);
+        assert_eq!(SPEC_BUILDERS.len(), 21);
         for (n, build) in SPEC_BUILDERS {
             let s = build();
             assert_eq!(s.name, *n);

@@ -1039,9 +1039,10 @@ pub fn execute(
 
 /// Every implemented kernel, in the paper's presentation order
 /// (sparse-dense §3.2.1, sparse-sparse §3.2.2, further applications
-/// §3.3 — including the CSF tensor and graph kernels). `repro kernel
-/// --list` renders this table.
-pub static REGISTRY: [&dyn Kernel; 14] = [
+/// §3.3 — including the CSF tensor and graph kernels), followed by the
+/// dense BLAS-1 helpers the pipeline subsystem composes with
+/// ([`super::dense`]). `repro kernel --list` renders this table.
+pub static REGISTRY: [&dyn Kernel; 17] = [
     &super::driver::Svxdv,
     &super::driver::Svpdv,
     &super::driver::Svodv,
@@ -1056,6 +1057,9 @@ pub static REGISTRY: [&dyn Kernel; 14] = [
     &super::apps::Stencil1dKernel,
     &super::apps::CodebookDecode,
     &super::apps::Tricnt,
+    &super::dense::Axpy,
+    &super::dense::Dot,
+    &super::dense::Scale,
 ];
 
 /// Resolve one registered kernel by name.
@@ -1093,7 +1097,7 @@ mod tests {
         let names: Vec<&str> = REGISTRY.iter().map(|k| k.name()).collect();
         let expect = [
             "svxdv", "svpdv", "svodv", "smxdv", "smxdm", "svxsv", "svpsv", "svosv", "smxsv",
-            "smxsm", "smxsm_csf", "stencil1d", "codebook", "tricnt",
+            "smxsm", "smxsm_csf", "stencil1d", "codebook", "tricnt", "axpy", "dot", "scale",
         ];
         assert_eq!(names, expect);
         for n in names {

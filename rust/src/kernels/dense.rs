@@ -1,0 +1,397 @@
+//! Dense BLAS-1 helper kernels: `axpy`, `dot`, `scale`.
+//!
+//! These are not sparse kernels — they exist so multi-kernel pipelines
+//! ([`crate::pipeline`]) can express the dense tail of iterative sparse
+//! applications (CG's vector updates, PageRank's teleport blend, the GNN
+//! layer's dense update) without leaving the registry / the simulated
+//! machine. All three are pure affine streams, so the SSR and SSSR
+//! variants share one program: there are no indices for the sparse
+//! extension to elide, and the paper's BASE/SSR gap (explicit
+//! load/store slots vs streamed operands + FREP) is the whole story.
+//!
+//! The scalar coefficient is passed as a one-element `Dense` operand
+//! (not [`Operand::Scalar`], which is an integer parameter type): the
+//! program `fld`s it into `fa0` once, outside the streamed loop.
+//!
+//! Register convention:
+//!
+//! | reg | axpy            | dot       | scale          |
+//! |-----|-----------------|-----------|----------------|
+//! | A0  | alpha (1 f64)   | x         | alpha (1 f64)  |
+//! | A1  | x               | y         | x              |
+//! | A2  | y               | n         | n              |
+//! | A3  | n               | result    | out            |
+//! | A4  | out             | —         | —              |
+
+use crate::formats::ops;
+use crate::matgen;
+use crate::sim::asm::Asm;
+use crate::sim::isa::*;
+use crate::sim::Program;
+
+use super::api::{
+    dense_at, expect_kinds, Cc, ExecCfg, Kernel, KernelError, Operand, OutSpec, OwnedOperand,
+    Value,
+};
+use super::sparse_dense::{cfg_affine_linear, N_ACC};
+use super::{IdxWidth, Variant};
+
+const ALL3: [Variant; 3] = [Variant::Base, Variant::Ssr, Variant::Sssr];
+
+/// Validate a dense vector pair of equal, nonzero length at operand
+/// positions `xi`/`yi`, plus (optionally) a one-element coefficient at
+/// position 0.
+fn validate_dense(
+    kernel: &'static str,
+    ops: &[Operand],
+    coeff: bool,
+    xi: usize,
+    yi: Option<usize>,
+) -> Result<(), KernelError> {
+    let bad = |msg: String| KernelError::BadOperands { kernel, msg };
+    if coeff {
+        let a = dense_at(ops, 0);
+        if a.len() != 1 {
+            return Err(bad(format!("coefficient must be one f64, got length {}", a.len())));
+        }
+    }
+    let x = dense_at(ops, xi);
+    if x.is_empty() {
+        return Err(bad("empty vectors unsupported (streams need length >= 1)".into()));
+    }
+    if let Some(yi) = yi {
+        let y = dense_at(ops, yi);
+        if y.len() != x.len() {
+            return Err(bad(format!("vector lengths differ: {} vs {}", x.len(), y.len())));
+        }
+    }
+    Ok(())
+}
+
+// =====================================================================
+// axpy — out = alpha * x + y
+// =====================================================================
+
+/// Dense `out[i] = alpha * x[i] + y[i]`.
+pub struct Axpy;
+
+/// BASE axpy: explicit two-load / one-store loop, eight issue slots.
+pub fn axpy_base() -> Program {
+    let mut a = Asm::new();
+    a.fld(FA0, A0, 0);
+    a.mv(T0, A1);
+    a.mv(T1, A2);
+    a.mv(T2, A4);
+    a.slli(T3, A3, 3);
+    a.add(T3, A1, T3);
+    a.label("loop");
+    a.fld(FT0, T0, 0); //                        1
+    a.fld(FT1, T1, 0); //                        2
+    a.fmadd_d(FT2, FT0, FA0, FT1); //            3
+    a.fsd(FT2, T2, 0); //                        4
+    a.addi(T0, T0, 8); //                        5
+    a.addi(T1, T1, 8); //                        6
+    a.addi(T2, T2, 8); //                        7
+    a.bne(T0, T3, "loop"); //                    8
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}
+
+/// SSR/SSSR axpy: x and y stream in through ft0/ft1, the result streams
+/// out through ft2 (affine write); body is one FREP'd `fmadd.d`.
+pub fn axpy_ssr() -> Program {
+    let mut a = Asm::new();
+    a.fld(FA0, A0, 0);
+    a.ssr_enable();
+    cfg_affine_linear(&mut a, 0, A1, A3, false); // x -> ft0
+    cfg_affine_linear(&mut a, 1, A2, A3, false); // y -> ft1
+    cfg_affine_linear(&mut a, 2, A4, A3, true); // out <- ft2
+    a.frep(A3, 1, 0, 0);
+    a.fmadd_d(FT2, FT0, FA0, FT1);
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+impl Kernel for Axpy {
+    fn name(&self) -> &'static str {
+        "axpy"
+    }
+    fn describe(&self) -> &'static str {
+        "dense out = alpha*x + y (pipeline update step)"
+    }
+    fn signature(&self) -> &'static str {
+        "Dense(alpha), Dense(x), Dense(y)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &ALL3
+    }
+    fn validate(&self, ops: &[Operand], _iw: IdxWidth) -> Result<(), KernelError> {
+        expect_kinds(self.name(), self.signature(), ops, &["Dense", "Dense", "Dense"])?;
+        validate_dense(self.name(), ops, true, 1, Some(2))
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        dense_at(ops, 1).len() as u64
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        let (alpha, x, y) = (dense_at(ops, 0)[0], dense_at(ops, 1), dense_at(ops, 2));
+        Value::Dense(ops::axpy(alpha, x, y))
+    }
+    fn program(&self, variant: Variant, _iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => axpy_base(),
+            Variant::Ssr | Variant::Sssr => axpy_ssr(),
+        }
+    }
+    fn place(&self, cc: &mut Cc, _iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (alpha, x, y) = (dense_at(ops, 0), dense_at(ops, 1), dense_at(ops, 2));
+        let aa = cc.place_dense(alpha);
+        let xa = cc.place_dense(x);
+        let ya = cc.place_dense(y);
+        let out = cc.arena.alloc_f64(x.len() as u64);
+        cc.args(&[
+            (A0, aa as i64),
+            (A1, xa as i64),
+            (A2, ya as i64),
+            (A3, x.len() as i64),
+            (A4, out as i64),
+        ]);
+        OutSpec::Dense { addr: out, len: x.len() }
+    }
+    fn sample(&self, seed: u64, _iw: IdxWidth) -> Vec<OwnedOperand> {
+        vec![
+            OwnedOperand::Dense(matgen::random_dense(seed, 1)),
+            OwnedOperand::Dense(matgen::random_dense(seed.wrapping_add(1), 64)),
+            OwnedOperand::Dense(matgen::random_dense(seed.wrapping_add(2), 64)),
+        ]
+    }
+}
+
+// =====================================================================
+// dot — scalar x . y
+// =====================================================================
+
+/// Dense dot product `sum_i x[i] * y[i]`.
+pub struct Dot;
+
+/// BASE dot: explicit two-load loop with a single accumulator.
+pub fn dot_base() -> Program {
+    let mut a = Asm::new();
+    a.fcvt_d_w_zero(FT3);
+    a.mv(T0, A0);
+    a.mv(T1, A1);
+    a.slli(T2, A2, 3);
+    a.add(T2, A0, T2);
+    a.label("loop");
+    a.fld(FT0, T0, 0); //                        1
+    a.fld(FT1, T1, 0); //                        2
+    a.fmadd_d(FT3, FT0, FT1, FT3); //            3
+    a.addi(T0, T0, 8); //                        4
+    a.addi(T1, T1, 8); //                        5
+    a.bne(T0, T2, "loop"); //                    6
+    a.fsd(FT3, A3, 0);
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}
+
+/// SSR/SSSR dot: both vectors stream in, one FREP'd `fmadd.d` with
+/// 4-fold accumulator staggering, then the tree reduction.
+pub fn dot_ssr() -> Program {
+    let mut a = Asm::new();
+    a.ssr_enable();
+    cfg_affine_linear(&mut a, 0, A0, A2, false); // x -> ft0
+    cfg_affine_linear(&mut a, 1, A1, A2, false); // y -> ft1
+    for i in 0..N_ACC {
+        a.fcvt_d_w_zero(FT3 + i);
+    }
+    a.frep(A2, 1, N_ACC - 1, stagger::RD | stagger::RS3);
+    a.fmadd_d(FT3, FT0, FT1, FT3);
+    a.fadd_d(FT3, FT3, FT4);
+    a.fadd_d(FT5, FT5, FT6);
+    a.fadd_d(FA0, FT3, FT5);
+    a.fsd(FA0, A3, 0);
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+impl Kernel for Dot {
+    fn name(&self) -> &'static str {
+        "dot"
+    }
+    fn describe(&self) -> &'static str {
+        "dense dot product (pipeline residual/step-size)"
+    }
+    fn signature(&self) -> &'static str {
+        "Dense(x), Dense(y)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &ALL3
+    }
+    fn validate(&self, ops: &[Operand], _iw: IdxWidth) -> Result<(), KernelError> {
+        expect_kinds(self.name(), self.signature(), ops, &["Dense", "Dense"])?;
+        validate_dense(self.name(), ops, false, 0, Some(1))
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        dense_at(ops, 0).len() as u64
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        Value::Scalar(ops::dot(dense_at(ops, 0), dense_at(ops, 1)))
+    }
+    fn program(&self, variant: Variant, _iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => dot_base(),
+            Variant::Ssr | Variant::Sssr => dot_ssr(),
+        }
+    }
+    fn place(&self, cc: &mut Cc, _iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (x, y) = (dense_at(ops, 0), dense_at(ops, 1));
+        let xa = cc.place_dense(x);
+        let ya = cc.place_dense(y);
+        let out = cc.arena.alloc_f64(1);
+        cc.args(&[(A0, xa as i64), (A1, ya as i64), (A2, x.len() as i64), (A3, out as i64)]);
+        OutSpec::Scalar { addr: out }
+    }
+    fn sample(&self, seed: u64, _iw: IdxWidth) -> Vec<OwnedOperand> {
+        vec![
+            OwnedOperand::Dense(matgen::random_dense(seed, 64)),
+            OwnedOperand::Dense(matgen::random_dense(seed.wrapping_add(1), 64)),
+        ]
+    }
+}
+
+// =====================================================================
+// scale — out = alpha * x
+// =====================================================================
+
+/// Dense `out[i] = alpha * x[i]`.
+pub struct Scale;
+
+/// BASE scale: explicit load / multiply / store loop.
+pub fn scale_base() -> Program {
+    let mut a = Asm::new();
+    a.fld(FA0, A0, 0);
+    a.mv(T0, A1);
+    a.mv(T1, A3);
+    a.slli(T2, A2, 3);
+    a.add(T2, A1, T2);
+    a.label("loop");
+    a.fld(FT0, T0, 0); //                        1
+    a.fmul_d(FT1, FT0, FA0); //                  2
+    a.fsd(FT1, T1, 0); //                        3
+    a.addi(T0, T0, 8); //                        4
+    a.addi(T1, T1, 8); //                        5
+    a.bne(T0, T2, "loop"); //                    6
+    a.fpu_fence();
+    a.halt();
+    a.finish()
+}
+
+/// SSR/SSSR scale: x streams in through ft0, the result streams out
+/// through ft1; body is one FREP'd `fmul.d`.
+pub fn scale_ssr() -> Program {
+    let mut a = Asm::new();
+    a.fld(FA0, A0, 0);
+    a.ssr_enable();
+    cfg_affine_linear(&mut a, 0, A1, A2, false); // x -> ft0
+    cfg_affine_linear(&mut a, 1, A3, A2, true); // out <- ft1
+    a.frep(A2, 1, 0, 0);
+    a.fmul_d(FT1, FT0, FA0);
+    a.fpu_fence();
+    a.ssr_disable();
+    a.halt();
+    a.finish()
+}
+
+impl Kernel for Scale {
+    fn name(&self) -> &'static str {
+        "scale"
+    }
+    fn describe(&self) -> &'static str {
+        "dense out = alpha*x (pipeline damping/normalization)"
+    }
+    fn signature(&self) -> &'static str {
+        "Dense(alpha), Dense(x)"
+    }
+    fn variants(&self) -> &'static [Variant] {
+        &ALL3
+    }
+    fn validate(&self, ops: &[Operand], _iw: IdxWidth) -> Result<(), KernelError> {
+        expect_kinds(self.name(), self.signature(), ops, &["Dense", "Dense"])?;
+        validate_dense(self.name(), ops, true, 1, None)
+    }
+    fn payload(&self, ops: &[Operand]) -> u64 {
+        dense_at(ops, 1).len() as u64
+    }
+    fn oracle(&self, ops: &[Operand]) -> Value {
+        let (alpha, x) = (dense_at(ops, 0)[0], dense_at(ops, 1));
+        Value::Dense(ops::scale(alpha, x))
+    }
+    fn program(&self, variant: Variant, _iw: IdxWidth, _ops: &[Operand], _cfg: &ExecCfg) -> Program {
+        match variant {
+            Variant::Base => scale_base(),
+            Variant::Ssr | Variant::Sssr => scale_ssr(),
+        }
+    }
+    fn place(&self, cc: &mut Cc, _iw: IdxWidth, ops: &[Operand]) -> OutSpec {
+        let (alpha, x) = (dense_at(ops, 0), dense_at(ops, 1));
+        let aa = cc.place_dense(alpha);
+        let xa = cc.place_dense(x);
+        let out = cc.arena.alloc_f64(x.len() as u64);
+        cc.args(&[(A0, aa as i64), (A1, xa as i64), (A2, x.len() as i64), (A3, out as i64)]);
+        OutSpec::Dense { addr: out, len: x.len() }
+    }
+    fn sample(&self, seed: u64, _iw: IdxWidth) -> Vec<OwnedOperand> {
+        vec![
+            OwnedOperand::Dense(matgen::random_dense(seed, 1)),
+            OwnedOperand::Dense(matgen::random_dense(seed.wrapping_add(1), 64)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::api::{borrow_all, must_execute, ExecCfg, Operand};
+    use super::*;
+
+    #[test]
+    fn axpy_matches_host_on_all_variants() {
+        let alpha = [0.75];
+        let x = matgen::random_dense(11, 200);
+        let y = matgen::random_dense(12, 200);
+        let ops = [Operand::Dense(&alpha), Operand::Dense(&x), Operand::Dense(&y)];
+        let want: Vec<f64> = x.iter().zip(&y).map(|(a, b)| 0.75 * a + b).collect();
+        for v in ALL3 {
+            let run = must_execute("axpy", v, IdxWidth::U16, &ops, &ExecCfg::single_cc());
+            assert_eq!(run.output.as_dense().unwrap(), &want[..], "{v:?}");
+        }
+    }
+
+    #[test]
+    fn streamed_variants_beat_base() {
+        let k = super::super::api::kernel("dot").unwrap();
+        let owned = k.sample(3, IdxWidth::U16);
+        let ops = borrow_all(&owned);
+        let base = must_execute("dot", Variant::Base, IdxWidth::U16, &ops, &ExecCfg::single_cc());
+        let ssr = must_execute("dot", Variant::Ssr, IdxWidth::U16, &ops, &ExecCfg::single_cc());
+        assert!(
+            ssr.report.cycles < base.report.cycles,
+            "streamed dot ({}) should beat base ({})",
+            ssr.report.cycles,
+            base.report.cycles
+        );
+    }
+
+    #[test]
+    fn coefficient_must_be_one_element() {
+        let bad = [0.5, 0.5];
+        let x = [1.0, 2.0];
+        let ops = [Operand::Dense(&bad), Operand::Dense(&x)];
+        let k = super::super::api::kernel("scale").unwrap();
+        assert!(k.validate(&ops, IdxWidth::U16).is_err());
+    }
+}

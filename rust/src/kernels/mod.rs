@@ -22,6 +22,7 @@
 pub mod api;
 pub mod apps;
 pub mod csf;
+pub mod dense;
 pub mod driver;
 pub mod multi;
 pub mod sparse_dense;

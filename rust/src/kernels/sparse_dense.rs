@@ -44,7 +44,7 @@ pub(crate) fn cfg_match(
 }
 
 /// Configure a linear affine stream over `len_reg` doubles at `base_reg`.
-fn cfg_affine_linear(a: &mut Asm, ssr: u8, base_reg: Reg, len_reg: Reg, write: bool) {
+pub(crate) fn cfg_affine_linear(a: &mut Asm, ssr: u8, base_reg: Reg, len_reg: Reg, write: bool) {
     a.scfgw(ssr, F::DataBase, base_reg);
     a.scfgw(ssr, F::Bound0, len_reg);
     cfg_imm(a, ssr, F::Stride0, 8);

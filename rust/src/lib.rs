@@ -40,6 +40,14 @@
 //!   tables and machine-readable `BENCH_<fig>.json` lines.
 //! - [`harness`] — every table and figure of the paper's evaluation,
 //!   expressed as `ExperimentSpec` definitions over [`experiments`].
+//! - [`pipeline`] — kernel-DAG pipelines: iterative applications
+//!   (PageRank push-pull, CG, a GNN layer, stencil time-stepping)
+//!   expressed as typed DAGs of registry-kernel steps whose
+//!   intermediates stay HBM-resident between steps, with a
+//!   liveness-driven buffer planner ([`pipeline::plan`]) reusing dead
+//!   regions, convergence-driven loop nodes, and per-iteration
+//!   cycle/byte traces — the `repro pipeline` CLI, the `pipeline`
+//!   sweep, and `BENCH_pipeline.json` sit on top.
 //! - [`serve`] — the sparse serving engine: simulated-time multi-tenant
 //!   request streams over the kernel registry, with a per-cluster
 //!   HBM-resident operand cache (LRU inside each cluster's shard),
@@ -83,5 +91,6 @@ pub mod experiments;
 pub mod runtime;
 pub mod model;
 pub mod harness;
+pub mod pipeline;
 pub mod serve;
 pub mod util;

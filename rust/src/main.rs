@@ -32,12 +32,17 @@ COMMANDS:
                                                  `spgemm` the two-phase
                                                  system-SpGEMM scaling sweep,
                                                  `serve` the serving-engine
-                                                 sweep, `simperf` the
-                                                 simulator wall-clock
-                                                 throughput probe
+                                                 sweep, `pipeline` the
+                                                 kernel-DAG pipeline sweep
+                                                 (BENCH_pipeline.json),
+                                                 `simperf` the simulator
+                                                 wall-clock throughput probe
     serve [serve options]                        run one serving-engine
                                                  configuration and print the
                                                  latency/throughput summary
+    pipeline [pipeline options]                  run one kernel-DAG pipeline
+                                                 (HBM-resident vs round-trip)
+                                                 and print the iteration trace
     kernel --list                                list the kernel registry
                                                  (operands, per-target
                                                  variants, index widths)
@@ -68,6 +73,16 @@ SERVE OPTIONS:
     --seed S        stream seed, decimal (default 385310)
     --hot PCT       hot-tenant share percent (default 70)
     --mtx FILE      serve a Matrix Market matrix as the hot matrix
+
+PIPELINE OPTIONS:
+    --app A         pagerank | cg | gnn | stencil (default pagerank)
+    --variant V     base | ssr | sssr requested per step (default sssr;
+                    steps without the variant fall back per-kernel)
+    --clusters N    run System-capable steps row-sharded on N clusters
+                    (default 1 = single compute cluster)
+    --channels N    shared HBM channels for System steps (default =
+                    clusters)
+    --iw 8|16|32    index width (default 16)
 
 ENV:
     REPRO_FULL=1    full paper-size sweeps (default: quick)
@@ -192,6 +207,7 @@ fn main() {
             println!("sweep done in {:.1}s", t0.elapsed().as_secs_f64());
         }
         Some("serve") => serve_cmd(&opts.rest),
+        Some("pipeline") => pipeline_cmd(&opts.rest),
         Some("kernel") => kernel_cmd(&opts.rest),
         Some("verify") => {
             let path = opts
@@ -454,6 +470,138 @@ fn serve_cmd(rest: &[String]) {
             r.compute_cycles,
             r.batch_size
         );
+    }
+}
+
+/// The `repro pipeline` subcommand: build one of the four iterative
+/// applications as a kernel DAG ([`sssr::pipeline::apps`]), run it both
+/// HBM-resident and host-round-tripping, check the outputs are
+/// bit-identical, and print the cycle/byte/residual breakdown.
+fn pipeline_cmd(rest: &[String]) {
+    use sssr::kernels::apps::Stencil1d;
+    use sssr::matgen;
+    use sssr::pipeline::{self, PipeCfg};
+    let mut app = "pagerank".to_string();
+    let mut variant = Variant::Sssr;
+    let mut iw = IdxWidth::U16;
+    let mut clusters = 1usize;
+    let mut channels = 0usize; // 0 = follow --clusters
+    let mut it = rest.iter();
+    let next_val = |it: &mut std::slice::Iter<String>, flag: &str| -> String {
+        it.next()
+            .unwrap_or_else(|| die(&format!("{flag} needs a value")))
+            .clone()
+    };
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--app" => app = next_val(&mut it, "--app"),
+            "--variant" => {
+                let v = next_val(&mut it, "--variant");
+                variant = Variant::parse(&v)
+                    .unwrap_or_else(|| die(&format!("unknown variant {v:?} (base|ssr|sssr)")));
+            }
+            "--clusters" => clusters = parse_num(&next_val(&mut it, "--clusters")),
+            "--channels" => channels = parse_num(&next_val(&mut it, "--channels")),
+            "--iw" => {
+                let v = next_val(&mut it, "--iw");
+                iw = IdxWidth::parse(&v)
+                    .unwrap_or_else(|| die(&format!("bad --iw value {v:?} (8|16|32)")));
+            }
+            other => die(&format!("unknown pipeline option {other:?}")),
+        }
+    }
+    if clusters == 0 {
+        die("--clusters must be at least 1");
+    }
+    if channels == 0 {
+        channels = clusters;
+    }
+    let p = match app.as_str() {
+        "pagerank" => {
+            let pm = pipeline::column_stochastic(&matgen::mycielskian(6));
+            pipeline::pagerank(&pm, 0.85, 0, 1e-6, 40)
+        }
+        "cg" => {
+            let a = pipeline::laplacian1d(256);
+            let rhs = matgen::random_dense(0xC6, 256);
+            pipeline::cg(&a, &rhs, 1e-8, 60)
+        }
+        "gnn" => {
+            let a = pipeline::column_stochastic(&matgen::mycielskian(6));
+            let n = a.nrows;
+            let feats = matgen::random_dense(0xF0, n * 8);
+            let bias = matgen::random_dense(0xB1, n * 8);
+            pipeline::gnn_layer(&a, &feats, 3, 0.5, 0.5, &bias)
+        }
+        "stencil" => {
+            pipeline::stencil_steps(&Stencil1d::three_point(), &matgen::random_dense(0x57, 1024), 8)
+        }
+        other => die(&format!("unknown app {other:?} (pagerank|cg|gnn|stencil)")),
+    };
+    let cfg = PipeCfg::new(variant, iw).on_system(clusters, channels);
+    let res = p
+        .run(&cfg)
+        .unwrap_or_else(|e| die(&format!("pipeline (resident): {e}")));
+    let rt = p
+        .run(&cfg.clone().roundtrip())
+        .unwrap_or_else(|e| die(&format!("pipeline (roundtrip): {e}")));
+    let identical = res.outputs == rt.outputs;
+    println!(
+        "pipeline {}[{}] {}-bit, {} cluster(s) / {} channel(s)",
+        p.name,
+        variant.name(),
+        iw.name(),
+        clusters,
+        channels
+    );
+    println!("  kernel steps          : {} across {} iteration(s)", res.steps, res.iters);
+    println!("  compute               : {} cycles", res.cycles);
+    println!(
+        "  host<->HBM resident   : {} B  (+ {} B HBM-internal carries)",
+        res.host_bytes, res.hbm_bytes
+    );
+    let saved = 100.0 * (1.0 - res.host_bytes as f64 / rt.host_bytes.max(1) as f64);
+    println!(
+        "  host<->HBM roundtrip  : {} B  (residency saves {saved:.1} %)",
+        rt.host_bytes
+    );
+    println!(
+        "  buffer plan           : {} B footprint ({} B naive, x{:.2} reuse)",
+        res.plan.footprint,
+        res.plan.naive_bytes,
+        res.plan.naive_bytes as f64 / res.plan.footprint.max(1) as f64
+    );
+    println!(
+        "  outputs vs roundtrip  : {}",
+        if identical { "bit-identical" } else { "MISMATCH" }
+    );
+    if !res.residuals.is_empty() {
+        let tail: Vec<String> =
+            res.residuals.iter().rev().take(4).rev().map(|r| format!("{r:.3e}")).collect();
+        println!(
+            "  residual trajectory   : {} check(s), last {}",
+            res.residuals.len(),
+            tail.join(" -> ")
+        );
+    }
+    for t in res.per_iter.iter().take(8) {
+        println!(
+            "    iter {:>3}: {:>9} cycles, {:>4} steps, {:>8} host B{}",
+            t.iter,
+            t.cycles,
+            t.steps,
+            t.host_bytes,
+            match t.residual {
+                Some(r) => format!(", residual {r:.3e}"),
+                None => String::new(),
+            }
+        );
+    }
+    if res.per_iter.len() > 8 {
+        println!("    ... {} more iteration(s)", res.per_iter.len() - 8);
+    }
+    if !identical {
+        die("resident and round-trip outputs diverged — pipeline executor bug");
     }
 }
 

@@ -1,0 +1,379 @@
+//! The shipped pipeline applications and the DAG builder.
+//!
+//! Four end-to-end iterative sparse applications, each composed purely
+//! of registry kernels plus host scalar glue:
+//!
+//! - [`pagerank`] — personalized PageRank push-pull: per iteration the
+//!   dense rank vector is compacted to its frontier fiber on-device,
+//!   spread with sMxsV, blended with the teleport vector (`axpy`), and
+//!   convergence-checked via `dot` of the update difference;
+//! - [`cg`] — conjugate gradient on an SPD matrix: sMxdV + two `dot`s
+//!   + three `axpy`s + two host scalar divisions per iteration;
+//! - [`gnn_layer`] — one graph-network layer: sMxdM feature
+//!   aggregation, then a dense update `Z = alpha*(A H) + beta*H + B`;
+//! - [`stencil_steps`] — 1D stencil time-stepping: a fixed-count loop
+//!   of `stencil1d` applications with a grid carry.
+
+use crate::formats::{ops, Csr};
+use crate::kernels::apps::Stencil1d;
+
+use super::{BufId, Buffer, LoopKind, Node, Pipeline, ScalarOp, Val};
+
+/// Incremental [`Pipeline`] construction: declare buffers, append
+/// nodes, bracket loop bodies with [`PipelineBuilder::begin_loop`] /
+/// `end_*`.
+pub struct PipelineBuilder {
+    name: &'static str,
+    bufs: Vec<Buffer>,
+    stack: Vec<Vec<Node>>,
+}
+
+impl PipelineBuilder {
+    pub fn new(name: &'static str) -> Self {
+        PipelineBuilder { name, bufs: vec![], stack: vec![vec![]] }
+    }
+
+    /// A host input buffer, uploaded once in resident mode.
+    pub fn input(&mut self, name: &str, v: Val) -> BufId {
+        self.bufs.push(Buffer { name: name.into(), init: Some(v), output: false });
+        self.bufs.len() - 1
+    }
+
+    /// An HBM-resident intermediate, written by some node.
+    pub fn buf(&mut self, name: &str) -> BufId {
+        self.bufs.push(Buffer { name: name.into(), init: None, output: false });
+        self.bufs.len() - 1
+    }
+
+    /// Mark a buffer as a DAG output (downloaded at completion).
+    pub fn mark_output(&mut self, b: BufId) {
+        self.bufs[b].output = true;
+    }
+
+    fn push(&mut self, n: Node) {
+        self.stack.last_mut().unwrap().push(n);
+    }
+
+    /// Append a registry-kernel step.
+    pub fn step(&mut self, kernel: &'static str, ins: &[BufId], out: BufId) {
+        self.push(Node::Step { kernel, ins: ins.to_vec(), out });
+    }
+
+    /// Append a host scalar op.
+    pub fn host(&mut self, op: ScalarOp, ins: &[BufId], out: BufId) {
+        self.push(Node::Host { op, ins: ins.to_vec(), out });
+    }
+
+    /// Append a dense → frontier-fiber compaction.
+    pub fn compact(&mut self, input: BufId, out: BufId) {
+        self.push(Node::Compact { input, out });
+    }
+
+    /// Open a loop body; close with [`PipelineBuilder::end_fixed`] or
+    /// [`PipelineBuilder::end_until`].
+    pub fn begin_loop(&mut self) {
+        self.stack.push(vec![]);
+    }
+
+    fn end_loop(&mut self, kind: LoopKind, carry: &[(BufId, BufId)]) {
+        let body = self.stack.pop().expect("end_loop without begin_loop");
+        assert!(!self.stack.is_empty(), "end_loop without begin_loop");
+        self.push(Node::Loop { body, kind, carry: carry.to_vec() });
+    }
+
+    /// Close the innermost loop with a fixed iteration count.
+    pub fn end_fixed(&mut self, iters: usize, carry: &[(BufId, BufId)]) {
+        self.end_loop(LoopKind::Fixed(iters), carry);
+    }
+
+    /// Close the innermost loop with a residual convergence criterion
+    /// (checked after carries; `residual` holds a squared 2-norm).
+    pub fn end_until(
+        &mut self,
+        residual: BufId,
+        tol: f64,
+        max_iters: usize,
+        carry: &[(BufId, BufId)],
+    ) {
+        self.end_loop(LoopKind::UntilResidual { residual, tol, max_iters }, carry);
+    }
+
+    /// Finish and structurally validate the pipeline.
+    pub fn build(mut self) -> Pipeline {
+        assert_eq!(self.stack.len(), 1, "unclosed loop in pipeline '{}'", self.name);
+        let p = Pipeline { name: self.name, bufs: self.bufs, nodes: self.stack.pop().unwrap() };
+        p.check();
+        p
+    }
+}
+
+// =====================================================================
+// matrix helpers
+// =====================================================================
+
+/// Column-normalize an adjacency matrix into the column-stochastic
+/// transition matrix PageRank iterates (every column must have at
+/// least one nonzero — no dangling nodes — for rank mass to be
+/// conserved).
+pub fn column_stochastic(g: &Csr) -> Csr {
+    let mut colsum = vec![0.0f64; g.ncols];
+    for r in 0..g.nrows {
+        let (idx, val) = g.row(r);
+        for (&c, &v) in idx.iter().zip(val) {
+            colsum[c as usize] += v.abs();
+        }
+    }
+    let mut t = Vec::with_capacity(g.nnz());
+    for r in 0..g.nrows {
+        let (idx, val) = g.row(r);
+        for (&c, &v) in idx.iter().zip(val) {
+            let s = colsum[c as usize];
+            if s > 0.0 {
+                t.push((r as u32, c, v.abs() / s));
+            }
+        }
+    }
+    Csr::from_triplets(g.nrows, g.ncols, t)
+}
+
+/// A symmetric positive-definite system matrix derived from any square
+/// sparsity pattern: symmetrize the absolute off-diagonal values and
+/// add a strictly dominant diagonal (`d_ii = sum_{j!=i} |s_ij| + 1`),
+/// which is SPD by Gershgorin — the corpus-to-CG adapter the serve
+/// engine uses to issue `pipeline_cg` against arbitrary matrices.
+pub fn spd_from_pattern(g: &Csr) -> Csr {
+    assert_eq!(g.nrows, g.ncols, "SPD adapter needs a square matrix");
+    let n = g.nrows;
+    let d = g.to_dense();
+    let mut t = Vec::new();
+    for i in 0..n {
+        let mut row_off = 0.0;
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let w = 0.5 * (d[i][j].abs() + d[j][i].abs());
+            if w > 0.0 {
+                t.push((i as u32, j as u32, -w));
+                row_off += w;
+            }
+        }
+        t.push((i as u32, i as u32, row_off + 1.0));
+    }
+    Csr::from_triplets(n, n, t)
+}
+
+/// The 1D Laplacian-style SPD test matrix `tridiag(-1, 4, -1)` —
+/// strongly diagonally dominant, so CG converges in a handful of
+/// iterations.
+pub fn laplacian1d(n: usize) -> Csr {
+    let mut t = Vec::with_capacity(3 * n);
+    for i in 0..n {
+        if i > 0 {
+            t.push((i as u32, (i - 1) as u32, -1.0));
+        }
+        t.push((i as u32, i as u32, 4.0));
+        if i + 1 < n {
+            t.push((i as u32, (i + 1) as u32, -1.0));
+        }
+    }
+    Csr::from_triplets(n, n, t)
+}
+
+// =====================================================================
+// applications
+// =====================================================================
+
+/// Personalized PageRank push-pull over the column-stochastic matrix
+/// `p_mat` (see [`column_stochastic`]): iterate
+/// `x' = damping * P x + (1 - damping) * e_seed` starting from
+/// `x = e_seed`, spreading each iteration's frontier fiber with sMxsV,
+/// until `||x' - x|| <= tol`.
+pub fn pagerank(p_mat: &Csr, damping: f64, seed: usize, tol: f64, max_iters: usize) -> Pipeline {
+    assert_eq!(p_mat.nrows, p_mat.ncols, "PageRank needs a square matrix");
+    let n = p_mat.nrows;
+    assert!(seed < n);
+    let mut e_seed = vec![0.0; n];
+    e_seed[seed] = 1.0;
+    let teleport: Vec<f64> = e_seed.iter().map(|&v| (1.0 - damping) * v).collect();
+
+    let mut b = PipelineBuilder::new("pagerank");
+    let m = b.input("P", Val::Csr(p_mat.clone()));
+    let d = b.input("damping", Val::Scalar(damping));
+    let neg_one = b.input("neg_one", Val::Scalar(-1.0));
+    let tp = b.input("teleport", Val::Dense(teleport));
+    let x = b.input("x", Val::Dense(e_seed));
+    b.mark_output(x);
+    let frontier = b.buf("frontier");
+    let y = b.buf("y");
+    let xnew = b.buf("xnew");
+    let diff = b.buf("diff");
+    let r2 = b.buf("r2");
+
+    b.begin_loop();
+    b.compact(x, frontier); //        frontier = nonzeros(x)
+    b.step("smxsv", &[m, frontier], y); // y = P x
+    b.step("axpy", &[d, y, tp], xnew); // xnew = damping*y + teleport
+    b.step("axpy", &[neg_one, x, xnew], diff); // diff = xnew - x
+    b.step("dot", &[diff, diff], r2);
+    b.end_until(r2, tol, max_iters, &[(xnew, x)]);
+    b.build()
+}
+
+/// Conjugate gradient for `A x = b` (`a_mat` symmetric positive
+/// definite). Iterates until `||r|| <= tol`; the solution accumulates
+/// in the `x` output buffer.
+pub fn cg(a_mat: &Csr, rhs: &[f64], tol: f64, max_iters: usize) -> Pipeline {
+    assert_eq!(a_mat.nrows, a_mat.ncols, "CG needs a square matrix");
+    assert_eq!(a_mat.nrows, rhs.len());
+    let n = a_mat.nrows;
+
+    let mut b = PipelineBuilder::new("cg");
+    let m = b.input("A", Val::Csr(a_mat.clone()));
+    let x = b.input("x", Val::Dense(vec![0.0; n]));
+    b.mark_output(x);
+    let r = b.input("r", Val::Dense(rhs.to_vec()));
+    let p = b.input("p", Val::Dense(rhs.to_vec()));
+    let rsold = b.buf("rsold");
+    let ap = b.buf("Ap");
+    let p_ap = b.buf("pAp");
+    let alpha = b.buf("alpha");
+    let nalpha = b.buf("nalpha");
+    let xnew = b.buf("xnew");
+    let rnew = b.buf("rnew");
+    let rsnew = b.buf("rsnew");
+    let beta = b.buf("beta");
+    let pnew = b.buf("pnew");
+
+    b.step("dot", &[r, r], rsold); // rsold = r . r
+    b.begin_loop();
+    b.step("smxdv", &[m, p], ap); //            Ap    = A p
+    b.step("dot", &[p, ap], p_ap); //           pAp   = p . Ap
+    b.host(ScalarOp::Div, &[rsold, p_ap], alpha); // alpha = rsold / pAp
+    b.step("axpy", &[alpha, p, x], xnew); //    x'    = x + alpha p
+    b.host(ScalarOp::Neg, &[alpha], nalpha);
+    b.step("axpy", &[nalpha, ap, r], rnew); //  r'    = r - alpha Ap
+    b.step("dot", &[rnew, rnew], rsnew); //     rsnew = r' . r'
+    b.host(ScalarOp::Div, &[rsnew, rsold], beta); // beta = rsnew / rsold
+    b.step("axpy", &[beta, p, rnew], pnew); //  p'    = r' + beta p
+    b.end_until(
+        rsold, // post-carry this holds rsnew
+        tol,
+        max_iters,
+        &[(xnew, x), (rnew, r), (pnew, p), (rsnew, rsold)],
+    );
+    b.build()
+}
+
+/// One GNN layer over the (pre-normalized) adjacency `a_hat`:
+/// `Z = alpha * (A H) + beta * H + B`, with the sMxdM aggregation
+/// feeding the dense update tail. `feats`/`bias` are row-major
+/// `n x cols` with `cols = 1 << log2_cols` (the sMxdM constraint).
+pub fn gnn_layer(
+    a_hat: &Csr,
+    feats: &[f64],
+    log2_cols: i64,
+    alpha: f64,
+    beta: f64,
+    bias: &[f64],
+) -> Pipeline {
+    assert_eq!(a_hat.nrows, a_hat.ncols, "GNN layer needs a square adjacency");
+    let cols = 1usize << log2_cols;
+    assert_eq!(feats.len(), a_hat.ncols * cols);
+    assert_eq!(bias.len(), a_hat.nrows * cols);
+
+    let mut b = PipelineBuilder::new("gnn_layer");
+    let m = b.input("A_hat", Val::Csr(a_hat.clone()));
+    let h = b.input("H", Val::Dense(feats.to_vec()));
+    let log2c = b.input("log2_cols", Val::Int(log2_cols));
+    let wa = b.input("alpha", Val::Scalar(alpha));
+    let wb = b.input("beta", Val::Scalar(beta));
+    let bias_b = b.input("B", Val::Dense(bias.to_vec()));
+    let agg = b.buf("agg");
+    let z1 = b.buf("z1");
+    let z = b.buf("Z");
+    b.mark_output(z);
+
+    b.step("smxdm", &[m, h, log2c], agg); //    agg = A H
+    b.step("axpy", &[wa, agg, bias_b], z1); //  z1  = alpha*agg + B
+    b.step("axpy", &[wb, h, z1], z); //         Z   = beta*H + z1
+    b.build()
+}
+
+/// 1D stencil time-stepping: apply `st` to the grid `steps` times,
+/// carrying the result grid between iterations.
+pub fn stencil_steps(st: &Stencil1d, grid: &[f64], steps: usize) -> Pipeline {
+    let mut b = PipelineBuilder::new("stencil_steps");
+    let taps = b.input("taps", Val::SpVec(st.to_spvec()));
+    let u = b.input("u", Val::Dense(grid.to_vec()));
+    b.mark_output(u);
+    let unew = b.buf("unew");
+
+    b.begin_loop();
+    b.step("stencil1d", &[taps, u], unew);
+    b.end_fixed(steps, &[(unew, u)]);
+    b.build()
+}
+
+/// Host reference for the PageRank iteration (dense power iteration
+/// with teleport) — the oracle the pipeline result is tested against.
+pub fn pagerank_reference(
+    p_mat: &Csr,
+    damping: f64,
+    seed: usize,
+    tol: f64,
+    max_iters: usize,
+) -> Vec<f64> {
+    let n = p_mat.nrows;
+    let mut x = vec![0.0; n];
+    x[seed] = 1.0;
+    for _ in 0..max_iters {
+        let px = ops::smxdv(p_mat, &x);
+        let mut xn = vec![0.0; n];
+        let mut d2 = 0.0;
+        for i in 0..n {
+            xn[i] = damping * px[i] + if i == seed { 1.0 - damping } else { 0.0 };
+            d2 += (xn[i] - x[i]) * (xn[i] - x[i]);
+        }
+        x = xn;
+        if d2.sqrt() <= tol {
+            break;
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen;
+
+    #[test]
+    fn column_stochastic_columns_sum_to_one() {
+        let g = matgen::mycielskian(5);
+        let p = column_stochastic(&g);
+        let mut colsum = vec![0.0; p.ncols];
+        for r in 0..p.nrows {
+            let (idx, val) = p.row(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                colsum[c as usize] += v;
+            }
+        }
+        for (c, s) in colsum.iter().enumerate() {
+            assert!((s - 1.0).abs() < 1e-12, "column {c} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn laplacian_is_symmetric_diagonally_dominant() {
+        let a = laplacian1d(10);
+        let d = a.to_dense();
+        for i in 0..10 {
+            for j in 0..10 {
+                assert_eq!(d[i][j], d[j][i]);
+            }
+            let off: f64 = (0..10).filter(|&j| j != i).map(|j| d[i][j].abs()).sum();
+            assert!(d[i][i] > off);
+        }
+    }
+}

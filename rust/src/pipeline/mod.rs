@@ -1,0 +1,614 @@
+//! Kernel-DAG pipelines: iterative multi-kernel applications with
+//! HBM-resident intermediates.
+//!
+//! Everything below the serve layer executes one registry kernel per
+//! call, with every operand round-tripping through the host. Real
+//! sparse workloads are loops and pipelines — PageRank push-pull
+//! (repeated sMxsV over a frontier fiber), CG (sMxdV + axpy + dot per
+//! iteration), a GNN layer (sMxdM aggregation then a dense update),
+//! stencil time-stepping. This module expresses those as a small typed
+//! DAG of [`Node`]s over named [`Buffer`]s:
+//!
+//! - [`Node::Step`] runs one registry kernel ([`crate::kernels::api`]),
+//!   including the dense BLAS-1 helpers ([`crate::kernels::dense`]);
+//! - [`Node::Host`] is a host-side scalar op (CG's `alpha = rs/pAp`) —
+//!   the only values that cross the host↔HBM boundary mid-DAG;
+//! - [`Node::Compact`] extracts a sparse frontier fiber from a dense
+//!   vector on-device (PageRank push-pull);
+//! - [`Node::Loop`] iterates a body to a fixed count or until a
+//!   residual buffer converges, with loop-carried buffer renames.
+//!
+//! The executor keeps intermediates HBM-resident between steps
+//! ([`PipeCfg::resident`], the default): host inputs upload once,
+//! outputs download once, and only 8-byte scalars move in between. The
+//! same DAG can be re-run in round-tripping mode (`resident = false`),
+//! which uploads every step's inputs and downloads every step's output
+//! — the numerical results are bit-identical (the same kernels run in
+//! the same order on the same data; only the transfer accounting
+//! differs), so the measured `host_bytes` gap is exactly the benefit of
+//! residency. A liveness-driven [`plan::BufPlan`] assigns every buffer
+//! an HBM region, reusing regions of dead intermediates.
+//!
+//! The four shipped applications live in [`apps`]; the serve engine
+//! dispatches whole DAGs via [`crate::serve`]'s pipeline requests, the
+//! `pipeline` harness spec sweeps them, and `repro pipeline` runs one
+//! from the CLI.
+
+pub mod apps;
+pub mod plan;
+
+use crate::formats::{Csf, Csr, SpVec};
+use crate::kernels::api::{
+    borrow_all, execute, kernel, ExecCfg, Kernel, KernelError, OwnedOperand, TargetKind, Value,
+};
+use crate::kernels::{IdxWidth, Variant};
+use crate::sim::SystemCfg;
+
+pub use apps::{
+    cg, column_stochastic, gnn_layer, laplacian1d, pagerank, pagerank_reference,
+    spd_from_pattern, stencil_steps, PipelineBuilder,
+};
+pub use plan::{plan_buffers, BufPlan, BufRegion};
+
+/// Index of a [`Buffer`] in its [`Pipeline`].
+pub type BufId = usize;
+
+/// A value held by a pipeline buffer. Richer than the kernel API's
+/// [`Value`]: buffers also hold matrices (inputs) and the two scalar
+/// flavors — `f64` data scalars (presented to kernels as one-element
+/// dense operands) and integer parameters (presented as
+/// [`OwnedOperand::Scalar`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Val {
+    Csr(Csr),
+    Csf(Csf),
+    SpVec(SpVec),
+    Dense(Vec<f64>),
+    /// An `f64` scalar (dot results, step sizes, coefficients).
+    Scalar(f64),
+    /// An integer kernel parameter (e.g. sMxdM's `log2_cols`).
+    Int(i64),
+}
+
+impl Val {
+    /// Host↔HBM transfer size of this value with index width `iw`
+    /// (value payloads + index arrays + CSR row pointers; scalars are
+    /// one bus word).
+    pub fn bytes(&self, iw: IdxWidth) -> u64 {
+        match self {
+            Val::Csr(m) => m.nnz() as u64 * (8 + iw.bytes()) + 4 * (m.nrows as u64 + 1),
+            Val::Csf(t) => {
+                t.nnz() as u64 * (8 + iw.bytes())
+                    + t.nfibers() as u64 * iw.bytes()
+                    + 4 * (t.nfibers() as u64 + 1)
+            }
+            Val::SpVec(v) => v.nnz() as u64 * (8 + iw.bytes()),
+            Val::Dense(d) => d.len() as u64 * 8,
+            Val::Scalar(_) | Val::Int(_) => 8,
+        }
+    }
+
+    fn as_owned(&self) -> OwnedOperand {
+        match self {
+            Val::Csr(m) => OwnedOperand::Csr(m.clone()),
+            Val::Csf(t) => OwnedOperand::Csf(t.clone()),
+            Val::SpVec(v) => OwnedOperand::SpVec(v.clone()),
+            Val::Dense(d) => OwnedOperand::Dense(d.clone()),
+            Val::Scalar(x) => OwnedOperand::Dense(vec![*x]),
+            Val::Int(i) => OwnedOperand::Scalar(*i),
+        }
+    }
+
+    fn from_value(v: Value) -> Val {
+        match v {
+            Value::Scalar(x) => Val::Scalar(x),
+            Value::Dense(d) => Val::Dense(d),
+            Value::Sparse(s) => Val::SpVec(s),
+            Value::Csf(t) => Val::Csf(t),
+        }
+    }
+
+    pub fn as_scalar(&self) -> Option<f64> {
+        match self {
+            Val::Scalar(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_dense(&self) -> Option<&[f64]> {
+        match self {
+            Val::Dense(d) => Some(d),
+            _ => None,
+        }
+    }
+}
+
+/// One named pipeline buffer. Buffers with an `init` value are host
+/// inputs (uploaded once in resident mode); buffers marked `output` are
+/// downloaded at DAG completion.
+#[derive(Clone, Debug)]
+pub struct Buffer {
+    pub name: String,
+    pub init: Option<Val>,
+    pub output: bool,
+}
+
+/// Host-side scalar operation ([`Node::Host`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalarOp {
+    /// `out = ins[0] / ins[1]`
+    Div,
+    /// `out = -ins[0]`
+    Neg,
+    /// `out = sqrt(ins[0])`
+    Sqrt,
+}
+
+/// How a [`Node::Loop`] terminates.
+#[derive(Clone, Debug)]
+pub enum LoopKind {
+    /// Run the body exactly `n` times.
+    Fixed(usize),
+    /// Run until `sqrt(residual) <= tol` (the residual buffer holds a
+    /// squared 2-norm, as produced by `dot(d, d)`), or `max_iters`.
+    /// The check happens after the iteration's carries.
+    UntilResidual {
+        residual: BufId,
+        tol: f64,
+        max_iters: usize,
+    },
+}
+
+/// One node of a pipeline DAG.
+#[derive(Clone, Debug)]
+pub enum Node {
+    /// Run one registry kernel over input buffers into an output buffer.
+    Step {
+        kernel: &'static str,
+        ins: Vec<BufId>,
+        out: BufId,
+    },
+    /// Host-side scalar op over `Scalar` buffers; the only mid-DAG
+    /// host↔HBM traffic in resident mode (8 bytes per operand/result).
+    Host {
+        op: ScalarOp,
+        ins: Vec<BufId>,
+        out: BufId,
+    },
+    /// Device-side compaction of a dense vector into its nonzero
+    /// frontier fiber (PageRank push-pull). Counted as HBM-internal
+    /// traffic in resident mode, a free host pass otherwise.
+    Compact { input: BufId, out: BufId },
+    /// Iterate `body`, applying `carry` renames (`from -> to`) after
+    /// every iteration, then the convergence check.
+    Loop {
+        body: Vec<Node>,
+        kind: LoopKind,
+        carry: Vec<(BufId, BufId)>,
+    },
+}
+
+/// A complete pipeline: buffers + node sequence (the DAG in dependency
+/// order). Build with [`apps::PipelineBuilder`] or pick a shipped
+/// application from [`apps`].
+#[derive(Clone, Debug)]
+pub struct Pipeline {
+    pub name: &'static str,
+    pub bufs: Vec<Buffer>,
+    pub nodes: Vec<Node>,
+}
+
+/// How a pipeline executes.
+#[derive(Clone, Debug)]
+pub struct PipeCfg {
+    /// Kernel variant to request per step; steps that don't implement
+    /// it fall back (SSSR, then BASE) — e.g. sMxsV has no SSR variant.
+    pub variant: Variant,
+    pub iw: IdxWidth,
+    /// With `clusters > 1`, System-capable steps (sMxdV, sMxsV) run
+    /// row-sharded on the multi-cluster target; the dense tail stays
+    /// single-CC.
+    pub clusters: usize,
+    pub channels: usize,
+    /// `true` (default): intermediates stay HBM-resident between steps.
+    /// `false`: every step uploads its inputs and downloads its output
+    /// (per-step host round-tripping). Results are bit-identical; only
+    /// the `host_bytes` accounting differs.
+    pub resident: bool,
+}
+
+impl PipeCfg {
+    pub fn new(variant: Variant, iw: IdxWidth) -> Self {
+        PipeCfg { variant, iw, clusters: 1, channels: 1, resident: true }
+    }
+
+    /// Switch to per-step host round-tripping (the baseline the
+    /// resident mode is measured against).
+    pub fn roundtrip(mut self) -> Self {
+        self.resident = false;
+        self
+    }
+
+    /// Promote System-capable steps to `clusters` row-sharded clusters
+    /// over `channels` HBM channels.
+    pub fn on_system(mut self, clusters: usize, channels: usize) -> Self {
+        self.clusters = clusters;
+        self.channels = channels;
+        self
+    }
+}
+
+/// Cycle/byte breakdown of one outer-loop iteration.
+#[derive(Clone, Debug)]
+pub struct IterTrace {
+    pub iter: usize,
+    pub cycles: u64,
+    pub host_bytes: u64,
+    pub steps: usize,
+    /// Residual after this iteration (convergence-driven loops only).
+    pub residual: Option<f64>,
+}
+
+/// The outcome of one [`Pipeline::run`].
+#[derive(Clone, Debug)]
+pub struct PipeRun {
+    /// Output buffers (name, final value), in buffer order.
+    pub outputs: Vec<(String, Val)>,
+    /// Total simulated compute cycles across all kernel steps.
+    pub cycles: u64,
+    /// Total host↔HBM bytes moved under this run's residency mode.
+    pub host_bytes: u64,
+    /// HBM-internal traffic (loop carries, frontier compaction) in
+    /// resident mode; zero when round-tripping (those are host passes).
+    pub hbm_bytes: u64,
+    /// Kernel steps executed.
+    pub steps: usize,
+    /// Outermost-loop iterations executed.
+    pub iters: usize,
+    pub per_iter: Vec<IterTrace>,
+    /// Residual trajectory (one entry per convergence check).
+    pub residuals: Vec<f64>,
+    /// HBM buffer plan (liveness-driven region reuse).
+    pub plan: BufPlan,
+}
+
+struct Exec<'a> {
+    p: &'a Pipeline,
+    cfg: &'a PipeCfg,
+    state: Vec<Option<Val>>,
+    max_bytes: Vec<u64>,
+    cycles: u64,
+    host_bytes: u64,
+    hbm_bytes: u64,
+    steps: usize,
+    iters: usize,
+    per_iter: Vec<IterTrace>,
+    residuals: Vec<f64>,
+    depth: usize,
+}
+
+impl Exec<'_> {
+    fn val(&self, b: BufId) -> &Val {
+        self.state[b]
+            .as_ref()
+            .unwrap_or_else(|| panic!("buffer '{}' read before any write", self.p.bufs[b].name))
+    }
+
+    fn set(&mut self, b: BufId, v: Val) {
+        self.max_bytes[b] = self.max_bytes[b].max(v.bytes(self.cfg.iw));
+        self.state[b] = Some(v);
+    }
+
+    /// Target + variant selection for one step: System when the kernel
+    /// scales out and the config asks for clusters, with variant
+    /// fallback for kernels that don't implement the requested one.
+    fn exec_cfg(&self, k: &'static dyn Kernel) -> (ExecCfg, Variant) {
+        let sys = self.cfg.clusters > 1 && k.targets().contains(&TargetKind::System);
+        let tk = if sys { TargetKind::System } else { TargetKind::SingleCc };
+        let vs = k.variants_for(tk);
+        let v = if vs.contains(&self.cfg.variant) {
+            self.cfg.variant
+        } else if vs.contains(&Variant::Sssr) {
+            Variant::Sssr
+        } else {
+            Variant::Base
+        };
+        let ecfg = if sys {
+            ExecCfg::system(SystemCfg::paper_system(self.cfg.clusters, self.cfg.channels))
+        } else {
+            ExecCfg::single_sized(k.tcdm_default())
+        };
+        (ecfg, v)
+    }
+
+    fn run_nodes(&mut self, nodes: &[Node]) -> Result<(), KernelError> {
+        for n in nodes {
+            self.run_node(n)?;
+        }
+        Ok(())
+    }
+
+    fn run_node(&mut self, n: &Node) -> Result<(), KernelError> {
+        match n {
+            Node::Step { kernel: name, ins, out } => {
+                let k = kernel(name).unwrap_or_else(|| panic!("kernel {name} not in registry"));
+                let owned: Vec<OwnedOperand> =
+                    ins.iter().map(|&b| self.val(b).as_owned()).collect();
+                let ops = borrow_all(&owned);
+                if !self.cfg.resident {
+                    let up: u64 = ins.iter().map(|&b| self.val(b).bytes(self.cfg.iw)).sum();
+                    self.host_bytes += up;
+                }
+                let (ecfg, v) = self.exec_cfg(k);
+                let run = execute(k, v, self.cfg.iw, &ops, &ecfg)?;
+                self.cycles += run.report.cycles;
+                self.steps += 1;
+                let outv = Val::from_value(run.output);
+                if !self.cfg.resident {
+                    self.host_bytes += outv.bytes(self.cfg.iw);
+                }
+                self.set(*out, outv);
+            }
+            Node::Host { op, ins, out } => {
+                let xs: Vec<f64> = ins
+                    .iter()
+                    .map(|&b| {
+                        self.val(b).as_scalar().unwrap_or_else(|| {
+                            panic!("host op over non-scalar buffer '{}'", self.p.bufs[b].name)
+                        })
+                    })
+                    .collect();
+                let r = match op {
+                    ScalarOp::Div => xs[0] / xs[1],
+                    ScalarOp::Neg => -xs[0],
+                    ScalarOp::Sqrt => xs[0].sqrt(),
+                };
+                // scalar operands come down, the result goes back up
+                if self.cfg.resident {
+                    self.host_bytes += 8 * (ins.len() as u64 + 1);
+                }
+                self.set(*out, Val::Scalar(r));
+            }
+            Node::Compact { input, out } => {
+                let d = self
+                    .val(*input)
+                    .as_dense()
+                    .unwrap_or_else(|| {
+                        panic!("compact over non-dense buffer '{}'", self.p.bufs[*input].name)
+                    })
+                    .to_vec();
+                let sv = SpVec::from_dense(&d);
+                if self.cfg.resident {
+                    self.hbm_bytes += d.len() as u64 * 8 + sv.nnz() as u64 * (8 + self.cfg.iw.bytes());
+                }
+                self.set(*out, Val::SpVec(sv));
+            }
+            Node::Loop { body, kind, carry } => {
+                self.depth += 1;
+                let max = match kind {
+                    LoopKind::Fixed(n) => *n,
+                    LoopKind::UntilResidual { max_iters, .. } => *max_iters,
+                };
+                for it in 0..max {
+                    let (c0, b0, s0) = (self.cycles, self.host_bytes, self.steps);
+                    self.run_nodes(body)?;
+                    for &(from, to) in carry {
+                        let v = self.val(from).clone();
+                        if self.cfg.resident {
+                            self.hbm_bytes += v.bytes(self.cfg.iw);
+                        }
+                        self.set(to, v);
+                    }
+                    let mut resid = None;
+                    let done = match kind {
+                        LoopKind::Fixed(_) => false,
+                        LoopKind::UntilResidual { residual, tol, .. } => {
+                            let r2 = self.val(*residual).as_scalar().unwrap_or_else(|| {
+                                panic!(
+                                    "residual buffer '{}' is not a scalar",
+                                    self.p.bufs[*residual].name
+                                )
+                            });
+                            // the convergence check reads the residual back
+                            if self.cfg.resident {
+                                self.host_bytes += 8;
+                            }
+                            let r = r2.max(0.0).sqrt();
+                            resid = Some(r);
+                            r <= *tol
+                        }
+                    };
+                    if self.depth == 1 {
+                        self.iters += 1;
+                        if let Some(r) = resid {
+                            self.residuals.push(r);
+                        }
+                        self.per_iter.push(IterTrace {
+                            iter: it,
+                            cycles: self.cycles - c0,
+                            host_bytes: self.host_bytes - b0,
+                            steps: self.steps - s0,
+                            residual: resid,
+                        });
+                    }
+                    if done {
+                        break;
+                    }
+                }
+                self.depth -= 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Pipeline {
+    /// Structural validation: every node reads only buffers that have
+    /// an init value or were written by an earlier node, and ids are in
+    /// range. Panics on violations — a malformed graph is a builder
+    /// bug, not a runtime condition.
+    pub fn check(&self) {
+        let n = self.bufs.len();
+        let mut defined: Vec<bool> = self.bufs.iter().map(|b| b.init.is_some()).collect();
+        fn walk(nodes: &[Node], defined: &mut [bool], bufs: &[Buffer], n: usize) {
+            let need = |b: BufId, defined: &[bool]| {
+                assert!(b < n, "buffer id {b} out of range");
+                assert!(
+                    defined[b],
+                    "buffer '{}' read before any write",
+                    bufs[b].name
+                );
+            };
+            for nd in nodes {
+                match nd {
+                    Node::Step { ins, out, .. } | Node::Host { ins, out, .. } => {
+                        for &b in ins {
+                            need(b, defined);
+                        }
+                        assert!(*out < n, "buffer id {out} out of range");
+                        defined[*out] = true;
+                    }
+                    Node::Compact { input, out } => {
+                        need(*input, defined);
+                        assert!(*out < n, "buffer id {out} out of range");
+                        defined[*out] = true;
+                    }
+                    Node::Loop { body, kind, carry } => {
+                        walk(body, defined, bufs, n);
+                        for &(from, to) in carry {
+                            need(from, defined);
+                            assert!(to < n, "buffer id {to} out of range");
+                            defined[to] = true;
+                        }
+                        if let LoopKind::UntilResidual { residual, .. } = kind {
+                            need(*residual, defined);
+                        }
+                    }
+                }
+            }
+        }
+        walk(&self.nodes, &mut defined, &self.bufs, n);
+        for (i, b) in self.bufs.iter().enumerate() {
+            assert!(defined[i] || !b.output, "output buffer '{}' is never written", b.name);
+        }
+    }
+
+    /// Execute the DAG under `cfg`. Every kernel step self-verifies
+    /// against its oracle inside [`execute`].
+    pub fn run(&self, cfg: &PipeCfg) -> Result<PipeRun, KernelError> {
+        self.check();
+        let mut ex = Exec {
+            p: self,
+            cfg,
+            state: self.bufs.iter().map(|b| b.init.clone()).collect(),
+            max_bytes: self
+                .bufs
+                .iter()
+                .map(|b| b.init.as_ref().map_or(0, |v| v.bytes(cfg.iw)))
+                .collect(),
+            cycles: 0,
+            host_bytes: 0,
+            hbm_bytes: 0,
+            steps: 0,
+            iters: 0,
+            per_iter: vec![],
+            residuals: vec![],
+            depth: 0,
+        };
+        // host inputs upload once in resident mode
+        if cfg.resident {
+            for b in &self.bufs {
+                if let Some(v) = &b.init {
+                    ex.host_bytes += v.bytes(cfg.iw);
+                }
+            }
+        }
+        ex.run_nodes(&self.nodes)?;
+        // outputs download once in resident mode
+        if cfg.resident {
+            let down: u64 = self
+                .bufs
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| b.output)
+                .map(|(i, _)| ex.val(i).bytes(cfg.iw))
+                .sum();
+            ex.host_bytes += down;
+        }
+        let outputs: Vec<(String, Val)> = self
+            .bufs
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.output)
+            .map(|(i, b)| (b.name.clone(), ex.val(i).clone()))
+            .collect();
+        let plan = plan_buffers(self, &ex.max_bytes);
+        Ok(PipeRun {
+            outputs,
+            cycles: ex.cycles,
+            host_bytes: ex.host_bytes,
+            hbm_bytes: ex.hbm_bytes,
+            steps: ex.steps,
+            iters: ex.iters,
+            per_iter: ex.per_iter,
+            residuals: ex.residuals,
+            plan,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen;
+
+    #[test]
+    fn a_minimal_chain_runs_resident_and_roundtrip_identically() {
+        let x = matgen::random_dense(1, 128);
+        let y = matgen::random_dense(2, 128);
+        let mut b = PipelineBuilder::new("chain");
+        let alpha = b.input("alpha", Val::Scalar(0.5));
+        let xb = b.input("x", Val::Dense(x.clone()));
+        let yb = b.input("y", Val::Dense(y.clone()));
+        let z = b.buf("z");
+        let r = b.buf("r");
+        b.step("axpy", &[alpha, xb, yb], z);
+        b.step("dot", &[z, z], r);
+        b.mark_output(r);
+        let p = b.build();
+        let cfg = PipeCfg::new(Variant::Sssr, IdxWidth::U16);
+        let res = p.run(&cfg).unwrap();
+        let rt = p.run(&cfg.clone().roundtrip()).unwrap();
+        assert_eq!(res.outputs, rt.outputs);
+        assert_eq!(res.cycles, rt.cycles);
+        // resident: alpha + x + y up, scalar down. roundtrip re-moves z.
+        assert!(res.host_bytes < rt.host_bytes);
+        let want: f64 = x.iter().zip(&y).map(|(a, b)| 0.5 * a + b).map(|v| v * v).sum();
+        let got = res.outputs[0].1.as_scalar().unwrap();
+        assert!((got - want).abs() <= 1e-9 * want.abs().max(1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "read before any write")]
+    fn reading_an_unwritten_buffer_is_a_structural_error() {
+        let mut b = PipelineBuilder::new("bad");
+        let x = b.buf("x");
+        let y = b.buf("y");
+        b.step("dot", &[x, x], y);
+        b.build().check();
+    }
+
+    #[test]
+    fn fixed_loops_trace_every_iteration() {
+        let grid = matgen::random_dense(3, 256);
+        let p = stencil_steps(&crate::kernels::apps::Stencil1d::three_point(), &grid, 4);
+        let run = p.run(&PipeCfg::new(Variant::Sssr, IdxWidth::U16)).unwrap();
+        assert_eq!(run.iters, 4);
+        assert_eq!(run.per_iter.len(), 4);
+        assert_eq!(run.steps, 4);
+        assert!(run.per_iter.iter().all(|t| t.cycles > 0 && t.steps == 1));
+        // resident mode moves no per-iteration host bytes for a pure
+        // device loop
+        assert!(run.per_iter.iter().all(|t| t.host_bytes == 0));
+    }
+}

@@ -1,0 +1,243 @@
+//! Liveness-driven HBM buffer planning for pipeline DAGs.
+//!
+//! Every buffer of a [`Pipeline`](super::Pipeline) gets an HBM region
+//! for the DAG's lifetime. A naive plan allocates every buffer its own
+//! region; this planner computes per-buffer live intervals over the
+//! node sequence and lets a buffer reuse the region of an intermediate
+//! that died earlier (greedy first-fit, smallest fitting region). For
+//! chain-shaped DAGs (the GNN layer's aggregate → update tail) this
+//! shrinks the resident footprint well below the sum of buffer sizes.
+//!
+//! Liveness rules:
+//! - a host input is live from time 0 (it uploads before the first
+//!   node) until its last read;
+//! - an intermediate is live from its first write to its last read;
+//! - anything touched inside a loop is live across the *whole* loop
+//!   (iterations repeat, so last iteration's reads pin the range);
+//! - an output buffer is live to the end (it downloads at completion).
+
+use super::{BufId, LoopKind, Node, Pipeline};
+
+/// One buffer's assigned HBM region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BufRegion {
+    pub offset: u64,
+    pub bytes: u64,
+}
+
+/// The planned HBM layout of one pipeline run.
+#[derive(Clone, Debug)]
+pub struct BufPlan {
+    /// Region per buffer, in [`BufId`] order (zero-sized for buffers
+    /// that never materialize).
+    pub regions: Vec<BufRegion>,
+    /// Peak HBM bytes of the plan (what the serve engine pins).
+    pub footprint: u64,
+    /// Sum of all buffer sizes — the footprint without region reuse.
+    pub naive_bytes: u64,
+}
+
+/// Per-buffer live interval accumulator.
+struct Live {
+    first: Vec<usize>,
+    last: Vec<usize>,
+}
+
+impl Live {
+    fn touch(&mut self, b: BufId, t: usize) {
+        self.first[b] = self.first[b].min(t);
+        self.last[b] = self.last[b].max(t);
+    }
+}
+
+/// Walk `nodes` assigning each node a time step; returns every buffer
+/// accessed in the subtree so enclosing loops can pin live ranges.
+fn walk(nodes: &[Node], t: &mut usize, lv: &mut Live) -> Vec<BufId> {
+    let mut acc = vec![];
+    for nd in nodes {
+        match nd {
+            Node::Step { ins, out, .. } | Node::Host { ins, out, .. } => {
+                *t += 1;
+                for &b in ins {
+                    lv.touch(b, *t);
+                    acc.push(b);
+                }
+                lv.touch(*out, *t);
+                acc.push(*out);
+            }
+            Node::Compact { input, out } => {
+                *t += 1;
+                lv.touch(*input, *t);
+                lv.touch(*out, *t);
+                acc.push(*input);
+                acc.push(*out);
+            }
+            Node::Loop { body, kind, carry } => {
+                let t0 = *t + 1;
+                let mut sub = walk(body, t, lv);
+                *t += 1; // the carry/convergence step
+                for &(from, to) in carry {
+                    lv.touch(from, *t);
+                    lv.touch(to, *t);
+                    sub.push(from);
+                    sub.push(to);
+                }
+                if let LoopKind::UntilResidual { residual, .. } = kind {
+                    lv.touch(*residual, *t);
+                    sub.push(*residual);
+                }
+                let t1 = *t;
+                for &b in &sub {
+                    lv.touch(b, t0);
+                    lv.touch(b, t1);
+                }
+                acc.extend(sub);
+            }
+        }
+    }
+    acc
+}
+
+/// Plan HBM regions for `p` given each buffer's maximum materialized
+/// size (as observed by the executor, or a dry run).
+pub fn plan_buffers(p: &Pipeline, sizes: &[u64]) -> BufPlan {
+    let n = p.bufs.len();
+    assert_eq!(sizes.len(), n);
+    let mut lv = Live { first: vec![usize::MAX; n], last: vec![0; n] };
+    for (i, b) in p.bufs.iter().enumerate() {
+        if b.init.is_some() {
+            lv.touch(i, 0);
+        }
+    }
+    let mut t = 0usize;
+    walk(&p.nodes, &mut t, &mut lv);
+    let t_end = t + 1;
+    for (i, b) in p.bufs.iter().enumerate() {
+        if b.output {
+            lv.touch(i, t_end);
+        }
+    }
+
+    // greedy first-fit: place buffers in order of first use, reusing
+    // the smallest dead region that fits
+    struct Slot {
+        offset: u64,
+        bytes: u64,
+        free_at: usize,
+    }
+    let mut order: Vec<BufId> = (0..n)
+        .filter(|&b| sizes[b] > 0 && lv.first[b] != usize::MAX)
+        .collect();
+    order.sort_by_key(|&b| (lv.first[b], b));
+    let mut slots: Vec<Slot> = vec![];
+    let mut top = 0u64;
+    let mut regions = vec![BufRegion { offset: 0, bytes: 0 }; n];
+    for &b in &order {
+        let mut best: Option<usize> = None;
+        for (si, s) in slots.iter().enumerate() {
+            if s.free_at < lv.first[b] && s.bytes >= sizes[b] {
+                let better = match best {
+                    None => true,
+                    Some(bi) => s.bytes < slots[bi].bytes,
+                };
+                if better {
+                    best = Some(si);
+                }
+            }
+        }
+        match best {
+            Some(si) => {
+                slots[si].free_at = lv.last[b];
+                regions[b] = BufRegion { offset: slots[si].offset, bytes: sizes[b] };
+            }
+            None => {
+                regions[b] = BufRegion { offset: top, bytes: sizes[b] };
+                slots.push(Slot { offset: top, bytes: sizes[b], free_at: lv.last[b] });
+                top += sizes[b];
+            }
+        }
+    }
+    BufPlan { regions, footprint: top, naive_bytes: sizes.iter().sum() }
+}
+
+/// Live intervals of every buffer (exposed for tests/diagnostics):
+/// `(first, last)` per buffer; `first == usize::MAX` means never used.
+pub fn live_intervals(p: &Pipeline) -> Vec<(usize, usize)> {
+    let n = p.bufs.len();
+    let mut lv = Live { first: vec![usize::MAX; n], last: vec![0; n] };
+    for (i, b) in p.bufs.iter().enumerate() {
+        if b.init.is_some() {
+            lv.touch(i, 0);
+        }
+    }
+    let mut t = 0usize;
+    walk(&p.nodes, &mut t, &mut lv);
+    let t_end = t + 1;
+    for (i, b) in p.bufs.iter().enumerate() {
+        if b.output {
+            lv.touch(i, t_end);
+        }
+    }
+    lv.first.into_iter().zip(lv.last).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{PipelineBuilder, Val};
+    use super::*;
+
+    /// x -> a -> b -> c chain: `a` dies once `b` is produced, so `c`
+    /// can reuse `a`'s region.
+    #[test]
+    fn chains_reuse_dead_regions() {
+        let mut bld = PipelineBuilder::new("chain");
+        let alpha = bld.input("alpha", Val::Scalar(2.0));
+        let x = bld.input("x", Val::Dense(vec![1.0; 64]));
+        let a = bld.buf("a");
+        let b = bld.buf("b");
+        let c = bld.buf("c");
+        bld.step("scale", &[alpha, x], a);
+        bld.step("scale", &[alpha, a], b);
+        bld.step("scale", &[alpha, b], c);
+        bld.mark_output(c);
+        let p = bld.build();
+        // [alpha, x, a, b, c]
+        let sizes: Vec<u64> = vec![8, 512, 512, 512, 512];
+        let plan = plan_buffers(&p, &sizes);
+        assert!(plan.footprint < plan.naive_bytes, "{plan:?}");
+        // c reuses a's region (a is dead by the time c is written)
+        assert_eq!(plan.regions[c].offset, plan.regions[a].offset);
+    }
+
+    /// Two concurrently-live buffers must not overlap.
+    #[test]
+    fn live_buffers_never_overlap() {
+        let mut bld = PipelineBuilder::new("pair");
+        let alpha = bld.input("alpha", Val::Scalar(2.0));
+        let x = bld.input("x", Val::Dense(vec![1.0; 32]));
+        let a = bld.buf("a");
+        let r = bld.buf("r");
+        bld.step("scale", &[alpha, x], a);
+        bld.step("dot", &[a, x], r);
+        bld.mark_output(r);
+        let p = bld.build();
+        let sizes: Vec<u64> = vec![8, 256, 256, 8];
+        let plan = plan_buffers(&p, &sizes);
+        let iv = live_intervals(&p);
+        for i in 0..p.bufs.len() {
+            for j in (i + 1)..p.bufs.len() {
+                let (ri, rj) = (plan.regions[i], plan.regions[j]);
+                if ri.bytes == 0 || rj.bytes == 0 {
+                    continue;
+                }
+                let disjoint_time = iv[i].1 < iv[j].0 || iv[j].1 < iv[i].0;
+                let disjoint_space =
+                    ri.offset + ri.bytes <= rj.offset || rj.offset + rj.bytes <= ri.offset;
+                assert!(
+                    disjoint_time || disjoint_space,
+                    "buffers {i} and {j} overlap in time and space"
+                );
+            }
+        }
+    }
+}

@@ -14,12 +14,15 @@ use crate::formats::{Csf, Csr};
 use crate::kernels::IdxWidth;
 
 /// Which operand image format a cache entry holds (one matrix may be
-/// resident in both: `smxdv`/`smxsv`/`tricnt` stream the CSR image,
-/// `smxsm_csf` the CSF one).
+/// resident in several: `smxdv`/`smxsv`/`tricnt` stream the CSR image,
+/// `smxsm_csf` the CSF one, and pipeline DAGs their derived operator —
+/// column-stochastic or SPD adapter — built from the same corpus entry).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Form {
     Csr,
     Csf,
+    /// Derived pipeline operator image (`pipeline_*` requests).
+    Pipe,
 }
 
 /// Bytes of the DMA-ready CSR image of `m` at index width `iw`
@@ -56,6 +59,9 @@ struct Entry {
 pub struct OperandCache {
     cap: u64,
     used: u64,
+    /// Bytes reserved by in-flight pipeline DAGs ([`OperandCache::pin`]):
+    /// unavailable to cached images, never evictable.
+    pinned: u64,
     tick: u64,
     entries: Vec<Entry>,
     pub stats: CacheStats,
@@ -66,6 +72,7 @@ impl OperandCache {
         OperandCache {
             cap: cap_bytes,
             used: 0,
+            pinned: 0,
             tick: 0,
             entries: vec![],
             stats: CacheStats::default(),
@@ -81,6 +88,41 @@ impl OperandCache {
     /// Bytes currently resident.
     pub fn resident_bytes(&self) -> u64 {
         self.used
+    }
+
+    /// Bytes currently pinned by in-flight pipeline DAGs.
+    pub fn pinned_bytes(&self) -> u64 {
+        self.pinned
+    }
+
+    /// Reserve `bytes` of the shard for a pipeline DAG's HBM-resident
+    /// intermediates. The reservation is not evictable: cached images
+    /// are LRU-evicted until the remaining capacity holds them, and
+    /// subsequent [`OperandCache::touch`] calls only cache into what is
+    /// left. Returns `false` (no reservation) if `bytes` exceeds the
+    /// whole shard. Pair with [`OperandCache::unpin`] at DAG completion.
+    pub fn pin(&mut self, bytes: u64) -> bool {
+        if self.pinned + bytes > self.cap {
+            return false;
+        }
+        self.pinned += bytes;
+        while self.used + self.pinned > self.cap {
+            let (victim, _) = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_use)
+                .expect("used > 0 implies a resident entry");
+            self.used -= self.entries[victim].bytes;
+            self.entries.swap_remove(victim);
+            self.stats.evictions += 1;
+        }
+        true
+    }
+
+    /// Release a [`OperandCache::pin`] reservation.
+    pub fn unpin(&mut self, bytes: u64) {
+        self.pinned = self.pinned.saturating_sub(bytes);
     }
 
     /// Access the image of (`matrix`, `form`) sized `bytes`. Returns
@@ -102,10 +144,10 @@ impl OperandCache {
         }
         self.stats.misses += 1;
         self.stats.upload_bytes += bytes;
-        if bytes > self.cap {
+        if bytes + self.pinned > self.cap {
             return false;
         }
-        while self.used + bytes > self.cap {
+        while self.used + bytes + self.pinned > self.cap {
             let (victim, _) = self
                 .entries
                 .iter()
@@ -182,6 +224,29 @@ mod tests {
         assert_eq!(c.resident_bytes(), 0);
         assert_eq!(c.stats.misses, 2);
         assert_eq!(c.stats.evictions, 0);
+    }
+
+    #[test]
+    fn pins_evict_images_and_shrink_cacheable_space() {
+        let mut c = OperandCache::new(1000);
+        c.touch(0, Form::Csr, 400);
+        c.touch(1, Form::Csr, 400);
+        // pinning 600 bytes must evict the colder image (matrix 0)
+        assert!(c.pin(600));
+        assert_eq!(c.pinned_bytes(), 600);
+        assert_eq!(c.stats.evictions, 1);
+        assert!(!c.contains_matrix(0) && c.contains_matrix(1));
+        // a 500-byte image no longer fits beside the pin: miss, not retained
+        assert!(!c.touch(2, Form::Csr, 500));
+        assert!(!c.contains_matrix(2));
+        // releasing the pin restores the full shard
+        c.unpin(600);
+        assert_eq!(c.pinned_bytes(), 0);
+        assert!(!c.touch(2, Form::Csr, 500));
+        assert!(c.contains_matrix(2));
+        // a pin larger than the shard is refused outright
+        assert!(!c.pin(2000));
+        assert_eq!(c.pinned_bytes(), 0);
     }
 
     #[test]

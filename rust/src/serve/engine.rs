@@ -28,14 +28,31 @@
 //! decoded-program cache ([`crate::sim::progcache`]) instead of
 //! re-decoding, and idle stretches inside each run are fast-forwarded
 //! ([`crate::sim::fastpath`]) — again with bit-identical results.
+//!
+//! Two request classes get special dispatch treatment:
+//!
+//! - **Pipeline DAGs** (`pipeline_pagerank` / `pipeline_cg` /
+//!   `pipeline_gnn`, see [`crate::pipeline`]) run as one dispatch whose
+//!   compute cycles and transfer bytes come from the HBM-resident DAG
+//!   run itself; the DAG's planned intermediate footprint is *pinned*
+//!   in the cluster's operand cache for the duration of the dispatch
+//!   ([`OperandCache::pin`]), evicting cold images rather than letting
+//!   them evict in-flight intermediates.
+//! - **Heavy graph/tensor requests** (`tricnt` / `smxsm_csf` on
+//!   matrices of at least [`SYS_PROMOTE_NNZ`] nonzeros, on a
+//!   multi-cluster engine) are promoted to whole-System execution: the
+//!   kernel runs row-sharded across every serving cluster (PR 7's
+//!   two-phase drivers), which occupies all clusters until it finishes
+//!   but shortens the critical dispatch.
 
 use std::collections::HashMap;
 
-use crate::formats::Csf;
+use crate::formats::{Csf, Csr};
 use crate::kernels::api::{must_execute, ExecCfg, Operand, Value};
 use crate::kernels::{IdxWidth, Report, Variant};
 use crate::matgen;
 use crate::model::energy::EnergyModel;
+use crate::pipeline::{apps as pipeapps, PipeCfg};
 use crate::sim::dram::CHANNEL_PINS;
 use crate::sim::mem::schedule_burst;
 use crate::sim::SystemCfg;
@@ -43,7 +60,11 @@ use crate::sim::SystemCfg;
 use super::batch::{self, BatchCfg};
 use super::cache::{csf_image_bytes, csr_image_bytes, CacheStats, Form, OperandCache};
 use super::sched::Policy;
-use super::workload::{validate_stream, Request, ServeMatrix};
+use super::workload::{pipeline_steps, validate_stream, Request, ServeMatrix};
+
+/// Nonzero threshold above which `tricnt` / `smxsm_csf` requests are
+/// promoted to whole-System execution on a multi-cluster engine.
+pub const SYS_PROMOTE_NNZ: usize = 1024;
 
 /// One serving-engine configuration.
 #[derive(Clone, Debug)]
@@ -194,6 +215,19 @@ struct MemoVal {
     output: Value,
 }
 
+/// Memoized outcome of one pipeline DAG run (everything the dispatch
+/// accounting needs; the DAG's numeric outputs are oracle-verified
+/// inside the run and not served back).
+#[derive(Clone, Copy)]
+struct PipeMemo {
+    cycles: u64,
+    host_bytes: u64,
+    hbm_bytes: u64,
+    footprint: u64,
+    /// CSR image bytes of the derived operator (what the cache holds).
+    matrix_bytes: u64,
+}
+
 /// Operand-fiber nonzeros issued by `smxsv` requests against an
 /// `ncols`-column matrix (a ~1.5 % density floor-of-4, deterministic).
 fn spmspv_nnz(ncols: usize) -> usize {
@@ -247,6 +281,22 @@ pub fn run_serve(
             csfs[r.matrix] = Some(Csf::from_csr(&corpus[r.matrix].matrix));
         }
     }
+    // derived pipeline operators, built once per (app family, matrix):
+    // PageRank/GNN iterate the column-stochastic operator, CG the SPD
+    // adapter of the corpus pattern
+    let mut stoch: Vec<Option<Csr>> = corpus.iter().map(|_| None).collect();
+    let mut spd: Vec<Option<Csr>> = corpus.iter().map(|_| None).collect();
+    for r in reqs {
+        match r.kernel {
+            "pipeline_pagerank" | "pipeline_gnn" if stoch[r.matrix].is_none() => {
+                stoch[r.matrix] = Some(pipeapps::column_stochastic(&corpus[r.matrix].matrix));
+            }
+            "pipeline_cg" if spd[r.matrix].is_none() => {
+                spd[r.matrix] = Some(pipeapps::spd_from_pattern(&corpus[r.matrix].matrix));
+            }
+            _ => {}
+        }
+    }
 
     let bpc = cfg.sys.cluster.dram_gbps_pin * CHANNEL_PINS / 8.0;
     let (lat, icl) = (cfg.sys.cluster.dram_latency, cfg.sys.cluster.ic_latency);
@@ -262,6 +312,7 @@ pub fn run_serve(
     let mut next = 0usize;
     let mut outcomes: Vec<Option<RequestOutcome>> = reqs.iter().map(|_| None).collect();
     let mut memo: HashMap<(usize, &'static str, u64, usize), MemoVal> = HashMap::new();
+    let mut pipe_memo: HashMap<(&'static str, usize, u64), PipeMemo> = HashMap::new();
 
     loop {
         // earliest-free cluster (ties in index order)
@@ -284,16 +335,73 @@ pub fn run_serve(
         let head = &reqs[members[0]];
         let m = &corpus[head.matrix].matrix;
         let cols = members.len();
-        let form = if head.kernel == "smxsm_csf" { Form::Csf } else { Form::Csr };
+
+        // pipeline DAG requests execute (memoized) up front: their
+        // transfer accounting comes from the DAG run itself
+        let pm: Option<PipeMemo> = pipeline_steps(head.kernel).map(|_| {
+            let key = (head.kernel, head.matrix, head.opseed);
+            if let Some(p) = pipe_memo.get(&key) {
+                return *p;
+            }
+            let pcfg = PipeCfg::new(cfg.variant, cfg.iw);
+            let n = m.nrows;
+            let (p, op) = match head.kernel {
+                "pipeline_pagerank" => {
+                    let op = stoch[head.matrix].as_ref().unwrap();
+                    (pipeapps::pagerank(op, 0.85, head.opseed as usize % n, 1e-6, 25), op)
+                }
+                "pipeline_cg" => {
+                    let op = spd[head.matrix].as_ref().unwrap();
+                    let rhs = matgen::random_dense(head.opseed, n);
+                    (pipeapps::cg(op, &rhs, 1e-8, 40), op)
+                }
+                "pipeline_gnn" => {
+                    let op = stoch[head.matrix].as_ref().unwrap();
+                    let gcols = 4usize;
+                    let feats = matgen::random_dense(head.opseed, n * gcols);
+                    let bias = matgen::random_dense(head.opseed ^ 0x9E3779B9, n * gcols);
+                    (pipeapps::gnn_layer(op, &feats, 2, 0.5, 0.5, &bias), op)
+                }
+                other => unreachable!("pipeline_steps admitted unknown app {other}"),
+            };
+            let run = p.run(&pcfg).expect("pipeline DAG run failed");
+            let v = PipeMemo {
+                cycles: run.cycles,
+                host_bytes: run.host_bytes,
+                hbm_bytes: run.hbm_bytes,
+                footprint: run.plan.footprint,
+                matrix_bytes: csr_image_bytes(op, cfg.iw),
+            };
+            pipe_memo.insert(key, v);
+            v
+        });
+        // heavy graph/tensor requests scale out to the whole system
+        let promoted = cfg.sys.clusters > 1
+            && matches!(head.kernel, "tricnt" | "smxsm_csf")
+            && m.nnz() >= SYS_PROMOTE_NNZ;
+
+        let form = if pm.is_some() {
+            Form::Pipe
+        } else if head.kernel == "smxsm_csf" {
+            Form::Csf
+        } else {
+            Form::Csr
+        };
         let image_bytes = match form {
+            Form::Pipe => pm.as_ref().unwrap().matrix_bytes,
             Form::Csr => csr_image_bytes(m, cfg.iw),
             // smxsm_csf streams both CSF operands (A twice here)
             Form::Csf => 2 * csf_image_bytes(csfs[head.matrix].as_ref().unwrap(), cfg.iw),
         };
-        let operand_bytes = match head.kernel {
-            "smxdv" => cols as u64 * 8 * m.ncols as u64,
-            "smxsv" => spmspv_nnz(m.ncols) as u64 * (8 + cfg.iw.bytes()),
-            _ => 0,
+        let operand_bytes = match &pm {
+            // everything the DAG moved beyond its operator image:
+            // vectors up, outputs down, mid-DAG scalars
+            Some(p) => p.host_bytes.saturating_sub(p.matrix_bytes),
+            None => match head.kernel {
+                "smxdv" => cols as u64 * 8 * m.ncols as u64,
+                "smxsv" => spmspv_nnz(m.ncols) as u64 * (8 + cfg.iw.bytes()),
+                _ => 0,
+            },
         };
 
         // ---- simulated-time phases ---------------------------------
@@ -304,6 +412,15 @@ pub fn run_serve(
             caches[c].bypass(image_bytes);
             false
         };
+        // the DAG's planned intermediate footprint (beyond the operator
+        // image, which is the cache entry itself) is pinned in the shard
+        // for the whole dispatch: cold images are evicted to make room
+        // and cannot reclaim it until the DAG completes
+        if let Some(p) = &pm {
+            if cfg.cache {
+                caches[c].pin(p.footprint.saturating_sub(p.matrix_bytes));
+            }
+        }
         let ch = c % channels;
         let upload_end = if hit {
             t0
@@ -322,69 +439,93 @@ pub fn run_serve(
         .last_beat;
 
         // ---- compute (memoized across identical dispatches) --------
-        let opkey = match head.kernel {
-            "smxdv" => members
-                .iter()
-                .fold(0xcbf29ce484222325u64, |h, &i| {
-                    (h ^ reqs[i].opseed).wrapping_mul(0x100000001b3)
-                }),
-            "smxsv" => head.opseed,
-            _ => 0,
-        };
-        let key_kernel: &'static str = if cols > 1 { "smxdm" } else { head.kernel };
-        let memo_key = (head.matrix, key_kernel, opkey, cols);
-        let val = memo.entry(memo_key).or_insert_with(|| {
-            let run = match head.kernel {
-                "smxdv" if cols > 1 => {
-                    let vecs: Vec<Vec<f64>> = members
+        let (compute_cycles, kernel_j, results): (u64, f64, Vec<Option<Vec<f64>>>) =
+            if let Some(p) = &pm {
+                // DAG cycles from the resident pipeline run; the DAG's
+                // internal HBM traffic (carries, frontier compaction)
+                // is charged at the DMA energy rate
+                (p.cycles, em.pj_dma_byte * p.hbm_bytes as f64 * 1e-12, vec![None])
+            } else {
+                let opkey = match head.kernel {
+                    "smxdv" => members
                         .iter()
-                        .map(|&i| matgen::random_dense(reqs[i].opseed, m.ncols))
-                        .collect();
-                    let refs: Vec<&[f64]> = vecs.iter().map(|v| v.as_slice()).collect();
-                    let d = batch::interleave(&refs);
-                    let log2 = cols.trailing_zeros() as i64;
-                    let ops = [Operand::Csr(m), Operand::Dense(&d), Operand::Scalar(log2)];
-                    must_execute("smxdm", cfg.variant, cfg.iw, &ops, &ecfg)
-                }
-                "smxdv" => {
-                    let b = matgen::random_dense(head.opseed, m.ncols);
-                    let ops = [Operand::Csr(m), Operand::Dense(&b)];
-                    must_execute("smxdv", cfg.variant, cfg.iw, &ops, &ecfg)
-                }
-                "smxsv" => {
-                    let v = matgen::random_spvec(head.opseed, m.ncols, spmspv_nnz(m.ncols));
-                    let ops = [Operand::Csr(m), Operand::SpVec(&v)];
-                    must_execute("smxsv", cfg.variant, cfg.iw, &ops, &ecfg)
-                }
-                "tricnt" => {
-                    let ops = [Operand::Csr(m)];
-                    must_execute("tricnt", cfg.variant, cfg.iw, &ops, &ecfg)
-                }
-                "smxsm_csf" => {
-                    let t = csfs[head.matrix].as_ref().unwrap();
-                    let ops = [Operand::Csf(t), Operand::Csf(t)];
-                    must_execute("smxsm_csf", cfg.variant, cfg.iw, &ops, &ecfg)
-                }
-                other => unreachable!("validate_stream admitted unknown kernel {other}"),
+                        .fold(0xcbf29ce484222325u64, |h, &i| {
+                            (h ^ reqs[i].opseed).wrapping_mul(0x100000001b3)
+                        }),
+                    "smxsv" => head.opseed,
+                    _ => 0,
+                };
+                let key_kernel: &'static str = if cols > 1 { "smxdm" } else { head.kernel };
+                let memo_key = (head.matrix, key_kernel, opkey, cols);
+                let val = memo.entry(memo_key).or_insert_with(|| {
+                    // promoted heavy requests run row-sharded on the
+                    // whole system instead of the dispatching CC
+                    let run_cfg = if promoted {
+                        ExecCfg::system(cfg.sys.clone()).with_limit(cfg.limit)
+                    } else {
+                        ecfg.clone()
+                    };
+                    let run = match head.kernel {
+                        "smxdv" if cols > 1 => {
+                            let vecs: Vec<Vec<f64>> = members
+                                .iter()
+                                .map(|&i| matgen::random_dense(reqs[i].opseed, m.ncols))
+                                .collect();
+                            let refs: Vec<&[f64]> = vecs.iter().map(|v| v.as_slice()).collect();
+                            let d = batch::interleave(&refs);
+                            let log2 = cols.trailing_zeros() as i64;
+                            let ops =
+                                [Operand::Csr(m), Operand::Dense(&d), Operand::Scalar(log2)];
+                            must_execute("smxdm", cfg.variant, cfg.iw, &ops, &run_cfg)
+                        }
+                        "smxdv" => {
+                            let b = matgen::random_dense(head.opseed, m.ncols);
+                            let ops = [Operand::Csr(m), Operand::Dense(&b)];
+                            must_execute("smxdv", cfg.variant, cfg.iw, &ops, &run_cfg)
+                        }
+                        "smxsv" => {
+                            let v =
+                                matgen::random_spvec(head.opseed, m.ncols, spmspv_nnz(m.ncols));
+                            let ops = [Operand::Csr(m), Operand::SpVec(&v)];
+                            must_execute("smxsv", cfg.variant, cfg.iw, &ops, &run_cfg)
+                        }
+                        "tricnt" => {
+                            let ops = [Operand::Csr(m)];
+                            must_execute("tricnt", cfg.variant, cfg.iw, &ops, &run_cfg)
+                        }
+                        "smxsm_csf" => {
+                            let t = csfs[head.matrix].as_ref().unwrap();
+                            let ops = [Operand::Csf(t), Operand::Csf(t)];
+                            must_execute("smxsm_csf", cfg.variant, cfg.iw, &ops, &run_cfg)
+                        }
+                        other => unreachable!("validate_stream admitted unknown kernel {other}"),
+                    };
+                    MemoVal { report: run.report, output: run.output }
+                });
+                let kj = em.estimate(&val.report.stats, val.report.payload.max(1)).total_j;
+                let results: Vec<Option<Vec<f64>>> = if cols > 1 {
+                    let out = val.output.as_dense().expect("smxdm yields a dense result");
+                    batch::scatter(out, m.nrows, cols).into_iter().map(Some).collect()
+                } else if head.kernel == "smxdv" {
+                    vec![Some(
+                        val.output.as_dense().expect("smxdv yields a dense result").to_vec(),
+                    )]
+                } else {
+                    vec![None]
+                };
+                (val.report.cycles, kj, results)
             };
-            MemoVal { report: run.report, output: run.output }
-        });
-        let compute_cycles = val.report.cycles;
         let finish = stage_end + compute_cycles;
+        if let Some(p) = &pm {
+            if cfg.cache {
+                caches[c].unpin(p.footprint.saturating_sub(p.matrix_bytes));
+            }
+        }
 
         // ---- accounting --------------------------------------------
         let uploaded = if hit { 0 } else { image_bytes };
         let moved = uploaded + image_bytes + operand_bytes;
-        let total_j = em.estimate(&val.report.stats, val.report.payload.max(1)).total_j
-            + em.pj_dma_byte * moved as f64 * 1e-12;
-        let results: Vec<Option<Vec<f64>>> = if cols > 1 {
-            let out = val.output.as_dense().expect("smxdm yields a dense result");
-            batch::scatter(out, m.nrows, cols).into_iter().map(Some).collect()
-        } else if head.kernel == "smxdv" {
-            vec![Some(val.output.as_dense().expect("smxdv yields a dense result").to_vec())]
-        } else {
-            vec![None]
-        };
+        let total_j = kernel_j + em.pj_dma_byte * moved as f64 * 1e-12;
         for (j, (&i, result)) in members.iter().zip(results).enumerate() {
             let r = &reqs[i];
             debug_assert_eq!(j == 0, i == members[0]);
@@ -416,6 +557,15 @@ pub fn run_serve(
         st.busy_cycles += finish - now;
         st.staged_bytes += image_bytes + operand_bytes;
         free_at[c] = finish;
+        if promoted {
+            // a whole-System run occupies every serving cluster
+            for i in 0..k {
+                if i != c {
+                    cl_stats[i].busy_cycles += finish.saturating_sub(free_at[i].max(now));
+                    free_at[i] = free_at[i].max(finish);
+                }
+            }
+        }
     }
 
     let requests: Vec<RequestOutcome> = outcomes
@@ -587,6 +737,65 @@ mod tests {
         let ev: u64 = out.clusters.iter().map(|c| c.cache.evictions).sum();
         assert!(ev >= 6, "alternating matrices must thrash a one-image cache, got {ev}");
         assert_eq!(out.summary.cache_hits, 0);
+    }
+
+    #[test]
+    fn pipeline_requests_dispatch_whole_dags() {
+        let corpus = serve_corpus();
+        let scfg = StreamCfg::pipeline_mix(0xB0B, 10, 8000.0);
+        let reqs = gen_stream(&scfg, &corpus);
+        let cfg = ServeCfg::new(1, 1);
+        let a = run_serve(&cfg, &corpus, &reqs).unwrap();
+        let b = run_serve(&cfg, &corpus, &reqs).unwrap();
+        assert_eq!(a.requests, b.requests, "DAG dispatches must be deterministic");
+        let pipes: Vec<_> =
+            a.requests.iter().filter(|r| r.kernel.starts_with("pipeline_")).collect();
+        assert!(!pipes.is_empty(), "the mix must issue pipeline requests");
+        for r in &pipes {
+            assert_eq!(r.batch_size, 1, "DAG dispatches never coalesce");
+            assert!(r.compute_cycles > 0);
+            assert!(r.result.is_none());
+            assert!(r.energy_j > 0.0);
+        }
+        // iterative DAGs dominate single-kernel requests in compute
+        let max_plain = a
+            .requests
+            .iter()
+            .filter(|r| !r.kernel.starts_with("pipeline_"))
+            .map(|r| r.compute_cycles)
+            .max()
+            .unwrap_or(0);
+        assert!(pipes.iter().any(|r| r.compute_cycles > max_plain));
+    }
+
+    #[test]
+    fn heavy_graph_requests_promote_to_whole_system() {
+        let corpus = serve_corpus();
+        // myc7 (entry 5) sits above the promotion threshold
+        assert!(corpus[5].matrix.nnz() >= SYS_PROMOTE_NNZ);
+        let reqs: Vec<Request> = (0..3)
+            .map(|id| Request {
+                id,
+                tenant: 0,
+                kernel: "tricnt",
+                matrix: 5,
+                arrival: 0,
+                opseed: 1,
+            })
+            .collect();
+        let solo = run_serve(&ServeCfg::new(1, 1), &corpus, &reqs).unwrap();
+        let multi = run_serve(&ServeCfg::new(4, 2), &corpus, &reqs).unwrap();
+        // the promoted run is a different (row-sharded, whole-system)
+        // execution, not the dispatching cluster's single-CC run
+        assert_ne!(multi.requests[0].compute_cycles, solo.requests[0].compute_cycles);
+        // and it occupies every cluster: despite 4 clusters and 3
+        // queued requests, promoted dispatches never overlap in time
+        let mut spans: Vec<(u64, u64)> =
+            multi.requests.iter().map(|r| (r.start, r.finish)).collect();
+        spans.sort_unstable();
+        for w in spans.windows(2) {
+            assert!(w[0].1 <= w[1].0, "promoted dispatches must serialize: {spans:?}");
+        }
     }
 
     #[test]

@@ -8,10 +8,15 @@
 //! kernel runs. This subsystem turns the repository into a system you
 //! can load-test: a multi-tenant serving engine in which seeded
 //! open-loop request streams issue registry kernels (`smxdv`, `smxsv`,
-//! `smxsm_csf`, `tricnt`) against a named matrix corpus, and an event
-//! loop advances *simulated time* from the cycle reports of real
-//! [`crate::kernels::api::execute`] runs plus the shared HBM burst
-//! timing model ([`crate::sim::mem`]).
+//! `smxsm_csf`, `tricnt`) — or whole kernel-DAG pipelines
+//! (`pipeline_pagerank` / `pipeline_cg` / `pipeline_gnn`, see
+//! [`crate::pipeline`]) dispatched as single requests with their
+//! intermediates pinned in the operand cache — against a named matrix
+//! corpus, and an event loop advances *simulated time* from the cycle
+//! reports of real [`crate::kernels::api::execute`] runs plus the
+//! shared HBM burst timing model ([`crate::sim::mem`]). Heavy
+//! `tricnt`/`smxsm_csf` requests promote to whole-System row-sharded
+//! execution above an nnz threshold ([`engine::SYS_PROMOTE_NNZ`]).
 //!
 //! Structure:
 //!
@@ -52,8 +57,9 @@ pub mod workload;
 
 pub use batch::BatchCfg;
 pub use cache::{CacheStats, Form, OperandCache};
-pub use engine::{run_serve, RequestOutcome, ServeCfg, ServeOutcome, ServeSummary};
+pub use engine::{run_serve, RequestOutcome, ServeCfg, ServeOutcome, ServeSummary, SYS_PROMOTE_NNZ};
 pub use sched::Policy;
 pub use workload::{
-    gen_stream, serve_corpus, validate_stream, Request, ServeMatrix, StreamCfg, TenantSpec,
+    gen_stream, pipeline_steps, serve_corpus, validate_stream, Request, ServeMatrix, StreamCfg,
+    TenantSpec,
 };

@@ -58,6 +58,20 @@ pub fn serve_corpus() -> Vec<ServeMatrix> {
     ]
 }
 
+/// The pipeline pseudo-kernels a request stream may issue alongside
+/// plain registry kernels: whole kernel-DAGs ([`crate::pipeline`])
+/// dispatched as one request. Returns the registry kernels the app's
+/// steps execute (what capability validation must check), or `None`
+/// for a plain registry kernel name.
+pub fn pipeline_steps(kernel: &str) -> Option<&'static [&'static str]> {
+    match kernel {
+        "pipeline_pagerank" => Some(&["smxsv", "axpy", "dot"]),
+        "pipeline_cg" => Some(&["smxdv", "axpy", "dot"]),
+        "pipeline_gnn" => Some(&["smxdm", "axpy"]),
+        _ => None,
+    }
+}
+
 /// One tenant of the multi-tenant mix: a kernel, the corpus entries it
 /// queries, its share of the request stream, and how many distinct
 /// operand vectors it cycles through (real query mixes repeat).
@@ -65,7 +79,9 @@ pub fn serve_corpus() -> Vec<ServeMatrix> {
 pub struct TenantSpec {
     pub name: &'static str,
     /// Registry kernel this tenant issues (`smxdv`, `smxsv`,
-    /// `smxsm_csf`, `tricnt`).
+    /// `smxsm_csf`, `tricnt`), or a whole kernel-DAG pseudo-kernel
+    /// (`pipeline_pagerank`, `pipeline_cg`, `pipeline_gnn` — see
+    /// [`pipeline_steps`]).
     pub kernel: &'static str,
     /// Corpus indices this tenant queries (uniformly).
     pub matrices: Vec<usize>,
@@ -132,6 +148,49 @@ impl StreamCfg {
                     weight: (100 - hot_pct) - (100 - hot_pct) / 2 - (100 - hot_pct) / 4
                         - (100 - hot_pct) / 8,
                     vec_pool: 1,
+                },
+            ],
+        }
+    }
+
+    /// A pipeline-heavy mix over [`serve_corpus`]: iterative kernel-DAG
+    /// requests (PageRank on the graph adjacencies, CG and a GNN layer
+    /// on the square matrices) interleaved with a background `smxdv`
+    /// tenant. Pipeline tenants only query square corpus entries — the
+    /// apps' operand contract.
+    pub fn pipeline_mix(seed: u64, requests: usize, mean_gap: f64) -> StreamCfg {
+        StreamCfg {
+            seed,
+            requests,
+            mean_gap,
+            tenants: vec![
+                TenantSpec {
+                    name: "pagerank",
+                    kernel: "pipeline_pagerank",
+                    matrices: vec![4, 5],
+                    weight: 30,
+                    vec_pool: 2,
+                },
+                TenantSpec {
+                    name: "cg",
+                    kernel: "pipeline_cg",
+                    matrices: vec![0, 2],
+                    weight: 25,
+                    vec_pool: 2,
+                },
+                TenantSpec {
+                    name: "gnn",
+                    kernel: "pipeline_gnn",
+                    matrices: vec![4, 5],
+                    weight: 25,
+                    vec_pool: 2,
+                },
+                TenantSpec {
+                    name: "background",
+                    kernel: "smxdv",
+                    matrices: vec![0, 1, 2, 3],
+                    weight: 20,
+                    vec_pool: 4,
                 },
             ],
         }
@@ -246,7 +305,17 @@ pub fn validate_stream(
     let mut seen: Vec<&'static str> = vec![];
     for r in reqs {
         if !seen.contains(&r.kernel) {
-            check_kernel(r.kernel, true)?;
+            match pipeline_steps(r.kernel) {
+                // a pipeline DAG dispatches its own steps (the executor
+                // promotes System-capable ones itself), so its kernels
+                // only need single-CC admissibility
+                Some(steps) => {
+                    for s in steps {
+                        check_kernel(s, false)?;
+                    }
+                }
+                None => check_kernel(r.kernel, true)?,
+            }
             seen.push(r.kernel);
         }
         let m = corpus
@@ -263,6 +332,12 @@ pub fn validate_stream(
             return Err(format!(
                 "request {}: tricnt needs a graph adjacency, {} is not one",
                 r.id, m.name
+            ));
+        }
+        if pipeline_steps(r.kernel).is_some() && m.matrix.nrows != m.matrix.ncols {
+            return Err(format!(
+                "request {}: {} needs a square matrix, {} is {}x{}",
+                r.id, r.kernel, m.name, m.matrix.nrows, m.matrix.ncols
             ));
         }
     }
@@ -378,6 +453,36 @@ mod tests {
         let cfg = StreamCfg::same_matrix_heavy(9, 48, 500.0, 60);
         let reqs = gen_stream(&cfg, &corpus);
         validate_stream(&reqs, &corpus, Variant::Sssr, IdxWidth::U16, 8, true).unwrap();
+    }
+
+    #[test]
+    fn pipeline_mix_is_admissible_and_square_checked() {
+        let corpus = serve_corpus();
+        let cfg = StreamCfg::pipeline_mix(11, 48, 2000.0);
+        let reqs = gen_stream(&cfg, &corpus);
+        assert!(reqs.iter().any(|r| r.kernel.starts_with("pipeline_")));
+        validate_stream(&reqs, &corpus, Variant::Sssr, IdxWidth::U16, 1, false).unwrap();
+        // pipelines on non-square matrices are rejected (rand2k is 400x512)
+        let bad = Request {
+            id: 0,
+            tenant: 0,
+            kernel: "pipeline_cg",
+            matrix: 1,
+            arrival: 0,
+            opseed: 1,
+        };
+        let e = validate_stream(&[bad], &corpus, Variant::Sssr, IdxWidth::U16, 1, false);
+        assert!(e.unwrap_err().contains("square"));
+        // pipeline steps are capability-checked: smxsv has no SSR variant
+        let pr = Request {
+            id: 0,
+            tenant: 0,
+            kernel: "pipeline_pagerank",
+            matrix: 4,
+            arrival: 0,
+            opseed: 1,
+        };
+        assert!(validate_stream(&[pr], &corpus, Variant::Ssr, IdxWidth::U16, 1, false).is_err());
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Kernel-DAG pipeline end-to-end tests: the four iterative
+//! applications ([`sssr::pipeline::apps`]) checked against dense host
+//! oracles, plus the PR's acceptance pin — HBM-resident intermediates
+//! move strictly fewer host↔HBM bytes than per-step round-tripping
+//! while producing bit-identical outputs.
+
+use sssr::formats::Csr;
+use sssr::kernels::apps::Stencil1d;
+use sssr::kernels::{IdxWidth, Variant};
+use sssr::matgen;
+use sssr::pipeline::{self, PipeCfg, PipeRun, Val};
+
+/// Pull one named output buffer's dense value out of a run.
+fn dense_output<'a>(run: &'a PipeRun, name: &str) -> &'a [f64] {
+    let (_, v) = run
+        .outputs
+        .iter()
+        .find(|(n, _)| n == name)
+        .unwrap_or_else(|| panic!("no output buffer {name:?}"));
+    match v {
+        Val::Dense(d) => d,
+        other => panic!("output {name:?} is not dense: {other:?}"),
+    }
+}
+
+/// Dense Gaussian elimination with partial pivoting — the oracle the
+/// pipeline CG solve is checked against.
+fn dense_solve(a: &Csr, b: &[f64]) -> Vec<f64> {
+    let n = a.nrows;
+    let mut m = a.to_dense();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        let piv = (col..n)
+            .max_by(|&i, &j| m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap())
+            .unwrap();
+        m.swap(col, piv);
+        x.swap(col, piv);
+        assert!(m[col][col].abs() > 1e-12, "singular oracle system");
+        for row in col + 1..n {
+            let f = m[row][col] / m[col][col];
+            for k in col..n {
+                m[row][k] -= f * m[col][k];
+            }
+            x[row] -= f * x[col];
+        }
+    }
+    for col in (0..n).rev() {
+        x[col] /= m[col][col];
+        for row in 0..col {
+            x[row] -= m[row][col] * x[col];
+        }
+    }
+    x
+}
+
+#[test]
+fn pagerank_stays_stochastic_and_matches_power_iteration() {
+    let p = pipeline::column_stochastic(&matgen::mycielskian(6));
+    let pipe = pipeline::pagerank(&p, 0.85, 0, 1e-6, 40);
+    let run = pipe
+        .run(&PipeCfg::new(Variant::Sssr, IdxWidth::U16))
+        .expect("pagerank pipeline");
+    let x = dense_output(&run, "x");
+
+    // Column-stochastic operator + personalized teleport conserve
+    // probability mass: the rank vector stays a distribution.
+    let sum: f64 = x.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-9, "rank mass drifted: sum = {sum}");
+    assert!(x.iter().all(|&v| v >= -1e-12), "negative rank entry");
+
+    // And the sparse-frontier pipeline tracks the dense power-iteration
+    // oracle entrywise (same damping, seed, tolerance, iteration cap).
+    let oracle = pipeline::pagerank_reference(&p, 0.85, 0, 1e-6, 40);
+    assert_eq!(x.len(), oracle.len());
+    for (i, (&got, &want)) in x.iter().zip(&oracle).enumerate() {
+        assert!((got - want).abs() < 1e-6, "rank[{i}]: pipeline {got} vs oracle {want}");
+    }
+}
+
+#[test]
+fn cg_residuals_non_increasing_and_solution_matches_dense_solve() {
+    let a = pipeline::laplacian1d(96);
+    let rhs = matgen::random_dense(0xC6, 96);
+    let pipe = pipeline::cg(&a, &rhs, 1e-12, 200);
+    let run = pipe
+        .run(&PipeCfg::new(Variant::Sssr, IdxWidth::U16))
+        .expect("cg pipeline");
+
+    // ‖r‖ trajectory: monotonically non-increasing on this
+    // well-conditioned SPD system, and converged below the tolerance.
+    assert!(run.residuals.len() >= 2, "CG converged suspiciously fast");
+    for w in run.residuals.windows(2) {
+        assert!(
+            w[1] <= w[0] * (1.0 + 1e-9),
+            "residual increased: {} -> {}",
+            w[0],
+            w[1]
+        );
+    }
+    let last = *run.residuals.last().unwrap();
+    assert!(last <= 1e-12, "CG did not converge: final ‖r‖ = {last}");
+
+    // The converged iterate matches the dense direct solve.
+    let x = dense_output(&run, "x");
+    let oracle = dense_solve(&a, &rhs);
+    for (i, (&got, &want)) in x.iter().zip(&oracle).enumerate() {
+        assert!((got - want).abs() < 1e-5, "x[{i}]: CG {got} vs direct {want}");
+    }
+}
+
+#[test]
+fn stencil_pipeline_matches_repeated_host_reference() {
+    let st = Stencil1d::three_point();
+    let grid = matgen::random_dense(0x57, 256);
+    let steps = 5;
+    let run = pipeline::stencil_steps(&st, &grid, steps)
+        .run(&PipeCfg::new(Variant::Sssr, IdxWidth::U16))
+        .expect("stencil pipeline");
+    let mut want = grid;
+    for _ in 0..steps {
+        want = st.reference(&want);
+    }
+    let got = dense_output(&run, "u");
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-12, "u[{i}]: pipeline {g} vs host {w}");
+    }
+    assert_eq!(run.iters, steps);
+}
+
+/// The PR's acceptance pin: on the CG and GNN pipelines, HBM-resident
+/// intermediates move strictly fewer host↔HBM bytes than per-step
+/// round-tripping, with bit-identical outputs and identical modeled
+/// compute cycles (residency only changes where bytes move).
+#[test]
+fn resident_intermediates_cut_host_bytes_bit_identically() {
+    let a = pipeline::column_stochastic(&matgen::mycielskian(6));
+    let n = a.nrows;
+    let feats = matgen::random_dense(0xF0, n * 8);
+    let bias = matgen::random_dense(0xB1, n * 8);
+    let gnn = pipeline::gnn_layer(&a, &feats, 3, 0.5, 0.5, &bias);
+
+    let spd = pipeline::laplacian1d(128);
+    let rhs = matgen::random_dense(0xC6, 128);
+    let cg = pipeline::cg(&spd, &rhs, 1e-10, 100);
+
+    for (name, pipe) in [("gnn", &gnn), ("cg", &cg)] {
+        let cfg = PipeCfg::new(Variant::Sssr, IdxWidth::U16);
+        let res = pipe.run(&cfg).unwrap_or_else(|e| panic!("{name} resident: {e}"));
+        let rt = pipe
+            .run(&cfg.clone().roundtrip())
+            .unwrap_or_else(|e| panic!("{name} roundtrip: {e}"));
+        assert_eq!(res.outputs, rt.outputs, "{name}: outputs diverged across residency modes");
+        assert_eq!(res.cycles, rt.cycles, "{name}: compute cycles depend on residency");
+        assert!(
+            res.host_bytes < rt.host_bytes,
+            "{name}: residency saved nothing ({} vs {} host bytes)",
+            res.host_bytes,
+            rt.host_bytes
+        );
+    }
+
+    // The iterative solve round-trips every per-iteration intermediate,
+    // so residency must save a large factor there, not a rounding error.
+    let res = cg.run(&PipeCfg::new(Variant::Sssr, IdxWidth::U16)).unwrap();
+    let rt = cg
+        .run(&PipeCfg::new(Variant::Sssr, IdxWidth::U16).roundtrip())
+        .unwrap();
+    assert!(
+        res.host_bytes * 2 <= rt.host_bytes,
+        "CG residency should at least halve host traffic ({} vs {})",
+        res.host_bytes,
+        rt.host_bytes
+    );
+}
