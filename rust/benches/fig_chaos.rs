@@ -1,0 +1,20 @@
+//! Regenerates the adversarial-scenario sweep (`chaos`: scenario ×
+//! policy × cache on/off — MMPP bursts, tenant churn with cache
+//! invalidation replay, hot-set rotation, the SLO-guarded same-matrix
+//! flood, and closed-loop load) through the parallel experiment engine
+//! and writes `BENCH_chaos.json` next to the other bench trajectories.
+//! Quick stream by default; REPRO_FULL=1 for the longer stream.
+use std::path::Path;
+
+use sssr::experiments::{write_json, Runner};
+use sssr::harness as h;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let spec = h::spec_by_name("chaos").expect("chaos spec registered");
+    let recs = Runner::new(0).run(&spec);
+    spec.print(&recs);
+    let path = write_json(Path::new("."), &spec, &recs).expect("writing BENCH json");
+    println!("[wrote {}]", path.display());
+    println!("\n[fig_chaos bench wall time: {:.1}s]", t0.elapsed().as_secs_f64());
+}

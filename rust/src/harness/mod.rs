@@ -22,7 +22,7 @@ use crate::matgen;
 use crate::pipeline::{self, PipeCfg};
 use crate::model::energy::EnergyModel;
 use crate::model::{streamer_area, streamer_min_period_ps, SlotKind, StreamerCfg};
-use crate::serve::{self, Policy, ServeCfg, StreamCfg};
+use crate::serve::{self, Policy, Scenario, ServeCfg, SloCfg, StreamCfg};
 use crate::sim::{ClusterCfg, SystemCfg};
 
 pub fn full_mode() -> bool {
@@ -1091,6 +1091,153 @@ pub fn spec_serve() -> ExperimentSpec {
 }
 
 // ======================================================================
+// chaos — adversarial serving scenarios (scenario × policy × cache)
+// ======================================================================
+
+/// Stream seed shared by every `chaos` grid point: each scenario's
+/// stream is generated once per (scenario), so policy/cache effects
+/// are directly comparable row to row within a scenario.
+pub const CHAOS_SEED: u64 = 0xC4A05;
+
+/// Mean inter-arrival gap (cycles) every chaos scenario shapes its
+/// arrival process around (the `flood` scenario halves it, `burst`
+/// compresses it 8× inside bursts — see [`Scenario::stream`]).
+pub const CHAOS_GAP: f64 = 1500.0;
+
+/// One `chaos` grid point.
+#[derive(Clone, Debug)]
+pub struct ChaosCombo {
+    pub scenario: Scenario,
+    pub policy: Policy,
+    pub cache: bool,
+}
+
+impl ChaosCombo {
+    fn label(&self) -> String {
+        format!(
+            "{}/{}/{}",
+            self.scenario.name(),
+            self.policy.name(),
+            if self.cache { "cache" } else { "nocache" }
+        )
+    }
+}
+
+/// The default `chaos` grid: all six named scenarios × all dispatch
+/// policies × cache on/off, every point batched
+/// ([`SERVE_WINDOW`]/[`SERVE_MAX_BATCH`]) on a 2-cluster engine. The
+/// `flood` points run under [`SloCfg::flood_default`] admission
+/// control; the `closed` points run closed-loop.
+pub fn chaos_combos() -> Vec<ChaosCombo> {
+    let mut out = vec![];
+    for scenario in Scenario::ALL {
+        for policy in Policy::ALL {
+            for cache in [true, false] {
+                out.push(ChaosCombo { scenario, policy, cache });
+            }
+        }
+    }
+    out
+}
+
+/// Requests per chaos grid point.
+pub fn chaos_requests() -> usize {
+    if full_mode() {
+        120
+    } else {
+        40
+    }
+}
+
+fn chaos_columns() -> Vec<Column> {
+    vec![
+        Column::new("scenario", "scenario", 8, ColFmt::Str),
+        Column::new("policy", "policy", 9, ColFmt::Str),
+        Column::new("cache", "cache", 6, ColFmt::StrR),
+        Column::new("p50", "p50 cyc", 10, ColFmt::Int),
+        Column::new("p99", "p99 cyc", 11, ColFmt::Int),
+        Column::new("throughput_nnz", "nnz/cyc", 8, ColFmt::Fixed(3)),
+        Column::new("hit_rate", "hit", 6, ColFmt::Pct(0)),
+        Column::new("evictions", "evict", 6, ColFmt::Int),
+        Column::new("shed", "shed", 5, ColFmt::Int),
+        Column::new("max_in_flight", "infl", 5, ColFmt::Int),
+    ]
+}
+
+/// Build a `chaos` spec over an explicit combo grid (the default sweep
+/// uses [`chaos_combos`]; tests shrink the grid and request count).
+/// Each grid point regenerates its scenario's stream from
+/// [`CHAOS_SEED`] and serves it through one single-threaded engine run
+/// (churn events replayed as cache invalidations), so all simulated
+/// fields are `--jobs`-invariant; only the host wall stamps vary.
+pub fn spec_chaos_with(requests: usize, combos: Vec<ChaosCombo>) -> ExperimentSpec {
+    let corpus = serve::serve_corpus();
+    let points = combos
+        .iter()
+        .enumerate()
+        .map(|(i, cb)| Point::at(i).label(cb.label()))
+        .collect();
+    ExperimentSpec {
+        name: "chaos",
+        title: "chaos: adversarial serving scenarios (scenario x policy x cache)".into(),
+        columns: chaos_columns(),
+        points,
+        measure: Box::new(move |p: &Point| {
+            let cb = &combos[p.idx.unwrap()];
+            let scfg = cb.scenario.stream(CHAOS_SEED, requests, CHAOS_GAP);
+            let stream = serve::gen_stream_ex(&scfg, &corpus);
+            let mut cfg = ServeCfg::new(2, 1)
+                .policy(cb.policy)
+                .batched(SERVE_WINDOW, SERVE_MAX_BATCH)
+                .caching(cb.cache);
+            if cb.scenario.slo_default() {
+                let tenants = stream.reqs.iter().map(|r| r.tenant + 1).max().unwrap_or(0);
+                cfg = cfg.slo(SloCfg::flood_default(tenants));
+            }
+            if let Some((clients, w)) = cb.scenario.closed_clients() {
+                cfg = cfg.closed_loop(clients, w);
+            }
+            let out = serve::run_serve_stream(&cfg, &corpus, &stream)
+                .unwrap_or_else(|e| panic!("chaos[{}]: {e}", cb.label()));
+            let s = out.summary;
+            let evictions: u64 = out.clusters.iter().map(|c| c.cache.evictions).sum();
+            let invalidations: u64 = out.clusters.iter().map(|c| c.cache.invalidations).sum();
+            vec![Record::new("chaos")
+                .str("scenario", cb.scenario.name())
+                .str("policy", cb.policy.name())
+                .str("cache", if cb.cache { "on" } else { "off" })
+                .int("clusters", 2)
+                .int("channels", 1)
+                .int("mean_gap", CHAOS_GAP as i64)
+                .int("window", SERVE_WINDOW as i64)
+                .int("requests", s.requests as i64)
+                .int("p50", s.p50_latency as i64)
+                .int("p95", s.p95_latency as i64)
+                .int("p99", s.p99_latency as i64)
+                .num("mean_latency", s.mean_latency)
+                .num("throughput_nnz", s.throughput_nnz)
+                .num("utilization", s.utilization)
+                .num("hit_rate", s.hit_rate)
+                .int("evictions", evictions as i64)
+                .int("invalidations", invalidations as i64)
+                .int("shed", s.shed_requests as i64)
+                .int("violations", s.slo_violations as i64)
+                .int("max_in_flight", s.max_in_flight as i64)
+                .int("batches", s.batches as i64)
+                .int("makespan", s.makespan as i64)
+                .num("wall_ms", s.wall_ms)
+                .num("wall_us_per_request", s.wall_us_per_request)]
+        }),
+    }
+}
+
+/// `chaos`: the adversarial-scenario sweep (`repro sweep chaos` →
+/// `BENCH_chaos.json`).
+pub fn spec_chaos() -> ExperimentSpec {
+    spec_chaos_with(chaos_requests(), chaos_combos())
+}
+
+// ======================================================================
 // pipeline — kernel-DAG applications with HBM-resident intermediates
 // ======================================================================
 
@@ -1568,10 +1715,11 @@ pub fn spec_simperf() -> ExperimentSpec {
 /// Every figure sweep as a (name, constructor) pair, in `repro all`
 /// order (the paper figures plus the system-layer `scale` family, the
 /// CSF/graph `graph` sweep, the two-phase `spgemm` scaling sweep, the
-/// serving-engine `serve` sweep, and the kernel-DAG `pipeline` sweep).
+/// serving-engine `serve` sweep, the adversarial-scenario `chaos`
+/// sweep, and the kernel-DAG `pipeline` sweep).
 /// Construction generates the sweep's shared workloads (corpus,
 /// operands) eagerly, so build one spec at a time and drop it before
-/// the next — materializing all twenty-one at
+/// the next — materializing all twenty-two at
 /// once holds every workload in memory simultaneously. Tables 2/3 are available via
 /// [`spec_table2`]/[`spec_table3`] (Table 2's bottom row derives from
 /// Fig. 5a records, see [`table2_ours`]).
@@ -1595,6 +1743,7 @@ pub const SPEC_BUILDERS: &[(&str, fn() -> ExperimentSpec)] = &[
     ("graph", spec_graph),
     ("spgemm", spec_spgemm),
     ("serve", spec_serve),
+    ("chaos", spec_chaos),
     ("pipeline", spec_pipeline),
     ("simperf", spec_simperf),
 ];
@@ -1668,7 +1817,7 @@ mod tests {
 
     #[test]
     fn spec_registry_is_consistent() {
-        assert_eq!(SPEC_BUILDERS.len(), 21);
+        assert_eq!(SPEC_BUILDERS.len(), 22);
         for (n, build) in SPEC_BUILDERS {
             let s = build();
             assert_eq!(s.name, *n);

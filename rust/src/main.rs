@@ -32,7 +32,10 @@ COMMANDS:
                                                  `spgemm` the two-phase
                                                  system-SpGEMM scaling sweep,
                                                  `serve` the serving-engine
-                                                 sweep, `pipeline` the
+                                                 sweep, `chaos` the adversarial
+                                                 serving-scenario sweep
+                                                 (BENCH_chaos.json),
+                                                 `pipeline` the
                                                  kernel-DAG pipeline sweep
                                                  (BENCH_pipeline.json),
                                                  `simperf` the simulator
@@ -73,6 +76,12 @@ SERVE OPTIONS:
     --seed S        stream seed, decimal (default 385310)
     --hot PCT       hot-tenant share percent (default 70)
     --mtx FILE      serve a Matrix Market matrix as the hot matrix
+    --scenario S    steady | burst | churn | rotate | flood | closed —
+                    named adversarial arrival scenario (overrides --hot;
+                    flood arms per-tenant SLO shedding, closed runs
+                    closed-loop; see README \"Chaos & SLO scenarios\")
+    --closed-loop CxW  closed-loop load: C clients, each holding at most
+                    W outstanding requests (e.g. 6x2)
 
 PIPELINE OPTIONS:
     --app A         pagerank | cg | gnn | stencil (default pagerank)
@@ -342,9 +351,10 @@ fn list_kernels() {
 }
 
 /// The `repro serve` subcommand: run one serving-engine configuration
-/// on the canonical same-matrix-heavy stream and print the summary.
+/// on the canonical same-matrix-heavy stream — or one of the named
+/// adversarial scenarios (`--scenario`) — and print the summary.
 fn serve_cmd(rest: &[String]) {
-    use sssr::serve::{self, Policy, ServeCfg, ServeMatrix, StreamCfg};
+    use sssr::serve::{self, Policy, Scenario, ServeCfg, ServeMatrix, SloCfg, StreamCfg};
     let mut policy = Policy::Fifo;
     let mut clusters = 2usize;
     let mut channels = 1usize;
@@ -356,6 +366,8 @@ fn serve_cmd(rest: &[String]) {
     let mut seed = 0x5E11Eu64;
     let mut hot = 70u32;
     let mut mtx: Option<PathBuf> = None;
+    let mut scenario: Option<Scenario> = None;
+    let mut closed: Option<(usize, usize)> = None;
     let mut it = rest.iter();
     let next_val = |it: &mut std::slice::Iter<String>, flag: &str| -> String {
         it.next()
@@ -379,6 +391,21 @@ fn serve_cmd(rest: &[String]) {
             "--seed" => seed = parse_num(&next_val(&mut it, "--seed")),
             "--hot" => hot = parse_num(&next_val(&mut it, "--hot")),
             "--mtx" => mtx = Some(PathBuf::from(next_val(&mut it, "--mtx"))),
+            "--scenario" => {
+                let v = next_val(&mut it, "--scenario");
+                scenario = Some(Scenario::parse(&v).unwrap_or_else(|| {
+                    die(&format!(
+                        "unknown scenario {v:?} (steady|burst|churn|rotate|flood|closed)"
+                    ))
+                }));
+            }
+            "--closed-loop" => {
+                let v = next_val(&mut it, "--closed-loop");
+                let (c, w) = v
+                    .split_once('x')
+                    .unwrap_or_else(|| die(&format!("bad --closed-loop value {v:?} (want CxW)")));
+                closed = Some((parse_num(c), parse_num(w)));
+            }
             other => die(&format!("unknown serve option {other:?}")),
         }
     }
@@ -401,17 +428,39 @@ fn serve_cmd(rest: &[String]) {
     if rate <= 0.0 {
         die("--rate must be a positive cycle count");
     }
-    let stream = StreamCfg::same_matrix_heavy(seed, requests, rate, hot);
-    let reqs = serve::gen_stream(&stream, &corpus);
-    let cfg = ServeCfg::new(clusters, channels)
+    let scfg = match scenario {
+        Some(sc) => sc.stream(seed, requests, rate),
+        None => StreamCfg::same_matrix_heavy(seed, requests, rate, hot),
+    };
+    let stream = serve::gen_stream_ex(&scfg, &corpus);
+    let mut cfg = ServeCfg::new(clusters, channels)
         .policy(policy)
         .batched(window, max_batch)
         .caching(cache);
-    let out = serve::run_serve(&cfg, &corpus, &reqs).unwrap_or_else(|e| die(&e));
+    if let Some(sc) = scenario {
+        if sc.slo_default() {
+            let tenants = stream.reqs.iter().map(|r| r.tenant + 1).max().unwrap_or(0);
+            cfg = cfg.slo(SloCfg::flood_default(tenants));
+        }
+        if closed.is_none() {
+            closed = sc.closed_clients();
+        }
+    }
+    if let Some((c, w)) = closed {
+        if c == 0 || w == 0 {
+            die("--closed-loop clients and outstanding must both be at least 1");
+        }
+        cfg = cfg.closed_loop(c, w);
+    }
+    let out = serve::run_serve_stream(&cfg, &corpus, &stream).unwrap_or_else(|e| die(&e));
     let s = out.summary;
     println!(
-        "serve: {} requests, {} clusters / {} channel(s), policy {}, window {} cyc, cache {}",
+        "serve: {} requests{}, {} clusters / {} channel(s), policy {}, window {} cyc, cache {}",
         s.requests,
+        match scenario {
+            Some(sc) => format!(" ({} scenario)", sc.name()),
+            None => String::new(),
+        },
         clusters,
         channels,
         policy.name(),
@@ -440,6 +489,20 @@ fn serve_cmd(rest: &[String]) {
     println!(
         "  batching              : {} batches, {} of {} requests coalesced (x{:.2} mean)",
         s.batches, s.batched_requests, s.requests, s.avg_batch
+    );
+    if cfg.slo.is_some() {
+        println!(
+            "  SLO admission         : {} shed, {} served over budget",
+            s.shed_requests, s.slo_violations
+        );
+    }
+    println!(
+        "  max in flight         : {} request(s){}",
+        s.max_in_flight,
+        match closed {
+            Some((c, w)) => format!(" (closed loop: {c} clients x {w} outstanding)"),
+            None => String::new(),
+        }
     );
     println!("  energy                : {:.2} uJ total", s.energy_j * 1e6);
     println!(

@@ -44,6 +44,10 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Entries dropped by tenant-churn invalidation
+    /// ([`OperandCache::invalidate_matrix`]); every invalidation also
+    /// counts as a (forced) eviction in [`CacheStats::evictions`].
+    pub invalidations: u64,
     /// Host→HBM bytes paid by misses (the image builds skipped on hits).
     pub upload_bytes: u64,
 }
@@ -169,6 +173,31 @@ impl OperandCache {
         self.stats.misses += 1;
         self.stats.upload_bytes += bytes;
     }
+
+    /// Drop every resident image of `matrix`, whatever its form — the
+    /// tenant-churn path: a departed tenant's footprint is reclaimed
+    /// immediately instead of aging out of the LRU order. Each dropped
+    /// entry counts once in [`CacheStats::invalidations`] and once in
+    /// [`CacheStats::evictions`] (it is a forced eviction). Pinned
+    /// reservations are byte-level, never tied to an entry, and are
+    /// untouched. Returns the bytes reclaimed.
+    pub fn invalidate_matrix(&mut self, matrix: usize) -> u64 {
+        let mut freed = 0u64;
+        let mut dropped = 0u64;
+        self.entries.retain(|e| {
+            if e.matrix == matrix {
+                freed += e.bytes;
+                dropped += 1;
+                false
+            } else {
+                true
+            }
+        });
+        self.used -= freed;
+        self.stats.invalidations += dropped;
+        self.stats.evictions += dropped;
+        freed
+    }
 }
 
 #[cfg(test)]
@@ -246,6 +275,39 @@ mod tests {
         assert!(c.contains_matrix(2));
         // a pin larger than the shard is refused outright
         assert!(!c.pin(2000));
+        assert_eq!(c.pinned_bytes(), 0);
+    }
+
+    #[test]
+    fn invalidation_reclaims_all_forms_and_counts_forced_evictions() {
+        let mut c = OperandCache::new(2000);
+        c.touch(0, Form::Csr, 400);
+        c.touch(0, Form::Csf, 300);
+        c.touch(1, Form::Csr, 500);
+        assert_eq!(c.resident_bytes(), 1200);
+        // both images of matrix 0 drop; matrix 1 is untouched
+        assert_eq!(c.invalidate_matrix(0), 700);
+        assert!(!c.contains_matrix(0) && c.contains_matrix(1));
+        assert_eq!(c.resident_bytes(), 500);
+        assert_eq!(c.stats.invalidations, 2);
+        assert_eq!(c.stats.evictions, 2);
+        // invalidating an absent matrix is a no-op
+        assert_eq!(c.invalidate_matrix(7), 0);
+        assert_eq!(c.stats.invalidations, 2);
+        // the freed space is immediately reusable
+        assert!(!c.touch(0, Form::Csr, 400));
+        assert!(c.touch(0, Form::Csr, 400));
+    }
+
+    #[test]
+    fn invalidation_never_touches_pins() {
+        let mut c = OperandCache::new(1000);
+        c.touch(0, Form::Csr, 300);
+        assert!(c.pin(600));
+        c.invalidate_matrix(0);
+        assert_eq!(c.pinned_bytes(), 600, "pins are byte reservations, not entries");
+        assert_eq!(c.resident_bytes(), 0);
+        c.unpin(600);
         assert_eq!(c.pinned_bytes(), 0);
     }
 

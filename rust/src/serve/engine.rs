@@ -45,7 +45,8 @@
 //!   two-phase drivers), which occupies all clusters until it finishes
 //!   but shortens the critical dispatch.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::formats::{Csf, Csr};
 use crate::kernels::api::{must_execute, ExecCfg, Operand, Value};
@@ -60,11 +61,27 @@ use crate::sim::SystemCfg;
 use super::batch::{self, BatchCfg};
 use super::cache::{csf_image_bytes, csr_image_bytes, CacheStats, Form, OperandCache};
 use super::sched::Policy;
-use super::workload::{pipeline_steps, validate_stream, Request, ServeMatrix};
+use super::slo::{SloAction, SloCfg, SloTracker};
+use super::workload::{pipeline_steps, validate_stream, ChurnEvent, Request, ServeMatrix, Stream};
 
 /// Nonzero threshold above which `tricnt` / `smxsm_csf` requests are
 /// promoted to whole-System execution on a multi-cluster engine.
 pub const SYS_PROMOTE_NNZ: usize = 1024;
+
+/// Closed-loop load generation: the stream's requests are partitioned
+/// round-robin over `clients` simulated clients, and each client holds
+/// at most `per_client` requests outstanding — its next request is
+/// released at the later of its open-loop arrival and the completion of
+/// the request `per_client` positions earlier in the client's sequence.
+/// Offered load thereby adapts to the engine instead of queues growing
+/// unboundedly; in-flight requests are bounded by `clients *
+/// per_client` at every simulated instant.
+#[derive(Clone, Copy, Debug)]
+pub struct ClosedLoop {
+    pub clients: usize,
+    /// Max outstanding requests per client (W).
+    pub per_client: usize,
+}
 
 /// One serving-engine configuration.
 #[derive(Clone, Debug)]
@@ -83,6 +100,10 @@ pub struct ServeCfg {
     pub dispatch_cycles: u64,
     /// Hang guard for the underlying kernel runs.
     pub limit: u64,
+    /// Per-tenant SLO admission control (None: every request is served).
+    pub slo: Option<SloCfg>,
+    /// Closed-loop load generation (None: open-loop arrivals as given).
+    pub closed: Option<ClosedLoop>,
 }
 
 impl ServeCfg {
@@ -100,6 +121,8 @@ impl ServeCfg {
             iw: IdxWidth::U16,
             dispatch_cycles: 1000,
             limit: 2_000_000_000,
+            slo: None,
+            closed: None,
         }
     }
 
@@ -119,6 +142,16 @@ impl ServeCfg {
 
     pub fn caching(mut self, on: bool) -> ServeCfg {
         self.cache = on;
+        self
+    }
+
+    pub fn slo(mut self, s: SloCfg) -> ServeCfg {
+        self.slo = Some(s);
+        self
+    }
+
+    pub fn closed_loop(mut self, clients: usize, per_client: usize) -> ServeCfg {
+        self.closed = Some(ClosedLoop { clients: clients.max(1), per_client: per_client.max(1) });
         self
     }
 }
@@ -143,9 +176,13 @@ pub struct RequestOutcome {
     pub finish: u64,
     pub latency: u64,
     pub cluster: usize,
-    /// Requests coalesced into this request's dispatch (1 = unbatched).
+    /// Requests coalesced into this request's dispatch (1 = unbatched;
+    /// 0 = shed, never dispatched).
     pub batch_size: usize,
     pub cache_hit: bool,
+    /// Dropped by SLO admission control: no upload, no compute, no
+    /// result; `finish == start` is the shed instant.
+    pub shed: bool,
     /// This request's energy share (J): kernel activity plus data
     /// movement, split equally across the batch.
     pub energy_j: f64,
@@ -194,6 +231,17 @@ pub struct ServeSummary {
     /// Mean requests per dispatch.
     pub avg_batch: f64,
     pub energy_j: f64,
+    /// Requests dropped by SLO admission control (latency percentiles
+    /// and means above cover served requests only).
+    pub shed_requests: u64,
+    /// Served requests that individually exceeded their tenant's SLO
+    /// budget (computed post-hoc over the whole run, not the trailing
+    /// window the admission controller acts on).
+    pub slo_violations: u64,
+    /// Peak simultaneously in-flight requests (released, not finished)
+    /// over the run — bounded by `clients * per_client` in closed-loop
+    /// mode.
+    pub max_in_flight: u64,
     /// Host wall-clock of the engine run (validation through summary),
     /// milliseconds. The only non-deterministic field: it measures the
     /// simulator, not the simulated system, and varies run to run.
@@ -248,10 +296,72 @@ fn percentile(sorted: &[u64], q: f64) -> u64 {
     sorted[idx]
 }
 
-fn admit(reqs: &[Request], queue: &mut Vec<usize>, next: &mut usize, t: u64) {
-    while *next < reqs.len() && reqs[*next].arrival <= t {
-        queue.push(*next);
-        *next += 1;
+/// Move every pending request released by time `t` into the queue,
+/// keeping the queue (arrival, index)-sorted. `pending` is (release,
+/// index)-sorted, so open-loop admission appends in order; closed-loop
+/// successor releases can interleave below already-queued arrivals
+/// (a fast cluster's completion releases work "into the past" of a
+/// slow cluster's queue), hence the sorted insert.
+fn admit(work: &[Request], pending: &mut Vec<(u64, usize)>, queue: &mut Vec<usize>, t: u64) {
+    let mut taken = 0;
+    while taken < pending.len() && pending[taken].0 <= t {
+        let (rel, i) = pending[taken];
+        let at = queue.partition_point(|&j| (work[j].arrival, j) < (rel, i));
+        queue.insert(at, i);
+        taken += 1;
+    }
+    pending.drain(..taken);
+}
+
+/// Closed-loop bookkeeping for one handled (dispatched or shed)
+/// request: release its successor `width` positions later — the next
+/// request of the same simulated client — at the later of the
+/// successor's open-loop arrival and `at` (the completion or shed
+/// instant). No-op in open-loop mode.
+fn release_successor(
+    work: &mut [Request],
+    pending: &mut Vec<(u64, usize)>,
+    orig: &[Request],
+    width: Option<usize>,
+    done: usize,
+    at: u64,
+) {
+    let w = match width {
+        Some(w) => w,
+        None => return,
+    };
+    let succ = done + w;
+    if succ >= work.len() {
+        return;
+    }
+    let rel = orig[succ].arrival.max(at);
+    work[succ].arrival = rel;
+    let slot = pending.partition_point(|&(r0, i0)| (r0, i0) < (rel, succ));
+    pending.insert(slot, (rel, succ));
+}
+
+/// A shed request's outcome: it "completes" instantly at the shed
+/// instant with no upload, no compute, and no result.
+fn shed_outcome(r: &Request, now: u64, cluster: usize) -> RequestOutcome {
+    RequestOutcome {
+        id: r.id,
+        tenant: r.tenant,
+        kernel: r.kernel,
+        matrix: r.matrix,
+        arrival: r.arrival,
+        start: now,
+        queue_cycles: now - r.arrival,
+        upload_cycles: 0,
+        stage_cycles: 0,
+        compute_cycles: 0,
+        finish: now,
+        latency: now - r.arrival,
+        cluster,
+        batch_size: 0,
+        cache_hit: false,
+        shed: true,
+        energy_j: 0.0,
+        result: None,
     }
 }
 
@@ -264,6 +374,29 @@ pub fn run_serve(
     cfg: &ServeCfg,
     corpus: &[ServeMatrix],
     reqs: &[Request],
+) -> Result<ServeOutcome, String> {
+    run_serve_chaos(cfg, corpus, reqs, &[])
+}
+
+/// Serve a generated [`Stream`] — its requests plus its churn
+/// schedule. Each [`ChurnEvent`] replays as operand-cache
+/// invalidations on every cluster at its simulated instant: the
+/// departed tenant's images are reclaimed (counted as forced
+/// evictions), so a successor tenant touching the same matrices
+/// re-uploads.
+pub fn run_serve_stream(
+    cfg: &ServeCfg,
+    corpus: &[ServeMatrix],
+    stream: &Stream,
+) -> Result<ServeOutcome, String> {
+    run_serve_chaos(cfg, corpus, &stream.reqs, &stream.churn)
+}
+
+fn run_serve_chaos(
+    cfg: &ServeCfg,
+    corpus: &[ServeMatrix],
+    reqs: &[Request],
+    churn: &[ChurnEvent],
 ) -> Result<ServeOutcome, String> {
     let wall_t0 = std::time::Instant::now();
     validate_stream(reqs, corpus, cfg.variant, cfg.iw, cfg.sys.clusters, cfg.batch.window > 0)?;
@@ -308,8 +441,29 @@ pub fn run_serve(
     let mut caches: Vec<OperandCache> =
         (0..k).map(|_| OperandCache::new(cfg.sys.shard_bytes as u64)).collect();
     let mut cl_stats = vec![ClusterServeStats::default(); k];
+    // In closed-loop mode a request's effective arrival is its release
+    // time, which depends on earlier completions: `work` carries the
+    // rewritten arrivals the scheduler, batcher, and latency accounting
+    // see, while `reqs` keeps the original open-loop instants (the
+    // earliest a client would issue). Open-loop: `work == reqs`.
+    let mut work: Vec<Request> = reqs.to_vec();
+    // (release, index) of not-yet-queued requests, kept sorted.
+    // Open loop: every request, released at its arrival. Closed loop:
+    // the first clients*W requests; each handled index i releases its
+    // successor i + clients*W (see `release_successor`).
+    let closed_width = cfg.closed.map(|cl| cl.clients * cl.per_client);
+    let mut pending: Vec<(u64, usize)> = match closed_width {
+        None => work.iter().enumerate().map(|(i, r)| (r.arrival, i)).collect(),
+        Some(w) => (0..w.min(work.len())).map(|i| (work[i].arrival, i)).collect(),
+    };
     let mut queue: Vec<usize> = vec![];
-    let mut next = 0usize;
+    let mut churn_ix = 0usize;
+    let ntenants = reqs.iter().map(|r| r.tenant + 1).max().unwrap_or(0);
+    let mut slo: Option<SloTracker> = cfg.slo.clone().map(|s| SloTracker::new(s, ntenants));
+    // (finish, tenant, latency) of served dispatches not yet folded
+    // into the SLO tracker's trailing windows — folded in simulated-
+    // completion order at each dispatch instant
+    let mut completions: BinaryHeap<Reverse<(u64, usize, u64)>> = BinaryHeap::new();
     let mut outcomes: Vec<Option<RequestOutcome>> = reqs.iter().map(|_| None).collect();
     let mut memo: HashMap<(usize, &'static str, u64, usize), MemoVal> = HashMap::new();
     let mut pipe_memo: HashMap<(&'static str, usize, u64), PipeMemo> = HashMap::new();
@@ -318,21 +472,83 @@ pub fn run_serve(
         // earliest-free cluster (ties in index order)
         let c = (0..k).min_by_key(|&i| (free_at[i], i)).unwrap();
         let tfree = free_at[c];
-        admit(reqs, &mut queue, &mut next, tfree);
+        admit(&work, &mut pending, &mut queue, tfree);
         let now = match queue.first() {
-            Some(&h) => tfree.max(reqs[h].arrival),
-            None if next < reqs.len() => tfree.max(reqs[next].arrival),
-            None => break,
+            Some(&h) => tfree.max(work[h].arrival),
+            None => match pending.first() {
+                Some(&(rel, _)) => tfree.max(rel),
+                None => break,
+            },
         };
-        admit(reqs, &mut queue, &mut next, now);
+        admit(&work, &mut pending, &mut queue, now);
+        // Replay churn up to the dispatch instant: the departed
+        // tenant's operand images are invalidated on every cluster.
+        // `now` is not monotone across iterations (a faster cluster's
+        // instant can trail a slower one's), but each event fires
+        // exactly once, in schedule order — deterministically.
+        while churn_ix < churn.len() && churn[churn_ix].at <= now {
+            for &mx in &churn[churn_ix].matrices {
+                for cache in caches.iter_mut() {
+                    cache.invalidate_matrix(mx);
+                }
+            }
+            churn_ix += 1;
+        }
         // the queue is arrival-ordered: the eligible set is a prefix
-        let eligible = queue.iter().take_while(|&&i| reqs[i].arrival <= now).count();
+        let eligible = queue.iter().take_while(|&&i| work[i].arrival <= now).count();
         debug_assert!(eligible >= 1);
-        let pos = cfg.policy.pick(&queue[..eligible], reqs, corpus, &caches[c]);
-        let members = batch::collect(&queue[..eligible], pos, reqs, &cfg.batch);
+        // ---- SLO admission control ---------------------------------
+        let mut elig: Vec<usize> = queue[..eligible].to_vec();
+        if let Some(tr) = slo.as_mut() {
+            // fold completions up to this instant into the windows
+            loop {
+                match completions.peek() {
+                    Some(&Reverse((f, ten, lat))) if f <= now => {
+                        tr.record(ten, lat);
+                        completions.pop();
+                    }
+                    _ => break,
+                }
+            }
+            match tr.cfg().action {
+                SloAction::Shed => {
+                    let drop: Vec<usize> =
+                        elig.iter().copied().filter(|&i| tr.over_budget(work[i].tenant)).collect();
+                    if !drop.is_empty() {
+                        for &i in &drop {
+                            outcomes[i] = Some(shed_outcome(&work[i], now, c));
+                            release_successor(
+                                &mut work,
+                                &mut pending,
+                                reqs,
+                                closed_width,
+                                i,
+                                now,
+                            );
+                        }
+                        queue.retain(|i| !drop.contains(i));
+                        continue;
+                    }
+                }
+                SloAction::Deprioritize => {
+                    let keep: Vec<usize> = elig
+                        .iter()
+                        .copied()
+                        .filter(|&i| !tr.over_budget(work[i].tenant))
+                        .collect();
+                    // every eligible tenant over budget: dispatch
+                    // normally rather than deadlock
+                    if !keep.is_empty() {
+                        elig = keep;
+                    }
+                }
+            }
+        }
+        let pos = cfg.policy.pick(&elig, &work, corpus, &caches[c]);
+        let members = batch::collect(&elig, pos, &work, &cfg.batch);
         queue.retain(|i| !members.contains(i));
 
-        let head = &reqs[members[0]];
+        let head = &work[members[0]];
         let m = &corpus[head.matrix].matrix;
         let cols = members.len();
 
@@ -450,7 +666,7 @@ pub fn run_serve(
                     "smxdv" => members
                         .iter()
                         .fold(0xcbf29ce484222325u64, |h, &i| {
-                            (h ^ reqs[i].opseed).wrapping_mul(0x100000001b3)
+                            (h ^ work[i].opseed).wrapping_mul(0x100000001b3)
                         }),
                     "smxsv" => head.opseed,
                     _ => 0,
@@ -469,7 +685,7 @@ pub fn run_serve(
                         "smxdv" if cols > 1 => {
                             let vecs: Vec<Vec<f64>> = members
                                 .iter()
-                                .map(|&i| matgen::random_dense(reqs[i].opseed, m.ncols))
+                                .map(|&i| matgen::random_dense(work[i].opseed, m.ncols))
                                 .collect();
                             let refs: Vec<&[f64]> = vecs.iter().map(|v| v.as_slice()).collect();
                             let d = batch::interleave(&refs);
@@ -527,8 +743,11 @@ pub fn run_serve(
         let moved = uploaded + image_bytes + operand_bytes;
         let total_j = kernel_j + em.pj_dma_byte * moved as f64 * 1e-12;
         for (j, (&i, result)) in members.iter().zip(results).enumerate() {
-            let r = &reqs[i];
+            let r = &work[i];
             debug_assert_eq!(j == 0, i == members[0]);
+            if slo.is_some() {
+                completions.push(Reverse((finish, r.tenant, finish - r.arrival)));
+            }
             outcomes[i] = Some(RequestOutcome {
                 id: r.id,
                 tenant: r.tenant,
@@ -545,9 +764,15 @@ pub fn run_serve(
                 cluster: c,
                 batch_size: cols,
                 cache_hit: hit,
+                shed: false,
                 energy_j: total_j / cols as f64,
                 result,
             });
+        }
+        // each served request releases its client's next one (closed
+        // loop) at the batch's completion instant
+        for &i in &members {
+            release_successor(&mut work, &mut pending, reqs, closed_width, i, finish);
         }
         let st = &mut cl_stats[c];
         st.dispatches += 1;
@@ -576,6 +801,28 @@ pub fn run_serve(
         st.cache = cache.stats;
     }
     let mut summary = summarize(&requests, &cl_stats, corpus);
+    if let Some(s) = &cfg.slo {
+        summary.slo_violations = requests
+            .iter()
+            .filter(|r| !r.shed)
+            .filter(|r| matches!(s.budget(r.tenant), Some(b) if r.latency > b))
+            .count() as u64;
+    }
+    // peak in-flight: +1 at each release instant, -1 at each finish,
+    // finishes applied first at equal instants (a completion and the
+    // successor it releases never overlap)
+    let mut events: Vec<(u64, i64)> = Vec::with_capacity(2 * requests.len());
+    for r in &requests {
+        events.push((r.arrival, 1));
+        events.push((r.finish, -1));
+    }
+    events.sort_unstable();
+    let (mut cur, mut peak) = (0i64, 0i64);
+    for (_, d) in events {
+        cur += d;
+        peak = peak.max(cur);
+    }
+    summary.max_in_flight = peak.max(0) as u64;
     // Host wall-clock stamps are the one non-simulated pair of fields:
     // summarize() stays a pure function of the outcomes, the timing is
     // applied here where the engine loop actually ran.
@@ -597,15 +844,21 @@ fn summarize(
     if n == 0 {
         return ServeSummary::default();
     }
+    // latency percentiles, means, and throughput cover served requests
+    // only — a shed request has no service to measure; it shows up in
+    // `shed_requests` (and its client's closed-loop pacing) instead
+    let served: Vec<&RequestOutcome> = requests.iter().filter(|r| !r.shed).collect();
+    let shed_requests = (n - served.len()) as u64;
+    let ns = served.len().max(1);
     let makespan = requests.iter().map(|r| r.finish).max().unwrap().max(1);
-    let mut lats: Vec<u64> = requests.iter().map(|r| r.latency).collect();
+    let mut lats: Vec<u64> = served.iter().map(|r| r.latency).collect();
     lats.sort_unstable();
-    let mean_of = |xs: Vec<u64>| xs.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
-    let mean_latency = mean_of(requests.iter().map(|r| r.latency).collect());
-    let mean_queue = mean_of(requests.iter().map(|r| r.queue_cycles).collect());
-    let mean_upload = mean_of(requests.iter().map(|r| r.upload_cycles).collect());
-    let mean_compute = mean_of(requests.iter().map(|r| r.compute_cycles).collect());
-    let work: u64 = requests.iter().map(|r| corpus[r.matrix].matrix.nnz() as u64).sum();
+    let mean_of = |xs: Vec<u64>| xs.iter().map(|&x| x as f64).sum::<f64>() / ns as f64;
+    let mean_latency = mean_of(served.iter().map(|r| r.latency).collect());
+    let mean_queue = mean_of(served.iter().map(|r| r.queue_cycles).collect());
+    let mean_upload = mean_of(served.iter().map(|r| r.upload_cycles).collect());
+    let mean_compute = mean_of(served.iter().map(|r| r.compute_cycles).collect());
+    let work: u64 = served.iter().map(|r| corpus[r.matrix].matrix.nnz() as u64).sum();
     let busy: u64 = clusters.iter().map(|c| c.busy_cycles).sum();
     let dispatches: u64 = clusters.iter().map(|c| c.dispatches).sum();
     let batches: u64 = clusters.iter().map(|c| c.batches).sum();
@@ -613,7 +866,7 @@ fn summarize(
     let misses: u64 = clusters.iter().map(|c| c.cache.misses).sum();
     let upload_bytes: u64 = clusters.iter().map(|c| c.cache.upload_bytes).sum();
     let staged_bytes: u64 = clusters.iter().map(|c| c.staged_bytes).sum();
-    let batched_requests = requests.iter().filter(|r| r.batch_size > 1).count() as u64;
+    let batched_requests = served.iter().filter(|r| r.batch_size > 1).count() as u64;
     ServeSummary {
         requests: n,
         dispatches,
@@ -634,8 +887,13 @@ fn summarize(
         staged_bytes,
         batches,
         batched_requests,
-        avg_batch: n as f64 / dispatches.max(1) as f64,
+        avg_batch: served.len() as f64 / dispatches.max(1) as f64,
         energy_j: requests.iter().map(|r| r.energy_j).sum(),
+        shed_requests,
+        // filled by the caller, which knows the SLO budgets and the
+        // release schedule — see run_serve_chaos
+        slo_violations: 0,
+        max_in_flight: 0,
         // filled by the caller from its own clock — see run_serve
         wall_ms: 0.0,
         wall_us_per_request: 0.0,
@@ -819,6 +1077,111 @@ mod tests {
         };
         let err = run_serve(&ServeCfg::new(1, 1), &corpus, &[mk(0, 10), mk(1, 5)]).unwrap_err();
         assert!(err.contains("arrival-sorted"), "{err}");
+    }
+
+    #[test]
+    fn shed_requests_complete_instantly_and_are_counted() {
+        // overload one cluster so every tenant's trailing p99 blows a
+        // tiny uniform budget: once the windows warm up, admission
+        // control must shed
+        let (corpus, reqs) = small_stream(32, 300.0);
+        let tenants = reqs.iter().map(|r| r.tenant + 1).max().unwrap();
+        let mut slo = SloCfg::uniform(tenants, 5_000);
+        slo.min_samples = 4;
+        let cfg = ServeCfg::new(1, 1).slo(slo);
+        let a = run_serve(&cfg, &corpus, &reqs).unwrap();
+        let b = run_serve(&cfg, &corpus, &reqs).unwrap();
+        assert_eq!(a.requests, b.requests, "shedding must be deterministic");
+        assert!(a.summary.shed_requests > 0, "overload with a 5k budget must shed");
+        assert!(a.summary.shed_requests < reqs.len() as u64, "warm-up requests are served");
+        let shed: Vec<_> = a.requests.iter().filter(|r| r.shed).collect();
+        assert_eq!(shed.len() as u64, a.summary.shed_requests);
+        for r in &shed {
+            assert_eq!(r.finish, r.start, "a shed request never occupies a cluster");
+            assert_eq!(r.batch_size, 0);
+            assert_eq!(r.compute_cycles, 0);
+            assert_eq!(r.energy_j, 0.0);
+            assert!(r.result.is_none());
+        }
+        // violations count served requests only — shed ones never do
+        assert!(a.summary.slo_violations > 0);
+        assert!(a.summary.slo_violations <= reqs.len() as u64 - a.summary.shed_requests);
+    }
+
+    #[test]
+    fn deprioritize_serves_everything_but_reorders() {
+        let (corpus, reqs) = small_stream(24, 500.0);
+        let tenants = reqs.iter().map(|r| r.tenant + 1).max().unwrap();
+        let mut slo = SloCfg::uniform(tenants, 5_000).action(SloAction::Deprioritize);
+        slo.min_samples = 4;
+        let cfg = ServeCfg::new(1, 1).slo(slo);
+        let out = run_serve(&cfg, &corpus, &reqs).unwrap();
+        // deprioritization never drops: all requests served
+        assert_eq!(out.summary.shed_requests, 0);
+        assert_eq!(out.requests.len(), reqs.len());
+        assert!(out.requests.iter().all(|r| !r.shed));
+    }
+
+    #[test]
+    fn closed_loop_bounds_in_flight() {
+        let (corpus, reqs) = small_stream(32, 300.0);
+        let open = run_serve(&ServeCfg::new(2, 1), &corpus, &reqs).unwrap();
+        let ccfg = ServeCfg::new(2, 1).closed_loop(3, 2);
+        let a = run_serve(&ccfg, &corpus, &reqs).unwrap();
+        let b = run_serve(&ccfg, &corpus, &reqs).unwrap();
+        assert_eq!(a.requests, b.requests, "closed-loop runs must be deterministic");
+        assert!(a.summary.max_in_flight >= 1);
+        assert!(
+            a.summary.max_in_flight <= 6,
+            "3 clients x 2 outstanding must bound in-flight, got {}",
+            a.summary.max_in_flight
+        );
+        assert!(
+            open.summary.max_in_flight > a.summary.max_in_flight,
+            "open-loop overload must exceed the closed-loop bound ({} vs {})",
+            open.summary.max_in_flight,
+            a.summary.max_in_flight
+        );
+        // every request is still served exactly once, released no
+        // earlier than its open-loop arrival
+        assert_eq!(a.requests.len(), reqs.len());
+        for (r, orig) in a.requests.iter().zip(&reqs) {
+            assert!(!r.shed);
+            assert!(r.arrival >= orig.arrival, "release must not precede open-loop arrival");
+        }
+    }
+
+    #[test]
+    fn churn_invalidation_forces_reupload() {
+        let corpus = serve_corpus();
+        let reqs: Vec<Request> = (0..6)
+            .map(|id| Request {
+                id,
+                tenant: 0,
+                kernel: "smxdv",
+                matrix: 0,
+                arrival: 50_000 * id as u64,
+                opseed: 0xC0FFEE00 + id as u64,
+            })
+            .collect();
+        let stream = Stream {
+            reqs: reqs.clone(),
+            churn: vec![ChurnEvent { at: 125_000, tenant: 0, matrices: vec![0] }],
+        };
+        let cfg = ServeCfg::new(1, 1);
+        let with = run_serve_stream(&cfg, &corpus, &stream).unwrap();
+        let without = run_serve(&cfg, &corpus, &reqs).unwrap();
+        let inval: u64 = with.clusters.iter().map(|c| c.cache.invalidations).sum();
+        assert_eq!(inval, 1, "the one churn event must reclaim the one resident image");
+        assert!(with.summary.cache_hits < without.summary.cache_hits);
+        assert!(
+            with.summary.upload_bytes > without.summary.upload_bytes,
+            "an invalidated image must be re-uploaded"
+        );
+        // churn changes timing only, never results
+        for (a, b) in with.requests.iter().zip(&without.requests) {
+            assert_eq!(a.result, b.result, "request {}", a.id);
+        }
     }
 
     #[test]

@@ -36,30 +36,53 @@
 //! - [`sched`] — pluggable dispatch policies: FIFO, nnz-estimated
 //!   shortest-job-first, and cache-affinity routing to the cluster
 //!   already holding the operand image;
+//! - [`slo`] — per-tenant SLO specs (p99 cycle budgets over a trailing
+//!   completion window) and the admission-control state the engine
+//!   consults at dispatch instants to shed or deprioritize over-budget
+//!   tenants;
 //! - [`engine`] — the discrete-event loop: per-request latency
 //!   breakdowns (queue + upload + stage + compute), p50/p95/p99
 //!   latency in cycles, throughput in matrix nonzeros per cycle,
-//!   per-cluster utilization, cache hit rates, and per-request energy
-//!   via [`crate::model::energy::EnergyModel`].
+//!   per-cluster utilization, cache hit rates, shed/violation
+//!   counters, and per-request energy via
+//!   [`crate::model::energy::EnergyModel`].
+//!
+//! Beyond the steady open-loop exponential stream, [`workload`] builds
+//! adversarial arrival processes — a two-state MMPP burst model, a
+//! seeded tenant-churn schedule whose departures replay as operand-
+//! cache invalidations ([`workload::ChurnEvent`]), hot-set rotation,
+//! and a same-matrix flood — packaged behind the named
+//! [`workload::Scenario`] table (`steady` / `burst` / `churn` /
+//! `rotate` / `flood` / `closed`). The engine can also run
+//! *closed-loop* ([`engine::ClosedLoop`]): each simulated client holds
+//! at most W requests outstanding and issues the next on completion,
+//! bounding in-flight work instead of letting queues grow.
 //!
 //! The `serve` experiment sweep ([`crate::harness::spec_serve`]) grids
 //! policy × clusters × arrival rate × batch window × cache on/off
 //! through the parallel [`crate::experiments::Runner`] (each grid point
 //! is one single-threaded engine run seeded from its coordinates, so
-//! `BENCH_serve.json` is `--jobs`-invariant), and the `repro serve`
-//! CLI drives one configuration interactively.
+//! `BENCH_serve.json` is `--jobs`-invariant); the `chaos` sweep
+//! ([`crate::harness::spec_chaos`]) grids scenario × policy × cache
+//! into `BENCH_chaos.json`; and the `repro serve` CLI drives one
+//! configuration interactively (`--scenario`, `--closed-loop`).
 
 pub mod batch;
 pub mod cache;
 pub mod engine;
 pub mod sched;
+pub mod slo;
 pub mod workload;
 
 pub use batch::BatchCfg;
 pub use cache::{CacheStats, Form, OperandCache};
-pub use engine::{run_serve, RequestOutcome, ServeCfg, ServeOutcome, ServeSummary, SYS_PROMOTE_NNZ};
+pub use engine::{
+    run_serve, run_serve_stream, ClosedLoop, RequestOutcome, ServeCfg, ServeOutcome, ServeSummary,
+    SYS_PROMOTE_NNZ,
+};
 pub use sched::Policy;
+pub use slo::{SloAction, SloCfg, SloTracker};
 pub use workload::{
-    gen_stream, pipeline_steps, serve_corpus, validate_stream, Request, ServeMatrix, StreamCfg,
-    TenantSpec,
+    gen_stream, gen_stream_ex, pipeline_steps, serve_corpus, validate_stream, BurstCfg, ChurnCfg,
+    ChurnEvent, Request, Scenario, ServeMatrix, Stream, StreamCfg, TenantSpec,
 };

@@ -1,0 +1,225 @@
+//! Per-tenant SLOs and admission control.
+//!
+//! A serving system for real traffic cannot let one misbehaving tenant
+//! drown everyone else: the engine needs a notion of *how slow is too
+//! slow* per tenant, and a deterministic rule for what to do about the
+//! tenant that exceeds it. This module supplies both:
+//!
+//! - [`SloCfg`] — per-tenant p99 cycle budgets plus the trailing-window
+//!   and action parameters of the admission controller;
+//! - [`SloTracker`] — the runtime state the engine feeds completed
+//!   request latencies into (in simulated-completion order), answering
+//!   "is this tenant currently over budget?" from the nearest-rank p99
+//!   of its trailing window.
+//!
+//! Admission control is evaluated at dispatch instants, on simulated
+//! time only, so an engine run with SLOs stays a pure function of its
+//! seeds: the same stream always sheds the same requests. Two actions
+//! exist ([`SloAction`]): `Shed` drops eligible requests of over-budget
+//! tenants outright (they complete instantly with no compute and no
+//! result — the summary's `shed_requests` counter), while
+//! `Deprioritize` keeps them queued but invisible to the dispatch
+//! policy until every eligible tenant is over budget.
+
+/// What the engine does with eligible requests of an over-budget tenant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloAction {
+    /// Drop the request at the dispatch instant: no upload, no compute,
+    /// no result; it completes immediately and counts as shed.
+    Shed,
+    /// Keep the request queued but let every within-budget tenant's
+    /// requests dispatch first; falls back to normal dispatch when all
+    /// eligible tenants are over budget (never deadlocks).
+    Deprioritize,
+}
+
+impl SloAction {
+    pub fn name(self) -> &'static str {
+        match self {
+            SloAction::Shed => "shed",
+            SloAction::Deprioritize => "deprioritize",
+        }
+    }
+}
+
+/// Per-tenant SLO specification for one engine run.
+#[derive(Clone, Debug)]
+pub struct SloCfg {
+    /// p99 simulated-cycle budget per tenant index; `None` exempts the
+    /// tenant from admission control (its completions still count
+    /// toward nothing). Tenants beyond the vector are exempt too.
+    pub budgets: Vec<Option<u64>>,
+    /// Trailing completed-request window the p99 is computed over.
+    pub window: usize,
+    /// Completions a tenant must have before admission control may act
+    /// on it (a cold tenant is never judged on one slow request).
+    pub min_samples: usize,
+    pub action: SloAction,
+}
+
+impl SloCfg {
+    /// One shared budget for every one of `tenants` tenants.
+    pub fn uniform(tenants: usize, budget: u64) -> SloCfg {
+        SloCfg {
+            budgets: vec![Some(budget); tenants],
+            window: 32,
+            min_samples: 8,
+            action: SloAction::Shed,
+        }
+    }
+
+    /// The flood-scenario controller: the flood tenant (index 0) gets a
+    /// tight budget it will blow through under overload, every other
+    /// tenant a generous one — so the floods absorb all the shedding
+    /// while the background mix keeps being served within budget.
+    pub fn flood_default(tenants: usize) -> SloCfg {
+        let mut budgets = vec![Some(20_000_000u64); tenants];
+        if !budgets.is_empty() {
+            budgets[0] = Some(250_000);
+        }
+        SloCfg { budgets, window: 16, min_samples: 8, action: SloAction::Shed }
+    }
+
+    pub fn action(mut self, a: SloAction) -> SloCfg {
+        self.action = a;
+        self
+    }
+
+    /// The budget of `tenant`, if it is under admission control.
+    pub fn budget(&self, tenant: usize) -> Option<u64> {
+        self.budgets.get(tenant).copied().flatten()
+    }
+}
+
+/// Trailing-window latency state of one engine run, fed by the engine
+/// in simulated-completion order.
+pub struct SloTracker {
+    cfg: SloCfg,
+    /// Ring buffer of the last `cfg.window` completed latencies per
+    /// tenant, plus the total completion count (ring write position).
+    rings: Vec<(Vec<u64>, usize)>,
+}
+
+impl SloTracker {
+    pub fn new(cfg: SloCfg, tenants: usize) -> SloTracker {
+        SloTracker { cfg, rings: (0..tenants).map(|_| (vec![], 0)).collect() }
+    }
+
+    pub fn cfg(&self) -> &SloCfg {
+        &self.cfg
+    }
+
+    /// Record one completed (served, not shed) request latency.
+    pub fn record(&mut self, tenant: usize, latency: u64) {
+        let w = self.cfg.window.max(1);
+        let (ring, count) = &mut self.rings[tenant];
+        if ring.len() < w {
+            ring.push(latency);
+        } else {
+            ring[*count % w] = latency;
+        }
+        *count += 1;
+    }
+
+    /// Nearest-rank p99 of the tenant's trailing window, or `None`
+    /// before [`SloCfg::min_samples`] completions.
+    pub fn trailing_p99(&self, tenant: usize) -> Option<u64> {
+        let (ring, count) = self.rings.get(tenant)?;
+        if *count < self.cfg.min_samples.max(1) {
+            return None;
+        }
+        let mut xs = ring.clone();
+        xs.sort_unstable();
+        let idx = ((0.99 * xs.len() as f64).ceil() as usize).clamp(1, xs.len()) - 1;
+        Some(xs[idx])
+    }
+
+    /// Whether admission control currently acts on `tenant`: it has a
+    /// budget, enough completions, and a trailing p99 over that budget.
+    pub fn over_budget(&self, tenant: usize) -> bool {
+        match (self.cfg.budget(tenant), self.trailing_p99(tenant)) {
+            (Some(budget), Some(p99)) => p99 > budget,
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_needs_min_samples_before_acting() {
+        let mut t = SloTracker::new(
+            SloCfg { budgets: vec![Some(100)], window: 8, min_samples: 4, action: SloAction::Shed },
+            1,
+        );
+        for _ in 0..3 {
+            t.record(0, 1000);
+        }
+        assert_eq!(t.trailing_p99(0), None);
+        assert!(!t.over_budget(0));
+        t.record(0, 1000);
+        assert_eq!(t.trailing_p99(0), Some(1000));
+        assert!(t.over_budget(0));
+    }
+
+    #[test]
+    fn trailing_window_forgets_old_latencies() {
+        let mut t = SloTracker::new(
+            SloCfg { budgets: vec![Some(100)], window: 4, min_samples: 1, action: SloAction::Shed },
+            1,
+        );
+        for _ in 0..4 {
+            t.record(0, 500);
+        }
+        assert!(t.over_budget(0));
+        // four fast completions push every slow one out of the window
+        for _ in 0..4 {
+            t.record(0, 50);
+        }
+        assert_eq!(t.trailing_p99(0), Some(50));
+        assert!(!t.over_budget(0));
+    }
+
+    #[test]
+    fn exempt_tenants_are_never_over_budget() {
+        let cfg = SloCfg {
+            budgets: vec![None, Some(10)],
+            window: 4,
+            min_samples: 1,
+            action: SloAction::Deprioritize,
+        };
+        let mut t = SloTracker::new(cfg, 3);
+        t.record(0, 1_000_000);
+        t.record(1, 1_000_000);
+        t.record(2, 1_000_000); // beyond the budgets vector: exempt
+        assert!(!t.over_budget(0));
+        assert!(t.over_budget(1));
+        assert!(!t.over_budget(2));
+    }
+
+    #[test]
+    fn p99_is_nearest_rank_over_the_ring() {
+        let mut t = SloTracker::new(SloCfg::uniform(1, 90), 1);
+        for x in 1..=32u64 {
+            t.record(0, x);
+        }
+        // 32 samples: ceil(0.99*32)=32nd rank = the max
+        assert_eq!(t.trailing_p99(0), Some(32));
+        assert!(!t.over_budget(0));
+        t.record(0, 1000);
+        assert!(t.over_budget(0));
+    }
+
+    #[test]
+    fn flood_default_shapes_budgets() {
+        let c = SloCfg::flood_default(5);
+        assert_eq!(c.budget(0), Some(250_000));
+        for t in 1..5 {
+            assert_eq!(c.budget(t), Some(20_000_000));
+        }
+        assert_eq!(c.action, SloAction::Shed);
+        assert_eq!(c.budget(9), None);
+    }
+}

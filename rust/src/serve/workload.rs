@@ -91,6 +91,55 @@ pub struct TenantSpec {
     pub vec_pool: u32,
 }
 
+/// Two-state MMPP (Markov-modulated Poisson process) burst model: the
+/// arrival process alternates between a *calm* state using the stream's
+/// base [`StreamCfg::mean_gap`] and a *burst* state using the (much
+/// tighter) [`BurstCfg::burst_gap`], with exponentially distributed
+/// state dwell times. The state chain is advanced at arrival instants —
+/// a deterministic discrete approximation that keeps the whole stream a
+/// pure function of the seed.
+#[derive(Clone, Copy, Debug)]
+pub struct BurstCfg {
+    /// Mean inter-arrival gap in the burst state, in cycles.
+    pub burst_gap: f64,
+    /// Mean dwell time of the calm state, in cycles.
+    pub dwell_calm: f64,
+    /// Mean dwell time of the burst state, in cycles.
+    pub dwell_burst: f64,
+}
+
+/// Tenant churn: every `epoch` cycles one tenant departs (chosen
+/// round-robin from a seeded starting offset, so every tenant —
+/// including the hot one — eventually churns) and the previous
+/// departure rejoins. A departed tenant issues no requests for its
+/// epoch, and its cache footprint is invalidated by the engine when the
+/// departure's [`ChurnEvent`] passes.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnCfg {
+    /// Epoch length in cycles (one departure per epoch boundary).
+    pub epoch: u64,
+}
+
+/// One tenant departure of a churning stream: at cycle `at`, `tenant`
+/// leaves and its operand images (`matrices`) must be invalidated from
+/// every cluster's cache.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnEvent {
+    pub at: u64,
+    pub tenant: usize,
+    /// Corpus indices whose cached images the departure reclaims.
+    pub matrices: Vec<usize>,
+}
+
+/// A generated stream: the requests plus the churn-event schedule the
+/// engine replays against the operand caches ([`gen_stream_ex`]).
+#[derive(Clone, Debug)]
+pub struct Stream {
+    pub reqs: Vec<Request>,
+    /// Tenant departures, sorted by `at` (empty without [`ChurnCfg`]).
+    pub churn: Vec<ChurnEvent>,
+}
+
 /// An open-loop request stream description.
 #[derive(Clone, Debug)]
 pub struct StreamCfg {
@@ -99,20 +148,41 @@ pub struct StreamCfg {
     /// Mean inter-arrival gap in cycles (exponentially distributed).
     pub mean_gap: f64,
     pub tenants: Vec<TenantSpec>,
+    /// Two-state MMPP burst arrivals (None = plain exponential).
+    pub burst: Option<BurstCfg>,
+    /// Seeded tenant join/leave schedule (None = all tenants stay).
+    pub churn: Option<ChurnCfg>,
+    /// Hot-set rotation: tenant 0 cycles through its matrix list in
+    /// order, switching every K generated requests, instead of drawing
+    /// uniformly (None = uniform draws). Stresses LRU retention.
+    pub rotate_every: Option<usize>,
 }
 
 impl StreamCfg {
+    /// A plain open-loop stream over an explicit tenant mix (no bursts,
+    /// no churn, no rotation — the adversarial knobs default off).
+    pub fn open(seed: u64, requests: usize, mean_gap: f64, tenants: Vec<TenantSpec>) -> StreamCfg {
+        StreamCfg {
+            seed,
+            requests,
+            mean_gap,
+            tenants,
+            burst: None,
+            churn: None,
+            rotate_every: None,
+        }
+    }
     /// The canonical same-matrix-heavy mix over [`serve_corpus`]:
     /// `hot_pct` % of requests are `smxdv` against corpus entry 0, the
     /// rest spread over SpMV/SpMSpV on the cold matrices plus graph
     /// and CSF-tensor traffic.
     pub fn same_matrix_heavy(seed: u64, requests: usize, mean_gap: f64, hot_pct: u32) -> StreamCfg {
         assert!(hot_pct <= 90, "leave room for the background tenants");
-        StreamCfg {
+        StreamCfg::open(
             seed,
             requests,
             mean_gap,
-            tenants: vec![
+            vec![
                 TenantSpec {
                     name: "hot",
                     kernel: "smxdv",
@@ -150,7 +220,7 @@ impl StreamCfg {
                     vec_pool: 1,
                 },
             ],
-        }
+        )
     }
 
     /// A pipeline-heavy mix over [`serve_corpus`]: iterative kernel-DAG
@@ -159,11 +229,11 @@ impl StreamCfg {
     /// tenant. Pipeline tenants only query square corpus entries — the
     /// apps' operand contract.
     pub fn pipeline_mix(seed: u64, requests: usize, mean_gap: f64) -> StreamCfg {
-        StreamCfg {
+        StreamCfg::open(
             seed,
             requests,
             mean_gap,
-            tenants: vec![
+            vec![
                 TenantSpec {
                     name: "pagerank",
                     kernel: "pipeline_pagerank",
@@ -193,7 +263,110 @@ impl StreamCfg {
                     vec_pool: 4,
                 },
             ],
+        )
+    }
+}
+
+/// The named adversarial-scenario table (`repro serve --scenario`, the
+/// `chaos` sweep): each scenario is a deterministic recipe turning a
+/// (seed, request count, base gap) triple into a [`StreamCfg`] plus the
+/// engine modes it exercises by default. `steady` is the PR 5 baseline;
+/// the rest stress a specific mechanism — MMPP bursts the queue, churn
+/// the cache, rotation the LRU order, the flood the batching window and
+/// SLO admission control, and `closed` swaps open-loop arrivals for
+/// completion-driven clients.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// The canonical same-matrix-heavy open-loop stream (baseline).
+    Steady,
+    /// Two-state MMPP arrivals: calm stretches with 8x-tighter bursts.
+    Burst,
+    /// Tenant churn: one departure per epoch, cache footprint
+    /// invalidated on each leave.
+    Churn,
+    /// Hot-set rotation: the hot tenant cycles its matrix every K
+    /// requests, so no single image stays LRU-warm.
+    Rotate,
+    /// Skewed same-matrix flood: one tenant dominates arrivals at twice
+    /// the base rate. Runs with SLO admission control by default.
+    Flood,
+    /// Closed-loop: each simulated client holds at most W outstanding
+    /// requests and issues the next on completion.
+    Closed,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 6] = [
+        Scenario::Steady,
+        Scenario::Burst,
+        Scenario::Churn,
+        Scenario::Rotate,
+        Scenario::Flood,
+        Scenario::Closed,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Steady => "steady",
+            Scenario::Burst => "burst",
+            Scenario::Churn => "churn",
+            Scenario::Rotate => "rotate",
+            Scenario::Flood => "flood",
+            Scenario::Closed => "closed",
         }
+    }
+
+    pub fn parse(s: &str) -> Option<Scenario> {
+        Scenario::ALL.into_iter().find(|sc| sc.name() == s)
+    }
+
+    /// Build this scenario's stream at `seed`/`requests` over a base
+    /// mean gap of `mean_gap` cycles.
+    pub fn stream(self, seed: u64, requests: usize, mean_gap: f64) -> StreamCfg {
+        match self {
+            Scenario::Steady | Scenario::Closed => {
+                StreamCfg::same_matrix_heavy(seed, requests, mean_gap, 70)
+            }
+            Scenario::Burst => {
+                let mut cfg = StreamCfg::same_matrix_heavy(seed, requests, mean_gap, 70);
+                cfg.burst = Some(BurstCfg {
+                    burst_gap: mean_gap / 8.0,
+                    dwell_calm: mean_gap * 24.0,
+                    dwell_burst: mean_gap * 8.0,
+                });
+                cfg
+            }
+            Scenario::Churn => {
+                let mut cfg = StreamCfg::same_matrix_heavy(seed, requests, mean_gap, 70);
+                // ~one departure per 8 mean arrivals: several full
+                // round-robin churn cycles inside even a quick stream
+                cfg.churn = Some(ChurnCfg { epoch: ((mean_gap * 8.0) as u64).max(1) });
+                cfg
+            }
+            Scenario::Rotate => {
+                let mut cfg = StreamCfg::same_matrix_heavy(seed, requests, mean_gap, 70);
+                // the "hot" tenant now walks the whole non-graph corpus
+                cfg.tenants[0].matrices = vec![0, 1, 2, 3];
+                cfg.rotate_every = Some(8);
+                cfg
+            }
+            Scenario::Flood => StreamCfg::same_matrix_heavy(seed, requests, mean_gap / 2.0, 85),
+        }
+    }
+
+    /// `(clients, per-client outstanding window W)` for scenarios that
+    /// run closed-loop.
+    pub fn closed_clients(self) -> Option<(usize, usize)> {
+        match self {
+            Scenario::Closed => Some((6, 2)),
+            _ => None,
+        }
+    }
+
+    /// Whether the scenario enables SLO admission control by default
+    /// (the flood: its tenant 0 is the one meant to blow the budget).
+    pub fn slo_default(self) -> bool {
+        matches!(self, Scenario::Flood)
     }
 }
 
@@ -211,10 +384,34 @@ pub struct Request {
 }
 
 /// Generate the request stream of `cfg`: arrival cycles are the running
-/// sum of seeded exponential gaps; tenant, matrix, and operand-pool
+/// sum of seeded exponential gaps (modulated by the MMPP burst state
+/// when [`StreamCfg::burst`] is set); tenant, matrix, and operand-pool
 /// slot draws all come from the same [`Pcg`]. Arrivals are
-/// nondecreasing.
+/// nondecreasing. Convenience wrapper over [`gen_stream_ex`] that drops
+/// the churn-event schedule.
 pub fn gen_stream(cfg: &StreamCfg, corpus: &[ServeMatrix]) -> Vec<Request> {
+    gen_stream_ex(cfg, corpus).reqs
+}
+
+/// Which tenant is departed during churn epoch `e` (epoch 0 has no
+/// departure). Round-robin from a seeded offset: deterministic, and
+/// every tenant — including the hot one — churns within `tenants`
+/// epochs.
+fn churned_tenant(seed: u64, e: u64, tenants: usize) -> Option<usize> {
+    if e == 0 {
+        return None;
+    }
+    Some(((seed % tenants as u64 + e) % tenants as u64) as usize)
+}
+
+/// Generate the full stream of `cfg`: the requests plus the tenant
+/// churn-event schedule the engine replays ([`Stream`]). Everything is
+/// a pure function of the config: the MMPP burst chain is advanced at
+/// arrival instants, churn departures fall on epoch boundaries
+/// (round-robin from a seeded offset; a departed tenant's draws shift
+/// to its successor for the epoch), and hot-set rotation walks tenant
+/// 0's matrix list every [`StreamCfg::rotate_every`] requests.
+pub fn gen_stream_ex(cfg: &StreamCfg, corpus: &[ServeMatrix]) -> Stream {
     // corpus is reserved for future density-aware generators; matrix
     // indices are data here and get checked by `validate_stream`
     // before anything is served
@@ -222,11 +419,29 @@ pub fn gen_stream(cfg: &StreamCfg, corpus: &[ServeMatrix]) -> Vec<Request> {
     assert!(!cfg.tenants.is_empty(), "a stream needs at least one tenant");
     let total_w: u64 = cfg.tenants.iter().map(|t| t.weight as u64).sum();
     assert!(total_w > 0, "tenant weights sum to zero");
+    let ntenants = cfg.tenants.len();
     let mut r = Pcg::new(cfg.seed);
     let mut t = 0.0f64;
+    // MMPP state chain: false = calm (base gap), true = burst
+    let mut bursting = false;
+    let mut switch_at = match &cfg.burst {
+        Some(b) => -b.dwell_calm * (1.0 - r.f64()).ln(),
+        None => f64::INFINITY,
+    };
     let mut out = Vec::with_capacity(cfg.requests);
     for id in 0..cfg.requests {
-        t += -cfg.mean_gap * (1.0 - r.f64()).ln();
+        if let Some(b) = &cfg.burst {
+            while t >= switch_at {
+                bursting = !bursting;
+                let dwell = if bursting { b.dwell_burst } else { b.dwell_calm };
+                switch_at += -dwell * (1.0 - r.f64()).ln();
+            }
+        }
+        let gap = match (&cfg.burst, bursting) {
+            (Some(b), true) => b.burst_gap,
+            _ => cfg.mean_gap,
+        };
+        t += -gap * (1.0 - r.f64()).ln();
         let mut w = r.below(total_w);
         let mut ti = 0usize;
         for (i, ten) in cfg.tenants.iter().enumerate() {
@@ -236,8 +451,20 @@ pub fn gen_stream(cfg: &StreamCfg, corpus: &[ServeMatrix]) -> Vec<Request> {
             }
             w -= ten.weight as u64;
         }
+        if let Some(ch) = &cfg.churn {
+            // the departed tenant of this epoch issues nothing: its
+            // draws shift to the next tenant (weights stay covered)
+            if churned_tenant(cfg.seed, t as u64 / ch.epoch, ntenants) == Some(ti) {
+                ti = (ti + 1) % ntenants;
+            }
+        }
         let ten = &cfg.tenants[ti];
-        let matrix = ten.matrices[r.below(ten.matrices.len() as u64) as usize];
+        let matrix = match (cfg.rotate_every, ti) {
+            // hot-set rotation: walk the matrix list in order, one
+            // switch every K stream requests
+            (Some(k), 0) => ten.matrices[(id / k.max(1)) % ten.matrices.len()],
+            _ => ten.matrices[r.below(ten.matrices.len() as u64) as usize],
+        };
         let slot = r.below(ten.vec_pool.max(1) as u64);
         // pool seeds are stream-seed-independent so the engine's
         // compute memo keys stay stable across arrival-rate sweeps
@@ -251,7 +478,19 @@ pub fn gen_stream(cfg: &StreamCfg, corpus: &[ServeMatrix]) -> Vec<Request> {
             opseed,
         });
     }
-    out
+    let mut churn = vec![];
+    if let Some(ch) = &cfg.churn {
+        let last = out.last().map(|r| r.arrival).unwrap_or(0);
+        for e in 1..=last / ch.epoch {
+            let tenant = churned_tenant(cfg.seed, e, ntenants).unwrap();
+            churn.push(ChurnEvent {
+                at: e * ch.epoch,
+                tenant,
+                matrices: cfg.tenants[tenant].matrices.clone(),
+            });
+        }
+    }
+    Stream { reqs: out, churn }
 }
 
 /// Validate a stream against the kernel registry's capability metadata
@@ -483,6 +722,124 @@ mod tests {
             opseed: 1,
         };
         assert!(validate_stream(&[pr], &corpus, Variant::Ssr, IdxWidth::U16, 1, false).is_err());
+    }
+
+    #[test]
+    fn scenario_table_parses_and_builds_admissible_streams() {
+        let corpus = serve_corpus();
+        for sc in Scenario::ALL {
+            assert_eq!(Scenario::parse(sc.name()), Some(sc));
+            let cfg = sc.stream(0xC4A05, 48, 1500.0);
+            let s = gen_stream_ex(&cfg, &corpus);
+            assert_eq!(s.reqs.len(), 48);
+            for w in s.reqs.windows(2) {
+                assert!(w[0].arrival <= w[1].arrival, "{}: arrivals regressed", sc.name());
+            }
+            validate_stream(&s.reqs, &corpus, Variant::Sssr, IdxWidth::U16, 2, true).unwrap();
+            // regenerating is bit-identical: the whole stream is a pure
+            // function of its config
+            let s2 = gen_stream_ex(&cfg, &corpus);
+            for (a, b) in s.reqs.iter().zip(&s2.reqs) {
+                assert_eq!(
+                    (a.id, a.tenant, a.kernel, a.matrix, a.arrival, a.opseed),
+                    (b.id, b.tenant, b.kernel, b.matrix, b.arrival, b.opseed)
+                );
+            }
+            assert_eq!(s.churn, s2.churn);
+        }
+        assert_eq!(Scenario::parse("mayhem"), None);
+        assert_eq!(Scenario::Closed.closed_clients(), Some((6, 2)));
+        assert!(Scenario::Flood.slo_default() && !Scenario::Steady.slo_default());
+    }
+
+    #[test]
+    fn burst_streams_have_tighter_tail_gaps() {
+        let corpus = serve_corpus();
+        let gaps = |cfg: &StreamCfg| -> Vec<u64> {
+            let reqs = gen_stream(cfg, &corpus);
+            reqs.windows(2).map(|w| w[1].arrival - w[0].arrival).collect()
+        };
+        let steady = gaps(&Scenario::Steady.stream(3, 256, 2000.0));
+        let burst = gaps(&Scenario::Burst.stream(3, 256, 2000.0));
+        let mean_of = |xs: &[u64]| xs.iter().sum::<u64>() as f64 / xs.len() as f64;
+        // most burst-stream arrivals land in 8x-tighter burst episodes,
+        // so the mean gap drops far below the calm process's
+        assert!(
+            mean_of(&burst) < 0.75 * mean_of(&steady),
+            "MMPP must compress gaps: burst mean {:.0} vs steady mean {:.0}",
+            mean_of(&burst),
+            mean_of(&steady)
+        );
+        // and bursts cluster: some window of 8 consecutive gaps is far
+        // below the base mean
+        let w8: u64 = burst.windows(8).map(|w| w.iter().sum::<u64>()).min().unwrap();
+        assert!(w8 < 8 * 1000, "no burst window found (tightest 8-gap span {w8})");
+    }
+
+    #[test]
+    fn churn_schedule_is_round_robin_and_silences_the_departed() {
+        let corpus = serve_corpus();
+        let cfg = Scenario::Churn.stream(0xC0, 200, 1000.0);
+        let ch = cfg.churn.unwrap();
+        let s = gen_stream_ex(&cfg, &corpus);
+        assert!(!s.churn.is_empty(), "a 200-request stream must span churn epochs");
+        for w in s.churn.windows(2) {
+            assert_eq!(w[1].at - w[0].at, ch.epoch, "one departure per epoch");
+            // round-robin: consecutive departures are consecutive tenants
+            assert_eq!(w[1].tenant, (w[0].tenant + 1) % cfg.tenants.len());
+        }
+        // every tenant churns within one round, including the hot one
+        let churned: Vec<usize> = s.churn.iter().map(|e| e.tenant).collect();
+        for t in 0..cfg.tenants.len().min(s.churn.len()) {
+            assert!(churned.contains(&t), "tenant {t} never churned");
+        }
+        // the departed tenant issues nothing during its epoch
+        for r in &s.reqs {
+            let e = r.arrival / ch.epoch;
+            assert_ne!(
+                churned_tenant(cfg.seed, e, cfg.tenants.len()),
+                Some(r.tenant),
+                "request {} issued by tenant {} during its departed epoch {e}",
+                r.id,
+                r.tenant
+            );
+        }
+        // events carry the departing tenant's matrix footprint
+        for ev in &s.churn {
+            assert_eq!(ev.matrices, cfg.tenants[ev.tenant].matrices);
+        }
+    }
+
+    #[test]
+    fn rotation_walks_the_hot_matrix_list() {
+        let corpus = serve_corpus();
+        let cfg = Scenario::Rotate.stream(0xD0, 120, 1000.0);
+        let k = cfg.rotate_every.unwrap();
+        let reqs = gen_stream(&cfg, &corpus);
+        let hot_mats: Vec<(usize, usize)> = reqs
+            .iter()
+            .filter(|r| r.tenant == 0)
+            .map(|r| (r.id, r.matrix))
+            .collect();
+        assert!(hot_mats.len() >= 40, "the hot tenant still dominates");
+        for (id, m) in &hot_mats {
+            assert_eq!(*m, cfg.tenants[0].matrices[(id / k) % cfg.tenants[0].matrices.len()]);
+        }
+        // the rotation actually visits more than one matrix
+        let distinct: std::collections::HashSet<usize> =
+            hot_mats.iter().map(|(_, m)| *m).collect();
+        assert!(distinct.len() >= 3, "rotation stuck on {distinct:?}");
+    }
+
+    #[test]
+    fn flood_stream_is_hot_dominated() {
+        let corpus = serve_corpus();
+        let cfg = Scenario::Flood.stream(0xF1, 200, 2000.0);
+        let reqs = gen_stream(&cfg, &corpus);
+        let hot = reqs.iter().filter(|r| r.tenant == 0).count();
+        assert!(hot * 100 >= 200 * 70, "flood share collapsed: {hot}/200");
+        // the flood halves the base gap: offered load doubles
+        assert!((cfg.mean_gap - 1000.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,16 +1,24 @@
-//! Serving-engine integration tests: determinism of the `serve` sweep
-//! records across `--jobs`, bit-identity of coalesced `smxdm` batches
-//! vs the per-request `smxdv` runs they replace, and the acceptance
-//! regression pinning that batching + cache-affinity beats unbatched
-//! FIFO on a same-matrix-heavy stream (the ordering `BENCH_serve.json`
-//! reports).
+//! Serving-engine integration tests: determinism of the `serve` and
+//! `chaos` sweep records across `--jobs`, bit-identity of coalesced
+//! `smxdm` batches vs the per-request `smxdv` runs they replace, the
+//! acceptance regressions pinning the scenario orderings
+//! `BENCH_serve.json` / `BENCH_chaos.json` report (batching +
+//! cache-affinity beats unbatched FIFO under steady and burst arrivals;
+//! churn raises eviction counters; the flood tenant absorbs all SLO
+//! sheds; closed-loop bounds in-flight work), the
+//! `AFFINITY_REORDER_WINDOW` fairness guard under rotation/flood, and a
+//! seeded operand-cache property test against a shadow LRU model.
 
-use sssr::experiments::Runner;
-use sssr::harness::{self, ServeCombo, SERVE_HOT_PCT, SERVE_MAX_BATCH, SERVE_SEED, SERVE_WINDOW};
+use sssr::experiments::{Record, Runner};
+use sssr::harness::{
+    self, ChaosCombo, ServeCombo, CHAOS_GAP, CHAOS_SEED, SERVE_HOT_PCT, SERVE_MAX_BATCH,
+    SERVE_SEED, SERVE_WINDOW,
+};
 use sssr::kernels::api::{must_execute, ExecCfg, Operand};
 use sssr::kernels::{IdxWidth, Variant};
 use sssr::matgen;
-use sssr::serve::{self, batch, Policy, ServeCfg, StreamCfg};
+use sssr::serve::sched::AFFINITY_REORDER_WINDOW;
+use sssr::serve::{self, batch, Form, OperandCache, Policy, Scenario, ServeCfg, SloCfg, StreamCfg};
 
 /// Differential: a coalesced `smxdm` batch returns bit-identical
 /// columns to the standalone `smxdv` runs it replaces (both variants).
@@ -132,6 +140,19 @@ fn batched_affinity_beats_unbatched_fifo() {
     assert!(best.batches > 0);
 }
 
+/// Render records to JSON lines with the host wall stamps stripped:
+/// `wall_ms` / `wall_us_per_request` measure the simulator (not the
+/// simulated system) and are the only fields documented to vary run to
+/// run — every simulated field must be byte-identical across `--jobs`.
+fn sim_lines(mut recs: Vec<Record>) -> Vec<String> {
+    recs.iter_mut()
+        .map(|r| {
+            r.fields.retain(|(k, _)| !k.starts_with("wall"));
+            r.to_json_line()
+        })
+        .collect()
+}
+
 /// `BENCH_serve.json` determinism: the same seed produces byte-identical
 /// record lines for every `--jobs` (the experiment-engine guarantee,
 /// exercised end to end through the serving engine).
@@ -164,16 +185,376 @@ fn serve_records_are_jobs_invariant() {
     };
     let lines = |jobs: usize| -> Vec<String> {
         let spec = harness::spec_serve_with(16, combos());
-        Runner::new(jobs)
-            .run(&spec)
-            .iter()
-            .map(|r| r.to_json_line())
-            .collect()
+        sim_lines(Runner::new(jobs).run(&spec))
     };
     let serial = lines(1);
     let par = lines(4);
     assert_eq!(serial.len(), 3);
     assert_eq!(serial, par, "BENCH_serve records must not depend on --jobs");
     // and the whole pipeline is deterministic run to run
+    assert_eq!(serial, lines(2));
+}
+
+// ======================================================================
+// chaos scenarios — the adversarial acceptance regressions
+// ======================================================================
+
+/// Chaos acceptance (a): under the MMPP `burst` arrival process the
+/// batching + cache-affinity configuration still beats unbatched FIFO
+/// on p99 latency — compressed bursts deepen the queue, which is
+/// exactly where coalescing pays. Pins the `burst` scenario ordering
+/// `BENCH_chaos.json` reports, and that the ordering is deterministic
+/// run to run.
+#[test]
+fn burst_batched_affinity_beats_unbatched_fifo_on_p99() {
+    let corpus = serve::serve_corpus();
+    let scfg = Scenario::Burst.stream(CHAOS_SEED, harness::chaos_requests(), CHAOS_GAP);
+    let stream = serve::gen_stream_ex(&scfg, &corpus);
+    let fifo_cfg = ServeCfg::new(2, 1).policy(Policy::Fifo);
+    let fifo = serve::run_serve_stream(&fifo_cfg, &corpus, &stream).unwrap().summary;
+    let best = serve::run_serve_stream(
+        &ServeCfg::new(2, 1)
+            .policy(Policy::Affinity)
+            .batched(SERVE_WINDOW, SERVE_MAX_BATCH),
+        &corpus,
+        &stream,
+    )
+    .unwrap()
+    .summary;
+    assert!(
+        best.p99_latency < fifo.p99_latency,
+        "burst: batched affinity p99 {} must beat unbatched FIFO p99 {}",
+        best.p99_latency,
+        fifo.p99_latency
+    );
+    assert!(best.makespan < fifo.makespan);
+    assert!(best.batches > 0, "bursts must actually coalesce");
+    let again = serve::run_serve_stream(&fifo_cfg, &corpus, &stream).unwrap().summary;
+    assert_eq!(fifo.p99_latency, again.p99_latency);
+    assert_eq!(fifo.makespan, again.makespan);
+}
+
+/// Chaos acceptance (b): under tenant `churn` with the cache enabled,
+/// departures replay as cache invalidations — the eviction counters
+/// rise (every invalidation is a forced eviction) while the churn-free
+/// run of the same requests sees none, and churn changes timing only:
+/// every per-request result stays bit-identical. Pinned reservations
+/// are byte-level, never entries, so no pinned entry can be evicted by
+/// construction — [`operand_cache_matches_shadow_lru_model`] checks
+/// that accounting invariant directly.
+#[test]
+fn churn_invalidations_raise_eviction_counters() {
+    let corpus = serve::serve_corpus();
+    let scfg = Scenario::Churn.stream(CHAOS_SEED, harness::chaos_requests(), CHAOS_GAP);
+    let stream = serve::gen_stream_ex(&scfg, &corpus);
+    assert!(!stream.churn.is_empty(), "churn scenario must schedule departures");
+    let cfg = ServeCfg::new(1, 1); // FIFO, unbatched, cache on
+    let churned = serve::run_serve_stream(&cfg, &corpus, &stream).unwrap();
+    let steady = serve::run_serve(&cfg, &corpus, &stream.reqs).unwrap();
+    let stats = |out: &serve::ServeOutcome| {
+        let e: u64 = out.clusters.iter().map(|c| c.cache.evictions).sum();
+        let i: u64 = out.clusters.iter().map(|c| c.cache.invalidations).sum();
+        (e, i)
+    };
+    let (churn_ev, churn_inv) = stats(&churned);
+    let (steady_ev, steady_inv) = stats(&steady);
+    assert!(churn_inv > 0, "departures must invalidate cached images");
+    assert_eq!(steady_inv, 0, "no churn events, no invalidations");
+    assert!(
+        churn_ev >= steady_ev + churn_inv,
+        "every invalidation is a forced eviction: {churn_ev} vs {steady_ev} + {churn_inv}"
+    );
+    assert!(churned.summary.hit_rate <= steady.summary.hit_rate);
+    assert!(churned.summary.upload_bytes >= steady.summary.upload_bytes);
+    // churn perturbs timing only — results stay bit-identical
+    for (a, b) in churned.requests.iter().zip(&steady.requests) {
+        assert_eq!(a.id, b.id);
+        match (&a.result, &b.result) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(x.len(), y.len());
+                for (p, q) in x.iter().zip(y) {
+                    assert_eq!(p.to_bits(), q.to_bits(), "request {} diverged under churn", a.id);
+                }
+            }
+            _ => panic!("request {}: result presence diverged under churn", a.id),
+        }
+    }
+}
+
+/// Chaos acceptance (c): under the `flood` scenario with SLO admission
+/// control on, the flood tenant (tenant 0, p99 budget 250k cycles)
+/// absorbs every shed while each non-flood tenant's served p99 stays
+/// within its own budget. One serialized cluster, batching off, so the
+/// flood's backlog actually builds. Deterministic across reruns.
+#[test]
+fn flood_tenant_absorbs_all_sheds_under_slo() {
+    let corpus = serve::serve_corpus();
+    let scfg = Scenario::Flood.stream(CHAOS_SEED, 2 * harness::chaos_requests(), CHAOS_GAP);
+    let stream = serve::gen_stream_ex(&scfg, &corpus);
+    let tenants = stream.reqs.iter().map(|r| r.tenant + 1).max().unwrap_or(0);
+    let slo = SloCfg::flood_default(tenants);
+    let cfg = ServeCfg::new(1, 1).slo(slo.clone());
+    let out = serve::run_serve_stream(&cfg, &corpus, &stream).unwrap();
+    assert!(out.summary.shed_requests > 0, "the flood must trip admission control");
+    assert!(out.summary.slo_violations > 0, "shedding implies served over-budget warmup");
+    for r in &out.requests {
+        if r.shed {
+            assert_eq!(r.tenant, 0, "request {}: only the flood tenant may shed", r.id);
+            assert_eq!(r.finish, r.start);
+            assert_eq!(r.batch_size, 0);
+            assert!(r.result.is_none());
+        }
+    }
+    // every non-flood tenant's end-to-end p99 stays inside its budget
+    for t in 1..tenants {
+        let mut lats: Vec<u64> = out
+            .requests
+            .iter()
+            .filter(|r| !r.shed && r.tenant == t)
+            .map(|r| r.latency)
+            .collect();
+        if lats.is_empty() {
+            continue;
+        }
+        lats.sort_unstable();
+        let p99 = lats[((lats.len() as f64 * 0.99).ceil() as usize).max(1) - 1];
+        let budget = slo.budget(t).expect("non-flood tenants carry the default budget");
+        assert!(p99 <= budget, "tenant {t}: p99 {p99} exceeds budget {budget}");
+    }
+    let again = serve::run_serve_stream(&cfg, &corpus, &stream).unwrap();
+    assert_eq!(out.requests, again.requests, "flood run must be deterministic");
+}
+
+/// Chaos acceptance (d): `closed` mode keeps in-flight work bounded by
+/// clients x W at every event, while the same stream served open-loop
+/// exceeds that bound (the backlog closed-loop exists to prevent).
+/// Released arrivals never move earlier than their open-loop instants.
+#[test]
+fn closed_loop_keeps_queue_depth_within_clients_times_w() {
+    let corpus = serve::serve_corpus();
+    let scfg = Scenario::Closed.stream(CHAOS_SEED, harness::chaos_requests(), CHAOS_GAP);
+    let stream = serve::gen_stream_ex(&scfg, &corpus);
+    let (clients, w) = Scenario::Closed.closed_clients().expect("closed scenario sets clients");
+    let bound = (clients * w) as u64;
+    // one serialized cluster: the open-loop backlog provably builds
+    let closed_cfg = ServeCfg::new(1, 1).closed_loop(clients, w);
+    let closed = serve::run_serve_stream(&closed_cfg, &corpus, &stream).unwrap();
+    assert!(closed.summary.max_in_flight >= 1);
+    assert!(
+        closed.summary.max_in_flight <= bound,
+        "closed loop peaked at {} in-flight, bound is {clients}x{w}",
+        closed.summary.max_in_flight
+    );
+    let open = serve::run_serve_stream(&ServeCfg::new(1, 1), &corpus, &stream).unwrap();
+    assert!(
+        open.summary.max_in_flight > bound,
+        "open loop peaked at only {} — the stream no longer overloads",
+        open.summary.max_in_flight
+    );
+    for (c, o) in closed.requests.iter().zip(&open.requests) {
+        assert!(c.arrival >= o.arrival, "request {}: release moved earlier", c.id);
+    }
+    let again = serve::run_serve_stream(&closed_cfg, &corpus, &stream).unwrap();
+    assert_eq!(closed.requests, again.requests, "closed run must be deterministic");
+}
+
+/// The `AFFINITY_REORDER_WINDOW` aging guard holds under hot-set
+/// rotation and the same-matrix flood: whenever the affinity policy
+/// dispatches request `y` while an eligible request `x` is still
+/// queued, `y` arrived no more than the reorder window after `x` — a
+/// cold tenant is never starved past the bound however hard the hot
+/// set dominates. Also checks the guard is load-bearing (some genuine
+/// reordering happened).
+#[test]
+fn affinity_reorder_window_holds_under_rotation_and_flood() {
+    let corpus = serve::serve_corpus();
+    let mut reordered = 0u64;
+    for sc in [Scenario::Rotate, Scenario::Flood] {
+        let scfg = sc.stream(CHAOS_SEED, harness::chaos_requests(), CHAOS_GAP);
+        let stream = serve::gen_stream_ex(&scfg, &corpus);
+        let cfg = ServeCfg::new(1, 1).policy(Policy::Affinity);
+        let out = serve::run_serve_stream(&cfg, &corpus, &stream).unwrap();
+        for y in &out.requests {
+            for x in &out.requests {
+                if x.arrival <= y.start && x.start > y.start {
+                    assert!(
+                        y.arrival <= x.arrival + AFFINITY_REORDER_WINDOW,
+                        "{}: dispatching {} (arrival {}) starved {} (arrival {}) past the window",
+                        sc.name(),
+                        y.id,
+                        y.arrival,
+                        x.id,
+                        x.arrival
+                    );
+                    if y.arrival > x.arrival {
+                        reordered += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert!(reordered > 0, "affinity never reordered — the guard is untested");
+}
+
+/// Seeded property test: [`OperandCache`] accounting matches an
+/// independent shadow LRU model over thousands of random
+/// touch/pin/unpin/invalidate/bypass operations. Conserves bytes
+/// (`resident_bytes` equals the shadow's entry sum, resident + pinned
+/// never exceeds capacity), agrees on every hit/miss/eviction/
+/// invalidation/upload counter and residency query, and pinned
+/// reservations are only ever changed by pin/unpin — an invalidation
+/// or eviction can never reclaim pinned bytes.
+#[test]
+fn operand_cache_matches_shadow_lru_model() {
+    const CAP: u64 = 10_000;
+    struct ShEntry {
+        matrix: usize,
+        form: Form,
+        bytes: u64,
+        last_use: u64,
+    }
+    // evict coldest shadow entries until `need` fits under CAP;
+    // last_use ticks are unique, so victim order is unambiguous
+    fn evict_lru(entries: &mut Vec<ShEntry>, used: &mut u64, evictions: &mut u64, need: u64) {
+        while *used + need > CAP {
+            let victim = entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(i, _)| i)
+                .expect("over-budget shadow cache must hold an entry");
+            *used -= entries[victim].bytes;
+            entries.swap_remove(victim);
+            *evictions += 1;
+        }
+    }
+    fn lcg(state: &mut u64) -> u64 {
+        *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *state
+    }
+
+    let forms = [Form::Csr, Form::Csf, Form::Pipe];
+    let mut cache = OperandCache::new(CAP);
+    let (mut entries, mut used, mut pinned, mut tick) = (Vec::<ShEntry>::new(), 0u64, 0u64, 0u64);
+    let (mut hits, mut misses, mut evictions, mut invalidations, mut upload) =
+        (0u64, 0u64, 0u64, 0u64, 0u64);
+    let mut pins: Vec<u64> = vec![];
+    let mut pins_taken = 0u64;
+    let mut state = 0x00C0_FFEE_D15E_A5EDu64;
+    for step in 0..4000 {
+        let r = lcg(&mut state);
+        let op = (r >> 8) % 100;
+        let matrix = ((r >> 16) % 8) as usize;
+        let form = forms[((r >> 24) % 3) as usize];
+        let bytes = 400 + 257 * ((r >> 32) % 9);
+        if op < 70 {
+            let hit = cache.touch(matrix, form, bytes);
+            tick += 1;
+            let shadow_hit = match entries.iter_mut().find(|e| e.matrix == matrix && e.form == form)
+            {
+                Some(e) => {
+                    e.last_use = tick;
+                    hits += 1;
+                    true
+                }
+                None => {
+                    misses += 1;
+                    upload += bytes;
+                    if bytes + pinned <= CAP {
+                        evict_lru(&mut entries, &mut used, &mut evictions, bytes + pinned);
+                        used += bytes;
+                        entries.push(ShEntry { matrix, form, bytes, last_use: tick });
+                    }
+                    false
+                }
+            };
+            assert_eq!(hit, shadow_hit, "step {step}: hit/miss diverged");
+        } else if op < 80 {
+            let b = bytes / 2;
+            let ok = cache.pin(b);
+            let shadow_ok = pinned + b <= CAP;
+            if shadow_ok {
+                pinned += b;
+                evict_lru(&mut entries, &mut used, &mut evictions, pinned);
+                pins.push(b);
+                pins_taken += 1;
+            }
+            assert_eq!(ok, shadow_ok, "step {step}: pin admission diverged");
+        } else if op < 88 {
+            if let Some(b) = pins.pop() {
+                cache.unpin(b);
+                pinned -= b;
+            }
+        } else if op < 96 {
+            let freed = cache.invalidate_matrix(matrix);
+            let mut sfreed = 0u64;
+            let mut dropped = 0u64;
+            entries.retain(|e| {
+                if e.matrix == matrix {
+                    sfreed += e.bytes;
+                    dropped += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+            used -= sfreed;
+            invalidations += dropped;
+            evictions += dropped;
+            assert_eq!(freed, sfreed, "step {step}: invalidation freed bytes diverged");
+        } else {
+            cache.bypass(bytes);
+            misses += 1;
+            upload += bytes;
+        }
+        // invariants after every operation
+        assert_eq!(cache.resident_bytes(), used, "step {step}: resident bytes drifted");
+        let entry_sum: u64 = entries.iter().map(|e| e.bytes).sum();
+        assert_eq!(used, entry_sum, "step {step}: shadow byte conservation broke");
+        assert_eq!(cache.pinned_bytes(), pinned, "step {step}: pinned bytes drifted");
+        assert!(cache.resident_bytes() + cache.pinned_bytes() <= CAP, "step {step}: over cap");
+        assert_eq!(cache.stats.hits, hits, "step {step}");
+        assert_eq!(cache.stats.misses, misses, "step {step}");
+        assert_eq!(cache.stats.evictions, evictions, "step {step}");
+        assert_eq!(cache.stats.invalidations, invalidations, "step {step}");
+        assert_eq!(cache.stats.upload_bytes, upload, "step {step}");
+        for m in 0..8 {
+            assert_eq!(
+                cache.contains_matrix(m),
+                entries.iter().any(|e| e.matrix == m),
+                "step {step}: residency of matrix {m} diverged"
+            );
+        }
+    }
+    // the op mix must have exercised every path
+    assert!(hits > 0 && misses > 0, "degenerate op sequence");
+    assert!(invalidations > 0, "no invalidations exercised");
+    assert!(evictions > invalidations, "no capacity evictions exercised");
+    assert!(pins_taken > 0, "no pins exercised");
+}
+
+/// `BENCH_chaos.json` determinism: every simulated field of the chaos
+/// records is byte-identical across `--jobs` (each grid point
+/// regenerates its scenario stream and serves it in one
+/// single-threaded engine run, including the SLO flood and closed-loop
+/// points).
+#[test]
+fn chaos_records_are_jobs_invariant() {
+    let combos = || {
+        vec![
+            ChaosCombo { scenario: Scenario::Burst, policy: Policy::Affinity, cache: true },
+            ChaosCombo { scenario: Scenario::Churn, policy: Policy::Fifo, cache: true },
+            ChaosCombo { scenario: Scenario::Flood, policy: Policy::Fifo, cache: false },
+            ChaosCombo { scenario: Scenario::Closed, policy: Policy::Sjf, cache: true },
+        ]
+    };
+    let lines = |jobs: usize| -> Vec<String> {
+        let spec = harness::spec_chaos_with(16, combos());
+        sim_lines(Runner::new(jobs).run(&spec))
+    };
+    let serial = lines(1);
+    assert_eq!(serial.len(), 4);
+    assert_eq!(serial, lines(4), "BENCH_chaos records must not depend on --jobs");
     assert_eq!(serial, lines(2));
 }
