@@ -55,6 +55,13 @@ fn load_rates(path: &PathBuf) -> Option<HashMap<String, f64>> {
 }
 
 fn main() {
+    // The throughput gate measures the simulator proper: force tracing
+    // off even if SIM_TRACE is set in the environment (recording is
+    // observation-only, but buffer pushes cost wall clock, and this
+    // bench's numbers feed the regression baseline). Clearing the env
+    // var before the first enabled() query covers the runner's worker
+    // threads too, which a thread-local override would not.
+    std::env::set_var("SIM_TRACE", "0");
     let spec = spec_simperf();
     // One worker: the points time-share one host core each anyway, and
     // serial runs keep the wall-clock numbers comparable across hosts.

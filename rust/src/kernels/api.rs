@@ -647,6 +647,9 @@ impl Cc {
         match self.cl.try_run_isolated(limit) {
             Ok(cycles) => {
                 let stats = self.cl.stats();
+                if crate::trace::sink_active() {
+                    crate::trace::sink_tracks(self.cl.take_trace("c0"));
+                }
                 Ok((self.cl, cycles, stats))
             }
             Err(cycles) => Err(KernelError::Hang { kernel: "", cycles }),

@@ -803,7 +803,14 @@ fn merge_seq(t: &mut RunStats, s: &RunStats) {
         comparisons,
         stall_icache,
         stall_mem,
+        stall_seq,
+        stall_fence,
+        stall_ssr,
         barrier_cycles,
+        penalty_cycles,
+        halted_cycles,
+        core_cycles,
+        ssr_busy,
     } = *s;
     t.cycles += cycles;
     t.cores = t.cores.max(cores);
@@ -820,7 +827,16 @@ fn merge_seq(t: &mut RunStats, s: &RunStats) {
     t.comparisons += comparisons;
     t.stall_icache += stall_icache;
     t.stall_mem += stall_mem;
+    t.stall_seq += stall_seq;
+    t.stall_fence += stall_fence;
+    t.stall_ssr += stall_ssr;
     t.barrier_cycles += barrier_cycles;
+    t.penalty_cycles += penalty_cycles;
+    t.halted_cycles += halted_cycles;
+    t.core_cycles += core_cycles;
+    for l in 0..3 {
+        t.ssr_busy[l] += ssr_busy[l];
+    }
 }
 
 /// Two-phase single-CC SpGEMM: the symbolic pass sizes every output
@@ -836,6 +852,7 @@ fn two_phase_single_cc(
     limit: u64,
 ) -> Result<(Value, Report, Detail), KernelError> {
     let (sizes, sym_cycles, mut stats) = run_symbolic_cc(variant, iw, a, b, tcdm_bytes, limit)?;
+    crate::trace::record_phase("symbolic", stats);
     let (row_cap, cap, fibs) = exact_caps(&sizes);
     let prog = match variant {
         Variant::Base => smxsm_csf_base(iw),
@@ -845,6 +862,7 @@ fn two_phase_single_cc(
     let mut cc = Cc::sized(prog, tcdm_bytes);
     let out = place_numeric(&mut cc, iw, a, b, row_cap, cap, fibs);
     let (cl, num_cycles, num_stats) = cc.run(limit)?;
+    crate::trace::record_phase("numeric", num_stats);
     let output = read_out(&cl.tcdm, &out, iw, "smxsm_csf")?;
     merge_seq(&mut stats, &num_stats);
     let report = Report::from_run(sym_cycles + num_cycles, ops::smxsm_csf_flops(a, b), stats);
@@ -1153,6 +1171,10 @@ fn run_cluster_csf(
     let mut cl = sym.build(cfg);
     let sym_cycles = cl.try_run(&mut dram, limit).map_err(hang)?;
     let mut stats = cl.stats();
+    crate::trace::record_phase("symbolic", stats);
+    if crate::trace::sink_active() {
+        crate::trace::sink_tracks(cl.take_trace("sym/c0"));
+    }
     let sizes: Vec<u32> =
         (0..a.nfibers()).map(|f| dram.peek(d_sizes + 4 * f as u64, 4) as u32).collect();
 
@@ -1171,7 +1193,12 @@ fn run_cluster_csf(
     );
     let mut cl = num.build(cfg);
     let num_cycles = cl.try_run(&mut dram, limit).map_err(hang)?;
-    merge_seq(&mut stats, &cl.stats());
+    let num_stats = cl.stats();
+    crate::trace::record_phase("numeric", num_stats);
+    if crate::trace::sink_active() {
+        crate::trace::sink_tracks(cl.take_trace("num/c0"));
+    }
+    merge_seq(&mut stats, &num_stats);
 
     let pieces = read_core_outputs(&|ad, by| dram.peek(ad, by), &outs, iw, a.nrows, b.ncols);
     let c = Csf::concat(a.nrows, b.ncols, &pieces);
@@ -1240,6 +1267,20 @@ fn run_system_csf(
         })
         .collect();
     let sym_hbm = sys.hbm.cluster_stats.clone();
+    if crate::trace::sink_active() {
+        let mut sym_agg = RunStats::default();
+        for s in &sym_stats {
+            add_stats(&mut sym_agg, s);
+        }
+        sym_agg.cycles = sym_total;
+        crate::trace::record_phase("symbolic", sym_agg);
+        let mut tracks = Vec::new();
+        for (i, cl) in sys.clusters.iter_mut().enumerate() {
+            tracks.extend(cl.take_trace(&format!("sym/c{i}")));
+        }
+        tracks.extend(sys.hbm.take_trace());
+        crate::trace::sink_tracks(tracks);
+    }
     let sizes: Vec<Vec<u32>> = (0..k)
         .map(|i| {
             let d_sizes = sym_passes[i].1;
@@ -1271,6 +1312,22 @@ fn run_system_csf(
     sys.try_run(limit).map_err(hang)?;
     let num_finished = sys.finished_cycles();
     let num_total = *num_finished.iter().max().unwrap();
+    if crate::trace::sink_active() {
+        let mut num_agg = RunStats::default();
+        for i in 0..k {
+            let mut ns = sys.clusters[i].stats();
+            ns.cycles = num_finished[i];
+            add_stats(&mut num_agg, &ns);
+        }
+        num_agg.cycles = num_total;
+        crate::trace::record_phase("numeric", num_agg);
+        let mut tracks = Vec::new();
+        for (i, cl) in sys.clusters.iter_mut().enumerate() {
+            tracks.extend(cl.take_trace(&format!("num/c{i}")));
+        }
+        tracks.extend(sys.hbm.take_trace());
+        crate::trace::sink_tracks(tracks);
+    }
 
     // gather: per-core pieces in (cluster, core) order — fiber sharding
     // keeps output rows exclusive and globally ordered

@@ -91,7 +91,14 @@ pub(crate) fn add_stats(t: &mut RunStats, s: &RunStats) {
         comparisons,
         stall_icache,
         stall_mem,
+        stall_seq,
+        stall_fence,
+        stall_ssr,
         barrier_cycles,
+        penalty_cycles,
+        halted_cycles,
+        core_cycles,
+        ssr_busy,
     } = *s;
     t.cycles = t.cycles.max(cycles);
     t.cores += cores;
@@ -108,7 +115,20 @@ pub(crate) fn add_stats(t: &mut RunStats, s: &RunStats) {
     t.comparisons += comparisons;
     t.stall_icache += stall_icache;
     t.stall_mem += stall_mem;
+    t.stall_seq += stall_seq;
+    t.stall_fence += stall_fence;
+    t.stall_ssr += stall_ssr;
     t.barrier_cycles += barrier_cycles;
+    t.penalty_cycles += penalty_cycles;
+    t.halted_cycles += halted_cycles;
+    // `core_cycles` sums plainly (per-cluster ticked core-cycles): the
+    // system freezes a finished cluster's clock, so `max(cycles) × cores`
+    // would overcount — the plain sum keeps the attribution identity
+    // exact at every aggregation level.
+    t.core_cycles += core_cycles;
+    for l in 0..3 {
+        t.ssr_busy[l] += ssr_busy[l];
+    }
 }
 
 /// Shared sharded-run implementation: plan one job per shard against
@@ -159,6 +179,14 @@ pub(crate) fn run_system(
         .try_run(limit)
         .map_err(|cycles| KernelError::Hang { kernel: "", cycles })?;
     let finished = sys.finished_cycles();
+    if crate::trace::sink_active() {
+        let mut tracks = Vec::new();
+        for (i, cl) in sys.clusters.iter_mut().enumerate() {
+            tracks.extend(cl.take_trace(&format!("c{i}")));
+        }
+        tracks.extend(sys.hbm.take_trace());
+        crate::trace::sink_tracks(tracks);
+    }
 
     // gather: concatenate the exclusive shard row slices
     let mut result = Vec::with_capacity(m.nrows);

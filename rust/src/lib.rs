@@ -62,6 +62,14 @@
 //!   cargo feature; the default (offline) build ships a stub whose
 //!   `Runtime::load` returns a clear "built without the `xla` feature"
 //!   error.
+//! - [`trace`] — the cycle-accurate observability layer: zero-cost-
+//!   when-off component timelines (core stalls by cause, FREP bodies,
+//!   SSR stream jobs, DMA, HBM channel bursts) exported as
+//!   Perfetto-loadable Chrome trace-event JSON, per-phase
+//!   [`trace::CounterSnapshot`] attribution tables whose stall columns
+//!   sum exactly to ticked core-cycles, and per-request serve spans
+//!   plus `METRICS_serve.jsonl` — `repro trace` and
+//!   `repro serve --trace` sit on top.
 //! - [`model`] — analytical area/timing (GF12LP+-calibrated) and
 //!   utilization-scaled energy models (§4.3, §4.4).
 //! - [`formats`], [`matgen`] — sparse tensor formats and the
@@ -93,4 +101,5 @@ pub mod model;
 pub mod harness;
 pub mod pipeline;
 pub mod serve;
+pub mod trace;
 pub mod util;

@@ -53,6 +53,17 @@ COMMANDS:
                                                  on a sample workload
                                                  (variants: base ssr sssr;
                                                   default sssr, 16-bit)
+    trace <name> [variant] [--iw 8|16|32]        run one registered kernel
+          [--clusters N [--channels M]]          with cycle tracing armed:
+          [--out FILE]                           print the per-phase
+                                                 attribution table and write
+                                                 a Perfetto-loadable Chrome
+                                                 trace (default
+                                                 TRACE_<name>.json); modeled
+                                                 cycles are identical with
+                                                 tracing off
+    trace --check FILE                           validate a trace file's
+                                                 Chrome trace-event structure
     verify [manifest.json]                       simulator vs PJRT golden
                                                  models (needs --features xla)
     all                                          every figure and table
@@ -82,6 +93,9 @@ SERVE OPTIONS:
                     closed-loop; see README \"Chaos & SLO scenarios\")
     --closed-loop CxW  closed-loop load: C clients, each holding at most
                     W outstanding requests (e.g. 6x2)
+    --trace FILE    write per-request spans as a Perfetto-loadable Chrome
+                    trace to FILE, plus METRICS_serve.jsonl (one JSON
+                    object per request) next to it
 
 PIPELINE OPTIONS:
     --app A         pagerank | cg | gnn | stencil (default pagerank)
@@ -218,6 +232,7 @@ fn main() {
         Some("serve") => serve_cmd(&opts.rest),
         Some("pipeline") => pipeline_cmd(&opts.rest),
         Some("kernel") => kernel_cmd(&opts.rest),
+        Some("trace") => trace_cmd(&opts.rest),
         Some("verify") => {
             let path = opts
                 .rest
@@ -368,6 +383,7 @@ fn serve_cmd(rest: &[String]) {
     let mut mtx: Option<PathBuf> = None;
     let mut scenario: Option<Scenario> = None;
     let mut closed: Option<(usize, usize)> = None;
+    let mut trace_out: Option<PathBuf> = None;
     let mut it = rest.iter();
     let next_val = |it: &mut std::slice::Iter<String>, flag: &str| -> String {
         it.next()
@@ -406,6 +422,7 @@ fn serve_cmd(rest: &[String]) {
                     .unwrap_or_else(|| die(&format!("bad --closed-loop value {v:?} (want CxW)")));
                 closed = Some((parse_num(c), parse_num(w)));
             }
+            "--trace" => trace_out = Some(PathBuf::from(next_val(&mut it, "--trace"))),
             other => die(&format!("unknown serve option {other:?}")),
         }
     }
@@ -452,7 +469,35 @@ fn serve_cmd(rest: &[String]) {
         }
         cfg = cfg.closed_loop(c, w);
     }
+    if trace_out.is_some() {
+        // Arm the request-span sink only: per-request timelines, no
+        // per-cycle component recording (kernel runs stay memoized and
+        // undisturbed; modeled results are identical either way).
+        sssr::trace::sink_begin();
+    }
     let out = serve::run_serve_stream(&cfg, &corpus, &stream).unwrap_or_else(|e| die(&e));
+    if let Some(path) = &trace_out {
+        let data = sssr::trace::sink_take().expect("trace sink was armed");
+        let doc = sssr::trace::chrome::render(&data);
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)
+                .unwrap_or_else(|e| die(&format!("creating {}: {e}", dir.display())));
+        }
+        std::fs::write(path, &doc)
+            .unwrap_or_else(|e| die(&format!("writing {}: {e}", path.display())));
+        if let Err(e) = sssr::trace::chrome::check(&doc) {
+            die(&format!("self-check of generated trace failed: {e}"));
+        }
+        let metrics = path.with_file_name("METRICS_serve.jsonl");
+        std::fs::write(&metrics, sssr::trace::chrome::metrics_jsonl(&data.serve))
+            .unwrap_or_else(|e| die(&format!("writing {}: {e}", metrics.display())));
+        println!(
+            "trace: {} request spans -> {} (+ {})",
+            data.serve.len(),
+            path.display(),
+            metrics.display()
+        );
+    }
     let s = out.summary;
     println!(
         "serve: {} requests{}, {} clusters / {} channel(s), policy {}, window {} cyc, cache {}",
@@ -694,6 +739,106 @@ fn kernel_demo(name: &str, variant: Variant, iw: IdxWidth) {
         ),
         Err(e) => die(&e.to_string()),
     }
+}
+
+/// The `repro trace` subcommand: run one registered kernel with cycle
+/// tracing armed, print the per-phase attribution table (stall columns
+/// sum exactly to ticked core-cycles), and write the component
+/// timelines as Chrome trace-event JSON (load at ui.perfetto.dev). With
+/// `--check FILE` it validates an existing trace file instead.
+fn trace_cmd(rest: &[String]) {
+    use sssr::trace;
+    let first = match rest.first() {
+        Some(f) => f.as_str(),
+        None => die("trace needs a kernel name or --check FILE"),
+    };
+    if first == "--check" {
+        let path = rest.get(1).unwrap_or_else(|| die("--check needs a trace file"));
+        let doc = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| die(&format!("reading {path}: {e}")));
+        match trace::chrome::check(&doc) {
+            Ok(n) => println!("{path}: OK ({n} span events)"),
+            Err(e) => die(&format!("{path}: {e}")),
+        }
+        return;
+    }
+    let k = match api::kernel(first) {
+        Some(k) => k,
+        None => die(&format!("unknown kernel {first:?} (known: {})", api::kernel_names())),
+    };
+    let mut variant = Variant::Sssr;
+    let mut iw = IdxWidth::U16;
+    let mut clusters = 1usize;
+    let mut channels = 0usize; // 0 = same as clusters
+    let mut out: Option<PathBuf> = None;
+    let mut it = rest[1..].iter();
+    let next_val = |it: &mut std::slice::Iter<String>, flag: &str| -> String {
+        it.next()
+            .unwrap_or_else(|| die(&format!("{flag} needs a value")))
+            .clone()
+    };
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--iw" => {
+                let v = next_val(&mut it, "--iw");
+                iw = IdxWidth::parse(&v)
+                    .unwrap_or_else(|| die(&format!("bad --iw value {v:?} (8|16|32)")));
+            }
+            "--clusters" => clusters = parse_num(&next_val(&mut it, "--clusters")),
+            "--channels" => channels = parse_num(&next_val(&mut it, "--channels")),
+            "--out" => out = Some(PathBuf::from(next_val(&mut it, "--out"))),
+            s => {
+                variant = Variant::parse(s)
+                    .unwrap_or_else(|| die(&format!("unknown variant {s:?} (base|ssr|sssr)")));
+            }
+        }
+    }
+    if clusters == 0 {
+        die("--clusters must be at least 1");
+    }
+    let cfg = if clusters > 1 {
+        let ch = if channels == 0 { clusters } else { channels };
+        api::ExecCfg::system(sssr::sim::SystemCfg::paper_system(clusters, ch))
+    } else {
+        api::ExecCfg::single_sized(k.tcdm_default())
+    };
+    let owned = k.sample(0xD5, iw);
+    let ops = api::borrow_all(&owned);
+    trace::set_enabled(Some(true));
+    trace::sink_begin();
+    let run = api::execute(k, variant, iw, &ops, &cfg);
+    trace::set_enabled(None);
+    let mut data = trace::sink_take().expect("trace sink was armed");
+    let run = run.unwrap_or_else(|e| die(&e.to_string()));
+    println!(
+        "{first}[{}] {}-bit: {} in {} cycles ({} payload flops)\n",
+        variant.name(),
+        iw.name(),
+        run.output.summarize(),
+        run.report.cycles,
+        run.report.payload
+    );
+    data.phases.push(trace::PhaseRow { name: "total".into(), stats: run.report.stats });
+    let table = trace::PhaseTable::new(data.phases.clone());
+    print!("{}", table.render());
+    if !table.exact() {
+        die("attribution table is not exact — simulator accounting bug");
+    }
+    let path = out.unwrap_or_else(|| PathBuf::from(format!("TRACE_{first}.json")));
+    let doc = trace::chrome::render(&data);
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)
+            .unwrap_or_else(|e| die(&format!("creating {}: {e}", dir.display())));
+    }
+    std::fs::write(&path, &doc)
+        .unwrap_or_else(|e| die(&format!("writing {}: {e}", path.display())));
+    let spans = trace::chrome::check(&doc)
+        .unwrap_or_else(|e| die(&format!("self-check of generated trace failed: {e}")));
+    println!(
+        "\ntrace: {} tracks, {spans} span events -> {} (open at ui.perfetto.dev)",
+        data.tracks.len(),
+        path.display()
+    );
 }
 
 /// Cross-check the simulator against every PJRT-executed golden model.

@@ -117,6 +117,7 @@ mod tests {
             stall_icache: 0,
             stall_mem: 0,
             barrier_cycles: nnz / 50,
+            ..Default::default()
         }
     }
 
@@ -140,6 +141,7 @@ mod tests {
             stall_icache: 0,
             stall_mem: 0,
             barrier_cycles: nnz / 100,
+            ..Default::default()
         }
     }
 

@@ -341,6 +341,10 @@ impl Exec<'_> {
                 }
                 let (ecfg, v) = self.exec_cfg(k);
                 let run = execute(k, v, self.cfg.iw, &ops, &ecfg)?;
+                if crate::trace::sink_active() {
+                    let label = format!("{}#{}", name, self.steps);
+                    crate::trace::record_phase(&label, run.report.stats);
+                }
                 self.cycles += run.report.cycles;
                 self.steps += 1;
                 let outv = Val::from_value(run.output);

@@ -340,6 +340,35 @@ fn release_successor(
     pending.insert(slot, (rel, succ));
 }
 
+/// One outcome's trace span ([`crate::trace::ServeSpan`]): the request
+/// timeline the Perfetto export and `METRICS_serve.jsonl` are built
+/// from. `dispatch_cycles` is 0 for shed requests (never dispatched).
+fn serve_span(
+    o: &RequestOutcome,
+    dispatch_cycles: u64,
+    promoted: bool,
+) -> crate::trace::ServeSpan {
+    crate::trace::ServeSpan {
+        id: o.id as u64,
+        tenant: format!("t{}", o.tenant),
+        kernel: o.kernel.to_string(),
+        matrix: format!("m{}", o.matrix),
+        cluster: o.cluster,
+        arrival: o.arrival,
+        start: o.start,
+        finish: o.finish,
+        queue_cycles: o.queue_cycles,
+        dispatch_cycles,
+        upload_cycles: o.upload_cycles,
+        stage_cycles: o.stage_cycles,
+        compute_cycles: o.compute_cycles,
+        batch_size: o.batch_size,
+        cache_hit: o.cache_hit,
+        shed: o.shed,
+        promoted,
+    }
+}
+
 /// A shed request's outcome: it "completes" instantly at the shed
 /// instant with no upload, no compute, and no result.
 fn shed_outcome(r: &Request, now: u64, cluster: usize) -> RequestOutcome {
@@ -516,7 +545,11 @@ fn run_serve_chaos(
                         elig.iter().copied().filter(|&i| tr.over_budget(work[i].tenant)).collect();
                     if !drop.is_empty() {
                         for &i in &drop {
-                            outcomes[i] = Some(shed_outcome(&work[i], now, c));
+                            let o = shed_outcome(&work[i], now, c);
+                            if crate::trace::sink_active() {
+                                crate::trace::record_serve(serve_span(&o, 0, false));
+                            }
+                            outcomes[i] = Some(o);
                             release_successor(
                                 &mut work,
                                 &mut pending,
@@ -748,7 +781,7 @@ fn run_serve_chaos(
             if slo.is_some() {
                 completions.push(Reverse((finish, r.tenant, finish - r.arrival)));
             }
-            outcomes[i] = Some(RequestOutcome {
+            let o = RequestOutcome {
                 id: r.id,
                 tenant: r.tenant,
                 kernel: r.kernel,
@@ -767,7 +800,11 @@ fn run_serve_chaos(
                 shed: false,
                 energy_j: total_j / cols as f64,
                 result,
-            });
+            };
+            if crate::trace::sink_active() {
+                crate::trace::record_serve(serve_span(&o, cfg.dispatch_cycles, promoted));
+            }
+            outcomes[i] = Some(o);
         }
         // each served request releases its client's next one (closed
         // loop) at the batch's completion instant

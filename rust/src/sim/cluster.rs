@@ -12,7 +12,7 @@
 //! `k` releases, which is exactly the double-buffered scheme of §4.2
 //! (cores compute on buffer `k % 2` while the DMA fills the other).
 
-use super::core::Core;
+use super::core::{Core, Stall};
 use super::dma::{Dma, DmaJob};
 use super::dram::Dram;
 use super::fpu::Fpu;
@@ -80,6 +80,11 @@ pub struct CoreComplex {
     /// across CCs / runs by [`super::progcache`].
     decoded: std::sync::Arc<super::progcache::DecodedProg>,
     ports: Ports,
+    /// Span recorders, allocated only when tracing is enabled
+    /// ([`crate::trace::enabled`], captured at construction). `None`
+    /// means recording is off and the tick's classification block is
+    /// skipped entirely.
+    trace: Option<Box<crate::trace::CcTrace>>,
 }
 
 impl CoreComplex {
@@ -94,6 +99,7 @@ impl CoreComplex {
             prog,
             decoded,
             ports: Ports::default(),
+            trace: crate::trace::cc_trace(),
         }
     }
 
@@ -105,7 +111,8 @@ impl CoreComplex {
         let mut port_a = !self.ports.a_used;
         let had_a = port_a;
         self.fpu.tick(now, &mut self.streamer, tcdm, &mut port_a);
-        self.core.tick(
+        let instret0 = self.core.instret;
+        let stall = self.core.tick(
             now,
             &self.prog,
             &self.decoded.ilines,
@@ -118,6 +125,37 @@ impl CoreComplex {
         if had_a && port_a {
             // nobody on the core side used port A this cycle
             self.ports.issr0_had_a = false;
+        }
+        if let Some(t) = &mut self.trace {
+            // Classify this cycle from the tick's outward effects only —
+            // recording never touches modeled state. Components with
+            // in-flight work block the quiet-horizon fast path, so spans
+            // that could transition never cross a skip window; parked
+            // states (halted, barrier, I$ refill) are skip-stable and
+            // their open spans simply extend.
+            let kind = match stall {
+                Stall::Icache => Some("stall:icache"),
+                Stall::Mem => Some("stall:mem"),
+                Stall::SeqFull => Some("stall:seq"),
+                Stall::Fence => Some("stall:fence"),
+                Stall::Barrier => Some("barrier"),
+                Stall::SsrLaunch => Some("stall:ssr"),
+                Stall::None if self.core.halted() => None,
+                Stall::None if self.core.instret == instret0 => Some("penalty"),
+                Stall::None => Some("issue"),
+            };
+            t.core.set(now, kind);
+            let fk = if self.fpu.in_frep() {
+                Some("frep")
+            } else if !self.fpu.idle() {
+                Some("fpu")
+            } else {
+                None
+            };
+            t.fpu.set(now, fk);
+            for (l, u) in self.streamer.units.iter().enumerate() {
+                t.ssr[l].set(now, u.active.as_ref().map(|j| j.cfg.mode.label()));
+            }
         }
     }
 
@@ -180,6 +218,8 @@ pub struct Cluster {
     /// test override travels with the cluster even when it is later
     /// ticked from a worker thread). Public so tests/tools can force it.
     pub fastpath: bool,
+    /// DMA-engine span recorder (`None` when tracing is off).
+    trace: Option<Box<crate::trace::SpanBuf>>,
 }
 
 impl Cluster {
@@ -203,6 +243,7 @@ impl Cluster {
             barriers_released: 0,
             rotate: 0,
             fastpath: super::fastpath::enabled(),
+            trace: crate::trace::span_buf(),
             cfg,
         }
     }
@@ -276,6 +317,9 @@ impl Cluster {
         let now = self.cycle;
         self.tcdm.new_cycle(now);
         self.dma.tick(now, &mut self.tcdm, mem);
+        if let Some(t) = &mut self.trace {
+            t.set(now, if self.dma.busy() { Some("dma") } else { None });
+        }
 
         // Barrier: all live cores waiting and the *required* DMA phases
         // drained -> release, submit the next phase's prefetch (which is
@@ -453,8 +497,50 @@ impl Cluster {
             comparisons: self.ccs.iter().map(|c| c.streamer.cmp.comparisons).sum(),
             stall_icache: self.ccs.iter().map(|c| c.core.stall_icache).sum(),
             stall_mem: self.ccs.iter().map(|c| c.core.stall_mem).sum(),
+            stall_seq: self.ccs.iter().map(|c| c.core.stall_seq).sum(),
+            stall_fence: self.ccs.iter().map(|c| c.core.stall_fence).sum(),
+            stall_ssr: self.ccs.iter().map(|c| c.core.stall_ssr).sum(),
             barrier_cycles: self.ccs.iter().map(|c| c.core.barrier_cycles).sum(),
+            penalty_cycles: self.ccs.iter().map(|c| c.core.penalty_cycles).sum(),
+            halted_cycles: self.ccs.iter().map(|c| c.core.halted_cycles).sum(),
+            core_cycles: self.cycle * self.ccs.len() as u64,
+            ssr_busy: {
+                let mut b = [0u64; 3];
+                for cc in &self.ccs {
+                    for (l, u) in cc.streamer.units.iter().enumerate() {
+                        b[l] += u.busy_cycles;
+                    }
+                }
+                b
+            },
         }
+    }
+
+    /// Drain this cluster's component span buffers into named tracks
+    /// (`{label}/core<i>`, `{label}/fpu<i>`, `{label}/ssr<i>.<l>`,
+    /// `{label}/dma`), closing open spans at the current cycle. Empty
+    /// timelines produce no track. Returns nothing when tracing is off.
+    pub fn take_trace(&mut self, label: &str) -> Vec<crate::trace::Track> {
+        let end = self.cycle + 1;
+        let mut tracks = Vec::new();
+        let mut put = |name: String, events: Vec<crate::trace::Event>| {
+            if !events.is_empty() {
+                tracks.push(crate::trace::Track { name, events });
+            }
+        };
+        for (i, cc) in self.ccs.iter_mut().enumerate() {
+            if let Some(t) = &mut cc.trace {
+                put(format!("{label}/core{i}"), t.core.finish(end));
+                put(format!("{label}/fpu{i}"), t.fpu.finish(end));
+                for (l, buf) in t.ssr.iter_mut().enumerate() {
+                    put(format!("{label}/ssr{i}.{l}"), buf.finish(end));
+                }
+            }
+        }
+        if let Some(t) = &mut self.trace {
+            put(format!("{label}/dma"), t.finish(end));
+        }
+        tracks
     }
 
     /// FPU utilization over the whole run: payload FLOPs per core-cycle.
@@ -481,7 +567,20 @@ pub struct RunStats {
     pub comparisons: u64,
     pub stall_icache: u64,
     pub stall_mem: u64,
+    pub stall_seq: u64,
+    pub stall_fence: u64,
+    pub stall_ssr: u64,
     pub barrier_cycles: u64,
+    pub penalty_cycles: u64,
+    pub halted_cycles: u64,
+    /// Total ticked core-cycles (`cycles × cores` per cluster, summed
+    /// across clusters): the right-hand side of the exact attribution
+    /// identity `instret + Σ stalls + barrier + penalty + halted ==
+    /// core_cycles` ([`crate::trace::phase::accounted`]).
+    pub core_cycles: u64,
+    /// Per-lane SSR occupancy (cycles with a job active), summed over
+    /// cores.
+    pub ssr_busy: [u64; 3],
 }
 
 #[cfg(test)]

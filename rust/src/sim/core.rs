@@ -51,7 +51,16 @@ pub struct Core {
     pub stall_mem: u64,
     pub stall_seq: u64,
     pub stall_fence: u64,
+    /// Retries of an `scfgw` launch against a full SSR job queue
+    /// (previously folded into no counter at all, which broke the exact
+    /// cycle-attribution identity).
+    pub stall_ssr: u64,
     pub barrier_cycles: u64,
+    /// Penalty-burn cycles (taken branches, shared-multiplier occupancy).
+    pub penalty_cycles: u64,
+    /// Cycles ticked after `halt` (the cluster keeps ticking a halted
+    /// core until every CC drains).
+    pub halted_cycles: u64,
     /// Extra cycles charged for taken branches (default 0, see above).
     pub taken_branch_penalty: u32,
     /// Pending penalty cycles to burn.
@@ -74,7 +83,10 @@ impl Core {
             stall_mem: 0,
             stall_seq: 0,
             stall_fence: 0,
+            stall_ssr: 0,
             barrier_cycles: 0,
+            penalty_cycles: 0,
+            halted_cycles: 0,
             taken_branch_penalty: 0,
             penalty: 0,
             cur_iline: u64::MAX,
@@ -114,7 +126,9 @@ impl Core {
         match self.state {
             State::AtBarrier => self.barrier_cycles += skipped,
             State::IcacheMiss(_) => self.stall_icache += skipped,
-            State::Halted | State::Ready => {}
+            State::Halted => self.halted_cycles += skipped,
+            // A Ready core is never quiet, so never skipped.
+            State::Ready => {}
         }
     }
 
@@ -183,7 +197,10 @@ impl Core {
         port_a_free: &mut bool,
     ) -> Stall {
         match self.state {
-            State::Halted => return Stall::None,
+            State::Halted => {
+                self.halted_cycles += 1;
+                return Stall::None;
+            }
             State::AtBarrier => {
                 self.barrier_cycles += 1;
                 return Stall::Barrier;
@@ -199,6 +216,7 @@ impl Core {
         }
         if self.penalty > 0 {
             self.penalty -= 1;
+            self.penalty_cycles += 1;
             return Stall::None;
         }
 
@@ -343,6 +361,7 @@ impl Core {
             Instr::ScfgW { ssr, field, rs1 } => {
                 if !streamer.cfg_write(ssr, field, self.rs(rs1)) {
                     // job queue full: retry
+                    self.stall_ssr += 1;
                     return Stall::SsrLaunch;
                 }
             }

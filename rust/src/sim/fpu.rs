@@ -155,6 +155,12 @@ impl Fpu {
         self.seq.is_empty() && matches!(self.state, State::Idle)
     }
 
+    /// An FREP hardware loop is currently executing (for the trace
+    /// timeline's `frep` spans).
+    pub fn in_frep(&self) -> bool {
+        matches!(self.state, State::Loop(_))
+    }
+
     /// Retire the active FREP loop, recycling its body buffer.
     fn finish_loop(&mut self) {
         if let State::Loop(l) = std::mem::replace(&mut self.state, State::Idle) {

@@ -67,6 +67,22 @@ impl Mode {
             Mode::AffineRead | Mode::IndirectRead | Mode::Intersect | Mode::Union | Mode::UnionIdx
         )
     }
+
+    /// Stable trace label for this job mode (one span name per mode on
+    /// the per-lane SSR timeline).
+    pub fn label(self) -> &'static str {
+        match self {
+            Mode::AffineRead => "affine-read",
+            Mode::AffineWrite => "affine-write",
+            Mode::IndirectRead => "indirect-read",
+            Mode::IndirectWrite => "indirect-write",
+            Mode::Intersect => "intersect",
+            Mode::Union => "union",
+            Mode::Egress => "egress",
+            Mode::UnionIdx => "union-idx",
+            Mode::EgressIdx => "egress-idx",
+        }
+    }
 }
 
 /// Index-matching flavor of the comparator.

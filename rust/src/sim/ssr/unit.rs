@@ -226,6 +226,8 @@ pub struct SsrUnit {
     pub mem_writes: u64,
     pub idx_word_fetches: u64,
     pub zero_injections: u64,
+    /// Cycles ticked with a job active on this lane (occupancy).
+    pub busy_cycles: u64,
 }
 
 impl SsrUnit {
@@ -242,6 +244,7 @@ impl SsrUnit {
             mem_writes: 0,
             idx_word_fetches: 0,
             zero_injections: 0,
+            busy_cycles: 0,
         }
     }
 
@@ -391,6 +394,7 @@ impl SsrUnit {
         let Some(job) = self.active.as_mut() else {
             return false;
         };
+        self.busy_cycles += 1;
         let mut port_used = false;
 
         match job.cfg.mode {

@@ -94,6 +94,10 @@ pub struct HbmChannel {
     /// Total cycles bursts on this channel spent queued behind earlier
     /// bursts (over all clusters wired to it).
     pub queue_cycles: u64,
+    /// Burst-event recorder (`None` when tracing is off). Both port
+    /// flavors push identical events, so traces are invariant under
+    /// `SIM_TICK_JOBS`.
+    pub trace: Option<Box<crate::trace::SpanBuf>>,
 }
 
 impl HbmChannel {
@@ -128,6 +132,7 @@ impl Hbm {
                     bytes_written: 0,
                     bursts: 0,
                     queue_cycles: 0,
+                    trace: crate::trace::span_buf(),
                 })
                 .collect(),
             cluster_stats: vec![HbmClusterStats::default(); cfg.clusters],
@@ -175,6 +180,21 @@ impl Hbm {
     pub fn poke_f64(&mut self, addr: u64, v: f64) {
         self.poke(addr, 8, v.to_bits());
     }
+
+    /// Drain per-channel burst events into `hbm/ch<N>` tracks (empty
+    /// channels produce no track; nothing when tracing is off).
+    pub fn take_trace(&mut self) -> Vec<crate::trace::Track> {
+        let mut tracks = Vec::new();
+        for (i, ch) in self.channels.iter_mut().enumerate() {
+            if let Some(t) = &mut ch.trace {
+                let events = std::mem::take(&mut t.events);
+                if !events.is_empty() {
+                    tracks.push(crate::trace::Track { name: format!("hbm/ch{i}"), events });
+                }
+            }
+        }
+        tracks
+    }
 }
 
 /// One cluster's [`MemPort`] into the shared HBM: routes bursts to the
@@ -194,6 +214,14 @@ impl HbmPort<'_> {
             schedule_burst(&mut c.busy_until, now, bytes, c.bytes_per_cycle, latency, ic_latency);
         c.bursts += 1;
         c.queue_cycles += queued;
+        if let Some(t) = &mut c.trace {
+            t.push(crate::trace::Event {
+                name: if is_read { "read" } else { "write" },
+                ts: now,
+                dur: timing.last_beat.saturating_sub(now),
+                args: vec![("bytes", bytes), ("queued", queued)],
+            });
+        }
         let s = &mut self.hbm.cluster_stats[self.cluster];
         s.bursts += 1;
         s.queue_cycles += queued;
@@ -663,6 +691,14 @@ impl ShardPort<'_> {
         );
         self.chan.bursts += 1;
         self.chan.queue_cycles += queued;
+        if let Some(t) = &mut self.chan.trace {
+            t.push(crate::trace::Event {
+                name: if is_read { "read" } else { "write" },
+                ts: now,
+                dur: timing.last_beat.saturating_sub(now),
+                args: vec![("bytes", bytes), ("queued", queued)],
+            });
+        }
         self.stats.bursts += 1;
         self.stats.queue_cycles += queued;
         if is_read {

@@ -1,0 +1,280 @@
+//! Chrome trace-event JSON export (the format Perfetto loads directly:
+//! `ui.perfetto.dev` → "Open trace file") and the `repro trace --check`
+//! validator.
+//!
+//! One Perfetto thread track per component timeline — `c<K>/core<I>`,
+//! `c<K>/fpu<I>`, `c<K>/ssr<I>.<L>`, `c<K>/dma`, `hbm/ch<N>`,
+//! `serve/c<K>` — all under pid 0. Timestamps and durations are
+//! **simulated cycles** (Perfetto displays them as microseconds; read
+//! "1 µs" as "1 cycle"). Events are complete spans (`"ph":"X"`); track
+//! names arrive as `thread_name` metadata records (`"ph":"M"`).
+//!
+//! The writer is deterministic: tracks in collection order (cluster
+//! index, then component, then HBM channels, then serve clusters),
+//! events in record order — so byte-equality of two rendered traces is
+//! a valid bit-identity check (`tests/trace.rs` compares fast-path vs
+//! naive and `--jobs` settings this way).
+
+use crate::util::Json;
+
+use super::{ServeSpan, TraceData};
+
+fn obj(kvs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(kvs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn meta(tid: usize, name: &str) -> Json {
+    obj(vec![
+        ("ph", Json::Str("M".into())),
+        ("name", Json::Str("thread_name".into())),
+        ("pid", num(0)),
+        ("tid", num(tid as u64)),
+        ("args", obj(vec![("name", Json::Str(name.to_string()))])),
+    ])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn span(tid: usize, cat: &str, name: &str, ts: u64, dur: u64, args: Vec<(&str, Json)>) -> Json {
+    let mut kvs = vec![
+        ("name", Json::Str(name.to_string())),
+        ("cat", Json::Str(cat.to_string())),
+        ("ph", Json::Str("X".into())),
+        ("ts", num(ts)),
+        ("dur", num(dur)),
+        ("pid", num(0)),
+        ("tid", num(tid as u64)),
+    ];
+    if !args.is_empty() {
+        kvs.push(("args", obj(args)));
+    }
+    obj(kvs)
+}
+
+/// Per-request segment boundaries, in emit order. Zero-length segments
+/// are skipped (a shed request contributes only its `request` span).
+fn serve_segments(s: &ServeSpan) -> Vec<(&'static str, u64, u64)> {
+    let d0 = s.start;
+    let d1 = d0 + s.dispatch_cycles;
+    let u1 = d1 + s.upload_cycles;
+    let g1 = u1 + s.stage_cycles;
+    vec![
+        ("queue", s.arrival, s.queue_cycles),
+        ("dispatch", d0, s.dispatch_cycles),
+        ("upload", d1, s.upload_cycles),
+        ("stage", u1, s.stage_cycles),
+        ("compute", g1, s.compute_cycles),
+    ]
+    .into_iter()
+    .filter(|&(_, _, dur)| dur > 0)
+    .collect()
+}
+
+/// Render a collected trace as Chrome trace-event JSON.
+pub fn render(data: &TraceData) -> String {
+    let mut events = Vec::new();
+    let mut tid = 0usize;
+    for track in &data.tracks {
+        events.push(meta(tid, &track.name));
+        for e in &track.events {
+            let args = e.args.iter().map(|&(k, v)| (k, num(v))).collect();
+            events.push(span(tid, "sim", e.name, e.ts, e.dur, args));
+        }
+        tid += 1;
+    }
+    // Serve spans: one track per cluster, requests in completion-record
+    // order (deterministic — the engine accounts them in a fixed order).
+    let mut clusters: Vec<usize> = data.serve.iter().map(|s| s.cluster).collect();
+    clusters.sort_unstable();
+    clusters.dedup();
+    for c in clusters {
+        events.push(meta(tid, &format!("serve/c{c}")));
+        for s in data.serve.iter().filter(|s| s.cluster == c) {
+            let args = vec![
+                ("id", num(s.id)),
+                ("batch", num(s.batch_size as u64)),
+                ("cache_hit", num(u64::from(s.cache_hit))),
+                ("shed", num(u64::from(s.shed))),
+                ("promoted", num(u64::from(s.promoted))),
+            ];
+            events.push(span(tid, "serve", "request", s.arrival, s.finish - s.arrival, args));
+            for (name, ts, dur) in serve_segments(s) {
+                events.push(span(tid, "serve", name, ts, dur, vec![("id", num(s.id))]));
+            }
+        }
+        tid += 1;
+    }
+    let doc = obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ]);
+    let mut out = doc.render();
+    out.push('\n');
+    out
+}
+
+/// One JSON object per served request (`METRICS_serve.jsonl`): the
+/// offline tail-analysis companion of the Perfetto trace.
+pub fn metrics_jsonl(spans: &[ServeSpan]) -> String {
+    let mut out = String::new();
+    for s in spans {
+        let doc = obj(vec![
+            ("id", num(s.id)),
+            ("tenant", Json::Str(s.tenant.clone())),
+            ("kernel", Json::Str(s.kernel.clone())),
+            ("matrix", Json::Str(s.matrix.clone())),
+            ("cluster", num(s.cluster as u64)),
+            ("arrival", num(s.arrival)),
+            ("start", num(s.start)),
+            ("finish", num(s.finish)),
+            ("latency", num(s.finish - s.arrival)),
+            ("queue_cycles", num(s.queue_cycles)),
+            ("dispatch_cycles", num(s.dispatch_cycles)),
+            ("upload_cycles", num(s.upload_cycles)),
+            ("stage_cycles", num(s.stage_cycles)),
+            ("compute_cycles", num(s.compute_cycles)),
+            ("batch_size", num(s.batch_size as u64)),
+            ("cache_hit", Json::Bool(s.cache_hit)),
+            ("shed", Json::Bool(s.shed)),
+            ("promoted", Json::Bool(s.promoted)),
+        ]);
+        out.push_str(&doc.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Validate a Chrome trace-event document (`repro trace --check`):
+/// parses the JSON, checks the `traceEvents` envelope, requires every
+/// complete event to carry `name/cat/ts/dur/pid/tid`, and every `tid`
+/// to be named by a `thread_name` metadata record. Returns the number
+/// of span events on success.
+pub fn check(doc: &str) -> Result<usize, String> {
+    let json = Json::parse(doc).map_err(|e| format!("not valid JSON: {e}"))?;
+    let events = json
+        .get("traceEvents")
+        .ok_or("missing traceEvents key")?
+        .as_arr()
+        .ok_or("traceEvents is not an array")?;
+    let mut named_tids = Vec::new();
+    let mut span_tids = Vec::new();
+    let mut spans = 0usize;
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        let tid = e
+            .get("tid")
+            .and_then(|t| t.as_f64())
+            .ok_or_else(|| format!("event {i}: missing tid"))?;
+        match ph {
+            "M" => {
+                if e.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str()).is_none() {
+                    return Err(format!("event {i}: metadata without args.name"));
+                }
+                named_tids.push(tid as u64);
+            }
+            "X" => {
+                for key in ["name", "cat"] {
+                    if e.get(key).and_then(|v| v.as_str()).is_none() {
+                        return Err(format!("event {i}: missing {key}"));
+                    }
+                }
+                for key in ["ts", "dur", "pid"] {
+                    if e.get(key).and_then(|v| v.as_f64()).is_none() {
+                        return Err(format!("event {i}: missing {key}"));
+                    }
+                }
+                span_tids.push(tid as u64);
+                spans += 1;
+            }
+            other => return Err(format!("event {i}: unsupported ph {other:?}")),
+        }
+    }
+    for t in span_tids {
+        if !named_tids.contains(&t) {
+            return Err(format!("tid {t} has span events but no thread_name metadata"));
+        }
+    }
+    Ok(spans)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Event, Track};
+    use super::*;
+
+    fn sample() -> TraceData {
+        TraceData {
+            tracks: vec![Track {
+                name: "c0/core0".into(),
+                events: vec![
+                    Event { name: "issue", ts: 1, dur: 5, args: vec![] },
+                    Event { name: "stall:mem", ts: 6, dur: 2, args: vec![("bytes", 64)] },
+                ],
+            }],
+            phases: vec![],
+            serve: vec![ServeSpan {
+                id: 3,
+                tenant: "t0".into(),
+                kernel: "smxdv".into(),
+                matrix: "m".into(),
+                cluster: 1,
+                arrival: 10,
+                start: 12,
+                finish: 30,
+                queue_cycles: 2,
+                dispatch_cycles: 4,
+                upload_cycles: 6,
+                stage_cycles: 3,
+                compute_cycles: 5,
+                batch_size: 1,
+                cache_hit: false,
+                shed: false,
+                promoted: false,
+            }],
+        }
+    }
+
+    #[test]
+    fn render_roundtrips_through_check() {
+        let doc = render(&sample());
+        // 2 sim spans + 1 request span + 5 nonzero segments
+        assert_eq!(check(&doc), Ok(8));
+        assert!(doc.contains("\"thread_name\""));
+        assert!(doc.contains("c0/core0"));
+        assert!(doc.contains("serve/c1"));
+    }
+
+    #[test]
+    fn segments_cover_the_request_exactly() {
+        let d = sample();
+        let s = &d.serve[0];
+        let covered: u64 =
+            s.queue_cycles + serve_segments(s).iter().skip(1).map(|&(_, _, d)| d).sum::<u64>();
+        assert_eq!(covered, s.finish - s.arrival);
+    }
+
+    #[test]
+    fn check_rejects_malformed_documents() {
+        assert!(check("not json").is_err());
+        assert!(check("{}").is_err());
+        assert!(check(r#"{"traceEvents":[{"ph":"X","tid":0}]}"#).is_err());
+        assert!(check(r#"{"traceEvents":[{"ph":"M","tid":0,"args":{"name":"t"}}]}"#).is_ok());
+    }
+
+    #[test]
+    fn metrics_jsonl_is_one_parseable_object_per_line() {
+        let d = sample();
+        let jsonl = metrics_jsonl(&d.serve);
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 1);
+        let obj = Json::parse(lines[0]).unwrap();
+        assert_eq!(obj.get("latency").and_then(|v| v.as_f64()), Some(20.0));
+        assert_eq!(obj.get("shed"), Some(&Json::Bool(false)));
+    }
+}

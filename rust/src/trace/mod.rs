@@ -1,0 +1,286 @@
+//! Cycle-accurate tracing and profiling: Perfetto timelines, per-phase
+//! counter snapshots, and request-span attribution.
+//!
+//! Three cooperating pieces, all zero-cost when tracing is off:
+//!
+//! - **Component span buffers** ([`SpanBuf`], [`CcTrace`]): the cluster
+//!   tick classifies each component's cycle (core issue/stall-by-cause,
+//!   FPU/FREP activity, per-lane SSR job mode, DMA busy) and records
+//!   *state transitions* as complete spans in simulated cycles. Because
+//!   the quiet-horizon fast path only skips windows in which every
+//!   component is parked (no transitions possible), and the parallel
+//!   system tick shards state along the same component boundaries the
+//!   buffers live on, traces are bit-identical to naive ticking and
+//!   invariant under `SIM_TICK_JOBS` (`tests/trace.rs` pins both).
+//! - **Phase snapshots** ([`CounterSnapshot`], [`PhaseTable`]): diffable
+//!   [`RunStats`] captures at phase boundaries (symbolic vs numeric
+//!   SpGEMM passes, pipeline DAG steps), rendered as an attribution
+//!   table whose stall columns sum *exactly* to ticked core-cycles, plus
+//!   derived roofline coordinates.
+//! - **The sink**: a thread-local collection point ([`sink_begin`] /
+//!   [`sink_take`]) that tracks, phases, and serve request spans drain
+//!   into, exported as Chrome trace-event JSON ([`chrome::render`],
+//!   loadable in Perfetto) by `repro trace` / `repro serve --trace`.
+//!
+//! The switch mirrors [`crate::sim::fastpath`]: env `SIM_TRACE=1`
+//! enables recording process-wide; [`set_enabled`] overrides it for the
+//! calling thread only (clusters capture the value at construction, so
+//! the setting travels with them onto worker threads). When off, every
+//! component buffer is `None` — no allocation, no event pushes, and no
+//! change to any modeled cycle or statistic either way (recording is
+//! observation-only by construction).
+
+use std::cell::{Cell, RefCell};
+use std::sync::OnceLock;
+
+use crate::sim::RunStats;
+
+pub mod chrome;
+pub mod phase;
+
+pub use phase::{CounterSnapshot, PhaseRow, PhaseTable};
+
+// ---- the switch ----------------------------------------------------------
+
+thread_local! {
+    static TRACE_OVERRIDE: Cell<Option<bool>> = const { Cell::new(None) };
+}
+
+fn env_enabled() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("SIM_TRACE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+    })
+}
+
+/// Is event recording on for the calling thread? Read once per
+/// component at construction time (never from inside worker threads).
+pub fn enabled() -> bool {
+    TRACE_OVERRIDE.with(|c| c.get()).unwrap_or_else(env_enabled)
+}
+
+/// Override event recording for the calling thread (`None` restores the
+/// `SIM_TRACE` env default). The CLI and tests use this to arm tracing
+/// for one run without touching the process environment.
+pub fn set_enabled(v: Option<bool>) {
+    TRACE_OVERRIDE.with(|c| c.set(v));
+}
+
+// ---- events and tracks ---------------------------------------------------
+
+/// One complete span on a track, in simulated cycles.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub name: &'static str,
+    /// First cycle covered by the span.
+    pub ts: u64,
+    /// Number of cycles covered.
+    pub dur: u64,
+    pub args: Vec<(&'static str, u64)>,
+}
+
+/// One named timeline (a Perfetto thread track).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Track {
+    pub name: String,
+    pub events: Vec<Event>,
+}
+
+/// Run-length span recorder: feed it the component's state label every
+/// ticked cycle; it emits one [`Event`] per contiguous run. Skipped
+/// quiet windows need no feeding — the open span simply extends, which
+/// is exactly the fast-path replay semantics (state cannot change inside
+/// a skip window, so no transition is ever lost).
+#[derive(Clone, Debug, Default)]
+pub struct SpanBuf {
+    pub events: Vec<Event>,
+    open: Option<(&'static str, u64)>,
+}
+
+impl SpanBuf {
+    /// Record that cycle `now` was spent in state `kind` (`None` = idle,
+    /// not tracked). Closes the previous span on a label change.
+    pub fn set(&mut self, now: u64, kind: Option<&'static str>) {
+        match (self.open, kind) {
+            (Some((k, _)), Some(nk)) if k == nk => {}
+            _ => {
+                if let Some((k, start)) = self.open.take() {
+                    self.events.push(Event {
+                        name: k,
+                        ts: start,
+                        dur: now - start,
+                        args: Vec::new(),
+                    });
+                }
+                self.open = kind.map(|k| (k, now));
+            }
+        }
+    }
+
+    /// Append a pre-built event (point/burst recorders).
+    pub fn push(&mut self, e: Event) {
+        self.events.push(e);
+    }
+
+    /// Close any open span at exclusive end cycle `end` and drain the
+    /// buffer (called once at trace collection).
+    pub fn finish(&mut self, end: u64) -> Vec<Event> {
+        if let Some((k, start)) = self.open.take() {
+            self.events.push(Event { name: k, ts: start, dur: end - start, args: Vec::new() });
+        }
+        std::mem::take(&mut self.events)
+    }
+}
+
+/// Span recorders for one core complex: the core issue/stall timeline,
+/// the FPU (with FREP bodies called out), and the three SSR lanes
+/// (labelled by active job mode, so union/intersection merge activity
+/// is visible as such).
+#[derive(Debug, Default)]
+pub struct CcTrace {
+    pub core: SpanBuf,
+    pub fpu: SpanBuf,
+    pub ssr: [SpanBuf; 3],
+}
+
+/// Allocate a CC trace iff recording is enabled on the calling thread.
+pub fn cc_trace() -> Option<Box<CcTrace>> {
+    enabled().then(Box::default)
+}
+
+/// Allocate a plain span buffer iff recording is enabled (DMA engine,
+/// HBM channels).
+pub fn span_buf() -> Option<Box<SpanBuf>> {
+    enabled().then(Box::default)
+}
+
+// ---- serve request spans -------------------------------------------------
+
+/// One served request's span, emitted by the serve engine. Segment
+/// cycles satisfy `queue + dispatch + upload + stage + compute ==
+/// finish - arrival` for served requests; shed requests carry zero
+/// segments (`finish == start == arrival + queue`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeSpan {
+    pub id: u64,
+    pub tenant: String,
+    pub kernel: String,
+    pub matrix: String,
+    pub cluster: usize,
+    pub arrival: u64,
+    pub start: u64,
+    pub finish: u64,
+    pub queue_cycles: u64,
+    pub dispatch_cycles: u64,
+    pub upload_cycles: u64,
+    pub stage_cycles: u64,
+    pub compute_cycles: u64,
+    pub batch_size: usize,
+    pub cache_hit: bool,
+    pub shed: bool,
+    /// Heavy SpGEMM/graph request promoted to whole-System execution.
+    pub promoted: bool,
+}
+
+// ---- the sink ------------------------------------------------------------
+
+/// Everything one traced run produced, drained by [`sink_take`].
+#[derive(Debug, Default)]
+pub struct TraceData {
+    pub tracks: Vec<Track>,
+    pub phases: Vec<PhaseRow>,
+    pub serve: Vec<ServeSpan>,
+}
+
+thread_local! {
+    static SINK: RefCell<Option<TraceData>> = const { RefCell::new(None) };
+}
+
+/// Arm the calling thread's trace sink (subsequent runs on this thread
+/// deposit their tracks/phases/spans into it).
+pub fn sink_begin() {
+    SINK.with(|s| *s.borrow_mut() = Some(TraceData::default()));
+}
+
+/// Is a sink armed on the calling thread?
+pub fn sink_active() -> bool {
+    SINK.with(|s| s.borrow().is_some())
+}
+
+/// Drain and disarm the sink.
+pub fn sink_take() -> Option<TraceData> {
+    SINK.with(|s| s.borrow_mut().take())
+}
+
+/// Deposit component tracks (no-op without an armed sink).
+pub fn sink_tracks(tracks: Vec<Track>) {
+    if tracks.is_empty() {
+        return;
+    }
+    SINK.with(|s| {
+        if let Some(d) = s.borrow_mut().as_mut() {
+            d.tracks.extend(tracks);
+        }
+    });
+}
+
+/// Record one phase's counter delta (no-op without an armed sink).
+pub fn record_phase(name: &str, stats: RunStats) {
+    SINK.with(|s| {
+        if let Some(d) = s.borrow_mut().as_mut() {
+            d.phases.push(PhaseRow { name: name.to_string(), stats });
+        }
+    });
+}
+
+/// Record one served request's span (no-op without an armed sink).
+pub fn record_serve(span: ServeSpan) {
+    SINK.with(|s| {
+        if let Some(d) = s.borrow_mut().as_mut() {
+            d.serve.push(span);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_buf_records_transitions_only() {
+        let mut b = SpanBuf::default();
+        b.set(1, Some("issue"));
+        b.set(2, Some("issue"));
+        b.set(3, Some("stall:mem"));
+        b.set(4, None);
+        b.set(5, Some("issue"));
+        let ev = b.finish(7);
+        assert_eq!(
+            ev,
+            vec![
+                Event { name: "issue", ts: 1, dur: 2, args: vec![] },
+                Event { name: "stall:mem", ts: 3, dur: 1, args: vec![] },
+                Event { name: "issue", ts: 5, dur: 2, args: vec![] },
+            ]
+        );
+    }
+
+    #[test]
+    fn switch_is_thread_local_and_sink_collects() {
+        set_enabled(Some(true));
+        assert!(enabled());
+        assert!(cc_trace().is_some());
+        set_enabled(Some(false));
+        assert!(cc_trace().is_none());
+        set_enabled(None);
+
+        assert!(!sink_active());
+        record_phase("dropped", RunStats::default());
+        sink_begin();
+        record_phase("kept", RunStats::default());
+        let d = sink_take().unwrap();
+        assert_eq!(d.phases.len(), 1);
+        assert_eq!(d.phases[0].name, "kept");
+        assert!(!sink_active());
+    }
+}

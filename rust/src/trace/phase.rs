@@ -1,0 +1,268 @@
+//! Per-phase counter snapshots and the exact attribution table.
+//!
+//! A [`CounterSnapshot`] is a [`RunStats`] capture at a phase boundary;
+//! subtracting two snapshots yields the phase's own activity. The
+//! attribution identity the table enforces comes from the core tick:
+//! every ticked core-cycle increments **exactly one** of
+//! `instret / stall_icache / stall_mem / stall_seq / stall_fence /
+//! stall_ssr / barrier_cycles / penalty_cycles / halted_cycles`, and the
+//! fast path replays the same counters for skipped cycles — so for any
+//! run, at any aggregation level,
+//!
+//! ```text
+//! instret + Σ stalls + barrier + penalty + halted == core_cycles
+//! ```
+//!
+//! holds *exactly* (`core_cycles` is the total number of ticked
+//! core-cycles, `cycles × cores` per cluster). `tests/trace.rs` pins
+//! this across kernels, fast-path settings, and system targets.
+
+use crate::sim::RunStats;
+
+/// A diffable capture of the run counters at a phase boundary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CounterSnapshot(pub RunStats);
+
+impl CounterSnapshot {
+    pub fn of(stats: &RunStats) -> Self {
+        CounterSnapshot(*stats)
+    }
+
+    /// Activity between `earlier` and `self` (field-wise difference;
+    /// `cores` is carried over, `cycles`/`core_cycles` diff like any
+    /// other counter). Exhaustive destructure: adding a [`RunStats`]
+    /// field without deciding its diff rule is a compile error.
+    pub fn diff(&self, earlier: &CounterSnapshot) -> RunStats {
+        let RunStats {
+            cycles,
+            cores,
+            instret,
+            flops,
+            fpu_ops,
+            tcdm_grants,
+            tcdm_conflicts,
+            icache_hits,
+            icache_misses,
+            dram_bytes,
+            dma_busy_cycles,
+            ssr_mem_accesses,
+            comparisons,
+            stall_icache,
+            stall_mem,
+            stall_seq,
+            stall_fence,
+            stall_ssr,
+            barrier_cycles,
+            penalty_cycles,
+            halted_cycles,
+            core_cycles,
+            ssr_busy,
+        } = self.0;
+        let e = &earlier.0;
+        RunStats {
+            cycles: cycles - e.cycles,
+            cores,
+            instret: instret - e.instret,
+            flops: flops - e.flops,
+            fpu_ops: fpu_ops - e.fpu_ops,
+            tcdm_grants: tcdm_grants - e.tcdm_grants,
+            tcdm_conflicts: tcdm_conflicts - e.tcdm_conflicts,
+            icache_hits: icache_hits - e.icache_hits,
+            icache_misses: icache_misses - e.icache_misses,
+            dram_bytes: dram_bytes - e.dram_bytes,
+            dma_busy_cycles: dma_busy_cycles - e.dma_busy_cycles,
+            ssr_mem_accesses: ssr_mem_accesses - e.ssr_mem_accesses,
+            comparisons: comparisons - e.comparisons,
+            stall_icache: stall_icache - e.stall_icache,
+            stall_mem: stall_mem - e.stall_mem,
+            stall_seq: stall_seq - e.stall_seq,
+            stall_fence: stall_fence - e.stall_fence,
+            stall_ssr: stall_ssr - e.stall_ssr,
+            barrier_cycles: barrier_cycles - e.barrier_cycles,
+            penalty_cycles: penalty_cycles - e.penalty_cycles,
+            halted_cycles: halted_cycles - e.halted_cycles,
+            core_cycles: core_cycles - e.core_cycles,
+            ssr_busy: [
+                ssr_busy[0] - e.ssr_busy[0],
+                ssr_busy[1] - e.ssr_busy[1],
+                ssr_busy[2] - e.ssr_busy[2],
+            ],
+        }
+    }
+}
+
+/// Core-cycles accounted for by the attribution columns. Equals
+/// [`RunStats::core_cycles`] exactly for any real run.
+pub fn accounted(s: &RunStats) -> u64 {
+    s.instret
+        + s.stall_icache
+        + s.stall_mem
+        + s.stall_seq
+        + s.stall_fence
+        + s.stall_ssr
+        + s.barrier_cycles
+        + s.penalty_cycles
+        + s.halted_cycles
+}
+
+/// One phase's named counter delta.
+#[derive(Clone, Debug)]
+pub struct PhaseRow {
+    pub name: String,
+    pub stats: RunStats,
+}
+
+impl PhaseRow {
+    /// Attribution identity: every ticked core-cycle is in exactly one
+    /// column.
+    pub fn exact(&self) -> bool {
+        accounted(&self.stats) == self.stats.core_cycles
+    }
+
+    /// Roofline x-coordinate: payload FLOPs per main-memory byte
+    /// (arithmetic intensity). 0 for phases that move no DRAM traffic.
+    pub fn flops_per_byte(&self) -> f64 {
+        if self.stats.dram_bytes == 0 {
+            0.0
+        } else {
+            self.stats.flops as f64 / self.stats.dram_bytes as f64
+        }
+    }
+
+    /// Roofline y-coordinate: achieved FLOPs per cluster cycle.
+    pub fn flops_per_cycle(&self) -> f64 {
+        if self.stats.cycles == 0 {
+            0.0
+        } else {
+            self.stats.flops as f64 / self.stats.cycles as f64
+        }
+    }
+}
+
+/// The per-phase attribution table (rendered by `repro trace`).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTable {
+    pub rows: Vec<PhaseRow>,
+}
+
+impl PhaseTable {
+    pub fn new(rows: Vec<PhaseRow>) -> Self {
+        PhaseTable { rows }
+    }
+
+    /// Do all rows satisfy the exact attribution identity?
+    pub fn exact(&self) -> bool {
+        self.rows.iter().all(|r| r.exact())
+    }
+
+    /// Plain-text attribution table + roofline coordinates.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<14} {:>10} {:>10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}  {}\n",
+            "phase",
+            "cycles",
+            "issue",
+            "st:ic",
+            "st:mem",
+            "st:seq",
+            "st:fnc",
+            "st:ssr",
+            "barrier",
+            "penalty",
+            "idle",
+            "sum"
+        ));
+        for r in &self.rows {
+            let s = &r.stats;
+            out.push_str(&format!(
+                "{:<14} {:>10} {:>10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}  {}\n",
+                r.name,
+                s.cycles,
+                s.instret,
+                s.stall_icache,
+                s.stall_mem,
+                s.stall_seq,
+                s.stall_fence,
+                s.stall_ssr,
+                s.barrier_cycles,
+                s.penalty_cycles,
+                s.halted_cycles,
+                if r.exact() {
+                    format!("= {} core-cycles (exact)", s.core_cycles)
+                } else {
+                    format!("{} != {} core-cycles (BROKEN)", accounted(s), s.core_cycles)
+                },
+            ));
+        }
+        out.push_str("\nroofline (per phase):\n");
+        out.push_str(&format!(
+            "{:<14} {:>12} {:>14} {:>12} {:>12} {:>14}\n",
+            "phase", "flops", "dram_bytes", "flops/byte", "flops/cyc", "ssr busy/lane"
+        ));
+        for r in &self.rows {
+            let s = &r.stats;
+            out.push_str(&format!(
+                "{:<14} {:>12} {:>14} {:>12.4} {:>12.4} {:>4}/{}/{}\n",
+                r.name,
+                s.flops,
+                s.dram_bytes,
+                r.flops_per_byte(),
+                r.flops_per_cycle(),
+                s.ssr_busy[0],
+                s.ssr_busy[1],
+                s.ssr_busy[2],
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_diff_subtracts_fields() {
+        let a = RunStats {
+            cycles: 100,
+            cores: 2,
+            instret: 90,
+            flops: 40,
+            core_cycles: 200,
+            ssr_busy: [10, 5, 0],
+            ..Default::default()
+        };
+        let b = RunStats {
+            cycles: 250,
+            instret: 200,
+            flops: 120,
+            core_cycles: 500,
+            ssr_busy: [30, 15, 4],
+            ..a
+        };
+        let d = CounterSnapshot::of(&b).diff(&CounterSnapshot::of(&a));
+        assert_eq!(d.cycles, 150);
+        assert_eq!(d.cores, 2);
+        assert_eq!(d.instret, 110);
+        assert_eq!(d.flops, 80);
+        assert_eq!(d.core_cycles, 300);
+        assert_eq!(d.ssr_busy, [20, 10, 4]);
+    }
+
+    #[test]
+    fn exactness_checks_identity() {
+        let s = RunStats {
+            instret: 7,
+            stall_mem: 2,
+            halted_cycles: 1,
+            core_cycles: 10,
+            ..Default::default()
+        };
+        let row = PhaseRow { name: "p".into(), stats: s };
+        assert!(row.exact());
+        let table = PhaseTable::new(vec![row]);
+        assert!(table.exact());
+        assert!(table.render().contains("(exact)"));
+    }
+}

@@ -1,0 +1,321 @@
+//! Tracing-layer property tests.
+//!
+//! The trace subsystem (`sssr::trace`) is observation-only: arming it
+//! must never change a modeled number, and the recorded timelines must
+//! be a pure function of the simulated execution — bit-identical with
+//! the fast path off and on, and invariant under the parallel system
+//! tick's worker count. On top of determinism, the per-phase counter
+//! snapshots must satisfy the exact attribution identity
+//! (`instret + Σ stalls + barrier + penalty + halted == core_cycles`)
+//! and serve request spans must reconcile segment-by-segment with the
+//! engine's own outcomes.
+//!
+//! The trace/fast-path overrides are thread-local and every libtest
+//! test runs on its own thread, so tests cannot leak modes into each
+//! other; each test still restores the defaults on exit for tidiness.
+
+use sssr::kernels::api::{self, borrow_all, execute, ExecCfg, TargetKind};
+use sssr::kernels::multi::run_system_smxdv;
+use sssr::kernels::{IdxWidth, Variant};
+use sssr::matgen;
+use sssr::serve::{self, Scenario, ServeCfg, SloCfg};
+use sssr::sim::fastpath;
+use sssr::sim::SystemCfg;
+use sssr::trace::{self, chrome, phase, PhaseRow, PhaseTable};
+
+/// Run `f` with tracing armed (recording on + sink armed) and the fast
+/// path / worker count forced as given, restoring all defaults
+/// afterwards. Both overrides must be set *before* `f` builds any
+/// cluster, because components capture the flags at construction.
+fn traced<T>(fast: bool, jobs: Option<usize>, f: impl FnOnce() -> T) -> (T, trace::TraceData) {
+    trace::set_enabled(Some(true));
+    trace::sink_begin();
+    fastpath::set_enabled(Some(fast));
+    fastpath::set_tick_jobs(jobs);
+    let out = f();
+    fastpath::set_enabled(None);
+    fastpath::set_tick_jobs(None);
+    trace::set_enabled(None);
+    (out, trace::sink_take().expect("sink was armed"))
+}
+
+/// A run's complete observable outcome in exactly-comparable form.
+fn fingerprint(run: &api::KernelRun) -> (u64, String, String) {
+    (run.report.cycles, format!("{:?}", run.output), format!("{:?}", run.report.stats))
+}
+
+/// Shared small system workload (mirrors `tests/sim_fastpath.rs`):
+/// 4 nnz-balanced row shards on 2 HBM channels with a shrunken backing
+/// store so the test does not allocate 256 MiB.
+fn small_system() -> SystemCfg {
+    SystemCfg { shard_bytes: 4 << 20, ..SystemCfg::paper_system(4, 2) }
+}
+
+/// Property: arming the tracer changes no modeled number. Same kernel,
+/// same seed, recording off vs on — identical cycles, outputs, and
+/// stats, for both a plain kernel and the two-phase SpGEMM.
+#[test]
+fn tracing_changes_no_modeled_number() {
+    for name in ["smxdv", "smxsm_csf"] {
+        let k = api::kernel(name).expect("registry kernel");
+        let owned = k.sample(0xFA57, IdxWidth::U16);
+        let ops = borrow_all(&owned);
+        let cfg = ExecCfg::single_sized(k.tcdm_default());
+        let run = |on: bool| {
+            trace::set_enabled(Some(on));
+            let r = execute(k, Variant::Sssr, IdxWidth::U16, &ops, &cfg)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            trace::set_enabled(None);
+            fingerprint(&r)
+        };
+        assert_eq!(run(false), run(true), "{name}: tracing perturbed the run");
+    }
+}
+
+/// Property: for every single-CC registry kernel, the recorded
+/// timelines are bit-identical with the fast path off and on, in both
+/// BASE and SSSR variants. The quiet-horizon skip can only cover
+/// windows without state transitions, so the run-length span recorders
+/// must see the exact same label sequence either way.
+#[test]
+fn single_cc_traces_identical_fastpath_vs_naive() {
+    for k in api::REGISTRY.iter() {
+        if !k.targets().contains(&TargetKind::SingleCc) {
+            continue;
+        }
+        let owned = k.sample(0xFA57, IdxWidth::U16);
+        let ops = borrow_all(&owned);
+        let cfg = ExecCfg::single_sized(k.tcdm_default());
+        for v in [Variant::Base, Variant::Sssr] {
+            let run = |fast| {
+                traced(fast, None, || {
+                    execute(*k, v, IdxWidth::U16, &ops, &cfg)
+                        .unwrap_or_else(|e| panic!("{} [{v:?}]: {e}", k.name()))
+                })
+            };
+            let (naive_run, naive) = run(false);
+            let (fast_run, fast) = run(true);
+            assert_eq!(
+                fingerprint(&naive_run),
+                fingerprint(&fast_run),
+                "{} [{v:?}]: fast path changed the run",
+                k.name()
+            );
+            assert!(!naive.tracks.is_empty(), "{} [{v:?}]: no tracks recorded", k.name());
+            assert_eq!(
+                format!("{:?}", naive.tracks),
+                format!("{:?}", fast.tracks),
+                "{} [{v:?}]: fast path changed the trace",
+                k.name()
+            );
+            assert_eq!(
+                chrome::render(&naive),
+                chrome::render(&fast),
+                "{} [{v:?}]: rendered trace diverged",
+                k.name()
+            );
+        }
+    }
+}
+
+/// Property: the multi-cluster system trace (per-cluster component
+/// tracks plus the HBM channel burst tracks) is invariant under the
+/// fast path and the parallel-tick worker count, byte for byte.
+#[test]
+fn system_traces_invariant_under_jobs_and_fastpath() {
+    let m = matgen::random_csr(0xA11, 96, 160, 2200);
+    let b = matgen::random_dense(0xA12, 160);
+    let cfg = small_system();
+    let run = |fast, jobs| {
+        traced(fast, Some(jobs), || run_system_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &cfg))
+    };
+    let (base_run, baseline) = run(false, 1);
+    assert!(
+        baseline.tracks.iter().any(|t| t.name.starts_with("hbm/ch")),
+        "system trace must include HBM channel tracks"
+    );
+    assert!(baseline.tracks.iter().any(|t| t.name.starts_with("c1/")));
+    let base_doc = chrome::render(&baseline);
+    for (fast, jobs) in [(false, 2), (true, 1), (true, 4)] {
+        let (sys, data) = run(fast, jobs);
+        assert_eq!(
+            base_run.report.cycles,
+            sys.report.cycles,
+            "fast={fast} jobs={jobs}: cycles moved"
+        );
+        assert_eq!(base_doc, chrome::render(&data), "fast={fast} jobs={jobs}: trace diverged");
+    }
+}
+
+/// Property: the attribution identity holds exactly for every
+/// single-CC registry kernel (both variants) and for the system run —
+/// every ticked core-cycle lands in exactly one table column.
+#[test]
+fn attribution_sums_exactly_everywhere() {
+    for k in api::REGISTRY.iter() {
+        if !k.targets().contains(&TargetKind::SingleCc) {
+            continue;
+        }
+        let owned = k.sample(0xFA57, IdxWidth::U16);
+        let ops = borrow_all(&owned);
+        let cfg = ExecCfg::single_sized(k.tcdm_default());
+        for v in [Variant::Base, Variant::Sssr] {
+            let run = execute(*k, v, IdxWidth::U16, &ops, &cfg)
+                .unwrap_or_else(|e| panic!("{} [{v:?}]: {e}", k.name()));
+            let s = run.report.stats;
+            assert!(s.core_cycles > 0, "{} [{v:?}]: no core cycles ticked", k.name());
+            assert_eq!(
+                phase::accounted(&s),
+                s.core_cycles,
+                "{} [{v:?}]: attribution broke: {s:?}",
+                k.name()
+            );
+        }
+    }
+    let m = matgen::random_csr(0xA11, 96, 160, 2200);
+    let b = matgen::random_dense(0xA12, 160);
+    let sys = run_system_smxdv(Variant::Sssr, IdxWidth::U16, &m, &b, &small_system());
+    let s = sys.report.stats;
+    assert_eq!(phase::accounted(&s), s.core_cycles, "system attribution broke: {s:?}");
+}
+
+/// Property: the two-phase SpGEMM records exactly one symbolic and one
+/// numeric phase row, each individually exact, and the two rows sum to
+/// the whole run's totals — on the single-CC target and on the system
+/// target (where the rows aggregate all clusters).
+#[test]
+fn two_phase_rows_cover_the_whole_run() {
+    let k = api::kernel("smxsm_csf").expect("registry kernel");
+    let owned = k.sample(0xFA57, IdxWidth::U16);
+    let ops = borrow_all(&owned);
+    for cfg in [ExecCfg::single_sized(k.tcdm_default()), ExecCfg::system(small_system())] {
+        let (run, data) = traced(true, None, || {
+            execute(k, Variant::Sssr, IdxWidth::U16, &ops, &cfg).expect("smxsm_csf")
+        });
+        let names: Vec<&str> = data.phases.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["symbolic", "numeric"], "phase rows: {names:?}");
+        let table = PhaseTable::new(data.phases.clone());
+        assert!(table.exact(), "broken attribution row:\n{}", table.render());
+        let total = run.report.stats;
+        let (sym, num) = (&data.phases[0].stats, &data.phases[1].stats);
+        assert_eq!(sym.cycles + num.cycles, total.cycles);
+        assert_eq!(sym.core_cycles + num.core_cycles, total.core_cycles);
+        assert_eq!(sym.instret + num.instret, total.instret);
+        assert_eq!(sym.flops + num.flops, total.flops);
+    }
+}
+
+/// Property: pipeline DAG steps deposit one exact phase row per
+/// executed kernel step when a sink is armed.
+#[test]
+fn pipeline_steps_record_exact_phase_rows() {
+    use sssr::pipeline::{self, PipeCfg};
+    let a = pipeline::laplacian1d(64);
+    let rhs = matgen::random_dense(0xC6, 64);
+    let pipe = pipeline::cg(&a, &rhs, 1e-8, 30);
+    let (out, data) = traced(true, None, || {
+        pipe.run(&PipeCfg::new(Variant::Sssr, IdxWidth::U16)).expect("cg pipeline")
+    });
+    assert!(out.steps > 0);
+    assert_eq!(data.phases.len(), out.steps, "one phase row per pipeline step");
+    assert!(data.phases[0].name.contains('#'), "step rows are labelled step#index");
+    let table = PhaseTable::new(data.phases);
+    assert!(table.exact(), "pipeline attribution broke:\n{}", table.render());
+}
+
+/// Property: serve request spans reconcile with the engine's own
+/// outcomes — one span per request, segments summing to the span
+/// (`arrival + queue + dispatch + upload + stage + compute == finish`
+/// for served requests, zero segments for shed ones), and aggregates
+/// matching the summary.
+#[test]
+fn serve_spans_reconcile_with_outcomes() {
+    use sssr::harness::{self, CHAOS_GAP, CHAOS_SEED};
+    let corpus = serve::serve_corpus();
+    // Mirror the chaos-suite flood point: one serialized cluster so the
+    // flood's backlog builds and admission control actually sheds.
+    let scfg = Scenario::Flood.stream(CHAOS_SEED, 2 * harness::chaos_requests(), CHAOS_GAP);
+    let stream = serve::gen_stream_ex(&scfg, &corpus);
+    let tenants = stream.reqs.iter().map(|r| r.tenant + 1).max().unwrap_or(0);
+    let cfg = ServeCfg::new(1, 1).slo(SloCfg::flood_default(tenants));
+    trace::sink_begin();
+    let out = serve::run_serve_stream(&cfg, &corpus, &stream).expect("serve run");
+    let data = trace::sink_take().expect("sink was armed");
+    assert!(data.tracks.is_empty(), "sink-only arming must not record component tracks");
+    assert_eq!(data.serve.len(), out.requests.len(), "one span per request");
+    assert!(out.summary.shed_requests > 0, "flood under SLO must shed");
+
+    let mut shed_spans = 0u64;
+    for o in &out.requests {
+        let sp = data
+            .serve
+            .iter()
+            .find(|s| s.id == o.id as u64)
+            .unwrap_or_else(|| panic!("request {} has no span", o.id));
+        assert_eq!(sp.arrival, o.arrival);
+        assert_eq!(sp.finish, o.finish);
+        assert_eq!(sp.queue_cycles, o.queue_cycles);
+        assert_eq!(sp.shed, o.shed);
+        assert_eq!(sp.cluster, o.cluster);
+        assert_eq!(sp.finish - sp.arrival, o.latency, "span {} latency", sp.id);
+        if sp.shed {
+            shed_spans += 1;
+            assert_eq!(sp.batch_size, 0);
+            assert_eq!(sp.dispatch_cycles, 0);
+            assert_eq!(sp.upload_cycles + sp.stage_cycles + sp.compute_cycles, 0);
+            assert_eq!(sp.finish, sp.start, "shed spans end at the shed instant");
+        } else {
+            assert!(sp.batch_size >= 1);
+            let segments = sp.queue_cycles
+                + sp.dispatch_cycles
+                + sp.upload_cycles
+                + sp.stage_cycles
+                + sp.compute_cycles;
+            assert_eq!(
+                sp.arrival + segments,
+                sp.finish,
+                "span {} segments do not tile the request",
+                sp.id
+            );
+        }
+    }
+    assert_eq!(shed_spans, out.summary.shed_requests);
+    let last = data.serve.iter().map(|s| s.finish).max().unwrap_or(0);
+    assert_eq!(last.max(1), out.summary.makespan);
+}
+
+/// Property: every trace document this layer produces passes its own
+/// validator, and `METRICS_serve.jsonl` carries one record per span.
+#[test]
+fn chrome_documents_validate_and_metrics_lines_match() {
+    // Component + phase trace from a kernel run...
+    let k = api::kernel("smxdv").expect("registry kernel");
+    let owned = k.sample(0xFA57, IdxWidth::U16);
+    let ops = borrow_all(&owned);
+    let cfg = ExecCfg::single_sized(k.tcdm_default());
+    let (run, mut data) = traced(true, None, || {
+        execute(k, Variant::Sssr, IdxWidth::U16, &ops, &cfg).expect("smxdv")
+    });
+    // ...plus serve spans from an engine run, merged into one document.
+    let corpus = serve::serve_corpus();
+    let scfg = Scenario::Burst.stream(0x5E12, 40, 900.0);
+    let stream = serve::gen_stream_ex(&scfg, &corpus);
+    trace::sink_begin();
+    serve::run_serve_stream(&ServeCfg::new(2, 1), &corpus, &stream).expect("serve run");
+    let sdata = trace::sink_take().expect("sink was armed");
+    data.serve = sdata.serve;
+
+    let doc = chrome::render(&data);
+    let spans = chrome::check(&doc).unwrap_or_else(|e| panic!("invalid trace: {e}"));
+    assert!(spans > 0);
+    let jsonl = chrome::metrics_jsonl(&data.serve);
+    assert_eq!(jsonl.lines().count(), data.serve.len());
+
+    // The attribution table `repro trace` prints (recorded phases plus
+    // a synthesized run-total row) renders exact.
+    assert!(data.tracks.iter().any(|t| !t.events.is_empty()), "kernel run recorded no spans");
+    data.phases.push(PhaseRow { name: "total".into(), stats: run.report.stats });
+    let table = PhaseTable::new(data.phases);
+    assert!(table.exact(), "attribution broke:\n{}", table.render());
+    assert!(table.render().contains("(exact)"));
+}
